@@ -1,0 +1,41 @@
+//! BabelStream on all three backends: host CPU (real measurement),
+//! simulated GPUs (paper §6.2 reproduction), and — when `artifacts/`
+//! exists — the AOT Pallas kernels through PJRT.
+//!
+//! ```bash
+//! cargo run --release --example babelstream
+//! ```
+
+use rocline::arch::presets;
+use rocline::babelstream::{pjrt, DeviceStream, HostStream};
+use rocline::runtime::Runtime;
+
+fn main() {
+    // host: real hardware, real sweeps
+    let mut host = HostStream::new(1 << 22);
+    host.verify().expect("babelstream verification");
+    println!("{}", host.run(10).render());
+
+    // simulated GPUs: the paper's numbers
+    for spec in presets::all_gpus() {
+        let peak = spec.hbm.peak.mbs();
+        let r = DeviceStream::new(spec.clone(), 1 << 25).run(100);
+        let eff = 100.0 * r.copy_mbs() / peak;
+        println!("{}", r.render());
+        println!(
+            "  -> copy efficiency vs datasheet peak: {eff:.1}% \
+             (paper §7.3: V100 >99%, MI60 81%, MI100 78%)\n"
+        );
+    }
+
+    // PJRT: the AOT Pallas stream kernels, if built
+    match Runtime::new(std::path::Path::new("artifacts")) {
+        Ok(mut rt) => match pjrt::run_pjrt(&mut rt, 5) {
+            Ok(r) => println!("{}", r.render()),
+            Err(e) => eprintln!("pjrt backend failed: {e:#}"),
+        },
+        Err(_) => eprintln!(
+            "(skipping pjrt backend: run `make artifacts` first)"
+        ),
+    }
+}

@@ -1,0 +1,154 @@
+//! End-to-end driver — proves all three layers compose on a real small
+//! workload (recorded in EXPERIMENTS.md):
+//!
+//! 1. load the AOT JAX/Pallas artifacts (Layer 1+2) via PJRT;
+//! 2. run a few hundred LWFA PIC steps through the compiled HLO,
+//!    logging the energy-exchange curve, and cross-check the final state
+//!    against the native Rust core;
+//! 3. profile the same workload with rocprof-sim/nvprof-sim on the
+//!    V100/MI60/MI100 models (Layer 3);
+//! 4. build every instruction roofline and write `out_e2e/`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::path::Path;
+
+use rocline::arch::presets;
+use rocline::arch::Vendor;
+use rocline::babelstream::DeviceStream;
+use rocline::coordinator::CaseRun;
+use rocline::pic::{CaseConfig, PicSim};
+use rocline::profiler::{NvprofTool, RocprofTool};
+use rocline::roofline::{plot_svg, InstructionRoofline};
+use rocline::runtime::Runtime;
+
+const STEPS: u32 = 200;
+
+fn kinetic(mom: &[f32]) -> f64 {
+    mom.chunks_exact(3)
+        .map(|u| {
+            (1.0 + (u[0] * u[0] + u[1] * u[1] + u[2] * u[2]) as f64)
+                .sqrt()
+                - 1.0
+        })
+        .sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    let outdir = Path::new("out_e2e");
+    std::fs::create_dir_all(outdir)?;
+
+    // ---- 1+2: PJRT execution of the AOT artifacts -------------------
+    let mut rt = Runtime::new(Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut cfg = CaseConfig::lwfa();
+    let sim0 = PicSim::new(&cfg, rocline::coordinator::profile_run::RUN_SEED);
+    let (mut e, mut b, mut pos, mut mom) = (
+        sim0.state.e.clone(),
+        sim0.state.b.clone(),
+        sim0.state.pos.clone(),
+        sim0.state.mom.clone(),
+    );
+
+    println!(
+        "running {STEPS} LWFA steps ({} particles) through the \
+         compiled pic_step_lwfa HLO...",
+        cfg.particles()
+    );
+    let mut curve = String::from("step,kinetic_energy\n");
+    let t0 = std::time::Instant::now();
+    for step in 0..STEPS {
+        let outs = rt.call_f32("pic_step_lwfa", &[&e, &b, &pos, &mom])?;
+        let mut it = outs.into_iter();
+        e = it.next().unwrap();
+        b = it.next().unwrap();
+        pos = it.next().unwrap();
+        mom = it.next().unwrap();
+        if step % 10 == 0 || step == STEPS - 1 {
+            let ke = kinetic(&mom);
+            println!("  step {step:>4}: kinetic energy {ke:.4}");
+            curve.push_str(&format!("{step},{ke:.6}\n"));
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "PJRT: {STEPS} steps in {dt:.2}s ({:.2} steps/s)",
+        STEPS as f64 / dt
+    );
+    std::fs::write(outdir.join("energy_curve.csv"), curve)?;
+
+    // cross-check vs the native Rust core (same seed, same constants)
+    let mut native = PicSim::new(&cfg, rocline::coordinator::profile_run::RUN_SEED);
+    let tn = std::time::Instant::now();
+    native.run(STEPS);
+    println!(
+        "native: {STEPS} steps in {:.2}s",
+        tn.elapsed().as_secs_f64()
+    );
+    let ke_pjrt = kinetic(&mom);
+    let ke_native = native.state.kinetic_energy();
+    let rel = (ke_pjrt - ke_native).abs() / ke_native.abs().max(1e-12);
+    println!(
+        "kinetic energy: pjrt {ke_pjrt:.4} vs native {ke_native:.4} \
+         (rel diff {rel:.2e})"
+    );
+    anyhow::ensure!(
+        rel < 0.05,
+        "PJRT and native PIC diverged: {rel}"
+    );
+    anyhow::ensure!(
+        ke_pjrt > 2.0 * kinetic(&sim0.state.mom),
+        "laser failed to heat the plasma"
+    );
+
+    // ---- 3: profile the workload on the three GPU models ------------
+    cfg.steps = 16; // profile a short window of the same case
+    println!("\nprofiling {} steps on V100/MI60/MI100...", cfg.steps);
+    for spec in presets::all_gpus() {
+        let run = CaseRun::execute(spec.clone(), cfg.clone());
+        println!("\n== {} ==", spec.name);
+        for agg in run.session.aggregates() {
+            println!(
+                "  {:<16} inv={:<3} mean {:.3e}s",
+                agg.kernel,
+                agg.invocations,
+                agg.mean_duration_s()
+            );
+        }
+        // ---- 4: IRM for the hot kernel -------------------------------
+        let irm = match spec.vendor {
+            Vendor::Amd => {
+                let r = RocprofTool::reports(&run.session)
+                    .into_iter()
+                    .find(|r| r.kernel == "ComputeCurrent")
+                    .unwrap();
+                let copy = DeviceStream::new(spec.clone(), 1 << 25)
+                    .run_op("copy", 1);
+                InstructionRoofline::from_rocprof(
+                    &spec,
+                    &r,
+                    copy.mbs / 1000.0,
+                )
+            }
+            Vendor::Nvidia => {
+                let r = NvprofTool::default()
+                    .reports(&run.session)
+                    .into_iter()
+                    .find(|r| r.kernel == "ComputeCurrent")
+                    .unwrap();
+                InstructionRoofline::from_nvprof_txn(&spec, &r)
+            }
+        };
+        let path = outdir.join(format!(
+            "irm_computecurrent_{}.svg",
+            spec.name.to_lowercase()
+        ));
+        std::fs::write(&path, plot_svg::render_svg(&irm))?;
+        println!("  wrote {}", path.display());
+    }
+
+    println!("\nend-to-end OK — outputs in {}", outdir.display());
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Profile the PIC workload on all three paper GPUs and print a
+//! Table-1-style comparison for a chosen kernel.
+//!
+//! ```bash
+//! cargo run --release --example profile_pic -- [kernel] [case] [steps]
+//! # e.g. cargo run --release --example profile_pic -- MoveAndMark lwfa 8
+//! ```
+
+use rocline::arch::presets;
+use rocline::arch::Vendor;
+use rocline::coordinator::CaseRun;
+use rocline::pic::CaseConfig;
+use rocline::profiler::{NvprofTool, RocprofTool};
+use rocline::roofline::{eq2_intensity_performance, eq4_achieved_gips};
+use rocline::util::table::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let kernel = args.first().map(|s| s.as_str()).unwrap_or("ComputeCurrent");
+    let case = args.get(1).map(|s| s.as_str()).unwrap_or("lwfa");
+    let mut cfg = CaseConfig::by_name(case).expect("case: lwfa|tweac");
+    if let Some(steps) = args.get(2) {
+        cfg.steps = steps.parse().expect("steps must be an integer");
+    }
+
+    println!(
+        "profiling {} x{} steps, kernel {kernel}, on V100/MI60/MI100...",
+        cfg.name, cfg.steps
+    );
+
+    let mut t = Table::new(vec![
+        "GPU",
+        "mean time (s)",
+        "achieved GIPS",
+        "instructions/inv",
+        "bytes/inv",
+        "intensity (Eq.2)",
+    ]);
+    for spec in presets::all_gpus() {
+        let run = CaseRun::execute(spec.clone(), cfg.clone());
+        let (time, insts, bytes) = match spec.vendor {
+            Vendor::Amd => {
+                let r = RocprofTool::reports(&run.session)
+                    .into_iter()
+                    .find(|r| r.kernel == kernel)
+                    .expect("kernel profiled");
+                let inv = r.invocations as f64;
+                (
+                    r.mean_duration_s,
+                    (r.total.instructions(&spec) as f64 / inv) as u64,
+                    (r.total.bytes_read() + r.total.bytes_written())
+                        / inv,
+                )
+            }
+            Vendor::Nvidia => {
+                let r = NvprofTool::default()
+                    .reports(&run.session)
+                    .into_iter()
+                    .find(|r| r.kernel == kernel)
+                    .expect("kernel profiled");
+                let inv = r.invocations as f64;
+                (
+                    r.mean_duration_s,
+                    (r.total.inst_executed as f64 / inv) as u64,
+                    (r.total.dram_read_bytes()
+                        + r.total.dram_write_bytes())
+                        / inv,
+                )
+            }
+        };
+        t.row(vec![
+            spec.name.to_string(),
+            format!("{time:.3e}"),
+            format!(
+                "{:.3}",
+                eq4_achieved_gips(insts, spec.group_size, time)
+            ),
+            insts.to_string(),
+            format!("{bytes:.0}"),
+            format!(
+                "{:.4}",
+                eq2_intensity_performance(
+                    insts,
+                    spec.group_size,
+                    bytes,
+                    0.0,
+                    time
+                )
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+}

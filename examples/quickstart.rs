@@ -1,0 +1,51 @@
+//! Quickstart: build an instruction roofline model for a kernel on a
+//! simulated AMD GPU in ~30 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use rocline::arch::presets;
+use rocline::babelstream::DeviceStream;
+use rocline::profiler::{ProfileSession, RocprofTool};
+use rocline::roofline::{plot_ascii, InstructionRoofline};
+use rocline::trace::synth::StreamTrace;
+
+fn main() {
+    // 1. pick a GPU model (the paper's AMD Instinct MI100)
+    let spec = presets::mi100();
+    println!(
+        "GPU: {} — {} CUs, wavefront {}, Eq.3 peak {:.2} GIPS",
+        spec.name,
+        spec.compute_units,
+        spec.group_size,
+        spec.peak_gips()
+    );
+
+    // 2. profile a kernel with rocprof-sim (here: BabelStream triad)
+    let kernel = StreamTrace::babelstream("triad", 1 << 24);
+    let mut session = ProfileSession::new(spec.clone());
+    session.profile(&kernel);
+    let report = RocprofTool::reports(&session).remove(0);
+    println!(
+        "rocprof-sim: FETCH_SIZE={:.0} KB, WRITE_SIZE={:.0} KB, \
+         SQ_INSTS_VALU={}, SQ_INSTS_SALU={}, {:.3} ms",
+        report.total.fetch_size_kb,
+        report.total.write_size_kb,
+        report.total.sq_insts_valu,
+        report.total.sq_insts_salu,
+        report.mean_duration_s * 1e3,
+    );
+
+    // 3. measure the bandwidth ceiling with simulated BabelStream (§6.2)
+    let copy = DeviceStream::new(spec.clone(), 1 << 25).run_op("copy", 1);
+    println!("BabelStream copy: {:.3} MB/s", copy.mbs);
+
+    // 4. assemble + render the IRM (§4.2, Eqs 1-4)
+    let irm = InstructionRoofline::from_rocprof(
+        &spec,
+        &report,
+        copy.mbs / 1000.0,
+    );
+    println!("\n{}", plot_ascii::render_ascii(&irm));
+}

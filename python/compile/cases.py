@@ -1,0 +1,71 @@
+"""Shared simulation-case constants for the AOT build.
+
+These constants are baked into the lowered HLO at compile time and recorded
+in ``artifacts/manifest.txt`` so the Rust coordinator (``rust/src/pic``) uses
+*identical* numerics. Units are normalized PIC units: c = 1, eps0 = 1, cell
+sizes in units of dx.
+
+The two cases mirror the paper's PIConGPU science cases at laptop scale:
+
+* ``lwfa``  — Laser Wakefield Acceleration: single pulse, small cube.
+* ``tweac`` — Traveling Wave Electron Acceleration: two crossed pulses,
+  larger cube, longer run.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CaseSpec:
+    """Geometry + physics constants for one science case."""
+
+    name: str
+    nx: int
+    ny: int
+    nz: int
+    ppc: int          # particles per cell
+    dt: float         # timestep (CFL: dt < 1/sqrt(3) for dx=1, c=1)
+    qm: float         # charge/mass ratio of the species (electrons: -1)
+    qw: float         # deposition factor: q * macroweight / cell volume
+    steps: int        # default number of steps for the mini run
+
+    @property
+    def cells(self) -> int:
+        return self.nx * self.ny * self.nz
+
+    @property
+    def particles(self) -> int:
+        return self.cells * self.ppc
+
+    @property
+    def field_shape(self):
+        return (3, self.nx, self.ny, self.nz)
+
+    @property
+    def particle_shape(self):
+        return (self.particles, 3)
+
+
+# Sizes are chosen so the per-step working set (pos+mom+E+B+J) exceeds
+# every modeled GPU's L2 (4-8 MiB): the paper's FETCH_SIZE/WRITE_SIZE
+# behaviour only appears when the particle data does not stay resident.
+LWFA = CaseSpec(
+    name="lwfa", nx=40, ny=40, nz=40, ppc=4,
+    dt=0.5, qm=-1.0, qw=-0.05, steps=64,
+)
+
+TWEAC = CaseSpec(
+    name="tweac", nx=48, ny=48, nz=48, ppc=4,
+    dt=0.5, qm=-1.0, qw=-0.05, steps=96,
+)
+
+CASES = {c.name: c for c in (LWFA, TWEAC)}
+
+# BabelStream-on-PJRT array length (number of f32 elements per array).
+STREAM_N = 1 << 20
+# Scalar used by the mul/triad stream kernels (BabelStream's startScalar).
+STREAM_SCALAR = 0.4
+
+# Default particle block size for the Pallas kernels. Must divide the
+# particle count of every case (lwfa: 8192, tweac: 27648 — both /256).
+PARTICLE_BLOCK = 256

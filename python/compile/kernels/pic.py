@@ -1,0 +1,172 @@
+"""Layer-1 Pallas kernels for the PIC hot loops.
+
+The paper's two kernels of interest (PIConGPU §5):
+
+* ``MoveAndMark``    — field gather + relativistic Boris push + position
+                       advance. Here: :func:`move_and_mark`.
+* ``ComputeCurrent`` — per-particle CIC current deposition. The per-particle
+                       arithmetic (velocity, stencil weights, cell ids) is
+                       the Pallas kernel :func:`current_contributions`; the
+                       scatter-add lives in Layer 2 (``model.py``) as a
+                       segmented accumulation, the standard TPU-friendly
+                       re-expression of GPU atomics (DESIGN.md
+                       §Hardware-Adaptation).
+
+Tiling: particles are processed in blocks of ``PARTICLE_BLOCK`` (the analog
+of PIConGPU's supercell frames); the field arrays are small enough for the
+whole [3, nx, ny, nz] block to sit in VMEM, so each particle tile sees the
+full field (BlockSpec index-map pinned to block 0).
+
+``interpret=True`` everywhere — see DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # package-relative when imported as compile.kernels.pic
+    from ..cases import PARTICLE_BLOCK
+except ImportError:  # pragma: no cover - direct script import
+    from compile.cases import PARTICLE_BLOCK
+
+
+def _gather_one(field, pos, nx, ny, nz):
+    """Trilinear gather inside the kernel. field: [3,nx,ny,nz], pos: [b,3]."""
+    g = pos - 0.5
+    i0f = jnp.floor(g)
+    f = g - i0f
+    i0 = i0f.astype(jnp.int32)
+    out = jnp.zeros((pos.shape[0], 3), dtype=field.dtype)
+    for cx in (0, 1):
+        for cy in (0, 1):
+            for cz in (0, 1):
+                ix = jnp.mod(i0[:, 0] + cx, nx)
+                iy = jnp.mod(i0[:, 1] + cy, ny)
+                iz = jnp.mod(i0[:, 2] + cz, nz)
+                wx = f[:, 0] if cx else 1.0 - f[:, 0]
+                wy = f[:, 1] if cy else 1.0 - f[:, 1]
+                wz = f[:, 2] if cz else 1.0 - f[:, 2]
+                w = wx * wy * wz
+                out = out + (field[:, ix, iy, iz] * w).T
+    return out
+
+
+def _push_kernel(qm, dt, dims, e_ref, b_ref, pos_ref, mom_ref,
+                 npos_ref, nmom_ref):
+    """MoveAndMark over one particle tile."""
+    nx, ny, nz = dims
+    e = e_ref[...]
+    b = b_ref[...]
+    pos = pos_ref[...]
+    mom = mom_ref[...]
+
+    ep = _gather_one(e, pos, nx, ny, nz)
+    bp = _gather_one(b, pos, nx, ny, nz)
+
+    # Relativistic Boris rotation (Birdsall & Langdon form).
+    h = 0.5 * qm * dt
+    um = mom + h * ep
+    gamma = jnp.sqrt(1.0 + jnp.sum(um * um, axis=-1, keepdims=True))
+    t = (h / gamma) * bp
+    t2 = jnp.sum(t * t, axis=-1, keepdims=True)
+    s = 2.0 * t / (1.0 + t2)
+    up = um + jnp.cross(um, t)
+    uplus = um + jnp.cross(up, s)
+    new_mom = uplus + h * ep
+
+    # Position advance + periodic wrap ("Mark" is the frame bookkeeping in
+    # PIConGPU; under periodic boundaries the wrap is the whole of it).
+    ng = jnp.sqrt(1.0 + jnp.sum(new_mom * new_mom, axis=-1, keepdims=True))
+    v = new_mom / ng
+    adv = pos + dt * v
+    # Per-axis wrap with python-scalar moduli (a captured [3] array constant
+    # is rejected by pallas kernel tracing).
+    new_pos = jnp.stack(
+        [jnp.mod(adv[:, 0], float(nx)),
+         jnp.mod(adv[:, 1], float(ny)),
+         jnp.mod(adv[:, 2], float(nz))], axis=1)
+
+    npos_ref[...] = new_pos
+    nmom_ref[...] = new_mom
+
+
+def _contrib_kernel(dims, pos_ref, mom_ref, cell_ref, contrib_ref):
+    """ComputeCurrent hot loop over one particle tile."""
+    nx, ny, nz = dims
+    pos = pos_ref[...]
+    mom = mom_ref[...]
+    gamma = jnp.sqrt(1.0 + jnp.sum(mom * mom, axis=-1, keepdims=True))
+    v = mom / gamma
+
+    g = pos - 0.5
+    i0f = jnp.floor(g)
+    f = g - i0f
+    i0 = i0f.astype(jnp.int32)
+
+    cells = []
+    contribs = []
+    for cx in (0, 1):
+        for cy in (0, 1):
+            for cz in (0, 1):
+                ix = jnp.mod(i0[:, 0] + cx, nx)
+                iy = jnp.mod(i0[:, 1] + cy, ny)
+                iz = jnp.mod(i0[:, 2] + cz, nz)
+                wx = f[:, 0] if cx else 1.0 - f[:, 0]
+                wy = f[:, 1] if cy else 1.0 - f[:, 1]
+                wz = f[:, 2] if cz else 1.0 - f[:, 2]
+                w = (wx * wy * wz)[:, None]
+                cells.append((ix * ny + iy) * nz + iz)
+                contribs.append(w * v)
+    cell_ref[...] = jnp.stack(cells, axis=1).astype(jnp.int32)
+    contrib_ref[...] = jnp.stack(contribs, axis=1)
+
+
+def _particle_specs(block):
+    return pl.BlockSpec((block, 3), lambda i: (i, 0))
+
+
+def _field_spec(shape):
+    return pl.BlockSpec(shape, lambda i: (0, 0, 0, 0))
+
+
+def move_and_mark(e, b, pos, mom, *, qm, dt, block=PARTICLE_BLOCK):
+    """Pallas MoveAndMark: returns (new_pos [n,3], new_mom [n,3])."""
+    n = pos.shape[0]
+    if n % block != 0:
+        raise ValueError(f"particle count {n} must be a multiple of {block}")
+    dims = e.shape[1:]
+    kern = functools.partial(_push_kernel, qm, dt, dims)
+    return pl.pallas_call(
+        kern,
+        grid=(n // block,),
+        in_specs=[_field_spec(e.shape), _field_spec(b.shape),
+                  _particle_specs(block), _particle_specs(block)],
+        out_specs=(_particle_specs(block), _particle_specs(block)),
+        out_shape=(jax.ShapeDtypeStruct((n, 3), pos.dtype),
+                   jax.ShapeDtypeStruct((n, 3), mom.dtype)),
+        interpret=True,
+    )(e, b, pos, mom)
+
+
+def current_contributions(pos, mom, dims, *, block=PARTICLE_BLOCK):
+    """Pallas ComputeCurrent hot loop.
+
+    Returns (cell [n,8] int32, contrib [n,8,3] f32) — the caller scales by
+    qw and scatter-adds into J (see ``model.compute_current``).
+    """
+    n = pos.shape[0]
+    if n % block != 0:
+        raise ValueError(f"particle count {n} must be a multiple of {block}")
+    kern = functools.partial(_contrib_kernel, dims)
+    return pl.pallas_call(
+        kern,
+        grid=(n // block,),
+        in_specs=[_particle_specs(block), _particle_specs(block)],
+        out_specs=(pl.BlockSpec((block, 8), lambda i: (i, 0)),
+                   pl.BlockSpec((block, 8, 3), lambda i: (i, 0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((n, 8), jnp.int32),
+                   jax.ShapeDtypeStruct((n, 8, 3), jnp.float32)),
+        interpret=True,
+    )(pos, mom)

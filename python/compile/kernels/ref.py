@@ -1,0 +1,190 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests`` asserts the Pallas
+kernels (interpret mode) match these to float32 tolerance, and the Rust
+native implementation (``rust/src/pic``) is cross-checked against the AOT
+artifacts lowered from the Pallas path.
+
+All functions are shape-polymorphic pure jnp and run under jit.
+"""
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# BabelStream ops (Deakin et al. 2016), jnp versions.
+# ---------------------------------------------------------------------------
+
+def stream_copy(a):
+    """c = a"""
+    return a * 1.0
+
+
+def stream_mul(c, scalar):
+    """b = scalar * c"""
+    return scalar * c
+
+
+def stream_add(a, b):
+    """c = a + b"""
+    return a + b
+
+
+def stream_triad(b, c, scalar):
+    """a = b + scalar * c"""
+    return b + scalar * c
+
+
+def stream_dot(a, b):
+    """sum = a . b"""
+    return jnp.sum(a * b, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# PIC primitives: CIC gather, Boris push, CIC current contributions.
+# ---------------------------------------------------------------------------
+
+def cic_weights(pos):
+    """Cloud-in-cell interpolation stencil for cell-centered fields.
+
+    Fields live at cell centers ``(i + 0.5)`` (dx = 1). Returns
+    ``(i0, frac)`` where ``i0`` is the lower cell index per axis (unwrapped,
+    int32) and ``frac`` in [0,1) the offset within the stencil.
+
+    pos: [n, 3] float32.
+    """
+    g = pos - 0.5
+    i0 = jnp.floor(g)
+    frac = g - i0
+    return i0.astype(jnp.int32), frac
+
+
+def cic_gather(field, pos):
+    """Trilinear gather of a [3, nx, ny, nz] field at particle positions.
+
+    Returns [n, 3] field values. Periodic wrap on all axes.
+    """
+    _, nx, ny, nz = field.shape
+    i0, f = cic_weights(pos)
+    out = jnp.zeros((pos.shape[0], 3), dtype=field.dtype)
+    for cx in (0, 1):
+        for cy in (0, 1):
+            for cz in (0, 1):
+                ix = jnp.mod(i0[:, 0] + cx, nx)
+                iy = jnp.mod(i0[:, 1] + cy, ny)
+                iz = jnp.mod(i0[:, 2] + cz, nz)
+                wx = f[:, 0] if cx else 1.0 - f[:, 0]
+                wy = f[:, 1] if cy else 1.0 - f[:, 1]
+                wz = f[:, 2] if cz else 1.0 - f[:, 2]
+                w = wx * wy * wz
+                vals = field[:, ix, iy, iz]          # [3, n]
+                out = out + (vals * w).T
+    return out
+
+
+def boris_push(ep, bp, mom, qm, dt):
+    """Relativistic Boris rotation. mom is u = gamma*v; returns new u.
+
+    ep, bp, mom: [n, 3]; qm, dt scalars.
+    """
+    h = 0.5 * qm * dt
+    um = mom + h * ep
+    gamma = jnp.sqrt(1.0 + jnp.sum(um * um, axis=-1, keepdims=True))
+    t = (h / gamma) * bp
+    t2 = jnp.sum(t * t, axis=-1, keepdims=True)
+    s = 2.0 * t / (1.0 + t2)
+    up = um + jnp.cross(um, t)
+    uplus = um + jnp.cross(up, s)
+    return uplus + h * ep
+
+
+def advance_position(pos, mom, dt, dims):
+    """x += dt * u / gamma, periodic wrap into [0, dims)."""
+    gamma = jnp.sqrt(1.0 + jnp.sum(mom * mom, axis=-1, keepdims=True))
+    v = mom / gamma
+    new = pos + dt * v
+    d = jnp.asarray(dims, dtype=pos.dtype)
+    return jnp.mod(new, d)
+
+
+def move_and_mark(e, b, pos, mom, qm, dt):
+    """Reference MoveAndMark: gather + Boris push + position advance."""
+    ep = cic_gather(e, pos)
+    bp = cic_gather(b, pos)
+    new_mom = boris_push(ep, bp, mom, qm, dt)
+    dims = e.shape[1:]
+    new_pos = advance_position(pos, new_mom, dt, dims)
+    return new_pos, new_mom
+
+
+def current_contributions(pos, mom, dims):
+    """Per-particle CIC current stencil (the ComputeCurrent hot loop).
+
+    Returns (cell [n, 8] int32 flattened cell ids, contrib [n, 8, 3] f32):
+    contribution of each particle to each of its 8 neighbour cells, where
+    contrib = w_corner * v and the caller scales by qw and scatter-adds.
+    """
+    nx, ny, nz = dims
+    gamma = jnp.sqrt(1.0 + jnp.sum(mom * mom, axis=-1, keepdims=True))
+    v = mom / gamma                                   # [n, 3]
+    i0, f = cic_weights(pos)
+    cells = []
+    contribs = []
+    for cx in (0, 1):
+        for cy in (0, 1):
+            for cz in (0, 1):
+                ix = jnp.mod(i0[:, 0] + cx, nx)
+                iy = jnp.mod(i0[:, 1] + cy, ny)
+                iz = jnp.mod(i0[:, 2] + cz, nz)
+                wx = f[:, 0] if cx else 1.0 - f[:, 0]
+                wy = f[:, 1] if cy else 1.0 - f[:, 1]
+                wz = f[:, 2] if cz else 1.0 - f[:, 2]
+                w = (wx * wy * wz)[:, None]           # [n, 1]
+                cells.append((ix * ny + iy) * nz + iz)
+                contribs.append(w * v)
+    cell = jnp.stack(cells, axis=1).astype(jnp.int32)   # [n, 8]
+    contrib = jnp.stack(contribs, axis=1)               # [n, 8, 3]
+    return cell, contrib
+
+
+def deposit_current(pos, mom, dims, qw):
+    """Full reference ComputeCurrent: scatter-add contributions to J."""
+    nx, ny, nz = dims
+    cell, contrib = current_contributions(pos, mom, dims)
+    flat_cell = cell.reshape(-1)                        # [n*8]
+    flat_contrib = contrib.reshape(-1, 3) * qw          # [n*8, 3]
+    j = jnp.zeros((nx * ny * nz, 3), dtype=jnp.float32)
+    j = j.at[flat_cell].add(flat_contrib)
+    return j.T.reshape(3, nx, ny, nz)
+
+
+# ---------------------------------------------------------------------------
+# Field solver: central-difference curl on the periodic cell-centered grid.
+# ---------------------------------------------------------------------------
+
+def curl(field):
+    """Central-difference curl of a [3, nx, ny, nz] field, periodic, dx=1."""
+    def d(comp, axis):
+        # comp: [nx, ny, nz]; axis: 0=x, 1=y, 2=z spatial axis
+        return 0.5 * (jnp.roll(comp, -1, axis=axis)
+                      - jnp.roll(comp, 1, axis=axis))
+    fx, fy, fz = field[0], field[1], field[2]
+    cx = d(fz, 1) - d(fy, 2)     # dFz/dy - dFy/dz
+    cy = d(fx, 2) - d(fz, 0)     # dFx/dz - dFz/dx
+    cz = d(fy, 0) - d(fx, 1)     # dFy/dx - dFx/dy
+    return jnp.stack([cx, cy, cz], axis=0)
+
+
+def field_update(e, b, j, dt):
+    """E += dt (curl B - J); B -= dt curl E' (semi-implicit leapfrog)."""
+    e_new = e + dt * (curl(b) - j)
+    b_new = b - dt * curl(e_new)
+    return e_new, b_new
+
+
+def pic_step(e, b, pos, mom, qm, qw, dt):
+    """One full reference PIC step (MoveAndMark + ComputeCurrent + fields)."""
+    new_pos, new_mom = move_and_mark(e, b, pos, mom, qm, dt)
+    j = deposit_current(new_pos, new_mom, e.shape[1:], qw)
+    e_new, b_new = field_update(e, b, j, dt)
+    return e_new, b_new, new_pos, new_mom

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernels for the BabelStream operations.
+
+BabelStream (Deakin et al. 2016) is the bandwidth yardstick the paper uses
+for the AMD roofline ceilings (§6.2). These kernels are the PJRT-executed
+backend of ``rust/src/babelstream``: the Rust harness times them end-to-end
+through the compiled HLO.
+
+All kernels are 1-D block-tiled. ``interpret=True`` everywhere: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block length for the 1-D stream kernels. 8 * 128 * 16 lanes — a multiple
+# of the (8, 128) f32 vreg tile so the VPU layout is dense.
+BLOCK = 16384
+
+
+def _grid(n, block):
+    if n % block != 0:
+        raise ValueError(f"stream length {n} must be a multiple of {block}")
+    return n // block
+
+
+def _spec(block):
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def _copy_kernel(a_ref, c_ref):
+    c_ref[...] = a_ref[...]
+
+
+def _mul_kernel(scalar, c_ref, b_ref):
+    b_ref[...] = scalar * c_ref[...]
+
+
+def _add_kernel(a_ref, b_ref, c_ref):
+    c_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(scalar, b_ref, c_ref, a_ref):
+    a_ref[...] = b_ref[...] + scalar * c_ref[...]
+
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    # Per-block partial dot product; the caller reduces over blocks.
+    o_ref[...] = jnp.sum(a_ref[...] * b_ref[...], dtype=jnp.float32)[None]
+
+
+def copy(a, *, block=BLOCK):
+    """c = a"""
+    n = a.shape[0]
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(_grid(n, block),),
+        in_specs=[_spec(block)],
+        out_specs=_spec(block),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a)
+
+
+def mul(c, scalar, *, block=BLOCK):
+    """b = scalar * c"""
+    n = c.shape[0]
+    return pl.pallas_call(
+        functools.partial(_mul_kernel, scalar),
+        grid=(_grid(n, block),),
+        in_specs=[_spec(block)],
+        out_specs=_spec(block),
+        out_shape=jax.ShapeDtypeStruct((n,), c.dtype),
+        interpret=True,
+    )(c)
+
+
+def add(a, b, *, block=BLOCK):
+    """c = a + b"""
+    n = a.shape[0]
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(_grid(n, block),),
+        in_specs=[_spec(block), _spec(block)],
+        out_specs=_spec(block),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def triad(b, c, scalar, *, block=BLOCK):
+    """a = b + scalar * c"""
+    n = b.shape[0]
+    return pl.pallas_call(
+        functools.partial(_triad_kernel, scalar),
+        grid=(_grid(n, block),),
+        in_specs=[_spec(block), _spec(block)],
+        out_specs=_spec(block),
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(b, c)
+
+
+def dot(a, b, *, block=BLOCK):
+    """sum(a * b) — per-block partials in the kernel, final sum outside."""
+    n = a.shape[0]
+    g = _grid(n, block)
+    partials = pl.pallas_call(
+        _dot_kernel,
+        grid=(g,),
+        in_specs=[_spec(block), _spec(block)],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return jnp.sum(partials, dtype=jnp.float32)

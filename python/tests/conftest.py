@@ -1,0 +1,25 @@
+"""Shared fixtures/strategies for the rocline python test suite."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def random_fields(rng, dims, scale=1.0):
+    """Random E,B field pair [3, nx, ny, nz] f32."""
+    nx, ny, nz = dims
+    e = (scale * rng.normal(size=(3, nx, ny, nz))).astype(np.float32)
+    b = (scale * rng.normal(size=(3, nx, ny, nz))).astype(np.float32)
+    return e, b
+
+
+def random_particles(rng, n, dims, pmax=2.0):
+    """Random particle state: pos in [0, dims), mom ~ N(0, pmax)."""
+    nx, ny, nz = dims
+    pos = (rng.random((n, 3)) * np.array([nx, ny, nz])).astype(np.float32)
+    mom = (pmax * rng.normal(size=(n, 3))).astype(np.float32)
+    return pos, mom

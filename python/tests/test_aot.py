@@ -1,0 +1,71 @@
+"""AOT build smoke tests: HLO text artifacts + manifest format."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot
+from compile.cases import CASES
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out))
+    return out
+
+
+def test_all_entries_emitted(built):
+    names = {f"{k}_{c}" for c in CASES
+             for k in ("pic_step", "move_and_mark", "compute_current",
+                       "field_update")}
+    names |= {f"stream_{op}" for op in ("copy", "mul", "add", "triad", "dot")}
+    for n in names:
+        path = built / f"{n}.hlo.txt"
+        assert path.exists(), f"missing artifact {n}"
+        text = path.read_text()
+        assert "ENTRY" in text, f"{n} does not look like HLO text"
+        assert "HloModule" in text
+
+
+def test_hlo_text_has_no_serialized_proto_markers(built):
+    # Interchange MUST be text: parseable module header on line 1.
+    for f in built.glob("*.hlo.txt"):
+        first = f.read_text().splitlines()[0]
+        assert first.startswith("HloModule"), f.name
+
+
+def test_manifest_lists_every_entry(built):
+    text = (built / "manifest.txt").read_text()
+    entries = re.findall(r"^entry name=(\S+)", text, re.M)
+    assert len(entries) == len(set(entries)) == 13
+
+
+def test_manifest_case_lines_carry_constants(built):
+    text = (built / "manifest.txt").read_text()
+    for case in CASES.values():
+        m = re.search(rf"^case name={case.name} (.+)$", text, re.M)
+        assert m, f"no case line for {case.name}"
+        kv = dict(p.split("=") for p in m.group(1).split())
+        assert int(kv["nx"]) == case.nx
+        assert float(kv["dt"]) == case.dt
+        assert float(kv["qw"]) == case.qw
+
+
+def test_manifest_arg_specs_parse(built):
+    text = (built / "manifest.txt").read_text()
+    for line in text.splitlines():
+        if not line.startswith("entry "):
+            continue
+        m = re.search(r"args=(\S+)", line)
+        assert m
+        for spec in m.group(1).split(";"):
+            assert re.fullmatch(r"(float32|int32)\[[0-9,]+\]", spec), spec
+
+
+def test_pic_step_artifact_mentions_scatter(built):
+    # the deposition lowers to an HLO scatter — guard against silently
+    # losing the deposit when editing model.py
+    text = (built / "pic_step_lwfa.hlo.txt").read_text()
+    assert "scatter" in text

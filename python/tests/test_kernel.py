@@ -1,0 +1,136 @@
+"""Pallas PIC kernels vs pure-jnp oracles — the CORE correctness signal.
+
+MoveAndMark (gather + Boris push + advance) and the ComputeCurrent hot loop
+must match ref.py over hypothesis-swept shapes, block sizes, and particle
+states, and satisfy physical invariants (bounds, stencil partition of
+unity, gamma >= 1).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pic, ref
+from tests.conftest import random_fields, random_particles
+
+dims_st = st.tuples(st.sampled_from([4, 8, 16]),
+                    st.sampled_from([4, 8, 12]),
+                    st.sampled_from([4, 8, 10]))
+block_st = st.sampled_from([64, 128, 256])
+seed_st = st.integers(0, 2**31 - 1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims=dims_st, block=block_st, mult=st.integers(1, 4), seed=seed_st)
+def test_move_and_mark_matches_ref(dims, block, mult, seed):
+    rng = np.random.default_rng(seed)
+    n = block * mult
+    e, b = random_fields(rng, dims)
+    pos, mom = random_particles(rng, n, dims)
+    p1, m1 = pic.move_and_mark(jnp.asarray(e), jnp.asarray(b),
+                               jnp.asarray(pos), jnp.asarray(mom),
+                               qm=-1.0, dt=0.5, block=block)
+    p2, m2 = ref.move_and_mark(jnp.asarray(e), jnp.asarray(b),
+                               jnp.asarray(pos), jnp.asarray(mom), -1.0, 0.5)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims=dims_st, block=block_st, mult=st.integers(1, 4), seed=seed_st)
+def test_current_contributions_match_ref(dims, block, mult, seed):
+    rng = np.random.default_rng(seed)
+    n = block * mult
+    pos, mom = random_particles(rng, n, dims)
+    c1, k1 = pic.current_contributions(jnp.asarray(pos), jnp.asarray(mom),
+                                       dims, block=block)
+    c2, k2 = ref.current_contributions(jnp.asarray(pos), jnp.asarray(mom),
+                                       dims)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=dims_st, seed=seed_st)
+def test_positions_stay_in_bounds(dims, seed):
+    rng = np.random.default_rng(seed)
+    e, b = random_fields(rng, dims, scale=5.0)
+    pos, mom = random_particles(rng, 256, dims, pmax=10.0)
+    p1, _ = pic.move_and_mark(jnp.asarray(e), jnp.asarray(b),
+                              jnp.asarray(pos), jnp.asarray(mom),
+                              qm=-1.0, dt=0.5, block=256)
+    p = np.asarray(p1)
+    hi = np.array(dims, dtype=np.float32)
+    assert (p >= 0).all() and (p < hi).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims=dims_st, seed=seed_st)
+def test_cells_in_range_and_weights_partition(dims, seed):
+    """Stencil invariants: cell ids valid; per-particle |contrib| rows sum
+    to v (partition of unity of the CIC weights)."""
+    rng = np.random.default_rng(seed)
+    nx, ny, nz = dims
+    pos, mom = random_particles(rng, 256, dims)
+    cell, contrib = pic.current_contributions(jnp.asarray(pos),
+                                              jnp.asarray(mom),
+                                              dims, block=256)
+    c = np.asarray(cell)
+    assert (c >= 0).all() and (c < nx * ny * nz).all()
+    # sum over the 8 stencil corners == v exactly (weights sum to 1)
+    mom_np = np.asarray(mom, dtype=np.float64)
+    gamma = np.sqrt(1.0 + (mom_np ** 2).sum(axis=1, keepdims=True))
+    v = mom_np / gamma
+    np.testing.assert_allclose(np.asarray(contrib).sum(axis=1), v,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gamma_never_below_one(rng):
+    """Boris push preserves gamma >= 1 (no superluminal particles)."""
+    dims = (8, 8, 8)
+    e, b = random_fields(rng, dims, scale=20.0)
+    pos, mom = random_particles(rng, 512, dims, pmax=50.0)
+    _, m1 = pic.move_and_mark(jnp.asarray(e), jnp.asarray(b),
+                              jnp.asarray(pos), jnp.asarray(mom),
+                              qm=-1.0, dt=0.5, block=512)
+    m = np.asarray(m1, dtype=np.float64)
+    gamma = np.sqrt(1.0 + (m ** 2).sum(axis=1))
+    assert (gamma >= 1.0).all()
+    assert np.isfinite(m).all()
+
+
+def test_pure_magnetic_rotation_preserves_energy(rng):
+    """With E=0 the Boris rotation must conserve |u| per particle."""
+    dims = (8, 8, 8)
+    e = np.zeros((3, *dims), dtype=np.float32)
+    _, b = random_fields(rng, dims, scale=5.0)
+    pos, mom = random_particles(rng, 512, dims, pmax=5.0)
+    _, m1 = pic.move_and_mark(jnp.asarray(e), jnp.asarray(b),
+                              jnp.asarray(pos), jnp.asarray(mom),
+                              qm=-1.0, dt=0.5, block=512)
+    u0 = np.linalg.norm(np.asarray(mom, dtype=np.float64), axis=1)
+    u1 = np.linalg.norm(np.asarray(m1, dtype=np.float64), axis=1)
+    np.testing.assert_allclose(u1, u0, rtol=2e-4, atol=1e-5)
+
+
+def test_block_must_divide_particles():
+    e = jnp.zeros((3, 4, 4, 4), jnp.float32)
+    pos = jnp.zeros((100, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        pic.move_and_mark(e, e, pos, pos, qm=-1.0, dt=0.5, block=64)
+    with pytest.raises(ValueError):
+        pic.current_contributions(pos, pos, (4, 4, 4), block=64)
+
+
+def test_zero_momentum_particles_do_not_move_without_fields():
+    dims = (4, 4, 4)
+    e = jnp.zeros((3, *dims), jnp.float32)
+    pos = jnp.asarray(np.full((64, 3), 1.25, dtype=np.float32))
+    mom = jnp.zeros((64, 3), jnp.float32)
+    p1, m1 = pic.move_and_mark(e, e, pos, mom, qm=-1.0, dt=0.5, block=64)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(pos))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(mom))

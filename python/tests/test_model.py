@@ -1,0 +1,101 @@
+"""Layer-2 model tests: full PIC step vs reference + physics invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.cases import CASES, LWFA
+from compile.kernels import ref
+from tests.conftest import random_fields, random_particles
+
+DIMS = (8, 8, 8)
+N = 512
+
+
+def _state(rng, dims=DIMS, n=N):
+    e, b = random_fields(rng, dims, scale=0.1)
+    pos, mom = random_particles(rng, n, dims, pmax=1.0)
+    return (jnp.asarray(e), jnp.asarray(b),
+            jnp.asarray(pos), jnp.asarray(mom))
+
+
+def test_pic_step_matches_ref(rng):
+    e, b, pos, mom = _state(rng)
+    got = model.pic_step(e, b, pos, mom, qm=-1.0, qw=-0.05, dt=0.5)
+    want = ref.pic_step(e, b, pos, mom, -1.0, -0.05, 0.5)
+    for g, w, name in zip(got, want, ["e", "b", "pos", "mom"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_compute_current_matches_ref(rng):
+    _, _, pos, mom = _state(rng)
+    got = model.compute_current(pos, mom, DIMS, qw=-0.05)
+    want = ref.deposit_current(pos, mom, DIMS, -0.05)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_total_current_equals_total_velocity(rng):
+    """Deposition conservation: sum_cells J = qw * sum_particles v."""
+    _, _, pos, mom = _state(rng)
+    j = model.compute_current(pos, mom, DIMS, qw=-0.05)
+    m = np.asarray(mom, dtype=np.float64)
+    gamma = np.sqrt(1.0 + (m ** 2).sum(axis=1, keepdims=True))
+    v = m / gamma
+    want = -0.05 * v.sum(axis=0)
+    got = np.asarray(j, dtype=np.float64).reshape(3, -1).sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_field_update_no_sources_preserves_uniform_field():
+    """curl of a uniform field is 0: E,B constant in space stay constant."""
+    e = jnp.full((3, *DIMS), 0.25, jnp.float32)
+    b = jnp.full((3, *DIMS), -0.5, jnp.float32)
+    j = jnp.zeros((3, *DIMS), jnp.float32)
+    e2, b2 = model.field_update(e, b, j, dt=0.5)
+    np.testing.assert_array_equal(np.asarray(e2), np.asarray(e))
+    np.testing.assert_array_equal(np.asarray(b2), np.asarray(b))
+
+
+def test_field_update_divergence_b_preserved(rng):
+    """Central-difference curl keeps div B = 0 (discrete identity)."""
+    def div(f):
+        out = np.zeros(f.shape[1:])
+        for ax in range(3):
+            out += 0.5 * (np.roll(f[ax], -1, axis=ax)
+                          - np.roll(f[ax], 1, axis=ax))
+        return out
+    e, b = random_fields(rng, DIMS, scale=1.0)
+    j = np.zeros_like(e)
+    d0 = div(np.asarray(b, dtype=np.float64))
+    e2, b2 = model.field_update(jnp.asarray(e), jnp.asarray(b),
+                                jnp.asarray(j), dt=0.5)
+    d1 = div(np.asarray(b2, dtype=np.float64))
+    np.testing.assert_allclose(d1, d0, atol=1e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_multi_step_stays_finite(seed):
+    rng = np.random.default_rng(seed)
+    e, b, pos, mom = _state(rng)
+    for _ in range(5):
+        e, b, pos, mom = model.pic_step(e, b, pos, mom,
+                                        qm=-1.0, qw=-0.05, dt=0.5)
+    for arr in (e, b, pos, mom):
+        assert np.isfinite(np.asarray(arr)).all()
+
+
+def test_case_specs_consistent():
+    for case in CASES.values():
+        assert case.particles == case.cells * case.ppc
+        assert case.particles % 256 == 0, "block size must divide particles"
+        assert case.dt < 1.0 / np.sqrt(3.0), "CFL violated"
+
+
+def test_case_shapes_roundtrip():
+    assert LWFA.field_shape == (3, 40, 40, 40)
+    assert LWFA.particle_shape == (256000, 3)

@@ -1,0 +1,92 @@
+"""Pallas stream kernels vs pure-jnp oracles (BabelStream ops).
+
+Hypothesis sweeps array lengths and block sizes; every op must match the
+reference bit-tight (copy/mul/add/triad are elementwise) or to f32 reduce
+tolerance (dot).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stream
+
+
+def _arr(rng, n):
+    return jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+
+
+# block sizes dividing n are required; generate (block, multiplier) pairs.
+blocks = st.sampled_from([128, 256, 1024, 4096])
+mults = st.integers(min_value=1, max_value=6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(block=blocks, mult=mults, seed=st.integers(0, 2**31 - 1))
+def test_copy_matches_ref(block, mult, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, block * mult)
+    got = stream.copy(a, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.stream_copy(a)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(block=blocks, mult=mults, seed=st.integers(0, 2**31 - 1),
+       scalar=st.floats(-3, 3, allow_nan=False, width=32))
+def test_mul_matches_ref(block, mult, seed, scalar):
+    rng = np.random.default_rng(seed)
+    c = _arr(rng, block * mult)
+    got = stream.mul(c, np.float32(scalar), block=block)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.stream_mul(c, np.float32(scalar))),
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(block=blocks, mult=mults, seed=st.integers(0, 2**31 - 1))
+def test_add_matches_ref(block, mult, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, block * mult), _arr(rng, block * mult)
+    got = stream.add(a, b, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.stream_add(a, b)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(block=blocks, mult=mults, seed=st.integers(0, 2**31 - 1),
+       scalar=st.floats(-3, 3, allow_nan=False, width=32))
+def test_triad_matches_ref(block, mult, seed, scalar):
+    rng = np.random.default_rng(seed)
+    b, c = _arr(rng, block * mult), _arr(rng, block * mult)
+    got = stream.triad(b, c, np.float32(scalar), block=block)
+    # pallas path may emit an FMA for b + scalar*c; allow 2-ulp slack
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.stream_triad(b, c, np.float32(scalar))),
+        rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(block=blocks, mult=mults, seed=st.integers(0, 2**31 - 1))
+def test_dot_matches_ref(block, mult, seed):
+    rng = np.random.default_rng(seed)
+    n = block * mult
+    a, b = _arr(rng, n), _arr(rng, n)
+    got = float(stream.dot(a, b, block=block))
+    want = float(ref.stream_dot(a, b))
+    assert got == pytest.approx(want, rel=1e-4, abs=1e-3)
+
+
+def test_block_must_divide_length():
+    a = jnp.zeros((100,), jnp.float32)
+    with pytest.raises(ValueError):
+        stream.copy(a, block=64)
+
+
+def test_dot_partials_shape():
+    # dot with g blocks reduces g partials; check against numpy double acc
+    rng = np.random.default_rng(7)
+    a, b = _arr(rng, 8 * 1024), _arr(rng, 8 * 1024)
+    got = float(stream.dot(a, b, block=1024))
+    want = float(np.dot(np.asarray(a, dtype=np.float64),
+                        np.asarray(b, dtype=np.float64)))
+    assert got == pytest.approx(want, rel=1e-3)

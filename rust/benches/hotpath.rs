@@ -1,0 +1,89 @@
+//! Whole-stack hot paths: native PIC step rate, kernel trace
+//! generation, and the full profile-one-dispatch pipeline.
+
+use rocline::arch::presets;
+use rocline::pic::kernels::{ComputeCurrentTrace, MoveAndMarkTrace};
+use rocline::pic::{CaseConfig, PicSim};
+use rocline::profiler::ProfileSession;
+use rocline::roofline::{eq2_intensity_performance, eq4_achieved_gips};
+use rocline::trace::sink::NullSink;
+use rocline::trace::TraceSource;
+use rocline::util::bench::BenchRunner;
+
+fn main() {
+    let mut r = BenchRunner::new("hotpath");
+    let cfg = CaseConfig::lwfa();
+    let particles = cfg.particles() as u64;
+
+    // native PIC phases (the L3 simulation substrate)
+    {
+        let mut sim = PicSim::new(&cfg, 1);
+        r.bench_throughput("pic/full_step", particles, || {
+            sim.step();
+            sim.step_count
+        });
+    }
+
+    // trace generation alone (NullSink isolates the generator)
+    {
+        let sim = PicSim::new(&cfg, 1);
+        let spec = presets::mi100();
+        let push = MoveAndMarkTrace {
+            state: &sim.state,
+            spec: &spec,
+        };
+        let deposit = ComputeCurrentTrace {
+            state: &sim.state,
+            spec: &spec,
+        };
+        let mut sink = NullSink;
+        r.bench_throughput("trace/move_and_mark", particles, || {
+            push.replay(64, &mut sink)
+        });
+        r.bench_throughput("trace/compute_current", particles, || {
+            deposit.replay(64, &mut sink)
+        });
+    }
+
+    // full profile pipeline: trace + memsim + counters + timing
+    {
+        let sim = PicSim::new(&cfg, 1);
+        for spec in [presets::mi100(), presets::v100()] {
+            let push = MoveAndMarkTrace {
+                state: &sim.state,
+                spec: &spec,
+            };
+            let deposit = ComputeCurrentTrace {
+                state: &sim.state,
+                spec: &spec,
+            };
+            let name_p =
+                format!("profile/move_and_mark_{}", spec.name);
+            let name_d =
+                format!("profile/compute_current_{}", spec.name);
+            let mut session = ProfileSession::new(spec.clone());
+            r.bench_throughput(&name_p, particles, || {
+                session.profile(&push).duration_s
+            });
+            let mut session2 = ProfileSession::new(spec.clone());
+            r.bench_throughput(&name_d, particles, || {
+                session2.profile(&deposit).duration_s
+            });
+        }
+    }
+
+    // the paper's equations (should be ~ns; regression guard)
+    r.bench("equations/eq2_eq4", || {
+        let g = eq4_achieved_gips(449_796_480, 64, 0.0025);
+        let i = eq2_intensity_performance(
+            449_796_480,
+            64,
+            1_124_711_000.0,
+            408_483_000.0,
+            0.0025,
+        );
+        g + i
+    });
+
+    r.finish();
+}

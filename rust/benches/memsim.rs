@@ -1,0 +1,104 @@
+//! Memory-simulator microbenchmarks — the per-event hot path that the
+//! §Perf pass optimizes (see EXPERIMENTS.md §Perf).
+
+use rocline::arch::presets;
+use rocline::memsim::banks::{BankModel, ConflictStats};
+use rocline::memsim::{Cache, Coalescer, MemHierarchy};
+use rocline::trace::event::{GroupCtx, LdsAccess, MemAccess, MemKind};
+use rocline::trace::sink::EventSink;
+use rocline::trace::synth::{RandomTrace, StreamTrace, StridedTrace};
+use rocline::trace::TraceSource;
+use rocline::util::bench::BenchRunner;
+
+fn main() {
+    let mut r = BenchRunner::new("memsim");
+
+    // coalescer: contiguous vs strided vs gather
+    {
+        let c = Coalescer::new(32);
+        let contiguous = MemAccess::contiguous(MemKind::Read, 0, 64, 4);
+        let strided = MemAccess::strided(MemKind::Read, 0, 64, 128, 4);
+        let mut buf = Vec::with_capacity(128);
+        r.bench_throughput("coalesce/contiguous_64lane", 64, || {
+            c.sectors(&contiguous, &mut buf)
+        });
+        r.bench_throughput("coalesce/strided_64lane", 64, || {
+            c.sectors(&strided, &mut buf)
+        });
+    }
+
+    // raw cache access
+    {
+        let mut cache = Cache::new(4 * 1024 * 1024, 64, 16, true);
+        let mut line = 0u64;
+        r.bench_throughput("cache/access_stream", 1, || {
+            line = (line + 1) % 100_000;
+            cache.access_line(line, false).is_hit()
+        });
+    }
+
+    // LDS bank conflict degree
+    {
+        let model = BankModel::new(32);
+        let addrs: Vec<u64> = (0..64u64).map(|i| i * 4).collect();
+        let a = LdsAccess::from_lane_addrs(MemKind::Read, &addrs, 4);
+        let mut stats = ConflictStats::default();
+        r.bench_throughput("banks/degree_64lane", 64, || {
+            model.observe(&a, &mut stats);
+            stats.passes
+        });
+    }
+
+    // full hierarchy: one group-level access end to end
+    {
+        let spec = presets::mi100();
+        let mut h = MemHierarchy::new(&spec);
+        let a = MemAccess::contiguous(MemKind::Read, 0, 64, 4);
+        let mut g = 0u64;
+        r.bench_throughput("hierarchy/contiguous_read", 64, || {
+            g += 1;
+            h.on_mem(&GroupCtx { group_id: g % 120 }, &a);
+        });
+    }
+
+    // synthetic trace replays through the full hierarchy
+    for (name, trace) in [
+        (
+            "replay/stream_1M",
+            Box::new(StreamTrace::babelstream("copy", 1 << 20))
+                as Box<dyn TraceSource>,
+        ),
+        (
+            "replay/strided_256k",
+            Box::new(StridedTrace {
+                name: "strided".into(),
+                n: 1 << 18,
+                stride: 128,
+                bytes_per_lane: 4,
+            }),
+        ),
+        (
+            "replay/random_256k",
+            Box::new(RandomTrace {
+                name: "random".into(),
+                n: 1 << 18,
+                span: 1 << 26,
+                bytes_per_lane: 4,
+                seed: 1,
+            }),
+        ),
+    ] {
+        let spec = presets::mi100();
+        let items = match name {
+            "replay/stream_1M" => 1u64 << 20,
+            _ => 1 << 18,
+        };
+        r.bench_throughput(name, items, || {
+            let mut h = MemHierarchy::new(&spec);
+            trace.replay(64, &mut h);
+            h.traffic.actual_txn
+        });
+    }
+
+    r.finish();
+}

@@ -1,0 +1,126 @@
+//! One benchmark per paper table/figure: times the full regeneration
+//! pipeline (simulate + trace + memsim + counters + IRM assembly) on a
+//! short window of each science case, plus the cheap experiments at
+//! full fidelity.
+//!
+//! `cargo bench --bench paper_tables` — set `ROCLINE_BENCH_FAST=1` for a
+//! quick pass.
+
+use rocline::arch::presets;
+use rocline::babelstream::DeviceStream;
+use rocline::coordinator::CaseRun;
+use rocline::gpumembench::{InstThroughputBench, ShmemBench};
+use rocline::pic::CaseConfig;
+use rocline::profiler::{NvprofTool, RocprofTool};
+use rocline::roofline::InstructionRoofline;
+use rocline::util::bench::{BenchConfig, BenchRunner};
+
+fn short(case: &str, steps: u32) -> CaseConfig {
+    let mut cfg = CaseConfig::by_name(case).unwrap();
+    cfg.steps = steps;
+    cfg
+}
+
+fn main() {
+    // each iteration here is a multi-second pipeline run: keep samples
+    // low (the memsim/hotpath benches carry the fine-grained numbers)
+    let mut r = BenchRunner::new("paper").with_config(BenchConfig {
+        warmup_iters: 1,
+        samples: 3,
+        iters_per_sample: 1,
+    });
+
+    // Table 1 / Table 2: the profiled-run pipeline per GPU (4-step
+    // window; the full tables use 64/96 steps of the same pipeline)
+    for (table, case) in [("table1", "lwfa"), ("table2", "tweac")] {
+        for spec in presets::all_gpus() {
+            let cfg = short(case, 4);
+            let name =
+                format!("{table}/{}", spec.name.to_lowercase());
+            let spec2 = spec.clone();
+            r.bench(&name, || {
+                CaseRun::execute(spec2.clone(), cfg.clone())
+                    .session
+                    .dispatches
+                    .len()
+            });
+        }
+    }
+
+    // Fig. 3: kernel-share aggregation on a profiled run
+    {
+        let run =
+            CaseRun::execute(presets::v100(), short("tweac", 4));
+        r.bench("fig3/aggregate", || run.session.aggregates().len());
+    }
+
+    // Figs 4-5: nvprof-sim report + NVIDIA IRM assembly
+    {
+        let spec = presets::v100();
+        let run = CaseRun::execute(spec.clone(), short("lwfa", 4));
+        r.bench("fig4/nvprof_irm", || {
+            let rep = NvprofTool::default()
+                .reports(&run.session)
+                .into_iter()
+                .find(|x| x.kernel == "ComputeCurrent")
+                .unwrap();
+            InstructionRoofline::from_nvprof_txn(&spec, &rep)
+                .points
+                .len()
+        });
+        r.bench("fig5/nvprof_irm_bytes", || {
+            let rep = NvprofTool::default()
+                .reports(&run.session)
+                .into_iter()
+                .find(|x| x.kernel == "ComputeCurrent")
+                .unwrap();
+            InstructionRoofline::from_nvprof_bytes(&spec, &rep)
+                .points
+                .len()
+        });
+    }
+
+    // Figs 6-7: rocprof-sim report + AMD IRM assembly
+    for (fig, case) in [("fig6", "lwfa"), ("fig7", "tweac")] {
+        let spec = presets::mi100();
+        let run = CaseRun::execute(spec.clone(), short(case, 4));
+        let name = format!("{fig}/rocprof_irm");
+        r.bench(&name, || {
+            let rep = RocprofTool::reports(&run.session)
+                .into_iter()
+                .find(|x| x.kernel == "ComputeCurrent")
+                .unwrap();
+            InstructionRoofline::from_rocprof(&spec, &rep, 933.4)
+                .points
+                .len()
+        });
+    }
+
+    // §6.2 BabelStream (simulated, full 2^25 arrays) + gpumembench
+    for spec in presets::all_gpus() {
+        let name = format!(
+            "stream/copy_{}",
+            spec.name.to_lowercase()
+        );
+        let ds = DeviceStream::new(spec.clone(), 1 << 25);
+        r.bench_throughput(&name, (1 << 25) * 8, || {
+            ds.run_op("copy", 1).mbs as u64
+        });
+    }
+    {
+        let shmem = ShmemBench::new(presets::mi100());
+        r.bench("membench/shmem", || shmem.rows().len());
+        let inst = InstThroughputBench::new(presets::mi100());
+        r.bench("membench/valu", || inst.rows().len());
+    }
+
+    // Eq. 3 peaks (pure formula; nanoseconds)
+    r.bench("peaks/eq3", || {
+        presets::all_gpus()
+            .iter()
+            .map(|g| g.peak_gips())
+            .sum::<f64>()
+    });
+
+    r.finish();
+}

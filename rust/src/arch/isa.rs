@@ -1,0 +1,155 @@
+//! Instruction classification.
+//!
+//! The vendors' profilers disagree about what an "instruction" is — the
+//! crux of the paper's §7.3:
+//!
+//! * rocProf's `SQ_INSTS_VALU`/`SQ_INSTS_SALU` count **compute-only**
+//!   instructions (vector ALU per SIMD, scalar ALU per CU);
+//! * nvprof's `inst_executed` counts **all** warp instructions: compute,
+//!   control flow, address arithmetic, predicated-off included.
+//!
+//! Tagging every trace event with an [`InstClass`] lets each counter
+//! engine apply its own vendor's filter to the *same* underlying stream.
+
+/// Classes of instructions a kernel issues at group (warp/wavefront) level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstClass {
+    /// Vector ALU arithmetic (fp32 add/mul/fma, int ops on VGPRs).
+    ValuArith,
+    /// Vector transcendental/special (sqrt, rcp, cvt) — still VALU.
+    ValuSpecial,
+    /// Scalar ALU (AMD SALU; on NVIDIA these fold into the uniform path
+    /// and still count toward `inst_executed`).
+    Salu,
+    /// Global/device memory load (generates memory traffic).
+    GlobalLoad,
+    /// Global/device memory store.
+    GlobalStore,
+    /// Atomic read-modify-write on global memory.
+    GlobalAtomic,
+    /// LDS / shared-memory load.
+    LdsLoad,
+    /// LDS / shared-memory store.
+    LdsStore,
+    /// Branch / jump / loop control.
+    Branch,
+    /// Barrier / waitcnt / sync.
+    Sync,
+    /// Everything else (NOPs, s_endpgm, address-gen overhead not folded
+    /// into VALU, …).
+    Misc,
+}
+
+impl InstClass {
+    /// Does rocProf's `SQ_INSTS_VALU` count this class?
+    pub fn is_valu(self) -> bool {
+        matches!(
+            self,
+            InstClass::ValuArith | InstClass::ValuSpecial
+        )
+    }
+
+    /// Does rocProf's `SQ_INSTS_SALU` count this class?
+    pub fn is_salu(self) -> bool {
+        matches!(self, InstClass::Salu)
+    }
+
+    /// Vector memory instruction (AMD `SQ_INSTS_VMEM_*` would count it).
+    pub fn is_vmem(self) -> bool {
+        matches!(
+            self,
+            InstClass::GlobalLoad
+                | InstClass::GlobalStore
+                | InstClass::GlobalAtomic
+        )
+    }
+
+    /// LDS instruction.
+    pub fn is_lds(self) -> bool {
+        matches!(self, InstClass::LdsLoad | InstClass::LdsStore)
+    }
+
+    /// nvprof `inst_executed` counts *every* issued warp instruction.
+    pub fn counts_for_inst_executed(self) -> bool {
+        true
+    }
+
+    /// Short mnemonic used in reports.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            InstClass::ValuArith => "valu",
+            InstClass::ValuSpecial => "valu.sp",
+            InstClass::Salu => "salu",
+            InstClass::GlobalLoad => "ld.global",
+            InstClass::GlobalStore => "st.global",
+            InstClass::GlobalAtomic => "atom.global",
+            InstClass::LdsLoad => "ld.lds",
+            InstClass::LdsStore => "st.lds",
+            InstClass::Branch => "branch",
+            InstClass::Sync => "sync",
+            InstClass::Misc => "misc",
+        }
+    }
+
+    pub const ALL: [InstClass; 11] = [
+        InstClass::ValuArith,
+        InstClass::ValuSpecial,
+        InstClass::Salu,
+        InstClass::GlobalLoad,
+        InstClass::GlobalStore,
+        InstClass::GlobalAtomic,
+        InstClass::LdsLoad,
+        InstClass::LdsStore,
+        InstClass::Branch,
+        InstClass::Sync,
+        InstClass::Misc,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valu_classification() {
+        assert!(InstClass::ValuArith.is_valu());
+        assert!(InstClass::ValuSpecial.is_valu());
+        assert!(!InstClass::Salu.is_valu());
+        assert!(!InstClass::GlobalLoad.is_valu());
+    }
+
+    #[test]
+    fn vendor_filters_disjoint() {
+        // no class is both VALU and SALU
+        for c in InstClass::ALL {
+            assert!(!(c.is_valu() && c.is_salu()), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn inst_executed_counts_everything() {
+        // the nvprof semantics the paper calls out in §7.3
+        for c in InstClass::ALL {
+            assert!(c.counts_for_inst_executed());
+        }
+    }
+
+    #[test]
+    fn compute_only_subset_is_strict() {
+        // at least one class counted by inst_executed is NOT counted by
+        // VALU+SALU — the source of the paper's V100 instruction inflation
+        let compute: usize = InstClass::ALL
+            .iter()
+            .filter(|c| c.is_valu() || c.is_salu())
+            .count();
+        assert!(compute < InstClass::ALL.len());
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for c in InstClass::ALL {
+            assert!(seen.insert(c.mnemonic()), "dup {:?}", c);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! GPU architecture descriptions.
+//!
+//! Everything the IRM's *ceiling* side needs (Eq. 3 of the paper, cache and
+//! HBM geometry, warp/wavefront width) is a pure function of the
+//! [`GpuSpec`] parameters. The three presets carry the paper's published
+//! hardware parameters for the NVIDIA V100, AMD Radeon Instinct MI60, and
+//! AMD Instinct MI100, plus the calibration constants our performance
+//! simulator uses (documented per-field; see DESIGN.md §1 for the
+//! substitution rationale).
+
+pub mod isa;
+pub mod presets;
+pub mod spec;
+
+pub use isa::InstClass;
+pub use presets::{mi100, mi60, v100, all_gpus};
+pub use spec::{CacheSpec, GpuSpec, HbmSpec, LdsSpec, Vendor};

@@ -1,0 +1,224 @@
+//! The three GPUs of the paper, with published hardware parameters and the
+//! calibration constants derived from the paper's measurements.
+//!
+//! Published parameters (paper Tables 1/2 + vendor datasheets):
+//!
+//! | GPU   | CU/SM | sched/CU | freq GHz | group | HBM peak  |
+//! |-------|-------|----------|----------|-------|-----------|
+//! | V100  | 80    | 4        | 1.530    | 32    | 900 GB/s  |
+//! | MI60  | 64    | 1        | 1.800    | 64    | 1000 GB/s |
+//! | MI100 | 120   | 1        | 1.502    | 64    | 1200 GB/s |
+//!
+//! Calibration constants (documented substitutions, DESIGN.md §1):
+//!
+//! * `stream_efficiency` reproduces the paper's BabelStream copy rates:
+//!   MI60 808 975.476 MB/s (≈81%), MI100 933 355.781 MB/s (≈78%), V100
+//!   "over 99%" of 900 GB/s (§7.3).
+//! * `scatter_efficiency` reproduces the Table 1 kernel-runtime ordering
+//!   (MI100 < V100 < MI60) on the PIC gather/scatter access patterns.
+
+use super::spec::{CacheSpec, GpuSpec, HbmSpec, LdsSpec, Vendor};
+use crate::util::units::Bandwidth;
+
+/// NVIDIA Tesla V100 (Volta, SXM2 16GB — Summit's GPU).
+pub fn v100() -> GpuSpec {
+    GpuSpec {
+        name: "V100",
+        vendor: Vendor::Nvidia,
+        compute_units: 80,
+        simds_per_cu: 4, // 4 processing blocks per SM
+        schedulers_per_cu: 4,
+        ipc: 1.0,
+        frequency_ghz: 1.530,
+        group_size: 32,
+        l1: CacheSpec {
+            capacity: 128 * 1024, // unified L1/shared, up to 128KB per SM
+            line: 32,             // sector granularity (128B line, 32B sectors)
+            ways: 4,
+            write_allocate: false, // L1 is write-through, no-allocate
+            instances: 80,
+        },
+        l2: CacheSpec {
+            capacity: 6 * 1024 * 1024,
+            line: 32,
+            ways: 16,
+            write_allocate: true,
+            instances: 1,
+        },
+        hbm: HbmSpec {
+            peak: Bandwidth::from_gbs(900.0),
+            stream_efficiency: 0.993, // paper §7.3: "over 99%"
+            scatter_efficiency: 0.45,
+        },
+        lds: LdsSpec {
+            banks: 32,
+            bytes_per_cu: 96 * 1024,
+            bytes_per_cycle_per_cu: 128,
+        },
+        launch_overhead_us: 1.2,
+        atomic_ops_per_cycle: 3.5,
+        isa_expansion: 1.0,
+    }
+}
+
+/// AMD Radeon Instinct MI60 (Vega 20, GCN 5.1).
+pub fn mi60() -> GpuSpec {
+    GpuSpec {
+        name: "MI60",
+        vendor: Vendor::Amd,
+        compute_units: 64,
+        simds_per_cu: 4, // Fig. 1 of the paper (GCN whitepaper)
+        schedulers_per_cu: 1,
+        ipc: 1.0,
+        frequency_ghz: 1.800,
+        group_size: 64,
+        l1: CacheSpec {
+            capacity: 16 * 1024, // GCN vector L1: 16KB per CU
+            line: 64,
+            ways: 4,
+            write_allocate: false,
+            instances: 64,
+        },
+        l2: CacheSpec {
+            capacity: 4 * 1024 * 1024,
+            line: 64,
+            ways: 16,
+            write_allocate: true,
+            instances: 1,
+        },
+        hbm: HbmSpec {
+            peak: Bandwidth::from_gbs(1000.0),
+            // BabelStream copy = 808 975.476 MB/s (paper §6.2) => 80.9%
+            stream_efficiency: 0.808_975_476,
+            // GCN degrades hard on PIC's scattered access: calibrated from
+            // Table 1 (0.0127 s vs MI100's 0.0025 s on similar byte counts)
+            scatter_efficiency: 0.055,
+        },
+        lds: LdsSpec {
+            banks: 32,
+            bytes_per_cu: 64 * 1024,
+            bytes_per_cycle_per_cu: 128,
+        },
+        launch_overhead_us: 2.0,
+        atomic_ops_per_cycle: 0.4,
+        isa_expansion: 3.6,
+    }
+}
+
+/// AMD Instinct MI100 (Arcturus, CDNA 1).
+pub fn mi100() -> GpuSpec {
+    GpuSpec {
+        name: "MI100",
+        vendor: Vendor::Amd,
+        compute_units: 120,
+        simds_per_cu: 4,
+        schedulers_per_cu: 1,
+        ipc: 1.0,
+        frequency_ghz: 1.502,
+        group_size: 64,
+        l1: CacheSpec {
+            capacity: 16 * 1024,
+            line: 64,
+            ways: 4,
+            write_allocate: false,
+            instances: 120,
+        },
+        l2: CacheSpec {
+            capacity: 8 * 1024 * 1024,
+            line: 64,
+            ways: 16,
+            write_allocate: true,
+            instances: 1,
+        },
+        hbm: HbmSpec {
+            peak: Bandwidth::from_gbs(1200.0),
+            // BabelStream copy = 933 355.781 MB/s (paper §6.2) => 77.8%
+            stream_efficiency: 0.777_796_484,
+            // CDNA's memory system holds up much better on scatter
+            scatter_efficiency: 0.38,
+        },
+        lds: LdsSpec {
+            banks: 32,
+            bytes_per_cu: 64 * 1024,
+            bytes_per_cycle_per_cu: 128,
+        },
+        launch_overhead_us: 1.5,
+        atomic_ops_per_cycle: 8.0,
+        isa_expansion: 3.3,
+    }
+}
+
+/// All three paper GPUs in table order (V100, MI60, MI100).
+pub fn all_gpus() -> Vec<GpuSpec> {
+    vec![v100(), mi60(), mi100()]
+}
+
+/// Look a preset up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "v100" => Some(v100()),
+        "mi60" => Some(mi60()),
+        "mi100" => Some(mi100()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peak_gips_exact() {
+        // §7.2 / Tables 1-2: 489.60, 115.20, 180.24
+        assert!((v100().peak_gips() - 489.60).abs() < 1e-9);
+        assert!((mi60().peak_gips() - 115.20).abs() < 1e-9);
+        assert!((mi100().peak_gips() - 180.24).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_ceiling_ratios() {
+        // §7.3: V100 ceiling ≈2.7x MI100's and 4.25x MI60's
+        let r_mi100 = v100().peak_gips() / mi100().peak_gips();
+        let r_mi60 = v100().peak_gips() / mi60().peak_gips();
+        assert!((r_mi100 - 2.716).abs() < 0.01, "{r_mi100}");
+        assert!((r_mi60 - 4.25).abs() < 0.01, "{r_mi60}");
+    }
+
+    #[test]
+    fn v100_single_scheduler_thought_experiment() {
+        // §7.3: "if the V100 only had 1 warp scheduler per SM, its
+        // theoretical GIPS ceiling would be only 122.4"
+        let mut gpu = v100();
+        gpu.schedulers_per_cu = 1;
+        assert!((gpu.peak_gips() - 122.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn babelstream_copy_calibration() {
+        // stream_bw must land on the paper's §6.2 copy rates
+        assert!((mi60().hbm.stream_bw().mbs() - 808_975.476).abs() < 1.0);
+        assert!((mi100().hbm.stream_bw().mbs() - 933_355.781).abs() < 1.0);
+        assert!(v100().hbm.stream_bw().gbs() > 0.99 * 900.0);
+    }
+
+    #[test]
+    fn group_sizes() {
+        assert_eq!(v100().group_size, 32);
+        assert_eq!(mi60().group_size, 64);
+        assert_eq!(mi100().group_size, 64);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("mi100").unwrap().name, "MI100");
+        assert_eq!(by_name("V100").unwrap().name, "V100");
+        assert!(by_name("a100").is_none());
+    }
+
+    #[test]
+    fn amd_has_four_simds_per_cu() {
+        // Eq. 1 multiplies SQ_INSTS_VALU by 4 — the preset must agree
+        assert_eq!(mi60().simds_per_cu, 4);
+        assert_eq!(mi100().simds_per_cu, 4);
+    }
+}

@@ -1,0 +1,263 @@
+//! The parametric GPU model: everything the ceilings, counter engines and
+//! timing simulator need to know about a device.
+
+use crate::util::units::Bandwidth;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vendor {
+    Amd,
+    Nvidia,
+}
+
+impl Vendor {
+    /// The vendor's name for a lockstep execution group.
+    pub fn group_name(self) -> &'static str {
+        match self {
+            Vendor::Amd => "wavefront",
+            Vendor::Nvidia => "warp",
+        }
+    }
+
+    /// The vendor's name for a compute block.
+    pub fn cu_name(self) -> &'static str {
+        match self {
+            Vendor::Amd => "compute unit",
+            Vendor::Nvidia => "streaming multiprocessor",
+        }
+    }
+}
+
+/// One cache level (sectored: we track traffic at 32B-sector granularity,
+/// which is how Ding & Williams count "transactions").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheSpec {
+    /// Total capacity in bytes (per instance).
+    pub capacity: u64,
+    /// Line size in bytes (allocation granularity).
+    pub line: u32,
+    /// Associativity (ways).
+    pub ways: u32,
+    /// Write-allocate on store miss?
+    pub write_allocate: bool,
+    /// Number of physical instances (e.g. one L1 per CU, one shared L2).
+    pub instances: u32,
+}
+
+impl CacheSpec {
+    pub fn sets(&self) -> u64 {
+        self.capacity / (self.line as u64 * self.ways as u64)
+    }
+}
+
+/// Device memory (HBM) model with calibration constants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HbmSpec {
+    /// Vendor datasheet peak bandwidth.
+    pub peak: Bandwidth,
+    /// Fraction of peak attainable on perfectly-streaming access —
+    /// calibrated so the simulated BabelStream *copy* reproduces the
+    /// paper's §6.2 measurements (MI60 808 975.476 MB/s; MI100
+    /// 933 355.781 MB/s; V100 ≈ 99% of 900 GB/s).
+    pub stream_efficiency: f64,
+    /// Fraction of peak attainable on fully-scattered (gather/scatter)
+    /// access — calibrated from the paper's Table 1/2 kernel runtimes
+    /// (the MI60's GCN memory system degrades far more on PIC's strided
+    /// patterns than CDNA's; see DESIGN.md §1).
+    pub scatter_efficiency: f64,
+}
+
+impl HbmSpec {
+    pub fn stream_bw(&self) -> Bandwidth {
+        self.peak.scale(self.stream_efficiency)
+    }
+    pub fn scatter_bw(&self) -> Bandwidth {
+        self.peak.scale(self.scatter_efficiency)
+    }
+    /// Effective bandwidth for a workload whose fraction `scatter` of
+    /// sector traffic comes from non-contiguous access (linear blend of
+    /// the two calibration points).
+    pub fn effective_bw(&self, scatter: f64) -> Bandwidth {
+        let s = scatter.clamp(0.0, 1.0);
+        let eff = self.stream_efficiency * (1.0 - s)
+            + self.scatter_efficiency * s;
+        self.peak.scale(eff)
+    }
+}
+
+/// LDS / shared memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LdsSpec {
+    /// Banks (32 on GCN/CDNA and Volta).
+    pub banks: u32,
+    /// Bytes per CU/SM.
+    pub bytes_per_cu: u64,
+    /// Peak LDS bandwidth per CU in bytes/cycle.
+    pub bytes_per_cycle_per_cu: u32,
+}
+
+/// Full device description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub vendor: Vendor,
+    /// Compute units (AMD) / streaming multiprocessors (NVIDIA).
+    pub compute_units: u32,
+    /// SIMD vector units per CU (4 on GCN/CDNA — Fig. 1 of the paper).
+    pub simds_per_cu: u32,
+    /// Wavefront/warp schedulers per CU/SM (MI60/MI100: 1, V100: 4).
+    pub schedulers_per_cu: u32,
+    /// Theoretical instructions/cycle per scheduler (1, per the paper).
+    pub ipc: f64,
+    /// Boost clock in GHz (paper Table 1: 1.530 / 1.800 / 1.502).
+    pub frequency_ghz: f64,
+    /// Lockstep group width: warp = 32, wavefront = 64.
+    pub group_size: u32,
+    pub l1: CacheSpec,
+    pub l2: CacheSpec,
+    pub hbm: HbmSpec,
+    pub lds: LdsSpec,
+    /// Fixed kernel launch overhead (µs) — calibration constant.
+    pub launch_overhead_us: f64,
+    /// Aggregate atomic read-modify-write throughput at the L2, in
+    /// transactions per cycle — calibration constant. CDNA has native
+    /// fp32 atomic-add; GCN emulates it with a CAS loop that collapses
+    /// under the contention PIC deposition generates (the dominant term
+    /// behind the paper's MI60 runtimes), Volta sits between.
+    pub atomic_ops_per_cycle: f64,
+    /// ISA code-density factor: how many instructions this target's
+    /// compiler emits for the same kernel source, relative to NVIDIA
+    /// SASS (= 1.0). Calibrated from the paper's Tables 1–2, where the
+    /// AMD VALU+SALU counts exceed the V100's all-instruction
+    /// `inst_executed` by ~1.8× for the *same* PIConGPU kernel (GCN/CDNA
+    /// ISA is less dense and the HIP path scalarizes more) — the
+    /// "MI100 processing more instructions than the V100" puzzle the
+    /// paper leaves to future work (§8).
+    pub isa_expansion: f64,
+}
+
+impl GpuSpec {
+    /// Eq. 3 of the paper:
+    /// `GIPS_peak = CU × (schedulers/CU) × IPC × frequency[GHz]`.
+    pub fn peak_gips(&self) -> f64 {
+        self.compute_units as f64
+            * self.schedulers_per_cu as f64
+            * self.ipc
+            * self.frequency_ghz
+    }
+
+    /// Aggregate instruction issue rate, instructions/second.
+    pub fn issue_rate(&self) -> f64 {
+        self.peak_gips() * 1.0e9
+    }
+
+    /// Threads in flight for a full launch of `groups` warps/wavefronts.
+    pub fn threads(&self, groups: u64) -> u64 {
+        groups * self.group_size as u64
+    }
+
+    /// Theoretical L1 bandwidth in bytes/s (all instances aggregated):
+    /// each CU's L1 delivers `line` bytes/cycle.
+    pub fn l1_peak_bw(&self) -> Bandwidth {
+        let per_cycle =
+            self.l1.instances as u64 * self.l1.line as u64;
+        Bandwidth(per_cycle as f64 * self.frequency_ghz * 1.0e9)
+    }
+
+    /// Theoretical L2 bandwidth (heuristic: half the aggregate L1 rate —
+    /// matches the V100's published ~4 TB/s figure).
+    pub fn l2_peak_bw(&self) -> Bandwidth {
+        Bandwidth(self.l1_peak_bw().0 * 0.5)
+    }
+
+    /// Theoretical LDS/shared bandwidth in bytes/s.
+    pub fn lds_peak_bw(&self) -> Bandwidth {
+        Bandwidth(
+            self.compute_units as f64
+                * self.lds.bytes_per_cycle_per_cu as f64
+                * self.frequency_ghz
+                * 1.0e9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> GpuSpec {
+        GpuSpec {
+            name: "toy",
+            vendor: Vendor::Amd,
+            compute_units: 10,
+            simds_per_cu: 4,
+            schedulers_per_cu: 2,
+            ipc: 1.0,
+            frequency_ghz: 1.5,
+            group_size: 64,
+            l1: CacheSpec {
+                capacity: 16 * 1024,
+                line: 64,
+                ways: 4,
+                write_allocate: false,
+                instances: 10,
+            },
+            l2: CacheSpec {
+                capacity: 4 * 1024 * 1024,
+                line: 64,
+                ways: 16,
+                write_allocate: true,
+                instances: 1,
+            },
+            hbm: HbmSpec {
+                peak: Bandwidth::from_gbs(1000.0),
+                stream_efficiency: 0.8,
+                scatter_efficiency: 0.2,
+            },
+            lds: LdsSpec {
+                banks: 32,
+                bytes_per_cu: 64 * 1024,
+                bytes_per_cycle_per_cu: 128,
+            },
+            launch_overhead_us: 2.0,
+            atomic_ops_per_cycle: 8.0,
+            isa_expansion: 1.0,
+        }
+    }
+
+    #[test]
+    fn eq3_peak_gips() {
+        // 10 CU x 2 sched x 1 IPC x 1.5 GHz = 30 GIPS
+        assert!((toy().peak_gips() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_sets() {
+        let c = toy().l1;
+        // 16KB / (64B x 4 ways) = 64 sets
+        assert_eq!(c.sets(), 64);
+    }
+
+    #[test]
+    fn hbm_efficiency_blend() {
+        let hbm = toy().hbm;
+        assert!((hbm.stream_bw().gbs() - 800.0).abs() < 1e-9);
+        assert!((hbm.scatter_bw().gbs() - 200.0).abs() < 1e-9);
+        let half = hbm.effective_bw(0.5);
+        assert!((half.gbs() - 500.0).abs() < 1e-9);
+        // clamped
+        assert!((hbm.effective_bw(7.0).gbs() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vendor_names() {
+        assert_eq!(Vendor::Amd.group_name(), "wavefront");
+        assert_eq!(Vendor::Nvidia.group_name(), "warp");
+        assert_eq!(Vendor::Nvidia.cu_name(), "streaming multiprocessor");
+    }
+
+    #[test]
+    fn lds_bandwidth() {
+        // 10 CU x 128 B/cycle x 1.5e9 = 1.92 TB/s
+        assert!((toy().lds_peak_bw().gbs() - 1920.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,164 @@
+//! Host-native BabelStream: the five kernels on this machine's memory.
+//!
+//! This is real measurement code (not simulation): it times actual array
+//! sweeps, which grounds the harness — the same runner/report path that
+//! serves the simulated GPUs also measures physical hardware.
+
+use super::report::{StreamReport, StreamResult};
+use super::{bytes_per_element, OPS};
+
+pub struct HostStream {
+    pub n: usize,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+}
+
+const START_A: f32 = 0.1;
+const START_B: f32 = 0.2;
+const START_C: f32 = 0.0;
+const SCALAR: f32 = 0.4;
+
+impl HostStream {
+    pub fn new(n: usize) -> HostStream {
+        HostStream {
+            n,
+            a: vec![START_A; n],
+            b: vec![START_B; n],
+            c: vec![START_C; n],
+        }
+    }
+
+    fn run_op(&mut self, op: &str) -> f32 {
+        // each returns a value derived from the output array so the
+        // optimizer cannot elide the sweep
+        match op {
+            "copy" => {
+                for i in 0..self.n {
+                    self.c[i] = self.a[i];
+                }
+                self.c[self.n / 2]
+            }
+            "mul" => {
+                for i in 0..self.n {
+                    self.b[i] = SCALAR * self.c[i];
+                }
+                self.b[self.n / 2]
+            }
+            "add" => {
+                for i in 0..self.n {
+                    self.c[i] = self.a[i] + self.b[i];
+                }
+                self.c[self.n / 2]
+            }
+            "triad" => {
+                for i in 0..self.n {
+                    self.a[i] = self.b[i] + SCALAR * self.c[i];
+                }
+                self.a[self.n / 2]
+            }
+            "dot" => {
+                let mut sum = 0f32;
+                for i in 0..self.n {
+                    sum += self.a[i] * self.b[i];
+                }
+                sum
+            }
+            _ => panic!("unknown stream op {op}"),
+        }
+    }
+
+    /// Run the canonical benchmark: every op `iterations` times,
+    /// best-of for the headline MB/s (BabelStream convention).
+    pub fn run(&mut self, iterations: u32) -> StreamReport {
+        let mut results = Vec::new();
+        for op in OPS {
+            let bytes = bytes_per_element(op) * self.n as u64;
+            let mut times = Vec::with_capacity(iterations as usize);
+            for _ in 0..iterations {
+                let t0 = std::time::Instant::now();
+                let v = self.run_op(op);
+                std::hint::black_box(v);
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = times.iter().cloned().fold(0.0f64, f64::max);
+            let mean = times.iter().sum::<f64>() / times.len() as f64;
+            results.push(StreamResult {
+                op: op.to_string(),
+                mbs: bytes as f64 / min / 1.0e6,
+                mean_s: mean,
+                min_s: min,
+                max_s: max,
+            });
+        }
+        StreamReport {
+            backend: "host".into(),
+            n: self.n as u64,
+            iterations,
+            results,
+        }
+    }
+
+    /// BabelStream's correctness check after a canonical run sequence.
+    pub fn verify(&mut self) -> Result<(), String> {
+        // one clean pass of the update sequence from fresh arrays
+        self.a.fill(START_A);
+        self.b.fill(START_B);
+        self.c.fill(START_C);
+        self.run_op("copy");
+        self.run_op("mul");
+        self.run_op("add");
+        self.run_op("triad");
+        // expected values after one sequence
+        let c1 = START_A; // copy
+        let b1 = SCALAR * c1; // mul
+        let c2 = START_A + b1; // add
+        let a1 = b1 + SCALAR * c2; // triad
+        let check = |name: &str, arr: &[f32], want: f32| {
+            let bad = arr
+                .iter()
+                .filter(|&&x| (x - want).abs() > 1e-6)
+                .count();
+            if bad > 0 {
+                Err(format!("{name}: {bad} elements != {want}"))
+            } else {
+                Ok(())
+            }
+        };
+        check("a", &self.a, a1)?;
+        check("b", &self.b, b1)?;
+        check("c", &self.c, c2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verify_passes_on_fresh_arrays() {
+        let mut s = HostStream::new(4096);
+        s.verify().expect("babelstream sequence check");
+    }
+
+    #[test]
+    fn run_measures_all_ops() {
+        let mut s = HostStream::new(1 << 14);
+        let r = s.run(3);
+        assert_eq!(r.results.len(), 5);
+        for res in &r.results {
+            assert!(res.mbs > 0.0, "{}: {}", res.op, res.mbs);
+            assert!(res.min_s <= res.mean_s && res.mean_s <= res.max_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn host_bandwidth_is_plausible() {
+        // any machine this runs on moves > 100 MB/s and < 10 TB/s
+        let mut s = HostStream::new(1 << 16);
+        let r = s.run(3);
+        let copy = r.copy_mbs();
+        assert!(copy > 100.0 && copy < 1e7, "{copy} MB/s");
+    }
+}

@@ -1,0 +1,51 @@
+//! BabelStream (Deakin et al. 2016) — the paper's bandwidth yardstick.
+//!
+//! §6.2 uses the HIP BabelStream *copy* rate as the attainable-bandwidth
+//! ceiling of the AMD IRMs. Three backends exercise the same five
+//! kernels (copy, mul, add, triad, dot):
+//!
+//! * [`host`]   — native Rust on this machine's DRAM (proves the harness
+//!   measures real hardware);
+//! * [`device`] — the simulated GPUs (reproduces the paper's numbers);
+//! * [`pjrt`]   — the AOT Pallas stream kernels through the PJRT runtime
+//!   (proves the L1/L2 artifacts execute from the coordinator).
+
+pub mod device;
+pub mod host;
+pub mod pjrt;
+pub mod report;
+
+pub use device::DeviceStream;
+pub use host::HostStream;
+pub use report::{StreamReport, StreamResult};
+
+/// The five BabelStream kernels, in the canonical output order.
+pub const OPS: [&str; 5] = ["copy", "mul", "add", "triad", "dot"];
+
+/// Bytes moved per element for each op (f32): copy/mul 2, add/triad 3,
+/// dot 2 — BabelStream's own accounting.
+pub fn bytes_per_element(op: &str) -> u64 {
+    match op {
+        "copy" | "mul" | "dot" => 2 * 4,
+        "add" | "triad" => 3 * 4,
+        _ => panic!("unknown stream op {op}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_accounting_matches_babelstream() {
+        assert_eq!(bytes_per_element("copy"), 8);
+        assert_eq!(bytes_per_element("triad"), 12);
+        assert_eq!(bytes_per_element("dot"), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_op_panics() {
+        bytes_per_element("nope");
+    }
+}

@@ -1,0 +1,52 @@
+//! PJRT BabelStream backend: the AOT Pallas stream kernels executed
+//! through the `xla` crate.
+//!
+//! This proves the Layer-1 kernels are real, loadable artifacts; the
+//! measured rate reflects this machine's CPU via PJRT, not a GPU.
+
+use super::report::{StreamReport, StreamResult};
+use super::{bytes_per_element, OPS};
+use crate::runtime::Runtime;
+
+/// Run the five AOT stream kernels. `n` must match the lowered shape
+/// (see `python/compile/cases.py::STREAM_N`).
+pub fn run_pjrt(
+    rt: &mut Runtime,
+    iterations: u32,
+) -> anyhow::Result<StreamReport> {
+    let n = rt
+        .artifacts()
+        .entry("stream_copy")?
+        .args
+        .first()
+        .map(|a| a.elements() as u64)
+        .unwrap_or(0);
+    let a: Vec<f32> = (0..n).map(|i| 0.1 + (i % 7) as f32).collect();
+    let b: Vec<f32> = (0..n).map(|i| 0.2 + (i % 5) as f32).collect();
+
+    let mut results = Vec::new();
+    for op in OPS {
+        let name = format!("stream_{op}");
+        let args: Vec<&[f32]> = match op {
+            "copy" | "mul" => vec![&a],
+            _ => vec![&a, &b],
+        };
+        let (_, dt) = rt.time_call_f32(&name, &args, iterations)?;
+        let bytes = bytes_per_element(op) * n;
+        results.push(StreamResult {
+            op: op.to_string(),
+            mbs: bytes as f64 / dt / 1.0e6,
+            mean_s: dt,
+            min_s: dt,
+            max_s: dt,
+        });
+    }
+    Ok(StreamReport {
+        backend: format!("pjrt:{}", rt.platform()),
+        n,
+        iterations,
+        results,
+    })
+}
+
+// Integration coverage lives in rust/tests/pipeline.rs (needs artifacts).

@@ -1,0 +1,94 @@
+//! BabelStream-style result reporting.
+
+use crate::util::table::Table;
+
+/// One kernel's measurement.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    pub op: String,
+    /// Best-iteration bandwidth, MB/s (decimal — BabelStream convention).
+    pub mbs: f64,
+    /// Mean per-iteration time, seconds.
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// A full run over the five kernels.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub backend: String,
+    pub n: u64,
+    pub iterations: u32,
+    pub results: Vec<StreamResult>,
+}
+
+impl StreamReport {
+    pub fn result(&self, op: &str) -> Option<&StreamResult> {
+        self.results.iter().find(|r| r.op == op)
+    }
+
+    /// The copy rate — what the paper uses as the IRM ceiling (§6.2).
+    pub fn copy_mbs(&self) -> f64 {
+        self.result("copy").map(|r| r.mbs).unwrap_or(0.0)
+    }
+
+    /// BabelStream-style output block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "BabelStream ({} backend)\nArray elements: {} (f32), {} \
+             iterations\n",
+            self.backend, self.n, self.iterations
+        ));
+        let mut t = Table::new(vec![
+            "Function", "MBytes/sec", "Min (sec)", "Max (sec)", "Average",
+        ]);
+        for r in &self.results {
+            t.row(vec![
+                r.op.clone(),
+                format!("{:.3}", r.mbs),
+                format!("{:.5}", r.min_s),
+                format!("{:.5}", r.max_s),
+                format!("{:.5}", r.mean_s),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> StreamReport {
+        StreamReport {
+            backend: "sim:MI60".into(),
+            n: 1 << 25,
+            iterations: 100,
+            results: vec![StreamResult {
+                op: "copy".into(),
+                mbs: 808_975.476,
+                mean_s: 3.4e-4,
+                min_s: 3.3e-4,
+                max_s: 3.6e-4,
+            }],
+        }
+    }
+
+    #[test]
+    fn copy_rate_lookup() {
+        let r = report();
+        assert!((r.copy_mbs() - 808_975.476).abs() < 1e-6);
+        assert!(r.result("triad").is_none());
+    }
+
+    #[test]
+    fn render_contains_babelstream_columns() {
+        let s = report().render();
+        assert!(s.contains("MBytes/sec"));
+        assert!(s.contains("808975.476"));
+        assert!(s.contains("sim:MI60"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal argument parser: `--key value`, `--flag`, and positionals.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Options that take a value (everything else with `--` is a flag).
+const VALUED: [&str; 11] = [
+    "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
+    "steps", "dir",
+];
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if VALUED.contains(&key) {
+                    let v = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("--{key} needs a value")
+                    })?;
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{key}: '{v}' is not an integer")
+            }),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("reproduce table1 fig4");
+        assert_eq!(a.command, "reproduce");
+        assert_eq!(a.positional, vec!["table1", "fig4"]);
+    }
+
+    #[test]
+    fn valued_options() {
+        let a = parse("profile --gpu mi100 --case lwfa --steps 8");
+        assert_eq!(a.get("gpu"), Some("mi100"));
+        assert_eq!(a.get_u64("steps", 0).unwrap(), 8);
+        assert_eq!(a.get_or("tool", "rocprof"), "rocprof");
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("reproduce --all --pjrt");
+        assert!(a.flag("all"));
+        assert!(a.flag("pjrt"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(
+            vec!["x".into(), "--gpu".into()],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("--gpu needs a value"));
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = parse("x --steps abc");
+        assert!(a.get_u64("steps", 1).is_err());
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = Args::parse(vec![]).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

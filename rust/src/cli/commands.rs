@@ -1,0 +1,291 @@
+//! Subcommand implementations.
+
+use std::path::{Path, PathBuf};
+
+use super::args::Args;
+use crate::arch::presets;
+use crate::arch::Vendor;
+use crate::babelstream::{self, DeviceStream, HostStream};
+use crate::coordinator::profile_run::Context;
+use crate::coordinator::{run_experiments, EXPERIMENT_IDS};
+use crate::gpumembench::{self, InstThroughputBench, ShmemBench};
+use crate::pic::{CaseConfig, PicSim};
+use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
+use crate::roofline::{plot_ascii, plot_svg, InstructionRoofline};
+use crate::runtime::Runtime;
+
+fn gpu_arg(args: &Args) -> anyhow::Result<crate::arch::GpuSpec> {
+    let name = args.get_or("gpu", "mi100");
+    presets::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown GPU '{name}' (v100|mi60|mi100)"))
+}
+
+fn case_arg(args: &Args) -> anyhow::Result<CaseConfig> {
+    let name = args.get_or("case", "lwfa");
+    CaseConfig::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown case '{name}' (lwfa|tweac)"))
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("dir", "artifacts"))
+}
+
+pub fn reproduce(args: &Args) -> anyhow::Result<()> {
+    let ids: Vec<String> = if args.positional.is_empty()
+        || args.flag("all")
+    {
+        EXPERIMENT_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    let out = PathBuf::from(args.get_or("out", "out"));
+    run_experiments(&ids, &out)?;
+    Ok(())
+}
+
+fn profiled_session(
+    args: &Args,
+    spec: &crate::arch::GpuSpec,
+) -> anyhow::Result<ProfileSession> {
+    let mut cfg = case_arg(args)?;
+    if let Some(steps) = args.get("steps") {
+        cfg.steps = steps.parse()?;
+    }
+    let run = crate::coordinator::CaseRun::execute(spec.clone(), cfg);
+    Ok(run.session)
+}
+
+pub fn profile(args: &Args) -> anyhow::Result<()> {
+    let spec = gpu_arg(args)?;
+    let session = profiled_session(args, &spec)?;
+    let tool = args.get_or(
+        "tool",
+        if spec.vendor == Vendor::Amd {
+            "rocprof"
+        } else {
+            "nvprof"
+        },
+    );
+    match tool {
+        "rocprof" => {
+            anyhow::ensure!(
+                spec.vendor == Vendor::Amd,
+                "rocprof targets AMD GPUs only (the paper's point!)"
+            );
+            println!("# {}", RocprofTool::csv_rows(&session).len());
+            if let Some(csv) = args.get("csv") {
+                RocprofTool::write_csv(&session, Path::new(csv))?;
+                println!("wrote {csv}");
+            }
+            for r in RocprofTool::reports(&session) {
+                println!(
+                    "{:<16} inv={} dur(mean)={:.3e}s FETCH={:.0}KB \
+                     WRITE={:.0}KB VALU={} SALU={}",
+                    r.kernel,
+                    r.invocations,
+                    r.mean_duration_s,
+                    r.total.fetch_size_kb,
+                    r.total.write_size_kb,
+                    r.total.sq_insts_valu,
+                    r.total.sq_insts_salu,
+                );
+            }
+        }
+        "nvprof" => {
+            anyhow::ensure!(
+                spec.vendor == Vendor::Nvidia,
+                "nvprof targets NVIDIA GPUs only"
+            );
+            let tool = NvprofTool::default();
+            if let Some(csv) = args.get("csv") {
+                tool.write_csv(&session, Path::new(csv))?;
+                println!("wrote {csv}");
+            }
+            for r in tool.reports(&session) {
+                println!(
+                    "{:<16} inv={} dur(mean)={:.3e}s inst_executed={} \
+                     gld={} gst={} l2r={} l2w={} dramr={} dramw={}",
+                    r.kernel,
+                    r.invocations,
+                    r.mean_duration_s,
+                    r.total.inst_executed,
+                    r.total.gld_transactions,
+                    r.total.gst_transactions,
+                    r.total.l2_read_transactions,
+                    r.total.l2_write_transactions,
+                    r.total.dram_read_transactions,
+                    r.total.dram_write_transactions,
+                );
+            }
+        }
+        other => anyhow::bail!("unknown tool '{other}'"),
+    }
+    Ok(())
+}
+
+pub fn roofline(args: &Args) -> anyhow::Result<()> {
+    let spec = gpu_arg(args)?;
+    let session = profiled_session(args, &spec)?;
+    let kernel = args.get_or("kernel", "ComputeCurrent");
+    let irm = match spec.vendor {
+        Vendor::Amd => {
+            let report = RocprofTool::reports(&session)
+                .into_iter()
+                .find(|r| r.kernel == kernel)
+                .ok_or_else(|| anyhow::anyhow!("no kernel {kernel}"))?;
+            let copy = DeviceStream::new(spec.clone(), 1 << 25)
+                .run_op("copy", 1);
+            InstructionRoofline::from_rocprof(
+                &spec,
+                &report,
+                copy.mbs / 1000.0,
+            )
+        }
+        Vendor::Nvidia => {
+            let report = NvprofTool::default()
+                .reports(&session)
+                .into_iter()
+                .find(|r| r.kernel == kernel)
+                .ok_or_else(|| anyhow::anyhow!("no kernel {kernel}"))?;
+            InstructionRoofline::from_nvprof_txn(&spec, &report)
+        }
+    };
+    println!("{}", plot_ascii::render_ascii(&irm));
+    if let Some(svg) = args.get("svg") {
+        std::fs::write(svg, plot_svg::render_svg(&irm))?;
+        println!("wrote {svg}");
+    }
+    Ok(())
+}
+
+pub fn babelstream(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_u64("n", 1 << 25)?;
+    let iters = args.get_u64("iters", 100)? as u32;
+    match args.get_or("backend", "sim") {
+        "host" => {
+            let mut s = HostStream::new(n as usize);
+            s.verify()
+                .map_err(|e| anyhow::anyhow!("verification: {e}"))?;
+            println!("{}", s.run(iters).render());
+        }
+        "sim" => {
+            let spec = gpu_arg(args)?;
+            println!(
+                "{}",
+                DeviceStream::new(spec, n).run(iters).render()
+            );
+        }
+        "pjrt" => {
+            let mut rt = Runtime::new(&artifact_dir(args))?;
+            println!(
+                "{}",
+                babelstream::pjrt::run_pjrt(&mut rt, iters.min(20))?
+                    .render()
+            );
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    }
+    Ok(())
+}
+
+pub fn membench(args: &Args) -> anyhow::Result<()> {
+    let spec = gpu_arg(args)?;
+    let mut rows = ShmemBench::new(spec.clone()).rows();
+    rows.extend(InstThroughputBench::new(spec.clone()).rows());
+    println!("{}", gpumembench::render(spec.name, &rows));
+    Ok(())
+}
+
+pub fn pic(args: &Args) -> anyhow::Result<()> {
+    let cfg = case_arg(args)?;
+    let steps = args.get_u64("steps", cfg.steps as u64)? as u32;
+    if args.flag("pjrt") {
+        let mut rt = Runtime::new(&artifact_dir(args))?;
+        let sim = PicSim::new(&cfg, crate::coordinator::profile_run::RUN_SEED);
+        let st = sim.state;
+        let entry = format!("pic_step_{}", cfg.name);
+        let (mut e, mut b, mut pos, mut mom) =
+            (st.e.clone(), st.b.clone(), st.pos.clone(), st.mom.clone());
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let outs = rt.call_f32(&entry, &[&e, &b, &pos, &mom])?;
+            let mut it = outs.into_iter();
+            e = it.next().unwrap();
+            b = it.next().unwrap();
+            pos = it.next().unwrap();
+            mom = it.next().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let ke: f64 = mom
+            .chunks_exact(3)
+            .map(|u| {
+                ((1.0 + (u[0] * u[0] + u[1] * u[1] + u[2] * u[2]) as f64)
+                    .sqrt())
+                    - 1.0
+            })
+            .sum();
+        println!(
+            "PJRT {}: {} steps in {:.3}s ({:.2} steps/s), kinetic \
+             energy {:.4}",
+            cfg.name,
+            steps,
+            dt,
+            steps as f64 / dt,
+            ke
+        );
+    } else {
+        let mut sim = PicSim::new(&cfg, crate::coordinator::profile_run::RUN_SEED);
+        let t0 = std::time::Instant::now();
+        sim.run(steps);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "native {}: {} steps in {:.3}s ({:.2} steps/s), field \
+             energy {:.4}, kinetic energy {:.4}",
+            cfg.name,
+            steps,
+            dt,
+            steps as f64 / dt,
+            sim.state.field_energy(),
+            sim.state.kinetic_energy()
+        );
+    }
+    Ok(())
+}
+
+pub fn artifacts(args: &Args) -> anyhow::Result<()> {
+    let rt = Runtime::new(&artifact_dir(args))?;
+    println!("platform: {}", rt.platform());
+    let arts = rt.artifacts();
+    for name in arts.names() {
+        let e = &arts.entries[&name];
+        let args_s: Vec<String> = e
+            .args
+            .iter()
+            .map(|a| {
+                format!(
+                    "{}[{}]",
+                    a.dtype,
+                    a.dims
+                        .iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )
+            })
+            .collect();
+        println!(
+            "{:<24} outs={} args: {}",
+            name,
+            e.outs,
+            args_s.join(" ")
+        );
+    }
+    Ok(())
+}
+
+// The Context import is used by reproduce via run_experiments; keep a
+// typed reference so refactors fail loudly here.
+#[allow(dead_code)]
+fn _type_anchor(ctx: &Context) {
+    let _ = ctx;
+}

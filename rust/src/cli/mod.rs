@@ -1,0 +1,63 @@
+//! Hand-rolled CLI (no `clap` offline). Subcommands:
+//!
+//! ```text
+//! rocline reproduce [--out DIR] [--pjrt] [IDS...|--all]
+//! rocline profile --gpu G --case C [--tool rocprof|nvprof] [--csv F]
+//! rocline roofline --gpu G --case C [--svg F]
+//! rocline babelstream [--backend host|sim|pjrt] [--gpu G] [--n N]
+//! rocline membench [--gpu G]
+//! rocline pic --case C [--steps N] [--pjrt]
+//! rocline artifacts [--dir D]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "reproduce" => commands::reproduce(&args),
+        "profile" => commands::profile(&args),
+        "roofline" => commands::roofline(&args),
+        "babelstream" => commands::babelstream(&args),
+        "membench" => commands::membench(&args),
+        "pic" => commands::pic(&args),
+        "artifacts" => commands::artifacts(&args),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown command '{other}' (see `rocline help`)"
+        ),
+    }
+}
+
+pub const HELP: &str = "\
+rocline — instruction roofline modeling toolkit for AMD GPUs
+(reproduction of Leinhauser et al. 2021; see DESIGN.md)
+
+USAGE:
+  rocline <command> [options]
+
+COMMANDS:
+  reproduce    regenerate paper tables/figures (peaks stream membench
+               table1 table2 fig3 fig4 fig5 fig6 fig7; default --all)
+               options: --out DIR (default out/), ids...
+  profile      profile a PIC case on a simulated GPU
+               options: --gpu v100|mi60|mi100  --case lwfa|tweac
+                        --tool rocprof|nvprof  --csv FILE  --steps N
+  roofline     build + print the IRM for a kernel
+               options: --gpu G --case C [--kernel K] [--svg FILE]
+  babelstream  run BabelStream
+               options: --backend host|sim|pjrt [--gpu G] [--n N]
+                        [--iters N]
+  membench     gpumembench analog on a simulated GPU [--gpu G]
+  pic          run the PIC simulation (native, or --pjrt for the AOT
+               path) [--case C] [--steps N]
+  artifacts    list the AOT artifacts [--dir D]
+  help         this text
+";

@@ -1,0 +1,21 @@
+//! The experiment harness: everything needed to regenerate the paper's
+//! tables and figures (DESIGN.md §4 experiment index).
+//!
+//! * [`profile_run`] — simulate a science case on one GPU model while
+//!   profiling every kernel dispatch (the shared substrate of Tables 1–2
+//!   and Figs 3–7);
+//! * [`paper`] — the paper's published values and the *shape criteria*
+//!   the reproduction must satisfy;
+//! * [`experiments`] — one function per table/figure;
+//! * [`runner`] — executes experiments (thread-parallel case runs) and
+//!   writes `out/`.
+
+pub mod experiments;
+pub mod paper;
+pub mod profile_run;
+pub mod report;
+pub mod runner;
+
+pub use profile_run::{CaseRun, Context};
+pub use report::Report;
+pub use runner::{run_experiments, EXPERIMENT_IDS};

@@ -1,0 +1,158 @@
+//! The shared profiled run: one science case, one GPU model, the full
+//! PIC main loop with every kernel dispatch traced and profiled.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::arch::presets;
+use crate::arch::GpuSpec;
+use crate::pic::kernels::{
+    ComputeCurrentTrace, CurrentResetTrace, FieldSolverTrace,
+    MoveAndMarkTrace, ShiftParticlesTrace,
+};
+use crate::pic::{CaseConfig, PicSim};
+use crate::profiler::ProfileSession;
+
+/// The default seed for profiled runs (reproducibility).
+pub const RUN_SEED: u64 = 0x9_1C0_96B5;
+
+/// One completed profiled run.
+pub struct CaseRun {
+    pub spec: GpuSpec,
+    pub cfg: CaseConfig,
+    pub session: ProfileSession,
+    /// Final simulation state diagnostics.
+    pub final_field_energy: f64,
+    pub final_kinetic_energy: f64,
+}
+
+impl CaseRun {
+    /// Simulate `cfg.steps` steps of the case on `spec`, profiling the
+    /// five kernels each step. Traces read the *live* state, so the
+    /// memory behaviour follows the plasma dynamics.
+    pub fn execute(spec: GpuSpec, cfg: CaseConfig) -> CaseRun {
+        let mut sim = PicSim::new(&cfg, RUN_SEED);
+        let mut session = ProfileSession::new(spec.clone());
+        for _ in 0..cfg.steps {
+            {
+                let st = &sim.state;
+                let reset = CurrentResetTrace {
+                    state: st,
+                    spec: &spec,
+                };
+                let push = MoveAndMarkTrace {
+                    state: st,
+                    spec: &spec,
+                };
+                let shift = ShiftParticlesTrace {
+                    state: st,
+                    spec: &spec,
+                };
+                let deposit = ComputeCurrentTrace {
+                    state: st,
+                    spec: &spec,
+                };
+                let solve = FieldSolverTrace {
+                    state: st,
+                    spec: &spec,
+                };
+                session.profile(&reset);
+                session.profile(&push);
+                session.profile(&shift);
+                session.profile(&deposit);
+                session.profile(&solve);
+            }
+            sim.step();
+        }
+        CaseRun {
+            spec,
+            cfg,
+            final_field_energy: sim.state.field_energy(),
+            final_kinetic_energy: sim.state.kinetic_energy(),
+            session,
+        }
+    }
+}
+
+/// Cache of profiled runs shared by all experiments (Tables 1–2 and
+/// Figs 3–7 reuse the same six runs). Thread-safe; runs execute lazily.
+#[derive(Default)]
+pub struct Context {
+    runs: Mutex<HashMap<(String, String), Arc<CaseRun>>>,
+}
+
+impl Context {
+    pub fn new() -> Context {
+        Context::default()
+    }
+
+    /// Get (or execute) the run for `(gpu, case)`.
+    pub fn run(&self, gpu: &str, case: &str) -> Arc<CaseRun> {
+        let key = (gpu.to_string(), case.to_string());
+        if let Some(r) = self.runs.lock().unwrap().get(&key) {
+            return r.clone();
+        }
+        let spec = presets::by_name(gpu)
+            .unwrap_or_else(|| panic!("unknown GPU {gpu}"));
+        let cfg = CaseConfig::by_name(case)
+            .unwrap_or_else(|| panic!("unknown case {case}"));
+        let run = Arc::new(CaseRun::execute(spec, cfg));
+        self.runs
+            .lock()
+            .unwrap()
+            .insert(key, run.clone());
+        run
+    }
+
+    /// Pre-execute several runs in parallel threads.
+    pub fn prefetch(&self, pairs: &[(&str, &str)]) {
+        std::thread::scope(|scope| {
+            for (gpu, case) in pairs {
+                scope.spawn(|| {
+                    self.run(gpu, case);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> CaseConfig {
+        let mut cfg = CaseConfig::lwfa();
+        cfg.steps = 2;
+        cfg
+    }
+
+    #[test]
+    fn run_profiles_every_kernel_every_step() {
+        let run = CaseRun::execute(presets::mi100(), tiny_cfg());
+        assert_eq!(run.session.dispatches.len(), 2 * 5);
+        let aggs = run.session.aggregates();
+        assert_eq!(aggs.len(), 5);
+        for a in &aggs {
+            assert_eq!(a.invocations, 2, "{}", a.kernel);
+        }
+    }
+
+    #[test]
+    fn simulation_advanced_during_profiling() {
+        let run = CaseRun::execute(presets::mi100(), tiny_cfg());
+        assert!(run.final_kinetic_energy > 0.0);
+        assert!(run.final_field_energy.is_finite());
+    }
+
+    #[test]
+    #[ignore = "full profiled run; covered by the release-mode pipeline \
+integration test"]
+    fn context_caches_runs() {
+        let ctx = Context::new();
+        // uses the real configs — keep to the small case via direct
+        // execute instead; here just exercise the cache keying
+        let a = ctx.run("mi100", "lwfa");
+        let b = ctx.run("mi100", "lwfa");
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

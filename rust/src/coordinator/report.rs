@@ -1,0 +1,123 @@
+//! Experiment report: tables, plots, shape checks, and file output.
+
+use std::path::Path;
+
+use super::paper::ShapeCheck;
+use crate::util::table::Table;
+
+/// The output of one experiment (one paper table or figure).
+#[derive(Debug)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    /// Named tables (rendered as text + CSV).
+    pub tables: Vec<(String, Table)>,
+    /// Named SVG plots.
+    pub svgs: Vec<(String, String)>,
+    /// Free-form text (ASCII plots, notes).
+    pub notes: Vec<String>,
+    /// Shape criteria vs the paper.
+    pub checks: Vec<ShapeCheck>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            tables: Vec::new(),
+            svgs: Vec::new(),
+            notes: Vec::new(),
+            checks: Vec::new(),
+        }
+    }
+
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+
+    /// Human-readable rendering (what `rocline reproduce` prints).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("## {} — {}\n\n", self.id, self.title));
+        for (name, t) in &self.tables {
+            out.push_str(&format!("### {name}\n{}\n", t.render()));
+        }
+        for note in &self.notes {
+            out.push_str(note);
+            out.push('\n');
+        }
+        if !self.checks.is_empty() {
+            out.push_str("shape checks vs paper:\n");
+            for c in &self.checks {
+                out.push_str(&c.render());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Write tables (CSV), SVGs and the text report into `dir`.
+    pub fn write(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (name, t) in &self.tables {
+            std::fs::write(
+                dir.join(format!("{}_{}.csv", self.id, name)),
+                t.render_csv(),
+            )?;
+        }
+        for (name, svg) in &self.svgs {
+            std::fs::write(
+                dir.join(format!("{}_{}.svg", self.id, name)),
+                svg,
+            )?;
+        }
+        std::fs::write(
+            dir.join(format!("{}.txt", self.id)),
+            self.render(),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new("table1", "LWFA ComputeCurrent");
+        let mut t = Table::new(vec!["GPU", "x"]);
+        t.row(vec!["V100", "1"]);
+        r.tables.push(("main".into(), t));
+        r.svgs.push(("irm".into(), "<svg></svg>".into()));
+        r.checks.push(ShapeCheck::new("a", true, "ok".into()));
+        r
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let s = sample().render();
+        assert!(s.contains("table1"));
+        assert!(s.contains("V100"));
+        assert!(s.contains("[PASS] a"));
+    }
+
+    #[test]
+    fn passed_tracks_checks() {
+        let mut r = sample();
+        assert!(r.passed());
+        r.checks
+            .push(ShapeCheck::new("b", false, "nope".into()));
+        assert!(!r.passed());
+    }
+
+    #[test]
+    fn write_creates_files() {
+        let dir = std::env::temp_dir().join("rocline_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        sample().write(&dir).unwrap();
+        assert!(dir.join("table1_main.csv").exists());
+        assert!(dir.join("table1_irm.svg").exists());
+        assert!(dir.join("table1.txt").exists());
+    }
+}

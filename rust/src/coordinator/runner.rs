@@ -1,0 +1,140 @@
+//! Experiment runner: executes selected experiments, writes `out/`.
+
+use std::path::Path;
+
+use super::experiments;
+use super::profile_run::Context;
+use super::report::Report;
+
+/// Every experiment id, in DESIGN.md §4 order.
+pub const EXPERIMENT_IDS: [&str; 10] = [
+    "peaks", "stream", "membench", "table1", "table2", "fig3", "fig4",
+    "fig5", "fig6", "fig7",
+];
+
+/// Which profiled runs an experiment needs (for parallel prefetch).
+fn runs_needed(id: &str) -> Vec<(&'static str, &'static str)> {
+    match id {
+        "table1" => vec![("v100", "lwfa"), ("mi60", "lwfa"), ("mi100", "lwfa")],
+        "table2" => {
+            vec![("v100", "tweac"), ("mi60", "tweac"), ("mi100", "tweac")]
+        }
+        "fig3" => vec![("v100", "tweac")],
+        "fig4" | "fig5" => vec![("v100", "lwfa")],
+        "fig6" => vec![("mi60", "lwfa"), ("mi100", "lwfa")],
+        "fig7" => vec![("mi60", "tweac"), ("mi100", "tweac")],
+        _ => vec![],
+    }
+}
+
+/// Execute one experiment by id.
+pub fn run_one(ctx: &Context, id: &str) -> anyhow::Result<Report> {
+    let rep = match id {
+        "peaks" => experiments::peaks(ctx),
+        "stream" => experiments::stream(ctx),
+        "membench" => experiments::membench(ctx),
+        "table1" => experiments::table1(ctx),
+        "table2" => experiments::table2(ctx),
+        "fig3" => experiments::fig3(ctx),
+        "fig4" => experiments::fig4(ctx),
+        "fig5" => experiments::fig5(ctx),
+        "fig6" => experiments::fig6(ctx),
+        "fig7" => experiments::fig7(ctx),
+        _ => anyhow::bail!(
+            "unknown experiment '{id}' (have: {})",
+            EXPERIMENT_IDS.join(", ")
+        ),
+    };
+    Ok(rep)
+}
+
+/// Run experiments (all of `ids`), prefetching the profiled runs in
+/// parallel, writing each report into `outdir`, printing as we go.
+pub fn run_experiments(
+    ids: &[String],
+    outdir: &Path,
+) -> anyhow::Result<Vec<Report>> {
+    let ctx = Context::new();
+    // prefetch every needed (gpu, case) run once, in parallel
+    let mut needed: Vec<(&str, &str)> = Vec::new();
+    for id in ids {
+        for pair in runs_needed(id) {
+            if !needed.contains(&pair) {
+                needed.push(pair);
+            }
+        }
+    }
+    if !needed.is_empty() {
+        eprintln!(
+            "prefetching {} profiled run(s): {}",
+            needed.len(),
+            needed
+                .iter()
+                .map(|(g, c)| format!("{g}/{c}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        ctx.prefetch(&needed);
+    }
+
+    let mut reports = Vec::new();
+    for id in ids {
+        let rep = run_one(&ctx, id)?;
+        println!("{}", rep.render());
+        rep.write(outdir)?;
+        reports.push(rep);
+    }
+
+    // summary
+    let total: usize = reports.iter().map(|r| r.checks.len()).sum();
+    let passed: usize = reports
+        .iter()
+        .map(|r| r.checks.iter().filter(|c| c.passed).count())
+        .sum();
+    println!(
+        "== {}/{} shape checks passed across {} experiment(s); \
+         reports in {} ==",
+        passed,
+        total,
+        reports.len(),
+        outdir.display()
+    );
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_cover_every_table_and_figure() {
+        for want in [
+            "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig7",
+        ] {
+            assert!(EXPERIMENT_IDS.contains(&want), "{want}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_clean_error() {
+        let ctx = Context::new();
+        let err = run_one(&ctx, "nope").unwrap_err().to_string();
+        assert!(err.contains("unknown experiment"), "{err}");
+    }
+
+    #[test]
+    fn cheap_experiments_run() {
+        let ctx = Context::new();
+        let rep = run_one(&ctx, "peaks").unwrap();
+        assert!(rep.passed(), "{}", rep.render());
+        let rep = run_one(&ctx, "membench").unwrap();
+        assert!(rep.passed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn runs_needed_unique_pairs() {
+        let pairs = runs_needed("table1");
+        assert_eq!(pairs.len(), 3);
+        assert!(runs_needed("peaks").is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! Hardware-counter engines with vendor semantics.
+//!
+//! Both engines consume the *same* trace aggregates ([`TraceStats`] +
+//! [`MemTraffic`]) and expose what each vendor's profiler would have
+//! reported — including the semantic differences the paper's §7.3
+//! analyzes (compute-only VALU/SALU vs all-instruction `inst_executed`;
+//! byte counters vs transaction counters).
+
+pub mod nvprof;
+pub mod rocprof;
+
+pub use nvprof::NvprofCounters;
+pub use rocprof::RocprofCounters;
+
+use crate::memsim::MemTraffic;
+use crate::trace::TraceStats;
+
+/// One profiled kernel dispatch: the raw material for either engine.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchRecord {
+    pub kernel: String,
+    pub stats: TraceStats,
+    pub traffic: MemTraffic,
+    /// Simulated wall time of this dispatch (seconds).
+    pub duration_s: f64,
+}

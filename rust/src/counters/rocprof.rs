@@ -1,0 +1,143 @@
+//! rocProf counter semantics (§4.1 of the paper).
+//!
+//! The four counters the paper's method needs, with AMD's units:
+//!
+//! * `FETCH_SIZE`  — total KB fetched from GPU memory (HBM);
+//! * `WRITE_SIZE`  — total KB written to GPU memory;
+//! * `SQ_INSTS_VALU` — vector-ALU instructions issued **per SIMD** (the
+//!   paper multiplies by 4 because GCN/CDNA CUs have 4 SIMDs — Fig. 1);
+//! * `SQ_INSTS_SALU` — scalar-ALU instructions issued (one scalar unit
+//!   per CU, no scaling).
+//!
+//! Only compute instructions are visible — memory, branch and sync
+//! instructions are *not* counted, which is half of the paper's
+//! cross-vendor comparison problem.
+
+use super::DispatchRecord;
+use crate::arch::GpuSpec;
+use crate::util::units::ROCPROF_KB;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RocprofCounters {
+    /// KB fetched from device memory.
+    pub fetch_size_kb: f64,
+    /// KB written to device memory.
+    pub write_size_kb: f64,
+    /// VALU instructions per SIMD (total / simds_per_cu).
+    pub sq_insts_valu: u64,
+    /// SALU instructions (total).
+    pub sq_insts_salu: u64,
+    /// Kernel duration in nanoseconds (rocprof's DurationNs column).
+    pub duration_ns: f64,
+}
+
+impl RocprofCounters {
+    /// Derive the counters for one dispatch on an AMD GPU.
+    pub fn from_dispatch(spec: &GpuSpec, d: &DispatchRecord) -> Self {
+        let valu_total = d.stats.inst.valu();
+        RocprofCounters {
+            fetch_size_kb: d.traffic.hbm_read_bytes as f64 / ROCPROF_KB,
+            write_size_kb: d.traffic.hbm_write_bytes as f64 / ROCPROF_KB,
+            sq_insts_valu: valu_total / spec.simds_per_cu as u64,
+            sq_insts_salu: d.stats.inst.salu(),
+            duration_ns: d.duration_s * 1e9,
+        }
+    }
+
+    /// Sum counters over dispatches (how the paper's totals were taken);
+    /// duration accumulates too — callers wanting a per-dispatch mean
+    /// divide afterwards.
+    pub fn accumulate(&mut self, other: &RocprofCounters) {
+        self.fetch_size_kb += other.fetch_size_kb;
+        self.write_size_kb += other.write_size_kb;
+        self.sq_insts_valu += other.sq_insts_valu;
+        self.sq_insts_salu += other.sq_insts_salu;
+        self.duration_ns += other.duration_ns;
+    }
+
+    /// Eq. 1: `instructions = SQ_INSTS_VALU * 4 + SQ_INSTS_SALU`.
+    pub fn instructions(&self, spec: &GpuSpec) -> u64 {
+        self.sq_insts_valu * spec.simds_per_cu as u64 + self.sq_insts_salu
+    }
+
+    /// Bytes read (undoes the KB scaling).
+    pub fn bytes_read(&self) -> f64 {
+        self.fetch_size_kb * ROCPROF_KB
+    }
+
+    pub fn bytes_written(&self) -> f64 {
+        self.write_size_kb * ROCPROF_KB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::mi100;
+    use crate::arch::InstClass;
+    use crate::trace::event::{GroupCtx, MemAccess, MemKind};
+    use crate::trace::sink::EventSink;
+    use crate::trace::TraceStats;
+
+    fn dispatch() -> DispatchRecord {
+        let mut stats = TraceStats::default();
+        let ctx = GroupCtx { group_id: 0 };
+        stats.on_inst(&ctx, InstClass::ValuArith, 100);
+        stats.on_inst(&ctx, InstClass::ValuSpecial, 20);
+        stats.on_inst(&ctx, InstClass::Salu, 30);
+        stats.on_inst(&ctx, InstClass::Branch, 50); // must be invisible
+        stats.on_mem(&ctx, &MemAccess::contiguous(MemKind::Read, 0, 64, 4));
+        let mut d = DispatchRecord {
+            kernel: "k".into(),
+            stats,
+            traffic: Default::default(),
+            duration_s: 1e-3,
+        };
+        d.traffic.hbm_read_bytes = 4096;
+        d.traffic.hbm_write_bytes = 2048;
+        d
+    }
+
+    #[test]
+    fn valu_reported_per_simd() {
+        let c = RocprofCounters::from_dispatch(&mi100(), &dispatch());
+        // 120 VALU total / 4 SIMDs = 30 per SIMD
+        assert_eq!(c.sq_insts_valu, 30);
+        assert_eq!(c.sq_insts_salu, 30);
+    }
+
+    #[test]
+    fn eq1_reconstructs_total_compute_instructions() {
+        let spec = mi100();
+        let c = RocprofCounters::from_dispatch(&spec, &dispatch());
+        assert_eq!(c.instructions(&spec), 120 + 30);
+    }
+
+    #[test]
+    fn branches_and_memory_insts_invisible() {
+        let spec = mi100();
+        let d = dispatch();
+        let c = RocprofCounters::from_dispatch(&spec, &d);
+        // total group insts include branch + load, but Eq.1 sees only
+        // compute — the paper's §7.3 discrepancy
+        assert!(d.stats.total_group_insts() > c.instructions(&spec));
+    }
+
+    #[test]
+    fn fetch_write_size_in_kb() {
+        let c = RocprofCounters::from_dispatch(&mi100(), &dispatch());
+        assert!((c.fetch_size_kb - 4.0).abs() < 1e-12);
+        assert!((c.write_size_kb - 2.0).abs() < 1e-12);
+        assert!((c.bytes_read() - 4096.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let spec = mi100();
+        let c1 = RocprofCounters::from_dispatch(&spec, &dispatch());
+        let mut acc = c1;
+        acc.accumulate(&c1);
+        assert_eq!(acc.sq_insts_valu, 2 * c1.sq_insts_valu);
+        assert!((acc.duration_ns - 2e6).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,93 @@
+//! gpumembench analog (Konstantinidis & Cotronis 2016, §6.2 of the
+//! paper): on-chip memory microbenchmarks against the simulated devices.
+//!
+//! The paper uses the suite to assess "instruction throughput, shared
+//! memory operations, and constant memory operations" on the MI60 and
+//! MI100. Each benchmark here drives a synthetic trace through the same
+//! simulation pipeline the kernels use and reports achieved vs
+//! theoretical rates.
+
+pub mod instthroughput;
+pub mod shmem;
+
+pub use instthroughput::InstThroughputBench;
+pub use shmem::ShmemBench;
+
+use crate::util::table::Table;
+
+/// Summary row of one microbenchmark.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    pub achieved: f64,
+    pub theoretical: f64,
+    pub unit: &'static str,
+}
+
+impl BenchRow {
+    pub fn efficiency(&self) -> f64 {
+        if self.theoretical == 0.0 {
+            0.0
+        } else {
+            self.achieved / self.theoretical
+        }
+    }
+}
+
+/// Render rows the way the suite's README tables do.
+pub fn render(gpu: &str, rows: &[BenchRow]) -> String {
+    let mut t = Table::new(vec![
+        "Benchmark",
+        "Achieved",
+        "Theoretical",
+        "Unit",
+        "Efficiency",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.2}", r.achieved),
+            format!("{:.2}", r.theoretical),
+            r.unit.to_string(),
+            format!("{:.1}%", 100.0 * r.efficiency()),
+        ]);
+    }
+    format!("gpumembench — {gpu}\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_math() {
+        let r = BenchRow {
+            name: "x".into(),
+            achieved: 50.0,
+            theoretical: 100.0,
+            unit: "GB/s",
+        };
+        assert!((r.efficiency() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let rows = vec![
+            BenchRow {
+                name: "lds".into(),
+                achieved: 1.0,
+                theoretical: 2.0,
+                unit: "TB/s",
+            },
+            BenchRow {
+                name: "valu".into(),
+                achieved: 100.0,
+                theoretical: 115.2,
+                unit: "GIPS",
+            },
+        ];
+        let s = render("MI60", &rows);
+        assert!(s.contains("lds"));
+        assert!(s.contains("86.8%"));
+    }
+}

@@ -1,0 +1,32 @@
+//! # rocline — an instruction-roofline modeling toolkit for AMD GPUs
+//!
+//! Reproduction of *"Metrics and Design of an Instruction Roofline Model
+//! for AMD GPUs"* (Leinhauser et al., 2021). See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! The crate is organized in three tiers:
+//!
+//! * **substrates** — [`arch`] (GPU models), [`trace`] (kernel event
+//!   streams), [`memsim`] (cache/coalescing/bank simulation),
+//!   [`counters`] (vendor counter semantics), [`timing`] (runtime model);
+//! * **the paper's method** — [`roofline`] (Eq. 1–4 and IRM plots),
+//!   [`profiler`] (rocprof-sim / nvprof-sim front-ends);
+//! * **workloads & harness** — [`pic`] (the PIConGPU-like plasma code),
+//!   [`babelstream`], [`gpumembench`], [`runtime`] (PJRT execution of the
+//!   AOT artifacts), [`coordinator`] (the experiments that regenerate
+//!   every paper table and figure), [`cli`].
+
+pub mod arch;
+pub mod babelstream;
+pub mod cli;
+pub mod coordinator;
+pub mod counters;
+pub mod gpumembench;
+pub mod memsim;
+pub mod pic;
+pub mod profiler;
+pub mod roofline;
+pub mod runtime;
+pub mod timing;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,9 @@
+//! rocline CLI entry point.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = rocline::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,273 @@
+//! Set-associative cache with LRU replacement and write-back dirty lines.
+//!
+//! Used for both the per-CU L1s and the shared L2. Lines are tracked at
+//! the cache's own line granularity (32B sectors on Volta's sectored
+//! caches, 64B on GCN/CDNA).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessResult {
+    Hit,
+    /// Miss; if `evicted_dirty` the victim line must be written back.
+    Miss { evicted_dirty: bool },
+}
+
+impl AccessResult {
+    pub fn is_hit(self) -> bool {
+        matches!(self, AccessResult::Hit)
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    lru: u64,
+}
+
+/// One cache instance.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    ways: usize,
+    sets: usize,
+    line_bytes: u64,
+    write_allocate: bool,
+    lines: Vec<Line>, // sets * ways, row-major by set
+    tick: u64,
+    /// Currently-dirty line count (lets `flush` skip the full scan when
+    /// nothing was written — the per-dispatch hot path).
+    dirty: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    pub fn new(
+        capacity: u64,
+        line_bytes: u64,
+        ways: u32,
+        write_allocate: bool,
+    ) -> Cache {
+        assert!(line_bytes.is_power_of_two());
+        let ways = ways as usize;
+        let sets = (capacity / (line_bytes * ways as u64)).max(1) as usize;
+        Cache {
+            ways,
+            sets,
+            line_bytes,
+            write_allocate,
+            lines: vec![Line::default(); sets * ways],
+            tick: 0,
+            dirty: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    pub fn from_spec(spec: &crate::arch::CacheSpec) -> Cache {
+        Cache::new(
+            spec.capacity,
+            spec.line as u64,
+            spec.ways,
+            spec.write_allocate,
+        )
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.line_bytes
+    }
+
+    /// Convert a byte address to this cache's line id.
+    #[inline]
+    pub fn line_of(&self, addr: u64) -> u64 {
+        addr / self.line_bytes
+    }
+
+    /// Access one line (already at line granularity). `write` marks the
+    /// line dirty on hit/allocation.
+    pub fn access_line(&mut self, line_id: u64, write: bool) -> AccessResult {
+        self.tick += 1;
+        let set = (line_id as usize) % self.sets;
+        let base = set * self.ways;
+        let slot = &mut self.lines[base..base + self.ways];
+
+        // hit?
+        for l in slot.iter_mut() {
+            if l.valid && l.tag == line_id {
+                l.lru = self.tick;
+                if write && !l.dirty {
+                    l.dirty = true;
+                    self.dirty += 1;
+                }
+                self.hits += 1;
+                return AccessResult::Hit;
+            }
+        }
+        self.misses += 1;
+
+        // write misses without allocation bypass the cache entirely
+        if write && !self.write_allocate {
+            return AccessResult::Miss {
+                evicted_dirty: false,
+            };
+        }
+
+        // allocate: pick invalid or LRU victim
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for (i, l) in slot.iter().enumerate() {
+            if !l.valid {
+                victim = i;
+                break;
+            }
+            if l.lru < best {
+                best = l.lru;
+                victim = i;
+            }
+        }
+        let evicted_dirty = slot[victim].valid && slot[victim].dirty;
+        if evicted_dirty {
+            self.writebacks += 1;
+            self.dirty -= 1;
+        }
+        if write {
+            self.dirty += 1;
+        }
+        slot[victim] = Line {
+            tag: line_id,
+            valid: true,
+            dirty: write,
+            lru: self.tick,
+        };
+        AccessResult::Miss { evicted_dirty }
+    }
+
+    /// Flush all dirty lines (end of kernel), returning how many
+    /// writebacks that produced.
+    pub fn flush(&mut self) -> u64 {
+        if self.dirty == 0 {
+            return 0; // nothing written since the last flush
+        }
+        let mut n = 0;
+        for l in &mut self.lines {
+            if l.valid && l.dirty {
+                n += 1;
+                l.dirty = false;
+            }
+        }
+        debug_assert_eq!(n, self.dirty);
+        self.dirty = 0;
+        self.writebacks += n;
+        n
+    }
+
+    /// Invalidate everything and clear statistics.
+    pub fn reset(&mut self) {
+        self.lines.fill(Line::default());
+        self.tick = 0;
+        self.dirty = 0;
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(1024, 32, 4, true);
+        assert!(!c.access_line(5, false).is_hit());
+        assert!(c.access_line(5, false).is_hit());
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn capacity_eviction_lru() {
+        // 4 lines total: 1 set x 4 ways
+        let mut c = Cache::new(128, 32, 4, true);
+        for i in 0..4 {
+            c.access_line(i, false);
+        }
+        // touch 0 to make it MRU, then add a 5th line: victim must be 1
+        c.access_line(0, false);
+        c.access_line(100, false);
+        assert!(c.access_line(0, false).is_hit());
+        assert!(!c.access_line(1, false).is_hit(), "line 1 was LRU victim");
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = Cache::new(128, 32, 4, true); // 4 lines, 1 set
+        c.access_line(0, true); // dirty
+        for i in 1..4 {
+            c.access_line(i, false);
+        }
+        // evicts line 0 (LRU, dirty)
+        let r = c.access_line(99, false);
+        assert_eq!(r, AccessResult::Miss { evicted_dirty: true });
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn write_no_allocate_bypasses() {
+        let mut c = Cache::new(1024, 32, 4, false);
+        let r = c.access_line(7, true);
+        assert!(!r.is_hit());
+        // not allocated: next read still misses
+        assert!(!c.access_line(7, false).is_hit());
+    }
+
+    #[test]
+    fn write_allocate_installs_dirty() {
+        let mut c = Cache::new(1024, 32, 4, true);
+        c.access_line(7, true);
+        assert!(c.access_line(7, false).is_hit());
+        assert_eq!(c.flush(), 1);
+        // flushing twice writes back nothing new
+        assert_eq!(c.flush(), 0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut c = Cache::new(1024, 32, 4, true);
+        c.access_line(1, true);
+        c.reset();
+        assert_eq!(c.hits + c.misses + c.writebacks, 0);
+        assert!(!c.access_line(1, false).is_hit());
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let mut c = Cache::new(1024, 32, 4, true);
+        c.access_line(1, false);
+        c.access_line(1, false);
+        c.access_line(1, false);
+        c.access_line(2, false);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sets_indexing_disjoint() {
+        // two lines in different sets never evict each other
+        let mut c = Cache::new(256, 32, 1, true); // 8 sets x 1 way
+        c.access_line(0, false);
+        c.access_line(1, false); // different set
+        assert!(c.access_line(0, false).is_hit());
+        assert!(c.access_line(1, false).is_hit());
+    }
+}

@@ -1,0 +1,140 @@
+//! Lane-address coalescing into memory transactions.
+//!
+//! A group-level load/store is serviced as a set of aligned sectors
+//! (32 bytes on NVIDIA — the "transaction" of Ding & Williams; 64-byte
+//! lines on GCN/CDNA). A fully-coalesced warp f32 load touches 4 sectors;
+//! a 128B-strided one touches 32 — the spread the paper reads off the L1
+//! position of the IRM points ("Global Memory Walls", §7.1).
+//!
+//! This is the innermost loop of the whole simulator; it reuses a caller
+//! scratch buffer and never allocates in the steady state.
+
+use crate::trace::event::MemAccess;
+
+/// Stateless coalescer for a fixed sector size.
+#[derive(Debug, Clone, Copy)]
+pub struct Coalescer {
+    sector_bytes: u64,
+}
+
+impl Coalescer {
+    pub fn new(sector_bytes: u64) -> Self {
+        assert!(sector_bytes.is_power_of_two());
+        Coalescer { sector_bytes }
+    }
+
+    pub fn sector_bytes(&self) -> u64 {
+        self.sector_bytes
+    }
+
+    /// Append the distinct sector ids touched by `access` to `out`
+    /// (cleared first). Returns the number of sectors.
+    ///
+    /// Lanes whose `bytes_per_lane` spans a sector boundary touch two
+    /// sectors (unaligned case).
+    pub fn sectors(&self, access: &MemAccess, out: &mut Vec<u64>) -> usize {
+        out.clear();
+        let shift = self.sector_bytes.trailing_zeros();
+        // Fast path: consecutive lanes usually touch non-decreasing
+        // sectors (contiguous/strided/stencil-ordered gathers), so a
+        // last-element check dedups most runs in O(1); any
+        // out-of-order sector falls back to one sort+dedup at the end.
+        let mut sorted = true;
+        for addr in access.active_addrs() {
+            let first = addr >> shift;
+            let last = (addr + access.bytes_per_lane as u64 - 1) >> shift;
+            for s in first..=last {
+                match out.last() {
+                    Some(&prev) if prev == s => {}
+                    Some(&prev) => {
+                        if s < prev {
+                            sorted = false;
+                        }
+                        out.push(s);
+                    }
+                    None => out.push(s),
+                }
+            }
+        }
+        if !sorted {
+            out.sort_unstable();
+            out.dedup();
+        }
+        out.len()
+    }
+
+    /// Number of sectors without materializing them (for stats-only paths).
+    pub fn sector_count(&self, access: &MemAccess) -> usize {
+        let mut buf = Vec::with_capacity(8);
+        self.sectors(access, &mut buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::{MemAccess, MemKind};
+
+    fn coalescer32() -> Coalescer {
+        Coalescer::new(32)
+    }
+
+    #[test]
+    fn fully_coalesced_warp_load_is_4_sectors() {
+        // 32 lanes x 4B contiguous = 128B = 4 x 32B sectors
+        let a = MemAccess::contiguous(MemKind::Read, 0, 32, 4);
+        assert_eq!(coalescer32().sector_count(&a), 4);
+    }
+
+    #[test]
+    fn fully_coalesced_wavefront_load_is_8_sectors() {
+        let a = MemAccess::contiguous(MemKind::Read, 0, 64, 4);
+        assert_eq!(coalescer32().sector_count(&a), 8);
+    }
+
+    #[test]
+    fn worst_case_stride_is_one_sector_per_lane() {
+        // 128B stride: every lane its own sector — the "memory wall"
+        let a = MemAccess::strided(MemKind::Read, 0, 32, 128, 4);
+        assert_eq!(coalescer32().sector_count(&a), 32);
+    }
+
+    #[test]
+    fn same_address_broadcast_is_one_sector() {
+        let addrs = vec![64u64; 32];
+        let a = MemAccess::gather(MemKind::Read, &addrs, 4);
+        assert_eq!(coalescer32().sector_count(&a), 1);
+    }
+
+    #[test]
+    fn unaligned_lane_spans_two_sectors() {
+        let a = MemAccess::gather(MemKind::Read, &[30], 4);
+        assert_eq!(coalescer32().sector_count(&a), 2);
+    }
+
+    #[test]
+    fn sector_ids_are_addr_divided() {
+        // lane at 95 spans bytes 95..98 -> sectors 2 and 3
+        let a = MemAccess::gather(MemKind::Read, &[0, 32, 95], 4);
+        let mut out = Vec::new();
+        coalescer32().sectors(&a, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        let b = MemAccess::gather(MemKind::Read, &[0, 32, 92], 4);
+        coalescer32().sectors(&b, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn line64_coalescing() {
+        // AMD 64B granularity: a 64-lane f32 contiguous load = 4 lines
+        let c = Coalescer::new(64);
+        let a = MemAccess::contiguous(MemKind::Read, 0, 64, 4);
+        assert_eq!(c.sector_count(&a), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        Coalescer::new(48);
+    }
+}

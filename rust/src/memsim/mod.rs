@@ -1,0 +1,20 @@
+//! Memory-hierarchy simulator.
+//!
+//! Produces the per-level traffic the two profilers sample:
+//!
+//! * NVIDIA needs L1/L2/DRAM **transaction** counts (32B sectors) for the
+//!   Fig. 4 instruction roofline — from [`hierarchy::MemHierarchy`];
+//! * AMD needs `FETCH_SIZE`/`WRITE_SIZE` — HBM-level byte totals from the
+//!   same hierarchy configured with GCN/CDNA geometry;
+//! * the LDS bank-conflict model ([`banks`]) backs the paper's §7.1
+//!   32-way-bank-conflict diagnostic and the gpumembench analog.
+
+pub mod banks;
+pub mod cache;
+pub mod coalesce;
+pub mod hierarchy;
+
+pub use banks::BankModel;
+pub use cache::{AccessResult, Cache};
+pub use coalesce::Coalescer;
+pub use hierarchy::{MemHierarchy, MemTraffic};

@@ -1,0 +1,143 @@
+//! Science-case configuration — must mirror `python/compile/cases.py`
+//! exactly (the constants are baked into the AOT artifacts and recorded
+//! in `artifacts/manifest.txt`).
+
+/// Geometry + physics constants for one science case.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseConfig {
+    pub name: String,
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    /// Particles per cell.
+    pub ppc: usize,
+    /// Timestep (normalized units, c = dx = 1).
+    pub dt: f32,
+    /// Charge/mass ratio (electrons: -1).
+    pub qm: f32,
+    /// Deposition factor: q * macroweight / cell volume.
+    pub qw: f32,
+    /// Steps for the mini run (also the profiled invocation count).
+    pub steps: u32,
+}
+
+impl CaseConfig {
+    /// LWFA mini case — mirrors `cases.LWFA` in python. Sized so the
+    /// working set exceeds the modeled L2s (DESIGN.md §1).
+    pub fn lwfa() -> CaseConfig {
+        CaseConfig {
+            name: "lwfa".into(),
+            nx: 40,
+            ny: 40,
+            nz: 40,
+            ppc: 4,
+            dt: 0.5,
+            qm: -1.0,
+            qw: -0.05,
+            steps: 64,
+        }
+    }
+
+    /// TWEAC mini case — mirrors `cases.TWEAC` in python.
+    pub fn tweac() -> CaseConfig {
+        CaseConfig {
+            name: "tweac".into(),
+            nx: 48,
+            ny: 48,
+            nz: 48,
+            ppc: 4,
+            dt: 0.5,
+            qm: -1.0,
+            qw: -0.05,
+            steps: 96,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<CaseConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "lwfa" => Some(Self::lwfa()),
+            "tweac" => Some(Self::tweac()),
+            _ => None,
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    pub fn particles(&self) -> usize {
+        self.cells() * self.ppc
+    }
+
+    /// Parse a `case name=lwfa nx=16 ...` line from the AOT manifest; the
+    /// integration tests use this to prove Rust and Python agree on every
+    /// constant.
+    pub fn from_manifest_line(line: &str) -> Option<CaseConfig> {
+        let rest = line.strip_prefix("case ")?;
+        let mut kv = std::collections::HashMap::new();
+        for part in rest.split_whitespace() {
+            let (k, v) = part.split_once('=')?;
+            kv.insert(k, v);
+        }
+        Some(CaseConfig {
+            name: kv.get("name")?.to_string(),
+            nx: kv.get("nx")?.parse().ok()?,
+            ny: kv.get("ny")?.parse().ok()?,
+            nz: kv.get("nz")?.parse().ok()?,
+            ppc: kv.get("ppc")?.parse().ok()?,
+            dt: kv.get("dt")?.parse().ok()?,
+            qm: kv.get("qm")?.parse().ok()?,
+            qw: kv.get("qw")?.parse().ok()?,
+            steps: kv.get("steps")?.parse().ok()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lwfa_counts() {
+        let c = CaseConfig::lwfa();
+        assert_eq!(c.cells(), 64000);
+        assert_eq!(c.particles(), 256000);
+        assert_eq!(c.particles() % 256, 0, "pallas block divisibility");
+    }
+
+    #[test]
+    fn tweac_counts() {
+        let c = CaseConfig::tweac();
+        assert_eq!(c.cells(), 110592);
+        assert_eq!(c.particles(), 442368);
+        assert_eq!(c.particles() % 256, 0, "pallas block divisibility");
+    }
+
+    #[test]
+    fn cfl_satisfied() {
+        for c in [CaseConfig::lwfa(), CaseConfig::tweac()] {
+            assert!(c.dt < 1.0 / 3f32.sqrt(), "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let line = "case name=lwfa nx=40 ny=40 nz=40 ppc=4 dt=0.5 \
+                    qm=-1.0 qw=-0.05 steps=64";
+        let parsed = CaseConfig::from_manifest_line(line).unwrap();
+        assert_eq!(parsed, CaseConfig::lwfa());
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(CaseConfig::from_manifest_line("entry name=x").is_none());
+        assert!(CaseConfig::from_manifest_line("case name=x nx=bad")
+            .is_none());
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(CaseConfig::by_name("LWFA").is_some());
+        assert!(CaseConfig::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,162 @@
+//! Native `ComputeCurrent`: CIC current deposition.
+//!
+//! Mirrors `python/compile/kernels/pic.py::_contrib_kernel` + the
+//! scatter-add in `model.compute_current`.
+
+use super::config::CaseConfig;
+use super::pusher::cic_stencil;
+use super::state::SimState;
+
+/// Per-particle stencil output: 8 flattened cell ids + 8 weighted
+/// velocity contributions (before the `qw` scale).
+pub fn contributions(
+    cfg: &CaseConfig,
+    pos: [f32; 3],
+    mom: [f32; 3],
+) -> ([usize; 8], [[f32; 3]; 8]) {
+    let gamma = (1.0 + mom[0] * mom[0] + mom[1] * mom[1]
+        + mom[2] * mom[2])
+        .sqrt();
+    let v = [mom[0] / gamma, mom[1] / gamma, mom[2] / gamma];
+    let (i0, f) = cic_stencil(pos);
+    let mut cells = [0usize; 8];
+    let mut contribs = [[0f32; 3]; 8];
+    let mut k = 0;
+    for cx in 0..2usize {
+        for cy in 0..2usize {
+            for cz in 0..2usize {
+                let ix = (i0[0] + cx as i64).rem_euclid(cfg.nx as i64)
+                    as usize;
+                let iy = (i0[1] + cy as i64).rem_euclid(cfg.ny as i64)
+                    as usize;
+                let iz = (i0[2] + cz as i64).rem_euclid(cfg.nz as i64)
+                    as usize;
+                let wx = if cx == 1 { f[0] } else { 1.0 - f[0] };
+                let wy = if cy == 1 { f[1] } else { 1.0 - f[1] };
+                let wz = if cz == 1 { f[2] } else { 1.0 - f[2] };
+                let w = wx * wy * wz;
+                cells[k] = SimState::cell_id(cfg, ix, iy, iz);
+                contribs[k] = [w * v[0], w * v[1], w * v[2]];
+                k += 1;
+            }
+        }
+    }
+    (cells, contribs)
+}
+
+/// Rebuild `state.j` from all particles (the full ComputeCurrent kernel).
+pub fn compute_current(state: &mut SimState) {
+    let cfg = state.cfg.clone();
+    let cells = cfg.cells();
+    state.j.fill(0.0);
+    let n = cfg.particles();
+    for p in 0..n {
+        let pos = [
+            state.pos[p * 3],
+            state.pos[p * 3 + 1],
+            state.pos[p * 3 + 2],
+        ];
+        let mom = [
+            state.mom[p * 3],
+            state.mom[p * 3 + 1],
+            state.mom[p * 3 + 2],
+        ];
+        let (ids, contribs) = contributions(&cfg, pos, mom);
+        for k in 0..8 {
+            for c in 0..3 {
+                state.j[c * cells + ids[k]] +=
+                    cfg.qw * contribs[k][c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pic::config::CaseConfig;
+    use crate::pic::state::SimState;
+
+    #[test]
+    fn weights_partition_unity() {
+        let cfg = CaseConfig::lwfa();
+        let mom = [0.6, -0.2, 0.1];
+        let gamma = (1.0f32 + 0.36 + 0.04 + 0.01).sqrt();
+        let v = [0.6 / gamma, -0.2 / gamma, 0.1 / gamma];
+        let (_, contribs) = contributions(&cfg, [3.3, 7.8, 11.1], mom);
+        for c in 0..3 {
+            let sum: f32 = contribs.iter().map(|k| k[c]).sum();
+            assert!((sum - v[c]).abs() < 1e-5, "c{c}: {sum} vs {}", v[c]);
+        }
+    }
+
+    #[test]
+    fn cell_ids_valid_and_distinct_interior() {
+        let cfg = CaseConfig::lwfa();
+        let (ids, _) = contributions(&cfg, [5.5, 6.5, 7.5], [0.0; 3]);
+        let cells = cfg.cells();
+        for id in ids {
+            assert!(id < cells);
+        }
+        let mut sorted = ids;
+        sorted.sort_unstable();
+        sorted.windows(2).for_each(|w| assert_ne!(w[0], w[1]));
+    }
+
+    #[test]
+    fn total_current_equals_qw_times_velocity_sum() {
+        let cfg = CaseConfig::lwfa();
+        let mut st = SimState::init(&cfg, 11);
+        compute_current(&mut st);
+        let n = cfg.particles();
+        let mut vsum = [0f64; 3];
+        for p in 0..n {
+            let u = [
+                st.mom[p * 3] as f64,
+                st.mom[p * 3 + 1] as f64,
+                st.mom[p * 3 + 2] as f64,
+            ];
+            let g = (1.0 + u[0] * u[0] + u[1] * u[1] + u[2] * u[2]).sqrt();
+            for c in 0..3 {
+                vsum[c] += u[c] / g;
+            }
+        }
+        let cells = cfg.cells();
+        for c in 0..3 {
+            let jsum: f64 = st.j[c * cells..(c + 1) * cells]
+                .iter()
+                .map(|&x| x as f64)
+                .sum();
+            let want = cfg.qw as f64 * vsum[c];
+            assert!(
+                (jsum - want).abs() < 1e-3 * want.abs().max(1.0),
+                "c{c}: {jsum} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn stationary_particles_deposit_nothing() {
+        let cfg = CaseConfig::lwfa();
+        let mut st = SimState::init(&cfg, 2);
+        st.mom.fill(0.0);
+        compute_current(&mut st);
+        assert!(st.j.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn single_particle_spreads_over_8_cells() {
+        let cfg = CaseConfig::lwfa();
+        let mut st = SimState::init(&cfg, 2);
+        st.mom.fill(0.0);
+        st.pos.fill(0.0);
+        // one moving particle strictly inside cell (5,5,5)
+        st.pos[0] = 5.3;
+        st.pos[1] = 5.6;
+        st.pos[2] = 5.2;
+        st.mom[0] = 1.0;
+        compute_current(&mut st);
+        let nonzero = st.j.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, 8, "J_x over the 8 stencil cells");
+    }
+}

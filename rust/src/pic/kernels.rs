@@ -1,0 +1,615 @@
+//! Trace generators for the PIC kernels: how each kernel *executes* on a
+//! simulated GPU.
+//!
+//! Memory addresses come from the **live particle state** (field-gather
+//! targets, deposition cells), so coalescing, cache behaviour and LDS
+//! bank conflicts are driven by the real plasma dynamics. Instruction
+//! counts come from a per-kernel cost model ([`KernelCosts`]) calibrated
+//! against PIConGPU's measured counter magnitudes in the paper's Tables
+//! 1–2 (per-thread static instruction counts of the real Esirkepov
+//! deposition and Boris push are in the hundreds), scaled per target by
+//! [`crate::arch::GpuSpec::isa_expansion`].
+//!
+//! Virtual device address map (bytes):
+//!
+//! | array | base |
+//! |-------|------|
+//! | E     | `0x1000_0000` |
+//! | B     | E + field_bytes |
+//! | J     | B + field_bytes |
+//! | pos   | `0x4000_0000` |
+//! | mom   | pos + n*12 |
+
+use super::config::CaseConfig;
+use super::pusher::cic_stencil;
+use super::state::SimState;
+use crate::arch::{GpuSpec, InstClass};
+use crate::trace::event::{LdsAccess, MemAccess, MemKind, MAX_LANES};
+use crate::trace::sink::EventSink;
+use crate::trace::{for_each_group, TraceSource};
+
+pub const E_BASE: u64 = 0x1000_0000;
+pub const POS_BASE: u64 = 0x4000_0000;
+
+/// Per-group (static, per-warp/wavefront) instruction costs of a kernel,
+/// before ISA expansion. NVIDIA-SASS-relative units.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelCosts {
+    pub valu: u64,
+    pub valu_special: u64,
+    pub salu: u64,
+    pub branch: u64,
+    pub sync: u64,
+    pub misc: u64,
+}
+
+impl KernelCosts {
+    /// MoveAndMark: trilinear gather (2 fields × 8 corners × 3 comps of
+    /// weighted accumulation), Boris rotation (2 sqrt, 2 cross, ~40
+    /// mul/add), position advance + wrap.
+    pub const MOVE_AND_MARK: KernelCosts = KernelCosts {
+        valu: 1900,
+        valu_special: 80,
+        salu: 140,
+        branch: 56,
+        sync: 8,
+        misc: 36,
+    };
+    /// ComputeCurrent: per-corner weight products, velocity, cell
+    /// arithmetic, LDS staging + atomic update loop (the paper's most
+    /// intensive kernel).
+    pub const COMPUTE_CURRENT: KernelCosts = KernelCosts {
+        valu: 2200,
+        valu_special: 60,
+        salu: 170,
+        branch: 72,
+        sync: 16,
+        misc: 40,
+    };
+    /// FieldSolver: 2 curls + axpy over 6 components.
+    pub const FIELD_SOLVER: KernelCosts = KernelCosts {
+        valu: 260,
+        valu_special: 0,
+        salu: 40,
+        branch: 12,
+        sync: 4,
+        misc: 12,
+    };
+    /// ShiftParticles: frame bookkeeping, mostly data movement.
+    pub const SHIFT_PARTICLES: KernelCosts = KernelCosts {
+        valu: 90,
+        valu_special: 0,
+        salu: 36,
+        branch: 18,
+        sync: 4,
+        misc: 10,
+    };
+    /// CurrentReset: memset.
+    pub const CURRENT_RESET: KernelCosts = KernelCosts {
+        valu: 4,
+        valu_special: 0,
+        salu: 6,
+        branch: 2,
+        sync: 0,
+        misc: 2,
+    };
+
+    /// Emit the instruction events, scaled by the target's ISA density.
+    fn emit(
+        &self,
+        sink: &mut dyn EventSink,
+        ctx: &crate::trace::event::GroupCtx,
+        expansion: f64,
+    ) {
+        let f = |x: u64| ((x as f64 * expansion).round() as u64).max(x.min(1));
+        sink.on_inst(ctx, InstClass::ValuArith, f(self.valu));
+        if self.valu_special > 0 {
+            sink.on_inst(ctx, InstClass::ValuSpecial, f(self.valu_special));
+        }
+        sink.on_inst(ctx, InstClass::Salu, f(self.salu));
+        sink.on_inst(ctx, InstClass::Branch, self.branch);
+        if self.sync > 0 {
+            sink.on_inst(ctx, InstClass::Sync, self.sync);
+        }
+        sink.on_inst(ctx, InstClass::Misc, self.misc);
+    }
+}
+
+fn field_bytes(cfg: &CaseConfig) -> u64 {
+    (3 * cfg.cells() * 4) as u64
+}
+
+fn b_base(cfg: &CaseConfig) -> u64 {
+    E_BASE + field_bytes(cfg)
+}
+
+fn j_base(cfg: &CaseConfig) -> u64 {
+    E_BASE + 2 * field_bytes(cfg)
+}
+
+fn mom_base(cfg: &CaseConfig) -> u64 {
+    POS_BASE + (cfg.particles() * 12) as u64
+}
+
+/// Emit the 3 AoS component loads/stores of a particle attribute for the
+/// lanes in `range` (stride-12 pattern: PIConGPU frames are AoS).
+fn particle_attr_access(
+    sink: &mut dyn EventSink,
+    ctx: &crate::trace::event::GroupCtx,
+    kind: MemKind,
+    base: u64,
+    range: std::ops::Range<u64>,
+) {
+    let lanes = (range.end - range.start) as u32;
+    for c in 0..3u64 {
+        sink.on_mem(
+            ctx,
+            &MemAccess::strided(
+                kind,
+                base + range.start * 12 + c * 4,
+                lanes,
+                12,
+                4,
+            ),
+        );
+    }
+}
+
+/// Shared helper: per-lane stencil cells of the particles in `range`.
+fn lane_stencils(
+    state: &SimState,
+    range: std::ops::Range<u64>,
+) -> Vec<([i64; 3], usize)> {
+    let mut out = Vec::with_capacity(MAX_LANES);
+    for p in range {
+        let p = p as usize;
+        let pos = [
+            state.pos[p * 3],
+            state.pos[p * 3 + 1],
+            state.pos[p * 3 + 2],
+        ];
+        let (i0, _) = cic_stencil(pos);
+        out.push((i0, p));
+    }
+    out
+}
+
+/// Branchy wrap — `i` is in [-1, n] from the CIC stencil, so one
+/// conditional add/sub replaces `rem_euclid`'s division (hot path).
+#[inline]
+fn wrap1(i: i64, n: i64) -> usize {
+    let v = if i < 0 {
+        i + n
+    } else if i >= n {
+        i - n
+    } else {
+        i
+    };
+    v as usize
+}
+
+fn wrap3(cfg: &CaseConfig, i0: [i64; 3], cx: usize, cy: usize, cz: usize) -> (usize, usize, usize) {
+    (
+        wrap1(i0[0] + cx as i64, cfg.nx as i64),
+        wrap1(i0[1] + cy as i64, cfg.ny as i64),
+        wrap1(i0[2] + cz as i64, cfg.nz as i64),
+    )
+}
+
+/// Precompute, once per group, the flattened *cell id* of each lane's 8
+/// stencil corners: `corner_cells[k][lane]`. Shared by the gather
+/// address generation (all 6 field components reuse it) and the
+/// deposition's LDS/atomic targets.
+fn corner_cells(
+    cfg: &CaseConfig,
+    stencils: &[([i64; 3], usize)],
+    out: &mut [[u64; MAX_LANES]; 8],
+) {
+    for (lane, (i0, _)) in stencils.iter().enumerate() {
+        let mut k = 0;
+        for cx in 0..2 {
+            for cy in 0..2 {
+                for cz in 0..2 {
+                    let (ix, iy, iz) = wrap3(cfg, *i0, cx, cy, cz);
+                    out[k][lane] =
+                        SimState::cell_id(cfg, ix, iy, iz) as u64;
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// MoveAndMark
+// ---------------------------------------------------------------------
+
+/// Trace of the `MoveAndMark` kernel over the current particle state.
+pub struct MoveAndMarkTrace<'a> {
+    pub state: &'a SimState,
+    pub spec: &'a GpuSpec,
+}
+
+impl TraceSource for MoveAndMarkTrace<'_> {
+    fn name(&self) -> &str {
+        "MoveAndMark"
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let cfg = &self.state.cfg;
+        let n = cfg.particles() as u64;
+        let cells = cfg.cells() as u64;
+        let mut corners = [[0u64; MAX_LANES]; 8];
+        // reusable access: avoids zeroing 512B per event (hot path)
+        let mut acc =
+            MemAccess::gather(MemKind::Read, &[0u64], 4);
+        let mut addrs = [0u64; MAX_LANES];
+        for_each_group(n, group_size, |ctx, range| {
+            let lanes = (range.end - range.start) as usize;
+            // load pos + mom (AoS, stride 12)
+            particle_attr_access(sink, ctx, MemKind::Read, POS_BASE, range.clone());
+            particle_attr_access(sink, ctx, MemKind::Read, mom_base(cfg), range.clone());
+
+            // gather E and B: 8 corners x 3 components; the wrapped
+            // corner cells are shared across fields and components
+            let stencils = lane_stencils(self.state, range.clone());
+            corner_cells(cfg, &stencils, &mut corners);
+            for base in [E_BASE, b_base(cfg)] {
+                for corner in corners.iter() {
+                    for c in 0..3u64 {
+                        let comp = base + c * cells * 4;
+                        for l in 0..lanes {
+                            addrs[l] = comp + corner[l] * 4;
+                        }
+                        acc.set_gather(MemKind::Read, &addrs[..lanes]);
+                        sink.on_mem(ctx, &acc);
+                    }
+                }
+            }
+
+            KernelCosts::MOVE_AND_MARK.emit(
+                sink,
+                ctx,
+                self.spec.isa_expansion,
+            );
+
+            // store updated pos + mom
+            particle_attr_access(sink, ctx, MemKind::Write, POS_BASE, range.clone());
+            particle_attr_access(sink, ctx, MemKind::Write, mom_base(cfg), range);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// ComputeCurrent
+// ---------------------------------------------------------------------
+
+/// Trace of the `ComputeCurrent` kernel: LDS-staged, atomics to global J.
+pub struct ComputeCurrentTrace<'a> {
+    pub state: &'a SimState,
+    pub spec: &'a GpuSpec,
+}
+
+impl TraceSource for ComputeCurrentTrace<'_> {
+    fn name(&self) -> &str {
+        "ComputeCurrent"
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let cfg = &self.state.cfg;
+        let n = cfg.particles() as u64;
+        let cells = cfg.cells() as u64;
+        let mut corners = [[0u64; MAX_LANES]; 8];
+        let mut lds_addrs = [0u64; MAX_LANES];
+        let mut addrs = [0u64; MAX_LANES];
+        let mut acc =
+            MemAccess::gather(MemKind::Atomic, &[0u64], 4);
+        // LDS tile: currents staged per supercell; model with a 16KB span
+        let lds_span_words = 4096u64;
+        for_each_group(n, group_size, |ctx, range| {
+            let lanes = (range.end - range.start) as usize;
+            particle_attr_access(sink, ctx, MemKind::Read, POS_BASE, range.clone());
+            particle_attr_access(sink, ctx, MemKind::Read, mom_base(cfg), range.clone());
+
+            let stencils = lane_stencils(self.state, range.clone());
+            corner_cells(cfg, &stencils, &mut corners);
+            for corner in corners.iter() {
+                // stage in LDS (bank conflicts from real cells)
+                for l in 0..lanes {
+                    lds_addrs[l] = (corner[l] % lds_span_words) * 4;
+                }
+                for _c in 0..3 {
+                    sink.on_lds(
+                        ctx,
+                        &LdsAccess::from_lane_addrs(
+                            MemKind::Write,
+                            &lds_addrs[..lanes],
+                            4,
+                        ),
+                    );
+                }
+                // atomic add to global J, per component
+                for c in 0..3u64 {
+                    let comp_base = j_base(cfg) + c * cells * 4;
+                    for l in 0..lanes {
+                        addrs[l] = comp_base + corner[l] * 4;
+                    }
+                    acc.set_gather(MemKind::Atomic, &addrs[..lanes]);
+                    sink.on_mem(ctx, &acc);
+                }
+            }
+
+            KernelCosts::COMPUTE_CURRENT.emit(
+                sink,
+                ctx,
+                self.spec.isa_expansion,
+            );
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// FieldSolver / ShiftParticles / CurrentReset
+// ---------------------------------------------------------------------
+
+/// Trace of the `FieldSolver` kernel (threads = cells, streaming stencil).
+pub struct FieldSolverTrace<'a> {
+    pub state: &'a SimState,
+    pub spec: &'a GpuSpec,
+}
+
+impl TraceSource for FieldSolverTrace<'_> {
+    fn name(&self) -> &str {
+        "FieldSolver"
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let cfg = &self.state.cfg;
+        let cells = cfg.cells() as u64;
+        let fb = field_bytes(cfg);
+        for_each_group(cells, group_size, |ctx, range| {
+            let lanes = (range.end - range.start) as u32;
+            let base_off = range.start * 4;
+            // stencil reads: E, B (each 3 comps x 3 z-offsets) + J
+            for (arr, comps, taps) in [
+                (E_BASE, 3u64, 3u64),
+                (b_base(cfg), 3, 3),
+                (j_base(cfg), 3, 1),
+            ] {
+                for c in 0..comps {
+                    for t in 0..taps {
+                        let off = (t as i64 - 1) * 4;
+                        let addr = (arr + c * (fb / 3) + base_off)
+                            .saturating_add_signed(off);
+                        sink.on_mem(
+                            ctx,
+                            &MemAccess::contiguous(
+                                MemKind::Read,
+                                addr,
+                                lanes,
+                                4,
+                            ),
+                        );
+                    }
+                }
+            }
+            KernelCosts::FIELD_SOLVER.emit(
+                sink,
+                ctx,
+                self.spec.isa_expansion,
+            );
+            // write back E and B
+            for (arr, comps) in [(E_BASE, 3u64), (b_base(cfg), 3)] {
+                for c in 0..comps {
+                    sink.on_mem(
+                        ctx,
+                        &MemAccess::contiguous(
+                            MemKind::Write,
+                            arr + c * (fb / 3) + base_off,
+                            lanes,
+                            4,
+                        ),
+                    );
+                }
+            }
+        });
+    }
+}
+
+/// Trace of `ShiftParticles` (frame bookkeeping: stream pos/mom).
+pub struct ShiftParticlesTrace<'a> {
+    pub state: &'a SimState,
+    pub spec: &'a GpuSpec,
+}
+
+impl TraceSource for ShiftParticlesTrace<'_> {
+    fn name(&self) -> &str {
+        "ShiftParticles"
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let cfg = &self.state.cfg;
+        let n = cfg.particles() as u64;
+        for_each_group(n, group_size, |ctx, range| {
+            particle_attr_access(sink, ctx, MemKind::Read, POS_BASE, range.clone());
+            KernelCosts::SHIFT_PARTICLES.emit(
+                sink,
+                ctx,
+                self.spec.isa_expansion,
+            );
+            particle_attr_access(sink, ctx, MemKind::Write, POS_BASE, range);
+        });
+    }
+}
+
+/// Trace of `CurrentReset` (memset of J).
+pub struct CurrentResetTrace<'a> {
+    pub state: &'a SimState,
+    pub spec: &'a GpuSpec,
+}
+
+impl TraceSource for CurrentResetTrace<'_> {
+    fn name(&self) -> &str {
+        "CurrentReset"
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let cfg = &self.state.cfg;
+        let words = 3 * cfg.cells() as u64;
+        for_each_group(words, group_size, |ctx, range| {
+            let lanes = (range.end - range.start) as u32;
+            sink.on_mem(
+                ctx,
+                &MemAccess::contiguous(
+                    MemKind::Write,
+                    j_base(cfg) + range.start * 4,
+                    lanes,
+                    4,
+                ),
+            );
+            KernelCosts::CURRENT_RESET.emit(
+                sink,
+                ctx,
+                self.spec.isa_expansion,
+            );
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{mi100, mi60, v100};
+    use crate::trace::collect_stats;
+
+    fn state() -> SimState {
+        SimState::init(&CaseConfig::lwfa(), 7)
+    }
+
+    #[test]
+    fn move_and_mark_event_shape() {
+        let st = state();
+        let spec = mi100();
+        let t = MoveAndMarkTrace {
+            state: &st,
+            spec: &spec,
+        };
+        let s = collect_stats(&t, 64);
+        let groups = 256000 / 64;
+        assert_eq!(s.groups, groups);
+        // per group: 6 attr loads + 48 gathers, 6 stores
+        assert_eq!(s.mem_reads, groups * (6 + 48));
+        assert_eq!(s.mem_writes, groups * 6);
+        assert!(s.inst.valu() > 0);
+    }
+
+    #[test]
+    fn compute_current_uses_lds_and_atomics() {
+        let st = state();
+        let spec = mi100();
+        let t = ComputeCurrentTrace {
+            state: &st,
+            spec: &spec,
+        };
+        let s = collect_stats(&t, 64);
+        let groups = 256000 / 64;
+        assert_eq!(s.mem_atomics, groups * 24);
+        assert_eq!(s.lds_ops, groups * 24);
+    }
+
+    #[test]
+    fn isa_expansion_inflates_amd_compute_counts() {
+        let st = state();
+        let (v, m) = (v100(), mi60());
+        let sv = collect_stats(
+            &MoveAndMarkTrace {
+                state: &st,
+                spec: &v,
+            },
+            64,
+        );
+        let sm = collect_stats(
+            &MoveAndMarkTrace {
+                state: &st,
+                spec: &m,
+            },
+            64,
+        );
+        let ratio = sm.inst.valu() as f64 / sv.inst.valu() as f64;
+        assert!((ratio - 3.6).abs() < 0.05, "{ratio}");
+        // memory instruction counts are NOT inflated
+        assert_eq!(sv.mem_reads, sm.mem_reads);
+    }
+
+    #[test]
+    fn warp_gpu_needs_twice_the_groups() {
+        let st = state();
+        let spec = v100();
+        let t = MoveAndMarkTrace {
+            state: &st,
+            spec: &spec,
+        };
+        assert_eq!(collect_stats(&t, 32).groups, 256000 / 32);
+        assert_eq!(collect_stats(&t, 64).groups, 256000 / 64);
+    }
+
+    #[test]
+    fn field_solver_covers_cells() {
+        let st = state();
+        let spec = mi100();
+        let t = FieldSolverTrace {
+            state: &st,
+            spec: &spec,
+        };
+        let s = collect_stats(&t, 64);
+        assert_eq!(s.groups, 64000 / 64);
+        // 21 reads + 6 writes per group
+        assert_eq!(s.mem_reads, (64000 / 64) * 21);
+        assert_eq!(s.mem_writes, (64000 / 64) * 6);
+    }
+
+    #[test]
+    fn current_reset_writes_all_of_j() {
+        let st = state();
+        let spec = mi100();
+        let t = CurrentResetTrace {
+            state: &st,
+            spec: &spec,
+        };
+        let s = collect_stats(&t, 64);
+        assert_eq!(s.bytes_written_requested, 3 * 64000 * 4);
+    }
+
+    #[test]
+    fn gather_addresses_depend_on_state() {
+        // two different particle states must produce different gather
+        // coalescing (the simulation dynamics drive the memory model)
+        let cfg = CaseConfig::lwfa();
+        let a = SimState::init(&cfg, 1);
+        let mut b = SimState::init(&cfg, 1);
+        let mut sim = crate::pic::sim::PicSim {
+            state: b.clone(),
+            step_count: 0,
+        };
+        sim.run(5);
+        b = sim.state;
+        let spec = mi100();
+        let ta = collect_stats(
+            &MoveAndMarkTrace {
+                state: &a,
+                spec: &spec,
+            },
+            64,
+        );
+        let tb = collect_stats(
+            &MoveAndMarkTrace {
+                state: &b,
+                spec: &spec,
+            },
+            64,
+        );
+        // same instruction counts, but the byte-level behaviour differs
+        // downstream; at stats level the requested bytes match:
+        assert_eq!(ta.bytes_read_requested, tb.bytes_read_requested);
+    }
+}

@@ -1,0 +1,29 @@
+//! A from-scratch 3D relativistic particle-in-cell core — the
+//! PIConGPU-analog workload the paper profiles (§5).
+//!
+//! Two synchronized implementations exist:
+//!
+//! * **native Rust** (this module) — the simulation the profilers trace,
+//!   with per-particle arithmetic identical to the JAX/Pallas path;
+//! * **AOT JAX/Pallas** (`python/compile/`) — lowered to HLO and executed
+//!   by [`crate::runtime`]; the integration tests assert both agree.
+//!
+//! The kernel structure mirrors PIConGPU's main loop: `CurrentReset`,
+//! `MoveAndMark` (field gather + Boris push + position advance),
+//! `ShiftParticles` (frame bookkeeping), `ComputeCurrent` (CIC current
+//! deposition), `FieldSolver` (FDTD-style update). [`kernels`] maps each
+//! onto a group-level [`crate::trace::TraceSource`] whose memory
+//! addresses come from the *live particle state*, so cache behaviour and
+//! bank conflicts are driven by real simulation dynamics.
+
+pub mod config;
+pub mod deposit;
+pub mod fields;
+pub mod kernels;
+pub mod pusher;
+pub mod sim;
+pub mod state;
+
+pub use config::CaseConfig;
+pub use sim::PicSim;
+pub use state::SimState;

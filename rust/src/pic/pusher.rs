@@ -1,0 +1,239 @@
+//! Native `MoveAndMark`: CIC field gather + relativistic Boris push +
+//! position advance with periodic wrap.
+//!
+//! Arithmetic mirrors `python/compile/kernels/pic.py::_push_kernel`
+//! operation-for-operation so the PJRT cross-check holds to f32
+//! tolerance.
+
+use super::config::CaseConfig;
+use super::state::SimState;
+
+/// CIC stencil for one particle: lower cell index + fraction per axis.
+#[inline]
+pub fn cic_stencil(pos: [f32; 3]) -> ([i64; 3], [f32; 3]) {
+    let mut i0 = [0i64; 3];
+    let mut f = [0f32; 3];
+    for c in 0..3 {
+        let g = pos[c] - 0.5;
+        let fl = g.floor();
+        i0[c] = fl as i64;
+        f[c] = g - fl;
+    }
+    (i0, f)
+}
+
+#[inline]
+fn wrap(i: i64, n: usize) -> usize {
+    i.rem_euclid(n as i64) as usize
+}
+
+/// Gather one `[3, nx, ny, nz]` field at `pos` (trilinear, periodic).
+/// Corner iteration order matches the JAX kernel (cx, cy, cz nested).
+pub fn gather(field: &[f32], cfg: &CaseConfig, pos: [f32; 3]) -> [f32; 3] {
+    let (i0, f) = cic_stencil(pos);
+    let mut out = [0f32; 3];
+    for cx in 0..2usize {
+        for cy in 0..2usize {
+            for cz in 0..2usize {
+                let ix = wrap(i0[0] + cx as i64, cfg.nx);
+                let iy = wrap(i0[1] + cy as i64, cfg.ny);
+                let iz = wrap(i0[2] + cz as i64, cfg.nz);
+                let wx = if cx == 1 { f[0] } else { 1.0 - f[0] };
+                let wy = if cy == 1 { f[1] } else { 1.0 - f[1] };
+                let wz = if cz == 1 { f[2] } else { 1.0 - f[2] };
+                let w = wx * wy * wz;
+                for c in 0..3 {
+                    out[c] +=
+                        field[SimState::fidx(cfg, c, ix, iy, iz)] * w;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn cross(a: [f32; 3], b: [f32; 3]) -> [f32; 3] {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+/// Relativistic Boris rotation for one particle.
+pub fn boris(ep: [f32; 3], bp: [f32; 3], u: [f32; 3], qm: f32, dt: f32) -> [f32; 3] {
+    let h = 0.5 * qm * dt;
+    let um = [u[0] + h * ep[0], u[1] + h * ep[1], u[2] + h * ep[2]];
+    let gamma = (1.0 + um[0] * um[0] + um[1] * um[1] + um[2] * um[2])
+        .sqrt();
+    let t = [
+        (h / gamma) * bp[0],
+        (h / gamma) * bp[1],
+        (h / gamma) * bp[2],
+    ];
+    let t2 = t[0] * t[0] + t[1] * t[1] + t[2] * t[2];
+    let s = [
+        2.0 * t[0] / (1.0 + t2),
+        2.0 * t[1] / (1.0 + t2),
+        2.0 * t[2] / (1.0 + t2),
+    ];
+    let up = {
+        let c = cross(um, t);
+        [um[0] + c[0], um[1] + c[1], um[2] + c[2]]
+    };
+    let uplus = {
+        let c = cross(up, s);
+        [um[0] + c[0], um[1] + c[1], um[2] + c[2]]
+    };
+    [uplus[0] + h * ep[0], uplus[1] + h * ep[1], uplus[2] + h * ep[2]]
+}
+
+/// Advance every particle in `state` by one step (in place).
+pub fn move_and_mark(state: &mut SimState) {
+    let cfg = state.cfg.clone();
+    let n = cfg.particles();
+    let dims = [cfg.nx as f32, cfg.ny as f32, cfg.nz as f32];
+    for p in 0..n {
+        let pos = [
+            state.pos[p * 3],
+            state.pos[p * 3 + 1],
+            state.pos[p * 3 + 2],
+        ];
+        let u = [
+            state.mom[p * 3],
+            state.mom[p * 3 + 1],
+            state.mom[p * 3 + 2],
+        ];
+        let ep = gather(&state.e, &cfg, pos);
+        let bp = gather(&state.b, &cfg, pos);
+        let un = boris(ep, bp, u, cfg.qm, cfg.dt);
+        let g =
+            (1.0 + un[0] * un[0] + un[1] * un[1] + un[2] * un[2]).sqrt();
+        for c in 0..3 {
+            let v = un[c] / g;
+            let adv = pos[c] + cfg.dt * v;
+            // match jnp.mod semantics (result has divisor's sign)
+            let wrapped = adv - (adv / dims[c]).floor() * dims[c];
+            state.pos[p * 3 + c] = wrapped;
+            state.mom[p * 3 + c] = un[c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pic::config::CaseConfig;
+    use crate::pic::state::SimState;
+
+    #[test]
+    fn stencil_center_of_cell() {
+        // particle at cell centre (0.5) -> i0 = 0, frac = 0
+        let (i0, f) = cic_stencil([0.5, 1.5, 2.5]);
+        assert_eq!(i0, [0, 1, 2]);
+        assert!(f.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn stencil_wraps_negative() {
+        let (i0, _) = cic_stencil([0.2, 0.2, 0.2]);
+        assert_eq!(i0, [-1, -1, -1]);
+        assert_eq!(wrap(-1, 16), 15);
+    }
+
+    #[test]
+    fn gather_uniform_field_is_exact() {
+        let cfg = CaseConfig::lwfa();
+        let cells = cfg.cells();
+        let mut field = vec![0f32; 3 * cells];
+        field[..cells].fill(2.0); // E_x = 2 everywhere
+        for pos in [[0.1, 0.1, 0.1], [7.9, 3.3, 12.7], [15.99, 15.99, 0.01]] {
+            let g = gather(&field, &cfg, pos);
+            assert!((g[0] - 2.0).abs() < 1e-5, "{g:?}");
+            assert_eq!(g[1], 0.0);
+        }
+    }
+
+    #[test]
+    fn gather_weights_partition_unity() {
+        // linear-in-x field gathers to linear interpolant
+        let cfg = CaseConfig::lwfa();
+        let cells = cfg.cells();
+        let mut field = vec![0f32; 3 * cells];
+        for x in 0..cfg.nx {
+            for y in 0..cfg.ny {
+                for z in 0..cfg.nz {
+                    field[SimState::fidx(&cfg, 0, x, y, z)] =
+                        x as f32;
+                }
+            }
+        }
+        // interior particle at x = 5.0 -> between cells 4 (c=4.5) and 5
+        let g = gather(&field, &cfg, [5.0, 8.5, 8.5]);
+        assert!((g[0] - 4.5).abs() < 1e-5, "{}", g[0]);
+    }
+
+    #[test]
+    fn boris_zero_field_is_identity() {
+        let u = [0.3, -0.2, 0.9];
+        let out = boris([0.0; 3], [0.0; 3], u, -1.0, 0.5);
+        assert_eq!(out, u);
+    }
+
+    #[test]
+    fn boris_pure_b_preserves_magnitude() {
+        let u = [0.5, 0.1, -0.3];
+        let out = boris([0.0; 3], [0.0, 0.0, 2.0], u, -1.0, 0.5);
+        let n0 = (u[0] * u[0] + u[1] * u[1] + u[2] * u[2]).sqrt();
+        let n1 =
+            (out[0] * out[0] + out[1] * out[1] + out[2] * out[2]).sqrt();
+        assert!((n0 - n1).abs() < 1e-5, "{n0} vs {n1}");
+    }
+
+    #[test]
+    fn boris_e_field_accelerates_against_charge() {
+        // electron (qm = -1) in +x E field gains -x momentum
+        let out = boris([1.0, 0.0, 0.0], [0.0; 3], [0.0; 3], -1.0, 0.5);
+        assert!(out[0] < 0.0);
+    }
+
+    #[test]
+    fn move_keeps_positions_in_bounds() {
+        let cfg = CaseConfig::lwfa();
+        let mut st = SimState::init(&cfg, 7);
+        // crank up momenta to force wraps
+        for m in st.mom.iter_mut() {
+            *m *= 100.0;
+        }
+        for _ in 0..3 {
+            move_and_mark(&mut st);
+        }
+        for p in 0..cfg.particles() {
+            for (c, dim) in [cfg.nx, cfg.ny, cfg.nz].iter().enumerate() {
+                let v = st.pos[p * 3 + c];
+                assert!(v >= 0.0 && v < *dim as f32, "p{p} c{c} = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn speed_never_exceeds_c() {
+        let cfg = CaseConfig::lwfa();
+        let mut st = SimState::init(&cfg, 3);
+        for e in st.e.iter_mut() {
+            *e *= 50.0; // violent fields
+        }
+        move_and_mark(&mut st);
+        for p in 0..cfg.particles() {
+            let u = [
+                st.mom[p * 3] as f64,
+                st.mom[p * 3 + 1] as f64,
+                st.mom[p * 3 + 2] as f64,
+            ];
+            let g = (1.0 + u[0] * u[0] + u[1] * u[1] + u[2] * u[2]).sqrt();
+            let v = (u[0] * u[0] + u[1] * u[1] + u[2] * u[2]).sqrt() / g;
+            assert!(v < 1.0, "superluminal particle {p}: v={v}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! The PIC main loop, structured as PIConGPU's kernel sequence.
+
+use super::config::CaseConfig;
+use super::deposit;
+use super::fields;
+use super::pusher;
+use super::state::SimState;
+
+/// A running simulation.
+#[derive(Debug, Clone)]
+pub struct PicSim {
+    pub state: SimState,
+    pub step_count: u32,
+}
+
+/// The kernels of one PIC step, in dispatch order — the kernel names a
+/// profiler sees (Fig. 3's x-axis categories).
+pub const KERNELS: [&str; 5] = [
+    "CurrentReset",
+    "MoveAndMark",
+    "ShiftParticles",
+    "ComputeCurrent",
+    "FieldSolver",
+];
+
+impl PicSim {
+    pub fn new(cfg: &CaseConfig, seed: u64) -> PicSim {
+        PicSim {
+            state: SimState::init(cfg, seed),
+            step_count: 0,
+        }
+    }
+
+    /// One full step: reset J, push, (shift), deposit, field update.
+    pub fn step(&mut self) {
+        self.state.j.fill(0.0); // CurrentReset
+        pusher::move_and_mark(&mut self.state); // MoveAndMark
+        // ShiftParticles: with periodic boundaries and flat particle
+        // storage the wrap already happened inside the pusher; the real
+        // PIConGPU kernel moves particles between supercell frames. The
+        // traced cost lives in kernels.rs.
+        deposit::compute_current(&mut self.state); // ComputeCurrent
+        fields::field_update(&mut self.state); // FieldSolver
+        self.step_count += 1;
+    }
+
+    pub fn run(&mut self, steps: u32) {
+        for _ in 0..steps {
+            self.step();
+        }
+    }
+
+    /// Total energy diagnostic (field + kinetic).
+    pub fn total_energy(&self) -> f64 {
+        self.state.field_energy() + self.state.kinetic_energy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_advance_and_stay_finite() {
+        let mut sim = PicSim::new(&CaseConfig::lwfa(), 1);
+        sim.run(5);
+        assert_eq!(sim.step_count, 5);
+        assert!(sim.state.e.iter().all(|x| x.is_finite()));
+        assert!(sim.state.pos.iter().all(|x| x.is_finite()));
+        assert!(sim.state.mom.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn laser_accelerates_plasma() {
+        let mut sim = PicSim::new(&CaseConfig::lwfa(), 1);
+        let k0 = sim.state.kinetic_energy();
+        sim.run(10);
+        let k1 = sim.state.kinetic_energy();
+        assert!(k1 > 1.5 * k0, "laser should heat particles: {k0} -> {k1}");
+    }
+
+    #[test]
+    fn energy_does_not_explode() {
+        // the CIC deposition is not exactly charge-conserving and the
+        // semi-implicit field update not exactly symplectic, so bounded
+        // numerical heating is expected — an *instability* would grow
+        // exponentially (orders of magnitude in 30 steps)
+        let mut sim = PicSim::new(&CaseConfig::lwfa(), 1);
+        let e0 = sim.total_energy();
+        sim.run(30);
+        let e1 = sim.total_energy();
+        assert!(e1 < 8.0 * e0, "energy blew up: {e0} -> {e1}");
+        assert!(e1 > 0.2 * e0, "energy vanished: {e0} -> {e1}");
+        assert!(e1.is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = PicSim::new(&CaseConfig::lwfa(), 9);
+        let mut b = PicSim::new(&CaseConfig::lwfa(), 9);
+        a.run(3);
+        b.run(3);
+        assert_eq!(a.state.pos, b.state.pos);
+        assert_eq!(a.state.e, b.state.e);
+    }
+
+    #[test]
+    fn tweac_runs_too() {
+        let mut sim = PicSim::new(&CaseConfig::tweac(), 1);
+        sim.run(2);
+        assert!(sim.state.e.iter().all(|x| x.is_finite()));
+    }
+}

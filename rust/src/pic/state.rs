@@ -1,0 +1,257 @@
+//! Simulation state: fields + particles, with the LWFA/TWEAC laser
+//! initialization.
+//!
+//! Memory layout matches the JAX side exactly so buffers round-trip to
+//! the PJRT executables untouched: fields are `[3, nx, ny, nz]` row-major
+//! f32, particles `[n, 3]` row-major f32.
+
+use super::config::CaseConfig;
+use crate::util::Xoshiro256;
+
+#[derive(Debug, Clone)]
+pub struct SimState {
+    pub cfg: CaseConfig,
+    /// E field, `[3, nx, ny, nz]` row-major.
+    pub e: Vec<f32>,
+    /// B field, same layout.
+    pub b: Vec<f32>,
+    /// Positions `[n, 3]`.
+    pub pos: Vec<f32>,
+    /// Momenta (u = gamma*v) `[n, 3]`.
+    pub mom: Vec<f32>,
+    /// Current density J, `[3, nx, ny, nz]` (scratch, rebuilt each step).
+    pub j: Vec<f32>,
+}
+
+impl SimState {
+    /// Field linear index for component `c` at cell `(x, y, z)`.
+    #[inline]
+    pub fn fidx(cfg: &CaseConfig, c: usize, x: usize, y: usize, z: usize) -> usize {
+        ((c * cfg.nx + x) * cfg.ny + y) * cfg.nz + z
+    }
+
+    /// Flattened cell id `(x*ny + y)*nz + z` — matches the deposition
+    /// kernel's cell indexing on the JAX side.
+    #[inline]
+    pub fn cell_id(cfg: &CaseConfig, x: usize, y: usize, z: usize) -> usize {
+        (x * cfg.ny + y) * cfg.nz + z
+    }
+
+    /// Initialize the case: laser pulse(s) in the fields, a quiet-start
+    /// uniform plasma with small thermal momentum in the particles.
+    /// Deterministic per (case, seed).
+    pub fn init(cfg: &CaseConfig, seed: u64) -> SimState {
+        let cells = cfg.cells();
+        let n = cfg.particles();
+        let mut st = SimState {
+            cfg: cfg.clone(),
+            e: vec![0.0; 3 * cells],
+            b: vec![0.0; 3 * cells],
+            pos: vec![0.0; n * 3],
+            mom: vec![0.0; n * 3],
+            j: vec![0.0; 3 * cells],
+        };
+        match cfg.name.as_str() {
+            "tweac" => st.init_tweac_laser(),
+            _ => st.init_lwfa_laser(),
+        }
+        st.init_particles(seed);
+        st
+    }
+
+    /// LWFA: one Gaussian pulse traveling along +x, linearly polarized in
+    /// y (E_y, B_z), centred in the left quarter of the box.
+    fn init_lwfa_laser(&mut self) {
+        let cfg = self.cfg.clone();
+        let (cx, cy, cz) =
+            (cfg.nx as f32 * 0.25, cfg.ny as f32 * 0.5, cfg.nz as f32 * 0.5);
+        let w = cfg.nx as f32 * 0.08; // pulse waist (cells)
+        let k = 2.0 * std::f32::consts::PI / 4.0; // 4-cell wavelength
+        let a0 = 0.5; // normalized amplitude
+        for x in 0..cfg.nx {
+            for y in 0..cfg.ny {
+                for z in 0..cfg.nz {
+                    let (fx, fy, fz) =
+                        (x as f32 + 0.5, y as f32 + 0.5, z as f32 + 0.5);
+                    let r2 = (fx - cx).powi(2)
+                        + (fy - cy).powi(2)
+                        + (fz - cz).powi(2);
+                    let env = a0 * (-r2 / (2.0 * w * w * 4.0)).exp();
+                    let phase = (k * fx).sin();
+                    let val = env * phase;
+                    self.e[Self::fidx(&cfg, 1, x, y, z)] = val;
+                    self.b[Self::fidx(&cfg, 2, x, y, z)] = val;
+                }
+            }
+        }
+    }
+
+    /// TWEAC: two pulses crossing at a shallow angle in the x–y plane
+    /// (the "traveling-wave" geometry of Debus et al. 2019, miniaturized).
+    fn init_tweac_laser(&mut self) {
+        let cfg = self.cfg.clone();
+        let w = cfg.nx as f32 * 0.08;
+        let k = 2.0 * std::f32::consts::PI / 4.0;
+        let a0 = 0.35;
+        // pulse centres, symmetric about the mid-plane
+        let c1 = (cfg.nx as f32 * 0.25, cfg.ny as f32 * 0.35);
+        let c2 = (cfg.nx as f32 * 0.25, cfg.ny as f32 * 0.65);
+        let cz = cfg.nz as f32 * 0.5;
+        for x in 0..cfg.nx {
+            for y in 0..cfg.ny {
+                for z in 0..cfg.nz {
+                    let (fx, fy, fz) =
+                        (x as f32 + 0.5, y as f32 + 0.5, z as f32 + 0.5);
+                    let mut ey = 0.0f32;
+                    let mut bz = 0.0f32;
+                    for (sgn, (px, py)) in
+                        [(1.0f32, c1), (-1.0f32, c2)]
+                    {
+                        let r2 = (fx - px).powi(2)
+                            + (fy - py).powi(2)
+                            + (fz - cz).powi(2);
+                        let env =
+                            a0 * (-r2 / (2.0 * w * w * 4.0)).exp();
+                        // crossed propagation: phase advances along
+                        // x ± 0.25 y
+                        let phase = (k * (fx + sgn * 0.25 * fy)).sin();
+                        ey += env * phase;
+                        bz += env * phase * sgn;
+                    }
+                    self.e[Self::fidx(&cfg, 1, x, y, z)] = ey;
+                    self.b[Self::fidx(&cfg, 2, x, y, z)] = bz;
+                }
+            }
+        }
+    }
+
+    /// Quiet start: `ppc` particles per cell at deterministic jittered
+    /// offsets, Maxwellian-ish momenta at temperature `0.02 mc`.
+    fn init_particles(&mut self, seed: u64) {
+        let cfg = self.cfg.clone();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut p = 0usize;
+        for x in 0..cfg.nx {
+            for y in 0..cfg.ny {
+                for z in 0..cfg.nz {
+                    for _ in 0..cfg.ppc {
+                        self.pos[p * 3] =
+                            x as f32 + rng.next_f32().clamp(0.01, 0.99);
+                        self.pos[p * 3 + 1] =
+                            y as f32 + rng.next_f32().clamp(0.01, 0.99);
+                        self.pos[p * 3 + 2] =
+                            z as f32 + rng.next_f32().clamp(0.01, 0.99);
+                        for c in 0..3 {
+                            self.mom[p * 3 + c] =
+                                0.02 * rng.normal() as f32;
+                        }
+                        p += 1;
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(p, cfg.particles());
+    }
+
+    /// Total electromagnetic field energy (diagnostic).
+    pub fn field_energy(&self) -> f64 {
+        let e2: f64 =
+            self.e.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let b2: f64 =
+            self.b.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        0.5 * (e2 + b2)
+    }
+
+    /// Total particle kinetic energy: sum (gamma - 1).
+    pub fn kinetic_energy(&self) -> f64 {
+        let n = self.cfg.particles();
+        let mut total = 0.0f64;
+        for p in 0..n {
+            let ux = self.mom[p * 3] as f64;
+            let uy = self.mom[p * 3 + 1] as f64;
+            let uz = self.mom[p * 3 + 2] as f64;
+            total += (1.0 + ux * ux + uy * uy + uz * uz).sqrt() - 1.0;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic() {
+        let cfg = CaseConfig::lwfa();
+        let a = SimState::init(&cfg, 42);
+        let b = SimState::init(&cfg, 42);
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.e, b.e);
+        let c = SimState::init(&cfg, 43);
+        assert_ne!(a.pos, c.pos);
+    }
+
+    #[test]
+    fn particles_start_inside_their_cells() {
+        let cfg = CaseConfig::lwfa();
+        let st = SimState::init(&cfg, 1);
+        for p in 0..cfg.particles() {
+            for (c, dim) in [cfg.nx, cfg.ny, cfg.nz].iter().enumerate() {
+                let v = st.pos[p * 3 + c];
+                assert!(v >= 0.0 && v < *dim as f32, "p{p} c{c} = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn laser_puts_energy_in_fields() {
+        let st = SimState::init(&CaseConfig::lwfa(), 1);
+        assert!(st.field_energy() > 1.0, "{}", st.field_energy());
+        // polarization: E_y and B_z only
+        let cfg = &st.cfg;
+        let ex_energy: f64 = (0..cfg.cells())
+            .map(|i| (st.e[i] as f64).powi(2))
+            .sum();
+        assert_eq!(ex_energy, 0.0, "E_x must be empty at t=0");
+    }
+
+    #[test]
+    fn tweac_has_two_pulses() {
+        let st = SimState::init(&CaseConfig::tweac(), 1);
+        let cfg = &st.cfg;
+        // energy density peaks near both pulse centres
+        let probe = |x: usize, y: usize| {
+            let z = cfg.nz / 2;
+            (st.e[SimState::fidx(cfg, 1, x, y, z)] as f64).abs()
+        };
+        let y1 = (cfg.ny as f32 * 0.35) as usize;
+        let y2 = (cfg.ny as f32 * 0.65) as usize;
+        let x = (cfg.nx as f32 * 0.25) as usize;
+        let edge = probe(cfg.nx - 1, cfg.ny - 1);
+        assert!(probe(x, y1) > 10.0 * (edge + 1e-9));
+        assert!(probe(x, y2) > 10.0 * (edge + 1e-9));
+    }
+
+    #[test]
+    fn cold_plasma_kinetic_energy_small() {
+        let st = SimState::init(&CaseConfig::lwfa(), 1);
+        let per_particle =
+            st.kinetic_energy() / st.cfg.particles() as f64;
+        // thermal 0.02 mc -> (gamma-1) ~ 6e-4 on average
+        assert!(per_particle < 5e-3, "{per_particle}");
+        assert!(per_particle > 1e-5, "{per_particle}");
+    }
+
+    #[test]
+    fn layout_matches_jax_row_major() {
+        let cfg = CaseConfig::lwfa();
+        // component stride = nx*ny*nz, x stride = ny*nz, z stride = 1
+        assert_eq!(SimState::fidx(&cfg, 0, 0, 0, 1), 1);
+        assert_eq!(SimState::fidx(&cfg, 0, 0, 1, 0), cfg.nz);
+        assert_eq!(SimState::fidx(&cfg, 0, 1, 0, 0), cfg.ny * cfg.nz);
+        assert_eq!(
+            SimState::fidx(&cfg, 1, 0, 0, 0),
+            cfg.nx * cfg.ny * cfg.nz
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Profiling-tool front-ends: `rocprof-sim` and `nvprof-sim`.
+//!
+//! A [`ProfileSession`] replays kernels on a simulated GPU (one pass per
+//! dispatch through trace stats + memory hierarchy + timing model) and
+//! the two tool front-ends render the session the way each vendor's
+//! profiler would: rocprof-style per-dispatch CSV with `FETCH_SIZE` /
+//! `WRITE_SIZE` / `SQ_INSTS_VALU` / `SQ_INSTS_SALU`, and nvprof-style
+//! per-kernel metric summaries (with kernel-replay semantics — see
+//! [`nvprof_tool::NvprofTool::replay_passes`]).
+
+pub mod nvprof_tool;
+pub mod rocprof_tool;
+pub mod session;
+
+pub use nvprof_tool::{NvprofReport, NvprofTool};
+pub use rocprof_tool::{RocprofReport, RocprofTool};
+pub use session::{KernelAggregate, ProfileSession};

@@ -1,0 +1,352 @@
+//! IRM assembly: ceilings + achieved points for one kernel on one GPU.
+
+use super::equations as eq;
+use crate::arch::{GpuSpec, Vendor};
+use crate::profiler::{NvprofReport, RocprofReport};
+
+/// Horizontal-axis unit of an IRM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XUnit {
+    /// Instructions per byte — the paper's AMD IRMs (Figs 5–7). The
+    /// bandwidth ceilings stay in GB/s.
+    InstPerByte,
+    /// Instructions per 32B transaction — Ding & Williams' NVIDIA IRM
+    /// (Fig. 4). Bandwidth ceilings re-scale to GTXN/s.
+    InstPerTxn,
+}
+
+impl XUnit {
+    pub fn axis_label(self) -> &'static str {
+        match self {
+            XUnit::InstPerByte => {
+                "Instruction Intensity (instructions/byte)"
+            }
+            XUnit::InstPerTxn => {
+                "Instruction Intensity (instructions/transaction)"
+            }
+        }
+    }
+
+    pub fn bw_label(self) -> &'static str {
+        match self {
+            XUnit::InstPerByte => "GB/s",
+            XUnit::InstPerTxn => "GTXN/s",
+        }
+    }
+}
+
+/// One sloped memory ceiling: achieved-GIPS = bandwidth × intensity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemCeiling {
+    pub label: String,
+    /// In GB/s for [`XUnit::InstPerByte`], GTXN/s for
+    /// [`XUnit::InstPerTxn`] (so `y = bw * x` works in GIPS directly).
+    pub bw: f64,
+}
+
+/// One achieved point (a kernel measured against one memory level).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IrmPoint {
+    pub label: String,
+    pub intensity: f64,
+    pub gips: f64,
+}
+
+/// A complete instruction roofline model, ready to render.
+#[derive(Debug, Clone)]
+pub struct InstructionRoofline {
+    pub title: String,
+    pub gpu: String,
+    pub x_unit: XUnit,
+    pub peak_gips: f64,
+    pub ceilings: Vec<MemCeiling>,
+    pub points: Vec<IrmPoint>,
+}
+
+impl InstructionRoofline {
+    /// AMD IRM from a rocprof-sim report (§4.2 recipe, Figs 6–7):
+    /// instructions via Eq. 1, achieved GIPS via Eq. 4, intensity via
+    /// Eq. 2; single HBM ceiling from the BabelStream-measured bandwidth.
+    pub fn from_rocprof(
+        spec: &GpuSpec,
+        report: &RocprofReport,
+        measured_bw_gbs: f64,
+    ) -> InstructionRoofline {
+        assert_eq!(spec.vendor, Vendor::Amd);
+        // per-invocation semantics: runtime is a per-dispatch mean, so
+        // the counters must be per-dispatch too (the paper reads single
+        // rocprof dispatch rows)
+        let inv = report.invocations.max(1);
+        let insts = report.total.instructions(spec) / inv;
+        let runtime = report.mean_duration_s;
+        let gips = eq::eq4_achieved_gips(insts, spec.group_size, runtime);
+        let intensity = eq::eq2_intensity_performance(
+            insts,
+            spec.group_size,
+            report.total.bytes_read() / inv as f64,
+            report.total.bytes_written() / inv as f64,
+            runtime,
+        );
+        InstructionRoofline {
+            title: format!("{} — {}", report.kernel, spec.name),
+            gpu: spec.name.to_string(),
+            x_unit: XUnit::InstPerByte,
+            peak_gips: spec.peak_gips(),
+            ceilings: vec![MemCeiling {
+                label: format!("HBM {:.1} GB/s (BabelStream)", measured_bw_gbs),
+                bw: measured_bw_gbs,
+            }],
+            points: vec![IrmPoint {
+                label: "HBM".to_string(),
+                intensity,
+                gips,
+            }],
+        }
+    }
+
+    /// NVIDIA IRM from an nvprof-sim report in transaction units
+    /// (Fig. 4): L1/L2/HBM points at inst/txn, ceilings in GTXN/s.
+    pub fn from_nvprof_txn(
+        spec: &GpuSpec,
+        report: &NvprofReport,
+    ) -> InstructionRoofline {
+        assert_eq!(spec.vendor, Vendor::Nvidia);
+        let inv = report.invocations.max(1);
+        let insts = report.total.inst_executed / inv;
+        let runtime = report.mean_duration_s;
+        let gips = eq::eq4_achieved_gips(insts, spec.group_size, runtime);
+        let mk = |label: &str, txns: u64| IrmPoint {
+            label: label.to_string(),
+            intensity: eq::intensity_per_txn(
+                insts,
+                spec.group_size,
+                (txns / inv).max(1),
+            ),
+            gips,
+        };
+        InstructionRoofline {
+            title: format!("{} — {}", report.kernel, spec.name),
+            gpu: spec.name.to_string(),
+            x_unit: XUnit::InstPerTxn,
+            peak_gips: spec.peak_gips(),
+            ceilings: vec![
+                MemCeiling {
+                    label: "L1".into(),
+                    bw: spec.l1_peak_bw().gtxn_s(),
+                },
+                MemCeiling {
+                    label: "L2".into(),
+                    bw: spec.l2_peak_bw().gtxn_s(),
+                },
+                MemCeiling {
+                    label: "HBM".into(),
+                    bw: spec.hbm.stream_bw().gtxn_s(),
+                },
+            ],
+            points: vec![
+                mk("L1", report.total.l1_transactions().max(1)),
+                mk("L2", report.total.l2_transactions().max(1)),
+                mk("HBM", report.total.dram_transactions().max(1)),
+            ],
+        }
+    }
+
+    /// NVIDIA IRM in instructions/byte, HBM only (Fig. 5) — the paper's
+    /// "equal comparison" variant against the AMD plots.
+    pub fn from_nvprof_bytes(
+        spec: &GpuSpec,
+        report: &NvprofReport,
+    ) -> InstructionRoofline {
+        assert_eq!(spec.vendor, Vendor::Nvidia);
+        let inv = report.invocations.max(1);
+        let insts = report.total.inst_executed / inv;
+        let runtime = report.mean_duration_s;
+        let gips = eq::eq4_achieved_gips(insts, spec.group_size, runtime);
+        let intensity = eq::eq2_intensity_performance(
+            insts,
+            spec.group_size,
+            report.total.dram_read_bytes() / inv as f64,
+            report.total.dram_write_bytes() / inv as f64,
+            runtime,
+        );
+        InstructionRoofline {
+            title: format!(
+                "{} — {} (inst/byte)",
+                report.kernel, spec.name
+            ),
+            gpu: spec.name.to_string(),
+            x_unit: XUnit::InstPerByte,
+            peak_gips: spec.peak_gips(),
+            ceilings: vec![MemCeiling {
+                label: format!(
+                    "HBM {:.0} GB/s",
+                    spec.hbm.stream_bw().gbs()
+                ),
+                bw: spec.hbm.stream_bw().gbs(),
+            }],
+            points: vec![IrmPoint {
+                label: "HBM".into(),
+                intensity,
+                gips,
+            }],
+        }
+    }
+
+    /// The knee of a ceiling: intensity where the sloped ceiling meets
+    /// the compute roof.
+    pub fn knee(&self, ceiling: &MemCeiling) -> f64 {
+        self.peak_gips / ceiling.bw
+    }
+
+    /// Attainable GIPS at intensity `x` under the *lowest* memory ceiling
+    /// (the roofline envelope).
+    pub fn attainable(&self, x: f64) -> f64 {
+        let mem = self
+            .ceilings
+            .iter()
+            .map(|c| c.bw * x)
+            .fold(f64::INFINITY, f64::min);
+        mem.min(self.peak_gips)
+    }
+
+    /// Is the point left of every knee (memory-bound per this model)?
+    pub fn memory_bound(&self, p: &IrmPoint) -> bool {
+        self.ceilings
+            .iter()
+            .any(|c| p.intensity < self.knee(c))
+    }
+
+    /// Merge several single-GPU IRMs into one comparison plot (the
+    /// paper's Figs 6–7 show MI60 and MI100 on one chart). Ceilings and
+    /// points get the GPU name prefixed.
+    pub fn merged(title: &str, parts: &[InstructionRoofline]) -> Self {
+        assert!(!parts.is_empty());
+        let x_unit = parts[0].x_unit;
+        assert!(parts.iter().all(|p| p.x_unit == x_unit));
+        let mut ceilings = Vec::new();
+        let mut points = Vec::new();
+        for p in parts {
+            for c in &p.ceilings {
+                ceilings.push(MemCeiling {
+                    label: format!("{} {}", p.gpu, c.label),
+                    bw: c.bw,
+                });
+            }
+            for pt in &p.points {
+                points.push(IrmPoint {
+                    label: format!("{} {}", p.gpu, pt.label),
+                    ..pt.clone()
+                });
+            }
+        }
+        InstructionRoofline {
+            title: title.to_string(),
+            gpu: parts
+                .iter()
+                .map(|p| p.gpu.clone())
+                .collect::<Vec<_>>()
+                .join("+"),
+            x_unit,
+            peak_gips: parts
+                .iter()
+                .map(|p| p.peak_gips)
+                .fold(0.0, f64::max),
+            ceilings,
+            points,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{mi100, mi60, v100};
+    use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
+    use crate::trace::synth::StreamTrace;
+
+    fn amd_irm() -> InstructionRoofline {
+        let spec = mi100();
+        let mut s = ProfileSession::new(spec.clone());
+        s.profile(&StreamTrace::babelstream("copy", 1 << 16));
+        let r = &RocprofTool::reports(&s)[0];
+        InstructionRoofline::from_rocprof(
+            &spec,
+            r,
+            spec.hbm.stream_bw().gbs(),
+        )
+    }
+
+    #[test]
+    fn amd_irm_has_single_hbm_ceiling() {
+        let irm = amd_irm();
+        assert_eq!(irm.x_unit, XUnit::InstPerByte);
+        assert_eq!(irm.ceilings.len(), 1);
+        assert_eq!(irm.points.len(), 1);
+        assert!((irm.peak_gips - 180.24).abs() < 1e-9);
+        assert!(irm.points[0].gips > 0.0);
+    }
+
+    #[test]
+    fn nvidia_irm_has_three_levels() {
+        let spec = v100();
+        let mut s = ProfileSession::new(spec.clone());
+        s.profile(&StreamTrace::babelstream("copy", 1 << 16));
+        let r = &NvprofTool::default().reports(&s)[0];
+        let irm = InstructionRoofline::from_nvprof_txn(&spec, r);
+        assert_eq!(irm.ceilings.len(), 3);
+        assert_eq!(irm.points.len(), 3);
+        // L1 intensity <= L2 <= HBM intensity is NOT guaranteed in
+        // general, but transactions shrink down the hierarchy for a
+        // streaming kernel, so intensities grow:
+        assert!(irm.points[0].intensity <= irm.points[2].intensity);
+    }
+
+    #[test]
+    fn attainable_envelope() {
+        let irm = amd_irm();
+        let bw = irm.ceilings[0].bw;
+        // far left: memory-limited
+        assert!((irm.attainable(0.001) - bw * 0.001).abs() < 1e-9);
+        // far right: compute-limited
+        assert!((irm.attainable(1e6) - irm.peak_gips).abs() < 1e-9);
+        // knee continuity
+        let knee = irm.knee(&irm.ceilings[0]);
+        assert!((irm.attainable(knee) - irm.peak_gips).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merged_prefixes_gpu_names() {
+        let a = amd_irm();
+        let spec60 = mi60();
+        let mut s = ProfileSession::new(spec60.clone());
+        s.profile(&StreamTrace::babelstream("copy", 1 << 16));
+        let r = &RocprofTool::reports(&s)[0];
+        let b = InstructionRoofline::from_rocprof(
+            &spec60,
+            r,
+            spec60.hbm.stream_bw().gbs(),
+        );
+        let m = InstructionRoofline::merged("fig6", &[a, b]);
+        assert_eq!(m.ceilings.len(), 2);
+        assert!(m.points.iter().any(|p| p.label.starts_with("MI100")));
+        assert!(m.points.iter().any(|p| p.label.starts_with("MI60")));
+        assert!((m.peak_gips - 180.24).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_bound_classification() {
+        let irm = amd_irm();
+        let left = IrmPoint {
+            label: "x".into(),
+            intensity: 1e-4,
+            gips: 0.1,
+        };
+        let right = IrmPoint {
+            label: "y".into(),
+            intensity: 1e4,
+            gips: 1.0,
+        };
+        assert!(irm.memory_bound(&left));
+        assert!(!irm.memory_bound(&right));
+    }
+}

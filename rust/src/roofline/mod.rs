@@ -1,0 +1,15 @@
+//! The instruction roofline model (IRM) — the paper's contribution.
+//!
+//! * [`equations`] — Eq. 1–4 exactly as §4.2 defines them, plus the
+//!   NVIDIA-side formulas from Ding & Williams that §7.1 uses;
+//! * [`irm`] — assembling ceilings + achieved points into a model, from
+//!   either profiler's report;
+//! * [`plot_svg`] / [`plot_ascii`] — rendering (the paper's Figs 4–7).
+
+pub mod equations;
+pub mod irm;
+pub mod plot_ascii;
+pub mod plot_svg;
+
+pub use equations::*;
+pub use irm::{InstructionRoofline, IrmPoint, MemCeiling, XUnit};

@@ -1,0 +1,174 @@
+//! Terminal rendering of an IRM (log–log), for `rocline roofline` and the
+//! quickstart example.
+
+use super::irm::InstructionRoofline;
+
+const COLS: usize = 72;
+const ROWS: usize = 22;
+
+/// Render a compact log–log ASCII roofline.
+pub fn render_ascii(irm: &InstructionRoofline) -> String {
+    // bounds
+    let mut xs: Vec<f64> = irm.points.iter().map(|p| p.intensity).collect();
+    for c in &irm.ceilings {
+        xs.push(irm.peak_gips / c.bw);
+    }
+    let (x_min, x_max) = bounds(&xs);
+    let mut ys: Vec<f64> = irm.points.iter().map(|p| p.gips).collect();
+    ys.push(irm.peak_gips);
+    for c in &irm.ceilings {
+        ys.push(c.bw * x_min);
+    }
+    let (y_min, y_max) = bounds(&ys);
+
+    let x_of = |col: usize| {
+        let t = col as f64 / (COLS - 1) as f64;
+        10f64.powf(x_min.log10() + t * (x_max.log10() - x_min.log10()))
+    };
+    let row_of = |y: f64| {
+        let t = (y.log10() - y_min.log10())
+            / (y_max.log10() - y_min.log10());
+        let r = ((1.0 - t) * (ROWS - 1) as f64).round();
+        r.clamp(0.0, (ROWS - 1) as f64) as usize
+    };
+
+    let mut grid = vec![vec![' '; COLS]; ROWS];
+    // envelope
+    for col in 0..COLS {
+        let x = x_of(col);
+        let y = irm.attainable(x);
+        if y >= y_min && y <= y_max {
+            let r = row_of(y);
+            grid[r][col] = if (y - irm.peak_gips).abs() < 1e-9 {
+                '='
+            } else {
+                '/'
+            };
+        }
+    }
+    // points
+    for p in &irm.points {
+        let x = p.intensity.clamp(x_min, x_max);
+        let col = (((x.log10() - x_min.log10())
+            / (x_max.log10() - x_min.log10()))
+            * (COLS - 1) as f64)
+            .round() as usize;
+        let r = row_of(p.gips.clamp(y_min, y_max));
+        grid[r][col.min(COLS - 1)] = '●';
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{}\n", irm.title));
+    out.push_str(&format!(
+        "peak {:.2} GIPS | x: {} | ceilings: {}\n",
+        irm.peak_gips,
+        irm.x_unit.axis_label(),
+        irm.ceilings
+            .iter()
+            .map(|c| format!("{} {:.1} {}", c.label, c.bw,
+                             irm.x_unit.bw_label()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    ));
+    out.push_str(&format!("{:>9.1e} ┐\n", y_max));
+    for row in &grid {
+        out.push_str("          │");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9.1e} └{}\n           {:<9.1e}{:>width$.1e}\n",
+        y_min,
+        "─".repeat(COLS),
+        x_min,
+        x_max,
+        width = COLS - 9
+    ));
+    for p in &irm.points {
+        out.push_str(&format!(
+            "  ● {}: intensity {:.4}, {:.3} GIPS ({})\n",
+            p.label,
+            p.intensity,
+            p.gips,
+            if irm.memory_bound(p) {
+                "memory-bound region"
+            } else {
+                "compute-bound region"
+            }
+        ));
+    }
+    out
+}
+
+fn bounds(values: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in values {
+        if v.is_finite() && v > 0.0 {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() {
+        return (1e-3, 1e3);
+    }
+    let lo = 10f64.powf(lo.log10().floor() - 1.0);
+    let hi = 10f64.powf(hi.log10().ceil() + 0.0);
+    if lo == hi {
+        (lo / 10.0, hi * 10.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roofline::irm::{IrmPoint, MemCeiling, XUnit};
+
+    fn sample() -> InstructionRoofline {
+        InstructionRoofline {
+            title: "t".into(),
+            gpu: "MI60".into(),
+            x_unit: XUnit::InstPerByte,
+            peak_gips: 115.2,
+            ceilings: vec![MemCeiling {
+                label: "HBM".into(),
+                bw: 809.0,
+            }],
+            points: vec![IrmPoint {
+                label: "HBM".into(),
+                intensity: 0.398,
+                gips: 0.62,
+            }],
+        }
+    }
+
+    #[test]
+    fn renders_envelope_and_point() {
+        let a = render_ascii(&sample());
+        assert!(a.contains('●'), "point marker missing:\n{a}");
+        assert!(a.contains('='), "compute roof missing");
+        assert!(a.contains('/'), "memory slope missing");
+        assert!(a.contains("peak 115.20 GIPS"));
+    }
+
+    #[test]
+    fn classifies_bound_region() {
+        // MI60's point (0.398 inst/byte) sits right of the knee
+        // (115.2/809 ≈ 0.142): compute region, far below the roof
+        let a = render_ascii(&sample());
+        assert!(a.contains("compute-bound region"));
+        let mut irm = sample();
+        irm.points[0].intensity = 0.01; // left of the knee
+        let b = render_ascii(&irm);
+        assert!(b.contains("memory-bound region"));
+    }
+
+    #[test]
+    fn line_count_is_stable() {
+        let a = render_ascii(&sample());
+        // title + meta + top + ROWS + bottom(2) + 1 point line
+        assert_eq!(a.lines().count(), 3 + ROWS + 2 + 1);
+    }
+}

@@ -1,0 +1,293 @@
+//! SVG rendering of an IRM — the log–log plots of the paper's Figs 4–7.
+//!
+//! Hand-rolled SVG (no plotting crate offline): sloped memory ceilings
+//! clipped at the compute roof, achieved points as labeled markers,
+//! decade grid lines on both axes.
+
+use super::irm::{InstructionRoofline, IrmPoint};
+
+const W: f64 = 820.0;
+const H: f64 = 560.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 30.0;
+const MT: f64 = 40.0;
+const MB: f64 = 60.0;
+
+struct LogAxis {
+    min: f64,
+    max: f64,
+    lo_px: f64,
+    hi_px: f64,
+}
+
+impl LogAxis {
+    fn to_px(&self, v: f64) -> f64 {
+        let t = (v.log10() - self.min.log10())
+            / (self.max.log10() - self.min.log10());
+        self.lo_px + t * (self.hi_px - self.lo_px)
+    }
+
+    fn decades(&self) -> Vec<f64> {
+        let lo = self.min.log10().ceil() as i32;
+        let hi = self.max.log10().floor() as i32;
+        (lo..=hi).map(|e| 10f64.powi(e)).collect()
+    }
+}
+
+fn nice_bounds(values: &[f64], pad: f64) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in values {
+        if v.is_finite() && v > 0.0 {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() {
+        return (1e-3, 1e3);
+    }
+    (10f64.powf(lo.log10().floor() - pad), 10f64.powf(hi.log10().ceil() + pad))
+}
+
+/// Render the IRM to a standalone SVG string.
+pub fn render_svg(irm: &InstructionRoofline) -> String {
+    let mut xs: Vec<f64> =
+        irm.points.iter().map(|p| p.intensity).collect();
+    for c in &irm.ceilings {
+        xs.push(irm.knee(c));
+    }
+    let (x_min, x_max) = nice_bounds(&xs, 1.0);
+    let mut ys: Vec<f64> = irm.points.iter().map(|p| p.gips).collect();
+    ys.push(irm.peak_gips);
+    ys.push(irm.ceilings.iter().map(|c| c.bw * x_min).fold(
+        f64::INFINITY,
+        f64::min,
+    ));
+    let (y_min, y_max) = nice_bounds(&ys, 0.0);
+
+    let xaxis = LogAxis {
+        min: x_min,
+        max: x_max,
+        lo_px: ML,
+        hi_px: W - MR,
+    };
+    let yaxis = LogAxis {
+        min: y_min,
+        max: y_max,
+        lo_px: H - MB,
+        hi_px: MT,
+    };
+
+    let mut s = String::with_capacity(16 * 1024);
+    s.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{W}\" \
+         height=\"{H}\" viewBox=\"0 0 {W} {H}\" font-family=\"sans-serif\">\n"
+    ));
+    s.push_str(&format!(
+        "<rect width=\"{W}\" height=\"{H}\" fill=\"white\"/>\n"
+    ));
+    s.push_str(&format!(
+        "<text x=\"{}\" y=\"22\" font-size=\"16\" text-anchor=\"middle\">{}</text>\n",
+        W / 2.0,
+        xml_escape(&irm.title)
+    ));
+
+    // grid
+    for d in xaxis.decades() {
+        let px = xaxis.to_px(d);
+        s.push_str(&format!(
+            "<line x1=\"{px:.1}\" y1=\"{MT}\" x2=\"{px:.1}\" y2=\"{}\" \
+             stroke=\"#ddd\"/>\n",
+            H - MB
+        ));
+        s.push_str(&format!(
+            "<text x=\"{px:.1}\" y=\"{}\" font-size=\"11\" \
+             text-anchor=\"middle\">{}</text>\n",
+            H - MB + 16.0,
+            fmt_pow(d)
+        ));
+    }
+    for d in yaxis.decades() {
+        let py = yaxis.to_px(d);
+        s.push_str(&format!(
+            "<line x1=\"{ML}\" y1=\"{py:.1}\" x2=\"{}\" y2=\"{py:.1}\" \
+             stroke=\"#ddd\"/>\n",
+            W - MR
+        ));
+        s.push_str(&format!(
+            "<text x=\"{}\" y=\"{:.1}\" font-size=\"11\" \
+             text-anchor=\"end\">{}</text>\n",
+            ML - 6.0,
+            py + 4.0,
+            fmt_pow(d)
+        ));
+    }
+
+    // axis labels
+    s.push_str(&format!(
+        "<text x=\"{}\" y=\"{}\" font-size=\"13\" text-anchor=\"middle\">{}</text>\n",
+        W / 2.0,
+        H - 16.0,
+        xml_escape(irm.x_unit.axis_label())
+    ));
+    s.push_str(&format!(
+        "<text x=\"18\" y=\"{}\" font-size=\"13\" text-anchor=\"middle\" \
+         transform=\"rotate(-90 18 {})\">Performance (GIPS)</text>\n",
+        H / 2.0,
+        H / 2.0
+    ));
+
+    // compute roof
+    let peak_py = yaxis.to_px(irm.peak_gips.clamp(y_min, y_max));
+    s.push_str(&format!(
+        "<line x1=\"{ML}\" y1=\"{peak_py:.1}\" x2=\"{}\" \
+         y2=\"{peak_py:.1}\" stroke=\"black\" stroke-width=\"2\"/>\n",
+        W - MR
+    ));
+    s.push_str(&format!(
+        "<text x=\"{}\" y=\"{:.1}\" font-size=\"12\">Peak {:.2} GIPS</text>\n",
+        W - MR - 150.0,
+        peak_py - 6.0,
+        irm.peak_gips
+    ));
+
+    // memory ceilings: y = bw * x from x_min up to the knee
+    let palette = ["#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#8c564b"];
+    for (i, c) in irm.ceilings.iter().enumerate() {
+        let color = palette[i % palette.len()];
+        let knee = (irm.peak_gips / c.bw).clamp(x_min, x_max);
+        let y0 = (c.bw * x_min).clamp(y_min, y_max);
+        let x1 = knee;
+        let y1 = (c.bw * knee).clamp(y_min, y_max);
+        s.push_str(&format!(
+            "<line x1=\"{:.1}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" \
+             stroke=\"{color}\" stroke-width=\"2\"/>\n",
+            xaxis.to_px(x_min),
+            yaxis.to_px(y0),
+            xaxis.to_px(x1),
+            yaxis.to_px(y1),
+        ));
+        s.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" font-size=\"11\" \
+             fill=\"{color}\">{} {:.1} {}</text>\n",
+            xaxis.to_px(x_min) + 6.0,
+            yaxis.to_px(y0) - 6.0,
+            xml_escape(&c.label),
+            c.bw,
+            irm.x_unit.bw_label(),
+        ));
+    }
+
+    // achieved points
+    for (i, p) in irm.points.iter().enumerate() {
+        let color = palette[i % palette.len()];
+        push_point(&mut s, &xaxis, &yaxis, p, color);
+    }
+
+    s.push_str("</svg>\n");
+    s
+}
+
+fn push_point(
+    s: &mut String,
+    xaxis: &LogAxis,
+    yaxis: &LogAxis,
+    p: &IrmPoint,
+    color: &str,
+) {
+    let px = xaxis.to_px(p.intensity.clamp(xaxis.min, xaxis.max));
+    let py = yaxis.to_px(p.gips.clamp(yaxis.min, yaxis.max));
+    s.push_str(&format!(
+        "<circle cx=\"{px:.1}\" cy=\"{py:.1}\" r=\"5\" fill=\"{color}\"/>\n"
+    ));
+    s.push_str(&format!(
+        "<text x=\"{:.1}\" y=\"{:.1}\" font-size=\"11\">{} \
+         ({:.3}, {:.3})</text>\n",
+        px + 8.0,
+        py - 6.0,
+        xml_escape(&p.label),
+        p.intensity,
+        p.gips
+    ));
+}
+
+fn fmt_pow(v: f64) -> String {
+    if (0.01..10000.0).contains(&v) {
+        if v >= 1.0 {
+            format!("{v:.0}")
+        } else {
+            format!("{v}")
+        }
+    } else {
+        format!("1e{}", v.log10().round() as i32)
+    }
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roofline::irm::{MemCeiling, XUnit};
+
+    fn sample() -> InstructionRoofline {
+        InstructionRoofline {
+            title: "ComputeCurrent — MI100".into(),
+            gpu: "MI100".into(),
+            x_unit: XUnit::InstPerByte,
+            peak_gips: 180.24,
+            ceilings: vec![MemCeiling {
+                label: "HBM".into(),
+                bw: 933.4,
+            }],
+            points: vec![IrmPoint {
+                label: "HBM".into(),
+                intensity: 1.863,
+                gips: 2.856,
+            }],
+        }
+    }
+
+    #[test]
+    fn svg_is_well_formed_enough() {
+        let svg = render_svg(&sample());
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<circle").count(), 1);
+        assert!(svg.contains("Peak 180.24 GIPS"));
+        assert!(svg.contains("ComputeCurrent"));
+    }
+
+    #[test]
+    fn escapes_xml_in_labels() {
+        let mut irm = sample();
+        irm.title = "a<b & c>d".into();
+        let svg = render_svg(&irm);
+        assert!(svg.contains("a&lt;b &amp; c&gt;d"));
+        assert!(!svg.contains("a<b "));
+    }
+
+    #[test]
+    fn handles_many_ceilings() {
+        let mut irm = sample();
+        irm.ceilings = (0..6)
+            .map(|i| MemCeiling {
+                label: format!("c{i}"),
+                bw: 100.0 * (i + 1) as f64,
+            })
+            .collect();
+        let svg = render_svg(&irm);
+        assert!(svg.matches("stroke-width=\"2\"").count() >= 7);
+    }
+
+    #[test]
+    fn pow_formatting() {
+        assert_eq!(fmt_pow(1.0), "1");
+        assert_eq!(fmt_pow(100.0), "100");
+        assert_eq!(fmt_pow(0.1), "0.1");
+        assert_eq!(fmt_pow(1e-4), "1e-4");
+        assert_eq!(fmt_pow(1e6), "1e6");
+    }
+}

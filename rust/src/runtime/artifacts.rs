@@ -1,0 +1,223 @@
+//! AOT artifact discovery: parse `artifacts/manifest.txt`.
+//!
+//! The manifest is the contract between `python/compile/aot.py` and the
+//! Rust runtime: entry names, argument shapes/dtypes, output arities, and
+//! the physics constants baked into each case's HLO.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::pic::CaseConfig;
+
+/// One argument's shape/dtype, e.g. `float32[8192,3]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn parse(s: &str) -> Option<ArgSpec> {
+        let (dtype, rest) = s.split_once('[')?;
+        let dims_str = rest.strip_suffix(']')?;
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.parse().ok())
+                .collect::<Option<Vec<usize>>>()?
+        };
+        Some(ArgSpec {
+            dtype: dtype.to_string(),
+            dims,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Dims as i64 for `Literal::reshape`.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub outs: usize,
+    pub args: Vec<ArgSpec>,
+    /// Science case this entry belongs to, if any.
+    pub case: Option<String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, EntryMeta>,
+    pub cases: HashMap<String, CaseConfig>,
+}
+
+impl Artifacts {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Artifacts> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Artifacts> {
+        let mut out = Artifacts {
+            dir: dir.to_path_buf(),
+            ..Default::default()
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(cfg) = CaseConfig::from_manifest_line(line) {
+                out.cases.insert(cfg.name.clone(), cfg);
+            } else if let Some(rest) = line.strip_prefix("entry ") {
+                let mut kv = HashMap::new();
+                for part in rest.split_whitespace() {
+                    if let Some((k, v)) = part.split_once('=') {
+                        kv.insert(k, v);
+                    }
+                }
+                let name = kv
+                    .get("name")
+                    .ok_or_else(|| anyhow::anyhow!("entry without name"))?
+                    .to_string();
+                let file = dir.join(
+                    kv.get("file")
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("entry {name} without file")
+                        })?,
+                );
+                let outs: usize = kv
+                    .get("outs")
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("entry {name}: bad outs")
+                    })?;
+                let args = kv
+                    .get("args")
+                    .map(|a| {
+                        a.split(';')
+                            .map(ArgSpec::parse)
+                            .collect::<Option<Vec<_>>>()
+                    })
+                    .unwrap_or(Some(Vec::new()))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("entry {name}: bad args")
+                    })?;
+                out.entries.insert(
+                    name.clone(),
+                    EntryMeta {
+                        name,
+                        file,
+                        outs,
+                        args,
+                        case: kv.get("case").map(|s| s.to_string()),
+                    },
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&EntryMeta> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no AOT entry '{name}' in {} (have: {})",
+                self.dir.display(),
+                self.names().join(", ")
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+case name=lwfa nx=16 ny=16 nz=16 ppc=2 dt=0.5 qm=-1.0 qw=-0.05 steps=64
+entry name=pic_step_lwfa file=pic_step_lwfa.hlo.txt outs=4 \
+args=float32[3,16,16,16];float32[3,16,16,16];float32[8192,3];float32[8192,3] case=lwfa
+stream n=1048576 scalar=0.4
+entry name=stream_copy file=stream_copy.hlo.txt outs=1 args=float32[1048576]
+";
+
+    #[test]
+    fn parses_entries_and_cases() {
+        let a =
+            Artifacts::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(a.entries.len(), 2);
+        assert_eq!(a.cases.len(), 1);
+        let e = a.entry("pic_step_lwfa").unwrap();
+        assert_eq!(e.outs, 4);
+        assert_eq!(e.args.len(), 4);
+        assert_eq!(e.args[0].dims, vec![3, 16, 16, 16]);
+        assert_eq!(e.case.as_deref(), Some("lwfa"));
+        assert_eq!(a.cases["lwfa"].particles(), 8192);
+    }
+
+    #[test]
+    fn argspec_parse() {
+        let s = ArgSpec::parse("float32[8192,3]").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.elements(), 24576);
+        assert_eq!(s.dims_i64(), vec![8192, 3]);
+        assert!(ArgSpec::parse("garbage").is_none());
+        assert!(ArgSpec::parse("f32[1,x]").is_none());
+    }
+
+    #[test]
+    fn scalar_argspec() {
+        let s = ArgSpec::parse("float32[]").unwrap();
+        assert_eq!(s.dims.len(), 0);
+        assert_eq!(s.elements(), 1);
+    }
+
+    #[test]
+    fn missing_entry_error_lists_names() {
+        let a =
+            Artifacts::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let err = a.entry("nope").unwrap_err().to_string();
+        assert!(err.contains("pic_step_lwfa"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration hook: when `make artifacts` has run, validate the
+        // real manifest agrees with the built-in case configs
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let a = Artifacts::load(&dir).unwrap();
+        assert!(a.entries.len() >= 13, "{:?}", a.names());
+        assert_eq!(a.cases["lwfa"], CaseConfig::lwfa());
+        assert_eq!(a.cases["tweac"], CaseConfig::tweac());
+    }
+}

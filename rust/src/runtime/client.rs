@@ -1,0 +1,155 @@
+//! The PJRT execution wrapper: compile cache + typed f32 execution.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::artifacts::{Artifacts, EntryMeta};
+
+/// A PJRT CPU client plus a compile cache over the AOT artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Runtime> {
+        let artifacts = Artifacts::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifacts,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) one entry point.
+    fn executable(
+        &mut self,
+        name: &str,
+    ) -> anyhow::Result<(&xla::PjRtLoadedExecutable, EntryMeta)> {
+        let meta = self.artifacts.entry(name)?.clone();
+        if !self.cache.contains_key(name) {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| {
+                anyhow::anyhow!("parse {}: {e:?}", meta.file.display())
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok((self.cache.get(name).unwrap(), meta))
+    }
+
+    /// Execute an entry with f32 buffers; returns the tuple elements as
+    /// f32 vectors (all our entries produce f32 outputs; `outs` comes
+    /// from the manifest).
+    pub fn call_f32(
+        &mut self,
+        name: &str,
+        args: &[&[f32]],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let (exe, meta) = self.executable(name)?;
+        anyhow::ensure!(
+            args.len() == meta.args.len(),
+            "{name}: got {} args, manifest says {}",
+            args.len(),
+            meta.args.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (buf, spec)) in
+            args.iter().zip(meta.args.iter()).enumerate()
+        {
+            anyhow::ensure!(
+                buf.len() == spec.elements(),
+                "{name} arg {i}: got {} elements, manifest says {} \
+                 ({:?})",
+                buf.len(),
+                spec.elements(),
+                spec
+            );
+            let lit = xla::Literal::vec1(buf);
+            let lit = if spec.dims.len() > 1 {
+                lit.reshape(&spec.dims_i64())
+                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == meta.outs,
+            "{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            meta.outs
+        );
+        parts
+            .into_iter()
+            .map(|p| {
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Time one call (after an untimed warmup call), returning
+    /// (outputs, seconds). Used by the PJRT BabelStream backend.
+    pub fn time_call_f32(
+        &mut self,
+        name: &str,
+        args: &[&[f32]],
+        iters: u32,
+    ) -> anyhow::Result<(Vec<Vec<f32>>, f64)> {
+        let _ = self.call_f32(name, args)?; // warmup + compile
+        let t0 = std::time::Instant::now();
+        let mut out = Vec::new();
+        for _ in 0..iters {
+            out = self.call_f32(name, args)?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        Ok((out, dt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Full PJRT round-trip tests live in `rust/tests/pjrt_roundtrip.rs`
+    //! (they need `make artifacts` to have run). Here: path-independent
+    //! error behaviour only.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_dir_is_a_clean_error() {
+        let err = Runtime::new(Path::new("/nonexistent/artifacts"))
+            .err()
+            .expect("must fail");
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

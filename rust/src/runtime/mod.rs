@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. The interchange format is HLO **text**
+//! (see `python/compile/aot.py` for why serialized protos are rejected
+//! by xla_extension 0.5.1).
+//!
+//! Python never runs here: once `make artifacts` has produced
+//! `artifacts/*.hlo.txt` + `manifest.txt`, the binary is self-contained.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArgSpec, Artifacts, EntryMeta};
+pub use client::Runtime;

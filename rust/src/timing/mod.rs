@@ -1,0 +1,15 @@
+//! Kernel runtime model.
+//!
+//! A roofline-style latency estimate: a kernel's duration is the maximum
+//! of its issue-limited, HBM-limited and LDS-limited times, plus a fixed
+//! launch overhead, scaled by achievable occupancy. The HBM term blends
+//! the per-GPU stream/scatter calibration points by the coalescing
+//! efficiency the memory simulator measured — this is where the paper's
+//! observed cross-GPU runtime ordering (MI100 < V100 < MI60 on PIC
+//! kernels) emerges from.
+
+pub mod model;
+pub mod occupancy;
+
+pub use model::{kernel_time, KernelCost, TimeBreakdown};
+pub use occupancy::occupancy_factor;

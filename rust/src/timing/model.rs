@@ -1,0 +1,177 @@
+//! The roofline-style kernel-time estimator.
+
+use super::occupancy::occupancy_factor;
+use crate::arch::GpuSpec;
+use crate::memsim::MemTraffic;
+use crate::trace::TraceStats;
+use crate::util::units::Seconds;
+
+/// The aggregates the estimator needs, derivable from one replay.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelCost {
+    /// Total issued group-level instructions (all classes).
+    pub group_insts: u64,
+    /// Bytes moved at the HBM level.
+    pub hbm_bytes: u64,
+    /// Fraction of memory traffic from scattered access, in [0, 1].
+    pub scatter_fraction: f64,
+    /// Serialized LDS passes (bank-conflict adjusted).
+    pub lds_passes: u64,
+    /// Atomic transactions (serialize at the L2 atomic units).
+    pub atomic_txns: u64,
+    /// Resident groups (for occupancy).
+    pub groups: u64,
+}
+
+impl KernelCost {
+    /// Build from trace + memory-simulation results.
+    pub fn from_run(stats: &TraceStats, traffic: &MemTraffic) -> Self {
+        KernelCost {
+            group_insts: stats.total_group_insts(),
+            hbm_bytes: traffic.hbm_bytes(),
+            scatter_fraction: traffic.scatter_fraction(),
+            lds_passes: 0, // caller adds LDS stats when present
+            atomic_txns: traffic.atomic_txn,
+            groups: stats.groups,
+        }
+    }
+}
+
+/// Per-term decomposition of the estimate (for reports and ablations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeBreakdown {
+    pub issue: Seconds,
+    pub memory: Seconds,
+    pub lds: Seconds,
+    pub atomic: Seconds,
+    pub launch: Seconds,
+    pub total: Seconds,
+}
+
+impl TimeBreakdown {
+    /// Which term dominates (the "bound" a roofline analysis would name).
+    pub fn bound(&self) -> &'static str {
+        let terms = [
+            (self.issue.0, "issue"),
+            (self.memory.0, "memory"),
+            (self.lds.0, "lds"),
+            (self.atomic.0, "atomic"),
+        ];
+        terms
+            .iter()
+            .cloned()
+            .fold((f64::NEG_INFINITY, "issue"), |acc, t| {
+                if t.0 > acc.0 {
+                    t
+                } else {
+                    acc
+                }
+            })
+            .1
+    }
+}
+
+/// Estimate one kernel dispatch's duration on `spec`.
+pub fn kernel_time(spec: &GpuSpec, cost: &KernelCost) -> TimeBreakdown {
+    let occ = occupancy_factor(spec, cost.groups).max(1e-3);
+    let issue_rate = spec.issue_rate() * occ;
+    let issue = Seconds(cost.group_insts as f64 / issue_rate);
+
+    let bw = spec.hbm.effective_bw(cost.scatter_fraction);
+    let memory = Seconds(cost.hbm_bytes as f64 / bw.0);
+
+    // LDS: one serialized pass per cycle per CU (aggregate).
+    let lds_rate =
+        spec.compute_units as f64 * spec.frequency_ghz * 1.0e9 * occ;
+    let lds = Seconds(cost.lds_passes as f64 / lds_rate);
+
+    // atomics serialize at the L2 atomic units
+    let atomic_rate =
+        spec.atomic_ops_per_cycle * spec.frequency_ghz * 1.0e9;
+    let atomic = Seconds(cost.atomic_txns as f64 / atomic_rate);
+
+    let launch = Seconds::from_us(spec.launch_overhead_us);
+    let total = Seconds(
+        launch.0 + issue.0.max(memory.0).max(lds.0).max(atomic.0),
+    );
+    TimeBreakdown {
+        issue,
+        memory,
+        lds,
+        atomic,
+        launch,
+        total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{mi100, mi60, v100};
+
+    fn saturated(insts: u64, bytes: u64, scatter: f64) -> KernelCost {
+        KernelCost {
+            group_insts: insts,
+            hbm_bytes: bytes,
+            scatter_fraction: scatter,
+            lds_passes: 0,
+            atomic_txns: 0,
+            groups: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn pure_compute_is_issue_bound() {
+        let spec = mi100();
+        let c = saturated(1_000_000_000, 1000, 0.0);
+        let t = kernel_time(&spec, &c);
+        assert_eq!(t.bound(), "issue");
+        // 1e9 insts at 180.24e9/s ≈ 5.548 ms
+        assert!((t.issue.ms() - 5.548).abs() < 0.01, "{}", t.issue.ms());
+    }
+
+    #[test]
+    fn pure_streaming_is_memory_bound() {
+        let spec = mi100();
+        let c = saturated(1000, 1 << 30, 0.0);
+        let t = kernel_time(&spec, &c);
+        assert_eq!(t.bound(), "memory");
+        // 1 GiB at 933.36 GB/s ≈ 1.150 ms
+        assert!((t.memory.ms() - 1.150).abs() < 0.01, "{}", t.memory.ms());
+    }
+
+    #[test]
+    fn scatter_slows_memory_term() {
+        let spec = mi60();
+        let coalesced = kernel_time(&spec, &saturated(0, 1 << 30, 0.0));
+        let scattered = kernel_time(&spec, &saturated(0, 1 << 30, 1.0));
+        assert!(scattered.memory.0 > 5.0 * coalesced.memory.0);
+    }
+
+    #[test]
+    fn launch_overhead_floors_tiny_kernels() {
+        let spec = v100();
+        let c = saturated(1, 32, 0.0);
+        let t = kernel_time(&spec, &c);
+        assert!(t.total.us() >= spec.launch_overhead_us);
+    }
+
+    #[test]
+    fn mi60_slower_than_mi100_on_scattered_workload() {
+        // the paper's Table 1 ordering on PIC access patterns
+        let c = saturated(10_000_000, 1 << 28, 0.8);
+        let t60 = kernel_time(&mi60(), &c);
+        let t100 = kernel_time(&mi100(), &c);
+        assert!(t60.total.0 > 2.0 * t100.total.0);
+    }
+
+    #[test]
+    fn low_occupancy_inflates_issue_time() {
+        let spec = mi100();
+        let mut c = saturated(1_000_000, 0, 0.0);
+        let full = kernel_time(&spec, &c);
+        c.groups = 12; // 10% occupancy
+        let starved = kernel_time(&spec, &c);
+        assert!(starved.issue.0 > 5.0 * full.issue.0);
+    }
+}

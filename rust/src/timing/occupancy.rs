@@ -1,0 +1,57 @@
+//! Occupancy: how much of the device a launch can actually keep busy.
+//!
+//! Small launches cannot fill every scheduler slot; the issue-rate term
+//! of the timing model is scaled by this factor. We model the first-order
+//! effect only: a device with `CU × schedulers` issue slots needs at
+//! least ~`slots × LATENCY_GROUPS` resident groups to hide ALU latency.
+
+use crate::arch::GpuSpec;
+
+/// Groups per scheduler slot needed to keep the issue pipes busy. One
+/// resident group per slot is the first-order model; latency hiding
+/// beyond that is folded into the calibrated efficiency constants.
+const LATENCY_GROUPS: f64 = 1.0;
+
+/// Fraction of peak issue rate achievable with `groups` resident
+/// warps/wavefronts, in (0, 1].
+pub fn occupancy_factor(spec: &GpuSpec, groups: u64) -> f64 {
+    let slots = (spec.compute_units * spec.schedulers_per_cu) as f64;
+    let needed = slots * LATENCY_GROUPS;
+    if groups == 0 {
+        return 0.0;
+    }
+    (groups as f64 / needed).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{mi100, v100};
+
+    #[test]
+    fn saturated_launch_is_full_occupancy() {
+        let spec = mi100();
+        assert_eq!(occupancy_factor(&spec, 1_000_000), 1.0);
+    }
+
+    #[test]
+    fn tiny_launch_is_fractional() {
+        let spec = mi100(); // 120 slots -> needs 120 groups
+        let f = occupancy_factor(&spec, 12);
+        assert!((f - 0.1).abs() < 1e-12, "{f}");
+    }
+
+    #[test]
+    fn zero_groups_zero_occupancy() {
+        assert_eq!(occupancy_factor(&v100(), 0), 0.0);
+    }
+
+    #[test]
+    fn v100_needs_more_groups_than_mi100() {
+        // V100 has 320 scheduler slots vs MI100's 120
+        let g = 100;
+        assert!(
+            occupancy_factor(&v100(), g) < occupancy_factor(&mi100(), g)
+        );
+    }
+}

@@ -1,0 +1,199 @@
+//! Event types for group-level traces.
+
+/// Maximum lanes per lockstep group (AMD wavefront = 64; NVIDIA warps use
+/// the first 32 lanes).
+pub const MAX_LANES: usize = 64;
+
+/// Identity of the issuing group within the kernel launch. Used by the
+/// memory hierarchy to pick the L1 instance (`group_id % instances`) —
+/// the same round-robin CU assignment real schedulers approximate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupCtx {
+    pub group_id: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemKind {
+    Read,
+    Write,
+    /// Read-modify-write (PIC current deposition uses these heavily).
+    Atomic,
+}
+
+/// One group-level global-memory instruction with per-lane addresses.
+#[derive(Debug, Clone)]
+pub struct MemAccess {
+    pub kind: MemKind,
+    /// Per-lane byte addresses (only the first `group_size` entries of
+    /// which `active` bits are set are meaningful).
+    pub addrs: [u64; MAX_LANES],
+    /// Active-lane bitmask (bit i = lane i executes the access).
+    pub active: u64,
+    /// Bytes accessed per lane (4 for f32, 8 for f64/pointers).
+    pub bytes_per_lane: u8,
+}
+
+impl MemAccess {
+    /// A fully-active unit-stride access starting at `base`
+    /// (the perfectly-coalesced case).
+    pub fn contiguous(
+        kind: MemKind,
+        base: u64,
+        lanes: u32,
+        bytes_per_lane: u8,
+    ) -> MemAccess {
+        let mut addrs = [0u64; MAX_LANES];
+        for (i, a) in addrs.iter_mut().enumerate().take(lanes as usize) {
+            *a = base + i as u64 * bytes_per_lane as u64;
+        }
+        MemAccess {
+            kind,
+            addrs,
+            active: mask(lanes),
+            bytes_per_lane,
+        }
+    }
+
+    /// Strided access: lane i touches `base + i * stride`.
+    pub fn strided(
+        kind: MemKind,
+        base: u64,
+        lanes: u32,
+        stride: u64,
+        bytes_per_lane: u8,
+    ) -> MemAccess {
+        let mut addrs = [0u64; MAX_LANES];
+        for (i, a) in addrs.iter_mut().enumerate().take(lanes as usize) {
+            *a = base + i as u64 * stride;
+        }
+        MemAccess {
+            kind,
+            addrs,
+            active: mask(lanes),
+            bytes_per_lane,
+        }
+    }
+
+    /// Overwrite this access in place (hot-path reuse: avoids zeroing
+    /// the 512-byte address array on every event).
+    #[inline]
+    pub fn set_gather(&mut self, kind: MemKind, lane_addrs: &[u64]) {
+        debug_assert!(lane_addrs.len() <= MAX_LANES);
+        self.kind = kind;
+        self.addrs[..lane_addrs.len()].copy_from_slice(lane_addrs);
+        self.active = mask(lane_addrs.len() as u32);
+    }
+
+    /// Build from an explicit per-lane address slice.
+    pub fn gather(kind: MemKind, lane_addrs: &[u64], bytes_per_lane: u8) -> MemAccess {
+        assert!(lane_addrs.len() <= MAX_LANES);
+        let mut addrs = [0u64; MAX_LANES];
+        addrs[..lane_addrs.len()].copy_from_slice(lane_addrs);
+        MemAccess {
+            kind,
+            addrs,
+            active: mask(lane_addrs.len() as u32),
+            bytes_per_lane,
+        }
+    }
+
+    pub fn active_lanes(&self) -> u32 {
+        self.active.count_ones()
+    }
+
+    /// Total bytes requested by active lanes.
+    pub fn requested_bytes(&self) -> u64 {
+        self.active_lanes() as u64 * self.bytes_per_lane as u64
+    }
+
+    /// Iterate the addresses of active lanes.
+    pub fn active_addrs(&self) -> impl Iterator<Item = u64> + '_ {
+        (0..MAX_LANES)
+            .filter(move |i| self.active >> i & 1 == 1)
+            .map(move |i| self.addrs[i])
+    }
+}
+
+/// One group-level LDS / shared-memory instruction.
+#[derive(Debug, Clone)]
+pub struct LdsAccess {
+    pub kind: MemKind,
+    /// Per-lane LDS byte addresses (bank = (addr / 4) % banks).
+    pub addrs: [u64; MAX_LANES],
+    pub active: u64,
+    pub bytes_per_lane: u8,
+}
+
+impl LdsAccess {
+    pub fn from_lane_addrs(
+        kind: MemKind,
+        lane_addrs: &[u64],
+        bytes_per_lane: u8,
+    ) -> LdsAccess {
+        assert!(lane_addrs.len() <= MAX_LANES);
+        let mut addrs = [0u64; MAX_LANES];
+        addrs[..lane_addrs.len()].copy_from_slice(lane_addrs);
+        LdsAccess {
+            kind,
+            addrs,
+            active: mask(lane_addrs.len() as u32),
+            bytes_per_lane,
+        }
+    }
+
+    pub fn active_lanes(&self) -> u32 {
+        self.active.count_ones()
+    }
+}
+
+/// All-ones mask of width `lanes`.
+pub fn mask(lanes: u32) -> u64 {
+    if lanes >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_widths() {
+        assert_eq!(mask(0), 0);
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(32), 0xFFFF_FFFF);
+        assert_eq!(mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn contiguous_addresses() {
+        let a = MemAccess::contiguous(MemKind::Read, 1000, 32, 4);
+        assert_eq!(a.active_lanes(), 32);
+        assert_eq!(a.addrs[0], 1000);
+        assert_eq!(a.addrs[31], 1000 + 31 * 4);
+        assert_eq!(a.requested_bytes(), 128);
+    }
+
+    #[test]
+    fn strided_addresses() {
+        let a = MemAccess::strided(MemKind::Write, 0, 4, 256, 4);
+        let addrs: Vec<u64> = a.active_addrs().collect();
+        assert_eq!(addrs, vec![0, 256, 512, 768]);
+    }
+
+    #[test]
+    fn gather_partial_group() {
+        let a = MemAccess::gather(MemKind::Read, &[8, 16, 8], 4);
+        assert_eq!(a.active_lanes(), 3);
+        assert_eq!(a.active_addrs().collect::<Vec<_>>(), vec![8, 16, 8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gather_too_many_lanes_panics() {
+        let addrs = vec![0u64; 65];
+        MemAccess::gather(MemKind::Read, &addrs, 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! Kernel execution traces at warp/wavefront granularity.
+//!
+//! A [`TraceSource`] replays a kernel's execution as a stream of
+//! group-level events into an [`EventSink`]; the memory simulator, counter
+//! engines and timing model are all sinks over the *same* stream, which is
+//! what lets one workload be "profiled" under both vendors' semantics.
+//!
+//! Events are streamed (never materialized) so multi-million-event
+//! workloads run in constant memory — this is the simulator's hot path
+//! (see EXPERIMENTS.md §Perf).
+
+pub mod event;
+pub mod sink;
+pub mod stats;
+pub mod synth;
+
+pub use event::{GroupCtx, LdsAccess, MemAccess, MemKind, MAX_LANES};
+pub use sink::{EventSink, FanoutSink, NullSink};
+pub use stats::TraceStats;
+
+use crate::arch::InstClass;
+
+/// A replayable kernel execution.
+pub trait TraceSource {
+    /// Kernel name as a profiler would report it.
+    fn name(&self) -> &str;
+
+    /// Replay the kernel with threads packed into lockstep groups of
+    /// `group_size` (32 for NVIDIA warps, 64 for AMD wavefronts), calling
+    /// the sink for every instruction/memory event in issue order.
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink);
+}
+
+/// Convenience: replay into a fresh [`TraceStats`] and return it.
+pub fn collect_stats(src: &dyn TraceSource, group_size: u32) -> TraceStats {
+    let mut stats = TraceStats::default();
+    src.replay(group_size, &mut stats);
+    stats
+}
+
+/// Helper for trace generators: iterate `threads` ids in groups of
+/// `group_size`, giving each group a [`GroupCtx`] and the slice of thread
+/// ids it contains (the final group may be partial — its mask reflects
+/// that).
+pub fn for_each_group<F>(threads: u64, group_size: u32, mut f: F)
+where
+    F: FnMut(&GroupCtx, std::ops::Range<u64>),
+{
+    let gs = group_size as u64;
+    let n_groups = threads.div_ceil(gs);
+    for g in 0..n_groups {
+        let lo = g * gs;
+        let hi = (lo + gs).min(threads);
+        let ctx = GroupCtx { group_id: g };
+        f(&ctx, lo..hi);
+    }
+}
+
+/// Emit a batch of arithmetic instructions for a group.
+pub fn emit_arith(
+    sink: &mut dyn EventSink,
+    ctx: &GroupCtx,
+    valu: u64,
+    salu: u64,
+) {
+    if valu > 0 {
+        sink.on_inst(ctx, InstClass::ValuArith, valu);
+    }
+    if salu > 0 {
+        sink.on_inst(ctx, InstClass::Salu, salu);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_iteration_covers_all_threads() {
+        let mut seen = 0u64;
+        let mut groups = 0u64;
+        for_each_group(130, 64, |ctx, range| {
+            assert_eq!(ctx.group_id, groups);
+            groups += 1;
+            seen += range.end - range.start;
+        });
+        assert_eq!(seen, 130);
+        assert_eq!(groups, 3); // 64 + 64 + 2
+    }
+
+    #[test]
+    fn exact_multiple_has_no_partial_group() {
+        let mut sizes = Vec::new();
+        for_each_group(128, 32, |_, r| sizes.push(r.end - r.start));
+        assert_eq!(sizes, vec![32, 32, 32, 32]);
+    }
+}

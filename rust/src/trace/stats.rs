@@ -1,0 +1,205 @@
+//! Aggregate statistics over a trace — the raw material for both vendors'
+//! counter engines.
+
+use super::event::{GroupCtx, LdsAccess, MemAccess, MemKind};
+use super::sink::EventSink;
+use crate::arch::InstClass;
+
+/// Per-class instruction issue counts plus memory request totals,
+/// all at group (warp/wavefront) granularity.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceStats {
+    /// Issued group-level instructions per class (memory instructions are
+    /// counted under their own classes).
+    pub inst: ClassCounts,
+    /// Group-level memory read instructions.
+    pub mem_reads: u64,
+    /// Group-level memory write instructions.
+    pub mem_writes: u64,
+    /// Group-level atomics.
+    pub mem_atomics: u64,
+    /// Total bytes requested by active lanes (reads).
+    pub bytes_read_requested: u64,
+    /// Total bytes requested by active lanes (writes + atomics).
+    pub bytes_written_requested: u64,
+    /// LDS instructions.
+    pub lds_ops: u64,
+    /// Total active lanes across all instructions (for divergence stats).
+    pub active_lane_sum: u64,
+    /// Highest group id seen + 1 (= number of groups launched).
+    pub groups: u64,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassCounts {
+    counts: [u64; InstClass::ALL.len()],
+}
+
+impl ClassCounts {
+    fn idx(class: InstClass) -> usize {
+        InstClass::ALL.iter().position(|c| *c == class).unwrap()
+    }
+
+    pub fn add(&mut self, class: InstClass, n: u64) {
+        self.counts[Self::idx(class)] += n;
+    }
+
+    pub fn get(&self, class: InstClass) -> u64 {
+        self.counts[Self::idx(class)]
+    }
+
+    /// Sum over all classes — nvprof's `inst_executed` semantics.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// rocProf compute-only semantics: VALU instructions.
+    pub fn valu(&self) -> u64 {
+        InstClass::ALL
+            .iter()
+            .filter(|c| c.is_valu())
+            .map(|c| self.get(*c))
+            .sum()
+    }
+
+    /// rocProf compute-only semantics: SALU instructions.
+    pub fn salu(&self) -> u64 {
+        InstClass::ALL
+            .iter()
+            .filter(|c| c.is_salu())
+            .map(|c| self.get(*c))
+            .sum()
+    }
+}
+
+impl TraceStats {
+    pub fn merge(&mut self, other: &TraceStats) {
+        for (a, b) in self
+            .inst
+            .counts
+            .iter_mut()
+            .zip(other.inst.counts.iter())
+        {
+            *a += b;
+        }
+        self.mem_reads += other.mem_reads;
+        self.mem_writes += other.mem_writes;
+        self.mem_atomics += other.mem_atomics;
+        self.bytes_read_requested += other.bytes_read_requested;
+        self.bytes_written_requested += other.bytes_written_requested;
+        self.lds_ops += other.lds_ops;
+        self.active_lane_sum += other.active_lane_sum;
+        self.groups = self.groups.max(other.groups);
+    }
+
+    /// Total group-level instructions of every kind (incl. memory + LDS).
+    pub fn total_group_insts(&self) -> u64 {
+        self.inst.total()
+    }
+}
+
+impl EventSink for TraceStats {
+    fn on_inst(&mut self, ctx: &GroupCtx, class: InstClass, count: u64) {
+        self.inst.add(class, count);
+        self.groups = self.groups.max(ctx.group_id + 1);
+    }
+
+    fn on_mem(&mut self, ctx: &GroupCtx, access: &MemAccess) {
+        let class = match access.kind {
+            MemKind::Read => InstClass::GlobalLoad,
+            MemKind::Write => InstClass::GlobalStore,
+            MemKind::Atomic => InstClass::GlobalAtomic,
+        };
+        self.inst.add(class, 1);
+        self.active_lane_sum += access.active_lanes() as u64;
+        match access.kind {
+            MemKind::Read => {
+                self.mem_reads += 1;
+                self.bytes_read_requested += access.requested_bytes();
+            }
+            MemKind::Write => {
+                self.mem_writes += 1;
+                self.bytes_written_requested += access.requested_bytes();
+            }
+            MemKind::Atomic => {
+                self.mem_atomics += 1;
+                // an atomic reads and writes its word
+                self.bytes_read_requested += access.requested_bytes();
+                self.bytes_written_requested += access.requested_bytes();
+            }
+        }
+        self.groups = self.groups.max(ctx.group_id + 1);
+    }
+
+    fn on_lds(&mut self, ctx: &GroupCtx, access: &LdsAccess) {
+        let class = match access.kind {
+            MemKind::Read => InstClass::LdsLoad,
+            _ => InstClass::LdsStore,
+        };
+        self.inst.add(class, 1);
+        self.lds_ops += 1;
+        self.groups = self.groups.max(ctx.group_id + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(id: u64) -> GroupCtx {
+        GroupCtx { group_id: id }
+    }
+
+    #[test]
+    fn class_counts_accumulate() {
+        let mut c = ClassCounts::default();
+        c.add(InstClass::ValuArith, 5);
+        c.add(InstClass::ValuSpecial, 2);
+        c.add(InstClass::Salu, 3);
+        c.add(InstClass::Branch, 1);
+        assert_eq!(c.valu(), 7);
+        assert_eq!(c.salu(), 3);
+        assert_eq!(c.total(), 11);
+    }
+
+    #[test]
+    fn mem_events_count_as_instructions() {
+        let mut s = TraceStats::default();
+        let a = MemAccess::contiguous(MemKind::Read, 0, 64, 4);
+        s.on_mem(&ctx(0), &a);
+        assert_eq!(s.inst.get(InstClass::GlobalLoad), 1);
+        assert_eq!(s.mem_reads, 1);
+        assert_eq!(s.bytes_read_requested, 256);
+        assert_eq!(s.total_group_insts(), 1);
+    }
+
+    #[test]
+    fn atomics_count_read_and_write_bytes() {
+        let mut s = TraceStats::default();
+        let a = MemAccess::contiguous(MemKind::Atomic, 0, 32, 4);
+        s.on_mem(&ctx(0), &a);
+        assert_eq!(s.bytes_read_requested, 128);
+        assert_eq!(s.bytes_written_requested, 128);
+        assert_eq!(s.mem_atomics, 1);
+    }
+
+    #[test]
+    fn groups_tracks_max_id() {
+        let mut s = TraceStats::default();
+        s.on_inst(&ctx(7), InstClass::ValuArith, 1);
+        s.on_inst(&ctx(3), InstClass::ValuArith, 1);
+        assert_eq!(s.groups, 8);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = TraceStats::default();
+        let mut b = TraceStats::default();
+        a.on_inst(&ctx(0), InstClass::ValuArith, 10);
+        b.on_inst(&ctx(5), InstClass::Salu, 4);
+        a.merge(&b);
+        assert_eq!(a.inst.valu(), 10);
+        assert_eq!(a.inst.salu(), 4);
+        assert_eq!(a.groups, 6);
+    }
+}

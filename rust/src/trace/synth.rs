@@ -1,0 +1,238 @@
+//! Synthetic trace generators: parameterized access patterns used by the
+//! microbenchmarks (gpumembench analog), the memory-simulator tests, and
+//! the "Global Memory Walls" construction of Fig. 4 (Ding & Williams'
+//! strided-access diagnostic the paper applies in §7.1).
+
+use super::event::{MemAccess, MemKind};
+use super::sink::EventSink;
+use super::{for_each_group, TraceSource};
+use crate::arch::InstClass;
+use crate::util::Xoshiro256;
+
+/// A pure streaming kernel: every thread reads `reads` arrays and writes
+/// `writes` arrays at its own index (BabelStream's access pattern).
+#[derive(Debug, Clone)]
+pub struct StreamTrace {
+    pub name: String,
+    /// Elements (threads).
+    pub n: u64,
+    pub reads: u32,
+    pub writes: u32,
+    /// VALU instructions per thread-group between memory ops.
+    pub valu_per_group: u64,
+    pub bytes_per_lane: u8,
+}
+
+impl StreamTrace {
+    /// The five BabelStream kernels.
+    pub fn babelstream(op: &str, n: u64) -> StreamTrace {
+        let (reads, writes, valu) = match op {
+            "copy" => (1, 1, 1),
+            "mul" => (1, 1, 2),
+            "add" => (2, 1, 2),
+            "triad" => (2, 1, 3),
+            "dot" => (2, 0, 4),
+            _ => panic!("unknown stream op {op}"),
+        };
+        StreamTrace {
+            name: format!("stream_{op}"),
+            n,
+            reads,
+            writes,
+            valu_per_group: valu,
+            bytes_per_lane: 4,
+        }
+    }
+
+    /// Total bytes this kernel moves (requested).
+    pub fn bytes(&self) -> u64 {
+        self.n * self.bytes_per_lane as u64 * (self.reads + self.writes) as u64
+    }
+}
+
+impl TraceSource for StreamTrace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let bpl = self.bytes_per_lane as u64;
+        // Disjoint base offsets so distinct arrays never alias in cache.
+        let array_span = self.n * bpl;
+        for_each_group(self.n, group_size, |ctx, range| {
+            let lanes = (range.end - range.start) as u32;
+            let base = range.start * bpl;
+            for r in 0..self.reads {
+                let arr_base = r as u64 * array_span;
+                sink.on_mem(
+                    ctx,
+                    &MemAccess::contiguous(
+                        MemKind::Read,
+                        arr_base + base,
+                        lanes,
+                        self.bytes_per_lane,
+                    ),
+                );
+            }
+            if self.valu_per_group > 0 {
+                sink.on_inst(ctx, InstClass::ValuArith, self.valu_per_group);
+            }
+            for w in 0..self.writes {
+                let arr_base = (self.reads + w) as u64 * array_span;
+                sink.on_mem(
+                    ctx,
+                    &MemAccess::contiguous(
+                        MemKind::Write,
+                        arr_base + base,
+                        lanes,
+                        self.bytes_per_lane,
+                    ),
+                );
+            }
+        });
+    }
+}
+
+/// Strided kernel: lane i of group g reads `base + (g*gs + i) * stride`.
+/// With stride ≥ 32B every lane hits its own sector — the "global memory
+/// wall" worst case (32 transactions per warp-load on NVIDIA).
+#[derive(Debug, Clone)]
+pub struct StridedTrace {
+    pub name: String,
+    pub n: u64,
+    pub stride: u64,
+    pub bytes_per_lane: u8,
+}
+
+impl TraceSource for StridedTrace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        for_each_group(self.n, group_size, |ctx, range| {
+            let lanes = (range.end - range.start) as u32;
+            let base = range.start * self.stride;
+            sink.on_mem(
+                ctx,
+                &MemAccess::strided(
+                    MemKind::Read,
+                    base,
+                    lanes,
+                    self.stride,
+                    self.bytes_per_lane,
+                ),
+            );
+            sink.on_inst(ctx, InstClass::ValuArith, 2);
+        });
+    }
+}
+
+/// Uniform-random gather over a working set of `span` bytes — exercises
+/// cache capacity behaviour and the scatter-bandwidth calibration point.
+#[derive(Debug, Clone)]
+pub struct RandomTrace {
+    pub name: String,
+    pub n: u64,
+    pub span: u64,
+    pub bytes_per_lane: u8,
+    pub seed: u64,
+}
+
+impl TraceSource for RandomTrace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let mut rng = Xoshiro256::seed_from_u64(self.seed);
+        let slots = self.span / self.bytes_per_lane as u64;
+        let mut lane_addrs = Vec::with_capacity(group_size as usize);
+        for_each_group(self.n, group_size, |ctx, range| {
+            lane_addrs.clear();
+            for _ in range {
+                lane_addrs
+                    .push(rng.below(slots) * self.bytes_per_lane as u64);
+            }
+            sink.on_mem(
+                ctx,
+                &MemAccess::gather(
+                    MemKind::Read,
+                    &lane_addrs,
+                    self.bytes_per_lane,
+                ),
+            );
+            sink.on_inst(ctx, InstClass::ValuArith, 4);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::collect_stats;
+
+    #[test]
+    fn babelstream_copy_shape() {
+        let t = StreamTrace::babelstream("copy", 1024);
+        let s = collect_stats(&t, 64);
+        assert_eq!(s.groups, 16);
+        assert_eq!(s.mem_reads, 16);
+        assert_eq!(s.mem_writes, 16);
+        assert_eq!(s.bytes_read_requested, 4096);
+        assert_eq!(s.bytes_written_requested, 4096);
+    }
+
+    #[test]
+    fn babelstream_bytes_match_formula() {
+        for op in ["copy", "mul", "add", "triad", "dot"] {
+            let t = StreamTrace::babelstream(op, 4096);
+            let s = collect_stats(&t, 32);
+            assert_eq!(
+                s.bytes_read_requested + s.bytes_written_requested,
+                t.bytes(),
+                "{op}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown stream op")]
+    fn unknown_op_panics() {
+        StreamTrace::babelstream("nope", 8);
+    }
+
+    #[test]
+    fn strided_touches_distinct_sectors() {
+        let t = StridedTrace {
+            name: "s".into(),
+            n: 64,
+            stride: 128,
+            bytes_per_lane: 4,
+        };
+        let s = collect_stats(&t, 64);
+        assert_eq!(s.mem_reads, 1);
+        assert_eq!(s.bytes_read_requested, 256);
+    }
+
+    #[test]
+    fn random_trace_deterministic() {
+        let t = RandomTrace {
+            name: "r".into(),
+            n: 256,
+            span: 1 << 20,
+            bytes_per_lane: 4,
+            seed: 9,
+        };
+        let a = collect_stats(&t, 64);
+        let b = collect_stats(&t, 64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn warp_vs_wavefront_group_counts() {
+        let t = StreamTrace::babelstream("copy", 2048);
+        assert_eq!(collect_stats(&t, 32).groups, 64);
+        assert_eq!(collect_stats(&t, 64).groups, 32);
+    }
+}

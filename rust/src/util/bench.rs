@@ -1,0 +1,191 @@
+//! Custom micro-benchmark harness (`criterion` is unavailable offline).
+//!
+//! `cargo bench` binaries (`rust/benches/*.rs`, `harness = false`) build a
+//! [`BenchRunner`], register closures, and get a criterion-style report:
+//! warmup, fixed sample count, mean ± σ, min, and throughput when an item
+//! count is given. Set `ROCLINE_BENCH_FAST=1` to shrink samples for CI.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub samples: u32,
+    /// Each sample runs the closure `iters_per_sample` times and divides.
+    pub iters_per_sample: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if std::env::var("ROCLINE_BENCH_FAST").is_ok() {
+            BenchConfig {
+                warmup_iters: 1,
+                samples: 5,
+                iters_per_sample: 1,
+            }
+        } else {
+            BenchConfig {
+                warmup_iters: 3,
+                samples: 20,
+                iters_per_sample: 1,
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub time: Summary,
+    /// Items/second if `throughput_items` was set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let mean = self.time.mean;
+        let (scale, unit) = if mean < 1e-6 {
+            (1e9, "ns")
+        } else if mean < 1e-3 {
+            (1e6, "µs")
+        } else if mean < 1.0 {
+            (1e3, "ms")
+        } else {
+            (1.0, "s")
+        };
+        let mut line = format!(
+            "{:<44} {:>10.3} {unit} ± {:>8.3} {unit}  (min {:>10.3} {unit})",
+            self.name,
+            mean * scale,
+            self.time.std * scale,
+            self.time.min * scale,
+        );
+        if let Some(tp) = self.throughput {
+            if tp >= 1e9 {
+                line.push_str(&format!("  {:>8.2} Gelem/s", tp / 1e9));
+            } else if tp >= 1e6 {
+                line.push_str(&format!("  {:>8.2} Melem/s", tp / 1e6));
+            } else {
+                line.push_str(&format!("  {tp:>8.0} elem/s"));
+            }
+        }
+        line
+    }
+}
+
+pub struct BenchRunner {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl BenchRunner {
+    pub fn new(group: &str) -> Self {
+        println!("== bench group: {group} ==");
+        BenchRunner {
+            config: BenchConfig::default(),
+            results: Vec::new(),
+            group: group.to_string(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Run `f` and record timing. `f` should return something observable to
+    /// keep the optimizer honest; its return value is black-boxed.
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) {
+        self.bench_items(name, None, &mut f);
+    }
+
+    /// Like [`bench`], with items/second throughput reporting.
+    pub fn bench_throughput<R, F: FnMut() -> R>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: F,
+    ) {
+        self.bench_items(name, Some(items), &mut f);
+    }
+
+    fn bench_items<R>(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        f: &mut dyn FnMut() -> R,
+    ) {
+        for _ in 0..self.config.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.config.samples as usize);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.config.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            times.push(
+                t0.elapsed().as_secs_f64()
+                    / self.config.iters_per_sample as f64,
+            );
+        }
+        let time = Summary::of(&times);
+        let throughput = items.map(|n| n as f64 / time.mean);
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            time,
+            throughput,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!();
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 1,
+            samples: 3,
+            iters_per_sample: 2,
+        }
+    }
+
+    #[test]
+    fn records_results() {
+        let mut r = BenchRunner::new("test").with_config(fast());
+        r.bench("noop", || 1 + 1);
+        r.bench_throughput("sum", 1000, || (0..1000u64).sum::<u64>());
+        let results = r.finish();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].time.mean >= 0.0);
+        assert!(results[1].throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_line_units() {
+        let res = BenchResult {
+            name: "g/x".into(),
+            time: Summary::of(&[2e-9, 2e-9, 2e-9]),
+            throughput: Some(5e8),
+        };
+        let line = res.report_line();
+        assert!(line.contains("ns"), "{line}");
+        assert!(line.contains("Melem/s"), "{line}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Miniature property-testing framework (`proptest` is unavailable
+//! offline).
+//!
+//! A property is a closure from a generated case to `Result<(), String>`.
+//! [`Checker::run`] executes it over many deterministic random cases and,
+//! on failure, reports the seed and iteration so the case can be replayed
+//! exactly. Generators compose through plain closures over
+//! [`crate::util::Xoshiro256`].
+//!
+//! Usage:
+//! ```
+//! use rocline::util::check::{Checker, prop_assert};
+//! Checker::new("addition commutes").cases(200).run(|rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     prop_assert(a + b == b + a, || format!("{a} {b}"))
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+pub struct Checker {
+    name: String,
+    cases: u32,
+    seed: u64,
+}
+
+impl Checker {
+    pub fn new(name: &str) -> Self {
+        let seed = std::env::var("ROCLINE_CHECK_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xD1CE_5EED);
+        Checker {
+            name: name.to_string(),
+            cases: 100,
+            seed,
+        }
+    }
+
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property; panics with a replayable report on failure.
+    pub fn run<F>(self, mut prop: F)
+    where
+        F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+    {
+        for i in 0..self.cases {
+            // Each case gets an independent stream: replaying case i does
+            // not require regenerating cases 0..i-1.
+            let case_seed = self.seed.wrapping_add(i as u64);
+            let mut rng = Xoshiro256::seed_from_u64(case_seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property '{}' failed at case {}/{} \
+                     (replay: ROCLINE_CHECK_SEED={} case offset {}):\n  {}",
+                    self.name, i, self.cases, self.seed, i, msg
+                );
+            }
+        }
+    }
+}
+
+/// Assert helper returning `Result` for use inside properties.
+pub fn prop_assert<F: FnOnce() -> String>(
+    cond: bool,
+    msg: F,
+) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+/// Approximate float equality for properties.
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Checker::new("counts").cases(50).run(|_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        Checker::new("fails").cases(10).run(|rng| {
+            let x = rng.below(100);
+            prop_assert(x < 90, || format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        Checker::new("a").cases(5).seed(99).run(|rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        Checker::new("b").cases(5).seed(99).run(|rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn approx_eq_behaviour() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(approx_eq(0.0, 1e-12, 0.0, 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-3, 1e-3));
+    }
+}

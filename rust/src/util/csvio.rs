@@ -1,0 +1,116 @@
+//! Minimal CSV reading/writing (offline environment: no `csv` crate).
+//!
+//! Used for rocprof-sim/nvprof-sim output (the real rocProf emits CSV) and
+//! for the per-figure data series the plots are built from.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows as CSV. Cells are escaped with quotes when they contain
+/// commas or quotes (rocprof kernel names can contain templated commas).
+pub fn write_csv<P: AsRef<Path>>(
+    path: P,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|c| escape(c)).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+pub fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Parse one CSV line honouring double-quote escapes.
+pub fn parse_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+/// Read a whole CSV file into (header, rows).
+pub fn read_csv<P: AsRef<Path>>(
+    path: P,
+) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines.next().map(parse_line).unwrap_or_default();
+    let rows = lines.map(parse_line).collect();
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        assert_eq!(parse_line("a,b,c"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let cell = "Kernel<foo, bar>";
+        let esc = escape(cell);
+        assert_eq!(esc, "\"Kernel<foo, bar>\"");
+        assert_eq!(parse_line(&format!("x,{esc},y")), vec!["x", cell, "y"]);
+    }
+
+    #[test]
+    fn embedded_quotes() {
+        let cell = "say \"hi\"";
+        let esc = escape(cell);
+        assert_eq!(parse_line(&esc), vec![cell]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("rocline_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        write_csv(
+            &p,
+            &["a", "b"],
+            &[vec!["1".into(), "x,y".into()], vec!["2".into(), "z".into()]],
+        )
+        .unwrap();
+        let (h, rows) = read_csv(&p).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows[0], vec!["1", "x,y"]);
+        assert_eq!(rows[1], vec!["2", "z"]);
+    }
+
+    #[test]
+    fn empty_cells() {
+        assert_eq!(parse_line("a,,c"), vec!["a", "", "c"]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Shared utilities: units, deterministic RNG, statistics, tables, CSV,
+//! a bench harness and a miniature property-testing framework.
+//!
+//! The crate registry is offline in this environment, so the usual
+//! ecosystem crates (`criterion`, `proptest`, `serde`) are replaced by the
+//! small, purpose-built modules here (see DESIGN.md §2).
+
+pub mod bench;
+pub mod check;
+pub mod csvio;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use rng::Xoshiro256;
+pub use stats::Summary;

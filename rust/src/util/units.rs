@@ -1,0 +1,154 @@
+//! Unit helpers: bytes, bandwidths, frequencies, durations.
+//!
+//! The paper mixes MB/s (BabelStream output), GB/s (roofline axes), KB
+//! (rocProf `FETCH_SIZE`/`WRITE_SIZE`) and GHz; these newtypes keep the
+//! conversions in one audited place.
+
+/// Bytes per rocProf `FETCH_SIZE`/`WRITE_SIZE` unit (the counter is in KB).
+pub const ROCPROF_KB: f64 = 1024.0;
+
+/// Size of one memory transaction in the NVIDIA instruction roofline
+/// (Ding & Williams 2019): a 32-byte sector.
+pub const SECTOR_BYTES: u64 = 32;
+
+/// Gibi/Giga constants.
+pub const GIGA: f64 = 1.0e9;
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Bandwidth in bytes/second. Stored as f64 bytes/s.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Bandwidth(pub f64);
+
+impl Bandwidth {
+    pub fn from_gbs(gbs: f64) -> Self {
+        Bandwidth(gbs * GIGA)
+    }
+    /// BabelStream reports decimal MB/s.
+    pub fn from_mbs(mbs: f64) -> Self {
+        Bandwidth(mbs * 1.0e6)
+    }
+    pub fn gbs(self) -> f64 {
+        self.0 / GIGA
+    }
+    pub fn mbs(self) -> f64 {
+        self.0 / 1.0e6
+    }
+    /// Transactions/second at 32B sectors, in billions (GTXN/s).
+    pub fn gtxn_s(self) -> f64 {
+        self.0 / SECTOR_BYTES as f64 / GIGA
+    }
+    pub fn scale(self, f: f64) -> Self {
+        Bandwidth(self.0 * f)
+    }
+}
+
+/// Duration in seconds (f64 keeps the math simple; precision is ample).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Seconds(pub f64);
+
+impl Seconds {
+    pub fn from_ns(ns: f64) -> Self {
+        Seconds(ns * 1.0e-9)
+    }
+    pub fn from_us(us: f64) -> Self {
+        Seconds(us * 1.0e-6)
+    }
+    pub fn ns(self) -> f64 {
+        self.0 * 1.0e9
+    }
+    pub fn us(self) -> f64 {
+        self.0 * 1.0e6
+    }
+    pub fn ms(self) -> f64 {
+        self.0 * 1.0e3
+    }
+}
+
+impl std::ops::Add for Seconds {
+    type Output = Seconds;
+    fn add(self, rhs: Seconds) -> Seconds {
+        Seconds(self.0 + rhs.0)
+    }
+}
+
+impl std::iter::Sum for Seconds {
+    fn sum<I: Iterator<Item = Seconds>>(iter: I) -> Seconds {
+        Seconds(iter.map(|s| s.0).sum())
+    }
+}
+
+/// Format a byte count with binary suffix for reports.
+pub fn human_bytes(b: u64) -> String {
+    let bf = b as f64;
+    if bf >= GIB {
+        format!("{:.2} GiB", bf / GIB)
+    } else if bf >= MIB {
+        format!("{:.2} MiB", bf / MIB)
+    } else if bf >= KIB {
+        format!("{:.2} KiB", bf / KIB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format a count with thousands separators (paper tables use them).
+pub fn group_digits(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, c) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*c as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_conversions() {
+        let bw = Bandwidth::from_gbs(900.0);
+        assert!((bw.gbs() - 900.0).abs() < 1e-12);
+        assert!((bw.mbs() - 900_000.0).abs() < 1e-9);
+        // 900 GB/s over 32B sectors = 28.125 GTXN/s
+        assert!((bw.gtxn_s() - 28.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn babelstream_mbs_roundtrip() {
+        // the paper's MI60 copy rate
+        let bw = Bandwidth::from_mbs(808_975.476);
+        assert!((bw.gbs() - 808.975476).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seconds_conversions() {
+        let t = Seconds::from_us(2.5);
+        assert!((t.ns() - 2500.0).abs() < 1e-9);
+        assert!((t.ms() - 0.0025).abs() < 1e-12);
+        let sum: Seconds = vec![Seconds(0.5), Seconds(0.25)].into_iter().sum();
+        assert!((sum.0 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn human_bytes_suffixes() {
+        assert_eq!(human_bytes(10), "10 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn group_digits_matches_paper_style() {
+        assert_eq!(group_digits(449_796_480), "449,796,480");
+        assert_eq!(group_digits(0), "0");
+        assert_eq!(group_digits(999), "999");
+        assert_eq!(group_digits(1000), "1,000");
+    }
+}

@@ -1,0 +1,178 @@
+//! Cross-module integration: the full profile → counters → IRM pipeline
+//! on short windows of the real science cases, plus the PJRT stream
+//! backend when artifacts exist.
+
+use rocline::arch::presets;
+use rocline::coordinator::paper;
+use rocline::coordinator::CaseRun;
+use rocline::pic::CaseConfig;
+use rocline::profiler::{NvprofTool, RocprofTool};
+use rocline::roofline::InstructionRoofline;
+
+fn short(case: &str, steps: u32) -> CaseConfig {
+    let mut cfg = CaseConfig::by_name(case).unwrap();
+    cfg.steps = steps;
+    cfg
+}
+
+#[test]
+fn profiled_run_produces_all_five_kernels_on_every_gpu() {
+    for spec in presets::all_gpus() {
+        let run = CaseRun::execute(spec.clone(), short("lwfa", 2));
+        let aggs = run.session.aggregates();
+        let names: Vec<&str> =
+            aggs.iter().map(|a| a.kernel.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "CurrentReset",
+                "MoveAndMark",
+                "ShiftParticles",
+                "ComputeCurrent",
+                "FieldSolver"
+            ],
+            "{}",
+            spec.name
+        );
+        for a in &aggs {
+            assert!(a.total_duration_s > 0.0, "{}", a.kernel);
+            assert!(a.stats.total_group_insts() > 0, "{}", a.kernel);
+        }
+    }
+}
+
+#[test]
+fn runtime_ordering_emerges_from_the_simulation() {
+    // Table 1's headline: MI100 < V100 < MI60 on ComputeCurrent — on a
+    // short window (the full window sharpens it)
+    let mut times = std::collections::HashMap::new();
+    for spec in presets::all_gpus() {
+        let run = CaseRun::execute(spec.clone(), short("lwfa", 4));
+        let agg = run
+            .session
+            .aggregates()
+            .into_iter()
+            .find(|a| a.kernel == "ComputeCurrent")
+            .unwrap();
+        times.insert(spec.name.to_string(), agg.mean_duration_s());
+    }
+    assert!(
+        times["MI100"] < times["V100"],
+        "MI100 {} vs V100 {}",
+        times["MI100"],
+        times["V100"]
+    );
+    assert!(
+        times["V100"] < times["MI60"],
+        "V100 {} vs MI60 {}",
+        times["V100"],
+        times["MI60"]
+    );
+}
+
+#[test]
+fn rocprof_fetch_size_nonzero_once_working_set_exceeds_l2() {
+    // the cases are sized so particle data cannot stay L2-resident
+    let spec = presets::mi60();
+    let run = CaseRun::execute(spec.clone(), short("lwfa", 3));
+    let r = RocprofTool::reports(&run.session)
+        .into_iter()
+        .find(|r| r.kernel == "MoveAndMark")
+        .unwrap();
+    assert!(
+        r.total.fetch_size_kb > 100.0,
+        "FETCH_SIZE {} KB",
+        r.total.fetch_size_kb
+    );
+}
+
+#[test]
+fn nvprof_replay_reproduces_byte_anomaly() {
+    let spec = presets::v100();
+    let run = CaseRun::execute(spec.clone(), short("lwfa", 3));
+    let base = NvprofTool::new(1)
+        .reports(&run.session)
+        .into_iter()
+        .find(|r| r.kernel == "ComputeCurrent")
+        .unwrap();
+    let intruded = NvprofTool::new(paper::NVPROF_TABLE_REPLAY_PASSES)
+        .reports(&run.session)
+        .into_iter()
+        .find(|r| r.kernel == "ComputeCurrent")
+        .unwrap();
+    assert_eq!(
+        intruded.total.dram_read_transactions,
+        base.total.dram_read_transactions
+            * paper::NVPROF_TABLE_REPLAY_PASSES as u64
+    );
+    // the implied bandwidth is inflated by the full replay factor over
+    // what the kernel physically moved — the mechanism behind the
+    // paper's Table 1 anomaly (over a full-length run the implied rate
+    // exceeds HBM peak outright; see `rocline reproduce table1`)
+    let implied = |r: &rocline::profiler::NvprofReport| {
+        r.total.dram_read_bytes()
+            / r.invocations as f64
+            / r.mean_duration_s
+    };
+    let ratio = implied(&intruded) / implied(&base);
+    assert!(
+        (ratio - paper::NVPROF_TABLE_REPLAY_PASSES as f64).abs() < 0.01,
+        "implied-bandwidth inflation {ratio}"
+    );
+    assert!(
+        implied(&intruded) > 0.25 * spec.hbm.peak.0,
+        "implied {:.3e} B/s vs peak {:.3e}",
+        implied(&intruded),
+        spec.hbm.peak.0
+    );
+}
+
+#[test]
+fn irms_build_from_both_tools() {
+    let v100 = presets::v100();
+    let run_nv = CaseRun::execute(v100.clone(), short("lwfa", 2));
+    let nv = NvprofTool::default()
+        .reports(&run_nv.session)
+        .into_iter()
+        .find(|r| r.kernel == "ComputeCurrent")
+        .unwrap();
+    let irm_txn = InstructionRoofline::from_nvprof_txn(&v100, &nv);
+    assert_eq!(irm_txn.points.len(), 3);
+    assert!(irm_txn.points.iter().all(|p| p.gips > 0.0));
+
+    let mi100 = presets::mi100();
+    let run_amd = CaseRun::execute(mi100.clone(), short("lwfa", 2));
+    let amd = RocprofTool::reports(&run_amd.session)
+        .into_iter()
+        .find(|r| r.kernel == "ComputeCurrent")
+        .unwrap();
+    let irm = InstructionRoofline::from_rocprof(&mi100, &amd, 933.4);
+    assert_eq!(irm.points.len(), 1);
+    assert!(irm.points[0].gips > 0.0);
+    assert!(irm.points[0].intensity > 0.0);
+}
+
+#[test]
+fn rocprof_csv_matches_dispatch_count() {
+    let spec = presets::mi100();
+    let run = CaseRun::execute(spec, short("lwfa", 2));
+    let rows = RocprofTool::csv_rows(&run.session);
+    assert_eq!(rows.len(), 2 * 5);
+}
+
+#[test]
+fn pjrt_stream_backend_when_artifacts_exist() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = rocline::runtime::Runtime::new(&dir).unwrap();
+    let report =
+        rocline::babelstream::pjrt::run_pjrt(&mut rt, 2).unwrap();
+    assert_eq!(report.results.len(), 5);
+    for r in &report.results {
+        assert!(r.mbs > 0.0, "{}: {}", r.op, r.mbs);
+    }
+}

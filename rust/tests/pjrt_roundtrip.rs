@@ -1,0 +1,183 @@
+//! Integration: the AOT JAX/Pallas artifacts and the native Rust PIC core
+//! must compute the same physics.
+//!
+//! Requires `make artifacts` (skipped cleanly otherwise so `cargo test`
+//! stays green on a fresh clone).
+
+use std::path::PathBuf;
+
+use rocline::pic::{deposit, fields, pusher, CaseConfig, SimState};
+use rocline::runtime::Runtime;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[test]
+fn pjrt_client_loads_all_entries() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::new(&dir).expect("runtime");
+    assert_eq!(rt.platform(), "cpu");
+    assert!(rt.artifacts().entries.len() >= 13);
+}
+
+#[test]
+fn move_and_mark_matches_native() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let cfg = CaseConfig::lwfa();
+    let mut st = SimState::init(&cfg, 42);
+
+    let outs = rt
+        .call_f32(
+            "move_and_mark_lwfa",
+            &[&st.e, &st.b, &st.pos, &st.mom],
+        )
+        .expect("pjrt call");
+    assert_eq!(outs.len(), 2);
+
+    pusher::move_and_mark(&mut st);
+    let dp = max_abs_diff(&outs[0], &st.pos);
+    let dm = max_abs_diff(&outs[1], &st.mom);
+    assert!(dp < 2e-4, "pos diff {dp}");
+    assert!(dm < 2e-4, "mom diff {dm}");
+}
+
+#[test]
+fn compute_current_matches_native() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let cfg = CaseConfig::lwfa();
+    let mut st = SimState::init(&cfg, 42);
+
+    let outs = rt
+        .call_f32("compute_current_lwfa", &[&st.pos, &st.mom])
+        .expect("pjrt call");
+    assert_eq!(outs.len(), 1);
+
+    deposit::compute_current(&mut st);
+    let dj = max_abs_diff(&outs[0], &st.j);
+    assert!(dj < 1e-4, "J diff {dj}");
+}
+
+#[test]
+fn field_update_matches_native() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let cfg = CaseConfig::lwfa();
+    let mut st = SimState::init(&cfg, 42);
+    deposit::compute_current(&mut st);
+
+    let outs = rt
+        .call_f32("field_update_lwfa", &[&st.e, &st.b, &st.j])
+        .expect("pjrt call");
+    assert_eq!(outs.len(), 2);
+
+    fields::field_update(&mut st);
+    assert!(max_abs_diff(&outs[0], &st.e) < 2e-4);
+    assert!(max_abs_diff(&outs[1], &st.b) < 2e-4);
+}
+
+#[test]
+fn full_pic_step_matches_native_over_multiple_steps() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let cfg = CaseConfig::lwfa();
+    let mut native = rocline::pic::PicSim::new(&cfg, 42);
+    let st0 = native.state.clone();
+
+    // run the PJRT path
+    let (mut e, mut b, mut pos, mut mom) =
+        (st0.e.clone(), st0.b.clone(), st0.pos.clone(), st0.mom.clone());
+    const STEPS: usize = 5;
+    for _ in 0..STEPS {
+        let outs = rt
+            .call_f32("pic_step_lwfa", &[&e, &b, &pos, &mom])
+            .expect("pjrt step");
+        e = outs[0].clone();
+        b = outs[1].clone();
+        pos = outs[2].clone();
+        mom = outs[3].clone();
+    }
+
+    native.run(STEPS as u32);
+
+    // f32 divergence grows with steps; bound it loosely but meaningfully
+    let de = max_abs_diff(&e, &native.state.e);
+    let dm = max_abs_diff(&mom, &native.state.mom);
+    assert!(de < 5e-3, "E diverged after {STEPS} steps: {de}");
+    assert!(dm < 5e-3, "mom diverged after {STEPS} steps: {dm}");
+
+    // and the physics is alive: energy moved from fields to particles
+    let k0 = st0.kinetic_energy();
+    let k1 = native.state.kinetic_energy();
+    assert!(k1 > k0, "no energy transfer: {k0} -> {k1}");
+}
+
+#[test]
+fn stream_kernels_execute_and_are_correct() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let n = 1 << 20;
+    let a: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.5).collect();
+    let b: Vec<f32> = (0..n).map(|i| (i % 31) as f32 * 0.25).collect();
+
+    let copy = rt.call_f32("stream_copy", &[&a]).unwrap();
+    assert_eq!(copy[0], a);
+
+    let add = rt.call_f32("stream_add", &[&a, &b]).unwrap();
+    assert!((add[0][100] - (a[100] + b[100])).abs() < 1e-6);
+
+    let triad = rt.call_f32("stream_triad", &[&a, &b]).unwrap();
+    assert!((triad[0][5] - (a[5] + 0.4 * b[5])).abs() < 1e-5);
+
+    let dot = rt.call_f32("stream_dot", &[&a, &b]).unwrap();
+    let want: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| *x as f64 * *y as f64)
+        .sum();
+    let got = dot[0][0] as f64;
+    assert!(
+        (got - want).abs() / want.abs() < 1e-3,
+        "dot {got} vs {want}"
+    );
+}
+
+#[test]
+fn wrong_arg_count_is_a_clean_error() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let err = rt.call_f32("stream_copy", &[]).unwrap_err().to_string();
+    assert!(err.contains("manifest says 1"), "{err}");
+}

@@ -1,0 +1,309 @@
+//! Property-based invariant suites (via the in-tree mini-proptest,
+//! `rocline::util::check` — `proptest` is unavailable offline).
+
+use rocline::arch::presets;
+use rocline::memsim::banks::{BankModel, ConflictStats};
+use rocline::memsim::{Cache, Coalescer, MemHierarchy};
+use rocline::pic::{deposit, pusher, CaseConfig, SimState};
+use rocline::roofline::{eq2_intensity_performance, eq4_achieved_gips};
+use rocline::trace::event::{GroupCtx, LdsAccess, MemAccess, MemKind};
+use rocline::trace::sink::EventSink;
+use rocline::util::check::{approx_eq, prop_assert, Checker};
+use rocline::util::Xoshiro256;
+
+fn random_access(rng: &mut Xoshiro256, lanes: u32) -> MemAccess {
+    let addrs: Vec<u64> =
+        (0..lanes).map(|_| rng.below(1 << 20)).collect();
+    MemAccess::gather(MemKind::Read, &addrs, 4)
+}
+
+#[test]
+fn coalescer_sector_count_bounds() {
+    // 1 <= sectors <= 2 * active lanes (each lane touches at most 2
+    // sectors when unaligned), and sectors are unique
+    Checker::new("coalescer bounds").cases(300).run(|rng| {
+        let lanes = 1 + rng.below(64) as u32;
+        let a = random_access(rng, lanes);
+        let c = Coalescer::new(32);
+        let mut buf = Vec::new();
+        let n = c.sectors(&a, &mut buf);
+        let mut sorted = buf.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert(
+            sorted.len() == n,
+            || format!("duplicate sectors: {buf:?}"),
+        )?;
+        prop_assert(n >= 1 && n <= 2 * lanes as usize, || {
+            format!("{n} sectors for {lanes} lanes")
+        })
+    });
+}
+
+#[test]
+fn coalescer_is_permutation_invariant() {
+    Checker::new("coalescer permutation").cases(200).run(|rng| {
+        let lanes = 1 + rng.below(64) as u32;
+        let mut addrs: Vec<u64> =
+            (0..lanes).map(|_| rng.below(1 << 16)).collect();
+        let c = Coalescer::new(32);
+        let a = MemAccess::gather(MemKind::Read, &addrs, 4);
+        let n1 = c.sector_count(&a);
+        rng.shuffle(&mut addrs);
+        let b = MemAccess::gather(MemKind::Read, &addrs, 4);
+        let n2 = c.sector_count(&b);
+        prop_assert(n1 == n2, || format!("{n1} != {n2}"))
+    });
+}
+
+#[test]
+fn cache_hits_plus_misses_equals_accesses() {
+    Checker::new("cache accounting").cases(100).run(|rng| {
+        let mut cache = Cache::new(16 * 1024, 32, 4, true);
+        let n = 1000 + rng.below(1000);
+        for _ in 0..n {
+            cache.access_line(rng.below(4096), rng.below(2) == 0);
+        }
+        prop_assert(cache.hits + cache.misses == n, || {
+            format!("{} + {} != {n}", cache.hits, cache.misses)
+        })
+    });
+}
+
+#[test]
+fn cache_within_capacity_never_capacity_misses() {
+    // touching exactly `lines` distinct lines repeatedly: after the
+    // cold pass everything hits (LRU, accesses in the same order)
+    Checker::new("cache residency").cases(50).run(|rng| {
+        let mut cache = Cache::new(32 * 1024, 32, 8, true);
+        let lines = 1 + rng.below(1024); // capacity = 1024 lines
+        for l in 0..lines {
+            cache.access_line(l, false);
+        }
+        let misses_before = cache.misses;
+        for l in 0..lines {
+            cache.access_line(l, false);
+        }
+        prop_assert(cache.misses == misses_before, || {
+            format!(
+                "capacity misses within capacity: {} -> {}",
+                misses_before, cache.misses
+            )
+        })
+    });
+}
+
+#[test]
+fn bank_conflict_degree_bounds() {
+    Checker::new("bank degree").cases(300).run(|rng| {
+        let model = BankModel::new(32);
+        let lanes = 1 + rng.below(64) as u32;
+        let addrs: Vec<u64> =
+            (0..lanes).map(|_| rng.below(1 << 14) * 4).collect();
+        let a = LdsAccess::from_lane_addrs(MemKind::Read, &addrs, 4);
+        let d = model.degree(&a);
+        prop_assert(d >= 1 && d <= lanes, || {
+            format!("degree {d} for {lanes} lanes")
+        })
+    });
+}
+
+#[test]
+fn bank_stats_passes_consistent() {
+    Checker::new("bank stats").cases(100).run(|rng| {
+        let model = BankModel::new(32);
+        let mut stats = ConflictStats::default();
+        let n = 1 + rng.below(50);
+        for _ in 0..n {
+            let lanes = 1 + rng.below(64) as u32;
+            let addrs: Vec<u64> =
+                (0..lanes).map(|_| rng.below(1 << 12) * 4).collect();
+            let a =
+                LdsAccess::from_lane_addrs(MemKind::Read, &addrs, 4);
+            model.observe(&a, &mut stats);
+        }
+        prop_assert(
+            stats.accesses == n
+                && stats.passes >= n
+                && stats.passes <= n * 64,
+            || format!("{stats:?}"),
+        )
+    });
+}
+
+#[test]
+fn hierarchy_hbm_bytes_bounded_by_transactions() {
+    // HBM read bytes never exceed L2-read-transactions * line size and
+    // coalescing efficiency stays in (0, 1]
+    Checker::new("hierarchy bounds").cases(40).run(|rng| {
+        let spec = presets::mi100();
+        let mut h = MemHierarchy::new(&spec);
+        for g in 0..200u64 {
+            let lanes = 1 + rng.below(64) as u32;
+            let a = random_access(rng, lanes);
+            h.on_mem(&GroupCtx { group_id: g }, &a);
+        }
+        h.flush();
+        let t = &h.traffic;
+        prop_assert(
+            t.hbm_read_bytes <= t.l2_read_txn * 64,
+            || format!("{t:?}"),
+        )?;
+        let eff = t.coalescing_efficiency();
+        prop_assert(eff > 0.0 && eff <= 1.0, || format!("{eff}"))
+    });
+}
+
+#[test]
+fn boris_pusher_gamma_invariants() {
+    // for any fields/momenta: result finite and |v| < c after the push
+    Checker::new("boris invariants").cases(300).run(|rng| {
+        let e = [
+            rng.range_f64(-10.0, 10.0) as f32,
+            rng.range_f64(-10.0, 10.0) as f32,
+            rng.range_f64(-10.0, 10.0) as f32,
+        ];
+        let b = [
+            rng.range_f64(-10.0, 10.0) as f32,
+            rng.range_f64(-10.0, 10.0) as f32,
+            rng.range_f64(-10.0, 10.0) as f32,
+        ];
+        let u = [
+            rng.range_f64(-20.0, 20.0) as f32,
+            rng.range_f64(-20.0, 20.0) as f32,
+            rng.range_f64(-20.0, 20.0) as f32,
+        ];
+        let out = pusher::boris(e, b, u, -1.0, 0.5);
+        let u2 = (out[0] as f64).powi(2)
+            + (out[1] as f64).powi(2)
+            + (out[2] as f64).powi(2);
+        let gamma = (1.0 + u2).sqrt();
+        let v = u2.sqrt() / gamma;
+        prop_assert(out.iter().all(|x| x.is_finite()), || {
+            format!("{out:?}")
+        })?;
+        prop_assert(v < 1.0, || format!("superluminal v={v}"))
+    });
+}
+
+#[test]
+fn pure_magnetic_push_conserves_energy() {
+    Checker::new("B-only energy").cases(200).run(|rng| {
+        let b = [
+            rng.range_f64(-5.0, 5.0) as f32,
+            rng.range_f64(-5.0, 5.0) as f32,
+            rng.range_f64(-5.0, 5.0) as f32,
+        ];
+        let u = [
+            rng.range_f64(-3.0, 3.0) as f32,
+            rng.range_f64(-3.0, 3.0) as f32,
+            rng.range_f64(-3.0, 3.0) as f32,
+        ];
+        let out = pusher::boris([0.0; 3], b, u, -1.0, 0.5);
+        let n0 = ((u[0] as f64).powi(2)
+            + (u[1] as f64).powi(2)
+            + (u[2] as f64).powi(2))
+        .sqrt();
+        let n1 = ((out[0] as f64).powi(2)
+            + (out[1] as f64).powi(2)
+            + (out[2] as f64).powi(2))
+        .sqrt();
+        prop_assert(approx_eq(n0, n1, 1e-4, 1e-5), || {
+            format!("|u| {n0} -> {n1}")
+        })
+    });
+}
+
+#[test]
+fn deposition_conserves_total_current() {
+    // sum(J) == qw * sum(v) regardless of particle positions
+    Checker::new("deposition conservation").cases(15).run(|rng| {
+        let mut cfg = CaseConfig::lwfa();
+        cfg.nx = 8;
+        cfg.ny = 8;
+        cfg.nz = 8;
+        cfg.ppc = 2;
+        let mut st = SimState::init(&cfg, rng.next_u64());
+        deposit::compute_current(&mut st);
+        let n = cfg.particles();
+        let mut vsum = [0f64; 3];
+        for p in 0..n {
+            let u = [
+                st.mom[p * 3] as f64,
+                st.mom[p * 3 + 1] as f64,
+                st.mom[p * 3 + 2] as f64,
+            ];
+            let g =
+                (1.0 + u.iter().map(|x| x * x).sum::<f64>()).sqrt();
+            for c in 0..3 {
+                vsum[c] += u[c] / g;
+            }
+        }
+        let cells = cfg.cells();
+        for c in 0..3 {
+            let jsum: f64 = st.j[c * cells..(c + 1) * cells]
+                .iter()
+                .map(|&x| x as f64)
+                .sum();
+            let want = cfg.qw as f64 * vsum[c];
+            prop_assert(approx_eq(jsum, want, 1e-3, 1e-4), || {
+                format!("component {c}: {jsum} vs {want}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn equations_scale_correctly() {
+    // Eq. 4 is linear in instructions, inverse in runtime; Eq. 2
+    // inverse in bytes — the dimensional sanity of §4.2
+    Checker::new("equation scaling").cases(200).run(|rng| {
+        let insts = 1000 + rng.below(1 << 30);
+        let t = rng.range_f64(1e-6, 1.0);
+        let bytes = rng.range_f64(1e3, 1e12);
+        let g1 = eq4_achieved_gips(insts, 64, t);
+        let g2 = eq4_achieved_gips(insts * 2, 64, t);
+        prop_assert(approx_eq(g2, 2.0 * g1, 1e-9, 0.0), || {
+            format!("{g1} {g2}")
+        })?;
+        let i1 = eq2_intensity_performance(insts, 64, bytes, 0.0, t);
+        let i2 =
+            eq2_intensity_performance(insts, 64, 2.0 * bytes, 0.0, t);
+        prop_assert(approx_eq(i1, 2.0 * i2, 1e-9, 0.0), || {
+            format!("{i1} {i2}")
+        })
+    });
+}
+
+#[test]
+fn trace_replay_is_group_size_consistent() {
+    // total requested bytes must not depend on warp vs wavefront width
+    Checker::new("group-size invariance").cases(10).run(|rng| {
+        let mut cfg = CaseConfig::lwfa();
+        cfg.nx = 8;
+        cfg.ny = 8;
+        cfg.nz = 8;
+        cfg.ppc = 2;
+        let st = SimState::init(&cfg, rng.next_u64());
+        let spec = presets::v100();
+        let t = rocline::pic::kernels::MoveAndMarkTrace {
+            state: &st,
+            spec: &spec,
+        };
+        let s32 = rocline::trace::collect_stats(&t, 32);
+        let s64 = rocline::trace::collect_stats(&t, 64);
+        prop_assert(
+            s32.bytes_read_requested == s64.bytes_read_requested,
+            || {
+                format!(
+                    "{} vs {}",
+                    s32.bytes_read_requested, s64.bytes_read_requested
+                )
+            },
+        )?;
+        prop_assert(s32.groups == 2 * s64.groups, || {
+            format!("{} vs {}", s32.groups, s64.groups)
+        })
+    });
+}
