@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus a bench smoke pass.
+#
+#   ci/run.sh          # build + test + fast bench, checks the artifact
+#   ci/run.sh --full   # same but benches at full sample counts
+#
+# The bench step runs `benches/hotpath.rs`, which writes
+# BENCH_hotpath.json (bench name -> ops/s, plus speedup/* ratios of the
+# sharded replay engine over the sequential baseline) at the repo root.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== bench smoke: hotpath =="
+if [ "${1:-}" = "--full" ]; then
+    cargo bench --bench hotpath
+else
+    ROCLINE_BENCH_FAST=1 cargo bench --bench hotpath
+fi
+
+test -s BENCH_hotpath.json || {
+    echo "BENCH_hotpath.json missing or empty" >&2
+    exit 1
+}
+grep -E '"speedup/' BENCH_hotpath.json || {
+    echo "BENCH_hotpath.json has no speedup/* entries (bench names drifted?)" >&2
+    exit 1
+}
+echo "== ok: BENCH_hotpath.json =="

@@ -1,14 +1,33 @@
 //! Whole-stack hot paths: native PIC step rate, kernel trace
-//! generation, and the full profile-one-dispatch pipeline.
+//! generation/replay (event-at-a-time vs batched SoA blocks), and the
+//! full profile-one-dispatch pipeline on both replay engines.
+//!
+//! Emits `BENCH_hotpath.json` (bench name → ops/s, plus derived
+//! `speedup/...` ratios of the sharded engine over the sequential
+//! baseline) at the repo root — the artifact CI smoke-checks.
+
+use std::path::Path;
 
 use rocline::arch::presets;
 use rocline::pic::kernels::{ComputeCurrentTrace, MoveAndMarkTrace};
 use rocline::pic::{CaseConfig, PicSim};
 use rocline::profiler::ProfileSession;
 use rocline::roofline::{eq2_intensity_performance, eq4_achieved_gips};
+use rocline::trace::block::BlockRecorder;
 use rocline::trace::sink::NullSink;
-use rocline::trace::TraceSource;
-use rocline::util::bench::BenchRunner;
+use rocline::trace::{TraceSource, TraceStats};
+use rocline::util::bench::{self, BenchResult, BenchRunner};
+
+fn record(trace: &dyn TraceSource, group_size: u32) -> BlockRecorder {
+    BlockRecorder::record(trace, group_size)
+}
+
+fn find_ops(results: &[BenchResult], name: &str) -> Option<f64> {
+    results
+        .iter()
+        .find(|r| r.name.ends_with(name))
+        .map(|r| r.ops_per_sec())
+}
 
 fn main() {
     let mut r = BenchRunner::new("hotpath");
@@ -24,7 +43,9 @@ fn main() {
         });
     }
 
-    // trace generation alone (NullSink isolates the generator)
+    // trace generation alone (NullSink isolates the generator), then
+    // the same event stream replayed from recorded SoA blocks — the
+    // batched path skips regeneration and per-event virtual dispatch
     {
         let sim = PicSim::new(&cfg, 1);
         let spec = presets::mi100();
@@ -43,9 +64,29 @@ fn main() {
         r.bench_throughput("trace/compute_current", particles, || {
             deposit.replay(64, &mut sink)
         });
+
+        // event-wise vs blocked delivery into the same consumer
+        r.bench_throughput("trace/stats_eventwise", particles, || {
+            let mut stats = TraceStats::default();
+            push.replay(64, &mut stats);
+            stats.groups
+        });
+        let recorded = record(&push, 64);
+        r.bench_throughput("trace/stats_blocked", particles, || {
+            let mut stats = TraceStats::default();
+            for block in &recorded.blocks {
+                for rec in block.records() {
+                    stats.on_record(&rec);
+                }
+            }
+            stats.groups
+        });
     }
 
-    // full profile pipeline: trace + memsim + counters + timing
+    // full profile pipeline on both engines over *recorded* traces
+    // (the replay-many production shape: record once per GPU, then the
+    // bench isolates the replay engine — sequential baseline vs the
+    // sharded/batched engine with identical counters)
     {
         let sim = PicSim::new(&cfg, 1);
         for spec in [presets::mi100(), presets::v100()] {
@@ -57,17 +98,46 @@ fn main() {
                 state: &sim.state,
                 spec: &spec,
             };
-            let name_p =
-                format!("profile/move_and_mark_{}", spec.name);
-            let name_d =
-                format!("profile/compute_current_{}", spec.name);
-            let mut session = ProfileSession::new(spec.clone());
-            r.bench_throughput(&name_p, particles, || {
-                session.profile(&push).duration_s
-            });
-            let mut session2 = ProfileSession::new(spec.clone());
-            r.bench_throughput(&name_d, particles, || {
-                session2.profile(&deposit).duration_s
+            let push_rec = record(&push, spec.group_size);
+            let deposit_rec = record(&deposit, spec.group_size);
+            for (mode, suffix) in [("seq", "_seq"), ("sharded", "")] {
+                let mk = || {
+                    if mode == "seq" {
+                        ProfileSession::sequential(spec.clone())
+                    } else {
+                        ProfileSession::new(spec.clone())
+                    }
+                };
+                let name_p = format!(
+                    "profile/move_and_mark_{}{}",
+                    spec.name, suffix
+                );
+                let name_d = format!(
+                    "profile/compute_current_{}{}",
+                    spec.name, suffix
+                );
+                let mut session = mk();
+                r.bench_throughput(&name_p, particles, || {
+                    session
+                        .profile_blocks("MoveAndMark", &push_rec.blocks)
+                        .duration_s
+                });
+                let mut session2 = mk();
+                r.bench_throughput(&name_d, particles, || {
+                    session2
+                        .profile_blocks(
+                            "ComputeCurrent",
+                            &deposit_rec.blocks,
+                        )
+                        .duration_s
+                });
+            }
+            // end-to-end reference: live generation + sharded engine
+            let mut live = ProfileSession::new(spec.clone());
+            let name =
+                format!("profile/live_move_and_mark_{}", spec.name);
+            r.bench_throughput(&name, particles, || {
+                live.profile(&push).duration_s
             });
         }
     }
@@ -85,5 +155,53 @@ fn main() {
         g + i
     });
 
-    r.finish();
+    let mut results = r.finish();
+
+    // derived speedups: sharded/batched over the sequential baseline
+    let pairs = [
+        ("speedup/trace_stats", "trace/stats_blocked", "trace/stats_eventwise"),
+        (
+            "speedup/profile_move_and_mark_MI100",
+            "profile/move_and_mark_MI100",
+            "profile/move_and_mark_MI100_seq",
+        ),
+        (
+            "speedup/profile_compute_current_MI100",
+            "profile/compute_current_MI100",
+            "profile/compute_current_MI100_seq",
+        ),
+        (
+            "speedup/profile_move_and_mark_V100",
+            "profile/move_and_mark_V100",
+            "profile/move_and_mark_V100_seq",
+        ),
+        (
+            "speedup/profile_compute_current_V100",
+            "profile/compute_current_V100",
+            "profile/compute_current_V100_seq",
+        ),
+    ];
+    for (name, fast, base) in pairs {
+        if let (Some(f), Some(b)) =
+            (find_ops(&results, fast), find_ops(&results, base))
+        {
+            if b > 0.0 {
+                let ratio = f / b;
+                println!("{name:<44} {ratio:>10.2}x");
+                results.push(BenchResult {
+                    name: name.to_string(),
+                    time: rocline::util::Summary::of(&[
+                        if ratio > 0.0 { 1.0 / ratio } else { 0.0 },
+                    ]),
+                    throughput: Some(ratio),
+                });
+            }
+        }
+    }
+
+    let json_path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    bench::write_json(&results, &json_path)
+        .expect("write BENCH_hotpath.json");
+    println!("wrote {}", json_path.display());
 }

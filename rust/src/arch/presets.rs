@@ -37,6 +37,7 @@ pub fn v100() -> GpuSpec {
             ways: 4,
             write_allocate: false, // L1 is write-through, no-allocate
             instances: 80,
+            channels: 1,
         },
         l2: CacheSpec {
             capacity: 6 * 1024 * 1024,
@@ -44,6 +45,7 @@ pub fn v100() -> GpuSpec {
             ways: 16,
             write_allocate: true,
             instances: 1,
+            channels: 32, // Volta L2: 32 slices, lines interleaved
         },
         hbm: HbmSpec {
             peak: Bandwidth::from_gbs(900.0),
@@ -78,6 +80,7 @@ pub fn mi60() -> GpuSpec {
             ways: 4,
             write_allocate: false,
             instances: 64,
+            channels: 1,
         },
         l2: CacheSpec {
             capacity: 4 * 1024 * 1024,
@@ -85,6 +88,7 @@ pub fn mi60() -> GpuSpec {
             ways: 16,
             write_allocate: true,
             instances: 1,
+            channels: 16, // Vega 20: one L2 slice per HBM2 channel
         },
         hbm: HbmSpec {
             peak: Bandwidth::from_gbs(1000.0),
@@ -122,6 +126,7 @@ pub fn mi100() -> GpuSpec {
             ways: 4,
             write_allocate: false,
             instances: 120,
+            channels: 1,
         },
         l2: CacheSpec {
             capacity: 8 * 1024 * 1024,
@@ -129,6 +134,7 @@ pub fn mi100() -> GpuSpec {
             ways: 16,
             write_allocate: true,
             instances: 1,
+            channels: 32, // CDNA 1: 32 address-interleaved L2 slices
         },
         hbm: HbmSpec {
             peak: Bandwidth::from_gbs(1200.0),
@@ -213,6 +219,35 @@ mod tests {
         assert_eq!(by_name("mi100").unwrap().name, "MI100");
         assert_eq!(by_name("V100").unwrap().name, "V100");
         assert!(by_name("a100").is_none());
+    }
+
+    #[test]
+    fn l2_channels_slice_evenly() {
+        // channel interleaving must divide the L2 cleanly into slices
+        // that still hold whole sets (the memsim relies on this)
+        for spec in all_gpus() {
+            let l2 = spec.l2;
+            assert!(l2.channels >= 1, "{}", spec.name);
+            assert_eq!(
+                l2.capacity % l2.channel_count(),
+                0,
+                "{}",
+                spec.name
+            );
+            // each slice must hold a whole number of sets, or the
+            // channel caches would silently truncate L2 capacity
+            assert_eq!(
+                l2.channel_capacity()
+                    % (l2.line as u64 * l2.ways as u64),
+                0,
+                "{}",
+                spec.name
+            );
+            let slice_sets = l2.channel_capacity()
+                / (l2.line as u64 * l2.ways as u64);
+            assert!(slice_sets >= 1, "{}", spec.name);
+            assert_eq!(spec.l1.channels, 1, "{}", spec.name);
+        }
     }
 
     #[test]

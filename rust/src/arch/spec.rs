@@ -41,11 +41,28 @@ pub struct CacheSpec {
     pub write_allocate: bool,
     /// Number of physical instances (e.g. one L1 per CU, one shared L2).
     pub instances: u32,
+    /// Address-interleaved channels/slices within one instance. GPU L2s
+    /// are not monolithic: consecutive lines round-robin over slices
+    /// (32 on Volta and CDNA, 16 on Vega/GCN — one per memory channel),
+    /// which is also what lets the simulator process the slices in
+    /// parallel. Line `l` lives in channel `l % channels`; per-CU L1s
+    /// use 1.
+    pub channels: u32,
 }
 
 impl CacheSpec {
     pub fn sets(&self) -> u64 {
         self.capacity / (self.line as u64 * self.ways as u64)
+    }
+
+    /// Channel count, defensively clamped to at least 1.
+    pub fn channel_count(&self) -> u64 {
+        self.channels.max(1) as u64
+    }
+
+    /// Capacity of one address-interleaved channel slice.
+    pub fn channel_capacity(&self) -> u64 {
+        (self.capacity / self.channel_count()).max(self.line as u64)
     }
 }
 
@@ -200,6 +217,7 @@ mod tests {
                 ways: 4,
                 write_allocate: false,
                 instances: 10,
+                channels: 1,
             },
             l2: CacheSpec {
                 capacity: 4 * 1024 * 1024,
@@ -207,6 +225,7 @@ mod tests {
                 ways: 16,
                 write_allocate: true,
                 instances: 1,
+                channels: 8,
             },
             hbm: HbmSpec {
                 peak: Bandwidth::from_gbs(1000.0),
@@ -235,6 +254,17 @@ mod tests {
         let c = toy().l1;
         // 16KB / (64B x 4 ways) = 64 sets
         assert_eq!(c.sets(), 64);
+    }
+
+    #[test]
+    fn channel_slicing() {
+        let l2 = toy().l2;
+        assert_eq!(l2.channel_count(), 8);
+        assert_eq!(l2.channel_capacity(), 512 * 1024);
+        let mut flat = l2;
+        flat.channels = 0; // defensive clamp
+        assert_eq!(flat.channel_count(), 1);
+        assert_eq!(flat.channel_capacity(), l2.capacity);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 pub mod device;
 pub mod host;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod report;
 

@@ -5,13 +5,14 @@ use std::path::{Path, PathBuf};
 use super::args::Args;
 use crate::arch::presets;
 use crate::arch::Vendor;
-use crate::babelstream::{self, DeviceStream, HostStream};
+use crate::babelstream::{DeviceStream, HostStream};
 use crate::coordinator::profile_run::Context;
 use crate::coordinator::{run_experiments, EXPERIMENT_IDS};
 use crate::gpumembench::{self, InstThroughputBench, ShmemBench};
 use crate::pic::{CaseConfig, PicSim};
 use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
 use crate::roofline::{plot_ascii, plot_svg, InstructionRoofline};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 
 fn gpu_arg(args: &Args) -> anyhow::Result<crate::arch::GpuSpec> {
@@ -26,8 +27,19 @@ fn case_arg(args: &Args) -> anyhow::Result<CaseConfig> {
         .ok_or_else(|| anyhow::anyhow!("unknown case '{name}' (lwfa|tweac)"))
 }
 
+#[cfg(feature = "pjrt")]
 fn artifact_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("dir", "artifacts"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn no_pjrt() -> anyhow::Error {
+    anyhow::anyhow!(
+        "this build has no PJRT runtime: the `xla` crate cannot be \
+         fetched offline. Add `xla = \"0.1.6\"` (plus an xla_extension \
+         install) to Cargo.toml and rebuild with `--features pjrt` — \
+         see rust/src/runtime/mod.rs"
+    )
 }
 
 pub fn reproduce(args: &Args) -> anyhow::Result<()> {
@@ -175,14 +187,17 @@ pub fn babelstream(args: &Args) -> anyhow::Result<()> {
                 DeviceStream::new(spec, n).run(iters).render()
             );
         }
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let mut rt = Runtime::new(&artifact_dir(args))?;
             println!(
                 "{}",
-                babelstream::pjrt::run_pjrt(&mut rt, iters.min(20))?
+                crate::babelstream::pjrt::run_pjrt(&mut rt, iters.min(20))?
                     .render()
             );
         }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => return Err(no_pjrt()),
         other => anyhow::bail!("unknown backend '{other}'"),
     }
     Ok(())
@@ -200,40 +215,9 @@ pub fn pic(args: &Args) -> anyhow::Result<()> {
     let cfg = case_arg(args)?;
     let steps = args.get_u64("steps", cfg.steps as u64)? as u32;
     if args.flag("pjrt") {
-        let mut rt = Runtime::new(&artifact_dir(args))?;
-        let sim = PicSim::new(&cfg, crate::coordinator::profile_run::RUN_SEED);
-        let st = sim.state;
-        let entry = format!("pic_step_{}", cfg.name);
-        let (mut e, mut b, mut pos, mut mom) =
-            (st.e.clone(), st.b.clone(), st.pos.clone(), st.mom.clone());
-        let t0 = std::time::Instant::now();
-        for _ in 0..steps {
-            let outs = rt.call_f32(&entry, &[&e, &b, &pos, &mom])?;
-            let mut it = outs.into_iter();
-            e = it.next().unwrap();
-            b = it.next().unwrap();
-            pos = it.next().unwrap();
-            mom = it.next().unwrap();
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let ke: f64 = mom
-            .chunks_exact(3)
-            .map(|u| {
-                ((1.0 + (u[0] * u[0] + u[1] * u[1] + u[2] * u[2]) as f64)
-                    .sqrt())
-                    - 1.0
-            })
-            .sum();
-        println!(
-            "PJRT {}: {} steps in {:.3}s ({:.2} steps/s), kinetic \
-             energy {:.4}",
-            cfg.name,
-            steps,
-            dt,
-            steps as f64 / dt,
-            ke
-        );
-    } else {
+        return pic_pjrt(args, &cfg, steps);
+    }
+    {
         let mut sim = PicSim::new(&cfg, crate::coordinator::profile_run::RUN_SEED);
         let t0 = std::time::Instant::now();
         sim.run(steps);
@@ -252,6 +236,63 @@ pub fn pic(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pic_pjrt(
+    _args: &Args,
+    _cfg: &CaseConfig,
+    _steps: u32,
+) -> anyhow::Result<()> {
+    Err(no_pjrt())
+}
+
+#[cfg(feature = "pjrt")]
+fn pic_pjrt(
+    args: &Args,
+    cfg: &CaseConfig,
+    steps: u32,
+) -> anyhow::Result<()> {
+    let mut rt = Runtime::new(&artifact_dir(args))?;
+    let sim = PicSim::new(cfg, crate::coordinator::profile_run::RUN_SEED);
+    let st = sim.state;
+    let entry = format!("pic_step_{}", cfg.name);
+    let (mut e, mut b, mut pos, mut mom) =
+        (st.e.clone(), st.b.clone(), st.pos.clone(), st.mom.clone());
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let outs = rt.call_f32(&entry, &[&e, &b, &pos, &mom])?;
+        let mut it = outs.into_iter();
+        e = it.next().unwrap();
+        b = it.next().unwrap();
+        pos = it.next().unwrap();
+        mom = it.next().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let ke: f64 = mom
+        .chunks_exact(3)
+        .map(|u| {
+            ((1.0 + (u[0] * u[0] + u[1] * u[1] + u[2] * u[2]) as f64)
+                .sqrt())
+                - 1.0
+        })
+        .sum();
+    println!(
+        "PJRT {}: {} steps in {:.3}s ({:.2} steps/s), kinetic \
+         energy {:.4}",
+        cfg.name,
+        steps,
+        dt,
+        steps as f64 / dt,
+        ke
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn artifacts(_args: &Args) -> anyhow::Result<()> {
+    Err(no_pjrt())
+}
+
+#[cfg(feature = "pjrt")]
 pub fn artifacts(args: &Args) -> anyhow::Result<()> {
     let rt = Runtime::new(&artifact_dir(args))?;
     println!("platform: {}", rt.platform());

@@ -31,8 +31,26 @@ impl CaseRun {
     /// five kernels each step. Traces read the *live* state, so the
     /// memory behaviour follows the plasma dynamics.
     pub fn execute(spec: GpuSpec, cfg: CaseConfig) -> CaseRun {
+        Self::execute_with_threads(
+            spec,
+            cfg,
+            crate::memsim::sharded::default_threads(),
+        )
+    }
+
+    /// [`CaseRun::execute`] with an explicit replay-engine worker
+    /// budget — coordinators running several cases concurrently divide
+    /// the host between them (the counters don't depend on it).
+    pub fn execute_with_threads(
+        spec: GpuSpec,
+        cfg: CaseConfig,
+        engine_threads: usize,
+    ) -> CaseRun {
         let mut sim = PicSim::new(&cfg, RUN_SEED);
-        let mut session = ProfileSession::new(spec.clone());
+        let mut session = ProfileSession::sharded_with_threads(
+            spec.clone(),
+            engine_threads,
+        );
         for _ in 0..cfg.steps {
             {
                 let st = &sim.state;
@@ -88,6 +106,19 @@ impl Context {
 
     /// Get (or execute) the run for `(gpu, case)`.
     pub fn run(&self, gpu: &str, case: &str) -> Arc<CaseRun> {
+        self.run_with_threads(
+            gpu,
+            case,
+            crate::memsim::sharded::default_threads(),
+        )
+    }
+
+    fn run_with_threads(
+        &self,
+        gpu: &str,
+        case: &str,
+        engine_threads: usize,
+    ) -> Arc<CaseRun> {
         let key = (gpu.to_string(), case.to_string());
         if let Some(r) = self.runs.lock().unwrap().get(&key) {
             return r.clone();
@@ -96,7 +127,11 @@ impl Context {
             .unwrap_or_else(|| panic!("unknown GPU {gpu}"));
         let cfg = CaseConfig::by_name(case)
             .unwrap_or_else(|| panic!("unknown case {case}"));
-        let run = Arc::new(CaseRun::execute(spec, cfg));
+        let run = Arc::new(CaseRun::execute_with_threads(
+            spec,
+            cfg,
+            engine_threads,
+        ));
         self.runs
             .lock()
             .unwrap()
@@ -104,12 +139,18 @@ impl Context {
         run
     }
 
-    /// Pre-execute several runs in parallel threads.
+    /// Pre-execute several runs in parallel threads. The replay-engine
+    /// worker budget is divided across the concurrent runs so the
+    /// sweep parallelism and the per-run engine parallelism compose
+    /// instead of oversubscribing the host.
     pub fn prefetch(&self, pairs: &[(&str, &str)]) {
+        let budget = (crate::memsim::sharded::default_threads()
+            / pairs.len().max(1))
+        .max(1);
         std::thread::scope(|scope| {
             for (gpu, case) in pairs {
-                scope.spawn(|| {
-                    self.run(gpu, case);
+                scope.spawn(move || {
+                    self.run_with_threads(gpu, case, budget);
                 });
             }
         });

@@ -26,6 +26,7 @@ pub mod memsim;
 pub mod pic;
 pub mod profiler;
 pub mod roofline;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod timing;
 pub mod trace;

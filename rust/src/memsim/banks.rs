@@ -51,6 +51,20 @@ impl BankModel {
     /// Allocation-free: distinct (bank, word) pairs are tracked in a
     /// fixed lane-sized scratch (there can be at most MAX_LANES of them).
     pub fn degree(&self, access: &LdsAccess) -> u32 {
+        self.degree_of_addrs(
+            (0..crate::trace::event::MAX_LANES)
+                .filter(|i| access.active >> i & 1 == 1)
+                .map(|i| access.addrs[i]),
+        )
+    }
+
+    /// Conflict degree over a bare active-address stream (the SoA
+    /// event-block form). The degree depends only on the multiset of
+    /// active addresses, so this matches [`BankModel::degree`] exactly.
+    pub fn degree_of_addrs(
+        &self,
+        active_addrs: impl IntoIterator<Item = u64>,
+    ) -> u32 {
         // first distinct word per bank in a fixed array (the common
         // case); later distinct words per bank go to a fixed overflow
         // list that stays tiny for realistic access patterns
@@ -64,11 +78,10 @@ impl BankModel {
         let mut extra =
             [(0u32, 0u64); crate::trace::event::MAX_LANES];
         let mut extra_len = 0usize;
-        for i in 0..crate::trace::event::MAX_LANES {
-            if access.active >> i & 1 == 0 {
-                continue;
-            }
-            let word = access.addrs[i] / self.word_bytes;
+        let mut any = false;
+        for addr in active_addrs {
+            any = true;
+            let word = addr / self.word_bytes;
             let bank = (word % self.banks as u64) as usize;
             if counts[bank] == 0 {
                 words[bank] = word;
@@ -85,14 +98,29 @@ impl BankModel {
                 counts[bank] += 1;
             }
         }
-        counts.iter().copied().max().unwrap_or(0).max(
-            if access.active == 0 { 0 } else { 1 },
-        )
+        counts
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+            .max(if any { 1 } else { 0 })
     }
 
     /// Fold one access into running statistics.
     pub fn observe(&self, access: &LdsAccess, stats: &mut ConflictStats) {
         let d = self.degree(access);
+        stats.accesses += 1;
+        stats.passes += d as u64;
+        stats.worst = stats.worst.max(d);
+    }
+
+    /// [`BankModel::observe`] for the SoA event-block form.
+    pub fn observe_addrs(
+        &self,
+        active_addrs: &[u64],
+        stats: &mut ConflictStats,
+    ) {
+        let d = self.degree_of_addrs(active_addrs.iter().copied());
         stats.accesses += 1;
         stats.passes += d as u64;
         stats.worst = stats.worst.max(d);

@@ -66,14 +66,9 @@ impl Cache {
         }
     }
 
-    pub fn from_spec(spec: &crate::arch::CacheSpec) -> Cache {
-        Cache::new(
-            spec.capacity,
-            spec.line as u64,
-            spec.ways,
-            spec.write_allocate,
-        )
-    }
+    // NOTE: there is deliberately no `from_spec(&CacheSpec)` — a spec
+    // with `channels > 1` must be built through
+    // [`super::hierarchy::ChanneledL2`] so the interleave is honored.
 
     pub fn line_bytes(&self) -> u64 {
         self.line_bytes

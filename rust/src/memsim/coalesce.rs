@@ -33,6 +33,22 @@ impl Coalescer {
     /// Lanes whose `bytes_per_lane` spans a sector boundary touch two
     /// sectors (unaligned case).
     pub fn sectors(&self, access: &MemAccess, out: &mut Vec<u64>) -> usize {
+        self.sectors_from_addrs(
+            access.active_addrs(),
+            access.bytes_per_lane,
+            out,
+        )
+    }
+
+    /// [`Coalescer::sectors`] over a bare active-address stream — the
+    /// entry point for SoA event blocks, which store compacted
+    /// active-lane addresses instead of masked 64-lane arrays.
+    pub fn sectors_from_addrs(
+        &self,
+        active_addrs: impl IntoIterator<Item = u64>,
+        bytes_per_lane: u8,
+        out: &mut Vec<u64>,
+    ) -> usize {
         out.clear();
         let shift = self.sector_bytes.trailing_zeros();
         // Fast path: consecutive lanes usually touch non-decreasing
@@ -40,9 +56,9 @@ impl Coalescer {
         // last-element check dedups most runs in O(1); any
         // out-of-order sector falls back to one sort+dedup at the end.
         let mut sorted = true;
-        for addr in access.active_addrs() {
+        for addr in active_addrs {
             let first = addr >> shift;
-            let last = (addr + access.bytes_per_lane as u64 - 1) >> shift;
+            let last = (addr + bytes_per_lane as u64 - 1) >> shift;
             for s in first..=last {
                 match out.last() {
                     Some(&prev) if prev == s => {}
@@ -63,10 +79,39 @@ impl Coalescer {
         out.len()
     }
 
-    /// Number of sectors without materializing them (for stats-only paths).
+    /// Number of sectors without materializing them (for stats-only
+    /// paths). Allocation-free on the common monotone case — contiguous,
+    /// strided and stencil-ordered gathers — by running the same
+    /// last-sector dedup as [`Coalescer::sectors`] with a counter
+    /// instead of a buffer. Only a genuinely out-of-order gather falls
+    /// back to the materializing path (whose result it must match
+    /// exactly, duplicates included).
     pub fn sector_count(&self, access: &MemAccess) -> usize {
-        let mut buf = Vec::with_capacity(8);
-        self.sectors(access, &mut buf)
+        let shift = self.sector_bytes.trailing_zeros();
+        let mut count = 0usize;
+        let mut prev = 0u64;
+        for addr in access.active_addrs() {
+            let first = addr >> shift;
+            let last =
+                (addr + access.bytes_per_lane as u64 - 1) >> shift;
+            for s in first..=last {
+                if count == 0 {
+                    prev = s;
+                    count = 1;
+                } else if s == prev {
+                    // duplicate of the previous sector: coalesced
+                } else if s > prev {
+                    prev = s;
+                    count += 1;
+                } else {
+                    // out-of-order: exact dedup needs the sector set
+                    let mut buf =
+                        Vec::with_capacity(2 * access.active_lanes() as usize);
+                    return self.sectors(access, &mut buf);
+                }
+            }
+        }
+        count
     }
 }
 
@@ -136,5 +181,24 @@ mod tests {
     #[should_panic]
     fn non_power_of_two_rejected() {
         Coalescer::new(48);
+    }
+
+    #[test]
+    fn count_matches_materialized_sectors() {
+        let c = coalescer32();
+        let cases: Vec<Vec<u64>> = vec![
+            (0..32).map(|i| i * 4).collect(),          // contiguous
+            (0..32).map(|i| i * 128).collect(),        // strided
+            vec![64; 32],                              // broadcast
+            vec![96, 0, 64, 0, 31, 96, 7],             // out of order
+            vec![30],                                  // unaligned span
+            (0..64).rev().map(|i| i * 8).collect(),    // descending
+        ];
+        let mut buf = Vec::new();
+        for addrs in cases {
+            let a = MemAccess::gather(MemKind::Read, &addrs, 4);
+            let n = c.sectors(&a, &mut buf);
+            assert_eq!(c.sector_count(&a), n, "{addrs:?}");
+        }
     }
 }

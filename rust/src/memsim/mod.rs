@@ -3,18 +3,37 @@
 //! Produces the per-level traffic the two profilers sample:
 //!
 //! * NVIDIA needs L1/L2/DRAM **transaction** counts (32B sectors) for the
-//!   Fig. 4 instruction roofline — from [`hierarchy::MemHierarchy`];
+//!   Fig. 4 instruction roofline;
 //! * AMD needs `FETCH_SIZE`/`WRITE_SIZE` — HBM-level byte totals from the
 //!   same hierarchy configured with GCN/CDNA geometry;
 //! * the LDS bank-conflict model ([`banks`]) backs the paper's §7.1
 //!   32-way-bank-conflict diagnostic and the gpumembench analog.
+//!
+//! Two engines produce those counters, bit-identically:
+//!
+//! * [`hierarchy::MemHierarchy`] — the sequential reference: one
+//!   [`crate::trace::EventSink`] virtual call per event, per-CU L1s
+//!   (`group_id % instances`) in front of a shared L2 that is split
+//!   into address-interleaved channel slices (`line % channels`, the
+//!   `channels` field of [`crate::arch::CacheSpec`] — 32 slices on
+//!   Volta/CDNA, 16 on Vega, matching the physical interleave);
+//! * [`sharded::ShardedHierarchy`] — the production engine: consumes
+//!   chunked SoA [`crate::trace::EventBlock`]s, processes the L1s in
+//!   parallel shards that emit sequence-tagged per-channel miss
+//!   streams, then replays each L2 slice in parallel with
+//!   deterministic per-slice ordering (sort by sequence key ⇒ the
+//!   sequential arrival order). See `sharded.rs` for the full ordering
+//!   argument; `tests/engine_equiv.rs` asserts equality on every
+//!   preset and access-pattern mix.
 
 pub mod banks;
 pub mod cache;
 pub mod coalesce;
 pub mod hierarchy;
+pub mod sharded;
 
 pub use banks::BankModel;
 pub use cache::{AccessResult, Cache};
 pub use coalesce::Coalescer;
-pub use hierarchy::{MemHierarchy, MemTraffic};
+pub use hierarchy::{ChanneledL2, MemHierarchy, MemTraffic};
+pub use sharded::ShardedHierarchy;

@@ -1,0 +1,667 @@
+//! The sharded, batched replay engine: parallel per-CU L1 shards
+//! feeding address-interleaved L2 channels.
+//!
+//! [`ShardedHierarchy`] consumes SoA [`EventBlock`]s (built by
+//! [`crate::trace::BlockBuilder`]) and produces counters **bit-identical**
+//! to the sequential [`super::MemHierarchy`] — the equivalence the
+//! `engine_equiv` integration suite proves on every preset. Batches are
+//! processed in two parallel phases:
+//!
+//! 1. **L1 phase** — every shard owns a contiguous range of the L1
+//!    instances (plus their coalescer and scratch) and walks the whole
+//!    batch, handling exactly the records whose issuing group maps to
+//!    one of its L1s (`group_id % instances`). L1 behaviour is
+//!    trivially identical to the sequential engine because each L1
+//!    instance still observes its own access subsequence in trace
+//!    order. The shard tags every L2-bound transaction with a
+//!    *sequence key* — `record_index << 16 | emission_index` — and
+//!    appends it to a per-channel miss stream (`line % channels`).
+//!    A separate worker folds the same batch into [`TraceStats`].
+//! 2. **L2 phase** — every channel merges the shards' miss streams for
+//!    its slice and sorts by sequence key, which reconstructs exactly
+//!    the order in which the sequential engine would have delivered
+//!    those transactions to that slice (emission order is total per
+//!    record, and records are totally ordered). Replaying the merged
+//!    stream through the slice cache therefore reproduces the same
+//!    hits, evictions and writebacks, giving the same L2/HBM counters.
+//!
+//! Determinism does not depend on the shard count or thread
+//! scheduling: partitioning only decides *who* computes a number,
+//! never *which* number is computed.
+
+use std::thread;
+
+use super::banks::{BankModel, ConflictStats};
+use super::cache::{AccessResult, Cache};
+use super::coalesce::Coalescer;
+use super::hierarchy::{ChanneledL2, MemTraffic};
+use crate::arch::GpuSpec;
+use crate::trace::block::{BlockSink, EventBlock, Tag};
+use crate::trace::stats::TraceStats;
+use crate::trace::MemKind;
+
+/// Process a batch once it holds this many records…
+const BATCH_RECORDS: usize = 1 << 16;
+/// …or this many buffered address words (bounds batch memory).
+const BATCH_ADDR_WORDS: usize = 1 << 22;
+
+/// One L2-bound transaction, tagged with its global emission order.
+#[derive(Debug, Clone, Copy)]
+struct MissRec {
+    /// `record_index << 16 | emission_index` — unique and totally
+    /// ordered, so a per-channel sort reconstructs sequential arrival
+    /// order. 16 bits of emission headroom covers the worst legal
+    /// record (64 lanes × 9 sectors × 2 atomic transactions).
+    seq: u64,
+    /// Global L2 line id (channel routing included).
+    line: u64,
+    write: bool,
+}
+
+/// Counters a shard owns exclusively during the L1 phase.
+#[derive(Debug, Clone, Copy, Default)]
+struct ShardDelta {
+    mem_requests: u64,
+    actual_txn: u64,
+    ideal_txn: u64,
+    l1_read_txn: u64,
+    l1_write_txn: u64,
+    atomic_txn: u64,
+}
+
+/// A contiguous slice of the per-CU L1s plus everything needed to
+/// process their records without touching shared state.
+struct L1Shard {
+    first_cu: usize,
+    l1s: Vec<Cache>,
+    coalescer: Coalescer,
+    bank_model: BankModel,
+    scratch: Vec<u64>,
+    delta: ShardDelta,
+    lds: ConflictStats,
+    /// Outgoing per-channel miss streams for the L2 phase.
+    misses: Vec<Vec<MissRec>>,
+}
+
+impl L1Shard {
+    #[allow(clippy::too_many_arguments)]
+    fn consume(
+        &mut self,
+        blocks: &[EventBlock],
+        n_l1: u64,
+        sector_bytes: u64,
+        l2_line: u64,
+        channels: u64,
+    ) {
+        let lo = self.first_cu;
+        let hi = lo + self.l1s.len();
+        let mut rec_seq = 0u64;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for block in blocks {
+            // walk the raw tape so records owned by other shards are
+            // skipped on (tag, group_id) alone, without decoding their
+            // access payload — phase-1 scan cost per shard is then
+            // O(records) tag checks + O(owned records) real work
+            let tags = block.tags();
+            let group_ids = block.group_ids();
+            let mut acc_i = 0usize;
+            for t in 0..tags.len() {
+                let seq_base = rec_seq << 16;
+                rec_seq += 1;
+                if tags[t] == Tag::Inst {
+                    continue;
+                }
+                let acc_idx = acc_i;
+                acc_i += 1;
+                let cu = (group_ids[t] % n_l1) as usize;
+                if cu < lo || cu >= hi {
+                    continue;
+                }
+                let (kind, bytes_per_lane, addrs) =
+                    block.access(acc_idx);
+                if tags[t] == Tag::Lds {
+                    self.bank_model
+                        .observe_addrs(addrs, &mut self.lds);
+                    continue;
+                }
+                let n = self.coalescer.sectors_from_addrs(
+                    addrs.iter().copied(),
+                    bytes_per_lane,
+                    &mut scratch,
+                );
+                self.delta.mem_requests += 1;
+                self.delta.actual_txn += n as u64;
+                let requested =
+                    addrs.len() as u64 * bytes_per_lane as u64;
+                self.delta.ideal_txn +=
+                    requested.div_ceil(sector_bytes).max(1);
+                match kind {
+                    MemKind::Read => {
+                        self.delta.l1_read_txn += n as u64
+                    }
+                    _ => self.delta.l1_write_txn += n as u64,
+                }
+                let l1 = &mut self.l1s[cu - lo];
+                let mut intra = 0u64;
+                for &sector in scratch.iter() {
+                    let line = sector * sector_bytes / l2_line;
+                    let ch = (line % channels) as usize;
+                    match kind {
+                        MemKind::Read => {
+                            let res = l1.access_line(sector, false);
+                            if !res.is_hit() {
+                                self.misses[ch].push(MissRec {
+                                    seq: seq_base | intra,
+                                    line,
+                                    write: false,
+                                });
+                                intra += 1;
+                            }
+                        }
+                        MemKind::Write => {
+                            // write-through, no-allocate L1
+                            l1.access_line(sector, true);
+                            self.misses[ch].push(MissRec {
+                                seq: seq_base | intra,
+                                line,
+                                write: true,
+                            });
+                            intra += 1;
+                        }
+                        MemKind::Atomic => {
+                            // read-modify-write resolved at L2
+                            self.delta.atomic_txn += 1;
+                            self.misses[ch].push(MissRec {
+                                seq: seq_base | intra,
+                                line,
+                                write: false,
+                            });
+                            intra += 1;
+                            self.misses[ch].push(MissRec {
+                                seq: seq_base | intra,
+                                line,
+                                write: true,
+                            });
+                            intra += 1;
+                        }
+                    }
+                }
+                debug_assert!(intra <= 0xFFFF, "seq overflow");
+            }
+        }
+        self.scratch = scratch;
+    }
+}
+
+/// Per-channel merge buffer + counters for the L2 phase.
+#[derive(Debug, Default)]
+struct ChannelLane {
+    merge: Vec<MissRec>,
+    delta: ChannelDelta,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct ChannelDelta {
+    l2_read_txn: u64,
+    l2_write_txn: u64,
+    hbm_read_bytes: u64,
+    hbm_write_bytes: u64,
+}
+
+/// The parallel engine. State-compatible with
+/// [`super::MemHierarchy`] at **dispatch boundaries**: caches persist
+/// across dispatches, `flush` attributes write-back traffic, and
+/// `traffic`/`lds_stats` carry the same counters, bit-identical to
+/// the sequential engine.
+///
+/// Unlike `MemHierarchy`, events stream in *batches*: `traffic`,
+/// `lds_stats` and the hit rates only reflect events up to the last
+/// drained batch. Call [`ShardedHierarchy::flush`] (or
+/// [`ShardedHierarchy::take_stats`]) at the dispatch boundary before
+/// reading them — mid-stream reads may lag by up to one batch.
+pub struct ShardedHierarchy {
+    n_l1: u64,
+    sector_bytes: u64,
+    l2_line: u64,
+    channels: u64,
+    threads: usize,
+    shards: Vec<L1Shard>,
+    l2: ChanneledL2,
+    lanes: Vec<ChannelLane>,
+    stats: TraceStats,
+    pub traffic: MemTraffic,
+    pub lds_stats: ConflictStats,
+    // reusable batch pool: `pool[..filled]` holds copied blocks
+    pool: Vec<EventBlock>,
+    filled: usize,
+    pending_records: usize,
+    pending_addr_words: usize,
+}
+
+/// Worker count for both phases: the host's cores, bounded so tiny
+/// machines and huge ones both behave.
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16)
+}
+
+impl ShardedHierarchy {
+    pub fn new(spec: &GpuSpec) -> ShardedHierarchy {
+        ShardedHierarchy::with_shards(spec, default_threads())
+    }
+
+    /// Build with an explicit shard/worker count (1 = parallel-free,
+    /// still batched). Counters are identical for every value.
+    pub fn with_shards(spec: &GpuSpec, threads: usize) -> ShardedHierarchy {
+        let instances = spec.l1.instances.max(1) as usize;
+        let threads = threads.clamp(1, instances);
+        let l1_line = spec.l1.line as u64;
+        let l2 = ChanneledL2::new(&spec.l2);
+        let channels = l2.channels() as u64;
+        let mut shards = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let lo = i * instances / threads;
+            let hi = (i + 1) * instances / threads;
+            shards.push(L1Shard {
+                first_cu: lo,
+                l1s: (lo..hi)
+                    .map(|_| {
+                        Cache::new(
+                            spec.l1.capacity,
+                            l1_line,
+                            spec.l1.ways,
+                            spec.l1.write_allocate,
+                        )
+                    })
+                    .collect(),
+                coalescer: Coalescer::new(l1_line),
+                bank_model: BankModel::new(spec.lds.banks),
+                scratch: Vec::with_capacity(128),
+                delta: ShardDelta::default(),
+                lds: ConflictStats::default(),
+                misses: vec![Vec::new(); channels as usize],
+            });
+        }
+        let lanes =
+            (0..channels).map(|_| ChannelLane::default()).collect();
+        ShardedHierarchy {
+            n_l1: instances as u64,
+            sector_bytes: l1_line,
+            l2_line: spec.l2.line as u64,
+            channels,
+            threads,
+            shards,
+            l2,
+            lanes,
+            stats: TraceStats::default(),
+            traffic: MemTraffic::default(),
+            lds_stats: ConflictStats::default(),
+            pool: Vec::new(),
+            filled: 0,
+            pending_records: 0,
+            pending_addr_words: 0,
+        }
+    }
+
+    /// Run both phases over the buffered (pooled) batch and fold the
+    /// results into the cumulative counters.
+    fn process_batch(&mut self) {
+        if self.filled == 0 {
+            return;
+        }
+        // move the pool out so `run_phases` can borrow it immutably
+        // alongside `&mut self` (it is put back untouched)
+        let pool = std::mem::take(&mut self.pool);
+        let filled = self.filled;
+        self.run_phases(&pool[..filled]);
+        self.pool = pool;
+        self.filled = 0;
+        self.pending_records = 0;
+        self.pending_addr_words = 0;
+    }
+
+    /// Consume caller-owned blocks without copying them into the pool —
+    /// the replay-many path for *recorded* traces. Any streamed blocks
+    /// buffered via [`BlockSink::on_block`] are drained first so event
+    /// order is preserved.
+    pub fn consume_blocks(&mut self, blocks: &[EventBlock]) {
+        self.process_batch();
+        let mut start = 0usize;
+        let (mut recs, mut words) = (0usize, 0usize);
+        for (i, b) in blocks.iter().enumerate() {
+            recs += b.len();
+            words += b.addr_words();
+            if recs >= BATCH_RECORDS || words >= BATCH_ADDR_WORDS {
+                self.run_phases(&blocks[start..=i]);
+                start = i + 1;
+                recs = 0;
+                words = 0;
+            }
+        }
+        if start < blocks.len() {
+            self.run_phases(&blocks[start..]);
+        }
+    }
+
+    /// The two parallel phases + counter merge over one batch slice.
+    fn run_phases(&mut self, blocks: &[EventBlock]) {
+        if blocks.is_empty() {
+            return;
+        }
+        let (n_l1, sector_bytes, l2_line, channels) = (
+            self.n_l1,
+            self.sector_bytes,
+            self.l2_line,
+            self.channels,
+        );
+
+        // ---- phase 1: L1 shards + trace stats, in parallel ----------
+        {
+            let stats = &mut self.stats;
+            let shards = &mut self.shards;
+            thread::scope(|s| {
+                for shard in shards.iter_mut() {
+                    s.spawn(move || {
+                        shard.consume(
+                            blocks,
+                            n_l1,
+                            sector_bytes,
+                            l2_line,
+                            channels,
+                        );
+                    });
+                }
+                s.spawn(move || {
+                    for b in blocks {
+                        for rec in b.records() {
+                            stats.on_record(&rec);
+                        }
+                    }
+                });
+            });
+        }
+
+        // ---- phase 2: L2 channels in parallel -----------------------
+        {
+            let shards = &self.shards;
+            let nch = self.channels as usize;
+            let chunk = nch.div_ceil(self.threads.min(nch).max(1));
+            let caches = self.l2.caches_mut();
+            let lanes = &mut self.lanes[..];
+            thread::scope(|s| {
+                for (ci, (cache_chunk, lane_chunk)) in caches
+                    .chunks_mut(chunk)
+                    .zip(lanes.chunks_mut(chunk))
+                    .enumerate()
+                {
+                    let ch0 = ci * chunk;
+                    s.spawn(move || {
+                        for (j, (cache, lane)) in cache_chunk
+                            .iter_mut()
+                            .zip(lane_chunk.iter_mut())
+                            .enumerate()
+                        {
+                            let ch = ch0 + j;
+                            lane.merge.clear();
+                            for shard in shards {
+                                lane.merge.extend_from_slice(
+                                    &shard.misses[ch],
+                                );
+                            }
+                            // unique keys: sort restores sequential
+                            // arrival order for this slice
+                            lane.merge
+                                .sort_unstable_by_key(|m| m.seq);
+                            for m in lane.merge.iter() {
+                                let local = m.line / channels;
+                                if m.write {
+                                    lane.delta.l2_write_txn += 1;
+                                } else {
+                                    lane.delta.l2_read_txn += 1;
+                                }
+                                match cache.access_line(local, m.write)
+                                {
+                                    AccessResult::Hit => {}
+                                    AccessResult::Miss {
+                                        evicted_dirty,
+                                    } => {
+                                        if !m.write {
+                                            lane.delta.hbm_read_bytes +=
+                                                l2_line;
+                                        }
+                                        if evicted_dirty {
+                                            lane.delta.hbm_write_bytes +=
+                                                l2_line;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+        }
+
+        // ---- merge --------------------------------------------------
+        for shard in self.shards.iter_mut() {
+            let d = std::mem::take(&mut shard.delta);
+            self.traffic.mem_requests += d.mem_requests;
+            self.traffic.actual_txn += d.actual_txn;
+            self.traffic.ideal_txn += d.ideal_txn;
+            self.traffic.l1_read_txn += d.l1_read_txn;
+            self.traffic.l1_write_txn += d.l1_write_txn;
+            self.traffic.atomic_txn += d.atomic_txn;
+            let lds = std::mem::take(&mut shard.lds);
+            self.lds_stats.accesses += lds.accesses;
+            self.lds_stats.passes += lds.passes;
+            self.lds_stats.worst = self.lds_stats.worst.max(lds.worst);
+            for stream in shard.misses.iter_mut() {
+                stream.clear();
+            }
+        }
+        for lane in self.lanes.iter_mut() {
+            let d = std::mem::take(&mut lane.delta);
+            self.traffic.l2_read_txn += d.l2_read_txn;
+            self.traffic.l2_write_txn += d.l2_write_txn;
+            self.traffic.hbm_read_bytes += d.hbm_read_bytes;
+            self.traffic.hbm_write_bytes += d.hbm_write_bytes;
+        }
+    }
+
+    /// End-of-kernel: drain the pending batch, then write back all
+    /// dirty L2 lines (same semantics as [`super::MemHierarchy::flush`]).
+    pub fn flush(&mut self) {
+        self.process_batch();
+        let wb = self.l2.flush();
+        self.traffic.hbm_write_bytes += wb * self.l2_line;
+    }
+
+    /// Take the trace statistics accumulated since the last call
+    /// (drains pending work first). One dispatch ⇒ one call.
+    pub fn take_stats(&mut self) -> TraceStats {
+        self.process_batch();
+        std::mem::take(&mut self.stats)
+    }
+
+    pub fn l1_hit_rate(&self) -> f64 {
+        let (h, m) = self
+            .shards
+            .iter()
+            .flat_map(|s| s.l1s.iter())
+            .fold((0u64, 0u64), |(h, m), c| (h + c.hits, m + c.misses));
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn l2_hit_rate(&self) -> f64 {
+        self.l2.hit_rate()
+    }
+
+    /// Worker/shard count in use.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl BlockSink for ShardedHierarchy {
+    fn on_block(&mut self, block: &EventBlock) {
+        if self.filled == self.pool.len() {
+            self.pool.push(EventBlock::default());
+        }
+        self.pool[self.filled].copy_from(block);
+        self.filled += 1;
+        self.pending_records += block.len();
+        self.pending_addr_words += block.addr_words();
+        if self.pending_records >= BATCH_RECORDS
+            || self.pending_addr_words >= BATCH_ADDR_WORDS
+        {
+            self.process_batch();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{mi100, v100};
+    use crate::memsim::MemHierarchy;
+    use crate::trace::block::BlockBuilder;
+    use crate::trace::synth::{RandomTrace, StreamTrace, StridedTrace};
+    use crate::trace::TraceSource;
+
+    /// Replay a trace through both engines; assert identical counters.
+    fn assert_equivalent(trace: &dyn TraceSource, spec: &GpuSpec) {
+        let mut seq = MemHierarchy::new(spec);
+        trace.replay(spec.group_size, &mut seq);
+        seq.flush();
+
+        for threads in [1, 3, 8] {
+            let mut sharded =
+                ShardedHierarchy::with_shards(spec, threads);
+            {
+                let mut b = BlockBuilder::new(&mut sharded);
+                trace.replay(spec.group_size, &mut b);
+                b.finish();
+            }
+            sharded.flush();
+            assert_eq!(
+                seq.traffic, sharded.traffic,
+                "traffic diverged ({} threads, {})",
+                threads, spec.name
+            );
+            assert_eq!(
+                seq.lds_stats, sharded.lds_stats,
+                "lds diverged ({threads} threads)"
+            );
+            assert_eq!(seq.l1_hit_rate(), sharded.l1_hit_rate());
+            assert_eq!(seq.l2_hit_rate(), sharded.l2_hit_rate());
+        }
+    }
+
+    #[test]
+    fn stream_equivalence() {
+        let t = StreamTrace::babelstream("triad", 1 << 14);
+        assert_equivalent(&t, &mi100());
+        assert_equivalent(&t, &v100());
+    }
+
+    #[test]
+    fn strided_equivalence() {
+        let t = StridedTrace {
+            name: "s".into(),
+            n: 1 << 13,
+            stride: 96,
+            bytes_per_lane: 4,
+        };
+        assert_equivalent(&t, &mi100());
+    }
+
+    #[test]
+    fn random_gather_equivalence() {
+        let t = RandomTrace {
+            name: "r".into(),
+            n: 1 << 13,
+            span: 1 << 24,
+            bytes_per_lane: 4,
+            seed: 42,
+        };
+        assert_equivalent(&t, &v100());
+    }
+
+    #[test]
+    fn batching_thresholds_do_not_change_results() {
+        // repeated dispatch/flush cycles through one engine:
+        // state persists across flush boundaries like the sequential
+        // engine's
+        let spec = mi100();
+        let t = StreamTrace::babelstream("copy", 1 << 12);
+        let mut seq = MemHierarchy::new(&spec);
+        let mut sharded = ShardedHierarchy::new(&spec);
+        for _ in 0..3 {
+            t.replay(64, &mut seq);
+            seq.flush();
+            let mut b = BlockBuilder::new(&mut sharded);
+            t.replay(64, &mut b);
+            b.finish();
+            sharded.flush();
+            assert_eq!(seq.traffic, sharded.traffic);
+        }
+    }
+
+    #[test]
+    fn consume_blocks_matches_streamed_blocks() {
+        // the zero-copy recorded-trace path must equal the streaming
+        // BlockBuilder path, including interleaving with buffered work
+        use crate::trace::block::BlockRecorder;
+        let spec = mi100();
+        let t = StreamTrace::babelstream("triad", 1 << 13);
+        let rec = BlockRecorder::record(&t, 64);
+
+        let mut streamed = ShardedHierarchy::new(&spec);
+        {
+            let mut builder = BlockBuilder::new(&mut streamed);
+            t.replay(64, &mut builder);
+            builder.finish();
+        }
+        streamed.flush();
+
+        let mut borrowed = ShardedHierarchy::new(&spec);
+        borrowed.consume_blocks(&rec.blocks);
+        borrowed.flush();
+
+        assert_eq!(streamed.traffic, borrowed.traffic);
+        assert_eq!(streamed.take_stats(), borrowed.take_stats());
+    }
+
+    #[test]
+    fn take_stats_matches_direct_collection() {
+        let spec = mi100();
+        let t = StreamTrace::babelstream("add", 1 << 12);
+        let mut direct = crate::trace::TraceStats::default();
+        t.replay(64, &mut direct);
+
+        let mut sharded = ShardedHierarchy::new(&spec);
+        let mut b = BlockBuilder::new(&mut sharded);
+        t.replay(64, &mut b);
+        b.finish();
+        let got = sharded.take_stats();
+        assert_eq!(direct, got);
+        // second take is empty (per-dispatch semantics)
+        assert_eq!(
+            sharded.take_stats(),
+            crate::trace::TraceStats::default()
+        );
+    }
+
+    #[test]
+    fn empty_flush_is_harmless() {
+        let mut h = ShardedHierarchy::new(&v100());
+        h.flush();
+        assert_eq!(h.traffic, MemTraffic::default());
+    }
+}

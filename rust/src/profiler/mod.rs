@@ -14,4 +14,4 @@ pub mod session;
 
 pub use nvprof_tool::{NvprofReport, NvprofTool};
 pub use rocprof_tool::{RocprofReport, RocprofTool};
-pub use session::{KernelAggregate, ProfileSession};
+pub use session::{EngineMode, KernelAggregate, ProfileSession};

@@ -1,13 +1,41 @@
 //! A profiling session: replay dispatches on a simulated GPU, produce
 //! per-dispatch records and per-kernel aggregates.
+//!
+//! Two interchangeable replay engines back a session (bit-identical
+//! counters, proven by `tests/engine_equiv.rs`):
+//!
+//! * [`EngineMode::Sharded`] (default) — events are batched into SoA
+//!   [`crate::trace::EventBlock`]s and replayed through the parallel
+//!   [`ShardedHierarchy`] (per-CU L1 shards + address-interleaved L2
+//!   channels);
+//! * [`EngineMode::Sequential`] — the original one-virtual-call-per-
+//!   event path through [`MemHierarchy`], kept as the reference
+//!   baseline for equivalence tests and benchmarks.
+
+use std::collections::HashMap;
 
 use crate::arch::GpuSpec;
 use crate::counters::DispatchRecord;
 use crate::memsim::banks::ConflictStats;
-use crate::memsim::{MemHierarchy, MemTraffic};
+use crate::memsim::{MemHierarchy, MemTraffic, ShardedHierarchy};
 use crate::timing::{kernel_time, KernelCost};
+use crate::trace::block::{BlockBuilder, EventBlock};
 use crate::trace::sink::FanoutSink;
 use crate::trace::{TraceSource, TraceStats};
+
+/// Which replay engine a session uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Event-at-a-time reference path.
+    Sequential,
+    /// Batched, sharded parallel path (production default).
+    Sharded,
+}
+
+enum EngineState {
+    Sequential(MemHierarchy),
+    Sharded(ShardedHierarchy),
+}
 
 /// Per-kernel aggregate over all dispatches of that kernel in a session.
 #[derive(Debug, Clone, Default)]
@@ -32,21 +60,6 @@ impl KernelAggregate {
     }
 }
 
-fn traffic_delta(now: &MemTraffic, mark: &MemTraffic) -> MemTraffic {
-    MemTraffic {
-        l1_read_txn: now.l1_read_txn - mark.l1_read_txn,
-        l1_write_txn: now.l1_write_txn - mark.l1_write_txn,
-        l2_read_txn: now.l2_read_txn - mark.l2_read_txn,
-        l2_write_txn: now.l2_write_txn - mark.l2_write_txn,
-        hbm_read_bytes: now.hbm_read_bytes - mark.hbm_read_bytes,
-        hbm_write_bytes: now.hbm_write_bytes - mark.hbm_write_bytes,
-        mem_requests: now.mem_requests - mark.mem_requests,
-        ideal_txn: now.ideal_txn - mark.ideal_txn,
-        actual_txn: now.actual_txn - mark.actual_txn,
-        atomic_txn: now.atomic_txn - mark.atomic_txn,
-    }
-}
-
 /// Replays kernels on one GPU model; collects everything both tool
 /// front-ends need in a single pass per dispatch.
 ///
@@ -57,47 +70,146 @@ fn traffic_delta(now: &MemTraffic, mark: &MemTraffic) -> MemTraffic {
 pub struct ProfileSession {
     pub spec: GpuSpec,
     pub dispatches: Vec<DispatchRecord>,
-    hier: MemHierarchy,
+    engine: EngineState,
     traffic_mark: MemTraffic,
     lds_mark: ConflictStats,
 }
 
 impl ProfileSession {
+    /// The production configuration: the sharded, batched engine.
     pub fn new(spec: GpuSpec) -> Self {
-        let hier = MemHierarchy::new(&spec);
+        Self::with_engine(spec, EngineMode::Sharded)
+    }
+
+    /// The event-at-a-time reference engine (equivalence baseline).
+    pub fn sequential(spec: GpuSpec) -> Self {
+        Self::with_engine(spec, EngineMode::Sequential)
+    }
+
+    /// Sharded engine with an explicit worker budget. Coordinators
+    /// running several sessions concurrently use this to divide the
+    /// host's cores between them instead of oversubscribing (counters
+    /// are identical for every budget).
+    pub fn sharded_with_threads(spec: GpuSpec, threads: usize) -> Self {
+        let engine = EngineState::Sharded(
+            ShardedHierarchy::with_shards(&spec, threads),
+        );
+        Self::from_engine(spec, engine)
+    }
+
+    pub fn with_engine(spec: GpuSpec, mode: EngineMode) -> Self {
+        let engine = match mode {
+            EngineMode::Sequential => {
+                EngineState::Sequential(MemHierarchy::new(&spec))
+            }
+            EngineMode::Sharded => {
+                EngineState::Sharded(ShardedHierarchy::new(&spec))
+            }
+        };
+        Self::from_engine(spec, engine)
+    }
+
+    fn from_engine(spec: GpuSpec, engine: EngineState) -> Self {
         ProfileSession {
             spec,
             dispatches: Vec::new(),
-            hier,
+            engine,
             traffic_mark: MemTraffic::default(),
             lds_mark: ConflictStats::default(),
         }
     }
 
+    pub fn engine_mode(&self) -> EngineMode {
+        match self.engine {
+            EngineState::Sequential(_) => EngineMode::Sequential,
+            EngineState::Sharded(_) => EngineMode::Sharded,
+        }
+    }
+
     /// Profile one kernel dispatch.
     pub fn profile(&mut self, src: &dyn TraceSource) -> &DispatchRecord {
-        let mut stats = TraceStats::default();
-        {
-            let mut fan =
-                FanoutSink::new(vec![&mut stats, &mut self.hier]);
-            src.replay(self.spec.group_size, &mut fan);
-        }
-        // attribute this dispatch's dirty data to it (write-back at
-        // kernel end), then snapshot the delta
-        self.hier.flush();
-        let traffic =
-            traffic_delta(&self.hier.traffic, &self.traffic_mark);
-        let lds_passes =
-            self.hier.lds_stats.passes - self.lds_mark.passes;
-        self.traffic_mark = self.hier.traffic;
-        self.lds_mark = self.hier.lds_stats;
+        // replay through the engine, attribute this dispatch's dirty
+        // data to it (write-back at kernel end), then read the totals
+        let (stats, traffic_now, lds_now) = match &mut self.engine {
+            EngineState::Sequential(hier) => {
+                let mut stats = TraceStats::default();
+                {
+                    let mut fan =
+                        FanoutSink::new(vec![&mut stats, hier]);
+                    src.replay(self.spec.group_size, &mut fan);
+                }
+                hier.flush();
+                (stats, hier.traffic, hier.lds_stats)
+            }
+            EngineState::Sharded(eng) => {
+                {
+                    let mut builder = BlockBuilder::new(eng);
+                    src.replay(self.spec.group_size, &mut builder);
+                    builder.finish();
+                }
+                eng.flush();
+                let stats = eng.take_stats();
+                (stats, eng.traffic, eng.lds_stats)
+            }
+        };
+        self.record_dispatch(src.name(), stats, traffic_now, lds_now)
+    }
+
+    /// Profile one dispatch from a *recorded* block trace (the
+    /// replay-many shape: record a kernel once with
+    /// [`crate::trace::BlockBuilder`], then replay it across sessions
+    /// without regenerating events). Counters match [`Self::profile`]
+    /// of the originating trace exactly.
+    pub fn profile_blocks(
+        &mut self,
+        kernel: &str,
+        blocks: &[EventBlock],
+    ) -> &DispatchRecord {
+        let (stats, traffic_now, lds_now) = match &mut self.engine {
+            EngineState::Sequential(hier) => {
+                let mut stats = TraceStats::default();
+                {
+                    let mut fan =
+                        FanoutSink::new(vec![&mut stats, hier]);
+                    for b in blocks {
+                        b.replay_into(&mut fan);
+                    }
+                }
+                hier.flush();
+                (stats, hier.traffic, hier.lds_stats)
+            }
+            EngineState::Sharded(eng) => {
+                // zero-copy: recorded blocks are consumed in place
+                eng.consume_blocks(blocks);
+                eng.flush();
+                let stats = eng.take_stats();
+                (stats, eng.traffic, eng.lds_stats)
+            }
+        };
+        self.record_dispatch(kernel, stats, traffic_now, lds_now)
+    }
+
+    /// Shared dispatch bookkeeping: delta the counters against the
+    /// running marks, run the timing model, append the record.
+    fn record_dispatch(
+        &mut self,
+        kernel: &str,
+        stats: TraceStats,
+        traffic_now: MemTraffic,
+        lds_now: ConflictStats,
+    ) -> &DispatchRecord {
+        // per-dispatch counters are deltas against the running totals
+        let traffic = traffic_now - self.traffic_mark;
+        let lds_passes = lds_now.passes - self.lds_mark.passes;
+        self.traffic_mark = traffic_now;
+        self.lds_mark = lds_now;
 
         let mut cost = KernelCost::from_run(&stats, &traffic);
         cost.lds_passes = lds_passes;
         let time = kernel_time(&self.spec, &cost);
 
         self.dispatches.push(DispatchRecord {
-            kernel: src.name().to_string(),
+            kernel: kernel.to_string(),
             stats,
             traffic,
             duration_s: time.total.0,
@@ -115,35 +227,24 @@ impl ProfileSession {
         }
     }
 
-    /// Aggregate dispatches by kernel name (insertion order preserved).
+    /// Aggregate dispatches by kernel name (insertion order preserved;
+    /// lookup is by map, so sessions with many kernels stay linear).
     pub fn aggregates(&self) -> Vec<KernelAggregate> {
+        let mut index: HashMap<&str, usize> = HashMap::new();
         let mut out: Vec<KernelAggregate> = Vec::new();
         for d in &self.dispatches {
-            let agg = match out.iter_mut().find(|a| a.kernel == d.kernel) {
-                Some(a) => a,
-                None => {
-                    out.push(KernelAggregate {
-                        kernel: d.kernel.clone(),
-                        ..Default::default()
-                    });
-                    out.last_mut().unwrap()
-                }
-            };
+            let i = *index.entry(d.kernel.as_str()).or_insert_with(|| {
+                out.push(KernelAggregate {
+                    kernel: d.kernel.clone(),
+                    ..Default::default()
+                });
+                out.len() - 1
+            });
+            let agg = &mut out[i];
             agg.invocations += 1;
             agg.total_duration_s += d.duration_s;
             agg.stats.merge(&d.stats);
-            let t = &mut agg.traffic;
-            let s = &d.traffic;
-            t.l1_read_txn += s.l1_read_txn;
-            t.l1_write_txn += s.l1_write_txn;
-            t.l2_read_txn += s.l2_read_txn;
-            t.l2_write_txn += s.l2_write_txn;
-            t.hbm_read_bytes += s.hbm_read_bytes;
-            t.hbm_write_bytes += s.hbm_write_bytes;
-            t.mem_requests += s.mem_requests;
-            t.ideal_txn += s.ideal_txn;
-            t.actual_txn += s.actual_txn;
-            t.atomic_txn += s.atomic_txn;
+            agg.traffic += d.traffic;
         }
         out
     }
@@ -222,5 +323,56 @@ mod tests {
         s.profile(&t);
         let sum: f64 = s.dispatches.iter().map(|d| d.duration_s).sum();
         assert!((s.total_time_s() - sum).abs() < 1e-15);
+    }
+
+    #[test]
+    fn profile_blocks_matches_profile() {
+        use crate::trace::block::BlockRecorder;
+        use crate::trace::TraceSource;
+
+        let spec = mi100();
+        let t = StreamTrace::babelstream("triad", 1 << 12);
+        let rec = BlockRecorder::record(&t, spec.group_size);
+
+        for mode in [EngineMode::Sequential, EngineMode::Sharded] {
+            let mut live =
+                ProfileSession::with_engine(spec.clone(), mode);
+            let mut replayed =
+                ProfileSession::with_engine(spec.clone(), mode);
+            live.profile(&t);
+            replayed.profile_blocks(t.name(), &rec.blocks);
+            let (a, b) = (&live.dispatches[0], &replayed.dispatches[0]);
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.traffic, b.traffic, "{mode:?}");
+            assert_eq!(a.stats, b.stats, "{mode:?}");
+            assert_eq!(a.duration_s, b.duration_s);
+        }
+    }
+
+    #[test]
+    fn engines_agree_per_dispatch() {
+        // the full session path (deltas, flush attribution, timing)
+        // must match dispatch-for-dispatch across engines
+        let traces = [
+            StreamTrace::babelstream("triad", 1 << 13),
+            StreamTrace::babelstream("dot", 1 << 13),
+        ];
+        for spec in [mi100(), v100()] {
+            let mut seq = ProfileSession::sequential(spec.clone());
+            let mut shr = ProfileSession::new(spec.clone());
+            assert_eq!(shr.engine_mode(), EngineMode::Sharded);
+            for t in &traces {
+                seq.profile(t);
+                shr.profile(t);
+            }
+            assert_eq!(seq.dispatches.len(), shr.dispatches.len());
+            for (a, b) in
+                seq.dispatches.iter().zip(shr.dispatches.iter())
+            {
+                assert_eq!(a.traffic, b.traffic, "{}", spec.name);
+                assert_eq!(a.stats, b.stats, "{}", spec.name);
+                assert_eq!(a.duration_s, b.duration_s, "{}", spec.name);
+            }
+        }
     }
 }

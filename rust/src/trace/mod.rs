@@ -5,15 +5,31 @@
 //! engines and timing model are all sinks over the *same* stream, which is
 //! what lets one workload be "profiled" under both vendors' semantics.
 //!
-//! Events are streamed (never materialized) so multi-million-event
-//! workloads run in constant memory — this is the simulator's hot path
-//! (see EXPERIMENTS.md §Perf).
+//! Two replay forms share one generator API:
+//!
+//! * **streamed** — every event is one [`EventSink`] virtual call; the
+//!   original constant-memory path, kept as the compatibility surface;
+//! * **batched** — [`block::BlockBuilder`] packs the same stream into
+//!   chunked SoA [`block::EventBlock`]s (addresses / active masks /
+//!   kinds in parallel arrays) so consumers amortize dispatch over
+//!   thousands of events. The sharded memory hierarchy
+//!   ([`crate::memsim::ShardedHierarchy`]) consumes blocks directly and
+//!   replays them across per-CU L1 shards and address-interleaved L2
+//!   channels; see `memsim/` for the ordering contract that keeps the
+//!   two forms bit-identical.
+//!
+//! Blocks hold at most [`block::BLOCK_CAPACITY`] records, so
+//! multi-million-event workloads still replay in bounded memory.
 
+pub mod block;
 pub mod event;
 pub mod sink;
 pub mod stats;
 pub mod synth;
 
+pub use block::{
+    BlockBuilder, BlockRecord, BlockRecorder, BlockSink, EventBlock,
+};
 pub use event::{GroupCtx, LdsAccess, MemAccess, MemKind, MAX_LANES};
 pub use sink::{EventSink, FanoutSink, NullSink};
 pub use stats::TraceStats;

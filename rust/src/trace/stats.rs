@@ -96,6 +96,64 @@ impl TraceStats {
     pub fn total_group_insts(&self) -> u64 {
         self.inst.total()
     }
+
+    /// Fold one batched record in — the SoA fast path, equivalent to the
+    /// [`EventSink`] methods but without rebuilding a 512-byte access
+    /// struct per record.
+    pub fn on_record(&mut self, rec: &crate::trace::block::BlockRecord<'_>) {
+        use crate::trace::block::BlockRecord;
+        match *rec {
+            BlockRecord::Inst {
+                group_id,
+                class,
+                count,
+            } => {
+                self.inst.add(class, count);
+                self.groups = self.groups.max(group_id + 1);
+            }
+            BlockRecord::Mem {
+                group_id,
+                kind,
+                bytes_per_lane,
+                addrs,
+            } => {
+                let class = match kind {
+                    MemKind::Read => InstClass::GlobalLoad,
+                    MemKind::Write => InstClass::GlobalStore,
+                    MemKind::Atomic => InstClass::GlobalAtomic,
+                };
+                self.inst.add(class, 1);
+                let lanes = addrs.len() as u64;
+                self.active_lane_sum += lanes;
+                let bytes = lanes * bytes_per_lane as u64;
+                match kind {
+                    MemKind::Read => {
+                        self.mem_reads += 1;
+                        self.bytes_read_requested += bytes;
+                    }
+                    MemKind::Write => {
+                        self.mem_writes += 1;
+                        self.bytes_written_requested += bytes;
+                    }
+                    MemKind::Atomic => {
+                        self.mem_atomics += 1;
+                        self.bytes_read_requested += bytes;
+                        self.bytes_written_requested += bytes;
+                    }
+                }
+                self.groups = self.groups.max(group_id + 1);
+            }
+            BlockRecord::Lds { group_id, kind, .. } => {
+                let class = match kind {
+                    MemKind::Read => InstClass::LdsLoad,
+                    _ => InstClass::LdsStore,
+                };
+                self.inst.add(class, 1);
+                self.lds_ops += 1;
+                self.groups = self.groups.max(group_id + 1);
+            }
+        }
+    }
 }
 
 impl EventSink for TraceStats {

@@ -45,6 +45,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Operations per second: the registered item throughput, or the
+    /// iteration rate when the bench had no item count.
+    pub fn ops_per_sec(&self) -> f64 {
+        self.throughput.unwrap_or_else(|| {
+            if self.time.mean > 0.0 {
+                1.0 / self.time.mean
+            } else {
+                0.0
+            }
+        })
+    }
+
     pub fn report_line(&self) -> String {
         let mean = self.time.mean;
         let (scale, unit) = if mean < 1e-6 {
@@ -154,6 +166,43 @@ impl BenchRunner {
     }
 }
 
+/// Serialize results as a flat `{"name": ops_per_sec}` JSON object —
+/// the machine-readable artifact CI diffs (`serde` is unavailable
+/// offline; the format is simple enough to emit by hand).
+pub fn results_to_json(results: &[BenchResult]) -> String {
+    let mut out = String::from("{\n");
+    for (i, r) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        // bench names are path-like ASCII (group/case); escape the
+        // quote/backslash anyway so the artifact is always valid JSON
+        let name: String = r
+            .name
+            .chars()
+            .flat_map(|c| match c {
+                '"' => vec!['\\', '"'],
+                '\\' => vec!['\\', '\\'],
+                c => vec![c],
+            })
+            .collect();
+        out.push_str(&format!(
+            "  \"{}\": {:.3}{}\n",
+            name,
+            r.ops_per_sec(),
+            comma
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Write [`results_to_json`] to `path`.
+pub fn write_json(
+    results: &[BenchResult],
+    path: &std::path::Path,
+) -> std::io::Result<()> {
+    std::fs::write(path, results_to_json(results))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +224,26 @@ mod tests {
         assert_eq!(results.len(), 2);
         assert!(results[0].time.mean >= 0.0);
         assert!(results[1].throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_artifact_shape() {
+        let results = vec![
+            BenchResult {
+                name: "g/a".into(),
+                time: Summary::of(&[0.5, 0.5]),
+                throughput: Some(1000.0),
+            },
+            BenchResult {
+                name: "g/b".into(),
+                time: Summary::of(&[0.25, 0.25]),
+                throughput: None,
+            },
+        ];
+        let json = results_to_json(&results);
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
+        assert!(json.contains("\"g/a\": 1000.000,"), "{json}");
+        assert!(json.contains("\"g/b\": 4.000\n"), "{json}");
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Engine equivalence: the sharded, batched replay engine must produce
+//! exactly the same `MemTraffic`, hit rates and `TraceStats` as the
+//! sequential reference path — for contiguous, strided, gather and
+//! atomic access mixes, on all three GPU presets, at every shard count.
+
+use rocline::arch::presets;
+use rocline::arch::GpuSpec;
+use rocline::memsim::{MemHierarchy, MemTraffic, ShardedHierarchy};
+use rocline::profiler::{EngineMode, ProfileSession};
+use rocline::trace::block::BlockBuilder;
+use rocline::trace::event::{LdsAccess, MemAccess, MemKind};
+use rocline::trace::synth::{RandomTrace, StreamTrace, StridedTrace};
+use rocline::trace::{
+    for_each_group, EventSink, TraceSource, TraceStats,
+};
+use rocline::util::check::{prop_assert, Checker};
+use rocline::util::Xoshiro256;
+
+/// A kernel mixing every event kind: contiguous reads, strided reads,
+/// random gathers, LDS traffic and atomic read-modify-writes (the PIC
+/// deposition shape), parameterized by seed.
+struct MixedTrace {
+    n: u64,
+    span: u64,
+    seed: u64,
+}
+
+impl TraceSource for MixedTrace {
+    fn name(&self) -> &str {
+        "mixed"
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        let mut rng = Xoshiro256::seed_from_u64(self.seed);
+        let slots = self.span / 4;
+        let mut addrs = Vec::with_capacity(group_size as usize);
+        for_each_group(self.n, group_size, |ctx, range| {
+            let lanes = (range.end - range.start) as u32;
+            let base = range.start * 4;
+            sink.on_mem(
+                ctx,
+                &MemAccess::contiguous(MemKind::Read, base, lanes, 4),
+            );
+            sink.on_mem(
+                ctx,
+                &MemAccess::strided(
+                    MemKind::Read,
+                    self.span + base * 16,
+                    lanes,
+                    68, // deliberately unaligned stride
+                    4,
+                ),
+            );
+            addrs.clear();
+            for _ in 0..lanes {
+                addrs.push(rng.below(slots) * 4);
+            }
+            sink.on_mem(ctx, &MemAccess::gather(MemKind::Atomic, &addrs, 4));
+            sink.on_lds(
+                ctx,
+                &LdsAccess::from_lane_addrs(MemKind::Write, &addrs, 4),
+            );
+            addrs.clear();
+            for _ in 0..lanes {
+                addrs.push(2 * self.span + rng.below(slots) * 4);
+            }
+            sink.on_mem(ctx, &MemAccess::gather(MemKind::Read, &addrs, 4));
+            sink.on_inst(
+                ctx,
+                rocline::arch::InstClass::ValuArith,
+                17,
+            );
+            sink.on_mem(
+                ctx,
+                &MemAccess::contiguous(
+                    MemKind::Write,
+                    3 * self.span + base,
+                    lanes,
+                    4,
+                ),
+            );
+        });
+    }
+}
+
+/// Run one trace through both raw engines and compare every counter.
+fn assert_raw_equivalence(
+    trace: &dyn TraceSource,
+    spec: &GpuSpec,
+    shard_counts: &[usize],
+) {
+    let mut seq_stats = TraceStats::default();
+    let mut seq = MemHierarchy::new(spec);
+    trace.replay(spec.group_size, &mut seq_stats);
+    trace.replay(spec.group_size, &mut seq);
+    seq.flush();
+
+    for &threads in shard_counts {
+        let mut sharded = ShardedHierarchy::with_shards(spec, threads);
+        {
+            let mut builder = BlockBuilder::new(&mut sharded);
+            trace.replay(spec.group_size, &mut builder);
+            builder.finish();
+        }
+        sharded.flush();
+        let sharded_stats = sharded.take_stats();
+        assert_eq!(
+            seq.traffic, sharded.traffic,
+            "MemTraffic diverged: {} on {} with {} shards",
+            trace.name(),
+            spec.name,
+            threads
+        );
+        assert_eq!(
+            seq_stats, sharded_stats,
+            "TraceStats diverged: {} on {} with {} shards",
+            trace.name(),
+            spec.name,
+            threads
+        );
+        assert_eq!(
+            seq.lds_stats, sharded.lds_stats,
+            "LDS stats diverged: {} on {}",
+            trace.name(),
+            spec.name
+        );
+        // hit rates are pure functions of identical cache states: the
+        // floats must match bit-for-bit, not just approximately
+        assert_eq!(seq.l1_hit_rate(), sharded.l1_hit_rate());
+        assert_eq!(seq.l2_hit_rate(), sharded.l2_hit_rate());
+    }
+}
+
+#[test]
+fn contiguous_mix_equivalent_on_all_presets() {
+    for spec in presets::all_gpus() {
+        for op in ["copy", "add", "dot"] {
+            let t = StreamTrace::babelstream(op, 1 << 13);
+            assert_raw_equivalence(&t, &spec, &[1, 4, 16]);
+        }
+    }
+}
+
+#[test]
+fn strided_equivalent_on_all_presets() {
+    for spec in presets::all_gpus() {
+        for stride in [8u64, 68, 128, 4096] {
+            let t = StridedTrace {
+                name: format!("strided_{stride}"),
+                n: 1 << 12,
+                stride,
+                bytes_per_lane: 4,
+            };
+            assert_raw_equivalence(&t, &spec, &[5]);
+        }
+    }
+}
+
+#[test]
+fn random_gather_equivalent_on_all_presets() {
+    for spec in presets::all_gpus() {
+        let t = RandomTrace {
+            name: "gather".into(),
+            n: 1 << 12,
+            span: 1 << 23,
+            bytes_per_lane: 8,
+            seed: 7,
+        };
+        assert_raw_equivalence(&t, &spec, &[1, 7]);
+    }
+}
+
+#[test]
+fn atomic_mix_equivalent_on_all_presets() {
+    for spec in presets::all_gpus() {
+        let t = MixedTrace {
+            n: 1 << 12,
+            span: 1 << 22,
+            seed: 11,
+        };
+        assert_raw_equivalence(&t, &spec, &[1, 3, 16]);
+    }
+}
+
+#[test]
+fn property_random_mixes_equivalent() {
+    // randomized mixed kernels on a rotating preset: the property is
+    // bit-identical counters at an arbitrary shard count
+    let gpus = presets::all_gpus();
+    let mut case = 0usize;
+    Checker::new("engine equivalence").cases(12).run(|rng| {
+        let spec = &gpus[case % gpus.len()];
+        case += 1;
+        let t = MixedTrace {
+            n: 512 + rng.below(2048),
+            span: 1 << (18 + rng.below(4)),
+            seed: rng.below(u64::MAX),
+        };
+        let threads = 1 + rng.below(16) as usize;
+
+        let mut seq = MemHierarchy::new(spec);
+        t.replay(spec.group_size, &mut seq);
+        seq.flush();
+
+        let mut sharded = ShardedHierarchy::with_shards(spec, threads);
+        {
+            let mut builder = BlockBuilder::new(&mut sharded);
+            t.replay(spec.group_size, &mut builder);
+            builder.finish();
+        }
+        sharded.flush();
+
+        prop_assert(seq.traffic == sharded.traffic, || {
+            format!(
+                "{} shards on {}: {:?} vs {:?}",
+                threads, spec.name, seq.traffic, sharded.traffic
+            )
+        })
+    });
+}
+
+#[test]
+fn sessions_agree_across_engines_with_warm_caches() {
+    // full ProfileSession path: dispatch deltas with caches kept warm
+    // across dispatches must match dispatch-for-dispatch
+    for spec in presets::all_gpus() {
+        let copy = StreamTrace::babelstream("copy", 1 << 12);
+        let dot = StreamTrace::babelstream("dot", 1 << 12);
+        let mixed = MixedTrace {
+            n: 1 << 11,
+            span: 1 << 20,
+            seed: 3,
+        };
+        let kernels: [&dyn TraceSource; 3] = [&copy, &dot, &mixed];
+
+        let mut seq = ProfileSession::with_engine(
+            spec.clone(),
+            EngineMode::Sequential,
+        );
+        let mut shr = ProfileSession::new(spec.clone());
+        seq.profile_app(&kernels, 2);
+        shr.profile_app(&kernels, 2);
+
+        assert_eq!(seq.dispatches.len(), shr.dispatches.len());
+        for (a, b) in seq.dispatches.iter().zip(shr.dispatches.iter()) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.traffic, b.traffic, "{} {}", spec.name, a.kernel);
+            assert_eq!(a.stats, b.stats, "{} {}", spec.name, a.kernel);
+            assert_eq!(a.duration_s, b.duration_s);
+        }
+        // and the per-kernel aggregates (map-keyed path) line up too
+        let (sa, sb) = (seq.aggregates(), shr.aggregates());
+        assert_eq!(sa.len(), sb.len());
+        for (a, b) in sa.iter().zip(sb.iter()) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.invocations, b.invocations);
+            assert_eq!(a.traffic, b.traffic);
+        }
+    }
+}
+
+#[test]
+fn empty_and_tiny_dispatches_equivalent() {
+    // degenerate shapes: single group, partial group, zero work
+    let spec = presets::mi60();
+    let tiny = StreamTrace::babelstream("copy", 10); // one partial group
+    assert_raw_equivalence(&tiny, &spec, &[1, 16]);
+
+    let mut seq = MemHierarchy::new(&spec);
+    seq.flush();
+    let mut sharded = ShardedHierarchy::new(&spec);
+    sharded.flush();
+    assert_eq!(seq.traffic, sharded.traffic);
+    assert_eq!(seq.traffic, MemTraffic::default());
+}

@@ -160,6 +160,7 @@ fn rocprof_csv_matches_dispatch_count() {
     assert_eq!(rows.len(), 2 * 5);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_stream_backend_when_artifacts_exist() {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))

@@ -1,0 +1,123 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The crate registry is unavailable in this environment, so this shim
+//! provides exactly the surface rocline uses: [`Error`], [`Result`],
+//! and the `anyhow!` / `bail!` / `ensure!` macros. Unlike the real
+//! crate it stores a rendered message instead of the boxed source
+//! chain — sufficient for a CLI that only ever displays its errors.
+
+use std::fmt;
+
+/// A rendered, type-erased error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the cause chain; we carry a flat
+        // message, so both forms render identically.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes this blanket conversion coherent (same trick as
+// the real crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with our [`Error`] as the default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke: {}", 7);
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke: 7");
+        assert_eq!(format!("{e:#}"), "broke: 7");
+        assert_eq!(format!("{e:?}"), "broke: 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x < 10, "too big: {x}");
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert!(check(30).unwrap_err().to_string().contains("30"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
