@@ -1,15 +1,76 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus a bench smoke pass.
+# CI entry point: lint, tier-1 verification, bench smoke + regression
+# gate, and (optionally) one shard of the paper sweep.
 #
-#   ci/run.sh          # build + test + fast bench, checks the artifact
-#   ci/run.sh --full   # same but benches at full sample counts
+#   ci/run.sh                      # lint + build + test + fast bench + gate
+#   ci/run.sh --full               # benches at full sample counts
+#   ci/run.sh --update-baseline    # refresh ci/bench_baseline.json from
+#                                  # this machine's bench run (commit it)
+#   ci/run.sh --shard i/n          # additionally run shard i of n of the
+#                                  # paper sweep (reproduce --all --shard)
+#                                  # into out-shard-i-of-n/
 #
-# The bench step runs `benches/hotpath.rs`, which writes
-# BENCH_hotpath.json (bench name -> ops/s, plus speedup/* ratios of the
-# sharded replay engine over the sequential baseline) at the repo root.
+# CI entry points (see .github/workflows/ci.yml):
+#   * shard matrix — the workflow fans the sweep out as a matrix job
+#     over `--shard 0/2` and `--shard 1/2`. Shards deterministically
+#     partition the (GPU, case) matrix (coordinator/shard.rs), each
+#     case's trace is recorded once and replayed on every GPU, and
+#     concatenating the shards' out-shard-*/ directories reproduces the
+#     unsharded sweep byte-for-byte.
+#   * bench gate — `rocline bench-gate` compares the speedup/* ratios in
+#     BENCH_hotpath.json (sharded replay engine vs the sequential
+#     reference) against the checked-in ci/bench_baseline.json and
+#     fails on a >20% regression. Refresh the baseline on a quiet
+#     machine with `ci/run.sh --update-baseline` and commit the result.
+#   * lint — `cargo fmt -- --check` and `cargo clippy -- -D warnings`.
+#     Both are skipped with a notice when the component is not
+#     installed (offline toolchains); set ROCLINE_LINT_STRICT=1 (the
+#     workflow does) to fail the build on lint findings instead of
+#     warning.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+SHARD=""
+FULL=0
+UPDATE_BASELINE=0
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --full) FULL=1 ;;
+        --update-baseline) UPDATE_BASELINE=1 ;;
+        --shard)
+            [ $# -ge 2 ] || { echo "--shard needs i/n" >&2; exit 2; }
+            SHARD="$2"
+            shift
+            ;;
+        *) echo "unknown argument '$1'" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+lint_failed=0
+echo "== lint: cargo fmt -- --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt -- --check || lint_failed=1
+else
+    echo "rustfmt not installed; skipping"
+fi
+
+echo "== lint: cargo clippy -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -- -D warnings || lint_failed=1
+else
+    echo "clippy not installed; skipping"
+fi
+
+if [ "$lint_failed" = 1 ]; then
+    if [ "${ROCLINE_LINT_STRICT:-0}" = 1 ]; then
+        echo "lint failed (ROCLINE_LINT_STRICT=1)" >&2
+        exit 1
+    fi
+    echo "WARNING: lint findings above (non-blocking; set" \
+         "ROCLINE_LINT_STRICT=1 to enforce)"
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
@@ -18,7 +79,7 @@ echo "== tier-1: cargo test -q =="
 cargo test -q
 
 echo "== bench smoke: hotpath =="
-if [ "${1:-}" = "--full" ]; then
+if [ "$FULL" = 1 ]; then
     cargo bench --bench hotpath
 else
     ROCLINE_BENCH_FAST=1 cargo bench --bench hotpath
@@ -32,4 +93,18 @@ grep -E '"speedup/' BENCH_hotpath.json || {
     echo "BENCH_hotpath.json has no speedup/* entries (bench names drifted?)" >&2
     exit 1
 }
-echo "== ok: BENCH_hotpath.json =="
+
+echo "== bench gate: speedup/* vs ci/bench_baseline.json =="
+if [ "$UPDATE_BASELINE" = 1 ]; then
+    ./target/release/rocline bench-gate --update-baseline
+else
+    ./target/release/rocline bench-gate
+fi
+
+if [ -n "$SHARD" ]; then
+    OUT="out-shard-${SHARD//\//-of-}"
+    echo "== paper sweep shard $SHARD -> $OUT =="
+    ./target/release/rocline reproduce --all --shard "$SHARD" --out "$OUT"
+fi
+
+echo "== ok =="

@@ -49,14 +49,8 @@ fn main() {
     {
         let sim = PicSim::new(&cfg, 1);
         let spec = presets::mi100();
-        let push = MoveAndMarkTrace {
-            state: &sim.state,
-            spec: &spec,
-        };
-        let deposit = ComputeCurrentTrace {
-            state: &sim.state,
-            spec: &spec,
-        };
+        let push = MoveAndMarkTrace::new(&sim.state, &spec);
+        let deposit = ComputeCurrentTrace::new(&sim.state, &spec);
         let mut sink = NullSink;
         r.bench_throughput("trace/move_and_mark", particles, || {
             push.replay(64, &mut sink)
@@ -90,14 +84,8 @@ fn main() {
     {
         let sim = PicSim::new(&cfg, 1);
         for spec in [presets::mi100(), presets::v100()] {
-            let push = MoveAndMarkTrace {
-                state: &sim.state,
-                spec: &spec,
-            };
-            let deposit = ComputeCurrentTrace {
-                state: &sim.state,
-                spec: &spec,
-            };
+            let push = MoveAndMarkTrace::new(&sim.state, &spec);
+            let deposit = ComputeCurrentTrace::new(&sim.state, &spec);
             let push_rec = record(&push, spec.group_size);
             let deposit_rec = record(&deposit, spec.group_size);
             for (mode, suffix) in [("seq", "_seq"), ("sharded", "")] {

@@ -74,6 +74,33 @@ impl InstClass {
         true
     }
 
+    /// Does this class scale with a target's ISA expansion factor
+    /// (GCN/CDNA emit ~3-4x the compute instructions of SASS for the
+    /// same kernel, §7.3)? Control flow, sync and memory instruction
+    /// counts are structural and do not scale.
+    pub fn scales_with_isa(self) -> bool {
+        matches!(
+            self,
+            InstClass::ValuArith
+                | InstClass::ValuSpecial
+                | InstClass::Salu
+        )
+    }
+
+    /// Scale a per-group issue count by `expansion` (identity for
+    /// classes that do not scale). This is the single rounding rule
+    /// shared by live trace generation (`pic::kernels`) and
+    /// expansion-neutral *recorded* traces specialized at replay time —
+    /// both paths must produce bit-identical counts.
+    pub fn expand_count(self, count: u64, expansion: f64) -> u64 {
+        if self.scales_with_isa() {
+            ((count as f64 * expansion).round() as u64)
+                .max(count.min(1))
+        } else {
+            count
+        }
+    }
+
     /// Short mnemonic used in reports.
     pub fn mnemonic(self) -> &'static str {
         match self {
@@ -124,6 +151,28 @@ mod tests {
         for c in InstClass::ALL {
             assert!(!(c.is_valu() && c.is_salu()), "{c:?}");
         }
+    }
+
+    #[test]
+    fn expansion_scales_compute_classes_only() {
+        assert_eq!(InstClass::ValuArith.expand_count(100, 3.6), 360);
+        assert_eq!(InstClass::Salu.expand_count(10, 3.3), 33);
+        assert_eq!(InstClass::Branch.expand_count(10, 3.3), 10);
+        assert_eq!(InstClass::Sync.expand_count(4, 3.6), 4);
+        assert_eq!(InstClass::Misc.expand_count(7, 2.0), 7);
+    }
+
+    #[test]
+    fn expansion_identity_and_floor() {
+        // expansion 1.0 is the exact identity (neutral recordings rely
+        // on this), and nonzero counts never round to zero
+        for c in InstClass::ALL {
+            for n in [0u64, 1, 3, 1900] {
+                assert_eq!(c.expand_count(n, 1.0), n, "{c:?} {n}");
+            }
+        }
+        assert_eq!(InstClass::ValuArith.expand_count(1, 0.1), 1);
+        assert_eq!(InstClass::ValuArith.expand_count(0, 3.6), 0);
     }
 
     #[test]

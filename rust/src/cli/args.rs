@@ -11,9 +11,9 @@ pub struct Args {
 }
 
 /// Options that take a value (everything else with `--` is a flag).
-const VALUED: [&str; 11] = [
+const VALUED: [&str; 16] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
-    "steps", "dir",
+    "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
 ];
 
 impl Args {
@@ -92,6 +92,27 @@ mod tests {
         assert!(a.flag("all"));
         assert!(a.flag("pjrt"));
         assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn shard_and_gate_options_take_values() {
+        let a = parse("reproduce --shard 1/2 --out out2");
+        assert_eq!(a.get("shard"), Some("1/2"));
+        assert!(a.positional.is_empty());
+        let a = parse(
+            "bench-gate --bench B.json --baseline ci/b.json \
+             --tolerance 0.25 --update-baseline",
+        );
+        assert_eq!(a.get("bench"), Some("B.json"));
+        assert_eq!(a.get("baseline"), Some("ci/b.json"));
+        assert_eq!(a.get("tolerance"), Some("0.25"));
+        assert!(a.flag("update-baseline"));
+    }
+
+    #[test]
+    fn kernel_takes_a_value() {
+        let a = parse("roofline --gpu mi100 --kernel FieldSolver");
+        assert_eq!(a.get("kernel"), Some("FieldSolver"));
     }
 
     #[test]

@@ -43,15 +43,109 @@ fn no_pjrt() -> anyhow::Error {
 }
 
 pub fn reproduce(args: &Args) -> anyhow::Result<()> {
-    let ids: Vec<String> = if args.positional.is_empty()
+    let mut ids: Vec<String> = if args.positional.is_empty()
         || args.flag("all")
     {
         EXPERIMENT_IDS.iter().map(|s| s.to_string()).collect()
     } else {
         args.positional.clone()
     };
+    if let Some(shard) = args.get("shard") {
+        let spec: crate::coordinator::ShardSpec = shard.parse()?;
+        let requested = ids.len();
+        ids = crate::coordinator::shard::shard_ids(&ids, spec);
+        eprintln!(
+            "shard {}/{}: {} of {} experiment(s): {}",
+            spec.index,
+            spec.count,
+            ids.len(),
+            requested,
+            if ids.is_empty() {
+                "(none)".to_string()
+            } else {
+                ids.join(" ")
+            }
+        );
+        if ids.is_empty() {
+            println!(
+                "shard {shard}: no experiments assigned; nothing to do"
+            );
+            return Ok(());
+        }
+    }
     let out = PathBuf::from(args.get_or("out", "out"));
     run_experiments(&ids, &out)?;
+    Ok(())
+}
+
+/// Bench regression gate: compare `speedup/*` ratios in the hotpath
+/// bench artifact against the checked-in baseline; fail on >tolerance
+/// regression. `--update-baseline` refreshes the baseline instead.
+pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
+    use crate::util::bench;
+
+    let bench_path = args.get_or("bench", "BENCH_hotpath.json");
+    let baseline_path =
+        args.get_or("baseline", "ci/bench_baseline.json");
+    let tolerance: f64 = match args.get("tolerance") {
+        None => 0.2,
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("--tolerance: '{v}' is not a number")
+        })?,
+    };
+    anyhow::ensure!(
+        (0.0..1.0).contains(&tolerance),
+        "--tolerance must be in [0, 1), got {tolerance}"
+    );
+
+    let bench_raw =
+        std::fs::read_to_string(bench_path).map_err(|e| {
+            anyhow::anyhow!(
+                "read {bench_path}: {e} (run `cargo bench --bench \
+                 hotpath` first)"
+            )
+        })?;
+    let current: Vec<(String, f64)> = bench::parse_flat_json(&bench_raw)?
+        .into_iter()
+        .filter(|(k, _)| k.starts_with("speedup/"))
+        .collect();
+    anyhow::ensure!(
+        !current.is_empty(),
+        "{bench_path} has no speedup/* entries (bench names drifted?)"
+    );
+
+    if args.flag("update-baseline") {
+        std::fs::write(baseline_path, bench::flat_json(&current))?;
+        println!(
+            "wrote {baseline_path} ({} speedup entr{})",
+            current.len(),
+            if current.len() == 1 { "y" } else { "ies" }
+        );
+        return Ok(());
+    }
+
+    let base_raw =
+        std::fs::read_to_string(baseline_path).map_err(|e| {
+            anyhow::anyhow!(
+                "read {baseline_path}: {e} (seed it with `rocline \
+                 bench-gate --update-baseline`)"
+            )
+        })?;
+    let baseline = bench::parse_flat_json(&base_raw)?;
+    let outcome = bench::gate_speedups(&current, &baseline, tolerance);
+    for line in &outcome.report {
+        println!("{line}");
+    }
+    anyhow::ensure!(
+        outcome.failures.is_empty(),
+        "bench regression gate failed:\n  {}",
+        outcome.failures.join("\n  ")
+    );
+    println!(
+        "bench gate ok: {} speedup ratio(s) within {:.0}% of baseline",
+        outcome.checked,
+        tolerance * 100.0
+    );
     Ok(())
 }
 

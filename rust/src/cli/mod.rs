@@ -1,13 +1,15 @@
 //! Hand-rolled CLI (no `clap` offline). Subcommands:
 //!
 //! ```text
-//! rocline reproduce [--out DIR] [--pjrt] [IDS...|--all]
+//! rocline reproduce [--out DIR] [--shard i/n] [--pjrt] [IDS...|--all]
 //! rocline profile --gpu G --case C [--tool rocprof|nvprof] [--csv F]
 //! rocline roofline --gpu G --case C [--svg F]
 //! rocline babelstream [--backend host|sim|pjrt] [--gpu G] [--n N]
 //! rocline membench [--gpu G]
 //! rocline pic --case C [--steps N] [--pjrt]
 //! rocline artifacts [--dir D]
+//! rocline bench-gate [--bench F] [--baseline F] [--tolerance T]
+//!                    [--update-baseline]
 //! ```
 
 pub mod args;
@@ -26,6 +28,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "membench" => commands::membench(&args),
         "pic" => commands::pic(&args),
         "artifacts" => commands::artifacts(&args),
+        "bench-gate" => commands::bench_gate(&args),
         "help" | "" => {
             print!("{}", HELP);
             Ok(())
@@ -47,6 +50,9 @@ COMMANDS:
   reproduce    regenerate paper tables/figures (peaks stream membench
                table1 table2 fig3 fig4 fig5 fig6 fig7; default --all)
                options: --out DIR (default out/), ids...
+               --shard i/n runs this process's deterministic slice of
+               the (GPU, case) sweep matrix (CI fan-out; merged shard
+               outputs reproduce the unsharded sweep byte-for-byte)
   profile      profile a PIC case on a simulated GPU
                options: --gpu v100|mi60|mi100  --case lwfa|tweac
                         --tool rocprof|nvprof  --csv FILE  --steps N
@@ -59,5 +65,9 @@ COMMANDS:
   pic          run the PIC simulation (native, or --pjrt for the AOT
                path) [--case C] [--steps N]
   artifacts    list the AOT artifacts [--dir D]
+  bench-gate   compare BENCH_hotpath.json speedup/* ratios against the
+               checked-in baseline (ci/bench_baseline.json); fails on
+               >20% regression. options: --bench F --baseline F
+               --tolerance T (default 0.2) --update-baseline
   help         this text
 ";

@@ -1,21 +1,31 @@
 //! The experiment harness: everything needed to regenerate the paper's
 //! tables and figures (DESIGN.md §4 experiment index).
 //!
+//! * [`record`] — record-once / replay-everywhere storage: each case's
+//!   trace is recorded exactly once per sweep ([`record::CaseTrace`],
+//!   deduplicated by [`record::TraceStore`]) and replayed zero-copy on
+//!   every GPU preset;
 //! * [`profile_run`] — simulate a science case on one GPU model while
 //!   profiling every kernel dispatch (the shared substrate of Tables 1–2
-//!   and Figs 3–7);
+//!   and Figs 3–7), live or from a recording;
 //! * [`paper`] — the paper's published values and the *shape criteria*
 //!   the reproduction must satisfy;
 //! * [`experiments`] — one function per table/figure;
-//! * [`runner`] — executes experiments (thread-parallel case runs) and
-//!   writes `out/`.
+//! * [`runner`] — executes experiments (fanned out on the shared
+//!   worker pool) and writes `out/`;
+//! * [`shard`] — deterministic `--shard i/n` partitioning of the
+//!   (GPU, case) matrix so CI can spread the sweep across processes.
 
 pub mod experiments;
 pub mod paper;
 pub mod profile_run;
+pub mod record;
 pub mod report;
 pub mod runner;
+pub mod shard;
 
 pub use profile_run::{CaseRun, Context};
+pub use record::{CaseTrace, TraceStore};
 pub use report::Report;
 pub use runner::{run_experiments, EXPERIMENT_IDS};
+pub use shard::ShardSpec;

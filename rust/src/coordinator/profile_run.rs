@@ -1,5 +1,15 @@
 //! The shared profiled run: one science case, one GPU model, the full
 //! PIC main loop with every kernel dispatch traced and profiled.
+//!
+//! Two ways to build a run:
+//!
+//! * [`CaseRun::execute`] — the *live* reference path: step the
+//!   simulation and trace each kernel directly into the session (what
+//!   the `profile` CLI command uses, and what the recorded path is
+//!   proven bit-identical against);
+//! * [`CaseRun::from_recording`] — the *replay* path the coordinator
+//!   sweeps use: replay a [`CaseTrace`] recorded once per case, scaled
+//!   to the target's ISA expansion, zero-copy.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -12,6 +22,9 @@ use crate::pic::kernels::{
 };
 use crate::pic::{CaseConfig, PicSim};
 use crate::profiler::ProfileSession;
+use crate::util::pool::{self, WorkerPool};
+
+use super::record::{CaseTrace, TraceStore};
 
 /// The default seed for profiled runs (reproducibility).
 pub const RUN_SEED: u64 = 0x9_1C0_96B5;
@@ -31,11 +44,7 @@ impl CaseRun {
     /// five kernels each step. Traces read the *live* state, so the
     /// memory behaviour follows the plasma dynamics.
     pub fn execute(spec: GpuSpec, cfg: CaseConfig) -> CaseRun {
-        Self::execute_with_threads(
-            spec,
-            cfg,
-            crate::memsim::sharded::default_threads(),
-        )
+        Self::execute_with_threads(spec, cfg, pool::default_threads())
     }
 
     /// [`CaseRun::execute`] with an explicit replay-engine worker
@@ -54,26 +63,11 @@ impl CaseRun {
         for _ in 0..cfg.steps {
             {
                 let st = &sim.state;
-                let reset = CurrentResetTrace {
-                    state: st,
-                    spec: &spec,
-                };
-                let push = MoveAndMarkTrace {
-                    state: st,
-                    spec: &spec,
-                };
-                let shift = ShiftParticlesTrace {
-                    state: st,
-                    spec: &spec,
-                };
-                let deposit = ComputeCurrentTrace {
-                    state: st,
-                    spec: &spec,
-                };
-                let solve = FieldSolverTrace {
-                    state: st,
-                    spec: &spec,
-                };
+                let reset = CurrentResetTrace::new(st, &spec);
+                let push = MoveAndMarkTrace::new(st, &spec);
+                let shift = ShiftParticlesTrace::new(st, &spec);
+                let deposit = ComputeCurrentTrace::new(st, &spec);
+                let solve = FieldSolverTrace::new(st, &spec);
                 session.profile(&reset);
                 session.profile(&push);
                 session.profile(&shift);
@@ -90,13 +84,49 @@ impl CaseRun {
             session,
         }
     }
+
+    /// Replay a recorded case trace on `spec` — no simulation, no trace
+    /// generation: every dispatch streams the `Arc`-shared blocks
+    /// through the session with the target's ISA expansion. Counters
+    /// are bit-identical to [`CaseRun::execute`] of the same case
+    /// (proven by `tests/record_replay.rs`).
+    pub fn from_recording(
+        spec: GpuSpec,
+        trace: &CaseTrace,
+        engine_threads: usize,
+    ) -> CaseRun {
+        let mut session = ProfileSession::sharded_with_threads(
+            spec.clone(),
+            engine_threads,
+        );
+        let dispatches = trace.dispatches_for(spec.group_size);
+        for d in dispatches.iter() {
+            session.profile_blocks_scaled(
+                &d.kernel,
+                &d.blocks,
+                spec.isa_expansion,
+            );
+        }
+        CaseRun {
+            spec,
+            cfg: trace.cfg.clone(),
+            final_field_energy: trace.final_field_energy,
+            final_kinetic_energy: trace.final_kinetic_energy,
+            session,
+        }
+    }
 }
 
 /// Cache of profiled runs shared by all experiments (Tables 1–2 and
 /// Figs 3–7 reuse the same six runs). Thread-safe; runs execute lazily.
+///
+/// Runs are built by **replaying** a per-case [`CaseTrace`] from the
+/// embedded [`TraceStore`]: each case's trace is recorded exactly once
+/// per sweep, then shared zero-copy across every GPU preset.
 #[derive(Default)]
 pub struct Context {
     runs: Mutex<HashMap<(String, String), Arc<CaseRun>>>,
+    store: TraceStore,
 }
 
 impl Context {
@@ -106,11 +136,7 @@ impl Context {
 
     /// Get (or execute) the run for `(gpu, case)`.
     pub fn run(&self, gpu: &str, case: &str) -> Arc<CaseRun> {
-        self.run_with_threads(
-            gpu,
-            case,
-            crate::memsim::sharded::default_threads(),
-        )
+        self.run_with_threads(gpu, case, pool::default_threads())
     }
 
     fn run_with_threads(
@@ -127,9 +153,10 @@ impl Context {
             .unwrap_or_else(|| panic!("unknown GPU {gpu}"));
         let cfg = CaseConfig::by_name(case)
             .unwrap_or_else(|| panic!("unknown case {case}"));
-        let run = Arc::new(CaseRun::execute_with_threads(
+        let trace = self.store.get_or_record(&cfg);
+        let run = Arc::new(CaseRun::from_recording(
             spec,
-            cfg,
+            &trace,
             engine_threads,
         ));
         self.runs
@@ -139,17 +166,23 @@ impl Context {
         run
     }
 
-    /// Pre-execute several runs in parallel threads. The replay-engine
-    /// worker budget is divided across the concurrent runs so the
-    /// sweep parallelism and the per-run engine parallelism compose
-    /// instead of oversubscribing the host.
+    /// How many case traces this context has recorded (≤ distinct
+    /// cases touched, whatever the GPU count — the record-once
+    /// contract).
+    pub fn recordings(&self) -> usize {
+        self.store.recordings()
+    }
+
+    /// Pre-execute several runs in parallel on the shared worker pool.
+    /// The replay-engine worker budget is divided across the concurrent
+    /// runs so the sweep parallelism and the per-run engine parallelism
+    /// compose instead of oversubscribing the host.
     pub fn prefetch(&self, pairs: &[(&str, &str)]) {
-        let budget = (crate::memsim::sharded::default_threads()
-            / pairs.len().max(1))
-        .max(1);
-        std::thread::scope(|scope| {
+        let budget = (pool::default_threads() / pairs.len().max(1))
+            .max(1);
+        WorkerPool::global().scope(|s| {
             for (gpu, case) in pairs {
-                scope.spawn(move || {
+                s.spawn(move || {
                     self.run_with_threads(gpu, case, budget);
                 });
             }
@@ -195,5 +228,6 @@ integration test"]
         let a = ctx.run("mi100", "lwfa");
         let b = ctx.run("mi100", "lwfa");
         assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(ctx.recordings(), 1);
     }
 }

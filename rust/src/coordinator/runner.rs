@@ -12,8 +12,12 @@ pub const EXPERIMENT_IDS: [&str; 10] = [
     "fig5", "fig6", "fig7",
 ];
 
-/// Which profiled runs an experiment needs (for parallel prefetch).
-fn runs_needed(id: &str) -> Vec<(&'static str, &'static str)> {
+/// Which profiled runs an experiment needs (for parallel prefetch and
+/// for sharding the sweep by its (GPU, case) matrix — see
+/// [`super::shard`]).
+pub(crate) fn runs_needed(
+    id: &str,
+) -> Vec<(&'static str, &'static str)> {
     match id {
         "table1" => vec![("v100", "lwfa"), ("mi60", "lwfa"), ("mi100", "lwfa")],
         "table2" => {
@@ -80,22 +84,35 @@ pub fn run_experiments(
                 .join(" ")
         );
         ctx.prefetch(&needed);
+        eprintln!(
+            "recorded {} case trace(s) once; {} run(s) replayed them \
+             zero-copy",
+            ctx.recordings(),
+            needed.len()
+        );
     }
 
     // experiment assembly (stream/membench simulate whole benchmark
-    // suites) also runs one thread per experiment id
+    // suites) also fans out one job per experiment id on the shared
+    // worker pool
     let ctx_ref = &ctx;
-    let results: Vec<anyhow::Result<Report>> =
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = ids
-                .iter()
-                .map(|id| scope.spawn(move || run_one(ctx_ref, id)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("experiment worker panicked"))
-                .collect()
-        });
+    let slots: Vec<std::sync::Mutex<Option<anyhow::Result<Report>>>> =
+        ids.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    crate::util::WorkerPool::global().scope(|s| {
+        for (slot, id) in slots.iter().zip(ids.iter()) {
+            s.spawn(move || {
+                *slot.lock().unwrap() = Some(run_one(ctx_ref, id));
+            });
+        }
+    });
+    let results: Vec<anyhow::Result<Report>> = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("experiment worker finished")
+        })
+        .collect();
 
     let mut reports = Vec::new();
     for rep in results {
@@ -156,5 +173,57 @@ mod tests {
         let pairs = runs_needed("table1");
         assert_eq!(pairs.len(), 3);
         assert!(runs_needed("peaks").is_empty());
+    }
+
+    #[test]
+    fn merged_shard_reports_equal_the_unsharded_sweep() {
+        // run the cheap (no profiled runs) experiments unsharded and
+        // as two shards; the union of the shard output directories
+        // must reproduce the unsharded sweep byte-for-byte. The same
+        // argument extends to the full paper sweep: every report is a
+        // deterministic function of its experiment id.
+        use super::super::shard::{shard_ids, ShardSpec};
+        let ids: Vec<String> =
+            ["peaks", "membench"].iter().map(|s| s.to_string()).collect();
+        let base = std::env::temp_dir().join(format!(
+            "rocline-shard-test-{}",
+            std::process::id()
+        ));
+        let whole_dir = base.join("whole");
+        let whole = run_experiments(&ids, &whole_dir).unwrap();
+
+        let mut merged: Vec<(String, String)> = Vec::new();
+        for index in 0..2 {
+            let spec = ShardSpec { index, count: 2 };
+            let shard_id_list = shard_ids(&ids, spec);
+            let dir = base.join(format!("shard{index}"));
+            let reports =
+                run_experiments(&shard_id_list, &dir).unwrap();
+            for r in reports {
+                merged.push((r.id.clone(), r.render()));
+            }
+            // every file a shard wrote must match the unsharded copy
+            // (a shard that owns no experiments writes nothing)
+            if !dir.exists() {
+                continue;
+            }
+            for entry in std::fs::read_dir(&dir).unwrap() {
+                let path = entry.unwrap().path();
+                let name = path.file_name().unwrap().to_owned();
+                let ours = std::fs::read(&path).unwrap();
+                let whole_copy =
+                    std::fs::read(whole_dir.join(&name)).unwrap();
+                assert_eq!(ours, whole_copy, "{name:?} diverged");
+            }
+        }
+        assert_eq!(merged.len(), whole.len());
+        for w in &whole {
+            let m = merged
+                .iter()
+                .find(|(id, _)| *id == w.id)
+                .expect("every experiment lands in exactly one shard");
+            assert_eq!(m.1, w.render(), "{} render diverged", w.id);
+        }
+        let _ = std::fs::remove_dir_all(&base);
     }
 }

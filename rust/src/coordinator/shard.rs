@@ -1,0 +1,203 @@
+//! Deterministic sharding of the paper sweep for CI fan-out.
+//!
+//! `rocline reproduce --shard i/n` partitions the **(GPU, case)
+//! matrix** — the six profiled runs behind Tables 1–2 and Figs 3–7 —
+//! round-robin across `n` shards, then assigns each experiment to the
+//! shard that owns its first profiled run (experiments with no
+//! profiled runs round-robin by their index). The partition is a pure
+//! function of `(i, n)`:
+//!
+//! * shards are **disjoint** and **cover** the matrix (every pair has
+//!   exactly one owner);
+//! * every experiment is executed by exactly one shard;
+//! * each shard's reports are byte-identical to the same experiments'
+//!   reports from an unsharded sweep (runs are deterministic), so
+//!   merging the shard output directories reproduces the unsharded
+//!   sweep exactly.
+//!
+//! CI fans the sweep out as a matrix job over `--shard 0/2`, `--shard
+//! 1/2`, … (see `.github/workflows/ci.yml` and `ci/run.sh`).
+
+use std::str::FromStr;
+
+use super::runner::{runs_needed, EXPERIMENT_IDS};
+
+/// Which shard of how many: parsed from `i/n`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl FromStr for ShardSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ShardSpec, Self::Err> {
+        let (i, n) = s.split_once('/').ok_or_else(|| {
+            anyhow::anyhow!("--shard wants i/n, e.g. 0/2 (got '{s}')")
+        })?;
+        let index: usize = i.trim().parse().map_err(|_| {
+            anyhow::anyhow!("--shard index '{i}' is not an integer")
+        })?;
+        let count: usize = n.trim().parse().map_err(|_| {
+            anyhow::anyhow!("--shard count '{n}' is not an integer")
+        })?;
+        anyhow::ensure!(count >= 1, "--shard count must be >= 1");
+        anyhow::ensure!(
+            index < count,
+            "--shard index {index} out of range for {count} shard(s)"
+        );
+        Ok(ShardSpec { index, count })
+    }
+}
+
+/// The full (GPU, case) matrix in canonical order (GPU-major, the
+/// paper's presentation order). This is the unit CI shards over.
+pub fn full_matrix() -> Vec<(&'static str, &'static str)> {
+    let mut m = Vec::new();
+    for gpu in ["v100", "mi60", "mi100"] {
+        for case in ["lwfa", "tweac"] {
+            m.push((gpu, case));
+        }
+    }
+    m
+}
+
+/// The matrix rows `spec` owns: round-robin by canonical index, so
+/// shards are disjoint and cover the matrix for every `count`.
+pub fn shard_matrix(
+    spec: ShardSpec,
+) -> Vec<(&'static str, &'static str)> {
+    full_matrix()
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| i % spec.count == spec.index)
+        .map(|(_, pair)| pair)
+        .collect()
+}
+
+/// Which shard (of `count`) executes experiment `id`: the owner of its
+/// first profiled (GPU, case) pair, or — for experiments with no
+/// profiled runs — its position in [`EXPERIMENT_IDS`] round-robin.
+pub fn owner_of(id: &str, count: usize) -> usize {
+    let matrix = full_matrix();
+    if let Some(first) = runs_needed(id).first() {
+        if let Some(i) = matrix.iter().position(|p| p == first) {
+            return i % count;
+        }
+    }
+    let pos = EXPERIMENT_IDS
+        .iter()
+        .position(|e| *e == id)
+        .unwrap_or(0);
+    pos % count
+}
+
+/// Filter `ids` down to the experiments this shard executes.
+pub fn shard_ids(ids: &[String], spec: ShardSpec) -> Vec<String> {
+    ids.iter()
+        .filter(|id| owner_of(id, spec.count) == spec.index)
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_well_formed_specs() {
+        let s: ShardSpec = "0/2".parse().unwrap();
+        assert_eq!(
+            s,
+            ShardSpec {
+                index: 0,
+                count: 2
+            }
+        );
+        let s: ShardSpec = "3/4".parse().unwrap();
+        assert_eq!(s.index, 3);
+        assert_eq!(s.count, 4);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["", "1", "a/b", "2/2", "5/3", "1/0", "-1/2"] {
+            assert!(
+                bad.parse::<ShardSpec>().is_err(),
+                "'{bad}' should not parse"
+            );
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_matrix_disjoint_and_covering() {
+        let full = full_matrix();
+        assert_eq!(full.len(), 6, "3 GPUs x 2 cases");
+        for count in 1..=7 {
+            let mut seen = Vec::new();
+            for index in 0..count {
+                let part = shard_matrix(ShardSpec { index, count });
+                for pair in part {
+                    assert!(
+                        !seen.contains(&pair),
+                        "{pair:?} owned twice at n={count}"
+                    );
+                    seen.push(pair);
+                }
+            }
+            // cover: union over shards == the full matrix, in order
+            // of ownership; compare as sets via membership both ways
+            assert_eq!(seen.len(), full.len(), "n={count}");
+            for pair in &full {
+                assert!(seen.contains(pair), "{pair:?} lost at n={count}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_experiment_has_exactly_one_owner() {
+        let ids: Vec<String> =
+            EXPERIMENT_IDS.iter().map(|s| s.to_string()).collect();
+        for count in 1..=4 {
+            let mut total = 0usize;
+            for index in 0..count {
+                let spec = ShardSpec { index, count };
+                let owned = shard_ids(&ids, spec);
+                for id in &owned {
+                    assert_eq!(owner_of(id, count), index);
+                }
+                total += owned.len();
+            }
+            assert_eq!(total, ids.len(), "n={count}");
+        }
+    }
+
+    #[test]
+    fn experiments_follow_their_first_profiled_pair() {
+        // table1 needs (v100, lwfa) first; fig7 needs (mi60, tweac)
+        let matrix = full_matrix();
+        let v100_lwfa =
+            matrix.iter().position(|p| *p == ("v100", "lwfa")).unwrap();
+        let mi60_tweac =
+            matrix.iter().position(|p| *p == ("mi60", "tweac")).unwrap();
+        for count in 1..=4 {
+            assert_eq!(owner_of("table1", count), v100_lwfa % count);
+            assert_eq!(owner_of("fig7", count), mi60_tweac % count);
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let ids: Vec<String> =
+            EXPERIMENT_IDS.iter().map(|s| s.to_string()).collect();
+        let all = shard_ids(
+            &ids,
+            ShardSpec {
+                index: 0,
+                count: 1,
+            },
+        );
+        assert_eq!(all, ids);
+    }
+}

@@ -16,6 +16,19 @@
 //!   AOT artifacts), [`coordinator`] (the experiments that regenerate
 //!   every paper table and figure), [`cli`].
 
+// Lint policy (see ci/run.sh): clippy runs with `-D warnings`;
+// correctness lints are load-bearing, but these style families fight
+// the hand-rolled, offline-vendored shape of this codebase and stay
+// allowed crate-wide.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::new_without_default,
+    clippy::comparison_chain,
+    clippy::manual_flatten
+)]
+
 pub mod arch;
 pub mod babelstream;
 pub mod cli;

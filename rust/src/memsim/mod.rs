@@ -22,9 +22,12 @@
 //!   parallel shards that emit sequence-tagged per-channel miss
 //!   streams, then replays each L2 slice in parallel with
 //!   deterministic per-slice ordering (sort by sequence key ⇒ the
-//!   sequential arrival order). See `sharded.rs` for the full ordering
-//!   argument; `tests/engine_equiv.rs` asserts equality on every
-//!   preset and access-pattern mix.
+//!   sequential arrival order). Both phases run on the persistent
+//!   worker pool ([`crate::util::pool::WorkerPool::global`]) and are
+//!   double-buffered: batch N's channel phase retires asynchronously
+//!   while batch N+1's L1 phase runs. See `sharded.rs` for the full
+//!   ordering argument; `tests/engine_equiv.rs` asserts equality on
+//!   every preset and access-pattern mix.
 
 pub mod banks;
 pub mod cache;

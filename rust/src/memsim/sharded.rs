@@ -1,11 +1,13 @@
-//! The sharded, batched replay engine: parallel per-CU L1 shards
-//! feeding address-interleaved L2 channels.
+//! The sharded, batched, **pipelined** replay engine: parallel per-CU
+//! L1 shards feeding address-interleaved L2 channels, scheduled on the
+//! persistent worker pool ([`crate::util::pool::WorkerPool`]).
 //!
 //! [`ShardedHierarchy`] consumes SoA [`EventBlock`]s (built by
-//! [`crate::trace::BlockBuilder`]) and produces counters **bit-identical**
-//! to the sequential [`super::MemHierarchy`] — the equivalence the
-//! `engine_equiv` integration suite proves on every preset. Batches are
-//! processed in two parallel phases:
+//! [`crate::trace::BlockBuilder`], or recorded once and replayed via
+//! [`ShardedHierarchy::consume_blocks`]) and produces counters
+//! **bit-identical** to the sequential [`super::MemHierarchy`] — the
+//! equivalence the `engine_equiv` integration suite proves on every
+//! preset. Batches are processed in two parallel phases:
 //!
 //! 1. **L1 phase** — every shard owns a contiguous range of the L1
 //!    instances (plus their coalescer and scratch) and walks the whole
@@ -16,7 +18,8 @@
 //!    order. The shard tags every L2-bound transaction with a
 //!    *sequence key* — `record_index << 16 | emission_index` — and
 //!    appends it to a per-channel miss stream (`line % channels`).
-//!    A separate worker folds the same batch into [`TraceStats`].
+//!    A separate job folds the same batch into [`TraceStats`]
+//!    (applying the replay's ISA-expansion factor, if any).
 //! 2. **L2 phase** — every channel merges the shards' miss streams for
 //!    its slice and sorts by sequence key, which reconstructs exactly
 //!    the order in which the sequential engine would have delivered
@@ -25,11 +28,20 @@
 //!    stream through the slice cache therefore reproduces the same
 //!    hits, evictions and writebacks, giving the same L2/HBM counters.
 //!
-//! Determinism does not depend on the shard count or thread
-//! scheduling: partitioning only decides *who* computes a number,
-//! never *which* number is computed.
+//! The phases are **double-buffered**: the L2 phase of batch N runs as
+//! an asynchronous pool job (it owns batch N's miss streams and an
+//! `Arc` of the [`L2Stage`]) while the engine's caller already feeds
+//! batch N+1 through the L1 phase. Two miss-buffer sets rotate between
+//! the shards and the in-flight job; L2 phases are serialized by
+//! waiting batch N's latch before launching batch N+1's, so every L2
+//! slice still observes its transactions in batch order — pipelining
+//! changes *when* numbers are computed, never *which* numbers.
+//!
+//! Determinism does not depend on the shard count, the worker pool
+//! size, or thread scheduling: partitioning only decides *who* computes
+//! a number, never *which* number is computed.
 
-use std::thread;
+use std::sync::{Arc, Mutex};
 
 use super::banks::{BankModel, ConflictStats};
 use super::cache::{AccessResult, Cache};
@@ -39,6 +51,7 @@ use crate::arch::GpuSpec;
 use crate::trace::block::{BlockSink, EventBlock, Tag};
 use crate::trace::stats::TraceStats;
 use crate::trace::MemKind;
+use crate::util::pool::{Latch, WorkerPool};
 
 /// Process a batch once it holds this many records…
 const BATCH_RECORDS: usize = 1 << 16;
@@ -57,6 +70,11 @@ struct MissRec {
     line: u64,
     write: bool,
 }
+
+/// Per-channel miss streams produced by one shard for one batch.
+type ShardMisses = Vec<Vec<MissRec>>;
+/// A whole batch's miss streams: one [`ShardMisses`] per shard.
+type BatchMisses = Vec<ShardMisses>;
 
 /// Counters a shard owns exclusively during the L1 phase.
 #[derive(Debug, Clone, Copy, Default)]
@@ -79,12 +97,12 @@ struct L1Shard {
     scratch: Vec<u64>,
     delta: ShardDelta,
     lds: ConflictStats,
-    /// Outgoing per-channel miss streams for the L2 phase.
-    misses: Vec<Vec<MissRec>>,
+    /// Outgoing per-channel miss streams for the L2 phase (swapped
+    /// with a spare set when the batch is handed to the async job).
+    misses: ShardMisses,
 }
 
 impl L1Shard {
-    #[allow(clippy::too_many_arguments)]
     fn consume(
         &mut self,
         blocks: &[EventBlock],
@@ -208,189 +226,35 @@ struct ChannelDelta {
     hbm_write_bytes: u64,
 }
 
-/// The parallel engine. State-compatible with
-/// [`super::MemHierarchy`] at **dispatch boundaries**: caches persist
-/// across dispatches, `flush` attributes write-back traffic, and
-/// `traffic`/`lds_stats` carry the same counters, bit-identical to
-/// the sequential engine.
-///
-/// Unlike `MemHierarchy`, events stream in *batches*: `traffic`,
-/// `lds_stats` and the hit rates only reflect events up to the last
-/// drained batch. Call [`ShardedHierarchy::flush`] (or
-/// [`ShardedHierarchy::take_stats`]) at the dispatch boundary before
-/// reading them — mid-stream reads may lag by up to one batch.
-pub struct ShardedHierarchy {
-    n_l1: u64,
-    sector_bytes: u64,
-    l2_line: u64,
-    channels: u64,
-    threads: usize,
-    shards: Vec<L1Shard>,
+/// The shared L2-phase state: slice caches, per-channel lanes, and the
+/// recycled miss-buffer sets. Lives behind `Arc<Mutex<..>>` so the
+/// in-flight asynchronous channel phase owns everything it touches —
+/// the engine itself stays movable with a batch in flight, and the
+/// coordinator only locks after waiting the batch's latch.
+struct L2Stage {
     l2: ChanneledL2,
     lanes: Vec<ChannelLane>,
-    stats: TraceStats,
-    pub traffic: MemTraffic,
-    pub lds_stats: ConflictStats,
-    // reusable batch pool: `pool[..filled]` holds copied blocks
-    pool: Vec<EventBlock>,
-    filled: usize,
-    pending_records: usize,
-    pending_addr_words: usize,
+    /// Cleared miss-buffer sets returned by completed channel phases.
+    free: Vec<BatchMisses>,
 }
 
-/// Worker count for both phases: the host's cores, bounded so tiny
-/// machines and huge ones both behave.
-pub fn default_threads() -> usize {
-    thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .clamp(1, 16)
-}
-
-impl ShardedHierarchy {
-    pub fn new(spec: &GpuSpec) -> ShardedHierarchy {
-        ShardedHierarchy::with_shards(spec, default_threads())
-    }
-
-    /// Build with an explicit shard/worker count (1 = parallel-free,
-    /// still batched). Counters are identical for every value.
-    pub fn with_shards(spec: &GpuSpec, threads: usize) -> ShardedHierarchy {
-        let instances = spec.l1.instances.max(1) as usize;
-        let threads = threads.clamp(1, instances);
-        let l1_line = spec.l1.line as u64;
-        let l2 = ChanneledL2::new(&spec.l2);
-        let channels = l2.channels() as u64;
-        let mut shards = Vec::with_capacity(threads);
-        for i in 0..threads {
-            let lo = i * instances / threads;
-            let hi = (i + 1) * instances / threads;
-            shards.push(L1Shard {
-                first_cu: lo,
-                l1s: (lo..hi)
-                    .map(|_| {
-                        Cache::new(
-                            spec.l1.capacity,
-                            l1_line,
-                            spec.l1.ways,
-                            spec.l1.write_allocate,
-                        )
-                    })
-                    .collect(),
-                coalescer: Coalescer::new(l1_line),
-                bank_model: BankModel::new(spec.lds.banks),
-                scratch: Vec::with_capacity(128),
-                delta: ShardDelta::default(),
-                lds: ConflictStats::default(),
-                misses: vec![Vec::new(); channels as usize],
-            });
-        }
-        let lanes =
-            (0..channels).map(|_| ChannelLane::default()).collect();
-        ShardedHierarchy {
-            n_l1: instances as u64,
-            sector_bytes: l1_line,
-            l2_line: spec.l2.line as u64,
-            channels,
-            threads,
-            shards,
-            l2,
-            lanes,
-            stats: TraceStats::default(),
-            traffic: MemTraffic::default(),
-            lds_stats: ConflictStats::default(),
-            pool: Vec::new(),
-            filled: 0,
-            pending_records: 0,
-            pending_addr_words: 0,
-        }
-    }
-
-    /// Run both phases over the buffered (pooled) batch and fold the
-    /// results into the cumulative counters.
-    fn process_batch(&mut self) {
-        if self.filled == 0 {
-            return;
-        }
-        // move the pool out so `run_phases` can borrow it immutably
-        // alongside `&mut self` (it is put back untouched)
-        let pool = std::mem::take(&mut self.pool);
-        let filled = self.filled;
-        self.run_phases(&pool[..filled]);
-        self.pool = pool;
-        self.filled = 0;
-        self.pending_records = 0;
-        self.pending_addr_words = 0;
-    }
-
-    /// Consume caller-owned blocks without copying them into the pool —
-    /// the replay-many path for *recorded* traces. Any streamed blocks
-    /// buffered via [`BlockSink::on_block`] are drained first so event
-    /// order is preserved.
-    pub fn consume_blocks(&mut self, blocks: &[EventBlock]) {
-        self.process_batch();
-        let mut start = 0usize;
-        let (mut recs, mut words) = (0usize, 0usize);
-        for (i, b) in blocks.iter().enumerate() {
-            recs += b.len();
-            words += b.addr_words();
-            if recs >= BATCH_RECORDS || words >= BATCH_ADDR_WORDS {
-                self.run_phases(&blocks[start..=i]);
-                start = i + 1;
-                recs = 0;
-                words = 0;
-            }
-        }
-        if start < blocks.len() {
-            self.run_phases(&blocks[start..]);
-        }
-    }
-
-    /// The two parallel phases + counter merge over one batch slice.
-    fn run_phases(&mut self, blocks: &[EventBlock]) {
-        if blocks.is_empty() {
-            return;
-        }
-        let (n_l1, sector_bytes, l2_line, channels) = (
-            self.n_l1,
-            self.sector_bytes,
-            self.l2_line,
-            self.channels,
-        );
-
-        // ---- phase 1: L1 shards + trace stats, in parallel ----------
+impl L2Stage {
+    /// Replay one batch's merged miss streams through the slice caches,
+    /// channel-parallel on the pool. Consumes (then recycles) `batch`.
+    fn replay(
+        &mut self,
+        mut batch: BatchMisses,
+        channels: u64,
+        l2_line: u64,
+        threads: usize,
+    ) {
+        let nch = channels as usize;
+        let chunk = nch.div_ceil(threads.min(nch).max(1));
         {
-            let stats = &mut self.stats;
-            let shards = &mut self.shards;
-            thread::scope(|s| {
-                for shard in shards.iter_mut() {
-                    s.spawn(move || {
-                        shard.consume(
-                            blocks,
-                            n_l1,
-                            sector_bytes,
-                            l2_line,
-                            channels,
-                        );
-                    });
-                }
-                s.spawn(move || {
-                    for b in blocks {
-                        for rec in b.records() {
-                            stats.on_record(&rec);
-                        }
-                    }
-                });
-            });
-        }
-
-        // ---- phase 2: L2 channels in parallel -----------------------
-        {
-            let shards = &self.shards;
-            let nch = self.channels as usize;
-            let chunk = nch.div_ceil(self.threads.min(nch).max(1));
+            let batch_ref: &[ShardMisses] = &batch;
             let caches = self.l2.caches_mut();
             let lanes = &mut self.lanes[..];
-            thread::scope(|s| {
+            WorkerPool::global().scope(|s| {
                 for (ci, (cache_chunk, lane_chunk)) in caches
                     .chunks_mut(chunk)
                     .zip(lanes.chunks_mut(chunk))
@@ -405,10 +269,9 @@ impl ShardedHierarchy {
                         {
                             let ch = ch0 + j;
                             lane.merge.clear();
-                            for shard in shards {
-                                lane.merge.extend_from_slice(
-                                    &shard.misses[ch],
-                                );
+                            for shard in batch_ref {
+                                lane.merge
+                                    .extend_from_slice(&shard[ch]);
                             }
                             // unique keys: sort restores sequential
                             // arrival order for this slice
@@ -443,8 +306,218 @@ impl ShardedHierarchy {
                 }
             });
         }
+        // recycle the consumed buffers for a later batch
+        for shard in batch.iter_mut() {
+            for stream in shard.iter_mut() {
+                stream.clear();
+            }
+        }
+        self.free.push(batch);
+    }
+}
 
-        // ---- merge --------------------------------------------------
+/// The parallel engine. State-compatible with
+/// [`super::MemHierarchy`] at **dispatch boundaries**: caches persist
+/// across dispatches, `flush` attributes write-back traffic, and
+/// `traffic`/`lds_stats` carry the same counters, bit-identical to
+/// the sequential engine.
+///
+/// Unlike `MemHierarchy`, events stream in *batches*, and the channel
+/// phase of the last submitted batch may still be in flight: `traffic`,
+/// `lds_stats` and the hit rates only reflect fully retired batches.
+/// Call [`ShardedHierarchy::flush`] at the dispatch boundary before
+/// reading them — mid-stream reads may lag by up to two batches.
+pub struct ShardedHierarchy {
+    n_l1: u64,
+    sector_bytes: u64,
+    l2_line: u64,
+    channels: u64,
+    threads: usize,
+    shards: Vec<L1Shard>,
+    stage: Arc<Mutex<L2Stage>>,
+    /// Latch of the in-flight channel phase, if any.
+    l2_pending: Option<Latch>,
+    /// Miss-buffer sets available for the next batch swap (the double
+    /// buffer: exactly one set here or in flight at any time).
+    spare: Vec<BatchMisses>,
+    stats: TraceStats,
+    pub traffic: MemTraffic,
+    pub lds_stats: ConflictStats,
+    // reusable batch pool: `pool[..filled]` holds copied blocks
+    pool: Vec<EventBlock>,
+    filled: usize,
+    pending_records: usize,
+    pending_addr_words: usize,
+}
+
+/// Worker/shard count default: delegated to the shared pool sizing
+/// (the host's cores, bounded so tiny machines and huge ones both
+/// behave).
+pub fn default_threads() -> usize {
+    crate::util::pool::default_threads()
+}
+
+impl ShardedHierarchy {
+    pub fn new(spec: &GpuSpec) -> ShardedHierarchy {
+        ShardedHierarchy::with_shards(spec, default_threads())
+    }
+
+    /// Build with an explicit shard count (1 = parallel-free, still
+    /// batched and pipelined). Counters are identical for every value.
+    pub fn with_shards(spec: &GpuSpec, threads: usize) -> ShardedHierarchy {
+        let instances = spec.l1.instances.max(1) as usize;
+        let threads = threads.clamp(1, instances);
+        let l1_line = spec.l1.line as u64;
+        let l2 = ChanneledL2::new(&spec.l2);
+        let channels = l2.channels() as u64;
+        let nch = channels as usize;
+        let mut shards = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let lo = i * instances / threads;
+            let hi = (i + 1) * instances / threads;
+            shards.push(L1Shard {
+                first_cu: lo,
+                l1s: (lo..hi)
+                    .map(|_| {
+                        Cache::new(
+                            spec.l1.capacity,
+                            l1_line,
+                            spec.l1.ways,
+                            spec.l1.write_allocate,
+                        )
+                    })
+                    .collect(),
+                coalescer: Coalescer::new(l1_line),
+                bank_model: BankModel::new(spec.lds.banks),
+                scratch: Vec::with_capacity(128),
+                delta: ShardDelta::default(),
+                lds: ConflictStats::default(),
+                misses: vec![Vec::new(); nch],
+            });
+        }
+        let lanes =
+            (0..channels).map(|_| ChannelLane::default()).collect();
+        // the second miss-buffer set of the double buffer (the first
+        // lives inside the shards)
+        let spare: Vec<BatchMisses> =
+            vec![(0..threads).map(|_| vec![Vec::new(); nch]).collect()];
+        ShardedHierarchy {
+            n_l1: instances as u64,
+            sector_bytes: l1_line,
+            l2_line: spec.l2.line as u64,
+            channels,
+            threads,
+            shards,
+            stage: Arc::new(Mutex::new(L2Stage {
+                l2,
+                lanes,
+                free: Vec::new(),
+            })),
+            l2_pending: None,
+            spare,
+            stats: TraceStats::default(),
+            traffic: MemTraffic::default(),
+            lds_stats: ConflictStats::default(),
+            pool: Vec::new(),
+            filled: 0,
+            pending_records: 0,
+            pending_addr_words: 0,
+        }
+    }
+
+    /// Run the L1 phase over the buffered (pooled) batch and hand its
+    /// miss streams to the asynchronous channel phase.
+    fn process_batch(&mut self) {
+        if self.filled == 0 {
+            return;
+        }
+        // move the pool out so `submit_batch` can borrow it immutably
+        // alongside `&mut self` (it is put back untouched)
+        let pool_blocks = std::mem::take(&mut self.pool);
+        let filled = self.filled;
+        self.submit_batch(&pool_blocks[..filled], 1.0);
+        self.pool = pool_blocks;
+        self.filled = 0;
+        self.pending_records = 0;
+        self.pending_addr_words = 0;
+    }
+
+    /// Consume caller-owned blocks without copying them into the pool —
+    /// the replay-many path for *recorded* traces. Any streamed blocks
+    /// buffered via [`BlockSink::on_block`] are drained first so event
+    /// order is preserved.
+    pub fn consume_blocks(&mut self, blocks: &[EventBlock]) {
+        self.consume_blocks_scaled(blocks, 1.0);
+    }
+
+    /// [`ShardedHierarchy::consume_blocks`] with an ISA-expansion
+    /// factor applied to the instruction-count fold (identity at 1.0) —
+    /// how expansion-neutral recorded traces replay for a specific GPU.
+    /// Memory behaviour is unaffected; only [`TraceStats`] scales.
+    pub fn consume_blocks_scaled(
+        &mut self,
+        blocks: &[EventBlock],
+        expansion: f64,
+    ) {
+        self.process_batch();
+        let mut start = 0usize;
+        let (mut recs, mut words) = (0usize, 0usize);
+        for (i, b) in blocks.iter().enumerate() {
+            recs += b.len();
+            words += b.addr_words();
+            if recs >= BATCH_RECORDS || words >= BATCH_ADDR_WORDS {
+                self.submit_batch(&blocks[start..=i], expansion);
+                start = i + 1;
+                recs = 0;
+                words = 0;
+            }
+        }
+        if start < blocks.len() {
+            self.submit_batch(&blocks[start..], expansion);
+        }
+    }
+
+    /// One batch through the pipeline: synchronous parallel L1 phase
+    /// (which overlaps the previous batch's in-flight channel phase),
+    /// then retire the previous channel phase and launch this batch's.
+    fn submit_batch(&mut self, blocks: &[EventBlock], expansion: f64) {
+        if blocks.is_empty() {
+            return;
+        }
+        let (n_l1, sector_bytes, l2_line, channels) = (
+            self.n_l1,
+            self.sector_bytes,
+            self.l2_line,
+            self.channels,
+        );
+
+        // ---- L1 phase + stats fold, parallel and synchronous --------
+        {
+            let stats = &mut self.stats;
+            let shards = &mut self.shards;
+            WorkerPool::global().scope(|s| {
+                for shard in shards.iter_mut() {
+                    s.spawn(move || {
+                        shard.consume(
+                            blocks,
+                            n_l1,
+                            sector_bytes,
+                            l2_line,
+                            channels,
+                        );
+                    });
+                }
+                s.spawn(move || {
+                    for b in blocks {
+                        for rec in b.records() {
+                            stats.on_record_scaled(&rec, expansion);
+                        }
+                    }
+                });
+            });
+        }
+
+        // merge the shard-exclusive counters
         for shard in self.shards.iter_mut() {
             let d = std::mem::take(&mut shard.delta);
             self.traffic.mem_requests += d.mem_requests;
@@ -457,29 +530,66 @@ impl ShardedHierarchy {
             self.lds_stats.accesses += lds.accesses;
             self.lds_stats.passes += lds.passes;
             self.lds_stats.worst = self.lds_stats.worst.max(lds.worst);
-            for stream in shard.misses.iter_mut() {
-                stream.clear();
-            }
         }
-        for lane in self.lanes.iter_mut() {
+
+        // ---- retire the previous channel phase (serializes L2 cache
+        // state), then launch this batch's asynchronously -------------
+        self.drain_l2();
+        let mut empties = self
+            .spare
+            .pop()
+            .expect("pipeline invariant: a spare miss-buffer set");
+        debug_assert_eq!(empties.len(), self.shards.len());
+        let mut batch: BatchMisses =
+            Vec::with_capacity(self.shards.len());
+        for (shard, empty) in
+            self.shards.iter_mut().zip(empties.drain(..))
+        {
+            batch.push(std::mem::replace(&mut shard.misses, empty));
+        }
+
+        let latch = Latch::new();
+        let stage = Arc::clone(&self.stage);
+        let threads = self.threads;
+        WorkerPool::global().submit(&latch, move || {
+            stage
+                .lock()
+                .unwrap()
+                .replay(batch, channels, l2_line, threads);
+        });
+        self.l2_pending = Some(latch);
+    }
+
+    /// Wait for the in-flight channel phase (if any), fold its
+    /// counters into `traffic`, and reclaim its miss buffers.
+    fn drain_l2(&mut self) {
+        if let Some(latch) = self.l2_pending.take() {
+            WorkerPool::global().wait(&latch);
+        }
+        let mut stage = self.stage.lock().unwrap();
+        for lane in stage.lanes.iter_mut() {
             let d = std::mem::take(&mut lane.delta);
             self.traffic.l2_read_txn += d.l2_read_txn;
             self.traffic.l2_write_txn += d.l2_write_txn;
             self.traffic.hbm_read_bytes += d.hbm_read_bytes;
             self.traffic.hbm_write_bytes += d.hbm_write_bytes;
         }
+        self.spare.extend(stage.free.drain(..));
     }
 
-    /// End-of-kernel: drain the pending batch, then write back all
-    /// dirty L2 lines (same semantics as [`super::MemHierarchy::flush`]).
+    /// End-of-kernel: drain the pending batch and the in-flight channel
+    /// phase, then write back all dirty L2 lines (same semantics as
+    /// [`super::MemHierarchy::flush`]).
     pub fn flush(&mut self) {
         self.process_batch();
-        let wb = self.l2.flush();
+        self.drain_l2();
+        let wb = self.stage.lock().unwrap().l2.flush();
         self.traffic.hbm_write_bytes += wb * self.l2_line;
     }
 
     /// Take the trace statistics accumulated since the last call
-    /// (drains pending work first). One dispatch ⇒ one call.
+    /// (drains pending streamed work first — stats are complete after
+    /// the synchronous L1 phase). One dispatch ⇒ one call.
     pub fn take_stats(&mut self) -> TraceStats {
         self.process_batch();
         std::mem::take(&mut self.stats)
@@ -498,8 +608,11 @@ impl ShardedHierarchy {
         }
     }
 
+    /// L2 hit rate — meaningful at dispatch boundaries (after
+    /// [`ShardedHierarchy::flush`]); the lock makes a mid-flight call
+    /// safe but it then reports a batch boundary, not the stream tail.
     pub fn l2_hit_rate(&self) -> f64 {
-        self.l2.hit_rate()
+        self.stage.lock().unwrap().l2.hit_rate()
     }
 
     /// Worker/shard count in use.
@@ -530,7 +643,7 @@ mod tests {
     use super::*;
     use crate::arch::presets::{mi100, v100};
     use crate::memsim::MemHierarchy;
-    use crate::trace::block::BlockBuilder;
+    use crate::trace::block::{BlockBuilder, BlockRecorder};
     use crate::trace::synth::{RandomTrace, StreamTrace, StridedTrace};
     use crate::trace::TraceSource;
 
@@ -597,7 +710,7 @@ mod tests {
     fn batching_thresholds_do_not_change_results() {
         // repeated dispatch/flush cycles through one engine:
         // state persists across flush boundaries like the sequential
-        // engine's
+        // engine's, and the pipeline drains fully at each flush
         let spec = mi100();
         let t = StreamTrace::babelstream("copy", 1 << 12);
         let mut seq = MemHierarchy::new(&spec);
@@ -617,7 +730,6 @@ mod tests {
     fn consume_blocks_matches_streamed_blocks() {
         // the zero-copy recorded-trace path must equal the streaming
         // BlockBuilder path, including interleaving with buffered work
-        use crate::trace::block::BlockRecorder;
         let spec = mi100();
         let t = StreamTrace::babelstream("triad", 1 << 13);
         let rec = BlockRecorder::record(&t, 64);
@@ -639,6 +751,29 @@ mod tests {
     }
 
     #[test]
+    fn scaled_consume_expands_compute_classes_only() {
+        let spec = mi100();
+        let t = StreamTrace::babelstream("triad", 1 << 12);
+        let rec = BlockRecorder::record(&t, 64);
+
+        let mut scaled = ShardedHierarchy::new(&spec);
+        scaled.consume_blocks_scaled(&rec.blocks, 2.0);
+        scaled.flush();
+        let ss = scaled.take_stats();
+
+        let mut plain = ShardedHierarchy::new(&spec);
+        plain.consume_blocks(&rec.blocks);
+        plain.flush();
+        let sp = plain.take_stats();
+
+        assert_eq!(ss.inst.valu(), 2 * sp.inst.valu());
+        assert_eq!(ss.mem_reads, sp.mem_reads);
+        assert_eq!(ss.bytes_read_requested, sp.bytes_read_requested);
+        // memory-side counters are expansion-independent
+        assert_eq!(scaled.traffic, plain.traffic);
+    }
+
+    #[test]
     fn take_stats_matches_direct_collection() {
         let spec = mi100();
         let t = StreamTrace::babelstream("add", 1 << 12);
@@ -656,6 +791,25 @@ mod tests {
             sharded.take_stats(),
             crate::trace::TraceStats::default()
         );
+    }
+
+    #[test]
+    fn many_small_flush_cycles_keep_the_pipeline_consistent() {
+        // lots of tiny dispatches: every flush retires an in-flight
+        // channel phase and the double-buffered miss sets keep rotating
+        let spec = v100();
+        let t = StreamTrace::babelstream("mul", 1 << 9);
+        let mut seq = MemHierarchy::new(&spec);
+        let mut sharded = ShardedHierarchy::with_shards(&spec, 4);
+        for _ in 0..12 {
+            t.replay(32, &mut seq);
+            seq.flush();
+            let mut b = BlockBuilder::new(&mut sharded);
+            t.replay(32, &mut b);
+            b.finish();
+            sharded.flush();
+            assert_eq!(seq.traffic, sharded.traffic);
+        }
     }
 
     #[test]

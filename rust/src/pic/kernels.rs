@@ -95,18 +95,30 @@ impl KernelCosts {
     };
 
     /// Emit the instruction events, scaled by the target's ISA density.
+    /// The rounding lives in [`InstClass::expand_count`], shared with
+    /// the recorded-trace replay path: a trace emitted at expansion
+    /// `e` is bit-identical to a *neutral* trace (expansion 1.0)
+    /// rescaled by `e` at replay time.
     fn emit(
         &self,
         sink: &mut dyn EventSink,
         ctx: &crate::trace::event::GroupCtx,
         expansion: f64,
     ) {
-        let f = |x: u64| ((x as f64 * expansion).round() as u64).max(x.min(1));
-        sink.on_inst(ctx, InstClass::ValuArith, f(self.valu));
+        let f = |class: InstClass, x: u64| class.expand_count(x, expansion);
+        sink.on_inst(
+            ctx,
+            InstClass::ValuArith,
+            f(InstClass::ValuArith, self.valu),
+        );
         if self.valu_special > 0 {
-            sink.on_inst(ctx, InstClass::ValuSpecial, f(self.valu_special));
+            sink.on_inst(
+                ctx,
+                InstClass::ValuSpecial,
+                f(InstClass::ValuSpecial, self.valu_special),
+            );
         }
-        sink.on_inst(ctx, InstClass::Salu, f(self.salu));
+        sink.on_inst(ctx, InstClass::Salu, f(InstClass::Salu, self.salu));
         sink.on_inst(ctx, InstClass::Branch, self.branch);
         if self.sync > 0 {
             sink.on_inst(ctx, InstClass::Sync, self.sync);
@@ -114,6 +126,43 @@ impl KernelCosts {
         sink.on_inst(ctx, InstClass::Misc, self.misc);
     }
 }
+
+/// Constructors shared by the five kernel traces: [`new`] reads the
+/// target's ISA expansion from its [`GpuSpec`] (the live profiling
+/// path); [`neutral`] emits unscaled counts — the form the coordinator
+/// *records* once per case and rescales per GPU at replay time
+/// (`ProfileSession::profile_blocks_scaled`).
+///
+/// [`new`]: MoveAndMarkTrace::new
+/// [`neutral`]: MoveAndMarkTrace::neutral
+macro_rules! kernel_trace_ctors {
+    ($name:ident) => {
+        impl<'a> $name<'a> {
+            /// Trace for a specific GPU (ISA expansion applied at emit).
+            pub fn new(state: &'a SimState, spec: &GpuSpec) -> Self {
+                $name {
+                    state,
+                    expansion: spec.isa_expansion,
+                }
+            }
+
+            /// Expansion-neutral trace for recording; specialize at
+            /// replay with [`InstClass::expand_count`].
+            pub fn neutral(state: &'a SimState) -> Self {
+                $name {
+                    state,
+                    expansion: 1.0,
+                }
+            }
+        }
+    };
+}
+
+kernel_trace_ctors!(MoveAndMarkTrace);
+kernel_trace_ctors!(ComputeCurrentTrace);
+kernel_trace_ctors!(FieldSolverTrace);
+kernel_trace_ctors!(ShiftParticlesTrace);
+kernel_trace_ctors!(CurrentResetTrace);
 
 fn field_bytes(cfg: &CaseConfig) -> u64 {
     (3 * cfg.cells() * 4) as u64
@@ -227,7 +276,9 @@ fn corner_cells(
 /// Trace of the `MoveAndMark` kernel over the current particle state.
 pub struct MoveAndMarkTrace<'a> {
     pub state: &'a SimState,
-    pub spec: &'a GpuSpec,
+    /// ISA expansion applied to compute-class instruction counts
+    /// (1.0 = neutral; see the constructors).
+    pub expansion: f64,
 }
 
 impl TraceSource for MoveAndMarkTrace<'_> {
@@ -270,7 +321,7 @@ impl TraceSource for MoveAndMarkTrace<'_> {
             KernelCosts::MOVE_AND_MARK.emit(
                 sink,
                 ctx,
-                self.spec.isa_expansion,
+                self.expansion,
             );
 
             // store updated pos + mom
@@ -287,7 +338,9 @@ impl TraceSource for MoveAndMarkTrace<'_> {
 /// Trace of the `ComputeCurrent` kernel: LDS-staged, atomics to global J.
 pub struct ComputeCurrentTrace<'a> {
     pub state: &'a SimState,
-    pub spec: &'a GpuSpec,
+    /// ISA expansion applied to compute-class instruction counts
+    /// (1.0 = neutral; see the constructors).
+    pub expansion: f64,
 }
 
 impl TraceSource for ComputeCurrentTrace<'_> {
@@ -342,7 +395,7 @@ impl TraceSource for ComputeCurrentTrace<'_> {
             KernelCosts::COMPUTE_CURRENT.emit(
                 sink,
                 ctx,
-                self.spec.isa_expansion,
+                self.expansion,
             );
         });
     }
@@ -355,7 +408,9 @@ impl TraceSource for ComputeCurrentTrace<'_> {
 /// Trace of the `FieldSolver` kernel (threads = cells, streaming stencil).
 pub struct FieldSolverTrace<'a> {
     pub state: &'a SimState,
-    pub spec: &'a GpuSpec,
+    /// ISA expansion applied to compute-class instruction counts
+    /// (1.0 = neutral; see the constructors).
+    pub expansion: f64,
 }
 
 impl TraceSource for FieldSolverTrace<'_> {
@@ -396,7 +451,7 @@ impl TraceSource for FieldSolverTrace<'_> {
             KernelCosts::FIELD_SOLVER.emit(
                 sink,
                 ctx,
-                self.spec.isa_expansion,
+                self.expansion,
             );
             // write back E and B
             for (arr, comps) in [(E_BASE, 3u64), (b_base(cfg), 3)] {
@@ -419,7 +474,9 @@ impl TraceSource for FieldSolverTrace<'_> {
 /// Trace of `ShiftParticles` (frame bookkeeping: stream pos/mom).
 pub struct ShiftParticlesTrace<'a> {
     pub state: &'a SimState,
-    pub spec: &'a GpuSpec,
+    /// ISA expansion applied to compute-class instruction counts
+    /// (1.0 = neutral; see the constructors).
+    pub expansion: f64,
 }
 
 impl TraceSource for ShiftParticlesTrace<'_> {
@@ -435,7 +492,7 @@ impl TraceSource for ShiftParticlesTrace<'_> {
             KernelCosts::SHIFT_PARTICLES.emit(
                 sink,
                 ctx,
-                self.spec.isa_expansion,
+                self.expansion,
             );
             particle_attr_access(sink, ctx, MemKind::Write, POS_BASE, range);
         });
@@ -445,7 +502,9 @@ impl TraceSource for ShiftParticlesTrace<'_> {
 /// Trace of `CurrentReset` (memset of J).
 pub struct CurrentResetTrace<'a> {
     pub state: &'a SimState,
-    pub spec: &'a GpuSpec,
+    /// ISA expansion applied to compute-class instruction counts
+    /// (1.0 = neutral; see the constructors).
+    pub expansion: f64,
 }
 
 impl TraceSource for CurrentResetTrace<'_> {
@@ -470,7 +529,7 @@ impl TraceSource for CurrentResetTrace<'_> {
             KernelCosts::CURRENT_RESET.emit(
                 sink,
                 ctx,
-                self.spec.isa_expansion,
+                self.expansion,
             );
         });
     }
@@ -490,10 +549,7 @@ mod tests {
     fn move_and_mark_event_shape() {
         let st = state();
         let spec = mi100();
-        let t = MoveAndMarkTrace {
-            state: &st,
-            spec: &spec,
-        };
+        let t = MoveAndMarkTrace::new(&st, &spec);
         let s = collect_stats(&t, 64);
         let groups = 256000 / 64;
         assert_eq!(s.groups, groups);
@@ -507,10 +563,7 @@ mod tests {
     fn compute_current_uses_lds_and_atomics() {
         let st = state();
         let spec = mi100();
-        let t = ComputeCurrentTrace {
-            state: &st,
-            spec: &spec,
-        };
+        let t = ComputeCurrentTrace::new(&st, &spec);
         let s = collect_stats(&t, 64);
         let groups = 256000 / 64;
         assert_eq!(s.mem_atomics, groups * 24);
@@ -521,20 +574,8 @@ mod tests {
     fn isa_expansion_inflates_amd_compute_counts() {
         let st = state();
         let (v, m) = (v100(), mi60());
-        let sv = collect_stats(
-            &MoveAndMarkTrace {
-                state: &st,
-                spec: &v,
-            },
-            64,
-        );
-        let sm = collect_stats(
-            &MoveAndMarkTrace {
-                state: &st,
-                spec: &m,
-            },
-            64,
-        );
+        let sv = collect_stats(&MoveAndMarkTrace::new(&st, &v), 64);
+        let sm = collect_stats(&MoveAndMarkTrace::new(&st, &m), 64);
         let ratio = sm.inst.valu() as f64 / sv.inst.valu() as f64;
         assert!((ratio - 3.6).abs() < 0.05, "{ratio}");
         // memory instruction counts are NOT inflated
@@ -545,10 +586,7 @@ mod tests {
     fn warp_gpu_needs_twice_the_groups() {
         let st = state();
         let spec = v100();
-        let t = MoveAndMarkTrace {
-            state: &st,
-            spec: &spec,
-        };
+        let t = MoveAndMarkTrace::new(&st, &spec);
         assert_eq!(collect_stats(&t, 32).groups, 256000 / 32);
         assert_eq!(collect_stats(&t, 64).groups, 256000 / 64);
     }
@@ -557,10 +595,7 @@ mod tests {
     fn field_solver_covers_cells() {
         let st = state();
         let spec = mi100();
-        let t = FieldSolverTrace {
-            state: &st,
-            spec: &spec,
-        };
+        let t = FieldSolverTrace::new(&st, &spec);
         let s = collect_stats(&t, 64);
         assert_eq!(s.groups, 64000 / 64);
         // 21 reads + 6 writes per group
@@ -572,12 +607,33 @@ mod tests {
     fn current_reset_writes_all_of_j() {
         let st = state();
         let spec = mi100();
-        let t = CurrentResetTrace {
-            state: &st,
-            spec: &spec,
-        };
+        let t = CurrentResetTrace::new(&st, &spec);
         let s = collect_stats(&t, 64);
         assert_eq!(s.bytes_written_requested, 3 * 64000 * 4);
+    }
+
+    #[test]
+    fn neutral_trace_rescaled_equals_live_emission() {
+        // the record-once contract: a neutral trace with
+        // InstClass::expand_count applied per record must equal the
+        // live spec-scaled emission bit-for-bit
+        use crate::trace::sink::ScaleInstSink;
+        let st = state();
+        for spec in [v100(), mi60(), mi100()] {
+            let live = collect_stats(
+                &MoveAndMarkTrace::new(&st, &spec),
+                64,
+            );
+            let mut rescaled = crate::trace::TraceStats::default();
+            {
+                let mut sink = ScaleInstSink::new(
+                    &mut rescaled,
+                    spec.isa_expansion,
+                );
+                MoveAndMarkTrace::neutral(&st).replay(64, &mut sink);
+            }
+            assert_eq!(live, rescaled, "{}", spec.name);
+        }
     }
 
     #[test]
@@ -594,20 +650,8 @@ mod tests {
         sim.run(5);
         b = sim.state;
         let spec = mi100();
-        let ta = collect_stats(
-            &MoveAndMarkTrace {
-                state: &a,
-                spec: &spec,
-            },
-            64,
-        );
-        let tb = collect_stats(
-            &MoveAndMarkTrace {
-                state: &b,
-                spec: &spec,
-            },
-            64,
-        );
+        let ta = collect_stats(&MoveAndMarkTrace::new(&a, &spec), 64);
+        let tb = collect_stats(&MoveAndMarkTrace::new(&b, &spec), 64);
         // same instruction counts, but the byte-level behaviour differs
         // downstream; at stats level the requested bytes match:
         assert_eq!(ta.bytes_read_requested, tb.bytes_read_requested);

@@ -20,7 +20,7 @@ use crate::memsim::banks::ConflictStats;
 use crate::memsim::{MemHierarchy, MemTraffic, ShardedHierarchy};
 use crate::timing::{kernel_time, KernelCost};
 use crate::trace::block::{BlockBuilder, EventBlock};
-use crate::trace::sink::FanoutSink;
+use crate::trace::sink::{FanoutSink, ScaleInstSink};
 use crate::trace::{TraceSource, TraceStats};
 
 /// Which replay engine a session uses.
@@ -165,14 +165,32 @@ impl ProfileSession {
         kernel: &str,
         blocks: &[EventBlock],
     ) -> &DispatchRecord {
+        self.profile_blocks_scaled(kernel, blocks, 1.0)
+    }
+
+    /// [`Self::profile_blocks`] with an ISA-expansion factor applied to
+    /// the instruction counts (exact identity at 1.0). This is the
+    /// record-once / replay-everywhere entry point: the coordinator
+    /// records each case's trace *expansion-neutral* once, then every
+    /// GPU preset replays the same `Arc`-shared blocks zero-copy,
+    /// passing its own `spec.isa_expansion`. Counters are bit-identical
+    /// to live-profiling a trace emitted at that expansion.
+    pub fn profile_blocks_scaled(
+        &mut self,
+        kernel: &str,
+        blocks: &[EventBlock],
+        expansion: f64,
+    ) -> &DispatchRecord {
         let (stats, traffic_now, lds_now) = match &mut self.engine {
             EngineState::Sequential(hier) => {
                 let mut stats = TraceStats::default();
                 {
                     let mut fan =
                         FanoutSink::new(vec![&mut stats, hier]);
+                    let mut scaled =
+                        ScaleInstSink::new(&mut fan, expansion);
                     for b in blocks {
-                        b.replay_into(&mut fan);
+                        b.replay_into(&mut scaled);
                     }
                 }
                 hier.flush();
@@ -180,7 +198,7 @@ impl ProfileSession {
             }
             EngineState::Sharded(eng) => {
                 // zero-copy: recorded blocks are consumed in place
-                eng.consume_blocks(blocks);
+                eng.consume_blocks_scaled(blocks, expansion);
                 eng.flush();
                 let stats = eng.take_stats();
                 (stats, eng.traffic, eng.lds_stats)
@@ -347,6 +365,34 @@ mod tests {
             assert_eq!(a.stats, b.stats, "{mode:?}");
             assert_eq!(a.duration_s, b.duration_s);
         }
+    }
+
+    #[test]
+    fn scaled_block_replay_agrees_across_engines() {
+        // the recorded-replay path: neutral blocks + per-GPU expansion
+        // must agree between the sequential and sharded engines
+        use crate::trace::block::BlockRecorder;
+        let spec = mi100();
+        let t = StreamTrace::babelstream("triad", 1 << 12);
+        let rec = BlockRecorder::record(&t, spec.group_size);
+        let mut seq = ProfileSession::sequential(spec.clone());
+        let mut shr = ProfileSession::new(spec.clone());
+        for _ in 0..2 {
+            seq.profile_blocks_scaled("k", &rec.blocks, 3.3);
+            shr.profile_blocks_scaled("k", &rec.blocks, 3.3);
+        }
+        for (a, b) in seq.dispatches.iter().zip(shr.dispatches.iter())
+        {
+            assert_eq!(a.stats, b.stats);
+            assert_eq!(a.traffic, b.traffic);
+            assert_eq!(a.duration_s, b.duration_s);
+        }
+        // expansion shows up in the compute counts but not the memory
+        let mut plain = ProfileSession::new(spec.clone());
+        plain.profile_blocks("k", &rec.blocks);
+        let (s, p) = (&shr.dispatches[0], &plain.dispatches[0]);
+        assert!(s.stats.inst.valu() > p.stats.inst.valu());
+        assert_eq!(s.traffic, p.traffic);
     }
 
     #[test]

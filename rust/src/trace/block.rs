@@ -68,6 +68,17 @@ pub enum BlockRecord<'a> {
     },
 }
 
+impl BlockRecord<'_> {
+    /// The issuing group, whatever the record kind.
+    pub fn group_id(&self) -> u64 {
+        match *self {
+            BlockRecord::Inst { group_id, .. }
+            | BlockRecord::Mem { group_id, .. }
+            | BlockRecord::Lds { group_id, .. } => group_id,
+        }
+    }
+}
+
 /// One chunk of a trace in SoA form. Reusable: [`EventBlock::clear`]
 /// keeps every allocation.
 #[derive(Debug, Default, Clone)]

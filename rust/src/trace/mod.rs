@@ -18,11 +18,21 @@
 //!   channels; see `memsim/` for the ordering contract that keeps the
 //!   two forms bit-identical.
 //!
+//! * **recorded** — [`recorded::RecordedDispatch`] captures the batched
+//!   form once as immutable, `Arc`-shared blocks; any number of
+//!   sessions replay the same storage zero-copy (the coordinator's
+//!   record-once / replay-everywhere sweep). Recordings are
+//!   expansion-neutral and made at wavefront width;
+//!   [`recorded::split_half_groups`] derives the warp-width stream and
+//!   [`sink::ScaleInstSink`] / [`stats::TraceStats::on_record_scaled`]
+//!   apply a target's ISA expansion at replay time.
+//!
 //! Blocks hold at most [`block::BLOCK_CAPACITY`] records, so
 //! multi-million-event workloads still replay in bounded memory.
 
 pub mod block;
 pub mod event;
+pub mod recorded;
 pub mod sink;
 pub mod stats;
 pub mod synth;
@@ -31,7 +41,8 @@ pub use block::{
     BlockBuilder, BlockRecord, BlockRecorder, BlockSink, EventBlock,
 };
 pub use event::{GroupCtx, LdsAccess, MemAccess, MemKind, MAX_LANES};
-pub use sink::{EventSink, FanoutSink, NullSink};
+pub use recorded::{split_half_groups, RecordedDispatch};
+pub use sink::{EventSink, FanoutSink, NullSink, ScaleInstSink};
 pub use stats::TraceStats;
 
 use crate::arch::InstClass;

@@ -1,0 +1,292 @@
+//! Recorded traces: capture a kernel's event stream once as immutable
+//! SoA blocks, replay it everywhere.
+//!
+//! A [`RecordedDispatch`] is the unit the coordinator stores per kernel
+//! launch: the kernel's name plus its [`EventBlock`]s behind an `Arc`,
+//! so any number of sessions (one per GPU preset) replay the same
+//! storage zero-copy via
+//! [`crate::profiler::ProfileSession::profile_blocks`].
+//!
+//! Recordings are made at one *base* group size (the 64-lane wavefront,
+//! the widest preset). Warp-width targets (32-lane V100) replay a
+//! derived form produced by [`split_half_groups`], which rewrites every
+//! 64-lane group as the two 32-lane groups a live warp-width replay
+//! would have produced — positionally, so the derived stream is
+//! **bit-identical** to regenerating the trace at the half width.
+//!
+//! The split relies on three properties that every in-tree trace
+//! generator satisfies (and `tests/record_replay.rs` enforces for the
+//! PIC kernels):
+//!
+//! 1. the per-group record sequence is the same at every group size
+//!    (generators emit a fixed pattern parameterized by the lane range);
+//! 2. every access record covers all of its group's lanes in lane
+//!    order (full active masks), so lane `l` of a wide group is entry
+//!    `l` of the compacted address payload;
+//! 3. group ids are dense and issued in order (`for_each_group`).
+
+use std::sync::Arc;
+
+use super::block::{BlockRecord, BlockRecorder, EventBlock, BLOCK_CAPACITY};
+use super::event::{GroupCtx, LdsAccess, MemAccess};
+use super::TraceSource;
+
+/// One recorded kernel dispatch, `Arc`-shared for zero-copy replay.
+#[derive(Debug, Clone)]
+pub struct RecordedDispatch {
+    pub kernel: String,
+    pub blocks: Arc<Vec<EventBlock>>,
+}
+
+impl RecordedDispatch {
+    /// Record one full replay of `src` at `group_size`.
+    pub fn record(
+        src: &dyn TraceSource,
+        group_size: u32,
+    ) -> RecordedDispatch {
+        RecordedDispatch {
+            kernel: src.name().to_string(),
+            blocks: Arc::new(
+                BlockRecorder::record(src, group_size).blocks,
+            ),
+        }
+    }
+}
+
+/// Rewrite blocks recorded at group size `2 * half` into the exact
+/// stream a live replay at group size `half` would produce: each wide
+/// group becomes its low-lane sub-group followed by its high-lane
+/// sub-group (complete record sequence each, instruction records
+/// duplicated — per-group costs are issued per group at any width),
+/// with dense renumbered group ids. See the module docs for the
+/// preconditions.
+pub fn split_half_groups(
+    blocks: &[EventBlock],
+    half: u32,
+) -> Vec<EventBlock> {
+    let half = half as usize;
+    let mut out: Vec<EventBlock> = Vec::new();
+    let mut cur = EventBlock::with_capacity(BLOCK_CAPACITY);
+    let mut group: Vec<BlockRecord<'_>> = Vec::new();
+    let mut cur_gid: Option<u64> = None;
+    let mut next_id = 0u64;
+
+    for b in blocks {
+        for rec in b.records() {
+            let gid = rec.group_id();
+            if cur_gid != Some(gid) {
+                debug_assert!(
+                    cur_gid.map_or(gid == 0, |p| gid == p + 1),
+                    "group ids must be dense and in issue order \
+                     ({cur_gid:?} -> {gid})"
+                );
+                if !group.is_empty() {
+                    flush_group(
+                        &group,
+                        half,
+                        &mut next_id,
+                        &mut cur,
+                        &mut out,
+                    );
+                    group.clear();
+                }
+                cur_gid = Some(gid);
+            }
+            group.push(rec);
+        }
+    }
+    if !group.is_empty() {
+        flush_group(&group, half, &mut next_id, &mut cur, &mut out);
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Emit one recorded wide group as its half-width sub-group(s).
+fn flush_group(
+    recs: &[BlockRecord<'_>],
+    half: usize,
+    next_id: &mut u64,
+    cur: &mut EventBlock,
+    out: &mut Vec<EventBlock>,
+) {
+    // the group's lane count is the widest access payload (precondition
+    // 2: full active masks); a tail group narrower than `half` stays one
+    // group, like `for_each_group` would produce
+    let lanes = recs
+        .iter()
+        .map(|r| match r {
+            BlockRecord::Mem { addrs, .. }
+            | BlockRecord::Lds { addrs, .. } => addrs.len(),
+            BlockRecord::Inst { .. } => 0,
+        })
+        .max()
+        .unwrap_or(0);
+    // a group with no access records has no observable width — the
+    // split would silently guess wrong, so fail loudly instead
+    debug_assert!(
+        lanes > 0,
+        "splitting requires at least one access record per group \
+         (cannot infer the group's lane width)"
+    );
+    let halves = if lanes > half { 2 } else { 1 };
+    for sub in 0..halves {
+        let ctx = GroupCtx {
+            group_id: *next_id,
+        };
+        *next_id += 1;
+        for r in recs {
+            match *r {
+                BlockRecord::Inst { class, count, .. } => {
+                    cur.push_inst(&ctx, class, count);
+                }
+                BlockRecord::Mem {
+                    kind,
+                    bytes_per_lane,
+                    addrs,
+                    ..
+                } => {
+                    debug_assert_eq!(
+                        addrs.len(),
+                        lanes,
+                        "splitting requires full-width access records"
+                    );
+                    let cut = addrs.len().min(half);
+                    let part = if sub == 0 {
+                        &addrs[..cut]
+                    } else {
+                        &addrs[cut..]
+                    };
+                    if !part.is_empty() {
+                        cur.push_mem(
+                            &ctx,
+                            &MemAccess::gather(
+                                kind,
+                                part,
+                                bytes_per_lane,
+                            ),
+                        );
+                    }
+                }
+                BlockRecord::Lds {
+                    kind,
+                    bytes_per_lane,
+                    addrs,
+                    ..
+                } => {
+                    debug_assert_eq!(
+                        addrs.len(),
+                        lanes,
+                        "splitting requires full-width access records"
+                    );
+                    let cut = addrs.len().min(half);
+                    let part = if sub == 0 {
+                        &addrs[..cut]
+                    } else {
+                        &addrs[cut..]
+                    };
+                    if !part.is_empty() {
+                        cur.push_lds(
+                            &ctx,
+                            &LdsAccess::from_lane_addrs(
+                                kind,
+                                part,
+                                bytes_per_lane,
+                            ),
+                        );
+                    }
+                }
+            }
+            if cur.len() >= BLOCK_CAPACITY {
+                out.push(std::mem::replace(
+                    cur,
+                    EventBlock::with_capacity(BLOCK_CAPACITY),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::{RandomTrace, StreamTrace, StridedTrace};
+
+    /// Flatten a block list into its record sequence.
+    fn records(blocks: &[EventBlock]) -> Vec<BlockRecord<'_>> {
+        blocks.iter().flat_map(|b| b.records()).collect()
+    }
+
+    fn assert_split_matches_direct(t: &dyn TraceSource) {
+        let wide = BlockRecorder::record(t, 64);
+        let split = split_half_groups(&wide.blocks, 32);
+        let direct = BlockRecorder::record(t, 32);
+        let a = records(&split);
+        let b = records(&direct.blocks);
+        assert_eq!(a.len(), b.len(), "{}", t.name());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x, y, "{} record {i}", t.name());
+        }
+    }
+
+    #[test]
+    fn split_equals_direct_half_width_generation() {
+        assert_split_matches_direct(&StreamTrace::babelstream(
+            "triad",
+            1 << 12,
+        ));
+        assert_split_matches_direct(&StridedTrace {
+            name: "s".into(),
+            n: 1 << 11,
+            stride: 68,
+            bytes_per_lane: 4,
+        });
+        // RandomTrace draws addresses from one RNG stream in lane
+        // order, so the wide recording's halves are exactly the
+        // narrow groups' draws
+        assert_split_matches_direct(&RandomTrace {
+            name: "r".into(),
+            n: 1 << 11,
+            span: 1 << 20,
+            bytes_per_lane: 4,
+            seed: 5,
+        });
+    }
+
+    #[test]
+    fn split_handles_partial_tail_groups() {
+        // n = 130: wide groups of 64, 64, 2 -> narrow 32,32,32,32,2
+        let t = StreamTrace::babelstream("copy", 130);
+        assert_split_matches_direct(&t);
+        let wide = BlockRecorder::record(&t, 64);
+        let split = split_half_groups(&wide.blocks, 32);
+        let max_gid = records(&split)
+            .iter()
+            .map(|r| r.group_id())
+            .max()
+            .unwrap();
+        assert_eq!(max_gid, 4);
+    }
+
+    #[test]
+    fn split_crosses_block_boundaries() {
+        // enough groups that records straddle BLOCK_CAPACITY flushes
+        let t = StreamTrace::babelstream("add", 1 << 17);
+        let wide = BlockRecorder::record(&t, 64);
+        assert!(wide.blocks.len() > 1, "want a multi-block recording");
+        assert_split_matches_direct(&t);
+    }
+
+    #[test]
+    fn recorded_dispatch_carries_kernel_name() {
+        let t = StreamTrace::babelstream("dot", 256);
+        let d = RecordedDispatch::record(&t, 64);
+        assert_eq!(d.kernel, "stream_dot");
+        assert!(!d.blocks.is_empty());
+        // Arc sharing: clones are zero-copy
+        let d2 = d.clone();
+        assert!(Arc::ptr_eq(&d.blocks, &d2.blocks));
+    }
+}

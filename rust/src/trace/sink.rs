@@ -55,6 +55,39 @@ impl EventSink for FanoutSink<'_> {
     }
 }
 
+/// Applies an ISA-expansion factor to instruction counts on the way
+/// through (exact identity at 1.0). This is how expansion-neutral
+/// *recorded* traces are specialized to a GPU at replay time: memory
+/// and LDS events pass through untouched, compute-class counts scale
+/// by [`InstClass::expand_count`] — the same rounding the live trace
+/// generators apply at emit time.
+pub struct ScaleInstSink<'a> {
+    inner: &'a mut dyn EventSink,
+    expansion: f64,
+}
+
+impl<'a> ScaleInstSink<'a> {
+    pub fn new(inner: &'a mut dyn EventSink, expansion: f64) -> Self {
+        ScaleInstSink { inner, expansion }
+    }
+}
+
+impl EventSink for ScaleInstSink<'_> {
+    fn on_inst(&mut self, ctx: &GroupCtx, class: InstClass, count: u64) {
+        self.inner.on_inst(
+            ctx,
+            class,
+            class.expand_count(count, self.expansion),
+        );
+    }
+    fn on_mem(&mut self, ctx: &GroupCtx, access: &MemAccess) {
+        self.inner.on_mem(ctx, access);
+    }
+    fn on_lds(&mut self, ctx: &GroupCtx, access: &LdsAccess) {
+        self.inner.on_lds(ctx, access);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +110,24 @@ mod tests {
         fn on_lds(&mut self, _: &GroupCtx, _: &LdsAccess) {
             self.lds += 1;
         }
+    }
+
+    #[test]
+    fn scale_sink_expands_compute_and_forwards_memory() {
+        let mut inner = Count::default();
+        {
+            let mut scaled = ScaleInstSink::new(&mut inner, 3.0);
+            let ctx = GroupCtx { group_id: 0 };
+            scaled.on_inst(&ctx, InstClass::ValuArith, 10);
+            scaled.on_inst(&ctx, InstClass::Branch, 10);
+            scaled.on_mem(
+                &ctx,
+                &MemAccess::contiguous(MemKind::Read, 0, 32, 4),
+            );
+        }
+        // 10 valu -> 30, 10 branch -> 10 (structural), 1 mem event
+        assert_eq!(inner.inst, 40);
+        assert_eq!(inner.mem, 1);
     }
 
     #[test]

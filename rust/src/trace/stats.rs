@@ -97,6 +97,30 @@ impl TraceStats {
         self.inst.total()
     }
 
+    /// [`TraceStats::on_record`] with an ISA-expansion factor applied
+    /// to instruction counts (identity at 1.0) — the fold used when an
+    /// expansion-neutral *recorded* trace is replayed for a specific
+    /// GPU. Must agree with [`crate::trace::sink::ScaleInstSink`].
+    pub fn on_record_scaled(
+        &mut self,
+        rec: &crate::trace::block::BlockRecord<'_>,
+        expansion: f64,
+    ) {
+        use crate::trace::block::BlockRecord;
+        match *rec {
+            BlockRecord::Inst {
+                group_id,
+                class,
+                count,
+            } => {
+                self.inst
+                    .add(class, class.expand_count(count, expansion));
+                self.groups = self.groups.max(group_id + 1);
+            }
+            _ => self.on_record(rec),
+        }
+    }
+
     /// Fold one batched record in — the SoA fast path, equivalent to the
     /// [`EventSink`] methods but without rebuilding a 512-byte access
     /// struct per record.

@@ -203,6 +203,156 @@ pub fn write_json(
     std::fs::write(path, results_to_json(results))
 }
 
+/// Parse the flat `{"name": number}` JSON this module writes (and CI
+/// baselines hand-edit). `serde` is unavailable offline; the format is
+/// one object of string keys and numeric values, nothing else.
+pub fn parse_flat_json(s: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    fn skip_ws(it: &mut std::iter::Peekable<std::str::Chars<'_>>) {
+        while matches!(it.peek(), Some(c) if c.is_whitespace()) {
+            it.next();
+        }
+    }
+    let mut out = Vec::new();
+    let mut it = s.chars().peekable();
+    skip_ws(&mut it);
+    anyhow::ensure!(
+        it.next() == Some('{'),
+        "flat JSON must start with '{{'"
+    );
+    loop {
+        skip_ws(&mut it);
+        match it.peek() {
+            Some('}') => {
+                it.next();
+                break;
+            }
+            Some('"') => {
+                it.next();
+                let mut key = String::new();
+                loop {
+                    match it.next() {
+                        Some('\\') => {
+                            if let Some(c) = it.next() {
+                                key.push(c);
+                            }
+                        }
+                        Some('"') => break,
+                        Some(c) => key.push(c),
+                        None => anyhow::bail!(
+                            "unterminated key in flat JSON"
+                        ),
+                    }
+                }
+                skip_ws(&mut it);
+                anyhow::ensure!(
+                    it.next() == Some(':'),
+                    "expected ':' after \"{key}\""
+                );
+                skip_ws(&mut it);
+                let mut num = String::new();
+                while matches!(
+                    it.peek(),
+                    Some(c) if c.is_ascii_digit()
+                        || "+-.eE".contains(*c)
+                ) {
+                    num.push(it.next().unwrap());
+                }
+                let v: f64 = num.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad number '{num}' for \"{key}\""
+                    )
+                })?;
+                out.push((key, v));
+                skip_ws(&mut it);
+                if it.peek() == Some(&',') {
+                    it.next();
+                }
+            }
+            other => {
+                anyhow::bail!("unexpected {other:?} in flat JSON")
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Render `(name, value)` pairs in the same flat JSON shape as
+/// [`results_to_json`] — used to write bench-gate baselines.
+pub fn flat_json(pairs: &[(String, f64)]) -> String {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        let comma = if i + 1 == pairs.len() { "" } else { "," };
+        out.push_str(&format!("  \"{k}\": {v:.3}{comma}\n"));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Outcome of [`gate_speedups`].
+pub struct GateOutcome {
+    /// Ratios compared against the baseline.
+    pub checked: usize,
+    /// Human-readable per-entry verdict lines.
+    pub report: Vec<String>,
+    /// Failure descriptions; empty means the gate passes.
+    pub failures: Vec<String>,
+}
+
+/// The bench regression gate: every `speedup/*` entry in `baseline`
+/// must appear in `current` at no less than `baseline * (1 -
+/// tolerance)`. Entries only in `current` pass with a note (new
+/// benches enter the baseline on the next `--update-baseline`).
+pub fn gate_speedups(
+    current: &[(String, f64)],
+    baseline: &[(String, f64)],
+    tolerance: f64,
+) -> GateOutcome {
+    let mut out = GateOutcome {
+        checked: 0,
+        report: Vec::new(),
+        failures: Vec::new(),
+    };
+    for (name, base) in baseline
+        .iter()
+        .filter(|(n, _)| n.starts_with("speedup/"))
+    {
+        match current.iter().find(|(n, _)| n == name) {
+            None => out.failures.push(format!(
+                "{name}: missing from current run \
+                 (baseline {base:.2}x; bench renamed or lost?)"
+            )),
+            Some((_, cur)) => {
+                out.checked += 1;
+                let floor = base * (1.0 - tolerance);
+                let failed = *cur < floor;
+                let verdict = if failed { "FAIL" } else { "ok" };
+                out.report.push(format!(
+                    "{verdict:>4}  {name:<44} {cur:>7.2}x \
+                     (baseline {base:.2}x, floor {floor:.2}x)"
+                ));
+                if failed {
+                    out.failures.push(format!(
+                        "{name}: {cur:.2}x fell below the \
+                         {floor:.2}x floor (baseline {base:.2}x \
+                         - {:.0}%)",
+                        tolerance * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    for (name, cur) in current {
+        if name.starts_with("speedup/")
+            && !baseline.iter().any(|(n, _)| n == name)
+        {
+            out.report.push(format!(
+                " new  {name:<44} {cur:>7.2}x (not in baseline yet)"
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +394,78 @@ mod tests {
         assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
         assert!(json.contains("\"g/a\": 1000.000,"), "{json}");
         assert!(json.contains("\"g/b\": 4.000\n"), "{json}");
+    }
+
+    #[test]
+    fn flat_json_round_trips_through_the_parser() {
+        let results = vec![
+            BenchResult {
+                name: "g/a".into(),
+                time: Summary::of(&[0.5, 0.5]),
+                throughput: Some(1234.5),
+            },
+            BenchResult {
+                name: "speedup/x".into(),
+                time: Summary::of(&[0.25]),
+                throughput: Some(2.75),
+            },
+        ];
+        let parsed =
+            parse_flat_json(&results_to_json(&results)).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].0, "g/a");
+        assert!((parsed[0].1 - 1234.5).abs() < 1e-9);
+        assert_eq!(parsed[1].0, "speedup/x");
+        assert!((parsed[1].1 - 2.75).abs() < 1e-9);
+        // and the baseline writer's output parses too
+        let again = parse_flat_json(&flat_json(&parsed)).unwrap();
+        assert_eq!(again.len(), 2);
+    }
+
+    #[test]
+    fn parser_accepts_hand_edits_and_rejects_junk() {
+        let parsed = parse_flat_json(
+            "{ \"a\": 1.5e3 ,\n\t\"b\":2 }",
+        )
+        .unwrap();
+        assert_eq!(parsed[0], ("a".to_string(), 1500.0));
+        assert_eq!(parsed[1], ("b".to_string(), 2.0));
+        assert!(parse_flat_json("").is_err());
+        assert!(parse_flat_json("{\"a\" 1}").is_err());
+        assert!(parse_flat_json("{\"a\": nope}").is_err());
+        assert!(parse_flat_json("{\"a\": 1").is_err());
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_fails_below_floor() {
+        let baseline = vec![
+            ("speedup/a".to_string(), 2.0),
+            ("speedup/b".to_string(), 1.0),
+            ("other/ignored".to_string(), 9.0),
+        ];
+        // a: 1.7 >= 2.0*0.8 = 1.6 -> ok; b: 0.7 < 0.8 -> fail
+        let current = vec![
+            ("speedup/a".to_string(), 1.7),
+            ("speedup/b".to_string(), 0.7),
+            ("speedup/new".to_string(), 3.0),
+        ];
+        let out = gate_speedups(&current, &baseline, 0.2);
+        assert_eq!(out.checked, 2);
+        assert_eq!(out.failures.len(), 1);
+        assert!(out.failures[0].contains("speedup/b"), "{:?}", out.failures);
+        assert!(out
+            .report
+            .iter()
+            .any(|l| l.contains("new") && l.contains("speedup/new")));
+    }
+
+    #[test]
+    fn gate_flags_missing_benches() {
+        let baseline = vec![("speedup/gone".to_string(), 1.5)];
+        let out = gate_speedups(&[], &baseline, 0.2);
+        assert_eq!(out.checked, 0);
+        assert_eq!(out.failures.len(), 1);
+        assert!(out.failures[0].contains("missing"));
     }
 
     #[test]

@@ -8,10 +8,12 @@
 pub mod bench;
 pub mod check;
 pub mod csvio;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod units;
 
+pub use pool::WorkerPool;
 pub use rng::Xoshiro256;
 pub use stats::Summary;

@@ -1,0 +1,425 @@
+//! A persistent worker pool with help-while-waiting scheduling.
+//!
+//! The replay engine dispatches thousands of short parallel phases per
+//! sweep; spawning OS threads per batch (`std::thread::scope`) costs
+//! more than the work itself once dispatches shrink below ~64k events.
+//! This pool spawns its workers **once** (see [`WorkerPool::global`])
+//! and feeds them jobs from a shared queue:
+//!
+//! * [`WorkerPool::scope`] — structured fork/join over borrowed data,
+//!   the drop-in replacement for `thread::scope`. The calling thread
+//!   *helps* (executes queued jobs) instead of blocking, so nested
+//!   scopes — an experiment job whose replay engine forks its own L1
+//!   phase — cannot starve the pool.
+//! * [`WorkerPool::submit`] + [`WorkerPool::wait`] — fire-and-forget
+//!   jobs tracked by a [`Latch`], used for pipelined phases that
+//!   outlive the call that launched them (the replay engine overlaps
+//!   batch N's L2 phase with batch N+1's L1 phase this way).
+//!
+//! Panics inside jobs are caught, recorded on the latch, and re-raised
+//! on the waiting thread.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Worker count for the global pool (and the replay engine's default
+/// shard count): the host's cores, bounded so tiny machines and huge
+/// ones both behave.
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16)
+}
+
+/// Completion tracker for a group of pool jobs. Cloning shares the
+/// underlying counter (jobs hold a clone while they run).
+#[derive(Clone, Default)]
+pub struct Latch {
+    inner: Arc<LatchInner>,
+}
+
+#[derive(Default)]
+struct LatchInner {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    pub fn new() -> Latch {
+        Latch::default()
+    }
+
+    fn add(&self, n: usize) {
+        *self.inner.pending.lock().unwrap() += n;
+    }
+
+    fn complete(&self, panicked: bool) {
+        if panicked {
+            self.inner.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut pending = self.inner.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.inner.done.notify_all();
+        }
+    }
+
+    /// All jobs attached so far have finished.
+    pub fn is_done(&self) -> bool {
+        *self.inner.pending.lock().unwrap() == 0
+    }
+
+    /// Two handles track the same completion group.
+    fn same(&self, other: &Latch) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    fn wait_timeout(&self, d: Duration) {
+        let pending = self.inner.pending.lock().unwrap();
+        if *pending != 0 {
+            let _ = self.inner.done.wait_timeout(pending, d).unwrap();
+        }
+    }
+
+    fn panicked(&self) -> bool {
+        self.inner.panicked.load(Ordering::Relaxed)
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<(Latch, Job)>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed set of long-lived worker threads plus a shared FIFO job
+/// queue. See the module docs for the two usage shapes.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("rocline-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// The process-wide pool every engine and coordinator shares
+    /// (lazily spawned, [`default_threads`] workers, never torn down).
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(default_threads()))
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn push(&self, latch: &Latch, job: Job) {
+        latch.add(1);
+        let mut queue = self.shared.queue.lock().unwrap();
+        queue.push_back((latch.clone(), job));
+        drop(queue);
+        self.shared.available.notify_one();
+    }
+
+    /// Enqueue an owned job tracked by `latch`. Returns immediately;
+    /// pair with [`WorkerPool::wait`].
+    pub fn submit(&self, latch: &Latch, job: impl FnOnce() + Send + 'static) {
+        self.push(latch, Box::new(job));
+    }
+
+    /// Pop and run one queued job. When `only` is given, run only a
+    /// job attached to that latch: a waiter that grabbed an arbitrary
+    /// job could inline minutes of unrelated work (a whole experiment)
+    /// after its own microsecond-scale jobs already finished, stalling
+    /// the pipeline that is waiting on it. Restricting help to the
+    /// awaited latch keeps waits proportional to their own work, and
+    /// deadlock-freedom is preserved: a waited latch's jobs are either
+    /// queued (the waiter runs them here) or already running on a
+    /// thread that likewise helps its own waits.
+    fn try_run_one(&self, only: Option<&Latch>) -> bool {
+        let job = {
+            let mut queue = self.shared.queue.lock().unwrap();
+            match only {
+                None => queue.pop_front(),
+                Some(target) => queue
+                    .iter()
+                    .position(|(l, _)| l.same(target))
+                    .and_then(|i| queue.remove(i)),
+            }
+        };
+        match job {
+            Some((latch, f)) => {
+                run_job(&latch, f);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn wait_impl(&self, latch: &Latch) {
+        while !latch.is_done() {
+            if !self.try_run_one(Some(latch)) {
+                // nothing runnable for this latch: its jobs are in
+                // flight elsewhere — sleep briefly (latch completion
+                // notifies, so the timeout only bounds lost wakeups)
+                latch.wait_timeout(Duration::from_millis(1));
+            }
+        }
+    }
+
+    /// Block until every job on `latch` finished, executing queued jobs
+    /// while waiting. Panics if any job attached to the latch panicked.
+    pub fn wait(&self, latch: &Latch) {
+        self.wait_impl(latch);
+        if latch.panicked() {
+            panic!("worker pool job panicked");
+        }
+    }
+
+    /// Structured fork/join over borrowed data: jobs spawned on the
+    /// scope may borrow anything that outlives the `scope` call; every
+    /// job completes (or the calling thread re-raises its panic) before
+    /// `scope` returns.
+    pub fn scope<'pool, 'scope, F, R>(&'pool self, f: F) -> R
+    where
+        F: FnOnce(&PoolScope<'pool, 'scope>) -> R,
+    {
+        let scope = PoolScope {
+            pool: self,
+            latch: Latch::new(),
+            _env: PhantomData,
+        };
+        // the guard waits out still-borrowing jobs even if `f` panics
+        let mut guard = ScopeGuard {
+            pool: self,
+            latch: scope.latch.clone(),
+            armed: true,
+        };
+        let r = f(&scope);
+        guard.armed = false;
+        self.wait(&scope.latch);
+        r
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct ScopeGuard<'a> {
+    pool: &'a WorkerPool,
+    latch: Latch,
+    armed: bool,
+}
+
+impl Drop for ScopeGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            // unwinding out of `scope`: jobs may still borrow the
+            // caller's frame, so finish them before it goes away
+            self.pool.wait_impl(&self.latch);
+        }
+    }
+}
+
+/// Spawn handle passed to the closure of [`WorkerPool::scope`].
+pub struct PoolScope<'pool, 'scope> {
+    pool: &'pool WorkerPool,
+    latch: Latch,
+    _env: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'pool, 'scope> PoolScope<'pool, 'scope> {
+    pub fn spawn<F: FnOnce() + Send + 'scope>(&self, f: F) {
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: `WorkerPool::scope` (and its unwind guard) waits for
+        // every job on this scope's latch before control returns to the
+        // caller, so the job never outlives the 'scope borrows it
+        // captured; erasing the lifetime for the queue is then sound.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(
+                job,
+            )
+        };
+        self.pool.push(&self.latch, job);
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = queue.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    break None;
+                }
+                queue = shared.available.wait(queue).unwrap();
+            }
+        };
+        match job {
+            Some((latch, f)) => run_job(&latch, f),
+            None => return,
+        }
+    }
+}
+
+fn run_job(latch: &Latch, f: Job) {
+    let panicked = catch_unwind(AssertUnwindSafe(f)).is_err();
+    latch.complete(panicked);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_runs_every_job() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..64 {
+                s.spawn(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn scope_jobs_borrow_mutably_and_disjointly() {
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u64; 8];
+        pool.scope(|s| {
+            for (i, slot) in data.iter_mut().enumerate() {
+                s.spawn(move || {
+                    *slot = i as u64 + 1;
+                });
+            }
+        });
+        assert_eq!(data, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // outer jobs occupy workers and fork inner scopes; the
+        // help-while-waiting loop must keep everything moving even on
+        // a single-worker pool
+        let pool = WorkerPool::new(1);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    WorkerPool::global().scope(|inner| {
+                        for _ in 0..4 {
+                            inner.spawn(|| {
+                                counter.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn submit_and_wait_round_trip() {
+        let pool = WorkerPool::new(2);
+        let flag = Arc::new(AtomicBool::new(false));
+        let latch = Latch::new();
+        let f = Arc::clone(&flag);
+        pool.submit(&latch, move || {
+            f.store(true, Ordering::Relaxed);
+        });
+        pool.wait(&latch);
+        assert!(flag.load(Ordering::Relaxed));
+        assert!(latch.is_done());
+    }
+
+    #[test]
+    fn waiting_thread_helps_run_jobs() {
+        // even with zero spare workers (all asleep on an empty queue,
+        // then flooded), wait() itself must make progress
+        let pool = WorkerPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let latch = Latch::new();
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            pool.submit(&latch, move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait(&latch);
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool job panicked")]
+    fn job_panics_propagate_to_the_waiter() {
+        let pool = WorkerPool::new(2);
+        pool.scope(|s| {
+            s.spawn(|| panic!("boom"));
+        });
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = WorkerPool::global();
+        let b = WorkerPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert_eq!(a.worker_count(), default_threads());
+    }
+
+    #[test]
+    fn sequential_order_preserved_by_chained_latches() {
+        // the pipelining pattern: phase N+1 is only submitted after
+        // phase N's latch is waited, so effects serialize
+        let pool = WorkerPool::new(4);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..8 {
+            let latch = Latch::new();
+            let l = Arc::clone(&log);
+            pool.submit(&latch, move || {
+                l.lock().unwrap().push(i);
+            });
+            pool.wait(&latch);
+        }
+        assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+}

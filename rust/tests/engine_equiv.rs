@@ -260,6 +260,77 @@ fn sessions_agree_across_engines_with_warm_caches() {
 }
 
 #[test]
+fn persistent_pool_reuse_matches_fresh_engines() {
+    // the worker pool persists across batches, dispatches, and engine
+    // lifetimes; counters must stay bit-identical to the sequential
+    // reference no matter how many engines used the pool before or how
+    // many dispatch cycles one engine pushes through it
+    let spec = presets::mi100();
+    let t = StreamTrace::babelstream("triad", 1 << 13);
+    for round in 0..3usize {
+        let mut seq = MemHierarchy::new(&spec);
+        let mut sharded =
+            ShardedHierarchy::with_shards(&spec, 1 + round * 3);
+        for cycle in 0..4 {
+            t.replay(spec.group_size, &mut seq);
+            seq.flush();
+            let mut b = BlockBuilder::new(&mut sharded);
+            t.replay(spec.group_size, &mut b);
+            b.finish();
+            sharded.flush();
+            assert_eq!(
+                seq.traffic, sharded.traffic,
+                "round {round} cycle {cycle}"
+            );
+            assert_eq!(seq.l2_hit_rate(), sharded.l2_hit_rate());
+        }
+    }
+}
+
+#[test]
+fn interleaved_engines_share_the_pool_without_crosstalk() {
+    // two engines alternating dispatches on the same global pool (the
+    // coordinator's sweep shape): each must match its own sequential
+    // reference exactly
+    let spec_a = presets::v100();
+    let spec_b = presets::mi60();
+    let t = StreamTrace::babelstream("add", 1 << 12);
+    let mixed = MixedTrace {
+        n: 1 << 11,
+        span: 1 << 20,
+        seed: 17,
+    };
+    let mut seq_a = MemHierarchy::new(&spec_a);
+    let mut seq_b = MemHierarchy::new(&spec_b);
+    let mut eng_a = ShardedHierarchy::new(&spec_a);
+    let mut eng_b = ShardedHierarchy::new(&spec_b);
+    for _ in 0..3 {
+        for (trace, gs_a, gs_b) in
+            [(&t as &dyn TraceSource, 32, 64), (&mixed, 32, 64)]
+        {
+            trace.replay(gs_a, &mut seq_a);
+            seq_a.flush();
+            {
+                let mut b = BlockBuilder::new(&mut eng_a);
+                trace.replay(gs_a, &mut b);
+            }
+            eng_a.flush();
+            trace.replay(gs_b, &mut seq_b);
+            seq_b.flush();
+            {
+                let mut b = BlockBuilder::new(&mut eng_b);
+                trace.replay(gs_b, &mut b);
+            }
+            eng_b.flush();
+            assert_eq!(seq_a.traffic, eng_a.traffic, "engine A");
+            assert_eq!(seq_b.traffic, eng_b.traffic, "engine B");
+        }
+    }
+    assert_eq!(seq_a.lds_stats, eng_a.lds_stats);
+    assert_eq!(seq_b.lds_stats, eng_b.lds_stats);
+}
+
+#[test]
 fn empty_and_tiny_dispatches_equivalent() {
     // degenerate shapes: single group, partial group, zero work
     let spec = presets::mi60();

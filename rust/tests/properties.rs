@@ -287,10 +287,8 @@ fn trace_replay_is_group_size_consistent() {
         cfg.ppc = 2;
         let st = SimState::init(&cfg, rng.next_u64());
         let spec = presets::v100();
-        let t = rocline::pic::kernels::MoveAndMarkTrace {
-            state: &st,
-            spec: &spec,
-        };
+        let t =
+            rocline::pic::kernels::MoveAndMarkTrace::new(&st, &spec);
         let s32 = rocline::trace::collect_stats(&t, 32);
         let s64 = rocline::trace::collect_stats(&t, 64);
         prop_assert(

@@ -1,0 +1,146 @@
+//! Record-once / replay-everywhere: a case trace recorded once must
+//! replay **bit-identically** to live tracing on every GPU preset —
+//! including the ISA-expansion rescale (MI60/MI100) and the
+//! half-group-size derivation (V100's 32-lane warps) — and the
+//! coordinator's store must record each case exactly once per sweep.
+
+use rocline::arch::presets;
+use rocline::coordinator::{CaseRun, CaseTrace, TraceStore};
+use rocline::pic::CaseConfig;
+use rocline::profiler::ProfileSession;
+
+fn tiny_case(name: &str, steps: u32) -> CaseConfig {
+    let mut cfg = CaseConfig::lwfa();
+    cfg.name = name.to_string();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.nz = 8;
+    cfg.ppc = 2;
+    cfg.steps = steps;
+    cfg
+}
+
+#[test]
+fn recorded_replay_is_bit_identical_to_live_tracing() {
+    let cfg = tiny_case("tiny-replay", 2);
+    let trace = CaseTrace::record(&cfg);
+    for spec in presets::all_gpus() {
+        let live =
+            CaseRun::execute_with_threads(spec.clone(), cfg.clone(), 4);
+        let replayed = CaseRun::from_recording(spec.clone(), &trace, 4);
+        assert_eq!(
+            live.session.dispatches.len(),
+            replayed.session.dispatches.len(),
+            "{}",
+            spec.name
+        );
+        for (a, b) in live
+            .session
+            .dispatches
+            .iter()
+            .zip(replayed.session.dispatches.iter())
+        {
+            assert_eq!(a.kernel, b.kernel, "{}", spec.name);
+            assert_eq!(a.stats, b.stats, "{} {}", spec.name, a.kernel);
+            assert_eq!(
+                a.traffic, b.traffic,
+                "{} {}",
+                spec.name, a.kernel
+            );
+            assert_eq!(
+                a.duration_s, b.duration_s,
+                "{} {}",
+                spec.name, a.kernel
+            );
+        }
+        assert_eq!(
+            live.final_field_energy,
+            replayed.final_field_energy
+        );
+        assert_eq!(
+            live.final_kinetic_energy,
+            replayed.final_kinetic_energy
+        );
+    }
+}
+
+#[test]
+fn sweep_records_each_case_exactly_once() {
+    // the acceptance contract: a sweep over all three GPU presets and
+    // N cases performs exactly N recordings — every (GPU, case) run
+    // replays shared storage instead of re-tracing
+    let store = TraceStore::new();
+    let cases = [tiny_case("tiny-a", 2), tiny_case("tiny-b", 1)];
+    for spec in presets::all_gpus() {
+        for cfg in &cases {
+            let trace = store.get_or_record(cfg);
+            let run =
+                CaseRun::from_recording(spec.clone(), &trace, 2);
+            assert_eq!(
+                run.session.dispatches.len(),
+                (cfg.steps * 5) as usize,
+                "{} {}",
+                spec.name,
+                cfg.name
+            );
+        }
+    }
+    assert_eq!(store.recordings(), cases.len());
+}
+
+#[test]
+fn sequential_engine_replays_recordings_identically() {
+    // the scaled block-replay path must agree across engines too (the
+    // sharded engine folds expansion in its stats job, the sequential
+    // engine through ScaleInstSink)
+    let cfg = tiny_case("tiny-seq", 1);
+    let trace = CaseTrace::record(&cfg);
+    for spec in presets::all_gpus() {
+        let mut seq = ProfileSession::sequential(spec.clone());
+        for d in trace.dispatches_for(spec.group_size).iter() {
+            seq.profile_blocks_scaled(
+                &d.kernel,
+                &d.blocks,
+                spec.isa_expansion,
+            );
+        }
+        let sharded = CaseRun::from_recording(spec.clone(), &trace, 3);
+        assert_eq!(
+            seq.dispatches.len(),
+            sharded.session.dispatches.len()
+        );
+        for (a, b) in seq
+            .dispatches
+            .iter()
+            .zip(sharded.session.dispatches.iter())
+        {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.stats, b.stats, "{} {}", spec.name, a.kernel);
+            assert_eq!(
+                a.traffic, b.traffic,
+                "{} {}",
+                spec.name, a.kernel
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_shares_storage_zero_copy_across_gpus() {
+    // MI60 and MI100 replay the very same Arc'd blocks; V100 gets the
+    // cached half-group derivation (one derivation, shared thereafter)
+    use std::sync::Arc;
+    let cfg = tiny_case("tiny-share", 1);
+    let trace = CaseTrace::record(&cfg);
+    let mi60 = trace.dispatches_for(64);
+    let mi100 = trace.dispatches_for(64);
+    assert!(Arc::ptr_eq(&mi60, &mi100));
+    let v100_a = trace.dispatches_for(32);
+    let v100_b = trace.dispatches_for(32);
+    assert!(Arc::ptr_eq(&v100_a, &v100_b));
+    // the derivation doubles full groups: MoveAndMark's group count
+    // doubles from wavefront to warp width
+    let wide: usize = mi60[1].blocks.iter().map(|b| b.len()).sum();
+    let narrow: usize = v100_a[1].blocks.iter().map(|b| b.len()).sum();
+    assert!(narrow > wide, "derived form must expand records");
+}
