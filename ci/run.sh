@@ -9,12 +9,25 @@
 #   ci/run.sh --shard i/n          # additionally run shard i of n of the
 #                                  # paper sweep (reproduce --all --shard)
 #                                  # into out-shard-i-of-n/
+#   ci/run.sh --shard i/n --trace-dir D
+#                                  # the sweep replays case traces from
+#                                  # the persistent archive D (mmap,
+#                                  # zero-copy); with
+#                                  # ROCLINE_REQUIRE_ARCHIVE_HIT=1 the
+#                                  # run FAILS unless zero live
+#                                  # recordings happened (the
+#                                  # record-once pre-job contract)
 #
 # CI entry points (see .github/workflows/ci.yml):
+#   * record pre-job — `rocline record --out trace-archive` builds the
+#     trace archive once, cached under the cases' content key
+#     (`rocline record --print-key`); every shard job restores it and
+#     must replay archive-hit only.
 #   * shard matrix — the workflow fans the sweep out as a matrix job
 #     over `--shard 0/2` and `--shard 1/2`. Shards deterministically
 #     partition the (GPU, case) matrix (coordinator/shard.rs), each
-#     case's trace is recorded once and replayed on every GPU, and
+#     case's trace is mmap'd from the shared archive (or recorded once
+#     and spilled on a cold cache) and replayed on every GPU, and
 #     concatenating the shards' out-shard-*/ directories reproduces the
 #     unsharded sweep byte-for-byte.
 #   * bench gate — `rocline bench-gate` compares the speedup/* ratios in
@@ -32,6 +45,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 SHARD=""
+TRACE_DIR=""
 FULL=0
 UPDATE_BASELINE=0
 while [ $# -gt 0 ]; do
@@ -41,6 +55,11 @@ while [ $# -gt 0 ]; do
         --shard)
             [ $# -ge 2 ] || { echo "--shard needs i/n" >&2; exit 2; }
             SHARD="$2"
+            shift
+            ;;
+        --trace-dir)
+            [ $# -ge 2 ] || { echo "--trace-dir needs a path" >&2; exit 2; }
+            TRACE_DIR="$2"
             shift
             ;;
         *) echo "unknown argument '$1'" >&2; exit 2 ;;
@@ -104,7 +123,20 @@ fi
 if [ -n "$SHARD" ]; then
     OUT="out-shard-${SHARD//\//-of-}"
     echo "== paper sweep shard $SHARD -> $OUT =="
-    ./target/release/rocline reproduce --all --shard "$SHARD" --out "$OUT"
+    CMD=(./target/release/rocline reproduce --all --shard "$SHARD" --out "$OUT")
+    if [ -n "$TRACE_DIR" ]; then
+        CMD+=(--trace-dir "$TRACE_DIR")
+    fi
+    # with ROCLINE_REQUIRE_ARCHIVE_HIT=1 in the environment, rocline
+    # itself fails the sweep (fail-closed, in-process) if any case
+    # trace was recorded live despite --trace-dir — no log scraping
+    "${CMD[@]}"
+    if [ -n "$TRACE_DIR" ] && [ "${ROCLINE_REQUIRE_ARCHIVE_HIT:-0}" = 1 ]; then
+        echo "archive-hit contract ok: zero live recordings"
+        if [ -d "$TRACE_DIR" ]; then
+            ./target/release/rocline trace-info "$TRACE_DIR"
+        fi
+    fi
 fi
 
 echo "== ok =="

@@ -9,10 +9,12 @@
 use std::path::Path;
 
 use rocline::arch::presets;
+use rocline::coordinator::{CaseRun, CaseTrace};
 use rocline::pic::kernels::{ComputeCurrentTrace, MoveAndMarkTrace};
 use rocline::pic::{CaseConfig, PicSim};
 use rocline::profiler::ProfileSession;
 use rocline::roofline::{eq2_intensity_performance, eq4_achieved_gips};
+use rocline::trace::archive::MappedCaseTrace;
 use rocline::trace::block::BlockRecorder;
 use rocline::trace::sink::NullSink;
 use rocline::trace::{TraceSource, TraceStats};
@@ -130,6 +132,58 @@ fn main() {
         }
     }
 
+    // trace archive: spill-write throughput, mmap open, and the
+    // acceptance-critical comparison — replaying a mapped archive must
+    // track in-memory replay (the engines are generic over storage;
+    // the gate holds speedup/replay_mmap_vs_mem near 1.0)
+    {
+        let mut acfg = CaseConfig::lwfa();
+        acfg.name = "bench-arch".into();
+        acfg.nx = 16;
+        acfg.ny = 16;
+        acfg.nz = 16;
+        acfg.ppc = 2;
+        acfg.steps = 2;
+        let arch_items = acfg.particles() as u64 * acfg.steps as u64;
+        let dir = std::env::temp_dir().join(format!(
+            "rocline-bench-archive-{}",
+            std::process::id()
+        ));
+        let trace = CaseTrace::record(&acfg);
+        r.bench_throughput("archive/spill_write", arch_items, || {
+            trace.spill_to(&dir).expect("spill archive")
+        });
+        let path = trace.spill_to(&dir).expect("spill archive");
+        r.bench("archive/mmap_open_validate", || {
+            MappedCaseTrace::open(&path)
+                .expect("open archive")
+                .dispatch_count()
+        });
+        let mapped = MappedCaseTrace::open(&path).expect("open");
+        let spec = presets::mi100();
+        r.bench_throughput("archive/replay_mem_MI100", arch_items, || {
+            CaseRun::from_recording(spec.clone(), &trace, 4)
+                .session
+                .total_time_s()
+        });
+        r.bench_throughput(
+            "archive/replay_mmap_MI100",
+            arch_items,
+            || {
+                CaseRun::from_mapped(
+                    spec.clone(),
+                    acfg.clone(),
+                    &mapped,
+                    4,
+                )
+                .session
+                .total_time_s()
+            },
+        );
+        drop(mapped);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // the paper's equations (should be ~ns; regression guard)
     r.bench("equations/eq2_eq4", || {
         let g = eq4_achieved_gips(449_796_480, 64, 0.0025);
@@ -167,6 +221,14 @@ fn main() {
             "speedup/profile_compute_current_V100",
             "profile/compute_current_V100",
             "profile/compute_current_V100_seq",
+        ),
+        // mapped-archive replay vs the in-memory tier (expect ~1.0:
+        // same engine, different storage; a collapse here means the
+        // zero-copy path regressed into deserialization)
+        (
+            "speedup/replay_mmap_vs_mem",
+            "archive/replay_mmap_MI100",
+            "archive/replay_mem_MI100",
         ),
     ];
     for (name, fast, base) in pairs {

@@ -1,4 +1,13 @@
-//! Minimal argument parser: `--key value`, `--flag`, and positionals.
+//! Minimal argument parser: `--key value`, `--key=value`, `--flag`,
+//! and positionals.
+//!
+//! The guard rail: option handling is loud instead of silently wrong.
+//! Every `--option` — space form, `=` form, or bare flag — must be a
+//! known [`VALUED`] key or a known [`FLAGS`] name; anything else is a
+//! parse **error**. The historical failure mode (an option missing
+//! from the `VALUED` whitelist silently became a flag plus a stray
+//! positional) is now a hard error in both forms, and a typo'd
+//! `--key=value` can no longer be silently dropped.
 
 use std::collections::HashMap;
 
@@ -10,28 +19,59 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-/// Options that take a value (everything else with `--` is a flag).
-const VALUED: [&str; 16] = [
+/// Options that take a value in space-separated form (`--key value`).
+/// `--key=value` works for these and for any future key alike.
+const VALUED: [&str; 17] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
+    "trace-dir",
 ];
+
+/// Known boolean flags. Anything else with `--` and no `=` is an
+/// error, so typos and missing whitelist entries fail loudly.
+const FLAGS: [&str; 4] = ["all", "pjrt", "update-baseline", "print-key"];
 
 impl Args {
     pub fn parse(argv: Vec<String>) -> anyhow::Result<Args> {
         let mut out = Args::default();
-        let mut it = argv.into_iter().peekable();
+        let mut it = argv.into_iter();
         if let Some(cmd) = it.next() {
             out.command = cmd;
         }
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
-                if VALUED.contains(&key) {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((key, value)) = body.split_once('=') {
+                    anyhow::ensure!(
+                        !key.is_empty(),
+                        "'--=' is not an option"
+                    );
+                    // a boolean flag in `=` form would land in
+                    // `options` and be silently ignored by `flag()` —
+                    // reject it instead
+                    anyhow::ensure!(
+                        !FLAGS.contains(&key),
+                        "--{key} is a flag and takes no value \
+                         (drop the '={value}')"
+                    );
+                    // a typo'd key would otherwise be silently
+                    // dropped (nothing ever get()s it)
+                    anyhow::ensure!(
+                        VALUED.contains(&key),
+                        "unknown option --{key}"
+                    );
+                    // repeats: last one wins (deterministic, shell
+                    // override-friendly)
+                    out.options
+                        .insert(key.to_string(), value.to_string());
+                } else if VALUED.contains(&body) {
                     let v = it.next().ok_or_else(|| {
-                        anyhow::anyhow!("--{key} needs a value")
+                        anyhow::anyhow!("--{body} needs a value")
                     })?;
-                    out.options.insert(key.to_string(), v);
+                    out.options.insert(body.to_string(), v);
+                } else if FLAGS.contains(&body) {
+                    out.flags.push(body.to_string());
                 } else {
-                    out.flags.push(key.to_string());
+                    anyhow::bail!("unknown option --{body}");
                 }
             } else {
                 out.positional.push(a);
@@ -71,6 +111,12 @@ mod tests {
             .unwrap()
     }
 
+    fn parse_err(s: &str) -> String {
+        Args::parse(s.split_whitespace().map(String::from).collect())
+            .unwrap_err()
+            .to_string()
+    }
+
     #[test]
     fn command_and_positionals() {
         let a = parse("reproduce table1 fig4");
@@ -87,11 +133,57 @@ mod tests {
     }
 
     #[test]
-    fn flags() {
-        let a = parse("reproduce --all --pjrt");
+    fn equals_syntax_works_for_valued_keys() {
+        let a = parse("reproduce --out=out2 --trace-dir=/tmp/traces");
+        assert_eq!(a.get("out"), Some("out2"));
+        assert_eq!(a.get("trace-dir"), Some("/tmp/traces"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn equals_syntax_edge_values() {
+        let a = parse("x --csv=a=b --svg=");
+        assert_eq!(
+            a.get("csv"),
+            Some("a=b"),
+            "split at first '=' only"
+        );
+        assert_eq!(a.get("svg"), Some(""));
+        assert!(parse_err("x --=v").contains("not an option"));
+        // a typo'd valued key must not be silently dropped
+        let e = parse_err("reproduce --trace-dri=/tmp/traces");
+        assert!(e.contains("unknown option --trace-dri"), "{e}");
+    }
+
+    #[test]
+    fn repeated_flags_and_options() {
+        let a = parse("reproduce --all --all --pjrt");
         assert!(a.flag("all"));
         assert!(a.flag("pjrt"));
         assert!(!a.flag("nope"));
+        // repeated valued options: last wins, both syntaxes
+        let a = parse("profile --gpu mi60 --gpu=mi100");
+        assert_eq!(a.get("gpu"), Some("mi100"));
+    }
+
+    #[test]
+    fn flags_reject_equals_form() {
+        // `--update-baseline=1` must not silently land in options
+        // where flag() would never see it
+        let e = parse_err("bench-gate --update-baseline=1");
+        assert!(e.contains("flag and takes no value"), "{e}");
+        let e = parse_err("reproduce --pjrt=true");
+        assert!(e.contains("--pjrt is a flag"), "{e}");
+    }
+
+    #[test]
+    fn unknown_valued_option_is_a_loud_error() {
+        // historically '--frobnicate 7' silently became a flag plus a
+        // positional; now both forms are parse errors
+        let e = parse_err("reproduce --frobnicate 7");
+        assert!(e.contains("unknown option --frobnicate"), "{e}");
+        let e = parse_err("reproduce --frobnicate=7");
+        assert!(e.contains("unknown option --frobnicate"), "{e}");
     }
 
     #[test]
@@ -113,6 +205,13 @@ mod tests {
     fn kernel_takes_a_value() {
         let a = parse("roofline --gpu mi100 --kernel FieldSolver");
         assert_eq!(a.get("kernel"), Some("FieldSolver"));
+    }
+
+    #[test]
+    fn trace_dir_takes_a_value_both_ways() {
+        let a = parse("reproduce --trace-dir traces --all");
+        assert_eq!(a.get("trace-dir"), Some("traces"));
+        assert!(a.flag("all"));
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::arch::presets;
 use crate::arch::Vendor;
 use crate::babelstream::{DeviceStream, HostStream};
 use crate::coordinator::profile_run::Context;
-use crate::coordinator::{run_experiments, EXPERIMENT_IDS};
+use crate::coordinator::{run_experiments_in, EXPERIMENT_IDS};
 use crate::gpumembench::{self, InstThroughputBench, ShmemBench};
 use crate::pic::{CaseConfig, PicSim};
 use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
@@ -43,6 +43,7 @@ fn no_pjrt() -> anyhow::Error {
 }
 
 pub fn reproduce(args: &Args) -> anyhow::Result<()> {
+    let trace_dir = args.get("trace-dir").map(PathBuf::from);
     let mut ids: Vec<String> = if args.positional.is_empty()
         || args.flag("all")
     {
@@ -74,7 +75,176 @@ pub fn reproduce(args: &Args) -> anyhow::Result<()> {
         }
     }
     let out = PathBuf::from(args.get_or("out", "out"));
-    run_experiments(&ids, &out)?;
+    run_experiments_in(&ids, &out, trace_dir.as_deref())?;
+    Ok(())
+}
+
+/// Pre-populate a persistent trace archive (`rocline record --out D`):
+/// record every requested case once and spill it, so later sweeps —
+/// local `reproduce --trace-dir D` runs and every CI shard — replay
+/// with zero live recordings. Idempotent: cases already archived are
+/// verified (mmap + checksums) and skipped. `--print-key` prints the
+/// combined content key of the requested cases without recording
+/// (CI's cache key).
+pub fn record(args: &Args) -> anyhow::Result<()> {
+    use crate::coordinator::{CaseTrace, TraceStore};
+
+    let mut cases: Vec<CaseConfig> = if args.positional.is_empty() {
+        vec![CaseConfig::lwfa(), CaseConfig::tweac()]
+    } else {
+        args.positional
+            .iter()
+            .map(|n| {
+                CaseConfig::by_name(n).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown case '{n}' (lwfa|tweac)"
+                    )
+                })
+            })
+            .collect::<anyhow::Result<_>>()?
+    };
+    if let Some(steps) = args.get("steps") {
+        let steps: u32 = steps.parse().map_err(|_| {
+            anyhow::anyhow!("--steps: '{steps}' is not an integer")
+        })?;
+        for c in &mut cases {
+            c.steps = steps;
+        }
+    }
+    // the store (and the completeness check below) is keyed by case
+    // name — a repeated positional must not double-count
+    let mut seen = std::collections::HashSet::new();
+    cases.retain(|c| seen.insert(c.name.clone()));
+
+    let out = PathBuf::from(args.get_or("out", "trace-archive"));
+    if args.flag("print-key") {
+        // combined content key over the cases' archive file names
+        // (each embeds its case_key) — pure function of the configs,
+        // no recording; CI keys its archive cache on this
+        let names: Vec<String> = cases
+            .iter()
+            .map(|c| {
+                CaseTrace::archive_path(Path::new(""), c)
+                    .file_name()
+                    .expect("archive paths always have file names")
+                    .to_string_lossy()
+                    .into_owned()
+            })
+            .collect();
+        println!(
+            "{:016x}",
+            crate::trace::archive::fnv1a(
+                names.join(" ").as_bytes()
+            )
+        );
+        return Ok(());
+    }
+
+    let store = TraceStore::with_dir(Some(out.clone()));
+    for cfg in &cases {
+        let t0 = std::time::Instant::now();
+        let stored = store.get_or_record(cfg);
+        let path = CaseTrace::archive_path(&out, cfg);
+        let bytes = std::fs::metadata(&path)
+            .map(|m| m.len())
+            .unwrap_or(0);
+        println!(
+            "{:<8} {:>5} dispatch(es) {:>12} bytes  {}  ({:.2}s, {})",
+            cfg.name,
+            stored.dispatch_count(),
+            bytes,
+            path.display(),
+            t0.elapsed().as_secs_f64(),
+            if stored.is_mapped() {
+                "already archived"
+            } else {
+                "recorded + spilled"
+            },
+        );
+    }
+    anyhow::ensure!(
+        store.spills() + store.archive_hits() == cases.len(),
+        "archive incomplete: {} case(s), {} spilled, {} already \
+         present (see warnings above)",
+        cases.len(),
+        store.spills(),
+        store.archive_hits()
+    );
+    println!(
+        "archive {} ready: {} case(s) ({} recorded, {} already \
+         present)",
+        out.display(),
+        cases.len(),
+        store.spills(),
+        store.archive_hits()
+    );
+    Ok(())
+}
+
+/// Inspect a trace archive via its index only — no trace data is
+/// deserialized, so this is instant even on multi-GB archives.
+pub fn trace_info(args: &Args) -> anyhow::Result<()> {
+    use crate::trace::archive::{ArchiveInfo, FORMAT_VERSION};
+
+    let target = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("dir"))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "usage: rocline trace-info <archive-dir-or-file>"
+            )
+        })?;
+    let path = Path::new(target);
+    let infos = if path.is_dir() {
+        ArchiveInfo::scan_dir(path)?
+    } else {
+        vec![ArchiveInfo::scan(path)?]
+    };
+    anyhow::ensure!(
+        !infos.is_empty(),
+        "no .rtrc archives in {target}"
+    );
+    println!(
+        "{:<10} {:>3} {:>6} {:>9} {:>7} {:>10} {:>12} {:>12}  {}",
+        "case",
+        "ver",
+        "group",
+        "disp",
+        "blocks",
+        "records",
+        "addr words",
+        "bytes",
+        "key"
+    );
+    let (mut blocks, mut records, mut words, mut bytes) =
+        (0u64, 0u64, 0u64, 0u64);
+    for i in &infos {
+        println!(
+            "{:<10} {:>3} {:>6} {:>9} {:>7} {:>10} {:>12} {:>12}  \
+             {:016x}",
+            i.case_name(),
+            i.version,
+            i.base_group_size,
+            i.dispatches,
+            i.blocks,
+            i.records,
+            i.addr_words,
+            i.file_bytes,
+            i.case_key,
+        );
+        blocks += i.blocks;
+        records += i.records;
+        words += i.addr_words;
+        bytes += i.file_bytes;
+    }
+    println!(
+        "{} archive(s), format v{FORMAT_VERSION}: {blocks} block(s), \
+         {records} record(s), {words} addr word(s), {bytes} bytes on \
+         disk",
+        infos.len()
+    );
     Ok(())
 }
 

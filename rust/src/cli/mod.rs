@@ -1,7 +1,10 @@
 //! Hand-rolled CLI (no `clap` offline). Subcommands:
 //!
 //! ```text
-//! rocline reproduce [--out DIR] [--shard i/n] [--pjrt] [IDS...|--all]
+//! rocline reproduce [--out DIR] [--shard i/n] [--trace-dir D]
+//!                   [--pjrt] [IDS...|--all]
+//! rocline record [--out DIR] [--steps N] [--print-key] [CASES...]
+//! rocline trace-info <DIR|FILE>
 //! rocline profile --gpu G --case C [--tool rocprof|nvprof] [--csv F]
 //! rocline roofline --gpu G --case C [--svg F]
 //! rocline babelstream [--backend host|sim|pjrt] [--gpu G] [--n N]
@@ -11,6 +14,8 @@
 //! rocline bench-gate [--bench F] [--baseline F] [--tolerance T]
 //!                    [--update-baseline]
 //! ```
+//!
+//! All options also accept `--key=value` form.
 
 pub mod args;
 pub mod commands;
@@ -22,6 +27,8 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "reproduce" => commands::reproduce(&args),
+        "record" => commands::record(&args),
+        "trace-info" => commands::trace_info(&args),
         "profile" => commands::profile(&args),
         "roofline" => commands::roofline(&args),
         "babelstream" => commands::babelstream(&args),
@@ -53,6 +60,18 @@ COMMANDS:
                --shard i/n runs this process's deterministic slice of
                the (GPU, case) sweep matrix (CI fan-out; merged shard
                outputs reproduce the unsharded sweep byte-for-byte)
+               --trace-dir D replays case traces from a persistent
+               archive (mmap, zero-copy; misses are recorded once and
+               spilled there for every other process and run)
+  record       pre-populate a trace archive: record each case once and
+               spill it (idempotent; shards then replay with zero live
+               recordings). options: --out DIR (default
+               trace-archive/), --steps N, cases... (default all)
+               --print-key prints the cases' combined content key
+               without recording (CI cache key)
+  trace-info   print an archive's contents (cases, dispatches, blocks,
+               records, address words, bytes, format version) from its
+               index alone — no trace data deserialized
   profile      profile a PIC case on a simulated GPU
                options: --gpu v100|mi60|mi100  --case lwfa|tweac
                         --tool rocprof|nvprof  --csv FILE  --steps N

@@ -4,7 +4,10 @@
 //! * [`record`] — record-once / replay-everywhere storage: each case's
 //!   trace is recorded exactly once per sweep ([`record::CaseTrace`],
 //!   deduplicated by [`record::TraceStore`]) and replayed zero-copy on
-//!   every GPU preset;
+//!   every GPU preset; with `--trace-dir` the store adds a persistent
+//!   disk tier (the memory-mapped trace archive,
+//!   [`crate::trace::archive`]) shared across shard processes and CI
+//!   runs — record once, replay *forever*;
 //! * [`profile_run`] — simulate a science case on one GPU model while
 //!   profiling every kernel dispatch (the shared substrate of Tables 1–2
 //!   and Figs 3–7), live or from a recording;
@@ -25,7 +28,7 @@ pub mod runner;
 pub mod shard;
 
 pub use profile_run::{CaseRun, Context};
-pub use record::{CaseTrace, TraceStore};
+pub use record::{CaseTrace, StoredTrace, TraceStore};
 pub use report::Report;
-pub use runner::{run_experiments, EXPERIMENT_IDS};
+pub use runner::{run_experiments, run_experiments_in, EXPERIMENT_IDS};
 pub use shard::ShardSpec;

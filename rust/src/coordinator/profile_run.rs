@@ -12,6 +12,7 @@
 //!   to the target's ISA expansion, zero-copy.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::arch::presets;
@@ -22,9 +23,10 @@ use crate::pic::kernels::{
 };
 use crate::pic::{CaseConfig, PicSim};
 use crate::profiler::ProfileSession;
+use crate::trace::archive::MappedCaseTrace;
 use crate::util::pool::{self, WorkerPool};
 
-use super::record::{CaseTrace, TraceStore};
+use super::record::{CaseTrace, StoredTrace, TraceStore};
 
 /// The default seed for profiled runs (reproducibility).
 pub const RUN_SEED: u64 = 0x9_1C0_96B5;
@@ -103,7 +105,7 @@ impl CaseRun {
         for d in dispatches.iter() {
             session.profile_blocks_scaled(
                 &d.kernel,
-                &d.blocks,
+                &d.blocks[..],
                 spec.isa_expansion,
             );
         }
@@ -115,14 +117,81 @@ impl CaseRun {
             session,
         }
     }
+
+    /// Replay a **memory-mapped** case archive on `spec` — the disk
+    /// tier's twin of [`CaseRun::from_recording`]: every dispatch
+    /// streams borrowed records straight out of the mapped columns
+    /// (zero-copy, shared page cache across shard processes), with the
+    /// V100 half-group derivation applied at replay exactly like the
+    /// in-memory tier. Counters are bit-identical to both
+    /// [`CaseRun::execute`] and [`CaseRun::from_recording`] (proven by
+    /// `tests/trace_archive.rs`).
+    pub fn from_mapped(
+        spec: GpuSpec,
+        cfg: CaseConfig,
+        trace: &MappedCaseTrace,
+        engine_threads: usize,
+    ) -> CaseRun {
+        let mut session = ProfileSession::sharded_with_threads(
+            spec.clone(),
+            engine_threads,
+        );
+        if spec.group_size == trace.base_group_size() {
+            for d in trace.dispatches() {
+                session.profile_blocks_scaled(
+                    &d.kernel,
+                    &d.blocks[..],
+                    spec.isa_expansion,
+                );
+            }
+        } else {
+            let halved = trace.halved_dispatches(spec.group_size);
+            for d in halved.iter() {
+                session.profile_blocks_scaled(
+                    &d.kernel,
+                    &d.blocks[..],
+                    spec.isa_expansion,
+                );
+            }
+        }
+        CaseRun {
+            spec,
+            cfg,
+            final_field_energy: trace.final_field_energy(),
+            final_kinetic_energy: trace.final_kinetic_energy(),
+            session,
+        }
+    }
+
+    /// Replay whichever tier the store resolved — live heap recording
+    /// or mapped archive.
+    pub fn from_stored(
+        spec: GpuSpec,
+        stored: &StoredTrace,
+        engine_threads: usize,
+    ) -> CaseRun {
+        match stored {
+            StoredTrace::Live(t) => {
+                CaseRun::from_recording(spec, t, engine_threads)
+            }
+            StoredTrace::Mapped { cfg, trace } => CaseRun::from_mapped(
+                spec,
+                cfg.clone(),
+                trace,
+                engine_threads,
+            ),
+        }
+    }
 }
 
 /// Cache of profiled runs shared by all experiments (Tables 1–2 and
 /// Figs 3–7 reuse the same six runs). Thread-safe; runs execute lazily.
 ///
-/// Runs are built by **replaying** a per-case [`CaseTrace`] from the
-/// embedded [`TraceStore`]: each case's trace is recorded exactly once
-/// per sweep, then shared zero-copy across every GPU preset.
+/// Runs are built by **replaying** a per-case trace from the embedded
+/// [`TraceStore`]: with a `--trace-dir` the trace is memory-mapped
+/// from the persistent archive (zero live recordings against a
+/// pre-populated archive); otherwise it is recorded exactly once per
+/// sweep — either way it is shared zero-copy across every GPU preset.
 #[derive(Default)]
 pub struct Context {
     runs: Mutex<HashMap<(String, String), Arc<CaseRun>>>,
@@ -132,6 +201,15 @@ pub struct Context {
 impl Context {
     pub fn new() -> Context {
         Context::default()
+    }
+
+    /// A context whose trace store spills to / replays from a
+    /// persistent archive directory.
+    pub fn with_trace_dir(dir: Option<PathBuf>) -> Context {
+        Context {
+            runs: Mutex::new(HashMap::new()),
+            store: TraceStore::with_dir(dir),
+        }
     }
 
     /// Get (or execute) the run for `(gpu, case)`.
@@ -154,7 +232,7 @@ impl Context {
         let cfg = CaseConfig::by_name(case)
             .unwrap_or_else(|| panic!("unknown case {case}"));
         let trace = self.store.get_or_record(&cfg);
-        let run = Arc::new(CaseRun::from_recording(
+        let run = Arc::new(CaseRun::from_stored(
             spec,
             &trace,
             engine_threads,
@@ -166,11 +244,21 @@ impl Context {
         run
     }
 
-    /// How many case traces this context has recorded (≤ distinct
-    /// cases touched, whatever the GPU count — the record-once
-    /// contract).
+    /// How many case traces this context has recorded **live** (≤
+    /// distinct cases touched, whatever the GPU count — the
+    /// record-once contract; 0 against a pre-populated archive).
     pub fn recordings(&self) -> usize {
         self.store.recordings()
+    }
+
+    /// How many case traces were memory-mapped from the archive.
+    pub fn archive_hits(&self) -> usize {
+        self.store.archive_hits()
+    }
+
+    /// How many live recordings were spilled to the archive.
+    pub fn spills(&self) -> usize {
+        self.store.spills()
     }
 
     /// Pre-execute several runs in parallel on the shared worker pool.

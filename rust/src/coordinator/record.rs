@@ -18,12 +18,23 @@
 //!   and cached;
 //! * [`TraceStore`] deduplicates recordings across the sweep (one per
 //!   case, concurrency-safe) and counts them, so tests can assert the
-//!   "record exactly once" contract.
+//!   "record exactly once" contract;
+//! * with a **disk tier** ([`TraceStore::with_dir`], the sweep's
+//!   `--trace-dir`), the store first tries the persistent trace
+//!   archive: hit → memory-map the recording and replay it zero-copy
+//!   ([`StoredTrace::Mapped`], counted as an archive hit), miss →
+//!   record live and *spill* the recording atomically so every other
+//!   shard process — and every later CI run — replays it instead of
+//!   re-recording. A pre-populated archive therefore drives a whole
+//!   sweep with **zero** live recordings (`tests/trace_archive.rs`
+//!   asserts exactly that via the store counters).
 //!
 //! `tests/record_replay.rs` proves replayed counters bit-identical to
-//! live tracing on every preset.
+//! live tracing on every preset; `tests/trace_archive.rs` extends the
+//! proof through the spill → mmap round trip.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -32,6 +43,9 @@ use crate::pic::kernels::{
     MoveAndMarkTrace, ShiftParticlesTrace,
 };
 use crate::pic::{CaseConfig, PicSim};
+use crate::trace::archive::{
+    self, CaseMeta, MappedCaseTrace,
+};
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
 use crate::trace::TraceSource;
 
@@ -116,7 +130,7 @@ impl CaseTrace {
             .map(|d| RecordedDispatch {
                 kernel: d.kernel.clone(),
                 blocks: Arc::new(split_half_groups(
-                    &d.blocks,
+                    &d.blocks[..],
                     group_size,
                 )),
             })
@@ -130,24 +144,123 @@ impl CaseTrace {
     pub fn dispatch_count(&self) -> usize {
         self.base.len()
     }
+
+    /// Spill this recording to `dir` as a trace archive file
+    /// (atomically; see [`crate::trace::archive::writer`]). Returns
+    /// the content-addressed path. Idempotent: re-spilling the same
+    /// recording rewrites an identical file.
+    pub fn spill_to(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        let manifest = self.cfg.manifest_line();
+        // the archive is only useful if a later process can parse the
+        // manifest back to this exact config (TraceStore::resolve
+        // verifies it on load); fail the spill loudly instead of
+        // producing a file that can never hit
+        anyhow::ensure!(
+            CaseConfig::from_manifest_line(&manifest).as_ref()
+                == Some(&self.cfg),
+            "case '{}' cannot be archived: its config does not \
+             round-trip through a manifest line (whitespace in the \
+             name?)",
+            self.cfg.name
+        );
+        archive::write_case_archive(
+            dir,
+            &CaseMeta {
+                name: &self.cfg.name,
+                manifest: &manifest,
+                base_group_size: self.base_group_size,
+                seed: RUN_SEED,
+                final_field_energy: self.final_field_energy,
+                final_kinetic_energy: self.final_kinetic_energy,
+            },
+            &self.base,
+        )
+    }
+
+    /// The archive path this case's recording lives at under `dir`
+    /// (whether or not it exists yet) — the content-addressed lookup
+    /// key shared by the store and the `record` CLI command.
+    pub fn archive_path(dir: &Path, cfg: &CaseConfig) -> PathBuf {
+        let key = archive::case_key(
+            &cfg.manifest_line(),
+            Self::BASE_GROUP_SIZE,
+            RUN_SEED,
+        );
+        dir.join(archive::archive_file_name(&cfg.name, key))
+    }
 }
 
-/// Sweep-wide cache of [`CaseTrace`]s, keyed by case name. Each case is
-/// recorded exactly once even under concurrent lookups (a per-case
-/// entry lock serializes the recording; later callers reuse it).
+/// A case trace held by the store: recorded live in this process
+/// (heap blocks) or memory-mapped from the persistent archive. Both
+/// replay zero-copy and bit-identically through
+/// [`super::CaseRun::from_stored`].
+#[derive(Clone)]
+pub enum StoredTrace {
+    Live(Arc<CaseTrace>),
+    Mapped {
+        cfg: CaseConfig,
+        trace: Arc<MappedCaseTrace>,
+    },
+}
+
+impl StoredTrace {
+    pub fn cfg(&self) -> &CaseConfig {
+        match self {
+            StoredTrace::Live(t) => &t.cfg,
+            StoredTrace::Mapped { cfg, .. } => cfg,
+        }
+    }
+
+    pub fn dispatch_count(&self) -> usize {
+        match self {
+            StoredTrace::Live(t) => t.dispatch_count(),
+            StoredTrace::Mapped { trace, .. } => {
+                trace.dispatch_count()
+            }
+        }
+    }
+
+    /// True when backed by the memory-mapped disk tier.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, StoredTrace::Mapped { .. })
+    }
+}
+
+/// Sweep-wide cache of case traces, keyed by case name. Each case is
+/// resolved exactly once even under concurrent lookups (a per-case
+/// entry lock serializes the resolution; later callers reuse it).
+///
+/// With a disk tier ([`TraceStore::with_dir`]) resolution is: archive
+/// hit → mmap ([`StoredTrace::Mapped`]); miss → record live **and
+/// spill** so subsequent processes hit. Corrupt or stale archive files
+/// are never fatal mid-sweep: the store warns, falls back to a live
+/// recording, and the spill atomically replaces the bad file.
 #[derive(Default)]
 pub struct TraceStore {
-    entries: Mutex<HashMap<String, Arc<Mutex<Option<Arc<CaseTrace>>>>>>,
+    dir: Option<PathBuf>,
+    entries: Mutex<HashMap<String, Arc<Mutex<Option<StoredTrace>>>>>,
     recordings: AtomicUsize,
+    archive_hits: AtomicUsize,
+    spills: AtomicUsize,
 }
 
 impl TraceStore {
+    /// Memory-only store (no disk tier).
     pub fn new() -> TraceStore {
         TraceStore::default()
     }
 
-    /// Get (or record, exactly once) the trace for `cfg`.
-    pub fn get_or_record(&self, cfg: &CaseConfig) -> Arc<CaseTrace> {
+    /// Store with a persistent archive directory as its first tier.
+    pub fn with_dir(dir: Option<PathBuf>) -> TraceStore {
+        TraceStore {
+            dir,
+            ..TraceStore::default()
+        }
+    }
+
+    /// Get the trace for `cfg`: archive hit, or record (exactly once)
+    /// and spill.
+    pub fn get_or_record(&self, cfg: &CaseConfig) -> StoredTrace {
         let entry = {
             let mut map = self.entries.lock().unwrap();
             Arc::clone(
@@ -157,18 +270,80 @@ impl TraceStore {
         };
         let mut slot = entry.lock().unwrap();
         if let Some(t) = slot.as_ref() {
-            return Arc::clone(t);
+            return t.clone();
+        }
+        let stored = self.resolve(cfg);
+        *slot = Some(stored.clone());
+        stored
+    }
+
+    /// Archive lookup, then live recording + spill. Caller holds the
+    /// per-case entry lock.
+    fn resolve(&self, cfg: &CaseConfig) -> StoredTrace {
+        if let Some(dir) = &self.dir {
+            let path = CaseTrace::archive_path(dir, cfg);
+            if path.exists() {
+                match MappedCaseTrace::open(&path) {
+                    Ok(mapped) => {
+                        // the key hashes the manifest, so a parse or
+                        // config mismatch means a corrupt/foreign file
+                        match CaseConfig::from_manifest_line(
+                            mapped.manifest(),
+                        ) {
+                            Some(c) if c == *cfg => {
+                                self.archive_hits
+                                    .fetch_add(1, Ordering::Relaxed);
+                                return StoredTrace::Mapped {
+                                    cfg: c,
+                                    trace: Arc::new(mapped),
+                                };
+                            }
+                            _ => eprintln!(
+                                "warning: {} does not match case \
+                                 '{}'; re-recording",
+                                path.display(),
+                                cfg.name
+                            ),
+                        }
+                    }
+                    Err(e) => eprintln!(
+                        "warning: ignoring unreadable trace \
+                         archive: {e:#}; re-recording"
+                    ),
+                }
+            }
         }
         self.recordings.fetch_add(1, Ordering::Relaxed);
         let trace = Arc::new(CaseTrace::record(cfg));
-        *slot = Some(Arc::clone(&trace));
-        trace
+        if let Some(dir) = &self.dir {
+            match trace.spill_to(dir) {
+                Ok(_) => {
+                    self.spills.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => eprintln!(
+                    "warning: could not spill trace for '{}': {e:#}",
+                    cfg.name
+                ),
+            }
+        }
+        StoredTrace::Live(trace)
     }
 
-    /// How many recordings this store has performed (the "record once"
-    /// acceptance counter: a sweep over N cases must report N).
+    /// How many *live* recordings this store has performed (the
+    /// "record once" acceptance counter: a sweep over N cases must
+    /// report ≤ N, and exactly 0 against a pre-populated archive).
     pub fn recordings(&self) -> usize {
         self.recordings.load(Ordering::Relaxed)
+    }
+
+    /// How many cases were served from the disk archive.
+    pub fn archive_hits(&self) -> usize {
+        self.archive_hits.load(Ordering::Relaxed)
+    }
+
+    /// How many live recordings were persisted to the disk archive.
+    pub fn spills(&self) -> usize {
+        self.spills.load(Ordering::Relaxed)
     }
 }
 
@@ -229,9 +404,45 @@ mod tests {
         let b = tiny("case-b", 1);
         let t1 = store.get_or_record(&a);
         let t2 = store.get_or_record(&a);
-        assert!(Arc::ptr_eq(&t1, &t2));
+        match (&t1, &t2) {
+            (StoredTrace::Live(x), StoredTrace::Live(y)) => {
+                assert!(Arc::ptr_eq(x, y));
+            }
+            _ => panic!("memory-only store must return live traces"),
+        }
         store.get_or_record(&b);
         store.get_or_record(&b);
         assert_eq!(store.recordings(), 2);
+        assert_eq!(store.archive_hits(), 0);
+        assert_eq!(store.spills(), 0);
+    }
+
+    #[test]
+    fn spilling_a_non_round_tripping_name_is_a_clean_error() {
+        let mut cfg = tiny("bad name", 1);
+        cfg.name = "has a space".to_string();
+        let trace = CaseTrace::record(&cfg);
+        let err = trace
+            .spill_to(&std::env::temp_dir())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("round-trip"), "{err}");
+    }
+
+    #[test]
+    fn archive_paths_are_content_addressed() {
+        let dir = Path::new("/tmp/x");
+        let a = tiny("case-key", 1);
+        let mut b = a.clone();
+        assert_eq!(
+            CaseTrace::archive_path(dir, &a),
+            CaseTrace::archive_path(dir, &b)
+        );
+        b.steps = 2;
+        assert_ne!(
+            CaseTrace::archive_path(dir, &a),
+            CaseTrace::archive_path(dir, &b),
+            "config changes must re-key the archive file"
+        );
     }
 }

@@ -4,7 +4,15 @@ use std::path::Path;
 
 use super::experiments;
 use super::profile_run::Context;
+use super::record::CaseTrace;
 use super::report::Report;
+use crate::pic::CaseConfig;
+
+/// The CI contract switch: with `ROCLINE_REQUIRE_ARCHIVE_HIT=1` a
+/// `--trace-dir` sweep must not record anything live.
+fn require_archive_hit() -> bool {
+    std::env::var("ROCLINE_REQUIRE_ARCHIVE_HIT").as_deref() == Ok("1")
+}
 
 /// Every experiment id, in DESIGN.md §4 order.
 pub const EXPERIMENT_IDS: [&str; 10] = [
@@ -61,7 +69,21 @@ pub fn run_experiments(
     ids: &[String],
     outdir: &Path,
 ) -> anyhow::Result<Vec<Report>> {
-    let ctx = Context::new();
+    run_experiments_in(ids, outdir, None)
+}
+
+/// [`run_experiments`] with an optional persistent trace-archive
+/// directory (`--trace-dir`): case traces are memory-mapped from the
+/// archive when present (zero live recordings against a pre-populated
+/// archive — the CI shard contract) and spilled there when not, so
+/// concurrent shard processes and later runs share one recording.
+pub fn run_experiments_in(
+    ids: &[String],
+    outdir: &Path,
+    trace_dir: Option<&Path>,
+) -> anyhow::Result<Vec<Report>> {
+    let ctx =
+        Context::with_trace_dir(trace_dir.map(|p| p.to_path_buf()));
     // prefetch every needed (gpu, case) run once, in parallel — the
     // expensive profiled runs land in the context cache before the
     // experiment workers race to read them
@@ -74,6 +96,33 @@ pub fn run_experiments(
         }
     }
     if !needed.is_empty() {
+        // fail fast under the CI contract: a missing archive file
+        // means the sweep is doomed to record live — surface that in
+        // milliseconds instead of after the full prefetch (corrupt
+        // files are still caught by the post-sweep check below)
+        if let Some(dir) = trace_dir {
+            if require_archive_hit() {
+                let mut cases: Vec<&str> =
+                    needed.iter().map(|(_, c)| *c).collect();
+                cases.sort_unstable();
+                cases.dedup();
+                for case in cases {
+                    let cfg = CaseConfig::by_name(case)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("unknown case {case}")
+                        })?;
+                    let path = CaseTrace::archive_path(dir, &cfg);
+                    anyhow::ensure!(
+                        path.exists(),
+                        "ROCLINE_REQUIRE_ARCHIVE_HIT=1: archive \
+                         file {} is missing for case '{case}' \
+                         (stale cache key or incomplete `rocline \
+                         record`?)",
+                        path.display()
+                    );
+                }
+            }
+        }
         eprintln!(
             "prefetching {} profiled run(s): {}",
             needed.len(),
@@ -85,11 +134,26 @@ pub fn run_experiments(
         );
         ctx.prefetch(&needed);
         eprintln!(
-            "recorded {} case trace(s) once; {} run(s) replayed them \
-             zero-copy",
+            "recorded {} case trace(s) live ({} archive hit(s), {} \
+             spilled); {} run(s) replayed them zero-copy",
             ctx.recordings(),
+            ctx.archive_hits(),
+            ctx.spills(),
             needed.len()
         );
+        // CI contract, enforced fail-closed in-process (not by log
+        // scraping): against a pre-populated archive a sweep must not
+        // record anything live
+        if trace_dir.is_some() && require_archive_hit() {
+            anyhow::ensure!(
+                ctx.recordings() == 0,
+                "ROCLINE_REQUIRE_ARCHIVE_HIT=1: {} case trace(s) \
+                 were recorded live despite --trace-dir (archive \
+                 miss or stale key? pre-populate with `rocline \
+                 record`)",
+                ctx.recordings()
+            );
+        }
     }
 
     // experiment assembly (stream/membench simulate whole benchmark

@@ -48,7 +48,7 @@ use super::cache::{AccessResult, Cache};
 use super::coalesce::Coalescer;
 use super::hierarchy::{ChanneledL2, MemTraffic};
 use crate::arch::GpuSpec;
-use crate::trace::block::{BlockSink, EventBlock, Tag};
+use crate::trace::block::{BlockData, BlockSink, EventBlock, Tag};
 use crate::trace::stats::TraceStats;
 use crate::trace::MemKind;
 use crate::util::pool::{Latch, WorkerPool};
@@ -103,9 +103,9 @@ struct L1Shard {
 }
 
 impl L1Shard {
-    fn consume(
+    fn consume<B: BlockData>(
         &mut self,
-        blocks: &[EventBlock],
+        blocks: &[B],
         n_l1: u64,
         sector_bytes: u64,
         l2_line: u64,
@@ -120,24 +120,23 @@ impl L1Shard {
             // skipped on (tag, group_id) alone, without decoding their
             // access payload — phase-1 scan cost per shard is then
             // O(records) tag checks + O(owned records) real work
-            let tags = block.tags();
-            let group_ids = block.group_ids();
             let mut acc_i = 0usize;
-            for t in 0..tags.len() {
+            for t in 0..block.len() {
                 let seq_base = rec_seq << 16;
                 rec_seq += 1;
-                if tags[t] == Tag::Inst {
+                let tag = block.tag(t);
+                if tag == Tag::Inst {
                     continue;
                 }
                 let acc_idx = acc_i;
                 acc_i += 1;
-                let cu = (group_ids[t] % n_l1) as usize;
+                let cu = (block.group_id(t) % n_l1) as usize;
                 if cu < lo || cu >= hi {
                     continue;
                 }
                 let (kind, bytes_per_lane, addrs) =
                     block.access(acc_idx);
-                if tags[t] == Tag::Lds {
+                if tag == Tag::Lds {
                     self.bank_model
                         .observe_addrs(addrs, &mut self.lds);
                     continue;
@@ -445,8 +444,10 @@ impl ShardedHierarchy {
     /// Consume caller-owned blocks without copying them into the pool —
     /// the replay-many path for *recorded* traces. Any streamed blocks
     /// buffered via [`BlockSink::on_block`] are drained first so event
-    /// order is preserved.
-    pub fn consume_blocks(&mut self, blocks: &[EventBlock]) {
+    /// order is preserved. Generic over the blocks' storage
+    /// ([`BlockData`]): heap recordings and memory-mapped archives
+    /// replay through the same engine, zero-copy either way.
+    pub fn consume_blocks<B: BlockData + Sync>(&mut self, blocks: &[B]) {
         self.consume_blocks_scaled(blocks, 1.0);
     }
 
@@ -454,9 +455,9 @@ impl ShardedHierarchy {
     /// factor applied to the instruction-count fold (identity at 1.0) —
     /// how expansion-neutral recorded traces replay for a specific GPU.
     /// Memory behaviour is unaffected; only [`TraceStats`] scales.
-    pub fn consume_blocks_scaled(
+    pub fn consume_blocks_scaled<B: BlockData + Sync>(
         &mut self,
-        blocks: &[EventBlock],
+        blocks: &[B],
         expansion: f64,
     ) {
         self.process_batch();
@@ -480,7 +481,11 @@ impl ShardedHierarchy {
     /// One batch through the pipeline: synchronous parallel L1 phase
     /// (which overlaps the previous batch's in-flight channel phase),
     /// then retire the previous channel phase and launch this batch's.
-    fn submit_batch(&mut self, blocks: &[EventBlock], expansion: f64) {
+    fn submit_batch<B: BlockData + Sync>(
+        &mut self,
+        blocks: &[B],
+        expansion: f64,
+    ) {
         if blocks.is_empty() {
             return;
         }

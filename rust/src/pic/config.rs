@@ -69,6 +69,29 @@ impl CaseConfig {
         self.cells() * self.ppc
     }
 
+    /// Render this config as a manifest line —
+    /// [`CaseConfig::from_manifest_line`]'s exact inverse for any
+    /// whitespace-free case name (floats use Rust's shortest
+    /// round-trip formatting; the archive spill path rejects names
+    /// that do not round-trip). The trace archive stores this line as
+    /// its config record, so archives stay self-describing without
+    /// the trace tier knowing this type.
+    pub fn manifest_line(&self) -> String {
+        format!(
+            "case name={} nx={} ny={} nz={} ppc={} dt={} qm={} qw={} \
+             steps={}",
+            self.name,
+            self.nx,
+            self.ny,
+            self.nz,
+            self.ppc,
+            self.dt,
+            self.qm,
+            self.qw,
+            self.steps
+        )
+    }
+
     /// Parse a `case name=lwfa nx=16 ...` line from the AOT manifest; the
     /// integration tests use this to prove Rust and Python agree on every
     /// constant.
@@ -126,6 +149,25 @@ mod tests {
                     qm=-1.0 qw=-0.05 steps=64";
         let parsed = CaseConfig::from_manifest_line(line).unwrap();
         assert_eq!(parsed, CaseConfig::lwfa());
+    }
+
+    #[test]
+    fn manifest_line_round_trips_exactly() {
+        for cfg in [CaseConfig::lwfa(), CaseConfig::tweac()] {
+            let line = cfg.manifest_line();
+            let parsed =
+                CaseConfig::from_manifest_line(&line).unwrap();
+            assert_eq!(parsed, cfg, "{line}");
+        }
+        // including non-default float/step values
+        let mut cfg = CaseConfig::lwfa();
+        cfg.name = "tiny-x".into();
+        cfg.dt = 0.125;
+        cfg.steps = 3;
+        let parsed =
+            CaseConfig::from_manifest_line(&cfg.manifest_line())
+                .unwrap();
+        assert_eq!(parsed, cfg);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::counters::DispatchRecord;
 use crate::memsim::banks::ConflictStats;
 use crate::memsim::{MemHierarchy, MemTraffic, ShardedHierarchy};
 use crate::timing::{kernel_time, KernelCost};
-use crate::trace::block::{BlockBuilder, EventBlock};
+use crate::trace::block::{BlockBuilder, BlockData};
 use crate::trace::sink::{FanoutSink, ScaleInstSink};
 use crate::trace::{TraceSource, TraceStats};
 
@@ -159,11 +159,13 @@ impl ProfileSession {
     /// replay-many shape: record a kernel once with
     /// [`crate::trace::BlockBuilder`], then replay it across sessions
     /// without regenerating events). Counters match [`Self::profile`]
-    /// of the originating trace exactly.
-    pub fn profile_blocks(
+    /// of the originating trace exactly. Generic over the blocks'
+    /// storage ([`BlockData`]): heap recordings and the trace archive's
+    /// memory-mapped blocks replay identically.
+    pub fn profile_blocks<B: BlockData + Sync>(
         &mut self,
         kernel: &str,
-        blocks: &[EventBlock],
+        blocks: &[B],
     ) -> &DispatchRecord {
         self.profile_blocks_scaled(kernel, blocks, 1.0)
     }
@@ -172,13 +174,14 @@ impl ProfileSession {
     /// the instruction counts (exact identity at 1.0). This is the
     /// record-once / replay-everywhere entry point: the coordinator
     /// records each case's trace *expansion-neutral* once, then every
-    /// GPU preset replays the same `Arc`-shared blocks zero-copy,
-    /// passing its own `spec.isa_expansion`. Counters are bit-identical
-    /// to live-profiling a trace emitted at that expansion.
-    pub fn profile_blocks_scaled(
+    /// GPU preset replays the same shared storage zero-copy (heap
+    /// `Arc`s or a memory-mapped archive), passing its own
+    /// `spec.isa_expansion`. Counters are bit-identical to
+    /// live-profiling a trace emitted at that expansion.
+    pub fn profile_blocks_scaled<B: BlockData + Sync>(
         &mut self,
         kernel: &str,
-        blocks: &[EventBlock],
+        blocks: &[B],
         expansion: f64,
     ) -> &DispatchRecord {
         let (stats, traffic_now, lds_now) = match &mut self.engine {

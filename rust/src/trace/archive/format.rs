@@ -1,0 +1,318 @@
+//! On-disk layout constants, checksums and primitive codecs for the
+//! trace archive (see `docs/trace-format.md` for the authoritative
+//! layout specification).
+//!
+//! Everything in a `.rtrc` file is **little-endian** and byte-packed;
+//! multi-byte *column sections* are additionally 8-byte aligned so the
+//! reader can expose them as `&[u64]`/`&[u32]` slices straight out of
+//! the mapping. The format never stores Rust enum discriminants — each
+//! enum has an explicit wire encoding pinned by tests here, and the
+//! reader validates every coded byte before any zero-copy replay
+//! begins, so decoding can never panic on a corrupt file.
+
+use crate::arch::InstClass;
+use crate::trace::block::Tag;
+use crate::trace::MemKind;
+
+/// File magic: identifies a rocline trace archive, any version.
+pub const MAGIC: [u8; 8] = *b"RLNTRACE";
+
+/// Current format version. Bump whenever the layout, the column set,
+/// or any wire encoding (including [`InstClass::ALL`] order) changes.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Endianness canary, written little-endian. A big-endian writer would
+/// produce the byte-swapped value, which the reader rejects with a
+/// dedicated message instead of a checksum mismatch.
+pub const ENDIAN_TAG: u32 = 0x0102_0304;
+
+/// [`ENDIAN_TAG`] as read on a machine of the opposite endianness.
+pub const ENDIAN_TAG_SWAPPED: u32 = 0x0403_0201;
+
+/// Fixed header size; the meta section starts right after it.
+pub const HEADER_LEN: usize = 64;
+
+/// File extension for case archives.
+pub const EXTENSION: &str = "rtrc";
+
+/// Number of column sections per block (wire order: tags, group_ids,
+/// inst_class, inst_count, acc_kind, acc_bpl, acc_off, acc_len, addrs).
+pub const COLUMNS: usize = 9;
+
+/// Section alignment: column offsets are multiples of this, which
+/// (with a page-aligned mapping) makes `&[u64]` views sound.
+pub const ALIGN: usize = 8;
+
+/// Round `n` up to the next [`ALIGN`] boundary.
+pub fn align_up(n: u64) -> u64 {
+    n.div_ceil(ALIGN as u64) * ALIGN as u64
+}
+
+// ---------------------------------------------------------------- fnv
+
+/// Incremental FNV-1a (64-bit) — the format's checksum. Not
+/// cryptographic; it guards against truncation, bit rot and torn
+/// writes, which is all an integrity check on a local cache needs.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv::default()
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot [`Fnv`] over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut f = Fnv::new();
+    f.write(bytes);
+    f.finish()
+}
+
+/// The content-addressed key of one recorded case: a pure function of
+/// the case's manifest line (its full [`crate::pic::CaseConfig`]
+/// rendering), the recording group size, the simulation seed, and the
+/// format version. Any ingredient change re-keys the archive file, so
+/// stale recordings are never replayed silently.
+pub fn case_key(manifest: &str, base_group_size: u32, seed: u64) -> u64 {
+    let mut f = Fnv::new();
+    f.write(manifest.as_bytes());
+    f.write(&base_group_size.to_le_bytes());
+    f.write(&seed.to_le_bytes());
+    f.write(&FORMAT_VERSION.to_le_bytes());
+    f.finish()
+}
+
+/// File name of a case archive inside an archive directory.
+pub fn archive_file_name(case_name: &str, key: u64) -> String {
+    let stem: String = case_name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    format!("{stem}-{key:016x}.{EXTENSION}")
+}
+
+// ------------------------------------------------------- enum codecs
+
+/// Wire encoding of [`Tag`]: 0 = Inst, 1 = Mem, 2 = Lds.
+pub fn tag_to_u8(t: Tag) -> u8 {
+    match t {
+        Tag::Inst => 0,
+        Tag::Mem => 1,
+        Tag::Lds => 2,
+    }
+}
+
+pub fn tag_from_u8(b: u8) -> Option<Tag> {
+    match b {
+        0 => Some(Tag::Inst),
+        1 => Some(Tag::Mem),
+        2 => Some(Tag::Lds),
+        _ => None,
+    }
+}
+
+/// Wire encoding of [`MemKind`]: 0 = Read, 1 = Write, 2 = Atomic.
+pub fn kind_to_u8(k: MemKind) -> u8 {
+    match k {
+        MemKind::Read => 0,
+        MemKind::Write => 1,
+        MemKind::Atomic => 2,
+    }
+}
+
+pub fn kind_from_u8(b: u8) -> Option<MemKind> {
+    match b {
+        0 => Some(MemKind::Read),
+        1 => Some(MemKind::Write),
+        2 => Some(MemKind::Atomic),
+        _ => None,
+    }
+}
+
+/// Wire encoding of [`InstClass`]: the index into [`InstClass::ALL`].
+/// That order is therefore part of the format — reordering or
+/// extending `ALL` requires a [`FORMAT_VERSION`] bump (pinned by the
+/// `inst_class_wire_encoding_is_stable` test below).
+pub fn class_to_u8(c: InstClass) -> u8 {
+    InstClass::ALL
+        .iter()
+        .position(|x| *x == c)
+        .expect("InstClass::ALL covers every class") as u8
+}
+
+pub fn class_from_u8(b: u8) -> Option<InstClass> {
+    InstClass::ALL.get(b as usize).copied()
+}
+
+// ----------------------------------------------------- bounded reads
+
+/// Bounds-checked little-endian cursor over a byte slice; every
+/// overrun is a clean `anyhow` error (never a slicing panic), which is
+/// what keeps corrupt-index handling panic-free.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "corrupt archive: truncated section (wanted {n} bytes at \
+             offset {}, {} left)",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> anyhow::Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        // incremental == one-shot
+        let mut f = Fnv::new();
+        f.write(b"foo");
+        f.write(b"bar");
+        assert_eq!(f.finish(), fnv1a(b"foobar"));
+    }
+
+    #[test]
+    fn case_key_is_sensitive_to_every_ingredient() {
+        let base = case_key("case name=x steps=4", 64, 7);
+        assert_eq!(base, case_key("case name=x steps=4", 64, 7));
+        assert_ne!(base, case_key("case name=x steps=5", 64, 7));
+        assert_ne!(base, case_key("case name=x steps=4", 32, 7));
+        assert_ne!(base, case_key("case name=x steps=4", 64, 8));
+    }
+
+    #[test]
+    fn file_names_are_sanitized_and_keyed() {
+        let n = archive_file_name("tiny a/b", 0xabc);
+        assert_eq!(n, "tiny_a_b-0000000000000abc.rtrc");
+    }
+
+    #[test]
+    fn tag_and_kind_round_trip() {
+        for t in [Tag::Inst, Tag::Mem, Tag::Lds] {
+            assert_eq!(tag_from_u8(tag_to_u8(t)), Some(t));
+        }
+        for k in [MemKind::Read, MemKind::Write, MemKind::Atomic] {
+            assert_eq!(kind_from_u8(kind_to_u8(k)), Some(k));
+        }
+        assert_eq!(tag_from_u8(3), None);
+        assert_eq!(kind_from_u8(9), None);
+    }
+
+    #[test]
+    fn inst_class_wire_encoding_is_stable() {
+        // the on-disk encoding is the index into InstClass::ALL;
+        // changing this order is a format break (bump FORMAT_VERSION)
+        let pinned = [
+            (InstClass::ValuArith, 0u8),
+            (InstClass::ValuSpecial, 1),
+            (InstClass::Salu, 2),
+            (InstClass::GlobalLoad, 3),
+            (InstClass::GlobalStore, 4),
+            (InstClass::GlobalAtomic, 5),
+            (InstClass::LdsLoad, 6),
+            (InstClass::LdsStore, 7),
+            (InstClass::Branch, 8),
+            (InstClass::Sync, 9),
+            (InstClass::Misc, 10),
+        ];
+        assert_eq!(pinned.len(), InstClass::ALL.len());
+        for (c, code) in pinned {
+            assert_eq!(class_to_u8(c), code, "{c:?}");
+            assert_eq!(class_from_u8(code), Some(c));
+        }
+        assert_eq!(class_from_u8(11), None);
+    }
+
+    #[test]
+    fn cursor_bounds_errors_are_clean() {
+        let mut c = Cursor::new(&[1, 0, 0, 0]);
+        assert_eq!(c.u32().unwrap(), 1);
+        let err = c.u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn alignment_rounding() {
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 8);
+        assert_eq!(align_up(8), 8);
+        assert_eq!(align_up(17), 24);
+    }
+}

@@ -1,0 +1,236 @@
+//! Read-only file mappings for zero-copy archive replay.
+//!
+//! [`ArchiveBuf`] is the byte storage behind every mapped archive:
+//! on 64-bit unix it is a real `mmap(2)` of the file (no crates — the
+//! registry is offline, so the two syscalls are declared directly
+//! against the C runtime the Rust std already links); elsewhere, or if
+//! the mapping fails, it falls back to reading the file into an
+//! 8-byte-aligned heap buffer. Either way [`ArchiveBuf::bytes`] hands
+//! out one immutable `&[u8]` whose base address is at least 8-aligned,
+//! which (with the format's aligned column offsets) is what makes the
+//! reader's `&[u64]` column views sound.
+//!
+//! Safety model: archives are written atomically (temp file + rename)
+//! and never modified in place, so a mapping's contents are stable for
+//! its lifetime. A reader that races a *delete* keeps its mapping
+//! alive (unix semantics); truncating an archive in place is the one
+//! unsupported mutation (as with every mmap consumer, it could fault),
+//! and nothing in this crate does it.
+
+use std::fs::File;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    pub const PROT_READ: i32 = 0x1;
+    pub const MAP_PRIVATE: i32 = 0x2;
+}
+
+/// A read-only `mmap` of a whole file.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub(crate) struct Mmap {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ and never aliased mutably; sharing
+// immutable views across threads is sound.
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for Mmap {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for Mmap {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Mmap {
+    fn map(file: &File, len: usize) -> anyhow::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        anyhow::ensure!(len > 0, "cannot map an empty file");
+        // SAFETY: a fresh private read-only mapping of `len` bytes of
+        // an open fd; the result is checked against MAP_FAILED before
+        // use and unmapped exactly once in Drop.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX || ptr.is_null() {
+            anyhow::bail!(
+                "mmap failed: {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        let ptr = std::ptr::NonNull::new(ptr.cast::<u8>())
+            .expect("checked non-null above");
+        Ok(Mmap { ptr, len })
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+        // self; the slice's lifetime is tied to &self.
+        unsafe {
+            std::slice::from_raw_parts(self.ptr.as_ptr(), self.len)
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        // SAFETY: mapping created by us in `map`, unmapped once.
+        unsafe {
+            sys::munmap(self.ptr.as_ptr().cast(), self.len);
+        }
+    }
+}
+
+/// Backing bytes of an opened archive: a zero-copy file mapping where
+/// available, an aligned owned buffer otherwise.
+pub(crate) enum ArchiveBuf {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped(Mmap),
+    Owned {
+        /// `u64` storage guarantees 8-byte base alignment.
+        words: Vec<u64>,
+        /// Real file length (`words` may be padded by up to 7 bytes).
+        len: usize,
+    },
+}
+
+impl ArchiveBuf {
+    /// Load (preferably map) the whole file.
+    pub(crate) fn load(file: &File) -> anyhow::Result<ArchiveBuf> {
+        let len = file.metadata()?.len();
+        anyhow::ensure!(len > 0, "corrupt archive: empty file");
+        anyhow::ensure!(
+            len <= usize::MAX as u64,
+            "archive too large to map ({len} bytes)"
+        );
+        let len = len as usize;
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            match Mmap::map(file, len) {
+                Ok(m) => return Ok(ArchiveBuf::Mapped(m)),
+                Err(e) => eprintln!(
+                    "warning: mmap unavailable, reading archive into \
+                     memory: {e:#}"
+                ),
+            }
+        }
+        Self::read_owned(file, len)
+    }
+
+    /// Fallback: read the file into an 8-aligned heap buffer.
+    fn read_owned(file: &File, len: usize) -> anyhow::Result<ArchiveBuf> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut words = vec![0u64; len.div_ceil(8)];
+        {
+            // SAFETY: viewing the zero-initialized u64 buffer as bytes;
+            // u8 has no validity or alignment requirements.
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(
+                    words.as_mut_ptr().cast::<u8>(),
+                    len,
+                )
+            };
+            let mut f = file;
+            f.seek(SeekFrom::Start(0))?;
+            f.read_exact(bytes)?;
+        }
+        Ok(ArchiveBuf::Owned { words, len })
+    }
+
+    /// The file's bytes. The base address is always at least 8-byte
+    /// aligned (page-aligned mapping, or `Vec<u64>` storage).
+    pub(crate) fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            ArchiveBuf::Mapped(m) => m.bytes(),
+            ArchiveBuf::Owned { words, len } => {
+                // SAFETY: words holds at least `len` initialized bytes.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        words.as_ptr().cast::<u8>(),
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+
+    /// True when backed by a real file mapping (telemetry/tests).
+    pub(crate) fn is_mapped(&self) -> bool {
+        match self {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            ArchiveBuf::Mapped(_) => true,
+            ArchiveBuf::Owned { .. } => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "rocline-mmap-test-{}-{name}",
+            std::process::id()
+        ));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(contents).unwrap();
+        f.sync_all().unwrap();
+        p
+    }
+
+    #[test]
+    fn load_round_trips_bytes_and_aligns_base() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let p = tmp_file("roundtrip", &data);
+        let buf = ArchiveBuf::load(&File::open(&p).unwrap()).unwrap();
+        assert_eq!(buf.bytes(), &data[..]);
+        assert_eq!(buf.bytes().as_ptr() as usize % 8, 0);
+        drop(buf);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn owned_fallback_round_trips_too() {
+        let data = vec![7u8; 37];
+        let p = tmp_file("owned", &data);
+        let f = File::open(&p).unwrap();
+        let buf = ArchiveBuf::read_owned(&f, data.len()).unwrap();
+        assert!(!buf.is_mapped());
+        assert_eq!(buf.bytes(), &data[..]);
+        assert_eq!(buf.bytes().as_ptr() as usize % 8, 0);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn empty_file_is_a_clean_error() {
+        let p = tmp_file("empty", &[]);
+        let err = ArchiveBuf::load(&File::open(&p).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("empty"), "{err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

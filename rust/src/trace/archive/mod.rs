@@ -1,0 +1,37 @@
+//! Persistent trace archive: the disk tier of record-once /
+//! replay-everywhere.
+//!
+//! PR 2 made sweeps record each case's trace exactly once per
+//! *process*; this subsystem makes recordings survive the process. A
+//! case's [`crate::trace::EventBlock`]s are laid out as aligned,
+//! checksummed column sections in a versioned little-endian file
+//! ([`format`], specified in `docs/trace-format.md`), written
+//! atomically ([`writer`] — temp file + rename, safe under concurrent
+//! shard processes) and memory-mapped back ([`reader`], [`mmap`]) for
+//! **zero-copy** replay: [`MappedBlock`] implements
+//! [`crate::trace::BlockData`], so borrowed records are reconstructed
+//! straight from the mapped columns and stream through
+//! `ProfileSession::profile_blocks_scaled` bit-identically to live
+//! tracing — on every GPU preset, including V100's derived
+//! half-group form.
+//!
+//! Files are content-addressed: the name embeds
+//! [`format::case_key`], a hash of the case config manifest, the
+//! recording group size, the simulation seed and the format version —
+//! a config change re-keys the file rather than silently replaying a
+//! stale recording. CI exploits this: a record-once pre-job builds
+//! the archive, caches it under the combined case key, and every
+//! `--shard i/n` job replays from the shared cache with **zero** live
+//! recordings (`TraceStore` counts them; the sweep fails closed under
+//! `ROCLINE_REQUIRE_ARCHIVE_HIT=1`).
+
+pub mod format;
+mod mmap;
+pub mod reader;
+pub mod writer;
+
+pub use format::{archive_file_name, case_key, fnv1a, FORMAT_VERSION};
+pub use reader::{
+    ArchiveInfo, MappedBlock, MappedCaseTrace, MappedDispatch,
+};
+pub use writer::{write_case_archive, CaseMeta};

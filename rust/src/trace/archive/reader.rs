@@ -1,0 +1,670 @@
+//! Archive reader: memory-map a `.rtrc` file and replay it zero-copy.
+//!
+//! [`MappedCaseTrace::open`] validates the **whole** file up front —
+//! header, meta and index checksums, every column section's checksum,
+//! every coded enum byte, and the structural invariants replay relies
+//! on (tape/stream count agreement, access payloads inside the address
+//! arena, lane counts within [`MAX_LANES`], non-zero access widths).
+//! Corruption of any kind is a clean `anyhow` error here; after `open`
+//! succeeds, replay through [`MappedBlock`]'s [`BlockData`] impl is
+//! infallible and borrows the mapped columns directly — no
+//! deserialization, no copies, shared page cache across processes.
+//!
+//! [`ArchiveInfo::scan`] is the cheap sibling used by `rocline
+//! trace-info`: it reads only the header, meta and index (a few KB)
+//! and never touches the column data.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::format::{
+    align_up, class_from_u8, fnv1a, kind_from_u8, tag_from_u8, Cursor,
+    COLUMNS, ENDIAN_TAG, ENDIAN_TAG_SWAPPED, EXTENSION,
+    FORMAT_VERSION, HEADER_LEN, MAGIC,
+};
+use super::mmap::ArchiveBuf;
+use crate::arch::InstClass;
+use crate::trace::block::{BlockData, Tag};
+use crate::trace::recorded::{split_half_groups, RecordedDispatch};
+use crate::trace::{MemKind, MAX_LANES};
+
+/// Parsed, checksum-verified fixed header.
+struct Header {
+    version: u32,
+    base_group_size: u32,
+    dispatch_count: u32,
+    case_key: u64,
+    meta_len: u64,
+    index_off: u64,
+    index_len: u64,
+}
+
+fn parse_header(bytes: &[u8]) -> anyhow::Result<Header> {
+    // format v1 is little-endian on disk and replayed via native-
+    // endian column views; a big-endian host must not get past open
+    // (the writer is equally LE, so its archives would be unreadable
+    // everywhere else too)
+    anyhow::ensure!(
+        cfg!(target_endian = "little"),
+        "trace archives are little-endian (format v1) and this build \
+         targets a big-endian host; zero-copy replay is unsupported \
+         here"
+    );
+    anyhow::ensure!(
+        bytes.len() >= HEADER_LEN,
+        "corrupt archive: file shorter than the {HEADER_LEN}-byte \
+         header ({} bytes)",
+        bytes.len()
+    );
+    let mut c = Cursor::new(&bytes[..HEADER_LEN]);
+    let magic = c.bytes(8)?;
+    anyhow::ensure!(
+        magic == MAGIC,
+        "not a rocline trace archive (bad magic)"
+    );
+    let version = c.u32()?;
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "unsupported trace archive format version {version} (this \
+         build reads version {FORMAT_VERSION}); re-record with \
+         `rocline record`"
+    );
+    let endian = c.u32()?;
+    if endian == ENDIAN_TAG_SWAPPED {
+        anyhow::bail!(
+            "trace archive endianness mismatch: written on a \
+             big-endian machine, archives are not portable across \
+             endianness; re-record with `rocline record`"
+        );
+    }
+    anyhow::ensure!(
+        endian == ENDIAN_TAG,
+        "corrupt archive: bad endianness tag {endian:#010x}"
+    );
+    let base_group_size = c.u32()?;
+    let dispatch_count = c.u32()?;
+    let case_key = c.u64()?;
+    let meta_len = c.u64()?;
+    let index_off = c.u64()?;
+    let index_len = c.u64()?;
+    let stored_sum = c.u64()?;
+    let computed = fnv1a(&bytes[..HEADER_LEN - 8]);
+    anyhow::ensure!(
+        stored_sum == computed,
+        "corrupt archive: header checksum mismatch"
+    );
+    Ok(Header {
+        version,
+        base_group_size,
+        dispatch_count,
+        case_key,
+        meta_len,
+        index_off,
+        index_len,
+    })
+}
+
+/// Parsed meta section: (manifest line, field energy, kinetic energy).
+fn parse_meta(bytes: &[u8]) -> anyhow::Result<(String, f64, f64)> {
+    anyhow::ensure!(
+        bytes.len() >= 4 + 8 + 8 + 8,
+        "corrupt archive: meta section too short ({} bytes)",
+        bytes.len()
+    );
+    let body = &bytes[..bytes.len() - 8];
+    let mut tail = Cursor::new(&bytes[bytes.len() - 8..]);
+    anyhow::ensure!(
+        tail.u64()? == fnv1a(body),
+        "corrupt archive: meta checksum mismatch"
+    );
+    let mut c = Cursor::new(body);
+    let mlen = c.u32()? as usize;
+    let manifest = std::str::from_utf8(c.bytes(mlen)?)
+        .map_err(|_| {
+            anyhow::anyhow!("corrupt archive: manifest is not UTF-8")
+        })?
+        .to_string();
+    let field = c.f64()?;
+    let kinetic = c.f64()?;
+    anyhow::ensure!(
+        c.remaining() == 0,
+        "corrupt archive: {} trailing meta bytes",
+        c.remaining()
+    );
+    Ok((manifest, field, kinetic))
+}
+
+/// One block's index entry, as stored.
+struct RawBlockIndex {
+    n_records: u32,
+    n_inst: u32,
+    n_acc: u32,
+    n_addr: u32,
+    col_off: [u64; COLUMNS],
+    col_sum: [u64; COLUMNS],
+}
+
+/// Verify the index checksum and parse its entries.
+fn parse_index(
+    bytes: &[u8],
+    dispatch_count: u32,
+) -> anyhow::Result<Vec<(String, Vec<RawBlockIndex>)>> {
+    anyhow::ensure!(
+        bytes.len() >= 8,
+        "corrupt archive: index section too short"
+    );
+    let body = &bytes[..bytes.len() - 8];
+    let mut tail = Cursor::new(&bytes[bytes.len() - 8..]);
+    anyhow::ensure!(
+        tail.u64()? == fnv1a(body),
+        "corrupt archive: index checksum mismatch"
+    );
+    let mut c = Cursor::new(body);
+    let mut out = Vec::new();
+    for _ in 0..dispatch_count {
+        let klen = c.u16()? as usize;
+        let kernel = std::str::from_utf8(c.bytes(klen)?)
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "corrupt archive: kernel name is not UTF-8"
+                )
+            })?
+            .to_string();
+        let nblocks = c.u32()?;
+        let mut blocks = Vec::new();
+        for _ in 0..nblocks {
+            let mut e = RawBlockIndex {
+                n_records: c.u32()?,
+                n_inst: c.u32()?,
+                n_acc: c.u32()?,
+                n_addr: c.u32()?,
+                col_off: [0; COLUMNS],
+                col_sum: [0; COLUMNS],
+            };
+            for off in e.col_off.iter_mut() {
+                *off = c.u64()?;
+            }
+            for sum in e.col_sum.iter_mut() {
+                *sum = c.u64()?;
+            }
+            blocks.push(e);
+        }
+        out.push((kernel, blocks));
+    }
+    anyhow::ensure!(
+        c.remaining() == 0,
+        "corrupt archive: {} trailing index bytes",
+        c.remaining()
+    );
+    Ok(out)
+}
+
+/// Per-column byte length, by wire position.
+fn col_len_bytes(e: &RawBlockIndex, c: usize) -> u64 {
+    match c {
+        0 => e.n_records as u64,     // tags (u8)
+        1 => e.n_records as u64 * 8, // group_ids (u64)
+        2 => e.n_inst as u64,        // inst_class (u8)
+        3 => e.n_inst as u64 * 8,    // inst_count (u64)
+        4 => e.n_acc as u64,         // acc_kind (u8)
+        5 => e.n_acc as u64,         // acc_bpl (u8)
+        6 => e.n_acc as u64 * 4,     // acc_off (u32)
+        7 => e.n_acc as u64,         // acc_len (u8)
+        _ => e.n_addr as u64 * 8,    // addrs (u64)
+    }
+}
+
+/// One block whose columns live in the mapped file. Replays through
+/// [`BlockData`] exactly like an owned
+/// [`crate::trace::EventBlock`] — the engines cannot tell the
+/// difference (and the round-trip tests prove the counters can't
+/// either).
+pub struct MappedBlock {
+    buf: Arc<ArchiveBuf>,
+    n_records: u32,
+    n_inst: u32,
+    n_acc: u32,
+    n_addr: u32,
+    col_off: [u64; COLUMNS],
+}
+
+impl MappedBlock {
+    #[inline]
+    fn u8_col(&self, c: usize, len: usize) -> &[u8] {
+        let off = self.col_off[c] as usize;
+        &self.buf.bytes()[off..off + len]
+    }
+
+    #[inline]
+    fn u64_col(&self, c: usize, len: usize) -> &[u64] {
+        let off = self.col_off[c] as usize;
+        let b = &self.buf.bytes()[off..off + len * 8];
+        // SAFETY: offset and total range were bounds- and
+        // alignment-checked at open (8-aligned section in an 8-aligned
+        // buffer); any u64 bit pattern is valid.
+        unsafe {
+            std::slice::from_raw_parts(b.as_ptr().cast::<u64>(), len)
+        }
+    }
+
+    #[inline]
+    fn u32_col(&self, c: usize, len: usize) -> &[u32] {
+        let off = self.col_off[c] as usize;
+        let b = &self.buf.bytes()[off..off + len * 4];
+        // SAFETY: as for u64_col; 8-aligned implies 4-aligned.
+        unsafe {
+            std::slice::from_raw_parts(b.as_ptr().cast::<u32>(), len)
+        }
+    }
+}
+
+impl BlockData for MappedBlock {
+    fn len(&self) -> usize {
+        self.n_records as usize
+    }
+
+    fn addr_words(&self) -> usize {
+        self.n_addr as usize
+    }
+
+    fn tag(&self, t: usize) -> Tag {
+        let b = self.u8_col(0, self.n_records as usize)[t];
+        tag_from_u8(b).expect("tag bytes validated at open")
+    }
+
+    fn group_id(&self, t: usize) -> u64 {
+        self.u64_col(1, self.n_records as usize)[t]
+    }
+
+    fn inst(&self, i: usize) -> (InstClass, u64) {
+        let class = class_from_u8(
+            self.u8_col(2, self.n_inst as usize)[i],
+        )
+        .expect("class bytes validated at open");
+        (class, self.u64_col(3, self.n_inst as usize)[i])
+    }
+
+    fn access(&self, i: usize) -> (MemKind, u8, &[u64]) {
+        let n_acc = self.n_acc as usize;
+        let kind = kind_from_u8(self.u8_col(4, n_acc)[i])
+            .expect("kind bytes validated at open");
+        let bpl = self.u8_col(5, n_acc)[i];
+        let off = self.u32_col(6, n_acc)[i] as usize;
+        let len = self.u8_col(7, n_acc)[i] as usize;
+        let addrs =
+            &self.u64_col(8, self.n_addr as usize)[off..off + len];
+        (kind, bpl, addrs)
+    }
+}
+
+/// One kernel dispatch of a mapped archive.
+pub struct MappedDispatch {
+    pub kernel: String,
+    pub blocks: Vec<MappedBlock>,
+}
+
+/// A whole case archive, mapped and validated — the disk tier's
+/// counterpart of [`crate::coordinator::CaseTrace`].
+pub struct MappedCaseTrace {
+    manifest: String,
+    base_group_size: u32,
+    case_key: u64,
+    final_field_energy: f64,
+    final_kinetic_energy: f64,
+    bytes_on_disk: u64,
+    mapped: bool,
+    dispatches: Vec<MappedDispatch>,
+    /// Lazily derived half-group-size form (warp-width targets), like
+    /// the in-memory [`crate::coordinator::CaseTrace`]'s cache.
+    halved: Mutex<Option<Arc<Vec<RecordedDispatch>>>>,
+}
+
+impl MappedCaseTrace {
+    /// Map `path` and validate everything (see the module docs).
+    pub fn open(path: &Path) -> anyhow::Result<MappedCaseTrace> {
+        Self::open_inner(path).map_err(|e| {
+            anyhow::anyhow!("trace archive {}: {e}", path.display())
+        })
+    }
+
+    fn open_inner(path: &Path) -> anyhow::Result<MappedCaseTrace> {
+        let file = File::open(path)?;
+        let buf = Arc::new(ArchiveBuf::load(&file)?);
+        let bytes = buf.bytes();
+        let h = parse_header(bytes)?;
+
+        let file_len = bytes.len() as u64;
+        let meta_end = (HEADER_LEN as u64).checked_add(h.meta_len);
+        anyhow::ensure!(
+            meta_end.is_some_and(|end| {
+                end <= file_len && align_up(end) <= h.index_off
+            }) && h
+                .index_off
+                .checked_add(h.index_len)
+                .is_some_and(|end| end == file_len),
+            "corrupt archive: section table out of bounds \
+             (meta {} bytes, index {}+{}, file {} bytes)",
+            h.meta_len,
+            h.index_off,
+            h.index_len,
+            file_len
+        );
+        let (manifest, final_field_energy, final_kinetic_energy) =
+            parse_meta(
+                &bytes[HEADER_LEN..HEADER_LEN + h.meta_len as usize],
+            )?;
+        let index = parse_index(
+            &bytes[h.index_off as usize
+                ..(h.index_off + h.index_len) as usize],
+            h.dispatch_count,
+        )?;
+
+        // -- column validation: bounds, alignment, checksums, codes --
+        let mut dispatches = Vec::with_capacity(index.len());
+        for (kernel, raw_blocks) in index {
+            let mut blocks = Vec::with_capacity(raw_blocks.len());
+            for e in raw_blocks {
+                validate_block(bytes, &e, h.index_off).map_err(
+                    |err| {
+                        anyhow::anyhow!("dispatch {kernel}: {err}")
+                    },
+                )?;
+                blocks.push(MappedBlock {
+                    buf: Arc::clone(&buf),
+                    n_records: e.n_records,
+                    n_inst: e.n_inst,
+                    n_acc: e.n_acc,
+                    n_addr: e.n_addr,
+                    col_off: e.col_off,
+                });
+            }
+            dispatches.push(MappedDispatch { kernel, blocks });
+        }
+
+        Ok(MappedCaseTrace {
+            manifest,
+            base_group_size: h.base_group_size,
+            case_key: h.case_key,
+            final_field_energy,
+            final_kinetic_energy,
+            bytes_on_disk: file_len,
+            mapped: buf.is_mapped(),
+            dispatches,
+            halved: Mutex::new(None),
+        })
+    }
+
+    pub fn manifest(&self) -> &str {
+        &self.manifest
+    }
+
+    pub fn base_group_size(&self) -> u32 {
+        self.base_group_size
+    }
+
+    pub fn case_key(&self) -> u64 {
+        self.case_key
+    }
+
+    pub fn final_field_energy(&self) -> f64 {
+        self.final_field_energy
+    }
+
+    pub fn final_kinetic_energy(&self) -> f64 {
+        self.final_kinetic_energy
+    }
+
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.bytes_on_disk
+    }
+
+    /// Whether the archive is a true file mapping (false: the aligned
+    /// read fallback on platforms without mmap).
+    pub fn is_mapped(&self) -> bool {
+        self.mapped
+    }
+
+    /// The base-width dispatches, replayable zero-copy.
+    pub fn dispatches(&self) -> &[MappedDispatch] {
+        &self.dispatches
+    }
+
+    pub fn dispatch_count(&self) -> usize {
+        self.dispatches.len()
+    }
+
+    /// The derived half-group-size dispatch list (V100's 32-lane
+    /// warps), computed from the mapped columns once and cached —
+    /// exactly [`crate::coordinator::CaseTrace`]'s behaviour for the
+    /// in-memory tier.
+    pub fn halved_dispatches(
+        &self,
+        half: u32,
+    ) -> Arc<Vec<RecordedDispatch>> {
+        assert_eq!(
+            half * 2,
+            self.base_group_size,
+            "archived at group size {}, cannot replay at {half}",
+            self.base_group_size
+        );
+        let mut slot = self.halved.lock().unwrap();
+        if let Some(h) = slot.as_ref() {
+            return Arc::clone(h);
+        }
+        let derived: Vec<RecordedDispatch> = self
+            .dispatches
+            .iter()
+            .map(|d| RecordedDispatch {
+                kernel: d.kernel.clone(),
+                blocks: Arc::new(split_half_groups(&d.blocks, half)),
+            })
+            .collect();
+        let arc = Arc::new(derived);
+        *slot = Some(Arc::clone(&arc));
+        arc
+    }
+}
+
+/// Structural validation of one block (bounds, alignment, per-column
+/// checksums, enum codes, tape/stream agreement, payload invariants).
+fn validate_block(
+    bytes: &[u8],
+    e: &RawBlockIndex,
+    data_end: u64,
+) -> anyhow::Result<()> {
+    for c in 0..COLUMNS {
+        let off = e.col_off[c];
+        let len = col_len_bytes(e, c);
+        let padded = align_up(len);
+        anyhow::ensure!(
+            off % 8 == 0,
+            "corrupt archive: column {c} misaligned (offset {off})"
+        );
+        let end = off.checked_add(padded);
+        anyhow::ensure!(
+            off >= HEADER_LEN as u64
+                && end.is_some_and(|end| end <= data_end),
+            "corrupt archive: column {c} out of bounds \
+             ({off}+{padded} vs data end {data_end})"
+        );
+        let span = &bytes[off as usize..(off + padded) as usize];
+        anyhow::ensure!(
+            fnv1a(span) == e.col_sum[c],
+            "corrupt archive: column {c} checksum mismatch \
+             (flipped bytes at offset {off}..{})",
+            off + padded
+        );
+    }
+
+    // enum codes and tape/stream agreement
+    let tags = &bytes[e.col_off[0] as usize..]
+        [..e.n_records as usize];
+    let (mut inst, mut acc) = (0u32, 0u32);
+    for &t in tags {
+        match tag_from_u8(t) {
+            Some(Tag::Inst) => inst += 1,
+            Some(_) => acc += 1,
+            None => anyhow::bail!(
+                "corrupt archive: invalid tag byte {t}"
+            ),
+        }
+    }
+    anyhow::ensure!(
+        inst == e.n_inst && acc == e.n_acc,
+        "corrupt archive: tape disagrees with stream counts \
+         ({inst}/{acc} vs {}/{})",
+        e.n_inst,
+        e.n_acc
+    );
+    let classes = &bytes[e.col_off[2] as usize..]
+        [..e.n_inst as usize];
+    for &b in classes {
+        anyhow::ensure!(
+            class_from_u8(b).is_some(),
+            "corrupt archive: invalid instruction class byte {b}"
+        );
+    }
+    let kinds =
+        &bytes[e.col_off[4] as usize..][..e.n_acc as usize];
+    for &b in kinds {
+        anyhow::ensure!(
+            kind_from_u8(b).is_some(),
+            "corrupt archive: invalid memory kind byte {b}"
+        );
+    }
+
+    // access payload invariants the replay engines rely on
+    let bpls =
+        &bytes[e.col_off[5] as usize..][..e.n_acc as usize];
+    let lens =
+        &bytes[e.col_off[7] as usize..][..e.n_acc as usize];
+    let offs_raw = &bytes[e.col_off[6] as usize..]
+        [..e.n_acc as usize * 4];
+    for i in 0..e.n_acc as usize {
+        let off = u32::from_le_bytes([
+            offs_raw[i * 4],
+            offs_raw[i * 4 + 1],
+            offs_raw[i * 4 + 2],
+            offs_raw[i * 4 + 3],
+        ]) as u64;
+        let len = lens[i] as u64;
+        anyhow::ensure!(
+            len <= MAX_LANES as u64
+                && off + len <= e.n_addr as u64,
+            "corrupt archive: access {i} payload out of range \
+             ({off}+{len} of {} addr words)",
+            e.n_addr
+        );
+        anyhow::ensure!(
+            bpls[i] > 0,
+            "corrupt archive: access {i} has zero bytes-per-lane"
+        );
+    }
+    Ok(())
+}
+
+/// Index-level summary of one archive (no column data touched).
+pub struct ArchiveInfo {
+    pub path: PathBuf,
+    pub file_bytes: u64,
+    pub version: u32,
+    pub case_key: u64,
+    pub base_group_size: u32,
+    pub manifest: String,
+    pub dispatches: usize,
+    pub blocks: u64,
+    pub records: u64,
+    pub addr_words: u64,
+}
+
+impl ArchiveInfo {
+    /// Read header + meta + index only — cheap enough to run over a
+    /// whole archive directory without deserializing any trace data.
+    pub fn scan(path: &Path) -> anyhow::Result<ArchiveInfo> {
+        Self::scan_inner(path).map_err(|e| {
+            anyhow::anyhow!("trace archive {}: {e}", path.display())
+        })
+    }
+
+    fn scan_inner(path: &Path) -> anyhow::Result<ArchiveInfo> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut file = File::open(path)?;
+        let file_bytes = file.metadata()?.len();
+        let mut head = vec![0u8; HEADER_LEN];
+        file.read_exact(&mut head).map_err(|_| {
+            anyhow::anyhow!(
+                "corrupt archive: file shorter than the \
+                 {HEADER_LEN}-byte header ({file_bytes} bytes)"
+            )
+        })?;
+        let h = parse_header(&head)?;
+        anyhow::ensure!(
+            (HEADER_LEN as u64)
+                .checked_add(h.meta_len)
+                .is_some_and(|end| end <= file_bytes)
+                && h.index_off
+                    .checked_add(h.index_len)
+                    .is_some_and(|end| end == file_bytes),
+            "corrupt archive: section table out of bounds"
+        );
+        let mut meta = vec![0u8; h.meta_len as usize];
+        file.read_exact(&mut meta)?;
+        let (manifest, _, _) = parse_meta(&meta)?;
+        file.seek(SeekFrom::Start(h.index_off))?;
+        let mut index = vec![0u8; h.index_len as usize];
+        file.read_exact(&mut index)?;
+        let entries = parse_index(&index, h.dispatch_count)?;
+
+        let mut blocks = 0u64;
+        let mut records = 0u64;
+        let mut addr_words = 0u64;
+        for (_, bs) in &entries {
+            blocks += bs.len() as u64;
+            for b in bs {
+                records += b.n_records as u64;
+                addr_words += b.n_addr as u64;
+            }
+        }
+        Ok(ArchiveInfo {
+            path: path.to_path_buf(),
+            file_bytes,
+            version: h.version,
+            case_key: h.case_key,
+            base_group_size: h.base_group_size,
+            manifest,
+            dispatches: entries.len(),
+            blocks,
+            records,
+            addr_words,
+        })
+    }
+
+    /// Scan every `.rtrc` file in `dir`, sorted by file name.
+    pub fn scan_dir(dir: &Path) -> anyhow::Result<Vec<ArchiveInfo>> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "read archive dir {}: {e}",
+                    dir.display()
+                )
+            })?
+            .filter_map(|entry| entry.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.extension().and_then(|x| x.to_str())
+                    == Some(EXTENSION)
+            })
+            .collect();
+        paths.sort();
+        paths.iter().map(|p| ArchiveInfo::scan(p)).collect()
+    }
+
+    /// Case name parsed out of the manifest line (best effort — the
+    /// manifest is `case name=<x> ...`).
+    pub fn case_name(&self) -> &str {
+        self.manifest
+            .split_whitespace()
+            .find_map(|kv| kv.strip_prefix("name="))
+            .unwrap_or("?")
+    }
+}

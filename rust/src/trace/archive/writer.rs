@@ -1,0 +1,287 @@
+//! Archive writer: serialize one recorded case to a `.rtrc` file,
+//! atomically.
+//!
+//! The writer streams (never holds the serialized file in memory):
+//! header placeholder → meta → per-block column sections (8-aligned,
+//! each checksummed over data *and* its trailing pad, so the covered
+//! spans tile the whole data region) → index → patched header. The
+//! file is assembled under a process-unique temporary name in the
+//! destination directory and `rename(2)`d into place, so concurrent
+//! shard processes spilling the same case race safely: whichever
+//! rename lands last wins with a complete, identical file, and readers
+//! only ever observe complete archives.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::format::{
+    align_up, case_key, class_to_u8, kind_to_u8, tag_to_u8, Fnv,
+    COLUMNS, ENDIAN_TAG, FORMAT_VERSION, HEADER_LEN, MAGIC,
+};
+use crate::trace::recorded::RecordedDispatch;
+
+/// Everything case-specific the archive stores besides the blocks.
+/// The manifest line is opaque to this layer — the coordinator renders
+/// it from its `CaseConfig` and parses it back on load, which keeps
+/// the trace tier independent of the simulation tier.
+pub struct CaseMeta<'a> {
+    /// Case name (used, sanitized, as the file-name stem).
+    pub name: &'a str,
+    /// Full config rendering (`case name=... steps=N`).
+    pub manifest: &'a str,
+    /// Group size the recording was made at (wavefront width).
+    pub base_group_size: u32,
+    /// Simulation seed — a [`case_key`] ingredient.
+    pub seed: u64,
+    pub final_field_energy: f64,
+    pub final_kinetic_energy: f64,
+}
+
+/// Per-block index entry accumulated while streaming sections.
+struct BlockIndex {
+    n_records: u32,
+    n_inst: u32,
+    n_acc: u32,
+    n_addr: u32,
+    col_off: [u64; COLUMNS],
+    col_sum: [u64; COLUMNS],
+}
+
+/// Counting, checksumming writer over the temp file.
+struct Out {
+    w: BufWriter<File>,
+    pos: u64,
+}
+
+impl Out {
+    fn write(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.w.write_all(bytes)?;
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Write one column: pad to alignment, then the data, then pad to
+    /// alignment again; returns (offset, checksum over data + trailing
+    /// pad). Leading padding is covered by the *previous* column's
+    /// checksum, so coverage tiles the data region with no gaps.
+    fn column(&mut self, data: &[u8]) -> anyhow::Result<(u64, u64)> {
+        debug_assert_eq!(self.pos % 8, 0, "columns start aligned");
+        let off = self.pos;
+        let mut sum = Fnv::new();
+        sum.write(data);
+        self.write(data)?;
+        let padded = align_up(data.len() as u64);
+        let pad = [0u8; 8];
+        let pad_n = (padded - data.len() as u64) as usize;
+        sum.write(&pad[..pad_n]);
+        self.write(&pad[..pad_n])?;
+        Ok((off, sum.finish()))
+    }
+}
+
+/// Write `dispatches` (the base-width recording of one case) as an
+/// archive file in `dir`, atomically. Returns the final path. The file
+/// name embeds the case's content key, so config changes produce new
+/// files instead of overwriting unrelated recordings.
+pub fn write_case_archive(
+    dir: &Path,
+    meta: &CaseMeta<'_>,
+    dispatches: &[RecordedDispatch],
+) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(dir).map_err(|e| {
+        anyhow::anyhow!("create archive dir {}: {e}", dir.display())
+    })?;
+    let key =
+        case_key(meta.manifest, meta.base_group_size, meta.seed);
+    let final_path =
+        dir.join(super::format::archive_file_name(meta.name, key));
+    // unique per process AND per spill: two threads of one process
+    // spilling the same case must not interleave into one temp file
+    static SPILL_SEQ: std::sync::atomic::AtomicU64 =
+        std::sync::atomic::AtomicU64::new(0);
+    let tmp_path = dir.join(format!(
+        ".{}.tmp.{}.{}",
+        super::format::archive_file_name(meta.name, key),
+        std::process::id(),
+        SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+
+    let res = write_to_tmp(&tmp_path, meta, key, dispatches)
+        .and_then(|()| {
+            std::fs::rename(&tmp_path, &final_path).map_err(|e| {
+                anyhow::anyhow!(
+                    "rename {} -> {}: {e}",
+                    tmp_path.display(),
+                    final_path.display()
+                )
+            })
+        });
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp_path);
+    }
+    res.map(|()| final_path)
+}
+
+fn write_to_tmp(
+    tmp_path: &Path,
+    meta: &CaseMeta<'_>,
+    key: u64,
+    dispatches: &[RecordedDispatch],
+) -> anyhow::Result<()> {
+    let file = File::create(tmp_path).map_err(|e| {
+        anyhow::anyhow!("create {}: {e}", tmp_path.display())
+    })?;
+    let mut out = Out {
+        w: BufWriter::new(file),
+        pos: 0,
+    };
+
+    // -- header placeholder (patched at the end) ----------------------
+    out.write(&[0u8; HEADER_LEN])?;
+
+    // -- meta section --------------------------------------------------
+    let mut mbuf: Vec<u8> = Vec::with_capacity(
+        meta.manifest.len() + 32,
+    );
+    mbuf.extend_from_slice(
+        &(meta.manifest.len() as u32).to_le_bytes(),
+    );
+    mbuf.extend_from_slice(meta.manifest.as_bytes());
+    mbuf.extend_from_slice(
+        &meta.final_field_energy.to_bits().to_le_bytes(),
+    );
+    mbuf.extend_from_slice(
+        &meta.final_kinetic_energy.to_bits().to_le_bytes(),
+    );
+    let msum = super::format::fnv1a(&mbuf);
+    mbuf.extend_from_slice(&msum.to_le_bytes());
+    let meta_len = mbuf.len() as u64;
+    out.write(&mbuf)?;
+    // align the first column; the gap is dead space (validated zero by
+    // nothing — it is never read)
+    let pad = align_up(out.pos) - out.pos;
+    out.write(&[0u8; 8][..pad as usize])?;
+
+    // -- column sections ----------------------------------------------
+    let mut index: Vec<(String, Vec<BlockIndex>)> =
+        Vec::with_capacity(dispatches.len());
+    let mut colbuf: Vec<u8> = Vec::new();
+    for d in dispatches {
+        let mut blocks = Vec::with_capacity(d.blocks.len());
+        for b in d.blocks.iter() {
+            let cols = b.raw_columns();
+            let mut e = BlockIndex {
+                n_records: cols.tags.len() as u32,
+                n_inst: cols.inst_class.len() as u32,
+                n_acc: cols.acc_kind.len() as u32,
+                n_addr: cols.addrs.len() as u32,
+                col_off: [0; COLUMNS],
+                col_sum: [0; COLUMNS],
+            };
+            // wire order: tags, group_ids, inst_class, inst_count,
+            // acc_kind, acc_bpl, acc_off, acc_len, addrs
+            for c in 0..COLUMNS {
+                colbuf.clear();
+                match c {
+                    0 => colbuf.extend(
+                        cols.tags.iter().map(|t| tag_to_u8(*t)),
+                    ),
+                    1 => push_u64s(&mut colbuf, cols.group_ids),
+                    2 => colbuf.extend(
+                        cols.inst_class
+                            .iter()
+                            .map(|x| class_to_u8(*x)),
+                    ),
+                    3 => push_u64s(&mut colbuf, cols.inst_count),
+                    4 => colbuf.extend(
+                        cols.acc_kind.iter().map(|k| kind_to_u8(*k)),
+                    ),
+                    5 => colbuf.extend_from_slice(cols.acc_bpl),
+                    6 => push_u32s(&mut colbuf, cols.acc_off),
+                    7 => colbuf.extend_from_slice(cols.acc_len),
+                    _ => push_u64s(&mut colbuf, cols.addrs),
+                }
+                let (off, sum) = out.column(&colbuf)?;
+                e.col_off[c] = off;
+                e.col_sum[c] = sum;
+            }
+            blocks.push(e);
+        }
+        index.push((d.kernel.clone(), blocks));
+    }
+
+    // -- index ---------------------------------------------------------
+    let index_off = out.pos;
+    let mut ibuf: Vec<u8> = Vec::new();
+    for (kernel, blocks) in &index {
+        anyhow::ensure!(
+            kernel.len() <= u16::MAX as usize,
+            "kernel name too long: {kernel}"
+        );
+        ibuf.extend_from_slice(
+            &(kernel.len() as u16).to_le_bytes(),
+        );
+        ibuf.extend_from_slice(kernel.as_bytes());
+        ibuf.extend_from_slice(
+            &(blocks.len() as u32).to_le_bytes(),
+        );
+        for b in blocks {
+            ibuf.extend_from_slice(&b.n_records.to_le_bytes());
+            ibuf.extend_from_slice(&b.n_inst.to_le_bytes());
+            ibuf.extend_from_slice(&b.n_acc.to_le_bytes());
+            ibuf.extend_from_slice(&b.n_addr.to_le_bytes());
+            for c in 0..COLUMNS {
+                ibuf.extend_from_slice(&b.col_off[c].to_le_bytes());
+            }
+            for c in 0..COLUMNS {
+                ibuf.extend_from_slice(&b.col_sum[c].to_le_bytes());
+            }
+        }
+    }
+    let isum = super::format::fnv1a(&ibuf);
+    ibuf.extend_from_slice(&isum.to_le_bytes());
+    let index_len = ibuf.len() as u64;
+    out.write(&ibuf)?;
+
+    // -- patched header ------------------------------------------------
+    let mut h = Vec::with_capacity(HEADER_LEN);
+    h.extend_from_slice(&MAGIC);
+    h.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    h.extend_from_slice(&ENDIAN_TAG.to_le_bytes());
+    h.extend_from_slice(&meta.base_group_size.to_le_bytes());
+    h.extend_from_slice(
+        &(dispatches.len() as u32).to_le_bytes(),
+    );
+    h.extend_from_slice(&key.to_le_bytes());
+    h.extend_from_slice(&meta_len.to_le_bytes());
+    h.extend_from_slice(&index_off.to_le_bytes());
+    h.extend_from_slice(&index_len.to_le_bytes());
+    debug_assert_eq!(h.len(), HEADER_LEN - 8);
+    let hsum = super::format::fnv1a(&h);
+    h.extend_from_slice(&hsum.to_le_bytes());
+
+    out.w.flush()?;
+    let mut file = out.w.into_inner().map_err(|e| {
+        anyhow::anyhow!("flush {}: {e}", tmp_path.display())
+    })?;
+    file.seek(SeekFrom::Start(0))?;
+    file.write_all(&h)?;
+    // durability before the rename publishes the file
+    file.sync_all()?;
+    Ok(())
+}
+
+fn push_u64s(dst: &mut Vec<u8>, vals: &[u64]) {
+    dst.reserve(vals.len() * 8);
+    for v in vals {
+        dst.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn push_u32s(dst: &mut Vec<u8>, vals: &[u32]) {
+    dst.reserve(vals.len() * 4);
+    for v in vals {
+        dst.extend_from_slice(&v.to_le_bytes());
+    }
+}

@@ -23,6 +23,13 @@
 //! (any `TraceSource` can fill blocks unchanged), and
 //! [`EventBlock::replay_into`] adapts blocks back onto any legacy sink —
 //! the compatibility bridge in the other direction.
+//!
+//! [`BlockData`] abstracts *where* a block's columns live: the owned
+//! [`EventBlock`] and the archive's memory-mapped
+//! [`crate::trace::archive::MappedBlock`] expose the same record-level
+//! view, so every replay engine (and [`split half-group
+//! derivation`](crate::trace::recorded::split_half_groups)) runs
+//! unchanged — and zero-copy — over either storage.
 
 use super::event::{GroupCtx, LdsAccess, MemAccess, MemKind};
 use super::sink::EventSink;
@@ -207,28 +214,92 @@ impl EventBlock {
         );
     }
 
-    /// Raw tape tags — for consumers that filter records before paying
-    /// the payload decode (each `Tag::Mem`/`Tag::Lds` entry consumes
-    /// one access-stream index, in tape order).
-    pub(crate) fn tags(&self) -> &[Tag] {
-        &self.tags
+    /// Iterate the records in issue order.
+    pub fn records(&self) -> BlockIter<'_, EventBlock> {
+        BlockData::records(self)
     }
 
-    /// Raw per-record group ids, parallel to [`EventBlock::tags`].
-    pub(crate) fn group_ids(&self) -> &[u64] {
-        &self.group_ids
+    /// Compatibility adapter: replay this block into a classic
+    /// [`EventSink`], reproducing the original event stream (with
+    /// active-lane compaction, which no sink can distinguish).
+    pub fn replay_into(&self, sink: &mut dyn EventSink) {
+        BlockData::replay_into(self, sink)
     }
 
-    /// Decode access-stream entry `i` (the i-th Mem/Lds record on the
-    /// tape): `(kind, bytes_per_lane, active-lane addresses)`.
-    pub(crate) fn access(&self, i: usize) -> (MemKind, u8, &[u64]) {
-        let off = self.acc_off[i] as usize;
-        let len = self.acc_len[i] as usize;
-        (self.acc_kind[i], self.acc_bpl[i], &self.addrs[off..off + len])
+    /// Raw SoA columns in wire order — the archive writer's view (see
+    /// `docs/trace-format.md`): tags, group_ids, inst_class, inst_count,
+    /// acc_kind, acc_bpl, acc_off, acc_len, addrs.
+    pub(crate) fn raw_columns(&self) -> RawColumns<'_> {
+        RawColumns {
+            tags: &self.tags,
+            group_ids: &self.group_ids,
+            inst_class: &self.inst_class,
+            inst_count: &self.inst_count,
+            acc_kind: &self.acc_kind,
+            acc_bpl: &self.acc_bpl,
+            acc_off: &self.acc_off,
+            acc_len: &self.acc_len,
+            addrs: &self.addrs,
+        }
     }
+}
+
+/// Borrowed view of an [`EventBlock`]'s nine SoA columns, in the
+/// on-disk section order of the trace archive.
+pub(crate) struct RawColumns<'a> {
+    pub tags: &'a [Tag],
+    pub group_ids: &'a [u64],
+    pub inst_class: &'a [InstClass],
+    pub inst_count: &'a [u64],
+    pub acc_kind: &'a [MemKind],
+    pub acc_bpl: &'a [u8],
+    pub acc_off: &'a [u32],
+    pub acc_len: &'a [u8],
+    pub addrs: &'a [u64],
+}
+
+/// Storage-independent read access to one SoA block.
+///
+/// Implemented by the owned [`EventBlock`] and by the trace archive's
+/// memory-mapped [`crate::trace::archive::MappedBlock`]; the replay
+/// engines ([`crate::memsim::ShardedHierarchy`], the sequential
+/// session path) are generic over this trait, so a recording replays
+/// identically whether its columns live on the heap or in a mapped
+/// file.
+///
+/// Index-based accessors (rather than column slices) keep the trait
+/// implementable without exposing storage details; all are O(1) and
+/// expected to inline in the generic engines.
+pub trait BlockData {
+    /// Number of records on the tape.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total address words stored (sizing aid for batch thresholds).
+    fn addr_words(&self) -> usize;
+
+    /// Tape entry `t`.
+    fn tag(&self, t: usize) -> Tag;
+
+    /// Issuing group of tape entry `t`.
+    fn group_id(&self, t: usize) -> u64;
+
+    /// Instruction-stream entry `i` (the i-th `Tag::Inst` record on the
+    /// tape): `(class, count)`.
+    fn inst(&self, i: usize) -> (InstClass, u64);
+
+    /// Access-stream entry `i` (the i-th `Tag::Mem`/`Tag::Lds` record
+    /// on the tape): `(kind, bytes_per_lane, active-lane addresses)`.
+    fn access(&self, i: usize) -> (MemKind, u8, &[u64]);
 
     /// Iterate the records in issue order.
-    pub fn records(&self) -> BlockIter<'_> {
+    fn records(&self) -> BlockIter<'_, Self>
+    where
+        Self: Sized,
+    {
         BlockIter {
             block: self,
             tape: 0,
@@ -240,7 +311,10 @@ impl EventBlock {
     /// Compatibility adapter: replay this block into a classic
     /// [`EventSink`], reproducing the original event stream (with
     /// active-lane compaction, which no sink can distinguish).
-    pub fn replay_into(&self, sink: &mut dyn EventSink) {
+    fn replay_into(&self, sink: &mut dyn EventSink)
+    where
+        Self: Sized,
+    {
         for rec in self.records() {
             match rec {
                 BlockRecord::Inst {
@@ -275,50 +349,81 @@ impl EventBlock {
     }
 }
 
-/// Iterator over [`BlockRecord`]s (three cursors into the SoA streams).
-pub struct BlockIter<'a> {
-    block: &'a EventBlock,
+impl BlockData for EventBlock {
+    fn len(&self) -> usize {
+        self.tags.len()
+    }
+
+    fn addr_words(&self) -> usize {
+        self.addrs.len()
+    }
+
+    fn tag(&self, t: usize) -> Tag {
+        self.tags[t]
+    }
+
+    fn group_id(&self, t: usize) -> u64 {
+        self.group_ids[t]
+    }
+
+    fn inst(&self, i: usize) -> (InstClass, u64) {
+        (self.inst_class[i], self.inst_count[i])
+    }
+
+    fn access(&self, i: usize) -> (MemKind, u8, &[u64]) {
+        let off = self.acc_off[i] as usize;
+        let len = self.acc_len[i] as usize;
+        (self.acc_kind[i], self.acc_bpl[i], &self.addrs[off..off + len])
+    }
+}
+
+/// Iterator over [`BlockRecord`]s (three cursors into the SoA streams),
+/// generic over the block's storage.
+pub struct BlockIter<'a, B: BlockData> {
+    block: &'a B,
     tape: usize,
     inst: usize,
     acc: usize,
 }
 
-impl<'a> Iterator for BlockIter<'a> {
+impl<'a, B: BlockData> Iterator for BlockIter<'a, B> {
     type Item = BlockRecord<'a>;
 
     fn next(&mut self) -> Option<BlockRecord<'a>> {
         let b = self.block;
-        let tag = *b.tags.get(self.tape)?;
-        let group_id = b.group_ids[self.tape];
+        if self.tape >= b.len() {
+            return None;
+        }
+        let tag = b.tag(self.tape);
+        let group_id = b.group_id(self.tape);
         self.tape += 1;
         Some(match tag {
             Tag::Inst => {
                 let i = self.inst;
                 self.inst += 1;
+                let (class, count) = b.inst(i);
                 BlockRecord::Inst {
                     group_id,
-                    class: b.inst_class[i],
-                    count: b.inst_count[i],
+                    class,
+                    count,
                 }
             }
             Tag::Mem | Tag::Lds => {
                 let i = self.acc;
                 self.acc += 1;
-                let off = b.acc_off[i] as usize;
-                let len = b.acc_len[i] as usize;
-                let addrs = &b.addrs[off..off + len];
+                let (kind, bytes_per_lane, addrs) = b.access(i);
                 if tag == Tag::Mem {
                     BlockRecord::Mem {
                         group_id,
-                        kind: b.acc_kind[i],
-                        bytes_per_lane: b.acc_bpl[i],
+                        kind,
+                        bytes_per_lane,
                         addrs,
                     }
                 } else {
                     BlockRecord::Lds {
                         group_id,
-                        kind: b.acc_kind[i],
-                        bytes_per_lane: b.acc_bpl[i],
+                        kind,
+                        bytes_per_lane,
                         addrs,
                     }
                 }

@@ -27,9 +27,18 @@
 //!   [`sink::ScaleInstSink`] / [`stats::TraceStats::on_record_scaled`]
 //!   apply a target's ISA expansion at replay time.
 //!
+//! * **archived** — [`archive`] persists recordings: a versioned
+//!   on-disk layout of the same SoA columns (aligned, checksummed
+//!   sections; `docs/trace-format.md`), written atomically and
+//!   memory-mapped back as [`archive::MappedBlock`]s that replay
+//!   zero-copy through the engines via [`block::BlockData`] — the
+//!   storage-independence trait both block forms implement. One
+//!   archive is shared by every shard process and across CI runs.
+//!
 //! Blocks hold at most [`block::BLOCK_CAPACITY`] records, so
 //! multi-million-event workloads still replay in bounded memory.
 
+pub mod archive;
 pub mod block;
 pub mod event;
 pub mod recorded;
@@ -38,7 +47,8 @@ pub mod stats;
 pub mod synth;
 
 pub use block::{
-    BlockBuilder, BlockRecord, BlockRecorder, BlockSink, EventBlock,
+    BlockBuilder, BlockData, BlockRecord, BlockRecorder, BlockSink,
+    EventBlock,
 };
 pub use event::{GroupCtx, LdsAccess, MemAccess, MemKind, MAX_LANES};
 pub use recorded::{split_half_groups, RecordedDispatch};

@@ -27,7 +27,9 @@
 
 use std::sync::Arc;
 
-use super::block::{BlockRecord, BlockRecorder, EventBlock, BLOCK_CAPACITY};
+use super::block::{
+    BlockData, BlockRecord, BlockRecorder, EventBlock, BLOCK_CAPACITY,
+};
 use super::event::{GroupCtx, LdsAccess, MemAccess};
 use super::TraceSource;
 
@@ -59,9 +61,11 @@ impl RecordedDispatch {
 /// sub-group (complete record sequence each, instruction records
 /// duplicated — per-group costs are issued per group at any width),
 /// with dense renumbered group ids. See the module docs for the
-/// preconditions.
-pub fn split_half_groups(
-    blocks: &[EventBlock],
+/// preconditions. Generic over the recording's storage
+/// ([`BlockData`]): heap blocks and memory-mapped archive blocks both
+/// derive the identical owned half-width stream.
+pub fn split_half_groups<B: BlockData>(
+    blocks: &[B],
     half: u32,
 ) -> Vec<EventBlock> {
     let half = half as usize;

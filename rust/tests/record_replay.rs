@@ -74,8 +74,8 @@ fn sweep_records_each_case_exactly_once() {
     for spec in presets::all_gpus() {
         for cfg in &cases {
             let trace = store.get_or_record(cfg);
-            let run =
-                CaseRun::from_recording(spec.clone(), &trace, 2);
+            assert!(!trace.is_mapped(), "no disk tier configured");
+            let run = CaseRun::from_stored(spec.clone(), &trace, 2);
             assert_eq!(
                 run.session.dispatches.len(),
                 (cfg.steps * 5) as usize,
@@ -100,7 +100,7 @@ fn sequential_engine_replays_recordings_identically() {
         for d in trace.dispatches_for(spec.group_size).iter() {
             seq.profile_blocks_scaled(
                 &d.kernel,
-                &d.blocks,
+                &d.blocks[..],
                 spec.isa_expansion,
             );
         }

@@ -1,0 +1,350 @@
+//! Persistent trace archive: spill → mmap → replay must be
+//! bit-identical to the in-memory record/replay path on every GPU
+//! preset; a pre-populated archive must drive a sweep with **zero**
+//! live recordings; and every corruption mode (truncation, flipped
+//! bytes, version/endianness mismatch) must surface as a clean
+//! `anyhow` error — never a panic, never silently wrong counters.
+
+use std::path::{Path, PathBuf};
+
+use rocline::arch::presets;
+use rocline::coordinator::{CaseRun, CaseTrace, StoredTrace, TraceStore};
+use rocline::pic::CaseConfig;
+use rocline::trace::archive::{ArchiveInfo, MappedCaseTrace};
+
+fn tiny_case(name: &str, steps: u32) -> CaseConfig {
+    let mut cfg = CaseConfig::lwfa();
+    cfg.name = name.to_string();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.nz = 8;
+    cfg.ppc = 2;
+    cfg.steps = steps;
+    cfg
+}
+
+/// Per-test scratch directory (tests run concurrently in one binary).
+struct TmpDir(PathBuf);
+
+impl TmpDir {
+    fn new(tag: &str) -> TmpDir {
+        let p = std::env::temp_dir().join(format!(
+            "rocline-archive-test-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        TmpDir(p)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn assert_runs_identical(a: &CaseRun, b: &CaseRun, what: &str) {
+    assert_eq!(
+        a.session.dispatches.len(),
+        b.session.dispatches.len(),
+        "{what}"
+    );
+    for (x, y) in a
+        .session
+        .dispatches
+        .iter()
+        .zip(b.session.dispatches.iter())
+    {
+        assert_eq!(x.kernel, y.kernel, "{what}");
+        assert_eq!(x.stats, y.stats, "{what} {}", x.kernel);
+        assert_eq!(x.traffic, y.traffic, "{what} {}", x.kernel);
+        assert_eq!(x.duration_s, y.duration_s, "{what} {}", x.kernel);
+    }
+    assert_eq!(a.final_field_energy, b.final_field_energy, "{what}");
+    assert_eq!(
+        a.final_kinetic_energy, b.final_kinetic_energy,
+        "{what}"
+    );
+}
+
+#[test]
+fn mmap_replay_is_bit_identical_to_live_and_in_memory_replay() {
+    let dir = TmpDir::new("roundtrip");
+    let cfg = tiny_case("tiny-arch", 2);
+    let trace = CaseTrace::record(&cfg);
+    let path = trace.spill_to(dir.path()).unwrap();
+    assert_eq!(path, CaseTrace::archive_path(dir.path(), &cfg));
+    let mapped = MappedCaseTrace::open(&path).unwrap();
+    assert_eq!(mapped.dispatch_count(), trace.dispatch_count());
+    assert_eq!(mapped.base_group_size(), 64);
+
+    for spec in presets::all_gpus() {
+        let live =
+            CaseRun::execute_with_threads(spec.clone(), cfg.clone(), 4);
+        let mem = CaseRun::from_recording(spec.clone(), &trace, 4);
+        let disk = CaseRun::from_mapped(
+            spec.clone(),
+            cfg.clone(),
+            &mapped,
+            4,
+        );
+        assert_runs_identical(&live, &disk, &spec.name);
+        assert_runs_identical(&mem, &disk, &spec.name);
+    }
+}
+
+#[test]
+fn round_trip_property_over_config_variants() {
+    // record → spill → mmap → counters equal the in-memory replay,
+    // across geometry/population/step variations (partial groups,
+    // multi-block dispatches, both warp and wavefront widths)
+    let dir = TmpDir::new("property");
+    let variants = [
+        ("tiny-p1", 6, 6, 10, 1, 1u32),
+        ("tiny-p2", 8, 8, 8, 2, 2),
+        ("tiny-p3", 12, 4, 4, 3, 1),
+        ("tiny-p4", 5, 5, 5, 1, 3),
+    ];
+    for (name, nx, ny, nz, ppc, steps) in variants {
+        let mut cfg = CaseConfig::lwfa();
+        cfg.name = name.to_string();
+        cfg.nx = nx;
+        cfg.ny = ny;
+        cfg.nz = nz;
+        cfg.ppc = ppc;
+        cfg.steps = steps;
+        let trace = CaseTrace::record(&cfg);
+        let path = trace.spill_to(dir.path()).unwrap();
+        let mapped = MappedCaseTrace::open(&path).unwrap();
+        for spec in [presets::mi100(), presets::v100()] {
+            let mem =
+                CaseRun::from_recording(spec.clone(), &trace, 2);
+            let disk = CaseRun::from_mapped(
+                spec.clone(),
+                cfg.clone(),
+                &mapped,
+                2,
+            );
+            assert_runs_identical(
+                &mem,
+                &disk,
+                &format!("{name} on {}", spec.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn prepopulated_archive_sweeps_with_zero_live_recordings() {
+    let dir = TmpDir::new("store");
+    let cases = [tiny_case("tiny-sa", 2), tiny_case("tiny-sb", 1)];
+
+    // first process: misses record live and spill
+    let store1 =
+        TraceStore::with_dir(Some(dir.path().to_path_buf()));
+    for cfg in &cases {
+        let t = store1.get_or_record(cfg);
+        assert!(!t.is_mapped(), "first resolution records live");
+    }
+    assert_eq!(store1.recordings(), cases.len());
+    assert_eq!(store1.spills(), cases.len());
+    assert_eq!(store1.archive_hits(), 0);
+
+    // "another shard process": every case is an archive hit, the
+    // whole (GPU, case) sweep replays with zero live recordings and
+    // counters identical to the in-memory tier
+    let store2 =
+        TraceStore::with_dir(Some(dir.path().to_path_buf()));
+    for cfg in &cases {
+        let mem = store1.get_or_record(cfg);
+        let mapped = store2.get_or_record(cfg);
+        assert!(mapped.is_mapped(), "pre-populated archive must hit");
+        assert!(matches!(&mapped, StoredTrace::Mapped { .. }));
+        for spec in presets::all_gpus() {
+            let a = CaseRun::from_stored(spec.clone(), &mem, 2);
+            let b = CaseRun::from_stored(spec.clone(), &mapped, 2);
+            assert_runs_identical(
+                &a,
+                &b,
+                &format!("{} {}", spec.name, cfg.name),
+            );
+        }
+    }
+    assert_eq!(
+        store2.recordings(),
+        0,
+        "sweep against a pre-populated archive must not record"
+    );
+    assert_eq!(store2.archive_hits(), cases.len());
+    assert_eq!(store2.spills(), 0);
+}
+
+#[test]
+fn spill_is_idempotent_and_atomic_rewrite() {
+    let dir = TmpDir::new("idempotent");
+    let cfg = tiny_case("tiny-idem", 1);
+    let trace = CaseTrace::record(&cfg);
+    let p1 = trace.spill_to(dir.path()).unwrap();
+    let first = std::fs::read(&p1).unwrap();
+    let p2 = trace.spill_to(dir.path()).unwrap();
+    assert_eq!(p1, p2);
+    assert_eq!(
+        first,
+        std::fs::read(&p2).unwrap(),
+        "re-spilling must rewrite an identical file"
+    );
+    // no temp litter left behind
+    let stray: Vec<_> = std::fs::read_dir(dir.path())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            e.file_name().to_string_lossy().contains(".tmp.")
+        })
+        .collect();
+    assert!(stray.is_empty(), "{stray:?}");
+}
+
+#[test]
+fn trace_info_scan_matches_archive_contents() {
+    let dir = TmpDir::new("info");
+    let cfg = tiny_case("tiny-info", 2);
+    let trace = CaseTrace::record(&cfg);
+    let path = trace.spill_to(dir.path()).unwrap();
+
+    let infos = ArchiveInfo::scan_dir(dir.path()).unwrap();
+    assert_eq!(infos.len(), 1);
+    let info = &infos[0];
+    assert_eq!(info.case_name(), "tiny-info");
+    assert_eq!(info.dispatches, trace.dispatch_count());
+    assert_eq!(info.base_group_size, 64);
+    assert_eq!(
+        info.file_bytes,
+        std::fs::metadata(&path).unwrap().len()
+    );
+
+    // index-only totals agree with the fully validated mapping
+    let mapped = MappedCaseTrace::open(&path).unwrap();
+    let (mut blocks, mut records, mut words) = (0u64, 0u64, 0u64);
+    for d in mapped.dispatches() {
+        blocks += d.blocks.len() as u64;
+        for b in &d.blocks {
+            use rocline::trace::BlockData;
+            records += b.len() as u64;
+            words += b.addr_words() as u64;
+        }
+    }
+    assert_eq!(info.blocks, blocks);
+    assert_eq!(info.records, records);
+    assert_eq!(info.addr_words, words);
+    assert!(info.records > 0 && info.addr_words > 0);
+    assert_eq!(info.case_key, mapped.case_key());
+}
+
+// ------------------------------------------------------- corruption
+
+fn spilled_archive(dir: &TmpDir, name: &str) -> PathBuf {
+    let cfg = tiny_case(name, 1);
+    CaseTrace::record(&cfg).spill_to(dir.path()).unwrap()
+}
+
+#[test]
+fn truncated_archives_error_cleanly() {
+    let dir = TmpDir::new("truncate");
+    let path = spilled_archive(&dir, "tiny-tr");
+    let full = std::fs::read(&path).unwrap();
+
+    // shorter than the header
+    std::fs::write(&path, &full[..40]).unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("header"), "{err}");
+
+    // index cut off (file shorter than the header's section table)
+    std::fs::write(&path, &full[..full.len() - 9]).unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("out of bounds"), "{err}");
+
+    // scan (trace-info path) must fail cleanly too
+    let err = ArchiveInfo::scan(&path).unwrap_err().to_string();
+    assert!(err.contains("out of bounds"), "{err}");
+
+    // empty file
+    std::fs::write(&path, b"").unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("empty"), "{err}");
+}
+
+#[test]
+fn flipped_column_byte_fails_the_section_checksum() {
+    let dir = TmpDir::new("flip");
+    let path = spilled_archive(&dir, "tiny-fl");
+    let mut bytes = std::fs::read(&path).unwrap();
+
+    // first column section starts 8-aligned right after the meta
+    // section (header fixed at 64 bytes, meta_len at header offset 32)
+    let meta_len = u64::from_le_bytes(
+        bytes[32..40].try_into().unwrap(),
+    ) as usize;
+    let col0 = (64 + meta_len).div_ceil(8) * 8;
+    bytes[col0] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    // a flip deep inside the address arena (last data byte before the
+    // index) is caught the same way
+    bytes[col0] ^= 0xFF; // restore
+    let index_off = u64::from_le_bytes(
+        bytes[40..48].try_into().unwrap(),
+    ) as usize;
+    bytes[index_off - 1] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+}
+
+#[test]
+fn version_and_endianness_mismatches_are_explicit() {
+    let dir = TmpDir::new("version");
+    let path = spilled_archive(&dir, "tiny-ver");
+    let good = std::fs::read(&path).unwrap();
+
+    // future format version
+    let mut bytes = good.clone();
+    bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("version 99"), "{err}");
+
+    // byte-swapped endianness tag
+    let mut bytes = good.clone();
+    bytes[12..16].copy_from_slice(&[0x01, 0x02, 0x03, 0x04]);
+    std::fs::write(&path, &bytes).unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("endianness"), "{err}");
+
+    // not an archive at all
+    let mut bytes = good;
+    bytes[0] = b'X';
+    std::fs::write(&path, &bytes).unwrap();
+    let err = MappedCaseTrace::open(&path).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // a corrupt file in the store's dir degrades to a live re-record
+    // (warn + spill) instead of failing the sweep
+    let cfg = tiny_case("tiny-ver", 1);
+    let store =
+        TraceStore::with_dir(Some(dir.path().to_path_buf()));
+    let stored = store.get_or_record(&cfg);
+    assert!(!stored.is_mapped());
+    assert_eq!(store.recordings(), 1);
+    assert_eq!(store.spills(), 1);
+    // and the re-spill healed the archive for the next store
+    let healed =
+        TraceStore::with_dir(Some(dir.path().to_path_buf()));
+    assert!(healed.get_or_record(&cfg).is_mapped());
+}
