@@ -5,7 +5,11 @@
 #   ci/run.sh                      # lint + build + test + fast bench + gate
 #   ci/run.sh --full               # benches at full sample counts
 #   ci/run.sh --update-baseline    # refresh ci/bench_baseline.json from
-#                                  # this machine's bench run (commit it)
+#                                  # this machine's bench run (commit it,
+#                                  # together with the dated snapshot the
+#                                  # gate appends to
+#                                  # ci/BENCH_trajectory.json — the perf
+#                                  # trajectory tracked across PRs)
 #   ci/run.sh --shard i/n          # additionally run shard i of n of the
 #                                  # paper sweep (reproduce --all --shard)
 #                                  # into out-shard-i-of-n/
@@ -32,9 +36,14 @@
 #     unsharded sweep byte-for-byte.
 #   * bench gate — `rocline bench-gate` compares the speedup/* ratios in
 #     BENCH_hotpath.json (sharded replay engine vs the sequential
-#     reference) against the checked-in ci/bench_baseline.json and
-#     fails on a >20% regression. Refresh the baseline on a quiet
-#     machine with `ci/run.sh --update-baseline` and commit the result.
+#     reference, plus the phase-isolation ratios: columnar scan vs
+#     per-record accessors, routed vs rescan L1, k-way merge vs sort)
+#     against the checked-in ci/bench_baseline.json and fails on a
+#     >20% regression. Refresh the baseline on a quiet machine with
+#     `ci/run.sh --update-baseline` and commit the result together
+#     with the dated ci/BENCH_trajectory.json entry it appends.
+#     BENCH_hotpath.json itself is uploaded as a per-run artifact by
+#     the workflow.
 #   * lint — `cargo fmt -- --check` and `cargo clippy -- -D warnings`.
 #     Both are skipped with a notice when the component is not
 #     installed (offline toolchains); set ROCLINE_LINT_STRICT=1 (the

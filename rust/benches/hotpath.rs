@@ -10,12 +10,14 @@ use std::path::Path;
 
 use rocline::arch::presets;
 use rocline::coordinator::{CaseRun, CaseTrace};
+use rocline::memsim::sharded::bench_hooks;
+use rocline::memsim::ShardedHierarchy;
 use rocline::pic::kernels::{ComputeCurrentTrace, MoveAndMarkTrace};
 use rocline::pic::{CaseConfig, PicSim};
 use rocline::profiler::ProfileSession;
 use rocline::roofline::{eq2_intensity_performance, eq4_achieved_gips};
 use rocline::trace::archive::MappedCaseTrace;
-use rocline::trace::block::BlockRecorder;
+use rocline::trace::block::{BlockData, BlockRecord, BlockRecorder, Tag};
 use rocline::trace::sink::NullSink;
 use rocline::trace::{TraceSource, TraceStats};
 use rocline::util::bench::{self, BenchResult, BenchRunner};
@@ -29,6 +31,54 @@ fn find_ops(results: &[BenchResult], name: &str) -> Option<f64> {
         .iter()
         .find(|r| r.name.ends_with(name))
         .map(|r| r.ops_per_sec())
+}
+
+/// The pre-columnar scan shape: fold a block into `stats` while
+/// re-deriving the column view for every field access, exactly like
+/// the removed per-record `BlockData` accessors did. `black_box`
+/// keeps the optimizer from hoisting the derivations back out — the
+/// whole point is to measure them per record.
+fn scan_accessor_style<B: BlockData>(b: &B, stats: &mut TraceStats) {
+    let n = BlockData::len(b);
+    let (mut inst, mut acc) = (0usize, 0usize);
+    for t in 0..n {
+        let tag = std::hint::black_box(b).columns().tags[t];
+        let group_id = std::hint::black_box(b).columns().group_ids[t];
+        let rec = match tag {
+            Tag::Inst => {
+                let c = std::hint::black_box(b).columns();
+                let i = inst;
+                inst += 1;
+                BlockRecord::Inst {
+                    group_id,
+                    class: c.inst_class[i],
+                    count: c.inst_count[i],
+                }
+            }
+            Tag::Mem | Tag::Lds => {
+                let c = std::hint::black_box(b).columns();
+                let i = acc;
+                acc += 1;
+                let (kind, bytes_per_lane, addrs) = c.access(i);
+                if tag == Tag::Mem {
+                    BlockRecord::Mem {
+                        group_id,
+                        kind,
+                        bytes_per_lane,
+                        addrs,
+                    }
+                } else {
+                    BlockRecord::Lds {
+                        group_id,
+                        kind,
+                        bytes_per_lane,
+                        addrs,
+                    }
+                }
+            }
+        };
+        stats.on_record_scaled(&rec, 1.0);
+    }
 }
 
 fn main() {
@@ -160,6 +210,49 @@ fn main() {
                 .dispatch_count()
         });
         let mapped = MappedCaseTrace::open(&path).expect("open");
+
+        // columnar zero-rescan scan: the hoisted column view vs an
+        // accessor-style scan that re-derives the view per record —
+        // exactly the cost the pre-columnar MappedBlock BlockData
+        // accessors paid (Arc deref + storage-enum match per call)
+        {
+            let total: u64 = mapped
+                .dispatches()
+                .iter()
+                .flat_map(|d| d.blocks.iter())
+                .map(|b| BlockData::len(b) as u64)
+                .sum();
+            r.bench_throughput(
+                "trace/columnar_scan_hoisted",
+                total,
+                || {
+                    let mut stats = TraceStats::default();
+                    for d in mapped.dispatches() {
+                        for b in &d.blocks {
+                            stats.fold_columns_scaled(
+                                &b.columns(),
+                                1.0,
+                            );
+                        }
+                    }
+                    stats.groups
+                },
+            );
+            r.bench_throughput(
+                "trace/columnar_scan_accessor",
+                total,
+                || {
+                    let mut stats = TraceStats::default();
+                    for d in mapped.dispatches() {
+                        for b in &d.blocks {
+                            scan_accessor_style(b, &mut stats);
+                        }
+                    }
+                    stats.groups
+                },
+            );
+        }
+
         let spec = presets::mi100();
         r.bench_throughput("archive/replay_mem_MI100", arch_items, || {
             CaseRun::from_recording(spec.clone(), &trace, 4)
@@ -182,6 +275,48 @@ fn main() {
         );
         drop(mapped);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // replay-engine phase isolation: (a) the one-pass routing phase
+    // vs the S-redundant rescan baseline (same engine otherwise —
+    // columns hoisted in both, so the ratio isolates routing), and
+    // (b) the channel phase's k-way merge vs the concat+sort lane it
+    // replaced (synthetic seq-sorted streams shaped like a real L1
+    // phase's output)
+    {
+        let spec = presets::mi100();
+        let sim = PicSim::new(&cfg, 1);
+        let push = MoveAndMarkTrace::new(&sim.state, &spec);
+        let push_rec = record(&push, spec.group_size);
+        let shards = 8;
+        let mut routed =
+            ShardedHierarchy::with_shards(&spec, shards);
+        r.bench_throughput("memsim/l1_routed", particles, || {
+            routed.consume_blocks(&push_rec.blocks);
+            routed.flush();
+            routed.take_stats().groups
+        });
+        let mut rescan =
+            ShardedHierarchy::with_shards_rescan(&spec, shards);
+        r.bench_throughput("memsim/l1_rescan", particles, || {
+            rescan.consume_blocks(&push_rec.blocks);
+            rescan.flush();
+            rescan.take_stats().groups
+        });
+
+        let merge_items = 1u64 << 18;
+        let m = bench_hooks::synth_misses(
+            shards,
+            16,
+            merge_items as usize,
+            7,
+        );
+        r.bench_throughput("memsim/l2_merge_kway", merge_items, || {
+            bench_hooks::merge_kway(&m)
+        });
+        r.bench_throughput("memsim/l2_merge_sort", merge_items, || {
+            bench_hooks::merge_sort(&m)
+        });
     }
 
     // the paper's equations (should be ~ns; regression guard)
@@ -229,6 +364,24 @@ fn main() {
             "speedup/replay_mmap_vs_mem",
             "archive/replay_mmap_MI100",
             "archive/replay_mem_MI100",
+        ),
+        // columnar zero-rescan hot path: each ratio isolates one of
+        // the three phase rewrites (hoisted column views, one-pass
+        // shard routing, k-way merged channel streams)
+        (
+            "speedup/columnar_scan",
+            "trace/columnar_scan_hoisted",
+            "trace/columnar_scan_accessor",
+        ),
+        (
+            "speedup/routed_l1",
+            "memsim/l1_routed",
+            "memsim/l1_rescan",
+        ),
+        (
+            "speedup/merge_vs_sort",
+            "memsim/l2_merge_kway",
+            "memsim/l2_merge_sort",
         ),
     ];
     for (name, fast, base) in pairs {

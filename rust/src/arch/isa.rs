@@ -12,32 +12,41 @@
 //! engine apply its own vendor's filter to the *same* underlying stream.
 
 /// Classes of instructions a kernel issues at group (warp/wavefront) level.
+///
+/// `repr(u8)` with explicit discriminants equal to the trace-archive
+/// wire encoding (the index into [`InstClass::ALL`], pinned by the
+/// format tests): a mapped class column whose bytes were
+/// code-validated at open is directly a `&[InstClass]` (see
+/// [`crate::trace::block::Columns`]). Reordering or extending this
+/// enum is therefore a format break — bump the archive
+/// `FORMAT_VERSION`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
 pub enum InstClass {
     /// Vector ALU arithmetic (fp32 add/mul/fma, int ops on VGPRs).
-    ValuArith,
+    ValuArith = 0,
     /// Vector transcendental/special (sqrt, rcp, cvt) — still VALU.
-    ValuSpecial,
+    ValuSpecial = 1,
     /// Scalar ALU (AMD SALU; on NVIDIA these fold into the uniform path
     /// and still count toward `inst_executed`).
-    Salu,
+    Salu = 2,
     /// Global/device memory load (generates memory traffic).
-    GlobalLoad,
+    GlobalLoad = 3,
     /// Global/device memory store.
-    GlobalStore,
+    GlobalStore = 4,
     /// Atomic read-modify-write on global memory.
-    GlobalAtomic,
+    GlobalAtomic = 5,
     /// LDS / shared-memory load.
-    LdsLoad,
+    LdsLoad = 6,
     /// LDS / shared-memory store.
-    LdsStore,
+    LdsStore = 7,
     /// Branch / jump / loop control.
-    Branch,
+    Branch = 8,
     /// Barrier / waitcnt / sync.
-    Sync,
+    Sync = 9,
     /// Everything else (NOPs, s_endpgm, address-gen overhead not folded
     /// into VALU, …).
-    Misc,
+    Misc = 10,
 }
 
 impl InstClass {

@@ -21,15 +21,16 @@ pub struct Args {
 
 /// Options that take a value in space-separated form (`--key value`).
 /// `--key=value` works for these and for any future key alike.
-const VALUED: [&str; 17] = [
+const VALUED: [&str; 18] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
-    "trace-dir",
+    "trace-dir", "trajectory",
 ];
 
 /// Known boolean flags. Anything else with `--` and no `=` is an
 /// error, so typos and missing whitelist entries fail loudly.
-const FLAGS: [&str; 4] = ["all", "pjrt", "update-baseline", "print-key"];
+const FLAGS: [&str; 5] =
+    ["all", "pjrt", "update-baseline", "print-key", "prune"];
 
 impl Args {
     pub fn parse(argv: Vec<String>) -> anyhow::Result<Args> {
@@ -198,6 +199,25 @@ mod tests {
         assert_eq!(a.get("bench"), Some("B.json"));
         assert_eq!(a.get("baseline"), Some("ci/b.json"));
         assert_eq!(a.get("tolerance"), Some("0.25"));
+        assert!(a.flag("update-baseline"));
+    }
+
+    #[test]
+    fn prune_is_a_flag_and_keeps_case_positionals() {
+        let a = parse("trace-info traces --prune lwfa --steps 2");
+        assert!(a.flag("prune"));
+        assert_eq!(a.positional, vec!["traces", "lwfa"]);
+        assert_eq!(a.get("steps"), Some("2"));
+        let e = parse_err("trace-info traces --prune=1");
+        assert!(e.contains("flag and takes no value"), "{e}");
+    }
+
+    #[test]
+    fn trajectory_takes_a_value() {
+        let a = parse(
+            "bench-gate --update-baseline --trajectory t.json",
+        );
+        assert_eq!(a.get("trajectory"), Some("t.json"));
         assert!(a.flag("update-baseline"));
     }
 

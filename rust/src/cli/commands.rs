@@ -183,8 +183,14 @@ pub fn record(args: &Args) -> anyhow::Result<()> {
 
 /// Inspect a trace archive via its index only — no trace data is
 /// deserialized, so this is instant even on multi-GB archives.
+/// `--prune` first garbage-collects the directory: archive files
+/// whose content keys are not in the given case set (default: every
+/// known case at its configured steps, `--steps N` to match a
+/// `record --steps N` archive) are deleted — the GC long-lived CI
+/// caches need, since content addressing means dead keys can never
+/// hit again.
 pub fn trace_info(args: &Args) -> anyhow::Result<()> {
-    use crate::trace::archive::{ArchiveInfo, FORMAT_VERSION};
+    use crate::trace::archive::{gc, ArchiveInfo, FORMAT_VERSION};
 
     let target = args
         .positional
@@ -193,15 +199,74 @@ pub fn trace_info(args: &Args) -> anyhow::Result<()> {
         .or_else(|| args.get("dir"))
         .ok_or_else(|| {
             anyhow::anyhow!(
-                "usage: rocline trace-info <archive-dir-or-file>"
+                "usage: rocline trace-info <archive-dir-or-file> \
+                 [--prune [CASES...] [--steps N]]"
             )
         })?;
     let path = Path::new(target);
+    let pruned = if args.flag("prune") {
+        use crate::coordinator::CaseTrace;
+        anyhow::ensure!(
+            path.is_dir(),
+            "--prune needs an archive directory, got {target}"
+        );
+        let mut cases: Vec<CaseConfig> =
+            if args.positional.len() <= 1 {
+                vec![CaseConfig::lwfa(), CaseConfig::tweac()]
+            } else {
+                args.positional[1..]
+                    .iter()
+                    .map(|n| {
+                        CaseConfig::by_name(n).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown case '{n}' (lwfa|tweac)"
+                            )
+                        })
+                    })
+                    .collect::<anyhow::Result<_>>()?
+            };
+        if let Some(steps) = args.get("steps") {
+            let steps: u32 = steps.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--steps: '{steps}' is not an integer"
+                )
+            })?;
+            for c in &mut cases {
+                c.steps = steps;
+            }
+        }
+        let live: std::collections::HashSet<String> = cases
+            .iter()
+            .map(|c| {
+                CaseTrace::archive_path(Path::new(""), c)
+                    .file_name()
+                    .expect("archive paths always have file names")
+                    .to_string_lossy()
+                    .into_owned()
+            })
+            .collect();
+        let report = gc::prune_dir(path, &live)?;
+        for p in &report.deleted {
+            println!("pruned {}", p.display());
+        }
+        println!(
+            "prune: {} live archive(s) kept, {} dead key(s) deleted",
+            report.kept.len(),
+            report.deleted.len()
+        );
+        true
+    } else {
+        false
+    };
     let infos = if path.is_dir() {
         ArchiveInfo::scan_dir(path)?
     } else {
         vec![ArchiveInfo::scan(path)?]
     };
+    if pruned && infos.is_empty() {
+        println!("0 archives remain in {target}");
+        return Ok(());
+    }
     anyhow::ensure!(
         !infos.is_empty(),
         "no .rtrc archives in {target}"
@@ -288,6 +353,35 @@ pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
         std::fs::write(baseline_path, bench::flat_json(&current))?;
         println!(
             "wrote {baseline_path} ({} speedup entr{})",
+            current.len(),
+            if current.len() == 1 { "y" } else { "ies" }
+        );
+        // every baseline refresh also appends a dated snapshot to the
+        // committed trajectory file, so the perf history of the
+        // speedup ratios is tracked across PRs instead of being
+        // overwritten by each baseline update
+        let traj_path =
+            args.get_or("trajectory", "ci/BENCH_trajectory.json");
+        // only a *missing* trajectory starts empty; any other read
+        // failure must not silently wipe the accumulated history
+        let existing = match std::fs::read_to_string(traj_path) {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                String::new()
+            }
+            Err(e) => {
+                return Err(anyhow::anyhow!(
+                    "read {traj_path}: {e}"
+                ))
+            }
+        };
+        let date = bench::utc_today();
+        let updated =
+            bench::trajectory_with(&existing, &date, &current)?;
+        std::fs::write(traj_path, updated)?;
+        println!(
+            "appended {} dated speedup entr{} to {traj_path} \
+             ({date})",
             current.len(),
             if current.len() == 1 { "y" } else { "ies" }
         );

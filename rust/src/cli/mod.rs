@@ -4,7 +4,7 @@
 //! rocline reproduce [--out DIR] [--shard i/n] [--trace-dir D]
 //!                   [--pjrt] [IDS...|--all]
 //! rocline record [--out DIR] [--steps N] [--print-key] [CASES...]
-//! rocline trace-info <DIR|FILE>
+//! rocline trace-info <DIR|FILE> [--prune [CASES...] [--steps N]]
 //! rocline profile --gpu G --case C [--tool rocprof|nvprof] [--csv F]
 //! rocline roofline --gpu G --case C [--svg F]
 //! rocline babelstream [--backend host|sim|pjrt] [--gpu G] [--n N]
@@ -12,7 +12,7 @@
 //! rocline pic --case C [--steps N] [--pjrt]
 //! rocline artifacts [--dir D]
 //! rocline bench-gate [--bench F] [--baseline F] [--tolerance T]
-//!                    [--update-baseline]
+//!                    [--update-baseline] [--trajectory F]
 //! ```
 //!
 //! All options also accept `--key=value` form.
@@ -72,6 +72,11 @@ COMMANDS:
   trace-info   print an archive's contents (cases, dispatches, blocks,
                records, address words, bytes, format version) from its
                index alone — no trace data deserialized
+               --prune first deletes archive files whose content keys
+               are not in the given case set (default: all known
+               cases; --steps N to match a record --steps N archive) —
+               the GC for long-lived CI caches, where dead keys can
+               never hit again
   profile      profile a PIC case on a simulated GPU
                options: --gpu v100|mi60|mi100  --case lwfa|tweac
                         --tool rocprof|nvprof  --csv FILE  --steps N
@@ -87,6 +92,9 @@ COMMANDS:
   bench-gate   compare BENCH_hotpath.json speedup/* ratios against the
                checked-in baseline (ci/bench_baseline.json); fails on
                >20% regression. options: --bench F --baseline F
-               --tolerance T (default 0.2) --update-baseline
+               --tolerance T (default 0.2) --update-baseline (also
+               appends a dated snapshot to the committed perf
+               trajectory, --trajectory F, default
+               ci/BENCH_trajectory.json)
   help         this text
 ";

@@ -18,16 +18,19 @@
 //!   `channels` field of [`crate::arch::CacheSpec`] — 32 slices on
 //!   Volta/CDNA, 16 on Vega, matching the physical interleave);
 //! * [`sharded::ShardedHierarchy`] — the production engine: consumes
-//!   chunked SoA [`crate::trace::EventBlock`]s, processes the L1s in
-//!   parallel shards that emit sequence-tagged per-channel miss
-//!   streams, then replays each L2 slice in parallel with
-//!   deterministic per-slice ordering (sort by sequence key ⇒ the
-//!   sequential arrival order). Both phases run on the persistent
-//!   worker pool ([`crate::util::pool::WorkerPool::global`]) and are
-//!   double-buffered: batch N's channel phase retires asynchronously
-//!   while batch N+1's L1 phase runs. See `sharded.rs` for the full
-//!   ordering argument; `tests/engine_equiv.rs` asserts equality on
-//!   every preset and access-pattern mix.
+//!   chunked SoA [`crate::trace::EventBlock`]s through a three-phase
+//!   columnar pipeline — a one-pass routing phase that partitions the
+//!   batch tape into per-shard runs, parallel L1 shards that emit
+//!   sequence-tagged per-channel miss streams, and per-slice L2
+//!   replay that k-way merges the seq-sorted shard streams
+//!   (deterministic per-slice ordering ⇒ the sequential arrival
+//!   order). All phases run on the persistent worker pool
+//!   ([`crate::util::pool::WorkerPool::global`]) and the L1/L2 phases
+//!   are double-buffered: batch N's channel phase retires
+//!   asynchronously while batch N+1's L1 phase runs. See `sharded.rs`
+//!   and `docs/engine.md` for the full ordering argument;
+//!   `tests/engine_equiv.rs` asserts equality on every preset and
+//!   access-pattern mix.
 
 pub mod banks;
 pub mod cache;

@@ -7,23 +7,34 @@
 //! [`ShardedHierarchy::consume_blocks`]) and produces counters
 //! **bit-identical** to the sequential [`super::MemHierarchy`] — the
 //! equivalence the `engine_equiv` integration suite proves on every
-//! preset. Batches are processed in two parallel phases:
+//! preset. Batches are processed in three parallel phases, each
+//! scanning hoisted column views ([`BlockData::columns`]) rather than
+//! per-record storage accessors (see `docs/engine.md`):
 //!
+//! 0. **Routing phase** — one pool-parallel pass over the batch tape
+//!    (chunked by block) appends every access record to its owning
+//!    shard's run, with the block-local access-stream index and the
+//!    record half of the sequence key precomputed. Phase-1 work is
+//!    then O(records + owned) in total, where the pre-routing engine
+//!    had every one of the S shards rescan the whole tape and filter
+//!    on `(tag, group_id)` — O(S·records).
 //! 1. **L1 phase** — every shard owns a contiguous range of the L1
-//!    instances (plus their coalescer and scratch) and walks the whole
-//!    batch, handling exactly the records whose issuing group maps to
-//!    one of its L1s (`group_id % instances`). L1 behaviour is
-//!    trivially identical to the sequential engine because each L1
-//!    instance still observes its own access subsequence in trace
-//!    order. The shard tags every L2-bound transaction with a
-//!    *sequence key* — `record_index << 16 | emission_index` — and
-//!    appends it to a per-channel miss stream (`line % channels`).
-//!    A separate job folds the same batch into [`TraceStats`]
-//!    (applying the replay's ISA-expansion factor, if any).
-//! 2. **L2 phase** — every channel merges the shards' miss streams for
-//!    its slice and sorts by sequence key, which reconstructs exactly
-//!    the order in which the sequential engine would have delivered
-//!    those transactions to that slice (emission order is total per
+//!    instances (plus their coalescer and scratch) and processes
+//!    exactly its routed run, in tape order (`group_id % instances`
+//!    picks the L1). L1 behaviour is trivially identical to the
+//!    sequential engine because each L1 instance still observes its
+//!    own access subsequence in trace order. The shard tags every
+//!    L2-bound transaction with a *sequence key* — `record_index <<
+//!    16 | emission_index`, the 48/16 split — and appends it to a
+//!    per-channel miss stream (`line % channels`). A separate job
+//!    folds the same batch's columns into [`TraceStats`] (applying
+//!    the replay's ISA-expansion factor, if any).
+//! 2. **L2 phase** — each shard's per-channel miss stream is already
+//!    seq-sorted (records in tape order, emissions in order within a
+//!    record), so every channel **k-way merges** the S sorted streams
+//!    for its slice — no concatenation, no sort — which visits the
+//!    transactions in exactly the order the sequential engine would
+//!    have delivered them to that slice (emission order is total per
 //!    record, and records are totally ordered). Replaying the merged
 //!    stream through the slice cache therefore reproduces the same
 //!    hits, evictions and writebacks, giving the same L2/HBM counters.
@@ -48,7 +59,7 @@ use super::cache::{AccessResult, Cache};
 use super::coalesce::Coalescer;
 use super::hierarchy::{ChanneledL2, MemTraffic};
 use crate::arch::GpuSpec;
-use crate::trace::block::{BlockData, BlockSink, EventBlock, Tag};
+use crate::trace::block::{BlockData, BlockSink, Columns, EventBlock, Tag};
 use crate::trace::stats::TraceStats;
 use crate::trace::MemKind;
 use crate::util::pool::{Latch, WorkerPool};
@@ -61,20 +72,106 @@ const BATCH_ADDR_WORDS: usize = 1 << 22;
 /// One L2-bound transaction, tagged with its global emission order.
 #[derive(Debug, Clone, Copy)]
 struct MissRec {
-    /// `record_index << 16 | emission_index` — unique and totally
-    /// ordered, so a per-channel sort reconstructs sequential arrival
-    /// order. 16 bits of emission headroom covers the worst legal
-    /// record (64 lanes × 9 sectors × 2 atomic transactions).
+    /// The 48/16 sequence key: `record_index << 16 | emission_index` —
+    /// unique and totally ordered, so the per-channel k-way merge
+    /// reconstructs sequential arrival order. Both halves are checked
+    /// invariants ([`check_seq_headroom`], the batch-size assert in
+    /// `submit_batch`), not debug-only assumptions: an overflow would
+    /// silently scramble L2 arrival order.
     seq: u64,
     /// Global L2 line id (channel routing included).
     line: u64,
     write: bool,
 }
 
-/// Per-channel miss streams produced by one shard for one batch.
+/// Per-channel miss streams produced by one shard for one batch. Each
+/// stream is seq-sorted by construction (tape order × emission order).
 type ShardMisses = Vec<Vec<MissRec>>;
 /// A whole batch's miss streams: one [`ShardMisses`] per shard.
 type BatchMisses = Vec<ShardMisses>;
+
+/// Marks a routed LDS record in [`Routed::cu_flag`] (bit 31 is far
+/// above any real CU count, which the constructor asserts).
+const LDS_ROUTE_FLAG: u32 = 1 << 31;
+
+/// One routed access record — everything its owning shard needs in
+/// the L1 phase without rescanning the batch tape: the batch block,
+/// the block-local access-stream index, the global record index (the
+/// `seq >> 16` half of the 48/16 key) and the owning L1 instance.
+#[derive(Debug, Clone, Copy)]
+struct Routed {
+    /// Block index within the batch.
+    block: u32,
+    /// Access-stream index within that block.
+    acc: u32,
+    /// Global record index within the batch.
+    rec: u32,
+    /// Owning L1 instance (`group_id % instances`), with
+    /// [`LDS_ROUTE_FLAG`] set for LDS records.
+    cu_flag: u32,
+}
+
+/// Routing output for one chunk of the batch: `runs[shard]` is the
+/// run of access records this chunk routed to `shard`, in tape order.
+/// A shard's full routed input is the concatenation of its run across
+/// chunks in chunk order (chunks partition the tape contiguously).
+type ChunkRoutes = Vec<Vec<Routed>>;
+
+/// Hard invariant of the 48/16 sequence split: one record may emit at
+/// most 2^16 L2-bound transactions, else per-channel arrival order
+/// would scramble silently (this was a `debug_assert!` before, i.e.
+/// unchecked in release builds). The worst *legal* record is tiny
+/// (64 lanes × a few sectors × 2 atomic transactions ≈ 1.2k), so the
+/// check never fires on real traces — it exists to fail loudly if a
+/// future coalescer or trace change breaks the envelope.
+#[inline]
+fn check_seq_headroom(emissions: u64) {
+    assert!(
+        emissions <= 1 << 16,
+        "seq overflow: a record would emit {emissions} L2 \
+         transactions, exceeding the 16-bit emission field of the \
+         48/16 sequence key"
+    );
+}
+
+/// Phase-0 routing: walk `chunk`'s tape once (hoisting each block's
+/// column view) and append every access record to its owning shard's
+/// run. Inst records only advance the record counter — they route
+/// zero work, so an all-`Inst` batch legitimately produces empty runs
+/// for every shard.
+fn route_chunk<B: BlockData>(
+    chunk: &[B],
+    first_block: usize,
+    mut rec: u32,
+    n_l1: u64,
+    shard_of: &[u16],
+    out: &mut [Vec<Routed>],
+) {
+    for (bi, b) in chunk.iter().enumerate() {
+        let c = b.columns();
+        let block = (first_block + bi) as u32;
+        let mut acc = 0u32;
+        for t in 0..c.tags.len() {
+            let tag = c.tags[t];
+            let r = rec;
+            rec += 1;
+            if tag == Tag::Inst {
+                continue;
+            }
+            let a = acc;
+            acc += 1;
+            let cu = (c.group_ids[t] % n_l1) as u32;
+            let flag =
+                if tag == Tag::Lds { LDS_ROUTE_FLAG } else { 0 };
+            out[shard_of[cu as usize] as usize].push(Routed {
+                block,
+                acc: a,
+                rec: r,
+                cu_flag: cu | flag,
+            });
+        }
+    }
+}
 
 /// Counters a shard owns exclusively during the L1 phase.
 #[derive(Debug, Clone, Copy, Default)]
@@ -103,7 +200,60 @@ struct L1Shard {
 }
 
 impl L1Shard {
-    fn consume<B: BlockData>(
+    /// L1 phase over this shard's routed runs (the production path):
+    /// zero tape rescanning — every entry already carries its access
+    /// index, record sequence and owning CU. Block column views are
+    /// hoisted on block transitions (runs are in tape order, so each
+    /// batch block is hoisted at most once per shard).
+    fn consume_routed<B: BlockData>(
+        &mut self,
+        blocks: &[B],
+        routes: &[ChunkRoutes],
+        shard_idx: usize,
+        sector_bytes: u64,
+        l2_line: u64,
+        channels: u64,
+    ) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let mut cur_block = usize::MAX;
+        let mut cols: Option<Columns<'_>> = None;
+        for chunk in routes {
+            for e in chunk[shard_idx].iter() {
+                let bi = e.block as usize;
+                if bi != cur_block {
+                    cols = Some(blocks[bi].columns());
+                    cur_block = bi;
+                }
+                let c = cols.as_ref().expect("columns hoisted above");
+                let (kind, bytes_per_lane, addrs) =
+                    c.access(e.acc as usize);
+                if e.cu_flag & LDS_ROUTE_FLAG != 0 {
+                    self.bank_model
+                        .observe_addrs(addrs, &mut self.lds);
+                    continue;
+                }
+                self.global_access(
+                    &mut scratch,
+                    e.cu_flag as usize,
+                    kind,
+                    bytes_per_lane,
+                    addrs,
+                    (e.rec as u64) << 16,
+                    sector_bytes,
+                    l2_line,
+                    channels,
+                );
+            }
+        }
+        self.scratch = scratch;
+    }
+
+    /// The pre-routing baseline: walk the **whole** batch tape and
+    /// filter on `(tag, group_id)` — every shard pays an O(records)
+    /// scan. Columns are hoisted per block, so this isolates exactly
+    /// the routing win for the `speedup/routed_l1` bench; it also
+    /// serves as an in-tree equivalence oracle for the routed path.
+    fn consume_scan<B: BlockData>(
         &mut self,
         blocks: &[B],
         n_l1: u64,
@@ -116,105 +266,216 @@ impl L1Shard {
         let mut rec_seq = 0u64;
         let mut scratch = std::mem::take(&mut self.scratch);
         for block in blocks {
-            // walk the raw tape so records owned by other shards are
-            // skipped on (tag, group_id) alone, without decoding their
-            // access payload — phase-1 scan cost per shard is then
-            // O(records) tag checks + O(owned records) real work
+            let c = block.columns();
             let mut acc_i = 0usize;
-            for t in 0..block.len() {
+            for t in 0..c.tags.len() {
                 let seq_base = rec_seq << 16;
                 rec_seq += 1;
-                let tag = block.tag(t);
+                let tag = c.tags[t];
                 if tag == Tag::Inst {
                     continue;
                 }
                 let acc_idx = acc_i;
                 acc_i += 1;
-                let cu = (block.group_id(t) % n_l1) as usize;
+                let cu = (c.group_ids[t] % n_l1) as usize;
                 if cu < lo || cu >= hi {
                     continue;
                 }
-                let (kind, bytes_per_lane, addrs) =
-                    block.access(acc_idx);
+                let (kind, bytes_per_lane, addrs) = c.access(acc_idx);
                 if tag == Tag::Lds {
                     self.bank_model
                         .observe_addrs(addrs, &mut self.lds);
                     continue;
                 }
-                let n = self.coalescer.sectors_from_addrs(
-                    addrs.iter().copied(),
-                    bytes_per_lane,
+                self.global_access(
                     &mut scratch,
+                    cu,
+                    kind,
+                    bytes_per_lane,
+                    addrs,
+                    seq_base,
+                    sector_bytes,
+                    l2_line,
+                    channels,
                 );
-                self.delta.mem_requests += 1;
-                self.delta.actual_txn += n as u64;
-                let requested =
-                    addrs.len() as u64 * bytes_per_lane as u64;
-                self.delta.ideal_txn +=
-                    requested.div_ceil(sector_bytes).max(1);
-                match kind {
-                    MemKind::Read => {
-                        self.delta.l1_read_txn += n as u64
-                    }
-                    _ => self.delta.l1_write_txn += n as u64,
-                }
-                let l1 = &mut self.l1s[cu - lo];
-                let mut intra = 0u64;
-                for &sector in scratch.iter() {
-                    let line = sector * sector_bytes / l2_line;
-                    let ch = (line % channels) as usize;
-                    match kind {
-                        MemKind::Read => {
-                            let res = l1.access_line(sector, false);
-                            if !res.is_hit() {
-                                self.misses[ch].push(MissRec {
-                                    seq: seq_base | intra,
-                                    line,
-                                    write: false,
-                                });
-                                intra += 1;
-                            }
-                        }
-                        MemKind::Write => {
-                            // write-through, no-allocate L1
-                            l1.access_line(sector, true);
-                            self.misses[ch].push(MissRec {
-                                seq: seq_base | intra,
-                                line,
-                                write: true,
-                            });
-                            intra += 1;
-                        }
-                        MemKind::Atomic => {
-                            // read-modify-write resolved at L2
-                            self.delta.atomic_txn += 1;
-                            self.misses[ch].push(MissRec {
-                                seq: seq_base | intra,
-                                line,
-                                write: false,
-                            });
-                            intra += 1;
-                            self.misses[ch].push(MissRec {
-                                seq: seq_base | intra,
-                                line,
-                                write: true,
-                            });
-                            intra += 1;
-                        }
-                    }
-                }
-                debug_assert!(intra <= 0xFFFF, "seq overflow");
             }
         }
         self.scratch = scratch;
     }
+
+    /// One global-memory record through this shard's coalescer and L1:
+    /// count the request, classify transactions, and append L2-bound
+    /// traffic to the per-channel miss streams under the record's
+    /// 48/16 sequence key. Shared by the routed and rescan paths so
+    /// they cannot drift.
+    #[inline]
+    fn global_access(
+        &mut self,
+        scratch: &mut Vec<u64>,
+        cu: usize,
+        kind: MemKind,
+        bytes_per_lane: u8,
+        addrs: &[u64],
+        seq_base: u64,
+        sector_bytes: u64,
+        l2_line: u64,
+        channels: u64,
+    ) {
+        let lo = self.first_cu;
+        let n = self.coalescer.sectors_from_addrs(
+            addrs.iter().copied(),
+            bytes_per_lane,
+            scratch,
+        );
+        self.delta.mem_requests += 1;
+        self.delta.actual_txn += n as u64;
+        let requested = addrs.len() as u64 * bytes_per_lane as u64;
+        self.delta.ideal_txn +=
+            requested.div_ceil(sector_bytes).max(1);
+        match kind {
+            MemKind::Read => self.delta.l1_read_txn += n as u64,
+            _ => self.delta.l1_write_txn += n as u64,
+        }
+        // emission half of the 48/16 split: checked, not debug-only
+        check_seq_headroom(match kind {
+            MemKind::Atomic => 2 * n as u64,
+            _ => n as u64,
+        });
+        let l1 = &mut self.l1s[cu - lo];
+        let mut intra = 0u64;
+        for &sector in scratch.iter() {
+            let line = sector * sector_bytes / l2_line;
+            let ch = (line % channels) as usize;
+            match kind {
+                MemKind::Read => {
+                    let res = l1.access_line(sector, false);
+                    if !res.is_hit() {
+                        self.misses[ch].push(MissRec {
+                            seq: seq_base | intra,
+                            line,
+                            write: false,
+                        });
+                        intra += 1;
+                    }
+                }
+                MemKind::Write => {
+                    // write-through, no-allocate L1
+                    l1.access_line(sector, true);
+                    self.misses[ch].push(MissRec {
+                        seq: seq_base | intra,
+                        line,
+                        write: true,
+                    });
+                    intra += 1;
+                }
+                MemKind::Atomic => {
+                    // read-modify-write resolved at L2
+                    self.delta.atomic_txn += 1;
+                    self.misses[ch].push(MissRec {
+                        seq: seq_base | intra,
+                        line,
+                        write: false,
+                    });
+                    intra += 1;
+                    self.misses[ch].push(MissRec {
+                        seq: seq_base | intra,
+                        line,
+                        write: true,
+                    });
+                    intra += 1;
+                }
+            }
+        }
+    }
 }
 
-/// Per-channel merge buffer + counters for the L2 phase.
+/// Per-channel merge scratch + counters for the L2 phase.
 #[derive(Debug, Default)]
 struct ChannelLane {
-    merge: Vec<MissRec>,
+    /// Reused k-way-merge heap (at most one entry per shard) — the
+    /// only per-channel state the merge needs; the former
+    /// concat-and-sort buffer (a full copy of the lane's stream) is
+    /// gone.
+    heap: Vec<MergeHead>,
     delta: ChannelDelta,
+}
+
+/// One stream head in the k-way merge: the next unconsumed
+/// [`MissRec`]'s key plus its (shard, position) coordinates.
+#[derive(Debug, Clone, Copy)]
+struct MergeHead {
+    seq: u64,
+    shard: u32,
+    idx: u32,
+}
+
+/// Restore the min-heap property at `i` (min on `seq`; keys are
+/// unique, so the merge order is total and deterministic).
+fn sift_down(heap: &mut [MergeHead], mut i: usize) {
+    loop {
+        let l = 2 * i + 1;
+        if l >= heap.len() {
+            return;
+        }
+        let mut m = if heap[l].seq < heap[i].seq { l } else { i };
+        let r = l + 1;
+        if r < heap.len() && heap[r].seq < heap[m].seq {
+            m = r;
+        }
+        if m == i {
+            return;
+        }
+        heap.swap(i, m);
+        i = m;
+    }
+}
+
+/// Visit one channel's [`MissRec`]s in global sequence order by k-way
+/// merging the per-shard streams, which are each seq-sorted by
+/// construction (shards emit in tape order, emissions in order within
+/// a record). Allocation-free: `heap` is the caller's reused scratch,
+/// bounded by the shard count. This replaces the former concat +
+/// `sort_unstable_by_key` — O(n log S) comparisons, no lane-sized
+/// buffer materialized, and the element visit streams straight into
+/// the slice-cache replay.
+fn merge_channel<F: FnMut(MissRec)>(
+    batch: &[ShardMisses],
+    ch: usize,
+    heap: &mut Vec<MergeHead>,
+    mut f: F,
+) {
+    heap.clear();
+    for (si, shard) in batch.iter().enumerate() {
+        if let Some(first) = shard[ch].first() {
+            heap.push(MergeHead {
+                seq: first.seq,
+                shard: si as u32,
+                idx: 0,
+            });
+        }
+    }
+    for i in (0..heap.len() / 2).rev() {
+        sift_down(heap, i);
+    }
+    while let Some(&top) = heap.first() {
+        let stream = &batch[top.shard as usize][ch];
+        f(stream[top.idx as usize]);
+        let ni = top.idx as usize + 1;
+        if ni < stream.len() {
+            // replace the root with this stream's next element
+            heap[0] = MergeHead {
+                seq: stream[ni].seq,
+                shard: top.shard,
+                idx: ni as u32,
+            };
+        } else {
+            // stream exhausted: classic pop-root
+            let last = heap.len() - 1;
+            heap.swap(0, last);
+            heap.pop();
+        }
+        sift_down(heap, 0);
+    }
 }
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -267,21 +528,16 @@ impl L2Stage {
                             .enumerate()
                         {
                             let ch = ch0 + j;
-                            lane.merge.clear();
-                            for shard in batch_ref {
-                                lane.merge
-                                    .extend_from_slice(&shard[ch]);
-                            }
-                            // unique keys: sort restores sequential
-                            // arrival order for this slice
-                            lane.merge
-                                .sort_unstable_by_key(|m| m.seq);
-                            for m in lane.merge.iter() {
+                            // unique keys: the k-way merge streams
+                            // this slice's transactions in sequential
+                            // arrival order, straight into the cache
+                            let ChannelLane { heap, delta } = lane;
+                            merge_channel(batch_ref, ch, heap, |m| {
                                 let local = m.line / channels;
                                 if m.write {
-                                    lane.delta.l2_write_txn += 1;
+                                    delta.l2_write_txn += 1;
                                 } else {
-                                    lane.delta.l2_read_txn += 1;
+                                    delta.l2_read_txn += 1;
                                 }
                                 match cache.access_line(local, m.write)
                                 {
@@ -290,16 +546,16 @@ impl L2Stage {
                                         evicted_dirty,
                                     } => {
                                         if !m.write {
-                                            lane.delta.hbm_read_bytes +=
+                                            delta.hbm_read_bytes +=
                                                 l2_line;
                                         }
                                         if evicted_dirty {
-                                            lane.delta.hbm_write_bytes +=
+                                            delta.hbm_write_bytes +=
                                                 l2_line;
                                         }
                                     }
                                 }
-                            }
+                            });
                         }
                     });
                 }
@@ -333,6 +589,17 @@ pub struct ShardedHierarchy {
     channels: u64,
     threads: usize,
     shards: Vec<L1Shard>,
+    /// CU → owning shard lookup for the routing pass.
+    shard_of: Vec<u16>,
+    /// Routing output, reused across batches: `routes[chunk][shard]`
+    /// is the run of access records chunk `chunk` routed to `shard`.
+    /// Only live during the synchronous L1 phase, so one set suffices
+    /// (unlike the double-buffered miss streams).
+    routes: Vec<ChunkRoutes>,
+    /// One-pass routing enabled. Disabled only by
+    /// [`ShardedHierarchy::with_shards_rescan`], the S-redundant-scan
+    /// baseline kept for benches and equivalence tests.
+    route: bool,
     stage: Arc<Mutex<L2Stage>>,
     /// Latch of the in-flight channel phase, if any.
     l2_pending: Option<Latch>,
@@ -400,6 +667,20 @@ impl ShardedHierarchy {
         // lives inside the shards)
         let spare: Vec<BatchMisses> =
             vec![(0..threads).map(|_| vec![Vec::new(); nch]).collect()];
+        // cu → shard lookup for the routing pass (shard i owns the
+        // contiguous CU range its L1 slice covers)
+        assert!(
+            (instances as u32) < LDS_ROUTE_FLAG,
+            "CU count {instances} would collide with the LDS route flag"
+        );
+        let mut shard_of = vec![0u16; instances];
+        for (s, shard) in shards.iter().enumerate() {
+            for cu in
+                shard.first_cu..shard.first_cu + shard.l1s.len()
+            {
+                shard_of[cu] = s as u16;
+            }
+        }
         ShardedHierarchy {
             n_l1: instances as u64,
             sector_bytes: l1_line,
@@ -407,6 +688,11 @@ impl ShardedHierarchy {
             channels,
             threads,
             shards,
+            shard_of,
+            routes: (0..threads)
+                .map(|_| vec![Vec::new(); threads])
+                .collect(),
+            route: true,
             stage: Arc::new(Mutex::new(L2Stage {
                 l2,
                 lanes,
@@ -422,6 +708,22 @@ impl ShardedHierarchy {
             pending_records: 0,
             pending_addr_words: 0,
         }
+    }
+
+    /// The pre-routing baseline engine: every shard rescans the whole
+    /// batch tape and filters on `(tag, group_id)` — S redundant
+    /// scans. Counters are bit-identical to the routed engine (the
+    /// partitioning decides *who* computes a number, never *which*);
+    /// kept so the `speedup/routed_l1` bench and the equivalence
+    /// tests can A/B the routing pass in isolation.
+    #[doc(hidden)]
+    pub fn with_shards_rescan(
+        spec: &GpuSpec,
+        threads: usize,
+    ) -> ShardedHierarchy {
+        let mut h = ShardedHierarchy::with_shards(spec, threads);
+        h.route = false;
+        h
     }
 
     /// Run the L1 phase over the buffered (pooled) batch and hand its
@@ -496,30 +798,97 @@ impl ShardedHierarchy {
             self.channels,
         );
 
+        // record half of the 48/16 split (and the routing pass's u32
+        // indices): checked, not assumed — see `check_seq_headroom`
+        // for the emission half
+        let total_records: u64 =
+            blocks.iter().map(|b| b.len() as u64).sum();
+        assert!(
+            total_records <= u32::MAX as u64,
+            "batch of {total_records} records overflows the \
+             record-index field of the 48/16 sequence key"
+        );
+
+        // ---- routing pass (one-pass, pool-parallel over chunks) -----
+        let routed = if self.route {
+            let mut routes = std::mem::take(&mut self.routes);
+            for out in routes.iter_mut() {
+                for v in out.iter_mut() {
+                    v.clear();
+                }
+            }
+            let per_chunk =
+                blocks.len().div_ceil(routes.len()).max(1);
+            {
+                let shard_of: &[u16] = &self.shard_of;
+                WorkerPool::global().scope(|s| {
+                    let mut rec_base = 0u64;
+                    for (ci, (chunk, out)) in blocks
+                        .chunks(per_chunk)
+                        .zip(routes.iter_mut())
+                        .enumerate()
+                    {
+                        let first_block = ci * per_chunk;
+                        let base = rec_base as u32;
+                        rec_base += chunk
+                            .iter()
+                            .map(|b| b.len() as u64)
+                            .sum::<u64>();
+                        s.spawn(move || {
+                            route_chunk(
+                                chunk,
+                                first_block,
+                                base,
+                                n_l1,
+                                shard_of,
+                                out,
+                            );
+                        });
+                    }
+                });
+            }
+            Some(routes)
+        } else {
+            None
+        };
+
         // ---- L1 phase + stats fold, parallel and synchronous --------
         {
             let stats = &mut self.stats;
             let shards = &mut self.shards;
+            let routes_ref = routed.as_deref();
             WorkerPool::global().scope(|s| {
-                for shard in shards.iter_mut() {
-                    s.spawn(move || {
-                        shard.consume(
+                for (si, shard) in shards.iter_mut().enumerate() {
+                    s.spawn(move || match routes_ref {
+                        Some(routes) => shard.consume_routed(
+                            blocks,
+                            routes,
+                            si,
+                            sector_bytes,
+                            l2_line,
+                            channels,
+                        ),
+                        None => shard.consume_scan(
                             blocks,
                             n_l1,
                             sector_bytes,
                             l2_line,
                             channels,
-                        );
+                        ),
                     });
                 }
                 s.spawn(move || {
                     for b in blocks {
-                        for rec in b.records() {
-                            stats.on_record_scaled(&rec, expansion);
-                        }
+                        stats.fold_columns_scaled(
+                            &b.columns(),
+                            expansion,
+                        );
                     }
                 });
             });
+        }
+        if let Some(routes) = routed {
+            self.routes = routes;
         }
 
         // merge the shard-exclusive counters
@@ -623,6 +992,83 @@ impl ShardedHierarchy {
     /// Worker/shard count in use.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+}
+
+/// Bench-only hooks for `benches/hotpath.rs`: isolate the channel
+/// phase's k-way merge against the concat+sort baseline it replaced,
+/// over synthetic per-shard streams shaped like a real L1 phase's
+/// output. Hidden — not public API.
+#[doc(hidden)]
+pub mod bench_hooks {
+    use super::{merge_channel, BatchMisses, MergeHead, MissRec};
+    use crate::util::Xoshiro256;
+
+    /// Opaque synthetic batch: per-shard per-channel miss streams,
+    /// each seq-sorted exactly like the L1 phase emits them.
+    pub struct SynthMisses {
+        batch: BatchMisses,
+        channels: usize,
+    }
+
+    pub fn synth_misses(
+        shards: usize,
+        channels: usize,
+        total: usize,
+        seed: u64,
+    ) -> SynthMisses {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut batch: BatchMisses = (0..shards)
+            .map(|_| vec![Vec::new(); channels])
+            .collect();
+        for seq in 0..total as u64 {
+            let s = rng.below(shards as u64) as usize;
+            let ch = rng.below(channels as u64) as usize;
+            batch[s][ch].push(MissRec {
+                seq: seq << 16,
+                line: rng.below(1 << 20),
+                write: seq % 3 == 0,
+            });
+        }
+        SynthMisses { batch, channels }
+    }
+
+    /// Order-sensitive checksum of the merged streams via the
+    /// engine's k-way merge.
+    pub fn merge_kway(m: &SynthMisses) -> u64 {
+        let mut heap: Vec<MergeHead> = Vec::new();
+        let mut sum = 0u64;
+        for ch in 0..m.channels {
+            let mut i = 0u64;
+            merge_channel(&m.batch, ch, &mut heap, |r| {
+                i += 1;
+                sum = sum
+                    .wrapping_mul(0x0000_0100_0000_01b3)
+                    .wrapping_add(r.seq ^ r.line ^ i);
+            });
+        }
+        sum
+    }
+
+    /// The same checksum via the former concat + sort lane buffer.
+    pub fn merge_sort(m: &SynthMisses) -> u64 {
+        let mut lane: Vec<MissRec> = Vec::new();
+        let mut sum = 0u64;
+        for ch in 0..m.channels {
+            lane.clear();
+            for shard in &m.batch {
+                lane.extend_from_slice(&shard[ch]);
+            }
+            lane.sort_unstable_by_key(|r| r.seq);
+            let mut i = 0u64;
+            for r in &lane {
+                i += 1;
+                sum = sum
+                    .wrapping_mul(0x0000_0100_0000_01b3)
+                    .wrapping_add(r.seq ^ r.line ^ i);
+            }
+        }
+        sum
     }
 }
 
@@ -822,5 +1268,60 @@ mod tests {
         let mut h = ShardedHierarchy::new(&v100());
         h.flush();
         assert_eq!(h.traffic, MemTraffic::default());
+    }
+
+    #[test]
+    fn kway_merge_agrees_with_concat_sort() {
+        for (shards, channels, total, seed) in
+            [(1, 1, 500, 1), (7, 5, 10_000, 42), (16, 32, 4_000, 9)]
+        {
+            let m = bench_hooks::synth_misses(
+                shards, channels, total, seed,
+            );
+            assert_eq!(
+                bench_hooks::merge_kway(&m),
+                bench_hooks::merge_sort(&m),
+                "{shards} shards × {channels} channels"
+            );
+        }
+    }
+
+    #[test]
+    fn rescan_baseline_matches_routed_engine() {
+        let spec = mi100();
+        let t = StreamTrace::babelstream("triad", 1 << 12);
+        let rec = BlockRecorder::record(&t, 64);
+        for threads in [1, 4] {
+            let mut routed =
+                ShardedHierarchy::with_shards(&spec, threads);
+            let mut rescan =
+                ShardedHierarchy::with_shards_rescan(&spec, threads);
+            routed.consume_blocks(&rec.blocks);
+            routed.flush();
+            rescan.consume_blocks(&rec.blocks);
+            rescan.flush();
+            assert_eq!(routed.traffic, rescan.traffic);
+            assert_eq!(routed.take_stats(), rescan.take_stats());
+            assert_eq!(
+                routed.l1_hit_rate(),
+                rescan.l1_hit_rate()
+            );
+            assert_eq!(
+                routed.l2_hit_rate(),
+                rescan.l2_hit_rate()
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "seq overflow")]
+    fn seq_emission_overflow_is_a_hard_error() {
+        check_seq_headroom((1 << 16) + 1);
+    }
+
+    #[test]
+    fn seq_headroom_accepts_the_full_16_bit_range() {
+        check_seq_headroom(0);
+        check_seq_headroom(1 << 16); // intra reaches 0xFFFF exactly
     }
 }

@@ -6,8 +6,11 @@
 //!
 //! * [`EngineMode::Sharded`] (default) — events are batched into SoA
 //!   [`crate::trace::EventBlock`]s and replayed through the parallel
-//!   [`ShardedHierarchy`] (per-CU L1 shards + address-interleaved L2
-//!   channels);
+//!   [`ShardedHierarchy`]: a three-phase pipeline (one-pass shard
+//!   routing → per-CU L1 shards → k-way merged address-interleaved L2
+//!   channels, see `docs/engine.md`) that scans hoisted column views
+//!   ([`BlockData::columns`]) — zero-copy for heap recordings and
+//!   memory-mapped archives alike;
 //! * [`EngineMode::Sequential`] — the original one-virtual-call-per-
 //!   event path through [`MemHierarchy`], kept as the reference
 //!   baseline for equivalence tests and benchmarks.

@@ -122,13 +122,12 @@ pub fn archive_file_name(case_name: &str, key: u64) -> String {
 
 // ------------------------------------------------------- enum codecs
 
-/// Wire encoding of [`Tag`]: 0 = Inst, 1 = Mem, 2 = Lds.
+/// Wire encoding of [`Tag`]: 0 = Inst, 1 = Mem, 2 = Lds. The enum is
+/// `repr(u8)` with these exact discriminants (pinned by the round-trip
+/// test below), which is what makes the reader's zero-copy `&[Tag]`
+/// column view sound after open-time byte validation.
 pub fn tag_to_u8(t: Tag) -> u8 {
-    match t {
-        Tag::Inst => 0,
-        Tag::Mem => 1,
-        Tag::Lds => 2,
-    }
+    t as u8
 }
 
 pub fn tag_from_u8(b: u8) -> Option<Tag> {
@@ -140,13 +139,10 @@ pub fn tag_from_u8(b: u8) -> Option<Tag> {
     }
 }
 
-/// Wire encoding of [`MemKind`]: 0 = Read, 1 = Write, 2 = Atomic.
+/// Wire encoding of [`MemKind`]: 0 = Read, 1 = Write, 2 = Atomic —
+/// also the enum's `repr(u8)` discriminants (see [`tag_to_u8`]).
 pub fn kind_to_u8(k: MemKind) -> u8 {
-    match k {
-        MemKind::Read => 0,
-        MemKind::Write => 1,
-        MemKind::Atomic => 2,
-    }
+    k as u8
 }
 
 pub fn kind_from_u8(b: u8) -> Option<MemKind> {
@@ -158,15 +154,13 @@ pub fn kind_from_u8(b: u8) -> Option<MemKind> {
     }
 }
 
-/// Wire encoding of [`InstClass`]: the index into [`InstClass::ALL`].
-/// That order is therefore part of the format — reordering or
-/// extending `ALL` requires a [`FORMAT_VERSION`] bump (pinned by the
+/// Wire encoding of [`InstClass`]: the index into [`InstClass::ALL`],
+/// which is also the enum's `repr(u8)` discriminant. That order is
+/// therefore part of the format — reordering or extending the enum
+/// requires a [`FORMAT_VERSION`] bump (pinned by the
 /// `inst_class_wire_encoding_is_stable` test below).
 pub fn class_to_u8(c: InstClass) -> u8 {
-    InstClass::ALL
-        .iter()
-        .position(|x| *x == c)
-        .expect("InstClass::ALL covers every class") as u8
+    c as u8
 }
 
 pub fn class_from_u8(b: u8) -> Option<InstClass> {

@@ -1,0 +1,142 @@
+//! Archive garbage collection: delete `.rtrc` files whose content
+//! keys are no longer live.
+//!
+//! Archive files are content-addressed
+//! ([`super::format::archive_file_name`] embeds the case key), so a
+//! config, seed or format change writes a *new* file and leaves the
+//! old one behind. In long-lived CI caches and developer `--trace-dir`
+//! directories those dead recordings accumulate without bound — they
+//! can never hit again, because nothing computes their key anymore.
+//! [`prune_dir`] removes exactly those: everything with the archive
+//! extension whose file name is not in the caller's live set. It
+//! never touches non-archive files, and it never deletes a live key,
+//! however stale its mtime — content addressing, not age, decides.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use super::format::EXTENSION;
+
+/// What [`prune_dir`] did, for reporting and tests.
+pub struct PruneReport {
+    /// Archive files whose names were in the live set (sorted).
+    pub kept: Vec<PathBuf>,
+    /// Archive files deleted as dead keys (sorted).
+    pub deleted: Vec<PathBuf>,
+}
+
+/// Delete every `.rtrc` file in `dir` whose file name is **not** in
+/// `live` (the content-addressed names of the current case set, e.g.
+/// from [`crate::coordinator::CaseTrace::archive_path`]). Returns the
+/// kept/deleted partition. Non-archive files are ignored; a missing
+/// directory is an error (pruning a path that never held an archive
+/// is almost certainly a typo, not a no-op).
+pub fn prune_dir(
+    dir: &Path,
+    live: &HashSet<String>,
+) -> anyhow::Result<PruneReport> {
+    let mut report = PruneReport {
+        kept: Vec::new(),
+        deleted: Vec::new(),
+    };
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        anyhow::anyhow!("read archive dir {}: {e}", dir.display())
+    })?;
+    for entry in entries {
+        let path = match entry {
+            Ok(e) => e.path(),
+            Err(e) => {
+                anyhow::bail!(
+                    "read archive dir {}: {e}",
+                    dir.display()
+                )
+            }
+        };
+        if path.extension().and_then(|x| x.to_str())
+            != Some(EXTENSION)
+        {
+            continue;
+        }
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if live.contains(&name) {
+            report.kept.push(path);
+        } else {
+            std::fs::remove_file(&path).map_err(|e| {
+                anyhow::anyhow!("delete {}: {e}", path.display())
+            })?;
+            report.deleted.push(path);
+        }
+    }
+    report.kept.sort();
+    report.deleted.sort();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "rocline-gc-test-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn touch(dir: &Path, name: &str) {
+        let mut f =
+            std::fs::File::create(dir.join(name)).unwrap();
+        f.write_all(b"x").unwrap();
+    }
+
+    #[test]
+    fn prune_deletes_dead_keys_and_keeps_live_ones() {
+        let dir = tmp_dir("basic");
+        touch(&dir, "a-0000000000000001.rtrc");
+        touch(&dir, "b-0000000000000002.rtrc");
+        touch(&dir, "notes.txt"); // non-archive: never touched
+        let live: HashSet<String> =
+            ["a-0000000000000001.rtrc".to_string()]
+                .into_iter()
+                .collect();
+        let report = prune_dir(&dir, &live).unwrap();
+        assert_eq!(report.kept.len(), 1);
+        assert_eq!(report.deleted.len(), 1);
+        assert!(dir.join("a-0000000000000001.rtrc").exists());
+        assert!(!dir.join("b-0000000000000002.rtrc").exists());
+        assert!(dir.join("notes.txt").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_with_all_keys_live_deletes_nothing() {
+        let dir = tmp_dir("all-live");
+        touch(&dir, "a-0000000000000001.rtrc");
+        let live: HashSet<String> =
+            ["a-0000000000000001.rtrc".to_string()]
+                .into_iter()
+                .collect();
+        let report = prune_dir(&dir, &live).unwrap();
+        assert_eq!(report.kept.len(), 1);
+        assert!(report.deleted.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_missing_dir_is_a_clean_error() {
+        let err = prune_dir(
+            Path::new("/nonexistent-rocline-gc"),
+            &HashSet::new(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("read archive dir"), "{err}");
+    }
+}

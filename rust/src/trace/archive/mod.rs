@@ -26,11 +26,13 @@
 //! `ROCLINE_REQUIRE_ARCHIVE_HIT=1`).
 
 pub mod format;
+pub mod gc;
 mod mmap;
 pub mod reader;
 pub mod writer;
 
 pub use format::{archive_file_name, case_key, fnv1a, FORMAT_VERSION};
+pub use gc::{prune_dir, PruneReport};
 pub use reader::{
     ArchiveInfo, MappedBlock, MappedCaseTrace, MappedDispatch,
 };

@@ -229,34 +229,39 @@ pub struct MappedBlock {
     col_off: [u64; COLUMNS],
 }
 
-impl MappedBlock {
-    #[inline]
-    fn u8_col(&self, c: usize, len: usize) -> &[u8] {
-        let off = self.col_off[c] as usize;
-        &self.buf.bytes()[off..off + len]
-    }
-
-    #[inline]
-    fn u64_col(&self, c: usize, len: usize) -> &[u64] {
-        let off = self.col_off[c] as usize;
-        let b = &self.buf.bytes()[off..off + len * 8];
-        // SAFETY: offset and total range were bounds- and
-        // alignment-checked at open (8-aligned section in an 8-aligned
-        // buffer); any u64 bit pattern is valid.
-        unsafe {
-            std::slice::from_raw_parts(b.as_ptr().cast::<u64>(), len)
-        }
-    }
-
-    #[inline]
-    fn u32_col(&self, c: usize, len: usize) -> &[u32] {
-        let off = self.col_off[c] as usize;
-        let b = &self.buf.bytes()[off..off + len * 4];
-        // SAFETY: as for u64_col; 8-aligned implies 4-aligned.
-        unsafe {
-            std::slice::from_raw_parts(b.as_ptr().cast::<u32>(), len)
-        }
-    }
+/// Reinterpret `len * size_of::<T>()` mapped bytes at `off` as a
+/// `&[T]`.
+///
+/// # Safety
+///
+/// The caller must guarantee, for the given `bytes`/`off`/`len`, that
+/// the range is in bounds and `off` is aligned for `T` (the archive
+/// open path validated bounds and 8-byte section alignment), and that
+/// every value in the range is a valid `T` bit pattern — trivially so
+/// for the integer columns, and guaranteed for the `repr(u8)` enum
+/// columns (`Tag`, `MemKind`, `InstClass`) because open validated
+/// every coded byte against the wire encoding, which equals the enums'
+/// discriminants.
+///
+/// The enum-typed views additionally lean on the mapping-stability
+/// contract stated in [`super::mmap`]: archives are written
+/// atomically (temp + rename) and never modified in place, so the
+/// bytes validated at open are the bytes replay sees. An external
+/// actor rewriting an archive *in place* under a live mapping is
+/// outside that contract — it was already unsupported (truncation
+/// could fault any mmap consumer, and silently-changed column data
+/// would corrupt counters), and with typed enum slices it is
+/// undefined behavior rather than a deterministic decode panic.
+#[inline]
+unsafe fn col_slice<T>(bytes: &[u8], off: u64, len: usize) -> &[T] {
+    debug_assert!(
+        off as usize + len * std::mem::size_of::<T>() <= bytes.len()
+    );
+    debug_assert_eq!(off as usize % std::mem::align_of::<T>(), 0);
+    std::slice::from_raw_parts(
+        bytes.as_ptr().add(off as usize).cast::<T>(),
+        len,
+    )
 }
 
 impl BlockData for MappedBlock {
@@ -268,33 +273,65 @@ impl BlockData for MappedBlock {
         self.n_addr as usize
     }
 
-    fn tag(&self, t: usize) -> Tag {
-        let b = self.u8_col(0, self.n_records as usize)[t];
-        tag_from_u8(b).expect("tag bytes validated at open")
-    }
-
-    fn group_id(&self, t: usize) -> u64 {
-        self.u64_col(1, self.n_records as usize)[t]
-    }
-
-    fn inst(&self, i: usize) -> (InstClass, u64) {
-        let class = class_from_u8(
-            self.u8_col(2, self.n_inst as usize)[i],
-        )
-        .expect("class bytes validated at open");
-        (class, self.u64_col(3, self.n_inst as usize)[i])
-    }
-
-    fn access(&self, i: usize) -> (MemKind, u8, &[u64]) {
+    /// The hoisted column view: **one** `Arc` deref + storage-enum
+    /// match (`buf.bytes()`), then nine zero-copy slices straight into
+    /// the mapping. The pre-columnar per-record accessors paid that
+    /// resolution for every record of every scan — this is the
+    /// `speedup/columnar_scan` win.
+    fn columns(&self) -> crate::trace::block::Columns<'_> {
+        let bytes = self.buf.bytes();
+        let n_rec = self.n_records as usize;
+        let n_inst = self.n_inst as usize;
         let n_acc = self.n_acc as usize;
-        let kind = kind_from_u8(self.u8_col(4, n_acc)[i])
-            .expect("kind bytes validated at open");
-        let bpl = self.u8_col(5, n_acc)[i];
-        let off = self.u32_col(6, n_acc)[i] as usize;
-        let len = self.u8_col(7, n_acc)[i] as usize;
-        let addrs =
-            &self.u64_col(8, self.n_addr as usize)[off..off + len];
-        (kind, bpl, addrs)
+        let n_addr = self.n_addr as usize;
+        // SAFETY: every offset/length pair was bounds-, alignment- and
+        // checksum-validated at open, and every enum byte was checked
+        // against its wire encoding there (see `col_slice`).
+        unsafe {
+            crate::trace::block::Columns {
+                tags: col_slice::<Tag>(bytes, self.col_off[0], n_rec),
+                group_ids: col_slice::<u64>(
+                    bytes,
+                    self.col_off[1],
+                    n_rec,
+                ),
+                inst_class: col_slice::<InstClass>(
+                    bytes,
+                    self.col_off[2],
+                    n_inst,
+                ),
+                inst_count: col_slice::<u64>(
+                    bytes,
+                    self.col_off[3],
+                    n_inst,
+                ),
+                acc_kind: col_slice::<MemKind>(
+                    bytes,
+                    self.col_off[4],
+                    n_acc,
+                ),
+                acc_bpl: col_slice::<u8>(
+                    bytes,
+                    self.col_off[5],
+                    n_acc,
+                ),
+                acc_off: col_slice::<u32>(
+                    bytes,
+                    self.col_off[6],
+                    n_acc,
+                ),
+                acc_len: col_slice::<u8>(
+                    bytes,
+                    self.col_off[7],
+                    n_acc,
+                ),
+                addrs: col_slice::<u64>(
+                    bytes,
+                    self.col_off[8],
+                    n_addr,
+                ),
+            }
+        }
     }
 }
 

@@ -19,6 +19,7 @@ use super::format::{
     align_up, case_key, class_to_u8, kind_to_u8, tag_to_u8, Fnv,
     COLUMNS, ENDIAN_TAG, FORMAT_VERSION, HEADER_LEN, MAGIC,
 };
+use crate::trace::block::BlockData;
 use crate::trace::recorded::RecordedDispatch;
 
 /// Everything case-specific the archive stores besides the blocks.
@@ -170,7 +171,7 @@ fn write_to_tmp(
     for d in dispatches {
         let mut blocks = Vec::with_capacity(d.blocks.len());
         for b in d.blocks.iter() {
-            let cols = b.raw_columns();
+            let cols = b.columns();
             let mut e = BlockIndex {
                 n_records: cols.tags.len() as u32,
                 n_inst: cols.inst_class.len() as u32,

@@ -42,14 +42,21 @@ use crate::arch::InstClass;
 pub const BLOCK_CAPACITY: usize = 4096;
 
 /// What one tape entry is.
+///
+/// `repr(u8)` with explicit discriminants equal to the archive wire
+/// encoding ([`crate::trace::archive::format::tag_to_u8`]): a mapped
+/// tag column whose bytes were code-validated at open is directly a
+/// `&[Tag]`, which is what lets [`BlockData::columns`] hand out one
+/// typed slice for either storage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
 pub enum Tag {
     /// Non-memory instructions, batched by count.
-    Inst,
+    Inst = 0,
     /// One global-memory instruction.
-    Mem,
+    Mem = 1,
     /// One LDS / shared-memory instruction.
-    Lds,
+    Lds = 2,
 }
 
 /// A borrowed view of one record on the tape.
@@ -215,7 +222,7 @@ impl EventBlock {
     }
 
     /// Iterate the records in issue order.
-    pub fn records(&self) -> BlockIter<'_, EventBlock> {
+    pub fn records(&self) -> BlockIter<'_> {
         BlockData::records(self)
     }
 
@@ -225,28 +232,21 @@ impl EventBlock {
     pub fn replay_into(&self, sink: &mut dyn EventSink) {
         BlockData::replay_into(self, sink)
     }
-
-    /// Raw SoA columns in wire order — the archive writer's view (see
-    /// `docs/trace-format.md`): tags, group_ids, inst_class, inst_count,
-    /// acc_kind, acc_bpl, acc_off, acc_len, addrs.
-    pub(crate) fn raw_columns(&self) -> RawColumns<'_> {
-        RawColumns {
-            tags: &self.tags,
-            group_ids: &self.group_ids,
-            inst_class: &self.inst_class,
-            inst_count: &self.inst_count,
-            acc_kind: &self.acc_kind,
-            acc_bpl: &self.acc_bpl,
-            acc_off: &self.acc_off,
-            acc_len: &self.acc_len,
-            addrs: &self.addrs,
-        }
-    }
 }
 
-/// Borrowed view of an [`EventBlock`]'s nine SoA columns, in the
-/// on-disk section order of the trace archive.
-pub(crate) struct RawColumns<'a> {
+/// Borrowed view of one block's nine SoA columns as plain slices, in
+/// the on-disk section order of the trace archive (see
+/// `docs/trace-format.md`): tags, group_ids, inst_class, inst_count,
+/// acc_kind, acc_bpl, acc_off, acc_len, addrs.
+///
+/// This is the **hoisted** view the hot loops scan: derived once per
+/// block via [`BlockData::columns`], then indexed as raw slices. For
+/// [`crate::trace::archive::MappedBlock`] the old per-record accessors
+/// re-derived this view (an `Arc` deref plus a storage-enum match) for
+/// every record of every scan; hoisting it restores plain-slice
+/// scanning cost for mapped storage.
+#[derive(Clone, Copy)]
+pub struct Columns<'a> {
     pub tags: &'a [Tag],
     pub group_ids: &'a [u64],
     pub inst_class: &'a [InstClass],
@@ -258,6 +258,37 @@ pub(crate) struct RawColumns<'a> {
     pub addrs: &'a [u64],
 }
 
+impl<'a> Columns<'a> {
+    /// Number of records on the tape.
+    pub fn len(&self) -> usize {
+        self.tags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tags.is_empty()
+    }
+
+    /// Access-stream entry `i` (the i-th `Tag::Mem`/`Tag::Lds` record
+    /// on the tape): `(kind, bytes_per_lane, active-lane addresses)`.
+    #[inline]
+    pub fn access(&self, i: usize) -> (MemKind, u8, &'a [u64]) {
+        let off = self.acc_off[i] as usize;
+        let len = self.acc_len[i] as usize;
+        let addrs: &'a [u64] = &self.addrs[off..off + len];
+        (self.acc_kind[i], self.acc_bpl[i], addrs)
+    }
+
+    /// Iterate the records in issue order.
+    pub fn records(self) -> BlockIter<'a> {
+        BlockIter {
+            cols: self,
+            tape: 0,
+            inst: 0,
+            acc: 0,
+        }
+    }
+}
+
 /// Storage-independent read access to one SoA block.
 ///
 /// Implemented by the owned [`EventBlock`] and by the trace archive's
@@ -267,9 +298,11 @@ pub(crate) struct RawColumns<'a> {
 /// identically whether its columns live on the heap or in a mapped
 /// file.
 ///
-/// Index-based accessors (rather than column slices) keep the trait
-/// implementable without exposing storage details; all are O(1) and
-/// expected to inline in the generic engines.
+/// The trait's one real method is [`BlockData::columns`]: a borrowed
+/// view of all nine columns, hoisted **once** per block. Every scan —
+/// record iteration, the sharded engine's routing and L1 phases, the
+/// stats fold, the half-group split — runs over those plain slices
+/// instead of paying a per-record storage-resolution cost.
 pub trait BlockData {
     /// Number of records on the tape.
     fn len(&self) -> usize;
@@ -281,40 +314,19 @@ pub trait BlockData {
     /// Total address words stored (sizing aid for batch thresholds).
     fn addr_words(&self) -> usize;
 
-    /// Tape entry `t`.
-    fn tag(&self, t: usize) -> Tag;
+    /// The hoisted column view (see [`Columns`]). Implementations
+    /// resolve their storage exactly once here.
+    fn columns(&self) -> Columns<'_>;
 
-    /// Issuing group of tape entry `t`.
-    fn group_id(&self, t: usize) -> u64;
-
-    /// Instruction-stream entry `i` (the i-th `Tag::Inst` record on the
-    /// tape): `(class, count)`.
-    fn inst(&self, i: usize) -> (InstClass, u64);
-
-    /// Access-stream entry `i` (the i-th `Tag::Mem`/`Tag::Lds` record
-    /// on the tape): `(kind, bytes_per_lane, active-lane addresses)`.
-    fn access(&self, i: usize) -> (MemKind, u8, &[u64]);
-
-    /// Iterate the records in issue order.
-    fn records(&self) -> BlockIter<'_, Self>
-    where
-        Self: Sized,
-    {
-        BlockIter {
-            block: self,
-            tape: 0,
-            inst: 0,
-            acc: 0,
-        }
+    /// Iterate the records in issue order (over a hoisted column view).
+    fn records(&self) -> BlockIter<'_> {
+        self.columns().records()
     }
 
     /// Compatibility adapter: replay this block into a classic
     /// [`EventSink`], reproducing the original event stream (with
     /// active-lane compaction, which no sink can distinguish).
-    fn replay_into(&self, sink: &mut dyn EventSink)
-    where
-        Self: Sized,
-    {
+    fn replay_into(&self, sink: &mut dyn EventSink) {
         for rec in self.records() {
             match rec {
                 BlockRecord::Inst {
@@ -358,60 +370,56 @@ impl BlockData for EventBlock {
         self.addrs.len()
     }
 
-    fn tag(&self, t: usize) -> Tag {
-        self.tags[t]
-    }
-
-    fn group_id(&self, t: usize) -> u64 {
-        self.group_ids[t]
-    }
-
-    fn inst(&self, i: usize) -> (InstClass, u64) {
-        (self.inst_class[i], self.inst_count[i])
-    }
-
-    fn access(&self, i: usize) -> (MemKind, u8, &[u64]) {
-        let off = self.acc_off[i] as usize;
-        let len = self.acc_len[i] as usize;
-        (self.acc_kind[i], self.acc_bpl[i], &self.addrs[off..off + len])
+    fn columns(&self) -> Columns<'_> {
+        Columns {
+            tags: &self.tags,
+            group_ids: &self.group_ids,
+            inst_class: &self.inst_class,
+            inst_count: &self.inst_count,
+            acc_kind: &self.acc_kind,
+            acc_bpl: &self.acc_bpl,
+            acc_off: &self.acc_off,
+            acc_len: &self.acc_len,
+            addrs: &self.addrs,
+        }
     }
 }
 
-/// Iterator over [`BlockRecord`]s (three cursors into the SoA streams),
-/// generic over the block's storage.
-pub struct BlockIter<'a, B: BlockData> {
-    block: &'a B,
+/// Iterator over [`BlockRecord`]s: three cursors into one hoisted
+/// [`Columns`] view, so iteration indexes plain slices regardless of
+/// where the block's storage lives.
+pub struct BlockIter<'a> {
+    cols: Columns<'a>,
     tape: usize,
     inst: usize,
     acc: usize,
 }
 
-impl<'a, B: BlockData> Iterator for BlockIter<'a, B> {
+impl<'a> Iterator for BlockIter<'a> {
     type Item = BlockRecord<'a>;
 
     fn next(&mut self) -> Option<BlockRecord<'a>> {
-        let b = self.block;
-        if self.tape >= b.len() {
+        let c = &self.cols;
+        if self.tape >= c.tags.len() {
             return None;
         }
-        let tag = b.tag(self.tape);
-        let group_id = b.group_id(self.tape);
+        let tag = c.tags[self.tape];
+        let group_id = c.group_ids[self.tape];
         self.tape += 1;
         Some(match tag {
             Tag::Inst => {
                 let i = self.inst;
                 self.inst += 1;
-                let (class, count) = b.inst(i);
                 BlockRecord::Inst {
                     group_id,
-                    class,
-                    count,
+                    class: c.inst_class[i],
+                    count: c.inst_count[i],
                 }
             }
             Tag::Mem | Tag::Lds => {
                 let i = self.acc;
                 self.acc += 1;
-                let (kind, bytes_per_lane, addrs) = b.access(i);
+                let (kind, bytes_per_lane, addrs) = c.access(i);
                 if tag == Tag::Mem {
                     BlockRecord::Mem {
                         group_id,

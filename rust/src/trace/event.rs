@@ -12,12 +12,17 @@ pub struct GroupCtx {
     pub group_id: u64,
 }
 
+/// `repr(u8)` with explicit discriminants equal to the archive wire
+/// encoding ([`crate::trace::archive::format::kind_to_u8`]), so a
+/// code-validated mapped column is directly a `&[MemKind]` (see
+/// [`crate::trace::block::Columns`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
 pub enum MemKind {
-    Read,
-    Write,
+    Read = 0,
+    Write = 1,
     /// Read-modify-write (PIC current deposition uses these heavily).
-    Atomic,
+    Atomic = 2,
 }
 
 /// One group-level global-memory instruction with per-lane addresses.

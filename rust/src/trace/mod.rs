@@ -48,7 +48,7 @@ pub mod synth;
 
 pub use block::{
     BlockBuilder, BlockData, BlockRecord, BlockRecorder, BlockSink,
-    EventBlock,
+    Columns, EventBlock,
 };
 pub use event::{GroupCtx, LdsAccess, MemAccess, MemKind, MAX_LANES};
 pub use recorded::{split_half_groups, RecordedDispatch};

@@ -63,7 +63,11 @@ impl RecordedDispatch {
 /// with dense renumbered group ids. See the module docs for the
 /// preconditions. Generic over the recording's storage
 /// ([`BlockData`]): heap blocks and memory-mapped archive blocks both
-/// derive the identical owned half-width stream.
+/// derive the identical owned half-width stream. Each source block's
+/// column view is hoisted once ([`BlockData::columns`], via
+/// `records()`), so mapped archives split at plain-slice scan cost —
+/// this derivation runs once per (V100 × case) and used to pay a
+/// storage resolution per record.
 pub fn split_half_groups<B: BlockData>(
     blocks: &[B],
     half: u32,

@@ -121,6 +121,75 @@ impl TraceStats {
         }
     }
 
+    /// Columnar fold of one whole block: equivalent to calling
+    /// [`TraceStats::on_record_scaled`] on every record in tape order,
+    /// but scanning the hoisted column slices directly — no
+    /// [`crate::trace::block::BlockRecord`] is materialized and (for
+    /// mapped archives) no per-record storage resolution is paid. The
+    /// address payload is never touched: the compacted lane count and
+    /// bytes-per-lane columns carry everything the stats need.
+    pub fn fold_columns_scaled(
+        &mut self,
+        c: &crate::trace::block::Columns<'_>,
+        expansion: f64,
+    ) {
+        use crate::trace::block::Tag;
+        let (mut inst_i, mut acc_i) = (0usize, 0usize);
+        for t in 0..c.tags.len() {
+            let group_id = c.group_ids[t];
+            match c.tags[t] {
+                Tag::Inst => {
+                    let class = c.inst_class[inst_i];
+                    let count = c.inst_count[inst_i];
+                    inst_i += 1;
+                    self.inst.add(
+                        class,
+                        class.expand_count(count, expansion),
+                    );
+                }
+                Tag::Mem => {
+                    let kind = c.acc_kind[acc_i];
+                    let lanes = c.acc_len[acc_i] as u64;
+                    let bytes = lanes * c.acc_bpl[acc_i] as u64;
+                    acc_i += 1;
+                    let class = match kind {
+                        MemKind::Read => InstClass::GlobalLoad,
+                        MemKind::Write => InstClass::GlobalStore,
+                        MemKind::Atomic => InstClass::GlobalAtomic,
+                    };
+                    self.inst.add(class, 1);
+                    self.active_lane_sum += lanes;
+                    match kind {
+                        MemKind::Read => {
+                            self.mem_reads += 1;
+                            self.bytes_read_requested += bytes;
+                        }
+                        MemKind::Write => {
+                            self.mem_writes += 1;
+                            self.bytes_written_requested += bytes;
+                        }
+                        MemKind::Atomic => {
+                            self.mem_atomics += 1;
+                            self.bytes_read_requested += bytes;
+                            self.bytes_written_requested += bytes;
+                        }
+                    }
+                }
+                Tag::Lds => {
+                    let kind = c.acc_kind[acc_i];
+                    acc_i += 1;
+                    let class = match kind {
+                        MemKind::Read => InstClass::LdsLoad,
+                        _ => InstClass::LdsStore,
+                    };
+                    self.inst.add(class, 1);
+                    self.lds_ops += 1;
+                }
+            }
+            self.groups = self.groups.max(group_id + 1);
+        }
+    }
+
     /// Fold one batched record in — the SoA fast path, equivalent to the
     /// [`EventSink`] methods but without rebuilding a 512-byte access
     /// struct per record.
@@ -271,6 +340,41 @@ mod tests {
         s.on_inst(&ctx(7), InstClass::ValuArith, 1);
         s.on_inst(&ctx(3), InstClass::ValuArith, 1);
         assert_eq!(s.groups, 8);
+    }
+
+    #[test]
+    fn columnar_fold_matches_per_record_fold() {
+        use crate::trace::block::{BlockData, EventBlock};
+
+        let mut b = EventBlock::default();
+        b.push_inst(&ctx(0), InstClass::ValuArith, 7);
+        b.push_inst(&ctx(0), InstClass::Branch, 2);
+        b.push_mem(
+            &ctx(1),
+            &MemAccess::contiguous(MemKind::Read, 64, 8, 4),
+        );
+        b.push_mem(
+            &ctx(1),
+            &MemAccess::contiguous(MemKind::Atomic, 256, 4, 4),
+        );
+        b.push_lds(
+            &ctx(2),
+            &LdsAccess::from_lane_addrs(MemKind::Write, &[0, 4], 4),
+        );
+        b.push_mem(
+            &ctx(2),
+            &MemAccess::contiguous(MemKind::Write, 512, 3, 8),
+        );
+
+        for expansion in [1.0, 2.5] {
+            let mut per = TraceStats::default();
+            for rec in b.records() {
+                per.on_record_scaled(&rec, expansion);
+            }
+            let mut col = TraceStats::default();
+            col.fold_columns_scaled(&b.columns(), expansion);
+            assert_eq!(per, col, "expansion {expansion}");
+        }
     }
 
     #[test]

@@ -288,6 +288,59 @@ pub fn flat_json(pairs: &[(String, f64)]) -> String {
     out
 }
 
+/// Today's UTC date as `YYYY-MM-DD` (no `chrono` offline; civil-date
+/// conversion from the unix epoch, Hinnant's algorithm).
+pub fn utc_today() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    civil_from_days((secs / 86_400) as i64)
+}
+
+/// Convert days since 1970-01-01 to a `YYYY-MM-DD` string.
+pub fn civil_from_days(z: i64) -> String {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64; // [0, 146096]
+    let yoe =
+        (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Append `pairs` to a perf-trajectory artifact: a flat JSON object
+/// (the same shape [`parse_flat_json`] reads) whose keys are
+/// `"<date>/<bench name>"`. Existing entries for `date` are replaced
+/// — re-running `--update-baseline` on the same day updates that
+/// day's point instead of duplicating it — and every other date's
+/// entries are preserved, so the committed file accumulates one
+/// dated snapshot per baseline refresh across PRs.
+pub fn trajectory_with(
+    existing: &str,
+    date: &str,
+    pairs: &[(String, f64)],
+) -> anyhow::Result<String> {
+    let mut all: Vec<(String, f64)> = if existing.trim().is_empty() {
+        Vec::new()
+    } else {
+        parse_flat_json(existing).map_err(|e| {
+            anyhow::anyhow!("trajectory file is not flat JSON: {e}")
+        })?
+    };
+    let prefix = format!("{date}/");
+    all.retain(|(k, _)| !k.starts_with(&prefix));
+    for (name, v) in pairs {
+        all.push((format!("{date}/{name}"), *v));
+    }
+    Ok(flat_json(&all))
+}
+
 /// Outcome of [`gate_speedups`].
 pub struct GateOutcome {
     /// Ratios compared against the baseline.
@@ -466,6 +519,65 @@ mod tests {
         assert_eq!(out.checked, 0);
         assert_eq!(out.failures.len(), 1);
         assert!(out.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn civil_dates_from_epoch_days() {
+        assert_eq!(civil_from_days(0), "1970-01-01");
+        assert_eq!(civil_from_days(364), "1970-12-31");
+        assert_eq!(civil_from_days(365), "1971-01-01");
+        // leap handling: 2000-01-01 is day 10957; +31+29 lands on
+        // 2000-03-01
+        assert_eq!(civil_from_days(10_957), "2000-01-01");
+        assert_eq!(civil_from_days(10_957 + 59), "2000-02-29");
+        assert_eq!(civil_from_days(10_957 + 60), "2000-03-01");
+        let today = utc_today();
+        assert_eq!(today.len(), 10);
+        assert_eq!(&today[4..5], "-");
+    }
+
+    #[test]
+    fn trajectory_appends_and_replaces_same_day() {
+        let day1 = trajectory_with(
+            "",
+            "2026-08-01",
+            &[("speedup/a".to_string(), 1.5)],
+        )
+        .unwrap();
+        assert!(day1.contains("\"2026-08-01/speedup/a\": 1.500"));
+
+        // same day again: replaced, not duplicated
+        let day1b = trajectory_with(
+            &day1,
+            "2026-08-01",
+            &[("speedup/a".to_string(), 1.7)],
+        )
+        .unwrap();
+        assert!(day1b.contains("1.700"), "{day1b}");
+        assert!(!day1b.contains("1.500"), "{day1b}");
+
+        // a later date accumulates alongside the first
+        let day2 = trajectory_with(
+            &day1b,
+            "2026-09-01",
+            &[("speedup/a".to_string(), 2.0)],
+        )
+        .unwrap();
+        assert!(day2.contains("2026-08-01/speedup/a"), "{day2}");
+        assert!(day2.contains("2026-09-01/speedup/a"), "{day2}");
+        // and the result still round-trips through the parser
+        assert_eq!(parse_flat_json(&day2).unwrap().len(), 2);
+
+        // an empty-object seed file works too
+        let seeded = trajectory_with(
+            "{\n}\n",
+            "2026-08-01",
+            &[("speedup/x".to_string(), 1.0)],
+        )
+        .unwrap();
+        assert!(seeded.contains("2026-08-01/speedup/x"));
+        // corrupt files are a clean error, not a silent overwrite
+        assert!(trajectory_with("not json", "d", &[]).is_err());
     }
 
     #[test]

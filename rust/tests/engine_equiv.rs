@@ -330,6 +330,107 @@ fn interleaved_engines_share_the_pool_without_crosstalk() {
     assert_eq!(seq_b.lds_stats, eng_b.lds_stats);
 }
 
+/// A kernel that issues only `Inst` records — no access payload at
+/// all, so the routing pass must emit zero-work runs for every shard
+/// (and must not panic on a tape with an empty access stream).
+struct InstOnlyTrace {
+    n: u64,
+}
+
+impl TraceSource for InstOnlyTrace {
+    fn name(&self) -> &str {
+        "inst_only"
+    }
+
+    fn replay(&self, group_size: u32, sink: &mut dyn EventSink) {
+        for_each_group(self.n, group_size, |ctx, _range| {
+            sink.on_inst(ctx, rocline::arch::InstClass::ValuArith, 3);
+            sink.on_inst(ctx, rocline::arch::InstClass::Salu, 1);
+        });
+    }
+}
+
+#[test]
+fn pathological_shapes_stay_equivalent() {
+    // shard count far above the CU count (the engine clamps to the
+    // instance count), a single L2 channel, and both routed and
+    // rescan engines on the same degenerate geometry
+    let mut spec = presets::mi60();
+    spec.l1.instances = 2;
+    spec.l2.channels = 1;
+    let t = StreamTrace::babelstream("copy", 1 << 10);
+    assert_raw_equivalence(&t, &spec, &[1, 2, 64]);
+
+    let mixed = MixedTrace {
+        n: 1 << 10,
+        span: 1 << 20,
+        seed: 23,
+    };
+    assert_raw_equivalence(&mixed, &spec, &[64]);
+
+    // single partial group: every record maps to CU 0, so all other
+    // shards' routed runs are empty — zero-work shards, not a panic
+    let tiny = StreamTrace::babelstream("dot", 32);
+    assert_raw_equivalence(&tiny, &spec, &[2, 16]);
+}
+
+#[test]
+fn rescan_baseline_equivalent_on_pathological_shapes() {
+    let mut spec = presets::mi60();
+    spec.l1.instances = 2;
+    spec.l2.channels = 1;
+    let t = StreamTrace::babelstream("add", 1 << 10);
+
+    let mut seq = MemHierarchy::new(&spec);
+    t.replay(spec.group_size, &mut seq);
+    seq.flush();
+
+    let mut rescan = ShardedHierarchy::with_shards_rescan(&spec, 16);
+    {
+        let mut b = BlockBuilder::new(&mut rescan);
+        t.replay(spec.group_size, &mut b);
+        b.finish();
+    }
+    rescan.flush();
+    assert_eq!(seq.traffic, rescan.traffic);
+    assert_eq!(seq.l2_hit_rate(), rescan.l2_hit_rate());
+}
+
+#[test]
+fn all_inst_blocks_route_zero_work_shards() {
+    // a trace whose every record is Tag::Inst: no access stream, no
+    // misses, no traffic — the routing pass must produce empty runs
+    // and the stats fold must still count every instruction
+    let mut one_channel = presets::v100();
+    one_channel.l2.channels = 1;
+    for spec in [presets::mi100(), one_channel] {
+        let t = InstOnlyTrace { n: 1 << 10 };
+        let mut seq_stats = TraceStats::default();
+        t.replay(spec.group_size, &mut seq_stats);
+        let mut seq = MemHierarchy::new(&spec);
+        t.replay(spec.group_size, &mut seq);
+        seq.flush();
+
+        for threads in [1, 5, 16] {
+            let mut sharded =
+                ShardedHierarchy::with_shards(&spec, threads);
+            {
+                let mut b = BlockBuilder::new(&mut sharded);
+                t.replay(spec.group_size, &mut b);
+                b.finish();
+            }
+            sharded.flush();
+            assert_eq!(
+                seq.traffic, sharded.traffic,
+                "{} threads on {}",
+                threads, spec.name
+            );
+            assert_eq!(sharded.traffic, MemTraffic::default());
+            assert_eq!(seq_stats, sharded.take_stats());
+        }
+    }
+}
+
 #[test]
 fn empty_and_tiny_dispatches_equivalent() {
     // degenerate shapes: single group, partial group, zero work

@@ -348,3 +348,79 @@ fn version_and_endianness_mismatches_are_explicit() {
         TraceStore::with_dir(Some(dir.path().to_path_buf()));
     assert!(healed.get_or_record(&cfg).is_mapped());
 }
+
+#[test]
+fn prune_deletes_dead_keys_and_preserves_live_ones() {
+    use rocline::trace::archive::gc;
+    use std::collections::HashSet;
+
+    let dir = TmpDir::new("gc");
+    let live_cfg = tiny_case("tiny-gc-live", 1);
+    let dead_cfg = tiny_case("tiny-gc-dead", 1);
+    let live_path =
+        CaseTrace::record(&live_cfg).spill_to(dir.path()).unwrap();
+    let dead_path =
+        CaseTrace::record(&dead_cfg).spill_to(dir.path()).unwrap();
+    assert!(live_path.exists() && dead_path.exists());
+
+    // the live set is exactly what `trace-info --prune` computes:
+    // content-addressed file names of the current case set
+    let live: HashSet<String> = [&live_cfg]
+        .iter()
+        .map(|c| {
+            CaseTrace::archive_path(Path::new(""), c)
+                .file_name()
+                .unwrap()
+                .to_string_lossy()
+                .into_owned()
+        })
+        .collect();
+    let report = gc::prune_dir(dir.path(), &live).unwrap();
+    assert_eq!(report.kept, vec![live_path.clone()]);
+    assert_eq!(report.deleted, vec![dead_path.clone()]);
+    assert!(live_path.exists());
+    assert!(!dead_path.exists());
+
+    // the survivor must still be a fully valid, replayable archive
+    // that the store serves as a hit — prune never touches live data
+    let mapped = MappedCaseTrace::open(&live_path).unwrap();
+    assert!(mapped.dispatch_count() > 0);
+    let store =
+        TraceStore::with_dir(Some(dir.path().to_path_buf()));
+    assert!(store.get_or_record(&live_cfg).is_mapped());
+    assert_eq!(store.recordings(), 0);
+
+    // pruning again with the same live set is a no-op
+    let again = gc::prune_dir(dir.path(), &live).unwrap();
+    assert_eq!(again.kept.len(), 1);
+    assert!(again.deleted.is_empty());
+}
+
+#[test]
+fn config_change_rekeys_and_prune_collects_the_stale_file() {
+    use rocline::trace::archive::gc;
+    use std::collections::HashSet;
+
+    let dir = TmpDir::new("gc-rekey");
+    let mut cfg = tiny_case("tiny-gc-rk", 1);
+    CaseTrace::record(&cfg).spill_to(dir.path()).unwrap();
+    // a config change produces a new content key; the old file is now
+    // a dead key that can never hit again
+    cfg.steps = 2;
+    let new_path =
+        CaseTrace::record(&cfg).spill_to(dir.path()).unwrap();
+
+    let live: HashSet<String> = [CaseTrace::archive_path(
+        Path::new(""),
+        &cfg,
+    )
+    .file_name()
+    .unwrap()
+    .to_string_lossy()
+    .into_owned()]
+    .into_iter()
+    .collect();
+    let report = gc::prune_dir(dir.path(), &live).unwrap();
+    assert_eq!(report.kept, vec![new_path]);
+    assert_eq!(report.deleted.len(), 1);
+}
