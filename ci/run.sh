@@ -23,10 +23,12 @@
 #                                  # record-once pre-job contract)
 #
 # CI entry points (see .github/workflows/ci.yml):
-#   * record pre-job — `rocline record --out trace-archive` builds the
-#     trace archive once, cached under the cases' content key
+#   * record pre-job — `rocline record --out trace-archive
+#     --compress=auto` builds the trace archive once with format-v2
+#     per-section compression, cached under the cases' content key
 #     (`rocline record --print-key`); every shard job restores it and
-#     must replay archive-hit only.
+#     must replay the compressed archive archive-hit only
+#     (ROCLINE_REQUIRE_ARCHIVE_HIT=1).
 #   * shard matrix — the workflow fans the sweep out as a matrix job
 #     over `--shard 0/2` and `--shard 1/2`. Shards deterministically
 #     partition the (GPU, case) matrix (coordinator/shard.rs), each
@@ -122,12 +124,30 @@ grep -E '"speedup/' BENCH_hotpath.json || {
     exit 1
 }
 
-echo "== bench gate: speedup/* vs ci/bench_baseline.json =="
+echo "== bench gate: speedup/* + size/* vs ci/bench_baseline.json =="
 if [ "$UPDATE_BASELINE" = 1 ]; then
     ./target/release/rocline bench-gate --update-baseline
 else
     ./target/release/rocline bench-gate
 fi
+
+# compressed-archive smoke: a 1-step record with --compress=auto must
+# produce a v2 archive that trace-info can summarize (per-section
+# encodings + ratios) and that a re-record verifies as an idempotent
+# archive hit ("already archived" = the compressed file mmap'd,
+# checksum-validated and decoded cleanly). This is the record-once
+# pre-job contract in miniature, run on every CI job.
+echo "== archive smoke: record --compress=auto round trip =="
+SMOKE_ARCH="$(mktemp -d "${TMPDIR:-/tmp}/rocline-smoke-arch.XXXXXX")"
+trap 'rm -rf "$SMOKE_ARCH"' EXIT
+./target/release/rocline record --out "$SMOKE_ARCH" --steps 1 --compress=auto lwfa
+./target/release/rocline trace-info "$SMOKE_ARCH"
+./target/release/rocline record --out "$SMOKE_ARCH" --steps 1 --compress=auto lwfa \
+    | grep -q "already archived" || {
+    echo "compressed archive did not hit on re-record" >&2
+    exit 1
+}
+./target/release/rocline trace-info "$SMOKE_ARCH" --prune lwfa --steps 1
 
 if [ -n "$SHARD" ]; then
     OUT="out-shard-${SHARD//\//-of-}"

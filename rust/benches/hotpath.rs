@@ -186,6 +186,7 @@ fn main() {
     // acceptance-critical comparison — replaying a mapped archive must
     // track in-memory replay (the engines are generic over storage;
     // the gate holds speedup/replay_mmap_vs_mem near 1.0)
+    let mut compress_ratio: Option<f64> = None;
     {
         let mut acfg = CaseConfig::lwfa();
         acfg.name = "bench-arch".into();
@@ -273,6 +274,84 @@ fn main() {
                 .total_time_s()
             },
         );
+
+        // format v2 compression A/B: replay a genuine v1 archive vs
+        // the v2 auto-compressed form of the same recording (decode
+        // arena vs pure mmap — the decode cost is paid once at open,
+        // so replay should track ~1.0), plus the size-ratio metric
+        // the bench gate holds a floor under
+        {
+            use rocline::trace::archive::{ArchiveInfo, Compress};
+            let v1_dir = std::env::temp_dir().join(format!(
+                "rocline-bench-archive-v1-{}",
+                std::process::id()
+            ));
+            let v2_dir = std::env::temp_dir().join(format!(
+                "rocline-bench-archive-v2-{}",
+                std::process::id()
+            ));
+            let v1_path = trace
+                .spill_to_with(&v1_dir, Compress::V1)
+                .expect("spill v1 archive");
+            let v2_path = trace
+                .spill_to_with(&v2_dir, Compress::Auto)
+                .expect("spill v2 archive");
+            let v1 =
+                MappedCaseTrace::open(&v1_path).expect("open v1");
+            let v2 =
+                MappedCaseTrace::open(&v2_path).expect("open v2");
+            r.bench_throughput(
+                "archive/replay_v1_MI100",
+                arch_items,
+                || {
+                    CaseRun::from_mapped(
+                        spec.clone(),
+                        acfg.clone(),
+                        &v1,
+                        4,
+                    )
+                    .session
+                    .total_time_s()
+                },
+            );
+            r.bench_throughput(
+                "archive/replay_v2c_MI100",
+                arch_items,
+                || {
+                    CaseRun::from_mapped(
+                        spec.clone(),
+                        acfg.clone(),
+                        &v2,
+                        4,
+                    )
+                    .session
+                    .total_time_s()
+                },
+            );
+            // open cost including the one-shot section decode
+            r.bench("archive/open_decode_v2", || {
+                MappedCaseTrace::open(&v2_path)
+                    .expect("open v2")
+                    .decoded_bytes()
+            });
+            let info = ArchiveInfo::scan(&v2_path).expect("scan v2");
+            println!(
+                "archive compression: columns {:.2}x, addrs {:.2}x \
+                 ({} -> {} file bytes)",
+                info.compress_ratio(),
+                info.addr_ratio(),
+                std::fs::metadata(&v1_path)
+                    .map(|m| m.len())
+                    .unwrap_or(0),
+                info.file_bytes,
+            );
+            compress_ratio = Some(info.compress_ratio());
+            drop(v1);
+            drop(v2);
+            let _ = std::fs::remove_dir_all(&v1_dir);
+            let _ = std::fs::remove_dir_all(&v2_dir);
+        }
+
         drop(mapped);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -383,6 +462,15 @@ fn main() {
             "memsim/l2_merge_kway",
             "memsim/l2_merge_sort",
         ),
+        // v2 auto-compressed archive replay vs a genuine v1 archive
+        // of the same recording (expect ~1.0: decode happens once at
+        // open; a collapse means replay started paying per-scan
+        // decode cost)
+        (
+            "speedup/replay_v2_vs_v1",
+            "archive/replay_v2c_MI100",
+            "archive/replay_v1_MI100",
+        ),
     ];
     for (name, fast, base) in pairs {
         if let (Some(f), Some(b)) =
@@ -400,6 +488,18 @@ fn main() {
                 });
             }
         }
+    }
+
+    // the size-ratio metric: raw column bytes / stored column bytes
+    // of the auto-compressed bench archive — gated like a speedup
+    // (bigger is better; shrinking less is a regression)
+    if let Some(ratio) = compress_ratio {
+        println!("{:<44} {ratio:>10.2}x", "size/archive_compress_ratio");
+        results.push(BenchResult {
+            name: "size/archive_compress_ratio".to_string(),
+            time: rocline::util::Summary::of(&[1.0]),
+            throughput: Some(ratio),
+        });
     }
 
     let json_path =

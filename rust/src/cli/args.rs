@@ -4,10 +4,20 @@
 //! The guard rail: option handling is loud instead of silently wrong.
 //! Every `--option` — space form, `=` form, or bare flag — must be a
 //! known [`VALUED`] key or a known [`FLAGS`] name; anything else is a
-//! parse **error**. The historical failure mode (an option missing
-//! from the `VALUED` whitelist silently became a flag plus a stray
-//! positional) is now a hard error in both forms, and a typo'd
-//! `--key=value` can no longer be silently dropped.
+//! parse **error**. The historical failure modes are all hard errors
+//! now:
+//!
+//! * an option missing from the `VALUED` whitelist silently became a
+//!   flag plus a stray positional — error, both forms;
+//! * a **repeated** valued option silently shadowed the earlier value
+//!   (`--gpu mi60 ... --gpu=mi100` profiled a different GPU than half
+//!   the command line says) — error, both forms, either mix;
+//! * numeric values were parsed with a one-size error message and
+//!   sign/overflow laxness: [`Args::get_u64`] now rejects sign
+//!   prefixes outright and reports range overflow as what it is, and
+//!   [`Args::get_u32`] bounds-checks instead of letting callers
+//!   truncate with `as u32` (a 2^32+1 iteration count used to become
+//!   1 silently).
 
 use std::collections::HashMap;
 
@@ -21,10 +31,10 @@ pub struct Args {
 
 /// Options that take a value in space-separated form (`--key value`).
 /// `--key=value` works for these and for any future key alike.
-const VALUED: [&str; 18] = [
+const VALUED: [&str; 19] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
-    "trace-dir", "trajectory",
+    "trace-dir", "trajectory", "compress",
 ];
 
 /// Known boolean flags. Anything else with `--` and no `=` is an
@@ -60,15 +70,12 @@ impl Args {
                         VALUED.contains(&key),
                         "unknown option --{key}"
                     );
-                    // repeats: last one wins (deterministic, shell
-                    // override-friendly)
-                    out.options
-                        .insert(key.to_string(), value.to_string());
+                    out.insert_once(key, value.to_string())?;
                 } else if VALUED.contains(&body) {
                     let v = it.next().ok_or_else(|| {
                         anyhow::anyhow!("--{body} needs a value")
                     })?;
-                    out.options.insert(body.to_string(), v);
+                    out.insert_once(body, v)?;
                 } else if FLAGS.contains(&body) {
                     out.flags.push(body.to_string());
                 } else {
@@ -79,6 +86,24 @@ impl Args {
             }
         }
         Ok(out)
+    }
+
+    /// Record a valued option, rejecting repeats: a shadowed value is
+    /// never what the command line *says* — half of it lies. (Boolean
+    /// flags stay repeatable; they are idempotent.)
+    fn insert_once(
+        &mut self,
+        key: &str,
+        value: String,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.options.contains_key(key),
+            "--{key} given more than once (earlier value '{}' would \
+             be silently shadowed)",
+            self.options[key]
+        );
+        self.options.insert(key.to_string(), value);
+        Ok(())
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -92,15 +117,42 @@ impl Args {
     pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| {
-                anyhow::anyhow!("--{key}: '{v}' is not an integer")
-            }),
+            Some(v) => parse_u64(key, v),
         }
+    }
+
+    /// [`Args::get_u64`] bounded to u32 — for values callers feed into
+    /// u32 APIs. The bound check lives *here* so call sites cannot
+    /// truncate silently with `as u32`.
+    pub fn get_u32(&self, key: &str, default: u32) -> anyhow::Result<u32> {
+        let v = self.get_u64(key, default as u64)?;
+        anyhow::ensure!(
+            v <= u32::MAX as u64,
+            "--{key}: {v} is out of range (max {})",
+            u32::MAX
+        );
+        Ok(v as u32)
     }
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+}
+
+/// Strict u64 parse for option values: digits only — no sign prefix,
+/// no whitespace, no trailing garbage — with overflow reported as a
+/// range error rather than a generic "not an integer".
+pub fn parse_u64(key: &str, v: &str) -> anyhow::Result<u64> {
+    anyhow::ensure!(
+        !v.is_empty() && v.bytes().all(|b| b.is_ascii_digit()),
+        "--{key}: '{v}' is not an unsigned integer"
+    );
+    v.parse().map_err(|_| {
+        anyhow::anyhow!(
+            "--{key}: {v} overflows a 64-bit integer (max {})",
+            u64::MAX
+        )
+    })
 }
 
 #[cfg(test)]
@@ -157,14 +209,27 @@ mod tests {
     }
 
     #[test]
-    fn repeated_flags_and_options() {
+    fn repeated_flags_are_idempotent() {
         let a = parse("reproduce --all --all --pjrt");
         assert!(a.flag("all"));
         assert!(a.flag("pjrt"));
         assert!(!a.flag("nope"));
-        // repeated valued options: last wins, both syntaxes
-        let a = parse("profile --gpu mi60 --gpu=mi100");
-        assert_eq!(a.get("gpu"), Some("mi100"));
+    }
+
+    #[test]
+    fn repeated_valued_options_are_loud_errors() {
+        // regression: repeats used to shadow silently (last one won),
+        // so `--gpu mi60 ... --gpu=mi100` profiled mi100 while half
+        // the command line said mi60 — in every syntax mix
+        let e = parse_err("profile --gpu mi60 --gpu mi100");
+        assert!(e.contains("--gpu given more than once"), "{e}");
+        assert!(e.contains("mi60"), "names the shadowed value: {e}");
+        let e = parse_err("profile --gpu=mi60 --gpu=mi100");
+        assert!(e.contains("more than once"), "{e}");
+        let e = parse_err("profile --gpu mi60 --gpu=mi100");
+        assert!(e.contains("more than once"), "{e}");
+        let e = parse_err("reproduce --out=a --out b");
+        assert!(e.contains("--out given more than once"), "{e}");
     }
 
     #[test]
@@ -228,6 +293,14 @@ mod tests {
     }
 
     #[test]
+    fn compress_takes_a_value_both_ways() {
+        let a = parse("record --compress auto --out traces");
+        assert_eq!(a.get("compress"), Some("auto"));
+        let a = parse("record --compress=force");
+        assert_eq!(a.get("compress"), Some("force"));
+    }
+
+    #[test]
     fn trace_dir_takes_a_value_both_ways() {
         let a = parse("reproduce --trace-dir traces --all");
         assert_eq!(a.get("trace-dir"), Some("traces"));
@@ -245,9 +318,48 @@ mod tests {
     }
 
     #[test]
-    fn bad_integer_is_error() {
+    fn numeric_parsing_is_strict() {
+        // regression set: every malformed value must be a loud error,
+        // with overflow reported as overflow
         let a = parse("x --steps abc");
+        let e = a.get_u64("steps", 1).unwrap_err().to_string();
+        assert!(e.contains("not an unsigned integer"), "{e}");
+
+        // trailing garbage
+        let a = parse("x --steps 12abc");
         assert!(a.get_u64("steps", 1).is_err());
+        // sign prefixes: '+7'/'-7' are not digit strings
+        let a = parse("x --steps +7");
+        assert!(a.get_u64("steps", 1).is_err());
+        let a = parse("x --n -3");
+        assert!(a.get_u64("n", 1).is_err());
+        // hex and exponent forms are rejected, not misread
+        let a = parse("x --n 0x10");
+        assert!(a.get_u64("n", 1).is_err());
+        let a = parse("x --n 1e3");
+        assert!(a.get_u64("n", 1).is_err());
+
+        // u64 overflow names the range, not "not an integer"
+        let a = parse("x --n 99999999999999999999999999");
+        let e = a.get_u64("n", 1).unwrap_err().to_string();
+        assert!(e.contains("overflows a 64-bit integer"), "{e}");
+
+        // in-range values still parse, defaults still apply
+        let a = parse("x --n 17");
+        assert_eq!(a.get_u64("n", 1).unwrap(), 17);
+        assert_eq!(a.get_u64("missing", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn get_u32_bounds_instead_of_truncating() {
+        // regression: `get_u64(..)? as u32` truncated 2^32+1 to 1
+        let a = parse("x --iters 4294967297");
+        let e = a.get_u32("iters", 1).unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        let a = parse("x --iters 4294967295");
+        assert_eq!(a.get_u32("iters", 1).unwrap(), u32::MAX);
+        let a = parse("x");
+        assert_eq!(a.get_u32("iters", 9).unwrap(), 9);
     }
 
     #[test]

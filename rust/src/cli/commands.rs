@@ -85,9 +85,12 @@ pub fn reproduce(args: &Args) -> anyhow::Result<()> {
 /// with zero live recordings. Idempotent: cases already archived are
 /// verified (mmap + checksums) and skipped. `--print-key` prints the
 /// combined content key of the requested cases without recording
-/// (CI's cache key).
+/// (CI's cache key). `--compress=[none|auto|force]` picks the format
+/// v2 per-section compression policy (default `auto`: each section
+/// keeps whichever of raw/encoded is measured smaller).
 pub fn record(args: &Args) -> anyhow::Result<()> {
     use crate::coordinator::{CaseTrace, TraceStore};
+    use crate::trace::archive::Compress;
 
     let mut cases: Vec<CaseConfig> = if args.positional.is_empty() {
         vec![CaseConfig::lwfa(), CaseConfig::tweac()]
@@ -140,7 +143,10 @@ pub fn record(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
 
-    let store = TraceStore::with_dir(Some(out.clone()));
+    let compress: Compress =
+        args.get_or("compress", "auto").parse()?;
+    let store =
+        TraceStore::with_dir_compress(Some(out.clone()), compress);
     for cfg in &cases {
         let t0 = std::time::Instant::now();
         let stored = store.get_or_record(cfg);
@@ -249,10 +255,15 @@ pub fn trace_info(args: &Args) -> anyhow::Result<()> {
         for p in &report.deleted {
             println!("pruned {}", p.display());
         }
+        for p in &report.swept_temps {
+            println!("swept stale spill temp {}", p.display());
+        }
         println!(
-            "prune: {} live archive(s) kept, {} dead key(s) deleted",
+            "prune: {} live archive(s) kept, {} dead key(s) \
+             deleted, {} stale temp(s) swept",
             report.kept.len(),
-            report.deleted.len()
+            report.deleted.len(),
+            report.swept_temps.len()
         );
         true
     } else {
@@ -285,6 +296,8 @@ pub fn trace_info(args: &Args) -> anyhow::Result<()> {
     );
     let (mut blocks, mut records, mut words, mut bytes) =
         (0u64, 0u64, 0u64, 0u64);
+    let (mut raw_cols, mut stored_cols) = (0u64, 0u64);
+    let (mut raw_addr, mut stored_addr) = (0u64, 0u64);
     for i in &infos {
         println!(
             "{:<10} {:>3} {:>6} {:>9} {:>7} {:>10} {:>12} {:>12}  \
@@ -299,22 +312,54 @@ pub fn trace_info(args: &Args) -> anyhow::Result<()> {
             i.file_bytes,
             i.case_key,
         );
+        // per-section encoding report: which columns compressed, by
+        // how much (absent for all-raw / v1 archives)
+        let enc = i.encoding_summary();
+        if !enc.is_empty() {
+            println!(
+                "{:<10} enc {:.2}x overall ({} -> {} column \
+                 bytes): {enc}",
+                "",
+                i.compress_ratio(),
+                i.raw_column_bytes(),
+                i.stored_column_bytes(),
+            );
+        }
         blocks += i.blocks;
         records += i.records;
         words += i.addr_words;
         bytes += i.file_bytes;
+        raw_cols += i.raw_column_bytes();
+        stored_cols += i.stored_column_bytes();
+        raw_addr += i.columns[i.columns.len() - 1].raw_bytes;
+        stored_addr += i.columns[i.columns.len() - 1].stored_bytes;
     }
     println!(
-        "{} archive(s), format v{FORMAT_VERSION}: {blocks} block(s), \
-         {records} record(s), {words} addr word(s), {bytes} bytes on \
-         disk",
+        "{} archive(s), reader format v{FORMAT_VERSION}: {blocks} \
+         block(s), {records} record(s), {words} addr word(s), \
+         {bytes} bytes on disk",
         infos.len()
     );
+    if stored_cols > 0 && stored_cols != raw_cols {
+        println!(
+            "compression: columns {:.2}x ({raw_cols} -> \
+             {stored_cols} bytes), addrs {:.2}x ({raw_addr} -> \
+             {stored_addr} bytes)",
+            raw_cols as f64 / stored_cols as f64,
+            if stored_addr == 0 {
+                1.0
+            } else {
+                raw_addr as f64 / stored_addr as f64
+            },
+        );
+    }
     Ok(())
 }
 
-/// Bench regression gate: compare `speedup/*` ratios in the hotpath
-/// bench artifact against the checked-in baseline; fail on >tolerance
+/// Bench regression gate: compare the `speedup/*` ratios **and the
+/// `size/*` metrics** (archive compression ratios — a shrink in how
+/// much the archive shrinks is a regression too) in the hotpath bench
+/// artifact against the checked-in baseline; fail on >tolerance
 /// regression. `--update-baseline` refreshes the baseline instead.
 pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
     use crate::util::bench;
@@ -342,17 +387,18 @@ pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
         })?;
     let current: Vec<(String, f64)> = bench::parse_flat_json(&bench_raw)?
         .into_iter()
-        .filter(|(k, _)| k.starts_with("speedup/"))
+        .filter(|(k, _)| bench::is_gated_metric(k))
         .collect();
     anyhow::ensure!(
         !current.is_empty(),
-        "{bench_path} has no speedup/* entries (bench names drifted?)"
+        "{bench_path} has no speedup/* or size/* entries (bench \
+         names drifted?)"
     );
 
     if args.flag("update-baseline") {
         std::fs::write(baseline_path, bench::flat_json(&current))?;
         println!(
-            "wrote {baseline_path} ({} speedup entr{})",
+            "wrote {baseline_path} ({} gated entr{})",
             current.len(),
             if current.len() == 1 { "y" } else { "ies" }
         );
@@ -380,7 +426,7 @@ pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
             bench::trajectory_with(&existing, &date, &current)?;
         std::fs::write(traj_path, updated)?;
         println!(
-            "appended {} dated speedup entr{} to {traj_path} \
+            "appended {} dated gated entr{} to {traj_path} \
              ({date})",
             current.len(),
             if current.len() == 1 { "y" } else { "ies" }
@@ -406,7 +452,7 @@ pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
         outcome.failures.join("\n  ")
     );
     println!(
-        "bench gate ok: {} speedup ratio(s) within {:.0}% of baseline",
+        "bench gate ok: {} gated metric(s) within {:.0}% of baseline",
         outcome.checked,
         tolerance * 100.0
     );
@@ -530,7 +576,9 @@ pub fn roofline(args: &Args) -> anyhow::Result<()> {
 
 pub fn babelstream(args: &Args) -> anyhow::Result<()> {
     let n = args.get_u64("n", 1 << 25)?;
-    let iters = args.get_u64("iters", 100)? as u32;
+    // bounded parse: `get_u64(..)? as u32` silently truncated 2^32+1
+    // iterations to 1
+    let iters = args.get_u32("iters", 100)?;
     match args.get_or("backend", "sim") {
         "host" => {
             let mut s = HostStream::new(n as usize);
@@ -571,7 +619,7 @@ pub fn membench(args: &Args) -> anyhow::Result<()> {
 
 pub fn pic(args: &Args) -> anyhow::Result<()> {
     let cfg = case_arg(args)?;
-    let steps = args.get_u64("steps", cfg.steps as u64)? as u32;
+    let steps = args.get_u32("steps", cfg.steps)?;
     if args.flag("pjrt") {
         return pic_pjrt(args, &cfg, steps);
     }

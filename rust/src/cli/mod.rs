@@ -3,7 +3,8 @@
 //! ```text
 //! rocline reproduce [--out DIR] [--shard i/n] [--trace-dir D]
 //!                   [--pjrt] [IDS...|--all]
-//! rocline record [--out DIR] [--steps N] [--print-key] [CASES...]
+//! rocline record [--out DIR] [--steps N] [--print-key]
+//!                [--compress none|auto|force] [CASES...]
 //! rocline trace-info <DIR|FILE> [--prune [CASES...] [--steps N]]
 //! rocline profile --gpu G --case C [--tool rocprof|nvprof] [--csv F]
 //! rocline roofline --gpu G --case C [--svg F]
@@ -69,14 +70,22 @@ COMMANDS:
                trace-archive/), --steps N, cases... (default all)
                --print-key prints the cases' combined content key
                without recording (CI cache key)
+               --compress none|auto|force picks the format v2
+               per-section column compression (default auto: keep
+               whichever of raw/delta-varint/RLE measures smaller;
+               compressed sections decode once at open, raw sections
+               stay zero-copy mmap)
   trace-info   print an archive's contents (cases, dispatches, blocks,
-               records, address words, bytes, format version) from its
-               index alone — no trace data deserialized
+               records, address words, bytes, format version, and the
+               per-section encodings + compression ratios of v2
+               archives) from its index alone — no trace data
+               deserialized
                --prune first deletes archive files whose content keys
                are not in the given case set (default: all known
-               cases; --steps N to match a record --steps N archive) —
-               the GC for long-lived CI caches, where dead keys can
-               never hit again
+               cases; --steps N to match a record --steps N archive)
+               and sweeps spill temp files orphaned by crashed
+               processes — the GC for long-lived CI caches, where
+               dead keys can never hit again
   profile      profile a PIC case on a simulated GPU
                options: --gpu v100|mi60|mi100  --case lwfa|tweac
                         --tool rocprof|nvprof  --csv FILE  --steps N
@@ -89,9 +98,10 @@ COMMANDS:
   pic          run the PIC simulation (native, or --pjrt for the AOT
                path) [--case C] [--steps N]
   artifacts    list the AOT artifacts [--dir D]
-  bench-gate   compare BENCH_hotpath.json speedup/* ratios against the
-               checked-in baseline (ci/bench_baseline.json); fails on
-               >20% regression. options: --bench F --baseline F
+  bench-gate   compare BENCH_hotpath.json speedup/* ratios and size/*
+               metrics (archive compression) against the checked-in
+               baseline (ci/bench_baseline.json); fails on >20%
+               regression. options: --bench F --baseline F
                --tolerance T (default 0.2) --update-baseline (also
                appends a dated snapshot to the committed perf
                trajectory, --trajectory F, default

@@ -44,8 +44,9 @@ use crate::pic::kernels::{
 };
 use crate::pic::{CaseConfig, PicSim};
 use crate::trace::archive::{
-    self, CaseMeta, MappedCaseTrace,
+    self, CaseMeta, Compress, MappedCaseTrace,
 };
+use crate::util::pool::lock_recover;
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
 use crate::trace::TraceSource;
 
@@ -120,7 +121,7 @@ impl CaseTrace {
             self.base_group_size,
             group_size
         );
-        let mut slot = self.halved.lock().unwrap();
+        let mut slot = lock_recover(&self.halved);
         if let Some(h) = slot.as_ref() {
             return Arc::clone(h);
         }
@@ -146,10 +147,23 @@ impl CaseTrace {
     }
 
     /// Spill this recording to `dir` as a trace archive file
-    /// (atomically; see [`crate::trace::archive::writer`]). Returns
-    /// the content-addressed path. Idempotent: re-spilling the same
-    /// recording rewrites an identical file.
+    /// (atomically; see [`crate::trace::archive::writer`]), with the
+    /// default [`Compress::Auto`] per-section policy. Returns the
+    /// content-addressed path. Idempotent: re-spilling the same
+    /// recording under the same policy rewrites an identical file.
     pub fn spill_to(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        self.spill_to_with(dir, Compress::Auto)
+    }
+
+    /// [`CaseTrace::spill_to`] with an explicit compression policy
+    /// (the `record --compress` plumbing; [`Compress::V1`] lets the
+    /// compatibility tests and the v1-vs-v2 bench produce genuine v1
+    /// files).
+    pub fn spill_to_with(
+        &self,
+        dir: &Path,
+        compress: Compress,
+    ) -> anyhow::Result<PathBuf> {
         let manifest = self.cfg.manifest_line();
         // the archive is only useful if a later process can parse the
         // manifest back to this exact config (TraceStore::resolve
@@ -163,7 +177,7 @@ impl CaseTrace {
              name?)",
             self.cfg.name
         );
-        archive::write_case_archive(
+        archive::write_case_archive_with(
             dir,
             &CaseMeta {
                 name: &self.cfg.name,
@@ -174,6 +188,7 @@ impl CaseTrace {
                 final_kinetic_energy: self.final_kinetic_energy,
             },
             &self.base,
+            compress,
         )
     }
 
@@ -238,6 +253,9 @@ impl StoredTrace {
 #[derive(Default)]
 pub struct TraceStore {
     dir: Option<PathBuf>,
+    /// Per-section compression policy for spills (hits replay
+    /// whatever form the archive already holds).
+    compress: Compress,
     entries: Mutex<HashMap<String, Arc<Mutex<Option<StoredTrace>>>>>,
     recordings: AtomicUsize,
     archive_hits: AtomicUsize,
@@ -250,10 +268,21 @@ impl TraceStore {
         TraceStore::default()
     }
 
-    /// Store with a persistent archive directory as its first tier.
+    /// Store with a persistent archive directory as its first tier
+    /// (spills use the default [`Compress::Auto`] policy).
     pub fn with_dir(dir: Option<PathBuf>) -> TraceStore {
+        TraceStore::with_dir_compress(dir, Compress::Auto)
+    }
+
+    /// [`TraceStore::with_dir`] with an explicit spill compression
+    /// policy (`rocline record --compress`).
+    pub fn with_dir_compress(
+        dir: Option<PathBuf>,
+        compress: Compress,
+    ) -> TraceStore {
         TraceStore {
             dir,
+            compress,
             ..TraceStore::default()
         }
     }
@@ -262,13 +291,13 @@ impl TraceStore {
     /// and spill.
     pub fn get_or_record(&self, cfg: &CaseConfig) -> StoredTrace {
         let entry = {
-            let mut map = self.entries.lock().unwrap();
+            let mut map = lock_recover(&self.entries);
             Arc::clone(
                 map.entry(cfg.name.clone())
                     .or_insert_with(|| Arc::new(Mutex::new(None))),
             )
         };
-        let mut slot = entry.lock().unwrap();
+        let mut slot = lock_recover(&entry);
         if let Some(t) = slot.as_ref() {
             return t.clone();
         }
@@ -316,7 +345,7 @@ impl TraceStore {
         self.recordings.fetch_add(1, Ordering::Relaxed);
         let trace = Arc::new(CaseTrace::record(cfg));
         if let Some(dir) = &self.dir {
-            match trace.spill_to(dir) {
+            match trace.spill_to_with(dir, self.compress) {
                 Ok(_) => {
                     self.spills.fetch_add(1, Ordering::Relaxed);
                 }

@@ -62,7 +62,7 @@ use crate::arch::GpuSpec;
 use crate::trace::block::{BlockData, BlockSink, Columns, EventBlock, Tag};
 use crate::trace::stats::TraceStats;
 use crate::trace::MemKind;
-use crate::util::pool::{Latch, WorkerPool};
+use crate::util::pool::{lock_recover, Latch, WorkerPool};
 
 /// Process a batch once it holds this many records…
 const BATCH_RECORDS: usize = 1 << 16;
@@ -926,9 +926,11 @@ impl ShardedHierarchy {
         let stage = Arc::clone(&self.stage);
         let threads = self.threads;
         WorkerPool::global().submit(&latch, move || {
-            stage
-                .lock()
-                .unwrap()
+            // recover a poisoned stage lock: if an earlier channel
+            // phase panicked, its payload is re-raised at the next
+            // `drain_l2` wait — cascading a PoisonError here would
+            // only bury that first failure (see util::pool)
+            lock_recover(&stage)
                 .replay(batch, channels, l2_line, threads);
         });
         self.l2_pending = Some(latch);
@@ -940,7 +942,7 @@ impl ShardedHierarchy {
         if let Some(latch) = self.l2_pending.take() {
             WorkerPool::global().wait(&latch);
         }
-        let mut stage = self.stage.lock().unwrap();
+        let mut stage = lock_recover(&self.stage);
         for lane in stage.lanes.iter_mut() {
             let d = std::mem::take(&mut lane.delta);
             self.traffic.l2_read_txn += d.l2_read_txn;
@@ -957,7 +959,7 @@ impl ShardedHierarchy {
     pub fn flush(&mut self) {
         self.process_batch();
         self.drain_l2();
-        let wb = self.stage.lock().unwrap().l2.flush();
+        let wb = lock_recover(&self.stage).l2.flush();
         self.traffic.hbm_write_bytes += wb * self.l2_line;
     }
 
@@ -986,7 +988,7 @@ impl ShardedHierarchy {
     /// [`ShardedHierarchy::flush`]); the lock makes a mid-flight call
     /// safe but it then reports a batch boundary, not the stream tail.
     pub fn l2_hit_rate(&self) -> f64 {
-        self.stage.lock().unwrap().l2.hit_rate()
+        lock_recover(&self.stage).l2.hit_rate()
     }
 
     /// Worker/shard count in use.

@@ -1,0 +1,608 @@
+//! Per-column codecs for archive format v2: delta + LEB128 varint for
+//! the wide integer columns, run-length encoding for the byte columns.
+//!
+//! Every codec here transforms a column's **raw byte image** (exactly
+//! the bytes format v1 stores: little-endian fixed-width elements) to
+//! and from an encoded byte stream. Decoding therefore reconstructs
+//! the v1 section verbatim, which is what lets the reader run one set
+//! of structural validations — enum codes, tape/stream agreement,
+//! payload bounds — over raw-mapped and decoded columns alike.
+//!
+//! Codecs are exact, not lossy, for *any* input (proven by the
+//! property tests below over random and adversarial columns):
+//!
+//! * **Delta+varint** ([`Encoding::DeltaVarint`]): each element is
+//!   replaced by the zigzagged wrapping difference from its
+//!   predecessor (the first element's predecessor is 0), written as an
+//!   LEB128 varint. Monotone-ish streams — compacted lane addresses,
+//!   `acc_off` arena cursors, dense group ids — become one- or
+//!   two-byte deltas instead of 8 (or 4) raw bytes; a pathological
+//!   stream degrades to ≤ 10 bytes per u64 element but still round
+//!   trips (the writer's `auto` heuristic falls back to raw when
+//!   encoding doesn't pay).
+//! * **RLE** ([`Encoding::Rle`]): `(varint run length ≥ 1, value
+//!   byte)` pairs. The low-cardinality byte columns (`tags`,
+//!   `inst_class`, `acc_kind`, `acc_bpl`, `acc_len`) run in long
+//!   stretches; alternating bytes degrade to 2 bytes per element —
+//!   again the heuristic's problem, not correctness's.
+//!
+//! Decoding is fully bounds- and shape-checked: a truncated stream, a
+//! varint running past 10 bytes (u64 overflow), a zero-length run, or
+//! an element count that disagrees with the index are all clean
+//! `anyhow` errors — corrupt archives can never panic the reader (the
+//! same contract every other layer of the format keeps).
+
+/// Wire encoding of one stored column section (the per-section
+/// `encoding` byte in the v2 block index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// The v1 byte image, mapped zero-copy at replay.
+    Raw,
+    /// Zigzag deltas of fixed-width elements, LEB128 varints.
+    DeltaVarint,
+    /// `(varint run length, byte)` pairs.
+    Rle,
+}
+
+impl Encoding {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Encoding::Raw => 0,
+            Encoding::DeltaVarint => 1,
+            Encoding::Rle => 2,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<Encoding> {
+        match b {
+            0 => Some(Encoding::Raw),
+            1 => Some(Encoding::DeltaVarint),
+            2 => Some(Encoding::Rle),
+            _ => None,
+        }
+    }
+
+    /// Short human label for `trace-info`.
+    pub fn label(self) -> &'static str {
+        match self {
+            Encoding::Raw => "raw",
+            Encoding::DeltaVarint => "dv",
+            Encoding::Rle => "rle",
+        }
+    }
+}
+
+/// Element width of a fixed-width column, for [`Encoding::DeltaVarint`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemWidth {
+    U8,
+    U32,
+    U64,
+}
+
+impl ElemWidth {
+    pub fn bytes(self) -> usize {
+        match self {
+            ElemWidth::U8 => 1,
+            ElemWidth::U32 => 4,
+            ElemWidth::U64 => 8,
+        }
+    }
+
+    /// The codec applicable to columns of this width (`None` for the
+    /// byte columns which use RLE instead).
+    pub fn codec(self) -> Encoding {
+        match self {
+            ElemWidth::U8 => Encoding::Rle,
+            ElemWidth::U32 | ElemWidth::U64 => Encoding::DeltaVarint,
+        }
+    }
+}
+
+// ------------------------------------------------------------ varint
+
+/// Append `v` as an LEB128 varint (1–10 bytes).
+fn varint_push(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Read one LEB128 varint from `buf` at `*pos`, advancing it. Errors
+/// on truncation and on encodings that overflow a u64.
+fn varint_read(buf: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).ok_or_else(|| {
+            anyhow::anyhow!(
+                "corrupt section: varint truncated at byte {}",
+                *pos
+            )
+        })?;
+        *pos += 1;
+        let payload = (b & 0x7f) as u64;
+        // the 10th byte may only carry the top bit of a u64
+        anyhow::ensure!(
+            shift < 64 && (shift != 63 || payload <= 1),
+            "corrupt section: varint overflows u64"
+        );
+        v |= payload << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag map: interleave negative deltas with positive ones so small
+/// magnitudes of either sign stay small varints.
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+// ----------------------------------------------------- delta varint
+
+/// Little-endian element at index `i` of a raw column image.
+#[inline]
+fn elem_at(raw: &[u8], i: usize, width: ElemWidth) -> u64 {
+    match width {
+        ElemWidth::U8 => raw[i] as u64,
+        ElemWidth::U32 => u32::from_le_bytes(
+            raw[i * 4..i * 4 + 4].try_into().expect("4 bytes"),
+        ) as u64,
+        ElemWidth::U64 => u64::from_le_bytes(
+            raw[i * 8..i * 8 + 8].try_into().expect("8 bytes"),
+        ),
+    }
+}
+
+/// Encode a raw fixed-width column image as zigzagged wrapping deltas
+/// in LEB128 varints. `raw.len()` must be a multiple of the element
+/// width (the writer always passes whole columns).
+pub fn delta_varint_encode(
+    raw: &[u8],
+    width: ElemWidth,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    let w = width.bytes();
+    debug_assert_eq!(raw.len() % w, 0);
+    let n = raw.len() / w;
+    out.reserve(n * 2);
+    let mut prev = 0u64;
+    for i in 0..n {
+        let cur = elem_at(raw, i, width);
+        // wrapping difference: exact for any pair of u64s (and, since
+        // u32 elements are ≤ u32::MAX, exact in i64 for u32 columns)
+        let delta = cur.wrapping_sub(prev) as i64;
+        varint_push(out, zigzag(delta));
+        prev = cur;
+    }
+}
+
+/// Decode a [`delta_varint_encode`] stream back into the raw byte
+/// image of `n_elems` elements, appending to `out`. Errors on
+/// truncation, varint overflow, trailing bytes, and (for u32 columns)
+/// decoded values outside the element range.
+pub fn delta_varint_decode(
+    enc: &[u8],
+    n_elems: usize,
+    width: ElemWidth,
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    let mut pos = 0usize;
+    let mut prev = 0u64;
+    for i in 0..n_elems {
+        let delta = unzigzag(varint_read(enc, &mut pos)?);
+        let cur = prev.wrapping_add(delta as u64);
+        match width {
+            ElemWidth::U8 => {
+                anyhow::ensure!(
+                    cur <= u8::MAX as u64,
+                    "corrupt section: element {i} decodes to {cur}, \
+                     outside u8 range"
+                );
+                out.push(cur as u8);
+            }
+            ElemWidth::U32 => {
+                anyhow::ensure!(
+                    cur <= u32::MAX as u64,
+                    "corrupt section: element {i} decodes to {cur}, \
+                     outside u32 range"
+                );
+                out.extend_from_slice(&(cur as u32).to_le_bytes());
+            }
+            ElemWidth::U64 => {
+                out.extend_from_slice(&cur.to_le_bytes());
+            }
+        }
+        prev = cur;
+    }
+    anyhow::ensure!(
+        pos == enc.len(),
+        "corrupt section: {} trailing byte(s) after {n_elems} \
+         delta-varint elements",
+        enc.len() - pos
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------------- rle
+
+/// Encode a byte column as `(varint run length, value)` pairs.
+pub fn rle_encode(raw: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    let mut i = 0usize;
+    while i < raw.len() {
+        let v = raw[i];
+        let mut j = i + 1;
+        while j < raw.len() && raw[j] == v {
+            j += 1;
+        }
+        varint_push(out, (j - i) as u64);
+        out.push(v);
+        i = j;
+    }
+}
+
+/// Decode an [`rle_encode`] stream back into `n_elems` bytes,
+/// appending to `out`. Errors on truncation, zero-length runs, runs
+/// overshooting the element count, and trailing bytes.
+pub fn rle_decode(
+    enc: &[u8],
+    n_elems: usize,
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    let mut pos = 0usize;
+    let mut produced = 0usize;
+    while produced < n_elems {
+        let run = varint_read(enc, &mut pos)?;
+        anyhow::ensure!(
+            run >= 1 && run <= (n_elems - produced) as u64,
+            "corrupt section: RLE run of {run} at element {produced} \
+             (of {n_elems})"
+        );
+        let v = *enc.get(pos).ok_or_else(|| {
+            anyhow::anyhow!(
+                "corrupt section: RLE value byte truncated"
+            )
+        })?;
+        pos += 1;
+        out.resize(out.len() + run as usize, v);
+        produced += run as usize;
+    }
+    anyhow::ensure!(
+        pos == enc.len(),
+        "corrupt section: {} trailing byte(s) after {n_elems} RLE \
+         elements",
+        enc.len() - pos
+    );
+    Ok(())
+}
+
+// -------------------------------------------------------- dispatch
+
+/// Encode `raw` with the codec native to `width` (see
+/// [`ElemWidth::codec`]), into `out`. Returns the encoding used.
+pub fn encode(raw: &[u8], width: ElemWidth, out: &mut Vec<u8>) -> Encoding {
+    match width.codec() {
+        Encoding::Rle => {
+            rle_encode(raw, out);
+            Encoding::Rle
+        }
+        _ => {
+            delta_varint_encode(raw, width, out);
+            Encoding::DeltaVarint
+        }
+    }
+}
+
+/// Decode `enc` (stored under `encoding`) back into the raw byte image
+/// of `n_elems` elements of `width`, appending to `out`.
+/// [`Encoding::Raw`] is not a decode — callers replay raw sections in
+/// place — so passing it here is a corrupt-index error, as is an
+/// encoding/width pairing the writer never produces.
+pub fn decode(
+    enc: &[u8],
+    encoding: Encoding,
+    n_elems: usize,
+    width: ElemWidth,
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    match (encoding, width) {
+        (Encoding::Rle, ElemWidth::U8) => {
+            rle_decode(enc, n_elems, out)
+        }
+        (Encoding::DeltaVarint, ElemWidth::U32 | ElemWidth::U64) => {
+            delta_varint_decode(enc, n_elems, width, out)
+        }
+        _ => anyhow::bail!(
+            "corrupt archive: section encoding {encoding:?} is not \
+             valid for {width:?} elements"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn raw_u64(vals: &[u64]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(vals.len() * 8);
+        for v in vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn raw_u32(vals: &[u32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn round_trip(raw: &[u8], width: ElemWidth) -> Vec<u8> {
+        let mut enc = Vec::new();
+        let encoding = encode(raw, width, &mut enc);
+        let mut dec = Vec::new();
+        decode(
+            &enc,
+            encoding,
+            raw.len() / width.bytes(),
+            width,
+            &mut dec,
+        )
+        .unwrap();
+        assert_eq!(dec, raw, "round trip must be exact");
+        enc
+    }
+
+    #[test]
+    fn varint_round_trips_boundary_values() {
+        for v in [
+            0u64,
+            1,
+            0x7f,
+            0x80,
+            0x3fff,
+            0x4000,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let mut buf = Vec::new();
+            varint_push(&mut buf, v);
+            assert!(buf.len() <= 10);
+            let mut pos = 0;
+            assert_eq!(varint_read(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_overflow() {
+        // truncated continuation
+        let mut pos = 0;
+        let err = varint_read(&[0x80], &mut pos)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // 11-byte encoding overflows u64
+        let mut pos = 0;
+        let buf = [0x80u8; 11];
+        let err =
+            varint_read(&buf, &mut pos).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+        // 10th byte carrying more than the top bit overflows too
+        let mut buf = vec![0xffu8; 9];
+        buf.push(0x02);
+        let mut pos = 0;
+        let err =
+            varint_read(&buf, &mut pos).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+    }
+
+    #[test]
+    fn delta_varint_compresses_strided_addresses() {
+        // a compacted-lane address column: stride-12 AoS reads, the
+        // archive's dominant shape — one varint byte per delta
+        let addrs: Vec<u64> =
+            (0..4096u64).map(|i| 0x4000_0000 + i * 12).collect();
+        let raw = raw_u64(&addrs);
+        let enc = round_trip(&raw, ElemWidth::U64);
+        assert!(
+            enc.len() * 4 <= raw.len(),
+            "strided addrs must shrink ≥4x ({} -> {})",
+            raw.len(),
+            enc.len()
+        );
+    }
+
+    #[test]
+    fn delta_varint_round_trips_adversarial_u64_columns() {
+        let cases: Vec<Vec<u64>> = vec![
+            vec![],
+            vec![0],
+            vec![u64::MAX],
+            vec![u64::MAX, 0, u64::MAX, 1, u64::MAX / 2],
+            vec![0, u64::MAX, 0, u64::MAX],
+            (0..257u64).rev().collect(),
+            vec![0x8000_0000_0000_0000; 31],
+        ];
+        for vals in cases {
+            round_trip(&raw_u64(&vals), ElemWidth::U64);
+        }
+    }
+
+    #[test]
+    fn delta_varint_round_trips_random_columns_property() {
+        let mut rng = Xoshiro256::seed_from_u64(0xC0DEC);
+        for case in 0..64 {
+            let n = rng.below(300) as usize;
+            let vals: Vec<u64> = (0..n)
+                .map(|_| match rng.below(4) {
+                    // mixture: raw entropy, small walks, clustered
+                    0 => rng.next_u64(),
+                    1 => rng.below(1 << 20),
+                    2 => 0x4000_0000 + rng.below(1 << 12) * 4,
+                    _ => u64::MAX - rng.below(1 << 8),
+                })
+                .collect();
+            round_trip(&raw_u64(&vals), ElemWidth::U64);
+            // same property for u32 columns
+            let vals32: Vec<u32> =
+                vals.iter().map(|v| *v as u32).collect();
+            round_trip(&raw_u32(&vals32), ElemWidth::U32);
+            let _ = case;
+        }
+    }
+
+    #[test]
+    fn u32_decode_rejects_out_of_range_values() {
+        // encode a u64 column, then decode it claiming u32 elements:
+        // the first out-of-range element must error cleanly
+        let raw = raw_u64(&[u32::MAX as u64 + 1]);
+        let mut enc = Vec::new();
+        delta_varint_encode(&raw, ElemWidth::U64, &mut enc);
+        let mut out = Vec::new();
+        let err =
+            delta_varint_decode(&enc, 1, ElemWidth::U32, &mut out)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("outside u32 range"), "{err}");
+    }
+
+    #[test]
+    fn delta_varint_rejects_wrong_element_counts() {
+        let raw = raw_u64(&[5, 6, 7]);
+        let mut enc = Vec::new();
+        delta_varint_encode(&raw, ElemWidth::U64, &mut enc);
+        let mut out = Vec::new();
+        // too few claimed elements: trailing bytes
+        let err =
+            delta_varint_decode(&enc, 2, ElemWidth::U64, &mut out)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("trailing"), "{err}");
+        // too many claimed elements: truncation
+        let mut out = Vec::new();
+        let err =
+            delta_varint_decode(&enc, 4, ElemWidth::U64, &mut out)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn rle_compresses_low_cardinality_columns() {
+        // an acc_len column: 64 active lanes everywhere
+        let raw = vec![64u8; 4096];
+        let enc = round_trip(&raw, ElemWidth::U8);
+        assert!(enc.len() <= 4, "{} bytes", enc.len());
+    }
+
+    #[test]
+    fn rle_round_trips_adversarial_byte_columns() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0],
+            vec![255; 1000],
+            (0..=255u8).collect(),                   // no runs at all
+            (0..512).map(|i| (i % 2) as u8).collect(), // worst case
+            vec![1, 1, 2, 2, 2, 0, 0, 0, 0, 7],
+        ];
+        for raw in cases {
+            round_trip(&raw, ElemWidth::U8);
+        }
+    }
+
+    #[test]
+    fn rle_round_trips_random_columns_property() {
+        let mut rng = Xoshiro256::seed_from_u64(0x51E);
+        for _ in 0..64 {
+            let n = rng.below(400) as usize;
+            let mut raw = Vec::with_capacity(n);
+            let mut v = 0u8;
+            for _ in 0..n {
+                if rng.below(3) == 0 {
+                    v = rng.below(5) as u8;
+                }
+                raw.push(v);
+            }
+            round_trip(&raw, ElemWidth::U8);
+        }
+    }
+
+    #[test]
+    fn rle_rejects_malformed_streams() {
+        let mut out = Vec::new();
+        // zero-length run
+        let err = rle_decode(&[0x00, 0x07], 1, &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("RLE run"), "{err}");
+        // run overshooting the element count
+        let mut out = Vec::new();
+        let err = rle_decode(&[0x05, 0x07], 3, &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("RLE run"), "{err}");
+        // missing value byte
+        let mut out = Vec::new();
+        let err = rle_decode(&[0x02], 2, &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // trailing bytes after the final run
+        let mut out = Vec::new();
+        let err = rle_decode(&[0x02, 0x07, 0x01], 2, &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn encoding_wire_bytes_are_pinned() {
+        // the encoding byte is part of the on-disk format — pin it
+        for (e, b) in [
+            (Encoding::Raw, 0u8),
+            (Encoding::DeltaVarint, 1),
+            (Encoding::Rle, 2),
+        ] {
+            assert_eq!(e.to_u8(), b);
+            assert_eq!(Encoding::from_u8(b), Some(e));
+        }
+        assert_eq!(Encoding::from_u8(3), None);
+    }
+
+    #[test]
+    fn mismatched_encoding_width_pairs_are_errors() {
+        let mut out = Vec::new();
+        assert!(decode(&[], Encoding::Rle, 0, ElemWidth::U64, &mut out)
+            .is_err());
+        assert!(decode(
+            &[],
+            Encoding::DeltaVarint,
+            0,
+            ElemWidth::U8,
+            &mut out
+        )
+        .is_err());
+        assert!(
+            decode(&[], Encoding::Raw, 0, ElemWidth::U64, &mut out)
+                .is_err()
+        );
+    }
+}

@@ -19,7 +19,18 @@ pub const MAGIC: [u8; 8] = *b"RLNTRACE";
 
 /// Current format version. Bump whenever the layout, the column set,
 /// or any wire encoding (including [`InstClass::ALL`] order) changes.
-pub const FORMAT_VERSION: u32 = 1;
+///
+/// Version 2 added per-section column compression: each block-index
+/// entry carries an `encoding` byte and a stored byte length per
+/// column (see [`super::codec`] and `docs/trace-format.md`). The
+/// writer emits v2; the reader accepts
+/// [`MIN_FORMAT_VERSION`]..=[`FORMAT_VERSION`], with v1 files read as
+/// all-raw (their index stores no encoding fields).
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Oldest format version the reader still accepts (v1 archives remain
+/// readable; they simply predate per-section encodings).
+pub const MIN_FORMAT_VERSION: u32 = 1;
 
 /// Endianness canary, written little-endian. A big-endian writer would
 /// produce the byte-swapped value, which the reader rejects with a
@@ -38,6 +49,34 @@ pub const EXTENSION: &str = "rtrc";
 /// Number of column sections per block (wire order: tags, group_ids,
 /// inst_class, inst_count, acc_kind, acc_bpl, acc_off, acc_len, addrs).
 pub const COLUMNS: usize = 9;
+
+/// Element width of each column, by wire position — the single table
+/// the writer's codec selection and the reader's length/decode logic
+/// both consult, so they cannot drift.
+pub const COLUMN_WIDTHS: [super::codec::ElemWidth; COLUMNS] = [
+    super::codec::ElemWidth::U8,  // tags
+    super::codec::ElemWidth::U64, // group_ids
+    super::codec::ElemWidth::U8,  // inst_class
+    super::codec::ElemWidth::U64, // inst_count
+    super::codec::ElemWidth::U8,  // acc_kind
+    super::codec::ElemWidth::U8,  // acc_bpl
+    super::codec::ElemWidth::U32, // acc_off
+    super::codec::ElemWidth::U8,  // acc_len
+    super::codec::ElemWidth::U64, // addrs
+];
+
+/// Short column names, by wire position (for `trace-info` reporting).
+pub const COLUMN_NAMES: [&str; COLUMNS] = [
+    "tags",
+    "group_ids",
+    "inst_class",
+    "inst_count",
+    "acc_kind",
+    "acc_bpl",
+    "acc_off",
+    "acc_len",
+    "addrs",
+];
 
 /// Section alignment: column offsets are multiples of this, which
 /// (with a page-aligned mapping) makes `&[u64]` views sound.

@@ -1,5 +1,6 @@
 //! Archive garbage collection: delete `.rtrc` files whose content
-//! keys are no longer live.
+//! keys are no longer live, and sweep temp files orphaned by crashed
+//! spills.
 //!
 //! Archive files are content-addressed
 //! ([`super::format::archive_file_name`] embeds the case key), so a
@@ -11,6 +12,18 @@
 //! extension whose file name is not in the caller's live set. It
 //! never touches non-archive files, and it never deletes a live key,
 //! however stale its mtime — content addressing, not age, decides.
+//!
+//! **Stale spill temps.** The writer assembles each archive under a
+//! dot-temp name (`.{name}.{EXTENSION}.tmp.{pid}.{seq}`) and removes
+//! it on its own error paths — but a spill interrupted by a crash or
+//! `SIGKILL` leaves the temp behind forever: `prune_dir`'s extension
+//! filter skips it (its trailing extension is the numeric `{seq}`,
+//! not `rtrc`), so nothing ever reclaimed it. [`sweep_stale_temps`]
+//! (run by `trace-info --prune` and by [`prune_dir`] itself) deletes
+//! exactly the temps whose *owning process is gone* — a live spill's
+//! temp (pid alive, possibly another shard mid-write) is never
+//! touched, and names that don't match the writer's temp pattern are
+//! ignored.
 
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
@@ -23,14 +36,99 @@ pub struct PruneReport {
     pub kept: Vec<PathBuf>,
     /// Archive files deleted as dead keys (sorted).
     pub deleted: Vec<PathBuf>,
+    /// Spill temp files swept because their owning process is gone
+    /// (sorted).
+    pub swept_temps: Vec<PathBuf>,
+}
+
+/// Parse the pid out of a writer temp-file name
+/// (`.{stem}.{EXTENSION}.tmp.{pid}.{seq}`); `None` when the name is
+/// not a spill temp.
+fn temp_file_pid(name: &str) -> Option<u32> {
+    let marker = format!(".{EXTENSION}.tmp.");
+    let rest = name
+        .strip_prefix('.')?
+        .split_once(marker.as_str())?
+        .1;
+    let (pid, seq) = rest.split_once('.')?;
+    // both halves must be numeric, exactly as the writer formats them
+    if seq.is_empty() || !seq.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    pid.parse::<u32>().ok()
+}
+
+/// Whether `pid` is a live process on this host. On unix this asks the
+/// kernel (`kill(pid, 0)`: EPERM still means *alive*); elsewhere it
+/// conservatively answers `true` (never sweep what we cannot check).
+#[cfg(unix)]
+fn pid_alive(pid: u32) -> bool {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    if pid > i32::MAX as u32 {
+        return false;
+    }
+    // SAFETY: signal 0 performs permission/existence checks only —
+    // no signal is delivered to anyone.
+    let ret = unsafe { kill(pid as i32, 0) };
+    const EPERM: i32 = 1;
+    ret == 0
+        || std::io::Error::last_os_error().raw_os_error()
+            == Some(EPERM)
+}
+
+#[cfg(not(unix))]
+fn pid_alive(_pid: u32) -> bool {
+    true
+}
+
+/// Delete every spill temp file in `dir` whose owning process no
+/// longer exists (see the module docs). Returns the deleted paths,
+/// sorted. Non-temp files — including complete `.rtrc` archives and
+/// temps of *live* spills — are never touched.
+pub fn sweep_stale_temps(
+    dir: &Path,
+) -> anyhow::Result<Vec<PathBuf>> {
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        anyhow::anyhow!("read archive dir {}: {e}", dir.display())
+    })?;
+    let mut swept = Vec::new();
+    for entry in entries {
+        let path = entry
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "read archive dir {}: {e}",
+                    dir.display()
+                )
+            })?
+            .path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str())
+        else {
+            continue;
+        };
+        let Some(pid) = temp_file_pid(name) else {
+            continue;
+        };
+        if pid_alive(pid) {
+            continue;
+        }
+        std::fs::remove_file(&path).map_err(|e| {
+            anyhow::anyhow!("delete {}: {e}", path.display())
+        })?;
+        swept.push(path);
+    }
+    swept.sort();
+    Ok(swept)
 }
 
 /// Delete every `.rtrc` file in `dir` whose file name is **not** in
 /// `live` (the content-addressed names of the current case set, e.g.
-/// from [`crate::coordinator::CaseTrace::archive_path`]). Returns the
-/// kept/deleted partition. Non-archive files are ignored; a missing
-/// directory is an error (pruning a path that never held an archive
-/// is almost certainly a typo, not a no-op).
+/// from [`crate::coordinator::CaseTrace::archive_path`]), and sweep
+/// spill temps orphaned by dead processes ([`sweep_stale_temps`]).
+/// Returns the kept/deleted/swept partition. Other non-archive files
+/// are ignored; a missing directory is an error (pruning a path that
+/// never held an archive is almost certainly a typo, not a no-op).
 pub fn prune_dir(
     dir: &Path,
     live: &HashSet<String>,
@@ -38,6 +136,7 @@ pub fn prune_dir(
     let mut report = PruneReport {
         kept: Vec::new(),
         deleted: Vec::new(),
+        swept_temps: sweep_stale_temps(dir)?,
     };
     let entries = std::fs::read_dir(dir).map_err(|e| {
         anyhow::anyhow!("read archive dir {}: {e}", dir.display())
@@ -126,6 +225,76 @@ mod tests {
         let report = prune_dir(&dir, &live).unwrap();
         assert_eq!(report.kept.len(), 1);
         assert!(report.deleted.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn temp_names_parse_only_the_writer_pattern() {
+        assert_eq!(
+            temp_file_pid(".tiny-0000000000000abc.rtrc.tmp.4242.7"),
+            Some(4242)
+        );
+        // not temps: complete archives, non-dot files, malformed tails
+        assert_eq!(
+            temp_file_pid("tiny-0000000000000abc.rtrc"),
+            None
+        );
+        assert_eq!(
+            temp_file_pid("tiny.rtrc.tmp.4242.7"),
+            None,
+            "temps always start with a dot"
+        );
+        assert_eq!(temp_file_pid(".tiny.rtrc.tmp.notpid.7"), None);
+        assert_eq!(temp_file_pid(".tiny.rtrc.tmp.4242.x"), None);
+        assert_eq!(temp_file_pid(".tiny.rtrc.tmp.4242"), None);
+        assert_eq!(temp_file_pid(".notes.txt"), None);
+    }
+
+    #[test]
+    fn sweep_deletes_dead_pid_temps_and_keeps_live_ones() {
+        let dir = tmp_dir("temps");
+        // a stale temp from a crashed spill: linux pids never
+        // exceed 2^22 (kernel pid_max ceiling), so this pid is
+        // guaranteed dead
+        let stale = ".tiny-0000000000000001.rtrc.tmp.4200000.3";
+        touch(&dir, stale);
+        // a temp owned by *this* process: a live spill, never swept
+        let live = format!(
+            ".tiny-0000000000000002.rtrc.tmp.{}.0",
+            std::process::id()
+        );
+        touch(&dir, &live);
+        // bystanders
+        touch(&dir, "tiny-0000000000000003.rtrc");
+        touch(&dir, "notes.txt");
+
+        let swept = sweep_stale_temps(&dir).unwrap();
+        assert_eq!(swept, vec![dir.join(stale)]);
+        assert!(!dir.join(stale).exists());
+        assert!(dir.join(&live).exists(), "live spill kept");
+        assert!(dir.join("tiny-0000000000000003.rtrc").exists());
+        assert!(dir.join("notes.txt").exists());
+
+        // idempotent
+        assert!(sweep_stale_temps(&dir).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_sweeps_stale_temps_too() {
+        let dir = tmp_dir("prune-temps");
+        let stale = ".a-0000000000000001.rtrc.tmp.4200001.0";
+        touch(&dir, stale);
+        touch(&dir, "a-0000000000000001.rtrc");
+        let live: HashSet<String> =
+            ["a-0000000000000001.rtrc".to_string()]
+                .into_iter()
+                .collect();
+        let report = prune_dir(&dir, &live).unwrap();
+        assert_eq!(report.kept.len(), 1);
+        assert!(report.deleted.is_empty());
+        assert_eq!(report.swept_temps, vec![dir.join(stale)]);
+        assert!(!dir.join(stale).exists());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -101,17 +101,66 @@ impl Drop for Mmap {
     }
 }
 
+/// An 8-byte-aligned owned byte buffer (`u64` storage guarantees base
+/// alignment). Two users: the no-mmap fallback of [`ArchiveBuf`], and
+/// the reader's pooled decode arena for compressed v2 sections —
+/// decoded column images need the same alignment guarantee as mapped
+/// ones so `&[u64]`/`&[u32]` views stay sound.
+#[derive(Default)]
+pub(crate) struct OwnedBytes {
+    words: Vec<u64>,
+    /// Logical length (`words` may be padded by up to 7 bytes).
+    len: usize,
+}
+
+impl OwnedBytes {
+    /// An empty buffer with room for `cap` bytes.
+    pub(crate) fn with_capacity(cap: usize) -> OwnedBytes {
+        OwnedBytes {
+            words: Vec::with_capacity(cap.div_ceil(8)),
+            len: 0,
+        }
+    }
+
+    /// Append `bytes` at the next 8-byte boundary (the gap, if any, is
+    /// zero) — every append therefore starts aligned, which is what
+    /// makes appended section images directly sliceable as their
+    /// element type. Returns the byte offset `bytes` landed at.
+    pub(crate) fn push_aligned(&mut self, bytes: &[u8]) -> usize {
+        let off = self.len.div_ceil(8) * 8;
+        let end = off + bytes.len();
+        self.words.resize(end.div_ceil(8), 0);
+        // SAFETY: viewing the u64 storage as bytes; u8 has no validity
+        // or alignment requirements, and `end` is within the storage.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(
+                self.words.as_mut_ptr().cast::<u8>(),
+                self.words.len() * 8,
+            )
+        };
+        dst[off..end].copy_from_slice(bytes);
+        self.len = end;
+        off
+    }
+
+    /// The logical bytes. Base address is 8-aligned.
+    pub(crate) fn bytes(&self) -> &[u8] {
+        // SAFETY: words holds at least `len` initialized bytes.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.words.as_ptr().cast::<u8>(),
+                self.len,
+            )
+        }
+    }
+}
+
 /// Backing bytes of an opened archive: a zero-copy file mapping where
 /// available, an aligned owned buffer otherwise.
 pub(crate) enum ArchiveBuf {
     #[cfg(all(unix, target_pointer_width = "64"))]
     Mapped(Mmap),
-    Owned {
-        /// `u64` storage guarantees 8-byte base alignment.
-        words: Vec<u64>,
-        /// Real file length (`words` may be padded by up to 7 bytes).
-        len: usize,
-    },
+    Owned(OwnedBytes),
 }
 
 impl ArchiveBuf {
@@ -140,13 +189,16 @@ impl ArchiveBuf {
     /// Fallback: read the file into an 8-aligned heap buffer.
     fn read_owned(file: &File, len: usize) -> anyhow::Result<ArchiveBuf> {
         use std::io::{Read, Seek, SeekFrom};
-        let mut words = vec![0u64; len.div_ceil(8)];
+        let mut owned = OwnedBytes {
+            words: vec![0u64; len.div_ceil(8)],
+            len,
+        };
         {
             // SAFETY: viewing the zero-initialized u64 buffer as bytes;
             // u8 has no validity or alignment requirements.
             let bytes = unsafe {
                 std::slice::from_raw_parts_mut(
-                    words.as_mut_ptr().cast::<u8>(),
+                    owned.words.as_mut_ptr().cast::<u8>(),
                     len,
                 )
             };
@@ -154,7 +206,7 @@ impl ArchiveBuf {
             f.seek(SeekFrom::Start(0))?;
             f.read_exact(bytes)?;
         }
-        Ok(ArchiveBuf::Owned { words, len })
+        Ok(ArchiveBuf::Owned(owned))
     }
 
     /// The file's bytes. The base address is always at least 8-byte
@@ -163,15 +215,7 @@ impl ArchiveBuf {
         match self {
             #[cfg(all(unix, target_pointer_width = "64"))]
             ArchiveBuf::Mapped(m) => m.bytes(),
-            ArchiveBuf::Owned { words, len } => {
-                // SAFETY: words holds at least `len` initialized bytes.
-                unsafe {
-                    std::slice::from_raw_parts(
-                        words.as_ptr().cast::<u8>(),
-                        *len,
-                    )
-                }
-            }
+            ArchiveBuf::Owned(owned) => owned.bytes(),
         }
     }
 
@@ -222,6 +266,23 @@ mod tests {
         assert_eq!(buf.bytes(), &data[..]);
         assert_eq!(buf.bytes().as_ptr() as usize % 8, 0);
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn owned_bytes_appends_stay_aligned() {
+        let mut o = OwnedBytes::with_capacity(16);
+        let a = o.push_aligned(&[1, 2, 3]);
+        let b = o.push_aligned(&[4; 9]);
+        let c = o.push_aligned(&[]);
+        assert_eq!(a, 0);
+        assert_eq!(b, 8, "second append starts at the next boundary");
+        assert_eq!(c, 24);
+        let bytes = o.bytes();
+        assert_eq!(bytes.len(), 17 + 7, "len is the last append's end");
+        assert_eq!(&bytes[..3], &[1, 2, 3]);
+        assert_eq!(&bytes[3..8], &[0; 5], "gap is zero");
+        assert_eq!(&bytes[8..17], &[4; 9]);
+        assert_eq!(bytes.as_ptr() as usize % 8, 0);
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //! tracing — on every GPU preset, including V100's derived
 //! half-group form.
 //!
+//! Format **v2** adds optional per-section column compression
+//! ([`codec`]: delta+varint for the wide integer columns, RLE for the
+//! byte columns), selected per section by the writer's measured-ratio
+//! heuristic ([`Compress::Auto`]) — raw sections keep the zero-copy
+//! mapped path, compressed sections decode once at open into a pooled
+//! arena, and replay is bit-identical either way (v1 files remain
+//! readable).
+//!
 //! Files are content-addressed: the name embeds
 //! [`format::case_key`], a hash of the case config manifest, the
 //! recording group size, the simulation seed and the format version —
@@ -25,15 +33,23 @@
 //! recordings (`TraceStore` counts them; the sweep fails closed under
 //! `ROCLINE_REQUIRE_ARCHIVE_HIT=1`).
 
+pub mod codec;
 pub mod format;
 pub mod gc;
 mod mmap;
 pub mod reader;
 pub mod writer;
 
-pub use format::{archive_file_name, case_key, fnv1a, FORMAT_VERSION};
-pub use gc::{prune_dir, PruneReport};
-pub use reader::{
-    ArchiveInfo, MappedBlock, MappedCaseTrace, MappedDispatch,
+pub use codec::Encoding;
+pub use format::{
+    archive_file_name, case_key, fnv1a, FORMAT_VERSION,
+    MIN_FORMAT_VERSION,
 };
-pub use writer::{write_case_archive, CaseMeta};
+pub use gc::{prune_dir, sweep_stale_temps, PruneReport};
+pub use reader::{
+    ArchiveInfo, ColumnStats, MappedBlock, MappedCaseTrace,
+    MappedDispatch,
+};
+pub use writer::{
+    write_case_archive, write_case_archive_with, CaseMeta, Compress,
+};

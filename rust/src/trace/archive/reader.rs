@@ -7,8 +7,18 @@
 //! arena, lane counts within [`MAX_LANES`], non-zero access widths).
 //! Corruption of any kind is a clean `anyhow` error here; after `open`
 //! succeeds, replay through [`MappedBlock`]'s [`BlockData`] impl is
-//! infallible and borrows the mapped columns directly — no
-//! deserialization, no copies, shared page cache across processes.
+//! infallible — no deserialization, no copies, shared page cache
+//! across processes.
+//!
+//! **Format v2** sections may be compressed (delta+varint / RLE, see
+//! [`super::codec`]). Raw sections keep the original zero-copy mapped
+//! path; compressed sections are decoded **once at open** into a
+//! pooled per-archive decode arena (an 8-aligned owned buffer shared
+//! by every decoded section of the file), reconstructing the exact v1
+//! byte image — so the semantic validation and the hoisted
+//! [`BlockData::columns`] view are identical for both storage forms,
+//! and replay cost after `open` is the same plain-slice scan either
+//! way. v1 files (all sections raw) remain fully readable.
 //!
 //! [`ArchiveInfo::scan`] is the cheap sibling used by `rocline
 //! trace-info`: it reads only the header, meta and index (a few KB)
@@ -18,12 +28,13 @@ use std::fs::File;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
+use super::codec::{self, Encoding};
 use super::format::{
     align_up, class_from_u8, fnv1a, kind_from_u8, tag_from_u8, Cursor,
-    COLUMNS, ENDIAN_TAG, ENDIAN_TAG_SWAPPED, EXTENSION,
-    FORMAT_VERSION, HEADER_LEN, MAGIC,
+    COLUMNS, COLUMN_WIDTHS, ENDIAN_TAG, ENDIAN_TAG_SWAPPED, EXTENSION,
+    FORMAT_VERSION, HEADER_LEN, MAGIC, MIN_FORMAT_VERSION,
 };
-use super::mmap::ArchiveBuf;
+use super::mmap::{ArchiveBuf, OwnedBytes};
 use crate::arch::InstClass;
 use crate::trace::block::{BlockData, Tag};
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
@@ -41,15 +52,14 @@ struct Header {
 }
 
 fn parse_header(bytes: &[u8]) -> anyhow::Result<Header> {
-    // format v1 is little-endian on disk and replayed via native-
+    // the format is little-endian on disk and replayed via native-
     // endian column views; a big-endian host must not get past open
     // (the writer is equally LE, so its archives would be unreadable
     // everywhere else too)
     anyhow::ensure!(
         cfg!(target_endian = "little"),
-        "trace archives are little-endian (format v1) and this build \
-         targets a big-endian host; zero-copy replay is unsupported \
-         here"
+        "trace archives are little-endian and this build targets a \
+         big-endian host; zero-copy replay is unsupported here"
     );
     anyhow::ensure!(
         bytes.len() >= HEADER_LEN,
@@ -65,9 +75,10 @@ fn parse_header(bytes: &[u8]) -> anyhow::Result<Header> {
     );
     let version = c.u32()?;
     anyhow::ensure!(
-        version == FORMAT_VERSION,
+        (MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version),
         "unsupported trace archive format version {version} (this \
-         build reads version {FORMAT_VERSION}); re-record with \
+         build reads versions \
+         {MIN_FORMAT_VERSION}..={FORMAT_VERSION}); re-record with \
          `rocline record`"
     );
     let endian = c.u32()?;
@@ -135,20 +146,26 @@ fn parse_meta(bytes: &[u8]) -> anyhow::Result<(String, f64, f64)> {
     Ok((manifest, field, kinetic))
 }
 
-/// One block's index entry, as stored.
+/// One block's index entry, as stored. For v1 files every section is
+/// [`Encoding::Raw`] and the stored length equals the raw length
+/// derived from the element counts; v2 stores both fields explicitly.
 struct RawBlockIndex {
     n_records: u32,
     n_inst: u32,
     n_acc: u32,
     n_addr: u32,
+    col_enc: [Encoding; COLUMNS],
     col_off: [u64; COLUMNS],
+    /// Stored (possibly encoded) byte length of each section.
+    col_len: [u64; COLUMNS],
     col_sum: [u64; COLUMNS],
 }
 
-/// Verify the index checksum and parse its entries.
+/// Verify the index checksum and parse its entries (version-aware).
 fn parse_index(
     bytes: &[u8],
     dispatch_count: u32,
+    version: u32,
 ) -> anyhow::Result<Vec<(String, Vec<RawBlockIndex>)>> {
     anyhow::ensure!(
         bytes.len() >= 8,
@@ -179,14 +196,46 @@ fn parse_index(
                 n_inst: c.u32()?,
                 n_acc: c.u32()?,
                 n_addr: c.u32()?,
+                col_enc: [Encoding::Raw; COLUMNS],
                 col_off: [0; COLUMNS],
+                col_len: [0; COLUMNS],
                 col_sum: [0; COLUMNS],
             };
+            if version >= 2 {
+                for enc in e.col_enc.iter_mut() {
+                    let b = c.u8()?;
+                    *enc = Encoding::from_u8(b).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "corrupt archive: unknown section \
+                             encoding byte {b}"
+                        )
+                    })?;
+                }
+                for len in e.col_len.iter_mut() {
+                    *len = c.u64()?;
+                }
+            }
             for off in e.col_off.iter_mut() {
                 *off = c.u64()?;
             }
             for sum in e.col_sum.iter_mut() {
                 *sum = c.u64()?;
+            }
+            for col in 0..COLUMNS {
+                let raw = raw_len_bytes(&e, col);
+                if version < 2 {
+                    e.col_len[col] = raw;
+                } else if e.col_enc[col] == Encoding::Raw {
+                    // a raw section's stored length is not a free
+                    // variable — it must equal the count-derived one
+                    anyhow::ensure!(
+                        e.col_len[col] == raw,
+                        "corrupt archive: raw column {col} stored \
+                         length {} disagrees with its element count \
+                         ({raw} bytes)",
+                        e.col_len[col]
+                    );
+                }
             }
             blocks.push(e);
         }
@@ -200,48 +249,55 @@ fn parse_index(
     Ok(out)
 }
 
-/// Per-column byte length, by wire position.
-fn col_len_bytes(e: &RawBlockIndex, c: usize) -> u64 {
+/// Per-column element count, by wire position.
+fn elem_count(e: &RawBlockIndex, c: usize) -> u64 {
     match c {
-        0 => e.n_records as u64,     // tags (u8)
-        1 => e.n_records as u64 * 8, // group_ids (u64)
-        2 => e.n_inst as u64,        // inst_class (u8)
-        3 => e.n_inst as u64 * 8,    // inst_count (u64)
-        4 => e.n_acc as u64,         // acc_kind (u8)
-        5 => e.n_acc as u64,         // acc_bpl (u8)
-        6 => e.n_acc as u64 * 4,     // acc_off (u32)
-        7 => e.n_acc as u64,         // acc_len (u8)
-        _ => e.n_addr as u64 * 8,    // addrs (u64)
+        0 | 1 => e.n_records as u64, // tags, group_ids
+        2 | 3 => e.n_inst as u64,    // inst_class, inst_count
+        4..=7 => e.n_acc as u64,     // acc_kind/bpl/off/len
+        _ => e.n_addr as u64,        // addrs
     }
 }
 
-/// One block whose columns live in the mapped file. Replays through
-/// [`BlockData`] exactly like an owned
+/// Per-column **raw** (decoded) byte length, by wire position.
+fn raw_len_bytes(e: &RawBlockIndex, c: usize) -> u64 {
+    elem_count(e, c) * COLUMN_WIDTHS[c].bytes() as u64
+}
+
+/// One block whose columns live in the mapped file (raw sections) or
+/// in the archive's shared decode arena (compressed sections, decoded
+/// once at open). Replays through [`BlockData`] exactly like an owned
 /// [`crate::trace::EventBlock`] — the engines cannot tell the
 /// difference (and the round-trip tests prove the counters can't
 /// either).
 pub struct MappedBlock {
     buf: Arc<ArchiveBuf>,
+    /// Pooled decode arena shared by all of this archive's blocks
+    /// (empty for all-raw files).
+    arena: Arc<OwnedBytes>,
     n_records: u32,
     n_inst: u32,
     n_acc: u32,
     n_addr: u32,
+    /// Per column: byte offset into the mapped file (raw sections) or
+    /// into the decode arena (bit set in [`MappedBlock::arena_mask`]).
     col_off: [u64; COLUMNS],
+    /// Bit `c` set ⇔ column `c` lives in the decode arena.
+    arena_mask: u16,
 }
 
-/// Reinterpret `len * size_of::<T>()` mapped bytes at `off` as a
-/// `&[T]`.
+/// Reinterpret `len * size_of::<T>()` bytes at `off` as a `&[T]`.
 ///
 /// # Safety
 ///
 /// The caller must guarantee, for the given `bytes`/`off`/`len`, that
 /// the range is in bounds and `off` is aligned for `T` (the archive
-/// open path validated bounds and 8-byte section alignment), and that
-/// every value in the range is a valid `T` bit pattern — trivially so
-/// for the integer columns, and guaranteed for the `repr(u8)` enum
-/// columns (`Tag`, `MemKind`, `InstClass`) because open validated
-/// every coded byte against the wire encoding, which equals the enums'
-/// discriminants.
+/// open path validated bounds and 8-byte section alignment for both
+/// the mapped file and the decode arena), and that every value in the
+/// range is a valid `T` bit pattern — trivially so for the integer
+/// columns, and guaranteed for the `repr(u8)` enum columns (`Tag`,
+/// `MemKind`, `InstClass`) because open validated every coded byte
+/// against the wire encoding, which equals the enums' discriminants.
 ///
 /// The enum-typed views additionally lean on the mapping-stability
 /// contract stated in [`super::mmap`]: archives are written
@@ -252,6 +308,7 @@ pub struct MappedBlock {
 /// could fault any mmap consumer, and silently-changed column data
 /// would corrupt counters), and with typed enum slices it is
 /// undefined behavior rather than a deterministic decode panic.
+/// (Arena-backed columns are immune: they are private heap copies.)
 #[inline]
 unsafe fn col_slice<T>(bytes: &[u8], off: u64, len: usize) -> &[T] {
     debug_assert!(
@@ -264,6 +321,24 @@ unsafe fn col_slice<T>(bytes: &[u8], off: u64, len: usize) -> &[T] {
     )
 }
 
+impl MappedBlock {
+    /// The byte slice column `c`'s decoded image lives in: the mapped
+    /// file for raw sections, the decode arena for compressed ones.
+    #[inline]
+    fn col_bytes<'a>(
+        &self,
+        mapped: &'a [u8],
+        arena: &'a [u8],
+        c: usize,
+    ) -> &'a [u8] {
+        if self.arena_mask & (1 << c) != 0 {
+            arena
+        } else {
+            mapped
+        }
+    }
+}
+
 impl BlockData for MappedBlock {
     fn len(&self) -> usize {
         self.n_records as usize
@@ -273,60 +348,66 @@ impl BlockData for MappedBlock {
         self.n_addr as usize
     }
 
-    /// The hoisted column view: **one** `Arc` deref + storage-enum
-    /// match (`buf.bytes()`), then nine zero-copy slices straight into
-    /// the mapping. The pre-columnar per-record accessors paid that
-    /// resolution for every record of every scan — this is the
-    /// `speedup/columnar_scan` win.
+    /// The hoisted column view: **one** `Arc` deref per storage
+    /// (mapped file + decode arena), then nine zero-copy slices. The
+    /// pre-columnar per-record accessors paid that resolution for
+    /// every record of every scan — this is the `speedup/columnar_scan`
+    /// win, and it holds for raw-mapped and decoded columns alike.
     fn columns(&self) -> crate::trace::block::Columns<'_> {
-        let bytes = self.buf.bytes();
+        let mapped = self.buf.bytes();
+        let arena = self.arena.bytes();
         let n_rec = self.n_records as usize;
         let n_inst = self.n_inst as usize;
         let n_acc = self.n_acc as usize;
         let n_addr = self.n_addr as usize;
         // SAFETY: every offset/length pair was bounds-, alignment- and
-        // checksum-validated at open, and every enum byte was checked
-        // against its wire encoding there (see `col_slice`).
+        // checksum-validated at open (decoded sections re-validated
+        // post-decode), and every enum byte was checked against its
+        // wire encoding there (see `col_slice`).
         unsafe {
             crate::trace::block::Columns {
-                tags: col_slice::<Tag>(bytes, self.col_off[0], n_rec),
+                tags: col_slice::<Tag>(
+                    self.col_bytes(mapped, arena, 0),
+                    self.col_off[0],
+                    n_rec,
+                ),
                 group_ids: col_slice::<u64>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 1),
                     self.col_off[1],
                     n_rec,
                 ),
                 inst_class: col_slice::<InstClass>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 2),
                     self.col_off[2],
                     n_inst,
                 ),
                 inst_count: col_slice::<u64>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 3),
                     self.col_off[3],
                     n_inst,
                 ),
                 acc_kind: col_slice::<MemKind>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 4),
                     self.col_off[4],
                     n_acc,
                 ),
                 acc_bpl: col_slice::<u8>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 5),
                     self.col_off[5],
                     n_acc,
                 ),
                 acc_off: col_slice::<u32>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 6),
                     self.col_off[6],
                     n_acc,
                 ),
                 acc_len: col_slice::<u8>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 7),
                     self.col_off[7],
                     n_acc,
                 ),
                 addrs: col_slice::<u64>(
-                    bytes,
+                    self.col_bytes(mapped, arena, 8),
                     self.col_off[8],
                     n_addr,
                 ),
@@ -345,11 +426,13 @@ pub struct MappedDispatch {
 /// counterpart of [`crate::coordinator::CaseTrace`].
 pub struct MappedCaseTrace {
     manifest: String,
+    version: u32,
     base_group_size: u32,
     case_key: u64,
     final_field_energy: f64,
     final_kinetic_energy: f64,
     bytes_on_disk: u64,
+    decoded_bytes: u64,
     mapped: bool,
     dispatches: Vec<MappedDispatch>,
     /// Lazily derived half-group-size form (warp-width targets), like
@@ -395,37 +478,65 @@ impl MappedCaseTrace {
             &bytes[h.index_off as usize
                 ..(h.index_off + h.index_len) as usize],
             h.dispatch_count,
+            h.version,
         )?;
 
-        // -- column validation: bounds, alignment, checksums, codes --
+        // -- column validation + one-shot decode --------------------
+        // stored-form checks (bounds, alignment, checksums) first;
+        // compressed sections then decode into the shared arena; the
+        // semantic validation (enum codes, tape agreement, payload
+        // invariants) runs on the decoded images of both forms.
+        let mut arena = OwnedBytes::with_capacity(0);
+        // cumulative decode budget: per-section caps alone would let a
+        // small file with a corrupt index (many block entries, each
+        // claiming huge element counts for tiny RLE streams) grow the
+        // arena without bound — an OOM abort instead of the clean
+        // error the format promises. Legitimate amplification is
+        // bounded (delta-varint ≤8x; the RLE byte columns amplify more
+        // but are absolutely small), so a generous multiple of the
+        // file size rejects only bombs.
+        let arena_budget = (256u64 << 20)
+            .saturating_add(file_len.saturating_mul(64));
         let mut dispatches = Vec::with_capacity(index.len());
         for (kernel, raw_blocks) in index {
             let mut blocks = Vec::with_capacity(raw_blocks.len());
             for e in raw_blocks {
-                validate_block(bytes, &e, h.index_off).map_err(
-                    |err| {
-                        anyhow::anyhow!("dispatch {kernel}: {err}")
-                    },
-                )?;
-                blocks.push(MappedBlock {
-                    buf: Arc::clone(&buf),
-                    n_records: e.n_records,
-                    n_inst: e.n_inst,
-                    n_acc: e.n_acc,
-                    n_addr: e.n_addr,
-                    col_off: e.col_off,
-                });
+                let block = load_block(
+                    bytes,
+                    &e,
+                    h.index_off,
+                    &buf,
+                    &mut arena,
+                    arena_budget,
+                )
+                .map_err(|err| {
+                    anyhow::anyhow!("dispatch {kernel}: {err}")
+                })?;
+                blocks.push(block);
             }
             dispatches.push(MappedDispatch { kernel, blocks });
         }
 
+        // the arena grew while blocks were loaded; now that it is
+        // final, share it (blocks were created with placeholder
+        // arenas — patch them to the shared one)
+        let decoded_bytes = arena.bytes().len() as u64;
+        let arena = Arc::new(arena);
+        for d in dispatches.iter_mut() {
+            for b in d.blocks.iter_mut() {
+                b.arena = Arc::clone(&arena);
+            }
+        }
+
         Ok(MappedCaseTrace {
             manifest,
+            version: h.version,
             base_group_size: h.base_group_size,
             case_key: h.case_key,
             final_field_energy,
             final_kinetic_energy,
             bytes_on_disk: file_len,
+            decoded_bytes,
             mapped: buf.is_mapped(),
             dispatches,
             halved: Mutex::new(None),
@@ -434,6 +545,11 @@ impl MappedCaseTrace {
 
     pub fn manifest(&self) -> &str {
         &self.manifest
+    }
+
+    /// The file's format version (1 or 2).
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     pub fn base_group_size(&self) -> u32 {
@@ -454,6 +570,12 @@ impl MappedCaseTrace {
 
     pub fn bytes_on_disk(&self) -> u64 {
         self.bytes_on_disk
+    }
+
+    /// Bytes held by the pooled decode arena (0 for all-raw files) —
+    /// the memory cost of compressed sections at replay.
+    pub fn decoded_bytes(&self) -> u64 {
+        self.decoded_bytes
     }
 
     /// Whether the archive is a true file mapping (false: the aligned
@@ -485,7 +607,7 @@ impl MappedCaseTrace {
             "archived at group size {}, cannot replay at {half}",
             self.base_group_size
         );
-        let mut slot = self.halved.lock().unwrap();
+        let mut slot = crate::util::pool::lock_recover(&self.halved);
         if let Some(h) = slot.as_ref() {
             return Arc::clone(h);
         }
@@ -503,16 +625,23 @@ impl MappedCaseTrace {
     }
 }
 
-/// Structural validation of one block (bounds, alignment, per-column
-/// checksums, enum codes, tape/stream agreement, payload invariants).
-fn validate_block(
+/// Validate one block's stored sections, decode its compressed ones
+/// into `arena`, run the semantic validation over the decoded images,
+/// and assemble the [`MappedBlock`]. (The returned block carries a
+/// placeholder arena handle; `open_inner` patches in the shared one
+/// once every block has been loaded.)
+fn load_block(
     bytes: &[u8],
     e: &RawBlockIndex,
     data_end: u64,
-) -> anyhow::Result<()> {
+    buf: &Arc<ArchiveBuf>,
+    arena: &mut OwnedBytes,
+    arena_budget: u64,
+) -> anyhow::Result<MappedBlock> {
+    // -- stored form: bounds, alignment, checksums ------------------
     for c in 0..COLUMNS {
         let off = e.col_off[c];
-        let len = col_len_bytes(e, c);
+        let len = e.col_len[c];
         let padded = align_up(len);
         anyhow::ensure!(
             off % 8 == 0,
@@ -534,9 +663,72 @@ fn validate_block(
         );
     }
 
+    // -- decode compressed sections into the shared arena -----------
+    // a raw section's size is bounded by the file itself; a compressed
+    // one is bounded only by its *claimed* element count, so cap the
+    // decoded size before allocating — a legal block (≤ ~4k records,
+    // ≤ 64 lanes per access) stays under ~3 MiB, so 256 MiB rejects
+    // only decompression bombs from corrupt indexes, never real data
+    const MAX_DECODED_SECTION: u64 = 256 << 20;
+    let mut col_off = e.col_off;
+    let mut arena_mask = 0u16;
+    let mut decode_buf: Vec<u8> = Vec::new();
+    for c in 0..COLUMNS {
+        if e.col_enc[c] == Encoding::Raw {
+            continue;
+        }
+        anyhow::ensure!(
+            raw_len_bytes(e, c) <= MAX_DECODED_SECTION,
+            "corrupt archive: column {c} claims {} decoded bytes \
+             (limit {MAX_DECODED_SECTION})",
+            raw_len_bytes(e, c)
+        );
+        anyhow::ensure!(
+            (arena.bytes().len() as u64)
+                .saturating_add(raw_len_bytes(e, c))
+                <= arena_budget,
+            "corrupt archive: decoded sections exceed the archive's \
+             decode budget ({arena_budget} bytes) — decompression \
+             bomb?"
+        );
+        let stored = &bytes[e.col_off[c] as usize..]
+            [..e.col_len[c] as usize];
+        decode_buf.clear();
+        codec::decode(
+            stored,
+            e.col_enc[c],
+            elem_count(e, c) as usize,
+            COLUMN_WIDTHS[c],
+            &mut decode_buf,
+        )
+        .map_err(|err| {
+            anyhow::anyhow!("column {c}: {err}")
+        })?;
+        debug_assert_eq!(
+            decode_buf.len() as u64,
+            raw_len_bytes(e, c),
+            "codec::decode produces exactly the raw image"
+        );
+        col_off[c] = arena.push_aligned(&decode_buf) as u64;
+        arena_mask |= 1 << c;
+    }
+
+    // -- semantic validation over the decoded images ----------------
+    // (the arena is not mutated past this point, so one shared
+    // reborrow serves every resolved column)
+    let arena_bytes = arena.bytes();
+    let resolve = |c: usize| {
+        let base = if arena_mask & (1 << c) != 0 {
+            arena_bytes
+        } else {
+            bytes
+        };
+        &base[col_off[c] as usize..]
+            [..raw_len_bytes(e, c) as usize]
+    };
+
     // enum codes and tape/stream agreement
-    let tags = &bytes[e.col_off[0] as usize..]
-        [..e.n_records as usize];
+    let tags = resolve(0);
     let (mut inst, mut acc) = (0u32, 0u32);
     for &t in tags {
         match tag_from_u8(t) {
@@ -554,17 +746,13 @@ fn validate_block(
         e.n_inst,
         e.n_acc
     );
-    let classes = &bytes[e.col_off[2] as usize..]
-        [..e.n_inst as usize];
-    for &b in classes {
+    for &b in resolve(2) {
         anyhow::ensure!(
             class_from_u8(b).is_some(),
             "corrupt archive: invalid instruction class byte {b}"
         );
     }
-    let kinds =
-        &bytes[e.col_off[4] as usize..][..e.n_acc as usize];
-    for &b in kinds {
+    for &b in resolve(4) {
         anyhow::ensure!(
             kind_from_u8(b).is_some(),
             "corrupt archive: invalid memory kind byte {b}"
@@ -572,12 +760,9 @@ fn validate_block(
     }
 
     // access payload invariants the replay engines rely on
-    let bpls =
-        &bytes[e.col_off[5] as usize..][..e.n_acc as usize];
-    let lens =
-        &bytes[e.col_off[7] as usize..][..e.n_acc as usize];
-    let offs_raw = &bytes[e.col_off[6] as usize..]
-        [..e.n_acc as usize * 4];
+    let bpls = resolve(5);
+    let lens = resolve(7);
+    let offs_raw = resolve(6);
     for i in 0..e.n_acc as usize {
         let off = u32::from_le_bytes([
             offs_raw[i * 4],
@@ -598,7 +783,43 @@ fn validate_block(
             "corrupt archive: access {i} has zero bytes-per-lane"
         );
     }
-    Ok(())
+
+    Ok(MappedBlock {
+        buf: Arc::clone(buf),
+        arena: Arc::new(OwnedBytes::default()),
+        n_records: e.n_records,
+        n_inst: e.n_inst,
+        n_acc: e.n_acc,
+        n_addr: e.n_addr,
+        col_off,
+        arena_mask,
+    })
+}
+
+/// Per-column storage totals of one archive (raw vs stored bytes and
+/// how many sections chose a non-raw encoding) — what `trace-info`
+/// reports as compression ratios.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ColumnStats {
+    /// Decoded (v1-image) bytes.
+    pub raw_bytes: u64,
+    /// Bytes actually stored on disk (= raw for raw sections).
+    pub stored_bytes: u64,
+    /// Sections of this column stored under a non-raw encoding.
+    pub encoded_sections: u64,
+    /// Total sections of this column.
+    pub sections: u64,
+}
+
+impl ColumnStats {
+    /// raw / stored; 1.0 for empty columns.
+    pub fn ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.stored_bytes as f64
+        }
+    }
 }
 
 /// Index-level summary of one archive (no column data touched).
@@ -613,6 +834,8 @@ pub struct ArchiveInfo {
     pub blocks: u64,
     pub records: u64,
     pub addr_words: u64,
+    /// Per wire column (see [`super::format::COLUMN_NAMES`]).
+    pub columns: [ColumnStats; COLUMNS],
 }
 
 impl ArchiveInfo {
@@ -651,16 +874,26 @@ impl ArchiveInfo {
         file.seek(SeekFrom::Start(h.index_off))?;
         let mut index = vec![0u8; h.index_len as usize];
         file.read_exact(&mut index)?;
-        let entries = parse_index(&index, h.dispatch_count)?;
+        let entries =
+            parse_index(&index, h.dispatch_count, h.version)?;
 
         let mut blocks = 0u64;
         let mut records = 0u64;
         let mut addr_words = 0u64;
+        let mut columns = [ColumnStats::default(); COLUMNS];
         for (_, bs) in &entries {
             blocks += bs.len() as u64;
             for b in bs {
                 records += b.n_records as u64;
                 addr_words += b.n_addr as u64;
+                for (c, stat) in columns.iter_mut().enumerate() {
+                    stat.raw_bytes += raw_len_bytes(b, c);
+                    stat.stored_bytes += b.col_len[c];
+                    stat.sections += 1;
+                    if b.col_enc[c] != Encoding::Raw {
+                        stat.encoded_sections += 1;
+                    }
+                }
             }
         }
         Ok(ArchiveInfo {
@@ -674,6 +907,7 @@ impl ArchiveInfo {
             blocks,
             records,
             addr_words,
+            columns,
         })
     }
 
@@ -703,5 +937,53 @@ impl ArchiveInfo {
             .split_whitespace()
             .find_map(|kv| kv.strip_prefix("name="))
             .unwrap_or("?")
+    }
+
+    /// Total decoded (v1-image) column bytes.
+    pub fn raw_column_bytes(&self) -> u64 {
+        self.columns.iter().map(|c| c.raw_bytes).sum()
+    }
+
+    /// Total stored column bytes (what actually sits on disk).
+    pub fn stored_column_bytes(&self) -> u64 {
+        self.columns.iter().map(|c| c.stored_bytes).sum()
+    }
+
+    /// Overall column compression ratio (raw / stored; 1.0 when
+    /// nothing is stored).
+    pub fn compress_ratio(&self) -> f64 {
+        let stored = self.stored_column_bytes();
+        if stored == 0 {
+            1.0
+        } else {
+            self.raw_column_bytes() as f64 / stored as f64
+        }
+    }
+
+    /// Compression ratio of the address-arena column alone — the
+    /// archive's dominant section, the one the ROADMAP's "~4x"
+    /// estimate was about.
+    pub fn addr_ratio(&self) -> f64 {
+        self.columns[COLUMNS - 1].ratio()
+    }
+
+    /// One-line per-section encoding summary for `trace-info`, e.g.
+    /// `addrs 4.1x dv · group_ids 7.8x dv · acc_len 62.1x rle`; only
+    /// columns with at least one encoded section appear. Empty string
+    /// for all-raw archives.
+    pub fn encoding_summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (c, stat) in self.columns.iter().enumerate() {
+            if stat.encoded_sections == 0 {
+                continue;
+            }
+            parts.push(format!(
+                "{} {:.1}x {}",
+                super::format::COLUMN_NAMES[c],
+                stat.ratio(),
+                COLUMN_WIDTHS[c].codec().label(),
+            ));
+        }
+        parts.join(" · ")
     }
 }

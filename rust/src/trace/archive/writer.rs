@@ -3,24 +3,70 @@
 //!
 //! The writer streams (never holds the serialized file in memory):
 //! header placeholder → meta → per-block column sections (8-aligned,
-//! each checksummed over data *and* its trailing pad, so the covered
-//! spans tile the whole data region) → index → patched header. The
-//! file is assembled under a process-unique temporary name in the
+//! each checksummed over stored data *and* its trailing pad, so the
+//! covered spans tile the whole data region) → index → patched header.
+//! The file is assembled under a process-unique temporary name in the
 //! destination directory and `rename(2)`d into place, so concurrent
 //! shard processes spilling the same case race safely: whichever
 //! rename lands last wins with a complete, identical file, and readers
 //! only ever observe complete archives.
+//!
+//! **Format v2 compression** ([`Compress`]): each column section may
+//! be stored raw (the v1 byte image, mapped zero-copy at replay) or
+//! encoded by its column-native codec — delta+varint for the wide
+//! integer columns, RLE for the byte columns (see [`super::codec`]).
+//! Under [`Compress::Auto`] the writer encodes each section and keeps
+//! whichever form is smaller, measured, never guessed — a section
+//! whose encoding doesn't pay stays raw and keeps the zero-copy path.
+//! The chosen encoding and the stored byte length land in the block
+//! index, one entry per section.
 
 use std::fs::File;
 use std::io::{BufWriter, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
+use super::codec::{self, Encoding};
 use super::format::{
     align_up, case_key, class_to_u8, kind_to_u8, tag_to_u8, Fnv,
-    COLUMNS, ENDIAN_TAG, FORMAT_VERSION, HEADER_LEN, MAGIC,
+    COLUMNS, COLUMN_WIDTHS, ENDIAN_TAG, FORMAT_VERSION, HEADER_LEN,
+    MAGIC, MIN_FORMAT_VERSION,
 };
 use crate::trace::block::BlockData;
 use crate::trace::recorded::RecordedDispatch;
+
+/// Per-section compression policy of one spill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compress {
+    /// Format v2, every section raw (zero-copy replay everywhere).
+    None,
+    /// Format v2, per section: encode, keep the smaller form. The
+    /// default — compression is taken only where it measurably pays.
+    #[default]
+    Auto,
+    /// Format v2, every section encoded (even when larger) — the
+    /// worst-case decode path, for tests and benches.
+    Force,
+    /// Legacy format v1 (no per-section encoding fields). Kept so
+    /// compatibility tests and the v1-vs-v2 bench A/B can produce
+    /// genuine v1 files; not reachable from the CLI.
+    V1,
+}
+
+impl std::str::FromStr for Compress {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Compress> {
+        match s {
+            "none" => Ok(Compress::None),
+            "auto" => Ok(Compress::Auto),
+            "force" => Ok(Compress::Force),
+            other => anyhow::bail!(
+                "--compress: '{other}' is not a compression mode \
+                 (none|auto|force)"
+            ),
+        }
+    }
+}
 
 /// Everything case-specific the archive stores besides the blocks.
 /// The manifest line is opaque to this layer — the coordinator renders
@@ -45,7 +91,9 @@ struct BlockIndex {
     n_inst: u32,
     n_acc: u32,
     n_addr: u32,
+    col_enc: [u8; COLUMNS],
     col_off: [u64; COLUMNS],
+    col_len: [u64; COLUMNS],
     col_sum: [u64; COLUMNS],
 }
 
@@ -62,10 +110,10 @@ impl Out {
         Ok(())
     }
 
-    /// Write one column: pad to alignment, then the data, then pad to
-    /// alignment again; returns (offset, checksum over data + trailing
-    /// pad). Leading padding is covered by the *previous* column's
-    /// checksum, so coverage tiles the data region with no gaps.
+    /// Write one column's stored bytes: the data, then zero pad to
+    /// alignment; returns (offset, checksum over data + trailing pad).
+    /// Leading padding is covered by the *previous* column's checksum,
+    /// so coverage tiles the data region with no gaps.
     fn column(&mut self, data: &[u8]) -> anyhow::Result<(u64, u64)> {
         debug_assert_eq!(self.pos % 8, 0, "columns start aligned");
         let off = self.pos;
@@ -82,13 +130,24 @@ impl Out {
 }
 
 /// Write `dispatches` (the base-width recording of one case) as an
-/// archive file in `dir`, atomically. Returns the final path. The file
-/// name embeds the case's content key, so config changes produce new
-/// files instead of overwriting unrelated recordings.
+/// archive file in `dir`, atomically, with the default
+/// [`Compress::Auto`] policy. Returns the final path. The file name
+/// embeds the case's content key, so config changes produce new files
+/// instead of overwriting unrelated recordings.
 pub fn write_case_archive(
     dir: &Path,
     meta: &CaseMeta<'_>,
     dispatches: &[RecordedDispatch],
+) -> anyhow::Result<PathBuf> {
+    write_case_archive_with(dir, meta, dispatches, Compress::Auto)
+}
+
+/// [`write_case_archive`] with an explicit [`Compress`] policy.
+pub fn write_case_archive_with(
+    dir: &Path,
+    meta: &CaseMeta<'_>,
+    dispatches: &[RecordedDispatch],
+    compress: Compress,
 ) -> anyhow::Result<PathBuf> {
     std::fs::create_dir_all(dir).map_err(|e| {
         anyhow::anyhow!("create archive dir {}: {e}", dir.display())
@@ -108,7 +167,7 @@ pub fn write_case_archive(
         SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
     ));
 
-    let res = write_to_tmp(&tmp_path, meta, key, dispatches)
+    let res = write_to_tmp(&tmp_path, meta, key, dispatches, compress)
         .and_then(|()| {
             std::fs::rename(&tmp_path, &final_path).map_err(|e| {
                 anyhow::anyhow!(
@@ -119,6 +178,9 @@ pub fn write_case_archive(
             })
         });
     if res.is_err() {
+        // this process's failed spill cleans up after itself; temps
+        // orphaned by a *crashed* process are swept by
+        // `gc::sweep_stale_temps` (`trace-info --prune`)
         let _ = std::fs::remove_file(&tmp_path);
     }
     res.map(|()| final_path)
@@ -129,7 +191,12 @@ fn write_to_tmp(
     meta: &CaseMeta<'_>,
     key: u64,
     dispatches: &[RecordedDispatch],
+    compress: Compress,
 ) -> anyhow::Result<()> {
+    let version = match compress {
+        Compress::V1 => MIN_FORMAT_VERSION,
+        _ => FORMAT_VERSION,
+    };
     let file = File::create(tmp_path).map_err(|e| {
         anyhow::anyhow!("create {}: {e}", tmp_path.display())
     })?;
@@ -168,6 +235,7 @@ fn write_to_tmp(
     let mut index: Vec<(String, Vec<BlockIndex>)> =
         Vec::with_capacity(dispatches.len());
     let mut colbuf: Vec<u8> = Vec::new();
+    let mut encbuf: Vec<u8> = Vec::new();
     for d in dispatches {
         let mut blocks = Vec::with_capacity(d.blocks.len());
         for b in d.blocks.iter() {
@@ -177,7 +245,9 @@ fn write_to_tmp(
                 n_inst: cols.inst_class.len() as u32,
                 n_acc: cols.acc_kind.len() as u32,
                 n_addr: cols.addrs.len() as u32,
+                col_enc: [Encoding::Raw.to_u8(); COLUMNS],
                 col_off: [0; COLUMNS],
+                col_len: [0; COLUMNS],
                 col_sum: [0; COLUMNS],
             };
             // wire order: tags, group_ids, inst_class, inst_count,
@@ -203,8 +273,39 @@ fn write_to_tmp(
                     7 => colbuf.extend_from_slice(cols.acc_len),
                     _ => push_u64s(&mut colbuf, cols.addrs),
                 }
-                let (off, sum) = out.column(&colbuf)?;
+                let (enc, stored): (Encoding, &[u8]) = match compress
+                {
+                    Compress::V1 | Compress::None => {
+                        (Encoding::Raw, colbuf.as_slice())
+                    }
+                    Compress::Force => {
+                        let enc = codec::encode(
+                            &colbuf,
+                            COLUMN_WIDTHS[c],
+                            &mut encbuf,
+                        );
+                        (enc, encbuf.as_slice())
+                    }
+                    Compress::Auto => {
+                        let enc = codec::encode(
+                            &colbuf,
+                            COLUMN_WIDTHS[c],
+                            &mut encbuf,
+                        );
+                        // measured, per section: compression must
+                        // actually pay, else keep the raw zero-copy
+                        // mapped form
+                        if encbuf.len() < colbuf.len() {
+                            (enc, encbuf.as_slice())
+                        } else {
+                            (Encoding::Raw, colbuf.as_slice())
+                        }
+                    }
+                };
+                let (off, sum) = out.column(stored)?;
+                e.col_enc[c] = enc.to_u8();
                 e.col_off[c] = off;
+                e.col_len[c] = stored.len() as u64;
                 e.col_sum[c] = sum;
             }
             blocks.push(e);
@@ -232,6 +333,17 @@ fn write_to_tmp(
             ibuf.extend_from_slice(&b.n_inst.to_le_bytes());
             ibuf.extend_from_slice(&b.n_acc.to_le_bytes());
             ibuf.extend_from_slice(&b.n_addr.to_le_bytes());
+            if version >= 2 {
+                // v2: one encoding byte and one stored length per
+                // section (v1 stores neither — all sections raw, with
+                // lengths derived from the counts)
+                ibuf.extend_from_slice(&b.col_enc);
+                for c in 0..COLUMNS {
+                    ibuf.extend_from_slice(
+                        &b.col_len[c].to_le_bytes(),
+                    );
+                }
+            }
             for c in 0..COLUMNS {
                 ibuf.extend_from_slice(&b.col_off[c].to_le_bytes());
             }
@@ -248,7 +360,7 @@ fn write_to_tmp(
     // -- patched header ------------------------------------------------
     let mut h = Vec::with_capacity(HEADER_LEN);
     h.extend_from_slice(&MAGIC);
-    h.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    h.extend_from_slice(&version.to_le_bytes());
     h.extend_from_slice(&ENDIAN_TAG.to_le_bytes());
     h.extend_from_slice(&meta.base_group_size.to_le_bytes());
     h.extend_from_slice(

@@ -29,7 +29,13 @@
 //! [`crate::trace::archive::MappedBlock`] expose the same record-level
 //! view, so every replay engine (and [`split half-group
 //! derivation`](crate::trace::recorded::split_half_groups)) runs
-//! unchanged — and zero-copy — over either storage.
+//! unchanged — and zero-copy — over either storage. Since archive
+//! format v2 a mapped block's columns may individually live in the
+//! mapped file (raw sections) or in the archive's pooled decode arena
+//! (delta-varint/RLE-compressed sections, decoded once at open); both
+//! resolve through the same hoisted [`Columns`] view, exactly once
+//! per block, so the hot loops cannot tell the three storage forms
+//! apart.
 
 use super::event::{GroupCtx, LdsAccess, MemAccess, MemKind};
 use super::sink::EventSink;

@@ -351,10 +351,19 @@ pub struct GateOutcome {
     pub failures: Vec<String>,
 }
 
-/// The bench regression gate: every `speedup/*` entry in `baseline`
-/// must appear in `current` at no less than `baseline * (1 -
-/// tolerance)`. Entries only in `current` pass with a note (new
-/// benches enter the baseline on the next `--update-baseline`).
+/// Whether a bench entry is gated against the baseline:
+/// `speedup/*` ratios (engine vs reference) and `size/*` metrics
+/// (archive compression ratios — for both families, bigger is
+/// better, so one floor rule fits).
+pub fn is_gated_metric(name: &str) -> bool {
+    name.starts_with("speedup/") || name.starts_with("size/")
+}
+
+/// The bench regression gate: every gated entry in `baseline` (see
+/// [`is_gated_metric`]) must appear in `current` at no less than
+/// `baseline * (1 - tolerance)`. Entries only in `current` pass with
+/// a note (new benches enter the baseline on the next
+/// `--update-baseline`).
 pub fn gate_speedups(
     current: &[(String, f64)],
     baseline: &[(String, f64)],
@@ -367,7 +376,7 @@ pub fn gate_speedups(
     };
     for (name, base) in baseline
         .iter()
-        .filter(|(n, _)| n.starts_with("speedup/"))
+        .filter(|(n, _)| is_gated_metric(n))
     {
         match current.iter().find(|(n, _)| n == name) {
             None => out.failures.push(format!(
@@ -395,7 +404,7 @@ pub fn gate_speedups(
         }
     }
     for (name, cur) in current {
-        if name.starts_with("speedup/")
+        if is_gated_metric(name)
             && !baseline.iter().any(|(n, _)| n == name)
         {
             out.report.push(format!(
@@ -510,6 +519,52 @@ mod tests {
             .report
             .iter()
             .any(|l| l.contains("new") && l.contains("speedup/new")));
+    }
+
+    #[test]
+    fn gate_covers_size_metrics_with_the_same_floor_rule() {
+        // archive compression ratios regress downward exactly like
+        // speedups: 4.0x baseline with 20% tolerance floors at 3.2x
+        let baseline = vec![
+            ("size/archive_compress_ratio".to_string(), 4.0),
+            ("archive/spill_write".to_string(), 1e9), // not gated
+        ];
+        let ok = vec![(
+            "size/archive_compress_ratio".to_string(),
+            3.5,
+        )];
+        let out = gate_speedups(&ok, &baseline, 0.2);
+        assert_eq!(out.checked, 1);
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+
+        let bad = vec![(
+            "size/archive_compress_ratio".to_string(),
+            2.0,
+        )];
+        let out = gate_speedups(&bad, &baseline, 0.2);
+        assert_eq!(out.failures.len(), 1);
+        assert!(
+            out.failures[0].contains("size/archive_compress_ratio"),
+            "{:?}",
+            out.failures
+        );
+        // a size metric new in current is a note, not a failure
+        let new = vec![
+            (
+                "size/archive_compress_ratio".to_string(),
+                4.0,
+            ),
+            ("size/other".to_string(), 2.0),
+        ];
+        let out = gate_speedups(&new, &baseline, 0.2);
+        assert!(out.failures.is_empty());
+        assert!(out
+            .report
+            .iter()
+            .any(|l| l.contains("new") && l.contains("size/other")));
+        assert!(is_gated_metric("speedup/x"));
+        assert!(is_gated_metric("size/x"));
+        assert!(!is_gated_metric("trace/x"));
     }
 
     #[test]

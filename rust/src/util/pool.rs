@@ -17,17 +17,40 @@
 //!   batch N's L2 phase with batch N+1's L1 phase this way).
 //!
 //! Panics inside jobs are caught, recorded on the latch, and re-raised
-//! on the waiting thread.
+//! on the waiting thread **with the first job's original payload**
+//! (`resume_unwind`), so the failure surfaces once, with its real
+//! message — not as a generic wrapper, and not as a cascade of
+//! `PoisonError` unwraps from every lock the dead job left behind.
+//! All pool-internal locks recover from poison ([`lock_recover`]):
+//! their invariants are re-established by the surrounding logic, and
+//! masking the *first* panic with a secondary one is strictly worse.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
 use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A panic payload captured from a failed job.
+type Payload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Lock `m`, recovering the guard if a panicking thread poisoned it.
+///
+/// Poisoning exists to warn that a critical section may have been cut
+/// short; here the first panic is already captured and re-raised
+/// exactly once (by [`WorkerPool::wait`]), so letting every later
+/// `lock().unwrap()` blow up as well only buries the real failure
+/// under opaque `PoisonError` noise — one worker's death must not
+/// cascade across the pool. Shared state guarded this way must
+/// tolerate a torn critical section (the pool's queue/latch state
+/// does; the replay engine's L2 stage documents its own contract).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Worker count for the global pool (and the replay engine's default
 /// shard count): the host's cores, bounded so tiny machines and huge
@@ -51,6 +74,10 @@ struct LatchInner {
     pending: Mutex<usize>,
     done: Condvar,
     panicked: AtomicBool,
+    /// The **first** failed job's panic payload, re-raised by the
+    /// waiter; later failures keep only the flag (their payloads are
+    /// dropped — one cause, reported once, beats a cascade).
+    payload: Mutex<Option<Payload>>,
 }
 
 impl Latch {
@@ -59,14 +86,19 @@ impl Latch {
     }
 
     fn add(&self, n: usize) {
-        *self.inner.pending.lock().unwrap() += n;
+        *lock_recover(&self.inner.pending) += n;
     }
 
-    fn complete(&self, panicked: bool) {
-        if panicked {
+    fn complete(&self, panicked: Option<Payload>) {
+        if let Some(payload) = panicked {
+            let mut slot = lock_recover(&self.inner.payload);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+            drop(slot);
             self.inner.panicked.store(true, Ordering::Relaxed);
         }
-        let mut pending = self.inner.pending.lock().unwrap();
+        let mut pending = lock_recover(&self.inner.pending);
         *pending -= 1;
         if *pending == 0 {
             self.inner.done.notify_all();
@@ -75,7 +107,7 @@ impl Latch {
 
     /// All jobs attached so far have finished.
     pub fn is_done(&self) -> bool {
-        *self.inner.pending.lock().unwrap() == 0
+        *lock_recover(&self.inner.pending) == 0
     }
 
     /// Two handles track the same completion group.
@@ -84,14 +116,22 @@ impl Latch {
     }
 
     fn wait_timeout(&self, d: Duration) {
-        let pending = self.inner.pending.lock().unwrap();
+        let pending = lock_recover(&self.inner.pending);
         if *pending != 0 {
-            let _ = self.inner.done.wait_timeout(pending, d).unwrap();
+            let _ = match self.inner.done.wait_timeout(pending, d) {
+                Ok(r) => r,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
     }
 
     fn panicked(&self) -> bool {
         self.inner.panicked.load(Ordering::Relaxed)
+    }
+
+    /// Take the first panic payload (subsequent calls get `None`).
+    fn take_payload(&self) -> Option<Payload> {
+        lock_recover(&self.inner.payload).take()
     }
 }
 
@@ -140,7 +180,7 @@ impl WorkerPool {
 
     fn push(&self, latch: &Latch, job: Job) {
         latch.add(1);
-        let mut queue = self.shared.queue.lock().unwrap();
+        let mut queue = lock_recover(&self.shared.queue);
         queue.push_back((latch.clone(), job));
         drop(queue);
         self.shared.available.notify_one();
@@ -163,7 +203,7 @@ impl WorkerPool {
     /// thread that likewise helps its own waits.
     fn try_run_one(&self, only: Option<&Latch>) -> bool {
         let job = {
-            let mut queue = self.shared.queue.lock().unwrap();
+            let mut queue = lock_recover(&self.shared.queue);
             match only {
                 None => queue.pop_front(),
                 Some(target) => queue
@@ -193,11 +233,21 @@ impl WorkerPool {
     }
 
     /// Block until every job on `latch` finished, executing queued jobs
-    /// while waiting. Panics if any job attached to the latch panicked.
+    /// while waiting. If any job attached to the latch panicked, the
+    /// **first** failure's payload is re-raised here (`resume_unwind`),
+    /// so the waiter reports the original panic message exactly once.
     pub fn wait(&self, latch: &Latch) {
         self.wait_impl(latch);
         if latch.panicked() {
-            panic!("worker pool job panicked");
+            match latch.take_payload() {
+                Some(payload) => resume_unwind(payload),
+                // payload already re-raised by another waiter of the
+                // same latch; still fail this one, loudly
+                None => panic!(
+                    "worker pool job panicked (first failure \
+                     re-raised at another waiter)"
+                ),
+            }
         }
     }
 
@@ -279,7 +329,7 @@ impl<'pool, 'scope> PoolScope<'pool, 'scope> {
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
-            let mut queue = shared.queue.lock().unwrap();
+            let mut queue = lock_recover(&shared.queue);
             loop {
                 if let Some(j) = queue.pop_front() {
                     break Some(j);
@@ -287,7 +337,10 @@ fn worker_loop(shared: &Shared) {
                 if shared.shutdown.load(Ordering::Relaxed) {
                     break None;
                 }
-                queue = shared.available.wait(queue).unwrap();
+                queue = match shared.available.wait(queue) {
+                    Ok(q) => q,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
             }
         };
         match job {
@@ -298,8 +351,7 @@ fn worker_loop(shared: &Shared) {
 }
 
 fn run_job(latch: &Latch, f: Job) {
-    let panicked = catch_unwind(AssertUnwindSafe(f)).is_err();
-    latch.complete(panicked);
+    latch.complete(catch_unwind(AssertUnwindSafe(f)).err());
 }
 
 #[cfg(test)]
@@ -390,12 +442,77 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "worker pool job panicked")]
-    fn job_panics_propagate_to_the_waiter() {
+    #[should_panic(expected = "boom")]
+    fn job_panics_propagate_the_original_payload() {
+        // regression: the waiter used to panic with a generic
+        // "worker pool job panicked", losing the real failure message
         let pool = WorkerPool::new(2);
         pool.scope(|s| {
             s.spawn(|| panic!("boom"));
         });
+    }
+
+    #[test]
+    fn first_panic_wins_and_the_pool_stays_usable() {
+        let pool = WorkerPool::new(2);
+        // several failing jobs: exactly the first recorded payload is
+        // re-raised (the others only keep the flag)
+        let latch = Latch::new();
+        for i in 0..4 {
+            pool.submit(&latch, move || {
+                panic!("job {i} failed");
+            });
+        }
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.wait(&latch);
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("failed"), "original payload: {msg}");
+
+        // regression: a panicked job must not cascade — the pool's
+        // internal locks recover from poison and later jobs run fine
+        let counter = Arc::new(AtomicUsize::new(0));
+        let latch2 = Latch::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.submit(&latch2, move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait(&latch2);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn lock_recover_survives_a_poisoning_panic() {
+        // regression: shared engine state (`memsim/sharded.rs`'s L2
+        // stage) used `lock().unwrap()`, so one panicking job holding
+        // the lock turned every later access into an opaque secondary
+        // PoisonError panic
+        let pool = WorkerPool::new(2);
+        let stage = Arc::new(Mutex::new(7u64));
+        let poisoner = Arc::clone(&stage);
+        let latch = Latch::new();
+        pool.submit(&latch, move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("died holding the stage lock");
+        });
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.wait(&latch);
+        }))
+        .unwrap_err();
+        assert!(err
+            .downcast_ref::<&str>()
+            .is_some_and(|m| m.contains("stage lock")));
+        assert!(stage.is_poisoned(), "precondition: lock poisoned");
+        // the recovering accessor still reads (and can repair) state
+        assert_eq!(*lock_recover(&stage), 7);
+        *lock_recover(&stage) = 8;
+        assert_eq!(*lock_recover(&stage), 8);
     }
 
     #[test]

@@ -10,7 +10,9 @@ use std::path::{Path, PathBuf};
 use rocline::arch::presets;
 use rocline::coordinator::{CaseRun, CaseTrace, StoredTrace, TraceStore};
 use rocline::pic::CaseConfig;
-use rocline::trace::archive::{ArchiveInfo, MappedCaseTrace};
+use rocline::trace::archive::{
+    fnv1a, ArchiveInfo, Compress, MappedCaseTrace,
+};
 
 fn tiny_case(name: &str, steps: u32) -> CaseConfig {
     let mut cfg = CaseConfig::lwfa();
@@ -182,6 +184,215 @@ fn prepopulated_archive_sweeps_with_zero_live_recordings() {
     );
     assert_eq!(store2.archive_hits(), cases.len());
     assert_eq!(store2.spills(), 0);
+}
+
+#[test]
+fn v1_v2raw_and_v2compressed_replay_bit_identically() {
+    // the cross-format equivalence proof: a genuine legacy v1 file,
+    // a v2 all-raw file, a v2 auto-compressed file and a v2
+    // force-compressed file all replay through
+    // `profile_blocks_scaled` with counters bit-identical to live
+    // tracing, on every GPU preset (V100's half-group derivation
+    // included)
+    let cfg = tiny_case("tiny-xfmt", 2);
+    let trace = CaseTrace::record(&cfg);
+    let modes = [
+        ("v1", Compress::V1, 1u32),
+        ("v2-raw", Compress::None, 2),
+        ("v2-auto", Compress::Auto, 2),
+        ("v2-force", Compress::Force, 2),
+    ];
+    let mut mapped = Vec::new();
+    for (tag, mode, want_version) in modes {
+        let dir = TmpDir::new(&format!("xfmt-{tag}"));
+        let path = trace.spill_to_with(dir.path(), mode).unwrap();
+        let m = MappedCaseTrace::open(&path).unwrap();
+        assert_eq!(m.version(), want_version, "{tag}");
+        assert_eq!(m.dispatch_count(), trace.dispatch_count());
+        if mode == Compress::Force {
+            assert!(
+                m.decoded_bytes() > 0,
+                "force-compressed archives replay via the decode \
+                 arena"
+            );
+        }
+        if matches!(mode, Compress::V1 | Compress::None) {
+            assert_eq!(m.decoded_bytes(), 0, "{tag} is all-raw");
+        }
+        mapped.push((tag, dir, m));
+    }
+    for spec in presets::all_gpus() {
+        let live =
+            CaseRun::execute_with_threads(spec.clone(), cfg.clone(), 4);
+        for (tag, _dir, m) in &mapped {
+            let replayed = CaseRun::from_mapped(
+                spec.clone(),
+                cfg.clone(),
+                m,
+                4,
+            );
+            assert_runs_identical(
+                &live,
+                &replayed,
+                &format!("{tag} on {}", spec.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn compressed_archives_shrink_the_addr_sections_at_least_3x() {
+    // the acceptance bar: delta+varint must shrink the address-arena
+    // sections (the archive's dominant bytes) >= 3x on the default
+    // case dynamics, with the overall file strictly smaller than the
+    // raw form — reported by the same ArchiveInfo fields trace-info
+    // prints
+    let cfg = tiny_case("tiny-ratio", 2);
+    let trace = CaseTrace::record(&cfg);
+    let raw_dir = TmpDir::new("ratio-raw");
+    let auto_dir = TmpDir::new("ratio-auto");
+    let raw_path =
+        trace.spill_to_with(raw_dir.path(), Compress::None).unwrap();
+    let auto_path = trace
+        .spill_to_with(auto_dir.path(), Compress::Auto)
+        .unwrap();
+
+    let raw_info = ArchiveInfo::scan(&raw_path).unwrap();
+    let auto_info = ArchiveInfo::scan(&auto_path).unwrap();
+    assert!(
+        (raw_info.compress_ratio() - 1.0).abs() < 1e-9,
+        "raw archives report ratio 1.0"
+    );
+    assert!(raw_info.encoding_summary().is_empty());
+
+    let addr_ratio = auto_info.addr_ratio();
+    assert!(
+        addr_ratio >= 3.0,
+        "addr sections must shrink >= 3x under auto compression, \
+         got {addr_ratio:.2}x"
+    );
+    assert!(
+        auto_info.compress_ratio() > 1.5,
+        "overall column bytes must shrink, got {:.2}x",
+        auto_info.compress_ratio()
+    );
+    assert!(
+        auto_info.file_bytes < raw_info.file_bytes,
+        "compressed file ({}) not smaller than raw ({})",
+        auto_info.file_bytes,
+        raw_info.file_bytes
+    );
+    assert!(
+        auto_info.encoding_summary().contains("addrs"),
+        "summary names the compressed sections: {}",
+        auto_info.encoding_summary()
+    );
+    // raw/decoded element counts agree between the two forms
+    assert_eq!(auto_info.records, raw_info.records);
+    assert_eq!(auto_info.addr_words, raw_info.addr_words);
+    assert_eq!(
+        auto_info.raw_column_bytes(),
+        raw_info.raw_column_bytes()
+    );
+}
+
+#[test]
+fn stale_spill_temps_are_swept_by_prune_but_live_ones_kept() {
+    use rocline::trace::archive::{gc, sweep_stale_temps};
+    use std::collections::HashSet;
+    use std::io::Write;
+
+    // regression: a crashed spill's `.{key}.tmp.{pid}.{n}` file used
+    // to leak forever — the writer only removes its own temp on
+    // error, and prune_dir's .rtrc extension filter skipped dotfile
+    // temps
+    let dir = TmpDir::new("stale-temps");
+    let cfg = tiny_case("tiny-temps", 1);
+    let archive = CaseTrace::record(&cfg).spill_to(dir.path()).unwrap();
+    let archive_name = archive
+        .file_name()
+        .unwrap()
+        .to_string_lossy()
+        .into_owned();
+
+    // a temp orphaned by a "crashed" process: linux pids never reach
+    // 2^22's ceiling of 4194304, so this owner is guaranteed dead
+    let stale =
+        dir.path().join(format!(".{archive_name}.tmp.4200999.0"));
+    // a temp owned by this very process: a live spill mid-write
+    let live = dir.path().join(format!(
+        ".{archive_name}.tmp.{}.1",
+        std::process::id()
+    ));
+    for p in [&stale, &live] {
+        std::fs::File::create(p)
+            .unwrap()
+            .write_all(b"partial spill")
+            .unwrap();
+    }
+
+    let swept = sweep_stale_temps(dir.path()).unwrap();
+    assert_eq!(swept, vec![stale.clone()]);
+    assert!(!stale.exists(), "orphaned temp deleted");
+    assert!(live.exists(), "live spill temp untouched");
+    assert!(archive.exists(), "complete archives untouched");
+
+    // the full `trace-info --prune` path reports the sweep too and
+    // leaves the live archive replayable
+    std::fs::File::create(&stale)
+        .unwrap()
+        .write_all(b"partial spill again")
+        .unwrap();
+    let livekeys: HashSet<String> =
+        [archive_name].into_iter().collect();
+    let report = gc::prune_dir(dir.path(), &livekeys).unwrap();
+    assert_eq!(report.swept_temps, vec![stale.clone()]);
+    assert_eq!(report.kept.len(), 1);
+    assert!(report.deleted.is_empty());
+    assert!(MappedCaseTrace::open(&archive).is_ok());
+    assert!(live.exists());
+}
+
+#[test]
+fn corrupt_section_encoding_bytes_are_clean_errors() {
+    // surgical index corruption: flip the first block's first
+    // encoding byte (and re-seal the index checksum so *only* the
+    // encoding validation can object) — open must fail cleanly, both
+    // for an unknown code and for a valid-but-mismatched codec
+    let dir = TmpDir::new("bad-enc");
+    let cfg = tiny_case("tiny-enc", 1);
+    let path = CaseTrace::record(&cfg)
+        .spill_to_with(dir.path(), Compress::Force)
+        .unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let index_off = u64::from_le_bytes(
+        good[40..48].try_into().unwrap(),
+    ) as usize;
+
+    // index layout: klen(2) + kernel + nblocks(4), then per block
+    // counts(16) followed by the 9 encoding bytes
+    let klen = u16::from_le_bytes(
+        good[index_off..index_off + 2].try_into().unwrap(),
+    ) as usize;
+    let enc0 = index_off + 2 + klen + 4 + 16;
+
+    for (bad_byte, expect) in [
+        (9u8, "unknown section encoding"),
+        // tags is a u8 column; DeltaVarint is a real encoding but
+        // never valid for it
+        (1u8, "not valid"),
+    ] {
+        let mut bytes = good.clone();
+        bytes[enc0] = bad_byte;
+        // re-seal the index checksum (its trailing 8 bytes)
+        let end = bytes.len() - 8;
+        let sum = fnv1a(&bytes[index_off..end]);
+        bytes[end..].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err =
+            MappedCaseTrace::open(&path).unwrap_err().to_string();
+        assert!(err.contains(expect), "byte {bad_byte}: {err}");
+    }
 }
 
 #[test]
