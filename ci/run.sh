@@ -46,6 +46,14 @@
 #     with the dated ci/BENCH_trajectory.json entry it appends.
 #     BENCH_hotpath.json itself is uploaded as a per-run artifact by
 #     the workflow.
+#   * streaming smoke — `rocline synth-trace` builds a synthetic
+#     archive whose decoded column image dwarfs a hard `ulimit -v`
+#     address-space cap; `rocline synth-replay --mode=streaming` must
+#     replay it *under* that cap with a counter digest bit-identical
+#     to the uncapped resident replay (and the resident tier must
+#     FAIL under the same cap, proving the cap binds). This is the
+#     out-of-core contract: peak memory bounded by the dispatch
+#     working set, not the archive size.
 #   * lint — `cargo fmt -- --check` and `cargo clippy -- -D warnings`.
 #     Both are skipped with a notice when the component is not
 #     installed (offline toolchains); set ROCLINE_LINT_STRICT=1 (the
@@ -148,6 +156,49 @@ trap 'rm -rf "$SMOKE_ARCH"' EXIT
     exit 1
 }
 ./target/release/rocline trace-info "$SMOKE_ARCH" --prune lwfa --steps 1
+
+# bounded-memory streaming smoke: build a synth archive whose decoded
+# column image (~700 MiB: stride workload, 2^21 threads x 20
+# dispatches at ~17 decoded bytes/thread) dwarfs a hard 512 MiB
+# address-space cap, then prove the out-of-core tier replays it
+# bit-identically while staying under the cap. Three legs:
+#   1. resident replay, uncapped       -> reference counter digest
+#   2. resident replay under the cap   -> must FAIL (the cap binds:
+#      the mapped tier has to hold the whole decoded arena)
+#   3. streaming replay under the cap  -> must SUCCEED with the same
+#      digest (decode-ahead holds only ~2 dispatch arenas)
+# The cap leaves headroom for the worker pool's reserved thread
+# stacks (up to 16 x 8 MiB of address space), which ulimit -v counts.
+echo "== streaming smoke: out-of-core replay under a 512 MiB ulimit -v =="
+SMOKE_SYNTH="$(mktemp -d "${TMPDIR:-/tmp}/rocline-smoke-synth.XXXXXX")"
+trap 'rm -rf "$SMOKE_ARCH" "$SMOKE_SYNTH"' EXIT
+SYNTH_RTRC="$(./target/release/rocline synth-trace --out "$SMOKE_SYNTH" \
+    --case stride --n 2097152 --dispatches 20 --seed 7 --compress=force)"
+RES_LINE="$(./target/release/rocline synth-replay "$SYNTH_RTRC" --mode=resident)"
+echo "resident  (uncapped): $RES_LINE"
+STREAM_CAP_KB=$((512 * 1024))
+if (ulimit -v "$STREAM_CAP_KB"; exec ./target/release/rocline \
+        synth-replay "$SYNTH_RTRC" --mode=resident) >/dev/null 2>&1; then
+    echo "resident replay fit under the cap — smoke archive too small" \
+         "to prove anything; grow --n/--dispatches" >&2
+    exit 1
+fi
+STREAM_LINE="$( (ulimit -v "$STREAM_CAP_KB"; exec ./target/release/rocline \
+    synth-replay "$SYNTH_RTRC" --mode=streaming) )"
+echo "streaming (capped):   $STREAM_LINE"
+RES_DIGEST="${RES_LINE%% *}"
+STREAM_DIGEST="${STREAM_LINE%% *}"
+case "$RES_DIGEST" in
+    digest=*) ;;
+    *) echo "unexpected synth-replay output: '$RES_LINE'" >&2; exit 1 ;;
+esac
+[ "$RES_DIGEST" = "$STREAM_DIGEST" ] || {
+    echo "streaming replay diverged from resident:" >&2
+    echo "  resident:  $RES_LINE" >&2
+    echo "  streaming: $STREAM_LINE" >&2
+    exit 1
+}
+echo "streaming smoke ok: bit-identical under the cap ($RES_DIGEST)"
 
 if [ -n "$SHARD" ]; then
     OUT="out-shard-${SHARD//\//-of-}"

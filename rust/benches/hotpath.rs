@@ -187,6 +187,7 @@ fn main() {
     // track in-memory replay (the engines are generic over storage;
     // the gate holds speedup/replay_mmap_vs_mem near 1.0)
     let mut compress_ratio: Option<f64> = None;
+    let mut replay_peak: Option<f64> = None;
     {
         let mut acfg = CaseConfig::lwfa();
         acfg.name = "bench-arch".into();
@@ -275,6 +276,37 @@ fn main() {
             },
         );
 
+        // out-of-core streaming tier vs the resident mapped tier over
+        // the same archive: dispatches decode on demand into recycled
+        // arenas with decode-ahead on the worker pool, so replay
+        // should track the mapped path while holding only a bounded
+        // working set (the instrumented peak feeds mem/replay_peak_rss)
+        {
+            use rocline::trace::archive::StreamingCaseTrace;
+            use std::sync::Arc;
+            let streaming = Arc::new(
+                StreamingCaseTrace::open(&path)
+                    .expect("open streaming"),
+            );
+            r.bench_throughput(
+                "archive/replay_streaming_MI100",
+                arch_items,
+                || {
+                    CaseRun::from_streamed(
+                        spec.clone(),
+                        acfg.clone(),
+                        &streaming,
+                        4,
+                    )
+                    .expect("streaming replay")
+                    .session
+                    .total_time_s()
+                },
+            );
+            replay_peak =
+                Some(streaming.peak_decode_bytes() as f64);
+        }
+
         // format v2 compression A/B: replay a genuine v1 archive vs
         // the v2 auto-compressed form of the same recording (decode
         // arena vs pure mmap — the decode cost is paid once at open,
@@ -354,6 +386,77 @@ fn main() {
 
         drop(mapped);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // codec kernel isolation: the batched decoders (chunk-guarded
+    // varint reads, unrolled zigzag-delta prefix sums, run-sized RLE
+    // fills) vs the scalar byte-at-a-time references they replaced —
+    // same inputs, same outputs, same errors (property-proven in the
+    // codec tests); the ratio isolates pure decode throughput with no
+    // engine or I/O in the loop. Inputs are shaped like real columns:
+    // near-sorted 64-byte-strided addresses with low-bit jitter for
+    // the delta+varint lane, long runs of a few distinct byte values
+    // for the RLE lane.
+    {
+        use rocline::trace::archive::codec::{
+            self, bench_hooks, ElemWidth,
+        };
+        use rocline::util::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0xC0DEC);
+        let n_addr = 1usize << 16;
+        let mut raw_addr = Vec::with_capacity(n_addr * 8);
+        for i in 0..n_addr as u64 {
+            let a = 0x1000_0000 + i * 64 + (rng.next_u64() & 0xFF);
+            raw_addr.extend_from_slice(&a.to_le_bytes());
+        }
+        let n_tag = 1usize << 18;
+        let mut raw_tag = Vec::with_capacity(n_tag);
+        while raw_tag.len() < n_tag {
+            let v = (rng.next_u64() % 3) as u8;
+            let run = 1 + (rng.next_u64() % 200) as usize;
+            let run = run.min(n_tag - raw_tag.len());
+            raw_tag.resize(raw_tag.len() + run, v);
+        }
+        let mut enc_addr = Vec::new();
+        codec::delta_varint_encode(
+            &raw_addr,
+            ElemWidth::U64,
+            &mut enc_addr,
+        );
+        let mut enc_tag = Vec::new();
+        codec::rle_encode(&raw_tag, &mut enc_tag);
+        let total = (n_addr + n_tag) as u64;
+        let mut out = Vec::new();
+        r.bench_throughput("codec/decode_batched", total, || {
+            out.clear();
+            codec::delta_varint_decode(
+                &enc_addr,
+                n_addr,
+                ElemWidth::U64,
+                &mut out,
+            )
+            .expect("batched delta decode");
+            codec::rle_decode(&enc_tag, n_tag, &mut out)
+                .expect("batched rle decode");
+            out.len()
+        });
+        r.bench_throughput("codec/decode_scalar", total, || {
+            out.clear();
+            bench_hooks::delta_varint_decode_scalar(
+                &enc_addr,
+                n_addr,
+                ElemWidth::U64,
+                &mut out,
+            )
+            .expect("scalar delta decode");
+            bench_hooks::rle_decode_scalar(
+                &enc_tag,
+                n_tag,
+                &mut out,
+            )
+            .expect("scalar rle decode");
+            out.len()
+        });
     }
 
     // replay-engine phase isolation: (a) the one-pass routing phase
@@ -471,6 +574,23 @@ fn main() {
             "archive/replay_v2c_MI100",
             "archive/replay_v1_MI100",
         ),
+        // batched codec kernels vs the scalar references (pure decode
+        // throughput; the hot path of both open-time section decode
+        // and streamed per-dispatch decode)
+        (
+            "speedup/codec_decode_batched_vs_scalar",
+            "codec/decode_batched",
+            "codec/decode_scalar",
+        ),
+        // out-of-core streaming replay vs the resident mapped tier
+        // (expect ~1.0: decode-ahead overlaps replay; a collapse
+        // means the bounded-memory tier started serializing decode
+        // behind the engines)
+        (
+            "speedup/replay_streaming_vs_resident",
+            "archive/replay_streaming_MI100",
+            "archive/replay_mmap_MI100",
+        ),
     ];
     for (name, fast, base) in pairs {
         if let (Some(f), Some(b)) =
@@ -499,6 +619,20 @@ fn main() {
             name: "size/archive_compress_ratio".to_string(),
             time: rocline::util::Summary::of(&[1.0]),
             throughput: Some(ratio),
+        });
+    }
+
+    // the bounded-memory metric: peak bytes the streaming decoder
+    // held across every replay of the bench archive (instrumented
+    // gauge, not process RSS — deterministic and unpolluted by the
+    // other benches). Gated with a *ceiling* in bench-gate: growth
+    // means the out-of-core tier stopped being out-of-core.
+    if let Some(peak) = replay_peak {
+        println!("{:<44} {peak:>10.0} bytes", "mem/replay_peak_rss");
+        results.push(BenchResult {
+            name: "mem/replay_peak_rss".to_string(),
+            time: rocline::util::Summary::of(&[1.0]),
+            throughput: Some(peak),
         });
     }
 

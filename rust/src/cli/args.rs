@@ -31,10 +31,10 @@ pub struct Args {
 
 /// Options that take a value in space-separated form (`--key value`).
 /// `--key=value` works for these and for any future key alike.
-const VALUED: [&str; 19] = [
+const VALUED: [&str; 22] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
-    "trace-dir", "trajectory", "compress",
+    "trace-dir", "trajectory", "compress", "mode", "dispatches", "seed",
 ];
 
 /// Known boolean flags. Anything else with `--` and no `=` is an
@@ -305,6 +305,21 @@ mod tests {
         let a = parse("reproduce --trace-dir traces --all");
         assert_eq!(a.get("trace-dir"), Some("traces"));
         assert!(a.flag("all"));
+    }
+
+    #[test]
+    fn synth_options_take_values() {
+        let a = parse(
+            "synth-trace --case stride --n 1048576 --dispatches 8 \
+             --seed 42 --compress force --out /tmp/synth",
+        );
+        assert_eq!(a.get("case"), Some("stride"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 1_048_576);
+        assert_eq!(a.get_u32("dispatches", 0).unwrap(), 8);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        let a = parse("synth-replay x.rtrc --mode=streaming");
+        assert_eq!(a.get("mode"), Some("streaming"));
+        assert_eq!(a.positional, vec!["x.rtrc"]);
     }
 
     #[test]

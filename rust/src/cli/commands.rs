@@ -161,7 +161,7 @@ pub fn record(args: &Args) -> anyhow::Result<()> {
             bytes,
             path.display(),
             t0.elapsed().as_secs_f64(),
-            if stored.is_mapped() {
+            if stored.is_archived() {
                 "already archived"
             } else {
                 "recorded + spilled"
@@ -356,11 +356,13 @@ pub fn trace_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Bench regression gate: compare the `speedup/*` ratios **and the
-/// `size/*` metrics** (archive compression ratios — a shrink in how
-/// much the archive shrinks is a regression too) in the hotpath bench
-/// artifact against the checked-in baseline; fail on >tolerance
-/// regression. `--update-baseline` refreshes the baseline instead.
+/// Bench regression gate: compare the `speedup/*` ratios, the
+/// `size/*` metrics (archive compression ratios — a shrink in how
+/// much the archive shrinks is a regression too) **and the `mem/*`
+/// metrics** (streaming replay's peak decoder bytes, gated with a
+/// *ceiling*: growth is the regression) in the hotpath bench artifact
+/// against the checked-in baseline; fail on >tolerance regression.
+/// `--update-baseline` refreshes the baseline instead.
 pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
     use crate::util::bench;
 
@@ -391,8 +393,8 @@ pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
         .collect();
     anyhow::ensure!(
         !current.is_empty(),
-        "{bench_path} has no speedup/* or size/* entries (bench \
-         names drifted?)"
+        "{bench_path} has no speedup/*, size/* or mem/* entries \
+         (bench names drifted?)"
     );
 
     if args.flag("update-baseline") {
@@ -455,6 +457,172 @@ pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
         "bench gate ok: {} gated metric(s) within {:.0}% of baseline",
         outcome.checked,
         tolerance * 100.0
+    );
+    Ok(())
+}
+
+/// Record a size-parameterized synthetic workload archive — the trace
+/// scale fuzzer as a CLI. Unlike `record`, the trace comes from
+/// [`crate::trace::synth::synth_dispatches`] (gather/atomic/stride
+/// generators with dialable thread and dispatch counts), so CI can
+/// build archives of any size — including decoded images much larger
+/// than RAM — in seconds, without running the PIC simulation at scale.
+/// Prints the final archive path as the only stdout line (scripts
+/// capture it with `$(...)`); the human summary goes to stderr.
+pub fn synth_trace(args: &Args) -> anyhow::Result<()> {
+    use crate::trace::archive::{
+        write_case_archive_with, CaseMeta, Compress,
+    };
+    use crate::trace::synth::{synth_dispatches, SynthWorkload};
+
+    let out = PathBuf::from(args.get_or("out", "synth-archive"));
+    let wl_name = args.get_or("case", "gather");
+    let workload = SynthWorkload::parse(wl_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown synth workload '{wl_name}' \
+             (gather|atomic|stride)"
+        )
+    })?;
+    let n = args.get_u64("n", 1 << 16)?;
+    anyhow::ensure!(n > 0, "--n must be at least 1 thread");
+    let dispatches = args.get_u32("dispatches", 4)?;
+    anyhow::ensure!(
+        dispatches > 0,
+        "--dispatches must be at least 1"
+    );
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let compress: Compress =
+        args.get_or("compress", "auto").parse()?;
+    // synth archives are recorded at the AMD wavefront width; replay
+    // them with a 64-lane GPU preset (mi60/mi100)
+    let group = 64u32;
+    let recorded =
+        synth_dispatches(workload, n, dispatches, group, seed);
+    let name = format!("synth-{}", workload.label());
+    let manifest = format!(
+        "synth case={} n={n} dispatches={dispatches} seed={seed}",
+        workload.label()
+    );
+    let meta = CaseMeta {
+        name: &name,
+        manifest: &manifest,
+        base_group_size: group,
+        seed,
+        final_field_energy: 0.0,
+        final_kinetic_energy: 0.0,
+    };
+    let t0 = std::time::Instant::now();
+    let path =
+        write_case_archive_with(&out, &meta, &recorded, compress)?;
+    let bytes = std::fs::metadata(&path)
+        .map(|m| m.len())
+        .unwrap_or(0);
+    eprintln!(
+        "synth {}: {} thread(s) x {} dispatch(es) -> {} bytes on \
+         disk ({:.2}s)",
+        workload.label(),
+        n,
+        dispatches,
+        bytes,
+        t0.elapsed().as_secs_f64(),
+    );
+    println!("{}", path.display());
+    Ok(())
+}
+
+/// Replay one archive file through the profile engine and print a
+/// deterministic digest of every dispatch's counters, plus the
+/// decoder's peak resident bytes. The CI bounded-memory smoke runs
+/// this twice over a synth archive whose decoded image exceeds a hard
+/// `ulimit -v` cap — resident uncapped, streaming under the cap — and
+/// compares digests: same digest means the out-of-core tier replayed
+/// the archive bit-identically while never holding more than a couple
+/// of dispatch arenas.
+pub fn synth_replay(args: &Args) -> anyhow::Result<()> {
+    use std::sync::Arc;
+
+    use crate::coordinator::{ReplayMode, TraceStore};
+    use crate::trace::archive::{
+        fnv1a, ArchiveInfo, MappedCaseTrace, StreamingCaseTrace,
+    };
+
+    let target = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "usage: rocline synth-replay <archive.rtrc> \
+                 [--mode auto|resident|streaming] [--gpu G]"
+            )
+        })?;
+    let path = Path::new(target);
+    let spec = gpu_arg(args)?;
+    let mode: ReplayMode = args.get_or("mode", "auto").parse()?;
+    let stream = match mode {
+        ReplayMode::Resident => false,
+        ReplayMode::Streaming => true,
+        // same policy as the store: stream archives whose decoded
+        // column image exceeds the resident threshold
+        ReplayMode::Auto => {
+            ArchiveInfo::scan(path)?.raw_column_bytes()
+                > TraceStore::STREAM_THRESHOLD
+        }
+    };
+    let scale = spec.isa_expansion;
+    let mut session =
+        ProfileSession::sharded_with_threads(spec.clone(), 4);
+    let (label, peak) = if stream {
+        let trace = Arc::new(StreamingCaseTrace::open(path)?);
+        anyhow::ensure!(
+            spec.group_size == trace.base_group_size(),
+            "archive {} was recorded at group size {}, but --gpu {} \
+             replays at {} (pick a matching preset)",
+            path.display(),
+            trace.base_group_size(),
+            spec.name,
+            spec.group_size,
+        );
+        trace.replay(|d| {
+            session.profile_blocks_scaled(
+                &d.kernel,
+                &d.blocks[..],
+                scale,
+            );
+        })?;
+        ("streaming", trace.peak_decode_bytes())
+    } else {
+        let trace = MappedCaseTrace::open(path)?;
+        anyhow::ensure!(
+            spec.group_size == trace.base_group_size(),
+            "archive {} was recorded at group size {}, but --gpu {} \
+             replays at {} (pick a matching preset)",
+            path.display(),
+            trace.base_group_size(),
+            spec.name,
+            spec.group_size,
+        );
+        for d in trace.dispatches() {
+            session.profile_blocks_scaled(
+                &d.kernel,
+                &d.blocks[..],
+                scale,
+            );
+        }
+        ("resident", trace.decoded_bytes())
+    };
+    // digest over the full debug rendering of every dispatch record:
+    // kernel names, instruction/access counters, traffic and timing —
+    // any divergence between tiers lands in this value
+    let mut rendered = String::new();
+    for d in &session.dispatches {
+        rendered.push_str(&format!("{d:?}\n"));
+    }
+    let digest = fnv1a(rendered.as_bytes());
+    println!(
+        "digest={digest:016x} dispatches={} peak_decode_bytes={peak} \
+         mode={label}",
+        session.dispatches.len(),
     );
     Ok(())
 }

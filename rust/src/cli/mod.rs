@@ -14,6 +14,11 @@
 //! rocline artifacts [--dir D]
 //! rocline bench-gate [--bench F] [--baseline F] [--tolerance T]
 //!                    [--update-baseline] [--trajectory F]
+//! rocline synth-trace [--out DIR] [--case gather|atomic|stride]
+//!                     [--n N] [--dispatches D] [--seed S]
+//!                     [--compress none|auto|force]
+//! rocline synth-replay <FILE> [--mode auto|resident|streaming]
+//!                      [--gpu G]
 //! ```
 //!
 //! All options also accept `--key=value` form.
@@ -37,6 +42,8 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "pic" => commands::pic(&args),
         "artifacts" => commands::artifacts(&args),
         "bench-gate" => commands::bench_gate(&args),
+        "synth-trace" => commands::synth_trace(&args),
+        "synth-replay" => commands::synth_replay(&args),
         "help" | "" => {
             print!("{}", HELP);
             Ok(())
@@ -106,5 +113,16 @@ COMMANDS:
                appends a dated snapshot to the committed perf
                trajectory, --trajectory F, default
                ci/BENCH_trajectory.json)
+  synth-trace  record a size-parameterized synthetic workload archive
+               (the trace scale fuzzer — gather|atomic|stride; CI uses
+               it to build archives larger than RAM). Prints the
+               archive path on stdout. options: --out DIR --case W
+               --n THREADS --dispatches D --seed S --compress M
+  synth-replay replay an archive through the profile engine and print
+               a deterministic digest of the dispatch counters plus
+               the decoder's peak resident bytes — the CI probe that
+               proves streaming replay is bit-identical to resident
+               replay under a hard address-space cap.
+               options: --mode auto|resident|streaming --gpu G
   help         this text
 ";

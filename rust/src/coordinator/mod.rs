@@ -28,7 +28,7 @@ pub mod runner;
 pub mod shard;
 
 pub use profile_run::{CaseRun, Context};
-pub use record::{CaseTrace, StoredTrace, TraceStore};
+pub use record::{CaseTrace, ReplayMode, StoredTrace, TraceStore};
 pub use report::Report;
 pub use runner::{run_experiments, run_experiments_in, EXPERIMENT_IDS};
 pub use shard::ShardSpec;

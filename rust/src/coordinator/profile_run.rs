@@ -23,7 +23,8 @@ use crate::pic::kernels::{
 };
 use crate::pic::{CaseConfig, PicSim};
 use crate::profiler::ProfileSession;
-use crate::trace::archive::MappedCaseTrace;
+use crate::trace::archive::{MappedCaseTrace, StreamingCaseTrace};
+use crate::trace::recorded::split_half_groups;
 use crate::util::pool::{self, WorkerPool};
 
 use super::record::{CaseTrace, StoredTrace, TraceStore};
@@ -163,8 +164,65 @@ impl CaseRun {
         }
     }
 
-    /// Replay whichever tier the store resolved — live heap recording
-    /// or mapped archive.
+    /// Replay an archive **out-of-core** on `spec` — the bounded-
+    /// memory tier: dispatches decode on demand into pooled arenas
+    /// (decode-ahead on the worker pool overlapping replay, see
+    /// [`StreamingCaseTrace::replay`]) and are recycled once
+    /// profiled. Counters are bit-identical to every other path
+    /// (proven by `tests/trace_archive.rs` across presets, versions
+    /// and compression forms); V100's half-group derivation is
+    /// applied per dispatch since nothing stays resident to cache.
+    ///
+    /// Fallible, unlike the resident constructors: the streaming
+    /// tier defers column validation to decode time, so corruption
+    /// surfaces here as a clean per-dispatch error.
+    pub fn from_streamed(
+        spec: GpuSpec,
+        cfg: CaseConfig,
+        trace: &Arc<StreamingCaseTrace>,
+        engine_threads: usize,
+    ) -> anyhow::Result<CaseRun> {
+        let mut session = ProfileSession::sharded_with_threads(
+            spec.clone(),
+            engine_threads,
+        );
+        let base = trace.base_group_size();
+        if spec.group_size != base {
+            assert_eq!(
+                spec.group_size * 2,
+                base,
+                "archived at group size {base}, cannot replay at {}",
+                spec.group_size
+            );
+        }
+        trace.replay(|d| {
+            if spec.group_size == base {
+                session.profile_blocks_scaled(
+                    &d.kernel,
+                    &d.blocks[..],
+                    spec.isa_expansion,
+                );
+            } else {
+                let halved =
+                    split_half_groups(&d.blocks[..], spec.group_size);
+                session.profile_blocks_scaled(
+                    &d.kernel,
+                    &halved[..],
+                    spec.isa_expansion,
+                );
+            }
+        })?;
+        Ok(CaseRun {
+            spec,
+            cfg,
+            final_field_energy: trace.final_field_energy(),
+            final_kinetic_energy: trace.final_kinetic_energy(),
+            session,
+        })
+    }
+
+    /// Replay whichever tier the store resolved — live heap
+    /// recording, mapped archive, or streamed archive.
     pub fn from_stored(
         spec: GpuSpec,
         stored: &StoredTrace,
@@ -180,6 +238,21 @@ impl CaseRun {
                 trace,
                 engine_threads,
             ),
+            // the streaming tier defers column validation to decode
+            // time; by now the store has handed out the trace, so a
+            // corrupt dispatch can no longer fall back to a live
+            // recording — fail loudly with the decode error
+            StoredTrace::Streamed { cfg, trace } => {
+                CaseRun::from_streamed(
+                    spec,
+                    cfg.clone(),
+                    trace,
+                    engine_threads,
+                )
+                .unwrap_or_else(|e| {
+                    panic!("streaming replay failed: {e:#}")
+                })
+            }
         }
     }
 }

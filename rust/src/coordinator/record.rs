@@ -44,7 +44,8 @@ use crate::pic::kernels::{
 };
 use crate::pic::{CaseConfig, PicSim};
 use crate::trace::archive::{
-    self, CaseMeta, Compress, MappedCaseTrace,
+    self, ArchiveInfo, CaseMeta, Compress, MappedCaseTrace,
+    StreamingCaseTrace,
 };
 use crate::util::pool::lock_recover;
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
@@ -205,16 +206,52 @@ impl CaseTrace {
     }
 }
 
+/// How the store replays archive hits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplayMode {
+    /// Resident mmap replay (decode once, replay many) for archives
+    /// whose decoded image fits [`TraceStore::STREAM_THRESHOLD`];
+    /// out-of-core streaming above it — traces ≫ RAM replay with
+    /// bounded decode buffers without anyone asking.
+    #[default]
+    Auto,
+    /// Always [`StoredTrace::Mapped`] (the pre-streaming behaviour).
+    Resident,
+    /// Always [`StoredTrace::Streamed`]: dispatch-by-dispatch decode
+    /// with pooled buffers, however small the archive.
+    Streaming,
+}
+
+impl std::str::FromStr for ReplayMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<ReplayMode> {
+        match s {
+            "auto" => Ok(ReplayMode::Auto),
+            "resident" => Ok(ReplayMode::Resident),
+            "streaming" => Ok(ReplayMode::Streaming),
+            _ => anyhow::bail!(
+                "unknown replay mode '{s}' \
+                 (expected auto|resident|streaming)"
+            ),
+        }
+    }
+}
+
 /// A case trace held by the store: recorded live in this process
-/// (heap blocks) or memory-mapped from the persistent archive. Both
-/// replay zero-copy and bit-identically through
-/// [`super::CaseRun::from_stored`].
+/// (heap blocks), memory-mapped from the persistent archive, or
+/// opened for out-of-core streaming replay. All replay bit-identically
+/// through [`super::CaseRun::from_stored`].
 #[derive(Clone)]
 pub enum StoredTrace {
     Live(Arc<CaseTrace>),
     Mapped {
         cfg: CaseConfig,
         trace: Arc<MappedCaseTrace>,
+    },
+    Streamed {
+        cfg: CaseConfig,
+        trace: Arc<StreamingCaseTrace>,
     },
 }
 
@@ -223,6 +260,7 @@ impl StoredTrace {
         match self {
             StoredTrace::Live(t) => &t.cfg,
             StoredTrace::Mapped { cfg, .. } => cfg,
+            StoredTrace::Streamed { cfg, .. } => cfg,
         }
     }
 
@@ -232,12 +270,25 @@ impl StoredTrace {
             StoredTrace::Mapped { trace, .. } => {
                 trace.dispatch_count()
             }
+            StoredTrace::Streamed { trace, .. } => {
+                trace.dispatch_count()
+            }
         }
     }
 
     /// True when backed by the memory-mapped disk tier.
     pub fn is_mapped(&self) -> bool {
         matches!(self, StoredTrace::Mapped { .. })
+    }
+
+    /// True when backed by the disk archive in either form (mapped
+    /// resident or opened for streaming) — the "no live recording
+    /// needed" predicate.
+    pub fn is_archived(&self) -> bool {
+        matches!(
+            self,
+            StoredTrace::Mapped { .. } | StoredTrace::Streamed { .. }
+        )
     }
 }
 
@@ -256,6 +307,8 @@ pub struct TraceStore {
     /// Per-section compression policy for spills (hits replay
     /// whatever form the archive already holds).
     compress: Compress,
+    /// How archive hits replay (see [`ReplayMode`]).
+    replay: ReplayMode,
     entries: Mutex<HashMap<String, Arc<Mutex<Option<StoredTrace>>>>>,
     recordings: AtomicUsize,
     archive_hits: AtomicUsize,
@@ -263,6 +316,13 @@ pub struct TraceStore {
 }
 
 impl TraceStore {
+    /// [`ReplayMode::Auto`]'s tier boundary: archives whose decoded
+    /// (v1-image) column bytes exceed this stream dispatch-by-dispatch
+    /// instead of decoding resident at open. Generous — below it the
+    /// decode-once/replay-many resident tier wins; above it bounded
+    /// memory matters more than re-decoding per replay.
+    pub const STREAM_THRESHOLD: u64 = 1 << 30;
+
     /// Memory-only store (no disk tier).
     pub fn new() -> TraceStore {
         TraceStore::default()
@@ -287,6 +347,21 @@ impl TraceStore {
         }
     }
 
+    /// [`TraceStore::with_dir_compress`] with an explicit replay mode
+    /// for archive hits.
+    pub fn with_dir_replay(
+        dir: Option<PathBuf>,
+        compress: Compress,
+        replay: ReplayMode,
+    ) -> TraceStore {
+        TraceStore {
+            dir,
+            compress,
+            replay,
+            ..TraceStore::default()
+        }
+    }
+
     /// Get the trace for `cfg`: archive hit, or record (exactly once)
     /// and spill.
     pub fn get_or_record(&self, cfg: &CaseConfig) -> StoredTrace {
@@ -306,35 +381,76 @@ impl TraceStore {
         stored
     }
 
+    /// Which tier an archive hit should replay through, per the
+    /// store's [`ReplayMode`]. The auto probe is O(index)
+    /// ([`ArchiveInfo::scan`] — a few KB however large the file).
+    fn wants_streaming(&self, path: &Path) -> anyhow::Result<bool> {
+        Ok(match self.replay {
+            ReplayMode::Resident => false,
+            ReplayMode::Streaming => true,
+            ReplayMode::Auto => {
+                ArchiveInfo::scan(path)?.raw_column_bytes()
+                    > Self::STREAM_THRESHOLD
+            }
+        })
+    }
+
+    /// Open `path` on the chosen tier and verify it really is `cfg`'s
+    /// recording. `Ok(None)` = readable but a config mismatch (stale
+    /// or foreign file — the caller re-records).
+    ///
+    /// Note the tier difference in *when* corruption surfaces: the
+    /// resident tier validates every column here, while the streaming
+    /// tier only validates the index — flipped column bytes in a
+    /// streamed archive are caught (with the same error text) at
+    /// replay, where the store can no longer fall back to a live
+    /// recording.
+    fn open_archive(
+        &self,
+        path: &Path,
+        cfg: &CaseConfig,
+    ) -> anyhow::Result<Option<StoredTrace>> {
+        // the key hashes the manifest, so a parse or config mismatch
+        // means a corrupt/foreign file
+        if self.wants_streaming(path)? {
+            let t = StreamingCaseTrace::open(path)?;
+            Ok(match CaseConfig::from_manifest_line(t.manifest()) {
+                Some(c) if c == *cfg => Some(StoredTrace::Streamed {
+                    cfg: c,
+                    trace: Arc::new(t),
+                }),
+                _ => None,
+            })
+        } else {
+            let t = MappedCaseTrace::open(path)?;
+            Ok(match CaseConfig::from_manifest_line(t.manifest()) {
+                Some(c) if c == *cfg => Some(StoredTrace::Mapped {
+                    cfg: c,
+                    trace: Arc::new(t),
+                }),
+                _ => None,
+            })
+        }
+    }
+
     /// Archive lookup, then live recording + spill. Caller holds the
     /// per-case entry lock.
     fn resolve(&self, cfg: &CaseConfig) -> StoredTrace {
         if let Some(dir) = &self.dir {
             let path = CaseTrace::archive_path(dir, cfg);
             if path.exists() {
-                match MappedCaseTrace::open(&path) {
-                    Ok(mapped) => {
-                        // the key hashes the manifest, so a parse or
-                        // config mismatch means a corrupt/foreign file
-                        match CaseConfig::from_manifest_line(
-                            mapped.manifest(),
-                        ) {
-                            Some(c) if c == *cfg => {
-                                self.archive_hits
-                                    .fetch_add(1, Ordering::Relaxed);
-                                return StoredTrace::Mapped {
-                                    cfg: c,
-                                    trace: Arc::new(mapped),
-                                };
-                            }
-                            _ => eprintln!(
-                                "warning: {} does not match case \
-                                 '{}'; re-recording",
-                                path.display(),
-                                cfg.name
-                            ),
-                        }
+                match self.open_archive(&path, cfg) {
+                    Ok(Some(stored)) => {
+                        self.archive_hits
+                            .fetch_add(1, Ordering::Relaxed);
+                        return stored;
                     }
+                    Ok(None) => eprintln!(
+                        "warning: {} does not match case '{}'; \
+                         re-recording",
+                        path.display(),
+                        cfg.name
+                    ),
                     Err(e) => eprintln!(
                         "warning: ignoring unreadable trace \
                          archive: {e:#}; re-recording"
@@ -456,6 +572,24 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("round-trip"), "{err}");
+    }
+
+    #[test]
+    fn replay_mode_parses() {
+        assert_eq!(
+            "auto".parse::<ReplayMode>().unwrap(),
+            ReplayMode::Auto
+        );
+        assert_eq!(
+            "resident".parse::<ReplayMode>().unwrap(),
+            ReplayMode::Resident
+        );
+        assert_eq!(
+            "streaming".parse::<ReplayMode>().unwrap(),
+            ReplayMode::Streaming
+        );
+        let err = "mmap".parse::<ReplayMode>().unwrap_err();
+        assert!(err.to_string().contains("unknown replay mode"));
     }
 
     #[test]

@@ -48,6 +48,13 @@
 //! slice still observes its transactions in batch order — pipelining
 //! changes *when* numbers are computed, never *which* numbers.
 //!
+//! When the trace source is the out-of-core streaming tier
+//! ([`crate::trace::archive::StreamingCaseTrace`]), a decode-ahead job
+//! on the same pool mirrors this double buffer one stage upstream:
+//! dispatch N+1's compressed sections decode into a pooled arena while
+//! dispatch N's batches flow through the phases below, so decompression
+//! overlaps L1 replay exactly like the L2 phase overlaps it downstream.
+//!
 //! Determinism does not depend on the shard count, the worker pool
 //! size, or thread scheduling: partitioning only decides *who* computes
 //! a number, never *which* number is computed.

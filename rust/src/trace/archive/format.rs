@@ -78,6 +78,13 @@ pub const COLUMN_NAMES: [&str; COLUMNS] = [
     "addrs",
 ];
 
+/// Bit mask with one bit set per wire column — a
+/// [`super::reader::MappedBlock`] whose arena mask equals this
+/// resolves **every** column from its decode arena and never touches
+/// the mapped file, which is what the streaming tier's fully
+/// arena-resident blocks rely on.
+pub const ALL_COLUMNS_MASK: u16 = (1 << COLUMNS) - 1;
+
 /// Section alignment: column offsets are multiples of this, which
 /// (with a page-aligned mapping) makes `&[u64]` views sound.
 pub const ALIGN: usize = 8;

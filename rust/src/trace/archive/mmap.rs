@@ -153,6 +153,27 @@ impl OwnedBytes {
             )
         }
     }
+
+    /// Reclaim the backing `u64` storage (capacity and all) — the
+    /// streaming reader's bounded decode-buffer pool recycles arenas
+    /// through this instead of reallocating per dispatch.
+    pub(crate) fn into_words(self) -> Vec<u64> {
+        self.words
+    }
+
+    /// An empty buffer over recycled storage: keeps the words'
+    /// capacity, discards their contents.
+    pub(crate) fn from_recycled(mut words: Vec<u64>) -> OwnedBytes {
+        words.clear();
+        OwnedBytes { words, len: 0 }
+    }
+
+    /// Bytes of heap actually reserved (≥ `bytes().len()`); the
+    /// streaming reader's peak-memory accounting charges this, not
+    /// the logical length, so pool growth is what gets measured.
+    pub(crate) fn capacity_bytes(&self) -> usize {
+        self.words.capacity() * 8
+    }
 }
 
 /// Backing bytes of an opened archive: a zero-copy file mapping where
@@ -283,6 +304,22 @@ mod tests {
         assert_eq!(&bytes[3..8], &[0; 5], "gap is zero");
         assert_eq!(&bytes[8..17], &[4; 9]);
         assert_eq!(bytes.as_ptr() as usize % 8, 0);
+    }
+
+    #[test]
+    fn recycled_storage_keeps_capacity_and_stays_aligned() {
+        let mut o = OwnedBytes::with_capacity(64);
+        o.push_aligned(&[9u8; 40]);
+        let cap = o.capacity_bytes();
+        assert!(cap >= 40);
+        let words = o.into_words();
+        let mut o2 = OwnedBytes::from_recycled(words);
+        assert_eq!(o2.bytes().len(), 0, "recycled buffer starts empty");
+        assert!(o2.capacity_bytes() >= cap, "capacity survives");
+        let off = o2.push_aligned(&[1, 2, 3, 4]);
+        assert_eq!(off, 0);
+        assert_eq!(o2.bytes(), &[1, 2, 3, 4]);
+        assert_eq!(o2.bytes().as_ptr() as usize % 8, 0);
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //! arena, and replay is bit-identical either way (v1 files remain
 //! readable).
 //!
+//! [`StreamingCaseTrace`] is the **out-of-core** tier on top of the
+//! same format: open reads only the index, each dispatch's sections
+//! are decoded on demand into recycled per-dispatch arenas
+//! (decode-ahead on the worker pool overlapping replay), and peak
+//! memory stays bounded however large the archive — with replay
+//! still bit-identical to the mapped tier.
+//!
 //! Files are content-addressed: the name embeds
 //! [`format::case_key`], a hash of the case config manifest, the
 //! recording group size, the simulation seed and the format version —
@@ -48,7 +55,7 @@ pub use format::{
 pub use gc::{prune_dir, sweep_stale_temps, PruneReport};
 pub use reader::{
     ArchiveInfo, ColumnStats, MappedBlock, MappedCaseTrace,
-    MappedDispatch,
+    MappedDispatch, StreamedDispatch, StreamingCaseTrace,
 };
 pub use writer::{
     write_case_archive, write_case_archive_with, CaseMeta, Compress,

@@ -23,9 +23,22 @@
 //! [`ArchiveInfo::scan`] is the cheap sibling used by `rocline
 //! trace-info`: it reads only the header, meta and index (a few KB)
 //! and never touches the column data.
+//!
+//! [`StreamingCaseTrace`] is the **out-of-core** tier: its `open` is
+//! as cheap as the scan (header + meta + index only, via `pread` — no
+//! mapping, so it works under an address-space cap smaller than the
+//! file), and each dispatch's sections are read, checksum-verified,
+//! decoded and semantically validated *on demand* into a pooled
+//! per-dispatch arena that is recycled after replay. Every check
+//! `MappedCaseTrace` performs at open runs here per dispatch instead,
+//! with the same error vocabulary — corruption simply surfaces at
+//! decode time rather than at open. Peak memory is a couple of
+//! dispatch arenas (the replay driver double-buffers decode against
+//! replay), not the decoded file.
 
 use std::fs::File;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::codec::{self, Encoding};
@@ -34,11 +47,13 @@ use super::format::{
     COLUMNS, COLUMN_WIDTHS, ENDIAN_TAG, ENDIAN_TAG_SWAPPED, EXTENSION,
     FORMAT_VERSION, HEADER_LEN, MAGIC, MIN_FORMAT_VERSION,
 };
+use super::format::ALL_COLUMNS_MASK;
 use super::mmap::{ArchiveBuf, OwnedBytes};
 use crate::arch::InstClass;
 use crate::trace::block::{BlockData, Tag};
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
 use crate::trace::{MemKind, MAX_LANES};
+use crate::util::pool::{lock_recover, Prefetch};
 
 /// Parsed, checksum-verified fixed header.
 struct Header {
@@ -717,7 +732,7 @@ fn load_block(
     // (the arena is not mutated past this point, so one shared
     // reborrow serves every resolved column)
     let arena_bytes = arena.bytes();
-    let resolve = |c: usize| {
+    validate_block_semantics(e, |c: usize| {
         let base = if arena_mask & (1 << c) != 0 {
             arena_bytes
         } else {
@@ -725,8 +740,28 @@ fn load_block(
         };
         &base[col_off[c] as usize..]
             [..raw_len_bytes(e, c) as usize]
-    };
+    })?;
 
+    Ok(MappedBlock {
+        buf: Arc::clone(buf),
+        arena: Arc::new(OwnedBytes::default()),
+        n_records: e.n_records,
+        n_inst: e.n_inst,
+        n_acc: e.n_acc,
+        n_addr: e.n_addr,
+        col_off,
+        arena_mask,
+    })
+}
+
+/// The structural invariants replay relies on, checked over the
+/// **decoded** (v1-image) columns — shared by the mapped tier (at
+/// open) and the streaming tier (per dispatch). `resolve(c)` returns
+/// column `c`'s decoded image, exactly `raw_len_bytes(e, c)` bytes.
+fn validate_block_semantics<'a>(
+    e: &RawBlockIndex,
+    resolve: impl Fn(usize) -> &'a [u8],
+) -> anyhow::Result<()> {
     // enum codes and tape/stream agreement
     let tags = resolve(0);
     let (mut inst, mut acc) = (0u32, 0u32);
@@ -783,17 +818,476 @@ fn load_block(
             "corrupt archive: access {i} has zero bytes-per-lane"
         );
     }
+    Ok(())
+}
 
-    Ok(MappedBlock {
-        buf: Arc::clone(buf),
-        arena: Arc::new(OwnedBytes::default()),
-        n_records: e.n_records,
-        n_inst: e.n_inst,
-        n_acc: e.n_acc,
-        n_addr: e.n_addr,
-        col_off,
-        arena_mask,
-    })
+/// Positioned exact read — `pread(2)` on unix, so concurrent decode
+/// jobs never race over a shared file cursor and no address-space is
+/// spent mapping the file.
+fn read_at_exact(
+    file: &File,
+    buf: &mut [u8],
+    off: u64,
+) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::os::unix::fs::FileExt::read_exact_at(file, buf, off)
+    }
+    #[cfg(not(unix))]
+    {
+        // seek + read through the shared handle: fine here because
+        // the replay driver keeps at most one decode job in flight
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = file;
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(buf)
+    }
+}
+
+/// One dispatch decoded out-of-core. Its blocks' columns all live in
+/// one pooled arena owned by this handle; hand it back through
+/// [`StreamingCaseTrace::recycle`] once replayed so the storage is
+/// reused for a later dispatch (dropping it instead just frees the
+/// memory — correct, but defeats the pool).
+pub struct StreamedDispatch {
+    pub kernel: String,
+    pub blocks: Vec<MappedBlock>,
+    arena: Arc<OwnedBytes>,
+    arena_capacity: u64,
+}
+
+/// A case archive opened for **out-of-core streaming replay** — the
+/// bounded-memory sibling of [`MappedCaseTrace`] (see the module
+/// docs for the tier split). `open` costs one index read; column
+/// data is decoded per dispatch by [`Self::decode_dispatch`] /
+/// [`Self::replay`] and recycled afterwards. `Send + Sync`: decode
+/// jobs run on the shared worker pool.
+pub struct StreamingCaseTrace {
+    path: PathBuf,
+    file: File,
+    manifest: String,
+    version: u32,
+    base_group_size: u32,
+    case_key: u64,
+    final_field_energy: f64,
+    final_kinetic_energy: f64,
+    bytes_on_disk: u64,
+    /// End of the column-data region (= index offset).
+    data_end: u64,
+    index: Vec<(String, Vec<RawBlockIndex>)>,
+    /// Sections stored under a non-raw encoding, whole archive.
+    encoded_sections: u64,
+    /// Cumulative decode budget per dispatch (decompression-bomb
+    /// guard — same formula as the mapped tier's whole-file budget,
+    /// so anything the mapped tier accepts, this tier accepts).
+    arena_budget: u64,
+    /// Shared never-dereferenced [`ArchiveBuf`] backing streamed
+    /// blocks: with every column in the arena, `MappedBlock` never
+    /// resolves a file byte through it.
+    empty_buf: Arc<ArchiveBuf>,
+    /// Recycled arena storage (8-aligned words), bounded by the
+    /// replay driver's decode-ahead depth.
+    word_pool: Mutex<Vec<Vec<u64>>>,
+    /// Recycled section read/decode scratch buffers.
+    scratch_pool: Mutex<Vec<Vec<u8>>>,
+    /// Decode-buffer bytes currently live (dispatch arenas in
+    /// flight) — transient scratch is counted at its peak inside
+    /// `decode_dispatch` and released when pooled.
+    cur_bytes: AtomicU64,
+    /// High-water mark of `cur_bytes` — what `mem/replay_peak_rss`
+    /// reports.
+    peak_bytes: AtomicU64,
+}
+
+impl StreamingCaseTrace {
+    /// Open `path` for streaming: reads and validates header, meta
+    /// and index only (a few KB, like [`ArchiveInfo::scan`]); column
+    /// checksums and semantic validation run per dispatch at decode
+    /// time.
+    pub fn open(path: &Path) -> anyhow::Result<StreamingCaseTrace> {
+        Self::open_inner(path).map_err(|e| {
+            anyhow::anyhow!("trace archive {}: {e}", path.display())
+        })
+    }
+
+    fn open_inner(path: &Path) -> anyhow::Result<StreamingCaseTrace> {
+        let file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let mut head = vec![0u8; HEADER_LEN];
+        read_at_exact(&file, &mut head, 0).map_err(|_| {
+            anyhow::anyhow!(
+                "corrupt archive: file shorter than the \
+                 {HEADER_LEN}-byte header ({file_len} bytes)"
+            )
+        })?;
+        let h = parse_header(&head)?;
+        let meta_end = (HEADER_LEN as u64).checked_add(h.meta_len);
+        anyhow::ensure!(
+            meta_end.is_some_and(|end| {
+                end <= file_len && align_up(end) <= h.index_off
+            }) && h
+                .index_off
+                .checked_add(h.index_len)
+                .is_some_and(|end| end == file_len),
+            "corrupt archive: section table out of bounds \
+             (meta {} bytes, index {}+{}, file {} bytes)",
+            h.meta_len,
+            h.index_off,
+            h.index_len,
+            file_len
+        );
+        let mut meta = vec![0u8; h.meta_len as usize];
+        read_at_exact(&file, &mut meta, HEADER_LEN as u64)?;
+        let (manifest, final_field_energy, final_kinetic_energy) =
+            parse_meta(&meta)?;
+        let mut index_bytes = vec![0u8; h.index_len as usize];
+        read_at_exact(&file, &mut index_bytes, h.index_off)?;
+        let index =
+            parse_index(&index_bytes, h.dispatch_count, h.version)?;
+        let encoded_sections = index
+            .iter()
+            .flat_map(|(_, bs)| bs.iter())
+            .map(|e| {
+                e.col_enc
+                    .iter()
+                    .filter(|&&enc| enc != Encoding::Raw)
+                    .count() as u64
+            })
+            .sum();
+        Ok(StreamingCaseTrace {
+            path: path.to_path_buf(),
+            file,
+            manifest,
+            version: h.version,
+            base_group_size: h.base_group_size,
+            case_key: h.case_key,
+            final_field_energy,
+            final_kinetic_energy,
+            bytes_on_disk: file_len,
+            data_end: h.index_off,
+            index,
+            encoded_sections,
+            arena_budget: (256u64 << 20)
+                .saturating_add(file_len.saturating_mul(64)),
+            empty_buf: Arc::new(ArchiveBuf::Owned(
+                OwnedBytes::default(),
+            )),
+            word_pool: Mutex::new(Vec::new()),
+            scratch_pool: Mutex::new(Vec::new()),
+            cur_bytes: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &str {
+        &self.manifest
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn base_group_size(&self) -> u32 {
+        self.base_group_size
+    }
+
+    pub fn case_key(&self) -> u64 {
+        self.case_key
+    }
+
+    pub fn final_field_energy(&self) -> f64 {
+        self.final_field_energy
+    }
+
+    pub fn final_kinetic_energy(&self) -> f64 {
+        self.final_kinetic_energy
+    }
+
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.bytes_on_disk
+    }
+
+    pub fn dispatch_count(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Kernel name of dispatch `i` (no decode).
+    pub fn kernel(&self, i: usize) -> &str {
+        &self.index[i].0
+    }
+
+    /// How many sections (whole archive) are stored under a non-raw
+    /// encoding. 0 ⇔ replaying resident via mmap is pure zero-copy —
+    /// the store's auto policy uses this to pick the tier.
+    pub fn encoded_sections(&self) -> u64 {
+        self.encoded_sections
+    }
+
+    /// Decode-buffer bytes currently live (see [`Self::recycle`]).
+    pub fn current_decode_bytes(&self) -> u64 {
+        self.cur_bytes.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of decode-buffer bytes over the trace's
+    /// lifetime — the streaming tier's bounded-memory claim, and the
+    /// `mem/replay_peak_rss` bench metric.
+    pub fn peak_decode_bytes(&self) -> u64 {
+        self.peak_bytes.load(Ordering::Relaxed)
+    }
+
+    fn track(&self, bytes: u64) {
+        let cur =
+            self.cur_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_bytes.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    fn untrack(&self, bytes: u64) {
+        self.cur_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Read, verify and decode dispatch `i` into a pooled arena. Every
+    /// stored-form check (alignment, bounds, checksum), decode guard
+    /// (section cap, decode budget) and semantic check the mapped tier
+    /// runs at open runs here, with identical error text; I/O errors
+    /// (e.g. a file truncated after open) surface as clean column-
+    /// level read errors.
+    pub fn decode_dispatch(
+        &self,
+        i: usize,
+    ) -> anyhow::Result<StreamedDispatch> {
+        self.decode_dispatch_inner(i).map_err(|e| {
+            anyhow::anyhow!(
+                "trace archive {}: {e}",
+                self.path.display()
+            )
+        })
+    }
+
+    fn decode_dispatch_inner(
+        &self,
+        i: usize,
+    ) -> anyhow::Result<StreamedDispatch> {
+        let (kernel, entries) = &self.index[i];
+        let mut scratch = lock_recover(&self.scratch_pool)
+            .pop()
+            .unwrap_or_default();
+        let mut decode_buf = lock_recover(&self.scratch_pool)
+            .pop()
+            .unwrap_or_default();
+        let mut arena = OwnedBytes::from_recycled(
+            lock_recover(&self.word_pool).pop().unwrap_or_default(),
+        );
+
+        let mut blocks = Vec::with_capacity(entries.len());
+        let mut failure = None;
+        for e in entries {
+            match self.decode_block(
+                e,
+                &mut scratch,
+                &mut decode_buf,
+                &mut arena,
+            ) {
+                Ok(b) => blocks.push(b),
+                Err(err) => {
+                    failure = Some(anyhow::anyhow!(
+                        "dispatch {kernel}: {err}"
+                    ));
+                    break;
+                }
+            }
+        }
+
+        // account the dispatch's footprint at its peak (arena +
+        // transient scratch), then release the scratch share as the
+        // buffers return to the pool; the arena share stays charged
+        // until `recycle`
+        let arena_capacity = arena.capacity_bytes() as u64;
+        let transient =
+            (scratch.capacity() + decode_buf.capacity()) as u64;
+        self.track(arena_capacity + transient);
+        self.untrack(transient);
+        {
+            let mut pool = lock_recover(&self.scratch_pool);
+            pool.push(scratch);
+            pool.push(decode_buf);
+        }
+        if let Some(err) = failure {
+            self.untrack(arena_capacity);
+            lock_recover(&self.word_pool).push(arena.into_words());
+            return Err(err);
+        }
+
+        let arena = Arc::new(arena);
+        for b in blocks.iter_mut() {
+            b.arena = Arc::clone(&arena);
+        }
+        Ok(StreamedDispatch {
+            kernel: kernel.clone(),
+            blocks,
+            arena,
+            arena_capacity,
+        })
+    }
+
+    /// The streaming analogue of [`load_block`]: same three stages
+    /// (stored-form checks, decode, semantic validation), but over
+    /// `pread` bytes and with **every** column — raw or compressed —
+    /// copied into the per-dispatch arena (nothing may borrow the
+    /// file: there is no mapping).
+    fn decode_block(
+        &self,
+        e: &RawBlockIndex,
+        scratch: &mut Vec<u8>,
+        decode_buf: &mut Vec<u8>,
+        arena: &mut OwnedBytes,
+    ) -> anyhow::Result<MappedBlock> {
+        const MAX_DECODED_SECTION: u64 = 256 << 20;
+        let data_end = self.data_end;
+        let mut col_off = [0u64; COLUMNS];
+        for c in 0..COLUMNS {
+            let off = e.col_off[c];
+            let len = e.col_len[c];
+            let padded = align_up(len);
+            anyhow::ensure!(
+                off % 8 == 0,
+                "corrupt archive: column {c} misaligned \
+                 (offset {off})"
+            );
+            let end = off.checked_add(padded);
+            anyhow::ensure!(
+                off >= HEADER_LEN as u64
+                    && end.is_some_and(|end| end <= data_end),
+                "corrupt archive: column {c} out of bounds \
+                 ({off}+{padded} vs data end {data_end})"
+            );
+            scratch.clear();
+            scratch.resize(padded as usize, 0);
+            read_at_exact(&self.file, scratch, off).map_err(
+                |err| {
+                    anyhow::anyhow!(
+                        "column {c}: read {padded} bytes at offset \
+                         {off}: {err}"
+                    )
+                },
+            )?;
+            anyhow::ensure!(
+                fnv1a(scratch) == e.col_sum[c],
+                "corrupt archive: column {c} checksum mismatch \
+                 (flipped bytes at offset {off}..{})",
+                off + padded
+            );
+            let stored = &scratch[..len as usize];
+            if e.col_enc[c] == Encoding::Raw {
+                // stored length == raw length (parse_index enforced
+                // it), so the padded read *is* the decoded image
+                col_off[c] = arena.push_aligned(stored) as u64;
+            } else {
+                anyhow::ensure!(
+                    raw_len_bytes(e, c) <= MAX_DECODED_SECTION,
+                    "corrupt archive: column {c} claims {} decoded \
+                     bytes (limit {MAX_DECODED_SECTION})",
+                    raw_len_bytes(e, c)
+                );
+                anyhow::ensure!(
+                    (arena.bytes().len() as u64)
+                        .saturating_add(raw_len_bytes(e, c))
+                        <= self.arena_budget,
+                    "corrupt archive: decoded sections exceed the \
+                     archive's decode budget ({} bytes) — \
+                     decompression bomb?",
+                    self.arena_budget
+                );
+                decode_buf.clear();
+                codec::decode(
+                    stored,
+                    e.col_enc[c],
+                    elem_count(e, c) as usize,
+                    COLUMN_WIDTHS[c],
+                    decode_buf,
+                )
+                .map_err(|err| {
+                    anyhow::anyhow!("column {c}: {err}")
+                })?;
+                debug_assert_eq!(
+                    decode_buf.len() as u64,
+                    raw_len_bytes(e, c),
+                    "codec::decode produces exactly the raw image"
+                );
+                col_off[c] = arena.push_aligned(decode_buf) as u64;
+            }
+        }
+
+        // semantic validation over the arena images (identical to
+        // the mapped tier's, via the shared helper)
+        let arena_bytes = arena.bytes();
+        validate_block_semantics(e, |c: usize| {
+            &arena_bytes[col_off[c] as usize..]
+                [..raw_len_bytes(e, c) as usize]
+        })?;
+
+        Ok(MappedBlock {
+            buf: Arc::clone(&self.empty_buf),
+            arena: Arc::new(OwnedBytes::default()), // patched by caller
+            n_records: e.n_records,
+            n_inst: e.n_inst,
+            n_acc: e.n_acc,
+            n_addr: e.n_addr,
+            col_off,
+            arena_mask: ALL_COLUMNS_MASK,
+        })
+    }
+
+    /// Return a replayed dispatch's arena storage to the pool. Safe
+    /// to skip (the memory is just freed instead of reused), but a
+    /// dispatch that is never recycled keeps its bytes counted in
+    /// [`Self::current_decode_bytes`].
+    pub fn recycle(&self, d: StreamedDispatch) {
+        let StreamedDispatch {
+            blocks,
+            arena,
+            arena_capacity,
+            ..
+        } = d;
+        drop(blocks);
+        self.untrack(arena_capacity);
+        if let Ok(owned) = Arc::try_unwrap(arena) {
+            lock_recover(&self.word_pool).push(owned.into_words());
+        }
+    }
+
+    /// Stream every dispatch through `consume` with one-dispatch
+    /// **decode-ahead**: while the caller replays dispatch `N`,
+    /// dispatch `N+1` decodes on the shared [`WorkerPool`] — the
+    /// decompression/replay overlap that mirrors the engine's L1/L2
+    /// double buffer. At most two dispatch arenas are ever live.
+    ///
+    /// [`WorkerPool`]: crate::util::pool::WorkerPool
+    pub fn replay(
+        self: &Arc<Self>,
+        mut consume: impl FnMut(&StreamedDispatch),
+    ) -> anyhow::Result<()> {
+        let n = self.dispatch_count();
+        if n == 0 {
+            return Ok(());
+        }
+        let spawn = |i: usize| {
+            let t = Arc::clone(self);
+            Prefetch::spawn(move || t.decode_dispatch(i))
+        };
+        let mut pending = Some(spawn(0));
+        for i in 0..n {
+            let d = pending
+                .take()
+                .expect("decode job scheduled each iteration")
+                .join()?;
+            if i + 1 < n {
+                pending = Some(spawn(i + 1));
+            }
+            consume(&d);
+            self.recycle(d);
+        }
+        Ok(())
+    }
 }
 
 /// Per-column storage totals of one archive (raw vs stored bytes and

@@ -34,8 +34,13 @@
 //! mapped file (raw sections) or in the archive's pooled decode arena
 //! (delta-varint/RLE-compressed sections, decoded once at open); both
 //! resolve through the same hoisted [`Columns`] view, exactly once
-//! per block, so the hot loops cannot tell the three storage forms
-//! apart.
+//! per block, so the hot loops cannot tell the storage forms apart.
+//! The out-of-core streaming tier
+//! ([`crate::trace::archive::StreamingCaseTrace`]) adds a fourth
+//! backing: blocks whose columns live in a pooled per-dispatch decode
+//! arena that exists only while that dispatch replays — same nine
+//! slices, same `Columns` view, so the engines stay oblivious to
+//! residency as well.
 
 use super::event::{GroupCtx, LdsAccess, MemAccess, MemKind};
 use super::sink::EventSink;

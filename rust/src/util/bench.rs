@@ -353,16 +353,26 @@ pub struct GateOutcome {
 
 /// Whether a bench entry is gated against the baseline:
 /// `speedup/*` ratios (engine vs reference) and `size/*` metrics
-/// (archive compression ratios — for both families, bigger is
-/// better, so one floor rule fits).
+/// (archive compression ratios) — bigger is better, one floor rule —
+/// plus `mem/*` metrics (peak replay memory in bytes), where
+/// **lower** is better and the gate applies a ceiling instead.
 pub fn is_gated_metric(name: &str) -> bool {
-    name.starts_with("speedup/") || name.starts_with("size/")
+    name.starts_with("speedup/")
+        || name.starts_with("size/")
+        || name.starts_with("mem/")
+}
+
+/// Whether a gated metric regresses *upward* (`mem/*`: bytes held at
+/// replay — a growing value is the failure).
+fn lower_is_better(name: &str) -> bool {
+    name.starts_with("mem/")
 }
 
 /// The bench regression gate: every gated entry in `baseline` (see
 /// [`is_gated_metric`]) must appear in `current` at no less than
-/// `baseline * (1 - tolerance)`. Entries only in `current` pass with
-/// a note (new benches enter the baseline on the next
+/// `baseline * (1 - tolerance)` — or, for `mem/*` entries, at no
+/// more than `baseline * (1 + tolerance)`. Entries only in `current`
+/// pass with a note (new benches enter the baseline on the next
 /// `--update-baseline`).
 pub fn gate_speedups(
     current: &[(String, f64)],
@@ -383,6 +393,24 @@ pub fn gate_speedups(
                 "{name}: missing from current run \
                  (baseline {base:.2}x; bench renamed or lost?)"
             )),
+            Some((_, cur)) if lower_is_better(name) => {
+                out.checked += 1;
+                let ceiling = base * (1.0 + tolerance);
+                let failed = *cur > ceiling;
+                let verdict = if failed { "FAIL" } else { "ok" };
+                out.report.push(format!(
+                    "{verdict:>4}  {name:<44} {cur:>14.0} \
+                     (baseline {base:.0}, ceiling {ceiling:.0})"
+                ));
+                if failed {
+                    out.failures.push(format!(
+                        "{name}: {cur:.0} exceeded the \
+                         {ceiling:.0} ceiling (baseline {base:.0} \
+                         + {:.0}%)",
+                        tolerance * 100.0
+                    ));
+                }
+            }
             Some((_, cur)) => {
                 out.checked += 1;
                 let floor = base * (1.0 - tolerance);
@@ -565,6 +593,48 @@ mod tests {
         assert!(is_gated_metric("speedup/x"));
         assert!(is_gated_metric("size/x"));
         assert!(!is_gated_metric("trace/x"));
+    }
+
+    #[test]
+    fn gate_mem_metrics_use_a_ceiling_rule() {
+        // peak RSS regresses *upward*: 1 MB baseline with 20%
+        // tolerance ceilings at 1.2 MB
+        let baseline =
+            vec![("mem/replay_peak_rss".to_string(), 1_000_000.0)];
+        let ok =
+            vec![("mem/replay_peak_rss".to_string(), 1_100_000.0)];
+        let out = gate_speedups(&ok, &baseline, 0.2);
+        assert_eq!(out.checked, 1);
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        // shrinking far below baseline is never a failure
+        let small = vec![("mem/replay_peak_rss".to_string(), 10.0)];
+        let out = gate_speedups(&small, &baseline, 0.2);
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+
+        let bad =
+            vec![("mem/replay_peak_rss".to_string(), 1_300_000.0)];
+        let out = gate_speedups(&bad, &baseline, 0.2);
+        assert_eq!(out.failures.len(), 1);
+        assert!(
+            out.failures[0].contains("exceeded the"),
+            "{:?}",
+            out.failures
+        );
+        // missing from current is still a failure, and a mem metric
+        // new in current is still just a note
+        let out = gate_speedups(&[], &baseline, 0.2);
+        assert_eq!(out.failures.len(), 1);
+        let new = vec![
+            ("mem/replay_peak_rss".to_string(), 1_000_000.0),
+            ("mem/other".to_string(), 5.0),
+        ];
+        let out = gate_speedups(&new, &baseline, 0.2);
+        assert!(out.failures.is_empty());
+        assert!(out
+            .report
+            .iter()
+            .any(|l| l.contains("new") && l.contains("mem/other")));
+        assert!(is_gated_metric("mem/x"));
     }
 
     #[test]

@@ -326,6 +326,41 @@ impl<'pool, 'scope> PoolScope<'pool, 'scope> {
     }
 }
 
+/// One value computed ahead of time on the global pool — the
+/// pipelining primitive behind the streaming replay's decode-ahead
+/// stage (decode dispatch N+1 while dispatch N replays, mirroring the
+/// engine's L1/L2 double buffer).
+///
+/// [`Prefetch::spawn`] enqueues the job and returns immediately;
+/// [`Prefetch::join`] blocks (helping the pool meanwhile, per
+/// [`WorkerPool::wait`]) and takes the result. A panicking job
+/// re-raises its original payload at `join`.
+pub struct Prefetch<T> {
+    latch: Latch,
+    slot: Arc<Mutex<Option<T>>>,
+}
+
+impl<T: Send + 'static> Prefetch<T> {
+    pub fn spawn(f: impl FnOnce() -> T + Send + 'static) -> Prefetch<T> {
+        let latch = Latch::new();
+        let slot = Arc::new(Mutex::new(None));
+        let out = Arc::clone(&slot);
+        WorkerPool::global().submit(&latch, move || {
+            let v = f();
+            *lock_recover(&out) = Some(v);
+        });
+        Prefetch { latch, slot }
+    }
+
+    /// Wait out the job and take its value.
+    pub fn join(self) -> T {
+        WorkerPool::global().wait(&self.latch);
+        lock_recover(&self.slot)
+            .take()
+            .expect("prefetch job finished without storing a result")
+    }
+}
+
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
@@ -521,6 +556,35 @@ mod tests {
         let b = WorkerPool::global();
         assert!(std::ptr::eq(a, b));
         assert_eq!(a.worker_count(), default_threads());
+    }
+
+    #[test]
+    fn prefetch_returns_its_value() {
+        let p = Prefetch::spawn(|| 6u64 * 7);
+        assert_eq!(p.join(), 42);
+    }
+
+    #[test]
+    fn prefetch_pipeline_overlaps_and_stays_ordered() {
+        // the decode-ahead shape: spawn N+1 before consuming N; every
+        // value arrives, in order, regardless of scheduling
+        let mut pending = Prefetch::spawn(move || 0u64);
+        let mut seen = Vec::new();
+        for next in 1..16u64 {
+            let p = Prefetch::spawn(move || next);
+            seen.push(pending.join());
+            pending = p;
+        }
+        seen.push(pending.join());
+        assert_eq!(seen, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "decode job failed")]
+    fn prefetch_panics_propagate_at_join() {
+        let p: Prefetch<u64> =
+            Prefetch::spawn(|| panic!("decode job failed"));
+        let _ = p.join();
     }
 
     #[test]

@@ -6,12 +6,15 @@
 //! `anyhow` error — never a panic, never silently wrong counters.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use rocline::arch::presets;
-use rocline::coordinator::{CaseRun, CaseTrace, StoredTrace, TraceStore};
+use rocline::coordinator::{
+    CaseRun, CaseTrace, ReplayMode, StoredTrace, TraceStore,
+};
 use rocline::pic::CaseConfig;
 use rocline::trace::archive::{
-    fnv1a, ArchiveInfo, Compress, MappedCaseTrace,
+    fnv1a, ArchiveInfo, Compress, MappedCaseTrace, StreamingCaseTrace,
 };
 
 fn tiny_case(name: &str, steps: u32) -> CaseConfig {
@@ -454,6 +457,312 @@ fn trace_info_scan_matches_archive_contents() {
     assert_eq!(info.addr_words, words);
     assert!(info.records > 0 && info.addr_words > 0);
     assert_eq!(info.case_key, mapped.case_key());
+}
+
+// -------------------------------------------------------- streaming
+
+#[test]
+fn streaming_replay_is_bit_identical_across_formats_and_gpus() {
+    // the out-of-core tier's equivalence proof: for every on-disk
+    // form (legacy v1, v2 all-raw, v2 force-compressed) and every
+    // GPU preset (V100's half-group derivation included), streaming
+    // per-dispatch decode must produce counters bit-identical to the
+    // resident mapped tier — and release every decode buffer by the
+    // end of the replay
+    let cfg = tiny_case("tiny-stream", 2);
+    let trace = CaseTrace::record(&cfg);
+    for (tag, mode) in [
+        ("v1", Compress::V1),
+        ("v2-raw", Compress::None),
+        ("v2-force", Compress::Force),
+    ] {
+        let dir = TmpDir::new(&format!("stream-{tag}"));
+        let path = trace.spill_to_with(dir.path(), mode).unwrap();
+        let mapped = MappedCaseTrace::open(&path).unwrap();
+        let streaming =
+            Arc::new(StreamingCaseTrace::open(&path).unwrap());
+        assert_eq!(
+            streaming.dispatch_count(),
+            mapped.dispatch_count(),
+            "{tag}"
+        );
+        assert_eq!(streaming.version(), mapped.version(), "{tag}");
+        assert_eq!(streaming.case_key(), mapped.case_key(), "{tag}");
+        for spec in presets::all_gpus() {
+            let resident = CaseRun::from_mapped(
+                spec.clone(),
+                cfg.clone(),
+                &mapped,
+                2,
+            );
+            let streamed = CaseRun::from_streamed(
+                spec.clone(),
+                cfg.clone(),
+                &streaming,
+                2,
+            )
+            .unwrap();
+            assert_runs_identical(
+                &resident,
+                &streamed,
+                &format!("{tag} on {}", spec.name),
+            );
+        }
+        assert!(
+            streaming.peak_decode_bytes() > 0,
+            "{tag}: replay decoded through the instrumented pool"
+        );
+        assert_eq!(
+            streaming.current_decode_bytes(),
+            0,
+            "{tag}: every dispatch arena recycled after replay"
+        );
+    }
+}
+
+#[test]
+fn store_replay_mode_streaming_serves_the_streamed_tier() {
+    // ReplayMode::Streaming must resolve archive hits to
+    // StoredTrace::Streamed (an archive hit, no live recording) and
+    // from_stored must replay it identically to the in-memory tier;
+    // ReplayMode::Auto keeps small archives on the resident tier
+    let dir = TmpDir::new("stream-store");
+    let cfg = tiny_case("tiny-ss", 1);
+    let trace = CaseTrace::record(&cfg);
+    trace.spill_to(dir.path()).unwrap();
+
+    let store = TraceStore::with_dir_replay(
+        Some(dir.path().to_path_buf()),
+        Compress::Auto,
+        ReplayMode::Streaming,
+    );
+    let stored = store.get_or_record(&cfg);
+    assert!(matches!(&stored, StoredTrace::Streamed { .. }));
+    assert!(stored.is_archived());
+    assert!(!stored.is_mapped(), "streamed, not resident-mapped");
+    assert_eq!(stored.dispatch_count(), trace.dispatch_count());
+    assert_eq!(store.archive_hits(), 1);
+    assert_eq!(store.recordings(), 0, "an archive hit, not a record");
+    assert_eq!(store.spills(), 0);
+    for spec in [presets::mi100(), presets::v100()] {
+        let mem = CaseRun::from_recording(spec.clone(), &trace, 2);
+        let streamed = CaseRun::from_stored(spec.clone(), &stored, 2);
+        assert_runs_identical(
+            &mem,
+            &streamed,
+            &format!("streamed store on {}", spec.name),
+        );
+    }
+
+    // Auto on a tiny archive stays resident (decode-once/replay-many
+    // sweeps keep the zero-copy fast path)
+    let auto_store = TraceStore::with_dir_replay(
+        Some(dir.path().to_path_buf()),
+        Compress::Auto,
+        ReplayMode::Auto,
+    );
+    assert!(matches!(
+        auto_store.get_or_record(&cfg),
+        StoredTrace::Mapped { .. }
+    ));
+}
+
+#[test]
+fn streaming_decode_errors_after_open_are_clean() {
+    // the streaming tier defers column validation to decode time, so
+    // corruption that the mapped tier catches at open must surface as
+    // the same clean anyhow error from decode_dispatch/replay — never
+    // a panic, never silently wrong counters
+    let dir = TmpDir::new("stream-corrupt");
+    let cfg = tiny_case("tiny-sc", 1);
+    let path = CaseTrace::record(&cfg)
+        .spill_to_with(dir.path(), Compress::Force)
+        .unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let meta_len = u64::from_le_bytes(
+        good[32..40].try_into().unwrap(),
+    ) as usize;
+    let col0 = (64 + meta_len).div_ceil(8) * 8;
+
+    // a bit flip in the first column section: open succeeds (index
+    // only), the flip surfaces at decode as a checksum mismatch
+    let mut bytes = good.clone();
+    bytes[col0] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    let streaming = StreamingCaseTrace::open(&path).unwrap();
+    let err =
+        streaming.decode_dispatch(0).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(
+        MappedCaseTrace::open(&path).is_err(),
+        "the mapped tier refuses the same corruption at open"
+    );
+
+    // mid-stream truncation *after* open: the opened handle keeps
+    // reading the original inode path, which now ends inside the
+    // first column — a clean per-column read error, from both the
+    // one-shot decode and the pipelined replay driver
+    std::fs::write(&path, &good).unwrap();
+    let streaming =
+        Arc::new(StreamingCaseTrace::open(&path).unwrap());
+    std::fs::write(&path, &good[..col0 + 1]).unwrap();
+    let err =
+        streaming.decode_dispatch(0).unwrap_err().to_string();
+    assert!(
+        err.contains("column") && err.contains("read"),
+        "{err}"
+    );
+    let err = streaming
+        .replay(|_| panic!("no dispatch must be delivered"))
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("column") && err.contains("read"),
+        "{err}"
+    );
+    assert_eq!(
+        streaming.current_decode_bytes(),
+        0,
+        "failed decodes must not leak tracked bytes"
+    );
+}
+
+#[test]
+fn trace_info_scan_never_touches_column_bytes() {
+    // the O(index) contract of `rocline trace-info`: trash the ENTIRE
+    // column-data region on disk — checksums left stale — and the
+    // index-only scan must still succeed with an identical report,
+    // while the fully validating mapped open refuses the file
+    let dir = TmpDir::new("scan-index-only");
+    let path = spilled_archive(&dir, "tiny-oc");
+    let before = ArchiveInfo::scan(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let meta_len = u64::from_le_bytes(
+        bytes[32..40].try_into().unwrap(),
+    ) as usize;
+    let col0 = (64 + meta_len).div_ceil(8) * 8;
+    let index_off = u64::from_le_bytes(
+        bytes[40..48].try_into().unwrap(),
+    ) as usize;
+    assert!(col0 < index_off, "tiny case has column data");
+    for b in &mut bytes[col0..index_off] {
+        *b ^= 0xA5;
+    }
+    std::fs::write(&path, &bytes).unwrap();
+
+    assert!(
+        MappedCaseTrace::open(&path).is_err(),
+        "mapped open validates every section checksum"
+    );
+    let after = ArchiveInfo::scan(&path).unwrap();
+    assert_eq!(after.dispatches, before.dispatches);
+    assert_eq!(after.blocks, before.blocks);
+    assert_eq!(after.records, before.records);
+    assert_eq!(after.addr_words, before.addr_words);
+    assert_eq!(after.case_key, before.case_key);
+    assert_eq!(after.file_bytes, before.file_bytes);
+    assert_eq!(
+        after.raw_column_bytes(),
+        before.raw_column_bytes()
+    );
+    assert_eq!(
+        after.stored_column_bytes(),
+        before.stored_column_bytes()
+    );
+}
+
+#[test]
+fn synth_archives_stream_bit_identically_with_bounded_peak() {
+    // the scale fuzzer x streaming integration: every synth workload
+    // round-trips through a force-compressed archive, streams with
+    // counters identical to the resident tier, and holds a peak far
+    // below the archive's whole decoded image (the bounded-memory
+    // property the CI smoke proves at >RAM scale)
+    use rocline::profiler::ProfileSession;
+    use rocline::trace::archive::{
+        write_case_archive_with, CaseMeta,
+    };
+    use rocline::trace::synth::{synth_dispatches, SynthWorkload};
+
+    let spec = presets::mi100();
+    for workload in SynthWorkload::ALL {
+        let tag = workload.label();
+        let dir = TmpDir::new(&format!("synth-stream-{tag}"));
+        let recorded =
+            synth_dispatches(workload, 2048, 8, 64, 0xF00D);
+        let manifest = format!("synth case={tag} n=2048");
+        let name = format!("synth-{tag}");
+        let meta = CaseMeta {
+            name: &name,
+            manifest: &manifest,
+            base_group_size: 64,
+            seed: 0xF00D,
+            final_field_energy: 0.0,
+            final_kinetic_energy: 0.0,
+        };
+        let path = write_case_archive_with(
+            dir.path(),
+            &meta,
+            &recorded,
+            Compress::Force,
+        )
+        .unwrap();
+
+        let mapped = MappedCaseTrace::open(&path).unwrap();
+        let streaming =
+            Arc::new(StreamingCaseTrace::open(&path).unwrap());
+        let mut resident = ProfileSession::sharded_with_threads(
+            spec.clone(),
+            2,
+        );
+        for d in mapped.dispatches() {
+            resident.profile_blocks_scaled(
+                &d.kernel,
+                &d.blocks[..],
+                spec.isa_expansion,
+            );
+        }
+        let mut streamed = ProfileSession::sharded_with_threads(
+            spec.clone(),
+            2,
+        );
+        streaming
+            .replay(|d| {
+                streamed.profile_blocks_scaled(
+                    &d.kernel,
+                    &d.blocks[..],
+                    spec.isa_expansion,
+                );
+            })
+            .unwrap();
+        assert_eq!(
+            resident.dispatches.len(),
+            streamed.dispatches.len(),
+            "{tag}"
+        );
+        for (x, y) in resident
+            .dispatches
+            .iter()
+            .zip(streamed.dispatches.iter())
+        {
+            assert_eq!(x.kernel, y.kernel, "{tag}");
+            assert_eq!(x.stats, y.stats, "{tag} {}", x.kernel);
+            assert_eq!(x.traffic, y.traffic, "{tag} {}", x.kernel);
+            assert_eq!(
+                x.duration_s, y.duration_s,
+                "{tag} {}",
+                x.kernel
+            );
+        }
+        let peak = streaming.peak_decode_bytes();
+        assert!(peak > 0, "{tag}");
+        assert!(
+            peak < mapped.decoded_bytes(),
+            "{tag}: streaming peak {peak} must stay below the whole \
+             decoded image {} (8 dispatches, ~2 in flight)",
+            mapped.decoded_bytes()
+        );
+    }
 }
 
 // ------------------------------------------------------- corruption
