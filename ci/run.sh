@@ -46,6 +46,11 @@
 #     with the dated ci/BENCH_trajectory.json entry it appends.
 #     BENCH_hotpath.json itself is uploaded as a per-run artifact by
 #     the workflow.
+#   * serve smoke — `rocline serve` is started over the smoke archive
+#     (ROCLINE_REQUIRE_ARCHIVE_HIT=1) and must answer per-GPU queries
+#     byte-identically to the batch CLI's --format=json output, answer
+#     a repeated query from its result cache (asserted via --status
+#     counters), and exit cleanly on the in-band shutdown endpoint.
 #   * streaming smoke — `rocline synth-trace` builds a synthetic
 #     archive whose decoded column image dwarfs a hard `ulimit -v`
 #     address-space cap; `rocline synth-replay --mode=streaming` must
@@ -156,6 +161,68 @@ trap 'rm -rf "$SMOKE_ARCH"' EXIT
     exit 1
 }
 ./target/release/rocline trace-info "$SMOKE_ARCH" --prune lwfa --steps 1
+
+# roofline-as-a-service smoke: start the daemon over the smoke archive
+# (ROCLINE_REQUIRE_ARCHIVE_HIT=1 — every query must be answered from
+# the mmap'd archive, zero live recordings), prove the per-GPU daemon
+# answers are byte-identical to the batch CLI's --format=json output,
+# that a repeated query is a cache hit (service counters over
+# --status), and that in-band shutdown exits the daemon cleanly.
+echo "== serve smoke: daemon vs batch byte-identity =="
+SERVE_LOG="$SMOKE_ARCH/serve.log"
+ROCLINE_REQUIRE_ARCHIVE_HIT=1 ./target/release/rocline serve \
+    --addr 127.0.0.1:0 --trace-dir "$SMOKE_ARCH" >"$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true; rm -rf "$SMOKE_ARCH"' EXIT
+SERVE_URL=""
+for _ in $(seq 1 100); do
+    SERVE_URL="$(sed -n 's|^rocline serve listening on \(http://.*\)$|\1|p' "$SERVE_LOG")"
+    [ -n "$SERVE_URL" ] && break
+    kill -0 "$SERVE_PID" 2>/dev/null || {
+        echo "serve daemon died during startup:" >&2
+        cat "$SERVE_LOG" >&2
+        exit 1
+    }
+    sleep 0.1
+done
+[ -n "$SERVE_URL" ] || {
+    echo "serve daemon never announced its address:" >&2
+    cat "$SERVE_LOG" >&2
+    exit 1
+}
+for GPU in v100 mi60 mi100; do
+    ./target/release/rocline query --gpu "$GPU" --case lwfa --steps 1 \
+        --format=json --trace-dir "$SMOKE_ARCH" >"$SMOKE_ARCH/batch-$GPU.json"
+    ./target/release/rocline query --gpu "$GPU" --case lwfa --steps 1 \
+        --url "$SERVE_URL" >"$SMOKE_ARCH/served-$GPU.json"
+    cmp "$SMOKE_ARCH/batch-$GPU.json" "$SMOKE_ARCH/served-$GPU.json" || {
+        echo "daemon answer for $GPU differs from the batch CLI" >&2
+        exit 1
+    }
+done
+# warm re-query, then read the service counters: cache_hits must have
+# moved and recordings must still be zero (the archive-hit contract,
+# daemon edition)
+./target/release/rocline query --gpu mi100 --case lwfa --steps 1 \
+    --url "$SERVE_URL" >/dev/null
+STATUS_JSON="$(./target/release/rocline query --url "$SERVE_URL" --status)"
+echo "serve status: $STATUS_JSON"
+case "$STATUS_JSON" in
+    *'"recordings":0'*) ;;
+    *) echo "daemon recorded live despite the archive" >&2; exit 1 ;;
+esac
+case "$STATUS_JSON" in
+    *'"cache_hits":0'*) echo "warm re-query was not a cache hit" >&2; exit 1 ;;
+    *'"cache_hits":'*) ;;
+    *) echo "no cache_hits counter in: $STATUS_JSON" >&2; exit 1 ;;
+esac
+./target/release/rocline query --url "$SERVE_URL" --shutdown >/dev/null
+wait "$SERVE_PID" || {
+    echo "serve daemon exited uncleanly after /v1/shutdown" >&2
+    exit 1
+}
+trap 'rm -rf "$SMOKE_ARCH"' EXIT
+echo "serve smoke ok: byte-identical answers, cache hit, clean shutdown"
 
 # bounded-memory streaming smoke: build a synth archive whose decoded
 # column image (~700 MiB: stride workload, 2^21 threads x 20

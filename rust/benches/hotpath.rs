@@ -501,6 +501,100 @@ fn main() {
         });
     }
 
+    // roofline-as-a-service: the warm cache-hit query path vs the
+    // cold record+replay path on a fresh service, plus end-to-end
+    // HTTP tail latency against an in-process daemon with a warm
+    // cache. The warm/cold ratio is gated like the other speedups
+    // (speedup/serve_warm_vs_cold_query — a collapse means warm
+    // queries started re-recording or re-replaying); the p99 feeds
+    // the lat/serve_p99_ms *ceiling* in bench-gate.
+    let mut serve_p99_ms: Option<f64> = None;
+    {
+        use rocline::coordinator::{
+            AnalysisService, QueryRequest, ServiceConfig,
+        };
+        use rocline::serve::{http, wire, Server};
+        use std::sync::Arc;
+        use std::time::Instant;
+
+        let mut scfg = CaseConfig::lwfa();
+        scfg.name = "bench-serve".into();
+        scfg.nx = 8;
+        scfg.ny = 8;
+        scfg.nz = 8;
+        scfg.ppc = 2;
+        scfg.steps = 2;
+        let mk_svc = || {
+            AnalysisService::new(ServiceConfig {
+                engine_threads: 2,
+                case_overrides: vec![scfg.clone()],
+                quiet: true,
+                ..ServiceConfig::default()
+            })
+        };
+        let q = QueryRequest::new("mi100", "bench-serve");
+        // cold: a fresh service per call pays record + replay +
+        // response build — the first query any daemon answers
+        r.bench("serve/query_cold", || {
+            mk_svc().query(&q).expect("cold query").case_key
+        });
+        // warm: same service, same key — must be a pure cache hit
+        let warm = mk_svc();
+        warm.query(&q).expect("prime warm cache");
+        r.bench("serve/query_warm", || {
+            warm.query(&q).expect("warm query").case_key
+        });
+
+        // tail latency over real sockets: K clients hammering one
+        // ephemeral daemon with warm-cache queries, p99 across every
+        // request (parse + route + cache hit + serialize + TCP)
+        let server = Server::bind("127.0.0.1:0", Arc::new(mk_svc()))
+            .expect("bind ephemeral serve");
+        let addr = server.local_addr().expect("serve local addr");
+        let query_url = format!("http://{addr}/v1/query");
+        let body = wire::query_request_to_json(&q).render();
+        let srv = std::thread::spawn(move || server.run());
+        let resp = http::post(&query_url, &body)
+            .expect("prime daemon cache");
+        assert_eq!(resp.status, 200, "prime failed: {}", resp.body);
+        const CLIENTS: usize = 4;
+        const PER_CLIENT: usize = 64;
+        let mut lat_ns: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|_| {
+                    let url = &query_url;
+                    let body = &body;
+                    s.spawn(move || {
+                        let mut v = Vec::with_capacity(PER_CLIENT);
+                        for _ in 0..PER_CLIENT {
+                            let t0 = Instant::now();
+                            let resp = http::post(url, body)
+                                .expect("warm HTTP query");
+                            assert_eq!(
+                                resp.status, 200,
+                                "warm query failed: {}",
+                                resp.body
+                            );
+                            v.push(t0.elapsed().as_nanos() as u64);
+                        }
+                        v
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("client thread"))
+                .collect()
+        });
+        lat_ns.sort_unstable();
+        let idx = (lat_ns.len() * 99 / 100).min(lat_ns.len() - 1);
+        serve_p99_ms = Some(lat_ns[idx] as f64 / 1e6);
+        let resp = http::post(&format!("http://{addr}/v1/shutdown"), "{}")
+            .expect("shutdown daemon");
+        assert_eq!(resp.status, 200, "shutdown failed: {}", resp.body);
+        srv.join().expect("server thread").expect("server run");
+    }
+
     // the paper's equations (should be ~ns; regression guard)
     r.bench("equations/eq2_eq4", || {
         let g = eq4_achieved_gips(449_796_480, 64, 0.0025);
@@ -591,6 +685,14 @@ fn main() {
             "archive/replay_streaming_MI100",
             "archive/replay_mmap_MI100",
         ),
+        // warm cache-hit query vs cold record+replay on the analysis
+        // service (a collapse means warm daemon queries started
+        // paying the recording or replay cost again)
+        (
+            "speedup/serve_warm_vs_cold_query",
+            "serve/query_warm",
+            "serve/query_cold",
+        ),
     ];
     for (name, fast, base) in pairs {
         if let (Some(f), Some(b)) =
@@ -633,6 +735,19 @@ fn main() {
             name: "mem/replay_peak_rss".to_string(),
             time: rocline::util::Summary::of(&[1.0]),
             throughput: Some(peak),
+        });
+    }
+
+    // the serve-path tail-latency metric: p99 wall time of a warm
+    // cache-hit query over a real socket. Gated with a *ceiling* in
+    // bench-gate (lat/* is lower-is-better): growth means the daemon
+    // request path picked up per-query work it shouldn't have.
+    if let Some(p99) = serve_p99_ms {
+        println!("{:<44} {p99:>10.2} ms", "lat/serve_p99_ms");
+        results.push(BenchResult {
+            name: "lat/serve_p99_ms".to_string(),
+            time: rocline::util::Summary::of(&[p99 / 1e3]),
+            throughput: Some(p99),
         });
     }
 

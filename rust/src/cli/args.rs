@@ -20,6 +20,11 @@
 //!   1 silently).
 
 use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::coordinator::{
+    CancelRequest, ExperimentsRequest, QueryRequest,
+};
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -31,16 +36,19 @@ pub struct Args {
 
 /// Options that take a value in space-separated form (`--key value`).
 /// `--key=value` works for these and for any future key alike.
-const VALUED: [&str; 22] = [
+const VALUED: [&str; 28] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
     "trace-dir", "trajectory", "compress", "mode", "dispatches", "seed",
+    "format", "url", "addr", "deadline-ms", "max-inflight", "queue-cap",
 ];
 
 /// Known boolean flags. Anything else with `--` and no `=` is an
 /// error, so typos and missing whitelist entries fail loudly.
-const FLAGS: [&str; 5] =
-    ["all", "pjrt", "update-baseline", "print-key", "prune"];
+const FLAGS: [&str; 9] = [
+    "all", "pjrt", "update-baseline", "print-key", "prune", "plots",
+    "status", "shutdown", "cancel",
+];
 
 impl Args {
     pub fn parse(argv: Vec<String>) -> anyhow::Result<Args> {
@@ -139,6 +147,220 @@ impl Args {
     }
 }
 
+/// How a service-backed command renders its result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    #[default]
+    Text,
+    /// Emit the server's exact JSON response document (same
+    /// `serve::wire` codec) as the only stdout line.
+    Json,
+}
+
+fn format_arg(args: &Args) -> anyhow::Result<OutputFormat> {
+    match args.get("format") {
+        None | Some("text") => Ok(OutputFormat::Text),
+        Some("json") => Ok(OutputFormat::Json),
+        Some(other) => anyhow::bail!(
+            "unknown --format '{other}' (text|json)"
+        ),
+    }
+}
+
+fn opt_u32(args: &Args, key: &str) -> anyhow::Result<Option<u32>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(_) => Ok(Some(args.get_u32(key, 0)?)),
+    }
+}
+
+fn opt_u64(args: &Args, key: &str) -> anyhow::Result<Option<u64>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(_) => Ok(Some(args.get_u64(key, 0)?)),
+    }
+}
+
+/// `reproduce`: which experiments to run and where. The wire-typed
+/// core is an [`ExperimentsRequest`] — empty `ids` means the full
+/// sweep, exactly like `POST /v1/experiments`.
+#[derive(Debug, Clone)]
+pub struct ReproduceCmd {
+    pub req: ExperimentsRequest,
+    pub out: PathBuf,
+    pub trace_dir: Option<PathBuf>,
+    pub shard: Option<String>,
+    pub format: OutputFormat,
+}
+
+/// `query`: one roofline query, locally or (with `--url`) against a
+/// running `rocline serve` daemon. The core is the server's own
+/// [`QueryRequest`].
+#[derive(Debug, Clone)]
+pub struct QueryCmd {
+    pub req: QueryRequest,
+    /// Client mode: send to this daemon instead of running locally.
+    pub url: Option<String>,
+    pub format: OutputFormat,
+    pub trace_dir: Option<PathBuf>,
+    /// Fetch service counters (`/v1/status`) instead of querying.
+    pub status: bool,
+    /// Client mode only: `POST /v1/shutdown` and exit.
+    pub shutdown: bool,
+    /// Send a [`CancelRequest`] for this (gpu, case) instead of
+    /// querying.
+    pub cancel: bool,
+}
+
+impl QueryCmd {
+    pub fn cancel_request(&self) -> CancelRequest {
+        CancelRequest {
+            gpu: self.req.gpu.clone(),
+            case: self.req.case.clone(),
+            steps: self.req.steps,
+        }
+    }
+}
+
+/// `serve`: daemon provisioning (maps 1:1 onto
+/// `coordinator::ServiceConfig`).
+#[derive(Debug, Clone)]
+pub struct ServeCmd {
+    pub addr: String,
+    pub trace_dir: Option<PathBuf>,
+    pub out: PathBuf,
+    pub max_inflight: Option<u64>,
+    pub queue_cap: Option<u64>,
+    pub deadline_ms: Option<u64>,
+}
+
+/// `trace-info`: archive inspection, text table or wire JSON.
+#[derive(Debug, Clone)]
+pub struct TraceInfoCmd {
+    pub target: String,
+    pub prune: bool,
+    /// Cases to keep when pruning (positionals after the target).
+    pub cases: Vec<String>,
+    pub steps: Option<u32>,
+    pub format: OutputFormat,
+}
+
+/// Every subcommand, parsed and typed at the CLI boundary. The
+/// service-backed commands carry the same request structs the server
+/// deserializes; the simulator commands keep their parsed [`Args`].
+#[derive(Debug, Clone)]
+pub enum Command {
+    Reproduce(ReproduceCmd),
+    Query(QueryCmd),
+    Serve(ServeCmd),
+    TraceInfo(TraceInfoCmd),
+    Record(Args),
+    Profile(Args),
+    Roofline(Args),
+    Babelstream(Args),
+    Membench(Args),
+    Pic(Args),
+    Artifacts(Args),
+    BenchGate(Args),
+    SynthTrace(Args),
+    SynthReplay(Args),
+    Help,
+}
+
+impl Command {
+    /// Parse a full argv (command + options) into a typed command.
+    /// Unknown commands and unknown/misused options are loud errors.
+    pub fn parse(argv: Vec<String>) -> anyhow::Result<Command> {
+        Command::from_args(Args::parse(argv)?)
+    }
+
+    pub fn from_args(args: Args) -> anyhow::Result<Command> {
+        Ok(match args.command.as_str() {
+            "reproduce" => Command::Reproduce(ReproduceCmd {
+                req: ExperimentsRequest {
+                    // --all (or no ids) = empty request = full sweep,
+                    // the same convention as POST /v1/experiments
+                    ids: if args.flag("all") {
+                        Vec::new()
+                    } else {
+                        args.positional.clone()
+                    },
+                },
+                out: PathBuf::from(args.get_or("out", "out")),
+                trace_dir: args.get("trace-dir").map(PathBuf::from),
+                shard: args.get("shard").map(String::from),
+                format: format_arg(&args)?,
+            }),
+            "query" => Command::Query(QueryCmd {
+                req: QueryRequest {
+                    gpu: args.get_or("gpu", "mi100").to_string(),
+                    case: args.get_or("case", "lwfa").to_string(),
+                    steps: opt_u32(&args, "steps")?,
+                    kernel: args.get("kernel").map(String::from),
+                    deadline_ms: opt_u64(&args, "deadline-ms")?,
+                    plots: args.flag("plots"),
+                },
+                url: args.get("url").map(String::from),
+                format: format_arg(&args)?,
+                trace_dir: args.get("trace-dir").map(PathBuf::from),
+                status: args.flag("status"),
+                shutdown: args.flag("shutdown"),
+                cancel: args.flag("cancel"),
+            }),
+            "serve" => Command::Serve(ServeCmd {
+                addr: args
+                    .get_or("addr", "127.0.0.1:8750")
+                    .to_string(),
+                trace_dir: args.get("trace-dir").map(PathBuf::from),
+                out: PathBuf::from(args.get_or("out", "out")),
+                max_inflight: opt_u64(&args, "max-inflight")?,
+                queue_cap: opt_u64(&args, "queue-cap")?,
+                deadline_ms: opt_u64(&args, "deadline-ms")?,
+            }),
+            "trace-info" => {
+                let target = args
+                    .positional
+                    .first()
+                    .map(String::as_str)
+                    .or_else(|| args.get("dir"))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "usage: rocline trace-info \
+                             <archive-dir-or-file> [--format=json] \
+                             [--prune [CASES...] [--steps N]]"
+                        )
+                    })?
+                    .to_string();
+                Command::TraceInfo(TraceInfoCmd {
+                    target,
+                    prune: args.flag("prune"),
+                    cases: args
+                        .positional
+                        .get(1..)
+                        .unwrap_or(&[])
+                        .to_vec(),
+                    steps: opt_u32(&args, "steps")?,
+                    format: format_arg(&args)?,
+                })
+            }
+            "record" => Command::Record(args),
+            "profile" => Command::Profile(args),
+            "roofline" => Command::Roofline(args),
+            "babelstream" => Command::Babelstream(args),
+            "membench" => Command::Membench(args),
+            "pic" => Command::Pic(args),
+            "artifacts" => Command::Artifacts(args),
+            "bench-gate" => Command::BenchGate(args),
+            "synth-trace" => Command::SynthTrace(args),
+            "synth-replay" => Command::SynthReplay(args),
+            "help" | "" => Command::Help,
+            other => anyhow::bail!(
+                "unknown command '{other}' (see `rocline help`)"
+            ),
+        })
+    }
+}
+
 /// Strict u64 parse for option values: digits only — no sign prefix,
 /// no whitespace, no trailing garbage — with overflow reported as a
 /// range error rather than a generic "not an integer".
@@ -157,6 +379,8 @@ pub fn parse_u64(key: &str, v: &str) -> anyhow::Result<u64> {
 
 #[cfg(test)]
 mod tests {
+    use std::path::PathBuf;
+
     use super::*;
 
     fn parse(s: &str) -> Args {
@@ -381,5 +605,129 @@ mod tests {
     fn empty_argv() {
         let a = Args::parse(vec![]).unwrap();
         assert_eq!(a.command, "");
+    }
+
+    fn command(s: &str) -> Command {
+        Command::parse(
+            s.split_whitespace().map(String::from).collect(),
+        )
+        .unwrap()
+    }
+
+    fn command_err(s: &str) -> String {
+        Command::parse(
+            s.split_whitespace().map(String::from).collect(),
+        )
+        .unwrap_err()
+        .to_string()
+    }
+
+    #[test]
+    fn typed_query_carries_the_server_request() {
+        let Command::Query(q) = command(
+            "query --gpu v100 --case lwfa --steps 8 \
+             --kernel FieldSolver --deadline-ms 250 --plots \
+             --format=json",
+        ) else {
+            panic!("expected Query");
+        };
+        assert_eq!(q.req.gpu, "v100");
+        assert_eq!(q.req.case, "lwfa");
+        assert_eq!(q.req.steps, Some(8));
+        assert_eq!(q.req.kernel.as_deref(), Some("FieldSolver"));
+        assert_eq!(q.req.deadline_ms, Some(250));
+        assert!(q.req.plots);
+        assert_eq!(q.format, OutputFormat::Json);
+        assert_eq!(q.url, None);
+        // defaults
+        let Command::Query(q) = command("query") else {
+            panic!("expected Query");
+        };
+        assert_eq!(q.req.gpu, "mi100");
+        assert_eq!(q.req.case, "lwfa");
+        assert_eq!(q.req.steps, None);
+        assert_eq!(q.format, OutputFormat::Text);
+        assert!(!q.status && !q.shutdown && !q.cancel);
+    }
+
+    #[test]
+    fn typed_query_client_mode_and_cancel() {
+        let Command::Query(q) = command(
+            "query --url http://127.0.0.1:8750 --cancel --gpu mi60",
+        ) else {
+            panic!("expected Query");
+        };
+        assert_eq!(q.url.as_deref(), Some("http://127.0.0.1:8750"));
+        assert!(q.cancel);
+        let c = q.cancel_request();
+        assert_eq!(c.gpu, "mi60");
+        assert_eq!(c.case, "lwfa");
+        assert_eq!(c.steps, None);
+    }
+
+    #[test]
+    fn typed_reproduce_ids_and_all() {
+        let Command::Reproduce(r) =
+            command("reproduce table1 fig4 --out out2 --format=json")
+        else {
+            panic!("expected Reproduce");
+        };
+        assert_eq!(r.req.ids, vec!["table1", "fig4"]);
+        assert_eq!(r.out, PathBuf::from("out2"));
+        assert_eq!(r.format, OutputFormat::Json);
+        // --all (like no ids) is the empty request = full sweep
+        let Command::Reproduce(r) = command("reproduce --all") else {
+            panic!("expected Reproduce");
+        };
+        assert!(r.req.ids.is_empty());
+    }
+
+    #[test]
+    fn typed_serve_provisioning() {
+        let Command::Serve(s) = command(
+            "serve --addr 127.0.0.1:0 --trace-dir traces \
+             --max-inflight 2 --queue-cap 0 --deadline-ms 1000",
+        ) else {
+            panic!("expected Serve");
+        };
+        assert_eq!(s.addr, "127.0.0.1:0");
+        assert_eq!(s.trace_dir, Some(PathBuf::from("traces")));
+        assert_eq!(s.max_inflight, Some(2));
+        assert_eq!(s.queue_cap, Some(0));
+        assert_eq!(s.deadline_ms, Some(1000));
+        let Command::Serve(s) = command("serve") else {
+            panic!("expected Serve");
+        };
+        assert_eq!(s.addr, "127.0.0.1:8750");
+        assert_eq!(s.max_inflight, None);
+    }
+
+    #[test]
+    fn typed_trace_info_keeps_prune_positionals() {
+        let Command::TraceInfo(t) =
+            command("trace-info traces --prune lwfa --steps 2")
+        else {
+            panic!("expected TraceInfo");
+        };
+        assert_eq!(t.target, "traces");
+        assert!(t.prune);
+        assert_eq!(t.cases, vec!["lwfa"]);
+        assert_eq!(t.steps, Some(2));
+        let e = command_err("trace-info");
+        assert!(e.contains("usage:"), "{e}");
+    }
+
+    #[test]
+    fn unknown_command_and_format_stay_loud() {
+        let e = command_err("frobnicate");
+        assert!(e.contains("unknown command 'frobnicate'"), "{e}");
+        assert!(e.contains("rocline help"), "{e}");
+        let e = command_err("query --format=yaml");
+        assert!(e.contains("unknown --format 'yaml'"), "{e}");
+        assert!(matches!(command("help"), Command::Help));
+        assert!(matches!(
+            Command::parse(vec![]).unwrap(),
+            Command::Help
+        ));
     }
 }

@@ -2,18 +2,24 @@
 
 use std::path::{Path, PathBuf};
 
-use super::args::Args;
+use super::args::{
+    Args, OutputFormat, QueryCmd, ReproduceCmd, ServeCmd,
+    TraceInfoCmd,
+};
 use crate::arch::presets;
 use crate::arch::Vendor;
 use crate::babelstream::{DeviceStream, HostStream};
-use crate::coordinator::profile_run::Context;
-use crate::coordinator::{run_experiments_in, EXPERIMENT_IDS};
+use crate::coordinator::{
+    AnalysisService, ExperimentsRequest, ServiceConfig,
+    EXPERIMENT_IDS,
+};
 use crate::gpumembench::{self, InstThroughputBench, ShmemBench};
 use crate::pic::{CaseConfig, PicSim};
 use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
 use crate::roofline::{plot_ascii, plot_svg, InstructionRoofline};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
+use crate::serve::{http, wire, Server};
 
 fn gpu_arg(args: &Args) -> anyhow::Result<crate::arch::GpuSpec> {
     let name = args.get_or("gpu", "mi100");
@@ -42,16 +48,15 @@ fn no_pjrt() -> anyhow::Error {
     )
 }
 
-pub fn reproduce(args: &Args) -> anyhow::Result<()> {
-    let trace_dir = args.get("trace-dir").map(PathBuf::from);
-    let mut ids: Vec<String> = if args.positional.is_empty()
-        || args.flag("all")
-    {
+pub fn reproduce(cmd: &ReproduceCmd) -> anyhow::Result<()> {
+    // an empty request means the full sweep — the same convention as
+    // POST /v1/experiments
+    let mut ids: Vec<String> = if cmd.req.ids.is_empty() {
         EXPERIMENT_IDS.iter().map(|s| s.to_string()).collect()
     } else {
-        args.positional.clone()
+        cmd.req.ids.clone()
     };
-    if let Some(shard) = args.get("shard") {
+    if let Some(shard) = &cmd.shard {
         let spec: crate::coordinator::ShardSpec = shard.parse()?;
         let requested = ids.len();
         ids = crate::coordinator::shard::shard_ids(&ids, spec);
@@ -74,8 +79,153 @@ pub fn reproduce(args: &Args) -> anyhow::Result<()> {
             return Ok(());
         }
     }
-    let out = PathBuf::from(args.get_or("out", "out"));
-    run_experiments_in(&ids, &out, trace_dir.as_deref())?;
+    let svc = AnalysisService::new(ServiceConfig {
+        trace_dir: cmd.trace_dir.clone(),
+        outdir: cmd.out.clone(),
+        quiet: cmd.format == OutputFormat::Json,
+        ..ServiceConfig::default()
+    });
+    match cmd.format {
+        OutputFormat::Text => {
+            svc.run_reports(&ids)?;
+        }
+        OutputFormat::Json => {
+            let resp =
+                svc.run_reports_wire(&ExperimentsRequest { ids })?;
+            println!(
+                "{}",
+                wire::experiments_response_to_json(&resp).render()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Run the roofline daemon until `POST /v1/shutdown`.
+pub fn serve(cmd: &ServeCmd) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    use std::sync::Arc;
+
+    let defaults = ServiceConfig::default();
+    let svc = Arc::new(AnalysisService::new(ServiceConfig {
+        trace_dir: cmd.trace_dir.clone(),
+        outdir: cmd.out.clone(),
+        max_inflight: cmd
+            .max_inflight
+            .map(|n| n as usize)
+            .unwrap_or(defaults.max_inflight),
+        queue_cap: cmd
+            .queue_cap
+            .map(|n| n as usize)
+            .unwrap_or(defaults.queue_cap),
+        default_deadline_ms: cmd.deadline_ms,
+        ..defaults
+    }));
+    let server = Server::bind(&cmd.addr, svc)?;
+    // scripts (ci/run.sh) scrape the bound address from this exact
+    // line; flush explicitly — piped stdout is block-buffered and the
+    // serve loop never exits on its own
+    println!(
+        "rocline serve listening on http://{}",
+        server.local_addr()?
+    );
+    std::io::stdout().flush()?;
+    server.run()
+}
+
+/// One roofline query — local single-shot service, or client mode
+/// against a running daemon with `--url`. Local `--format=json`
+/// output and the daemon's `/v1/query` body are byte-identical by
+/// construction (same wire codec over the same service).
+pub fn query(cmd: &QueryCmd) -> anyhow::Result<()> {
+    if let Some(url) = &cmd.url {
+        let base = url.trim_end_matches('/');
+        let resp = if cmd.shutdown {
+            http::post(&format!("{base}/v1/shutdown"), "{}")
+        } else if cmd.status {
+            http::get(&format!("{base}/v1/status"))
+        } else if cmd.cancel {
+            http::post(
+                &format!("{base}/v1/cancel"),
+                &wire::cancel_request_to_json(&cmd.cancel_request())
+                    .render(),
+            )
+        } else {
+            http::post(
+                &format!("{base}/v1/query"),
+                &wire::query_request_to_json(&cmd.req).render(),
+            )
+        }
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        // the body is printed verbatim either way: on success it IS
+        // the result; on error it carries the server's diagnosis
+        println!("{}", resp.body);
+        anyhow::ensure!(
+            resp.status == 200,
+            "server returned HTTP {} {}",
+            resp.status,
+            http::status_reason(resp.status)
+        );
+        return Ok(());
+    }
+    anyhow::ensure!(
+        !cmd.shutdown,
+        "--shutdown needs --url (no daemon to stop locally)"
+    );
+    let svc = AnalysisService::new(ServiceConfig {
+        trace_dir: cmd.trace_dir.clone(),
+        ..ServiceConfig::default()
+    });
+    if cmd.status {
+        println!(
+            "{}",
+            wire::status_response_to_json(&svc.status()).render()
+        );
+        return Ok(());
+    }
+    if cmd.cancel {
+        let resp = svc.cancel(&cmd.cancel_request())?;
+        println!(
+            "{}",
+            wire::cancel_response_to_json(&resp).render()
+        );
+        return Ok(());
+    }
+    let resp = svc.query(&cmd.req)?;
+    match cmd.format {
+        OutputFormat::Json => {
+            println!(
+                "{}",
+                wire::query_response_to_json(&resp).render()
+            );
+        }
+        OutputFormat::Text => {
+            println!(
+                "{} {} steps={} group={} key={:016x} peak={:.1} GIPS",
+                resp.gpu,
+                resp.case,
+                resp.steps,
+                resp.group_size,
+                resp.case_key,
+                resp.peak_gips
+            );
+            for k in &resp.kernels {
+                println!(
+                    "{:<16} inv={} inst/inv={} intensity={:.4} \
+                     inst/B gips={:.3} dur(mean)={:.3e}s",
+                    k.kernel,
+                    k.invocations,
+                    k.instructions_per_invocation,
+                    k.intensity_inst_per_byte,
+                    k.achieved_gips,
+                    k.mean_duration_s
+                );
+            }
+            if let Some(a) = &resp.plot_ascii {
+                println!("{a}");
+            }
+        }
+    }
     Ok(())
 }
 
@@ -195,48 +345,42 @@ pub fn record(args: &Args) -> anyhow::Result<()> {
 /// `record --steps N` archive) are deleted — the GC long-lived CI
 /// caches need, since content addressing means dead keys can never
 /// hit again.
-pub fn trace_info(args: &Args) -> anyhow::Result<()> {
+pub fn trace_info(cmd: &TraceInfoCmd) -> anyhow::Result<()> {
     use crate::trace::archive::{gc, ArchiveInfo, FORMAT_VERSION};
 
-    let target = args
-        .positional
-        .first()
-        .map(String::as_str)
-        .or_else(|| args.get("dir"))
-        .ok_or_else(|| {
-            anyhow::anyhow!(
-                "usage: rocline trace-info <archive-dir-or-file> \
-                 [--prune [CASES...] [--steps N]]"
-            )
-        })?;
+    let target = cmd.target.as_str();
     let path = Path::new(target);
-    let pruned = if args.flag("prune") {
+    // in JSON mode stdout carries exactly one document, so prune
+    // notes go to stderr
+    let json = cmd.format == OutputFormat::Json;
+    let note = |line: String| {
+        if json {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+    let pruned = if cmd.prune {
         use crate::coordinator::CaseTrace;
         anyhow::ensure!(
             path.is_dir(),
             "--prune needs an archive directory, got {target}"
         );
-        let mut cases: Vec<CaseConfig> =
-            if args.positional.len() <= 1 {
-                vec![CaseConfig::lwfa(), CaseConfig::tweac()]
-            } else {
-                args.positional[1..]
-                    .iter()
-                    .map(|n| {
-                        CaseConfig::by_name(n).ok_or_else(|| {
-                            anyhow::anyhow!(
-                                "unknown case '{n}' (lwfa|tweac)"
-                            )
-                        })
+        let mut cases: Vec<CaseConfig> = if cmd.cases.is_empty() {
+            vec![CaseConfig::lwfa(), CaseConfig::tweac()]
+        } else {
+            cmd.cases
+                .iter()
+                .map(|n| {
+                    CaseConfig::by_name(n).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown case '{n}' (lwfa|tweac)"
+                        )
                     })
-                    .collect::<anyhow::Result<_>>()?
-            };
-        if let Some(steps) = args.get("steps") {
-            let steps: u32 = steps.parse().map_err(|_| {
-                anyhow::anyhow!(
-                    "--steps: '{steps}' is not an integer"
-                )
-            })?;
+                })
+                .collect::<anyhow::Result<_>>()?
+        };
+        if let Some(steps) = cmd.steps {
             for c in &mut cases {
                 c.steps = steps;
             }
@@ -253,22 +397,33 @@ pub fn trace_info(args: &Args) -> anyhow::Result<()> {
             .collect();
         let report = gc::prune_dir(path, &live)?;
         for p in &report.deleted {
-            println!("pruned {}", p.display());
+            note(format!("pruned {}", p.display()));
         }
         for p in &report.swept_temps {
-            println!("swept stale spill temp {}", p.display());
+            note(format!(
+                "swept stale spill temp {}",
+                p.display()
+            ));
         }
-        println!(
+        note(format!(
             "prune: {} live archive(s) kept, {} dead key(s) \
              deleted, {} stale temp(s) swept",
             report.kept.len(),
             report.deleted.len(),
             report.swept_temps.len()
-        );
+        ));
         true
     } else {
         false
     };
+    if json {
+        // the server's /v1/archives document, byte-identical (same
+        // scan, same codec); an empty directory is an empty list,
+        // exactly as the daemon reports it
+        let resp = crate::coordinator::service::archive_info(path)?;
+        println!("{}", wire::trace_info_to_json(&resp).render());
+        return Ok(());
+    }
     let infos = if path.is_dir() {
         ArchiveInfo::scan_dir(path)?
     } else {
@@ -896,11 +1051,4 @@ pub fn artifacts(args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
-}
-
-// The Context import is used by reproduce via run_experiments; keep a
-// typed reference so refactors fail loudly here.
-#[allow(dead_code)]
-fn _type_anchor(ctx: &Context) {
-    let _ = ctx;
 }

@@ -2,10 +2,16 @@
 //!
 //! ```text
 //! rocline reproduce [--out DIR] [--shard i/n] [--trace-dir D]
-//!                   [--pjrt] [IDS...|--all]
+//!                   [--format text|json] [IDS...|--all]
+//! rocline serve [--addr A] [--trace-dir D] [--max-inflight N]
+//!               [--queue-cap N] [--deadline-ms MS] [--out DIR]
+//! rocline query [--gpu G] [--case C] [--steps N] [--kernel K]
+//!               [--plots] [--deadline-ms MS] [--format text|json]
+//!               [--trace-dir D] [--url U [--status|--cancel|--shutdown]]
 //! rocline record [--out DIR] [--steps N] [--print-key]
 //!                [--compress none|auto|force] [CASES...]
-//! rocline trace-info <DIR|FILE> [--prune [CASES...] [--steps N]]
+//! rocline trace-info <DIR|FILE> [--format text|json]
+//!                    [--prune [CASES...] [--steps N]]
 //! rocline profile --gpu G --case C [--tool rocprof|nvprof] [--csv F]
 //! rocline roofline --gpu G --case C [--svg F]
 //! rocline babelstream [--backend host|sim|pjrt] [--gpu G] [--n N]
@@ -21,36 +27,39 @@
 //!                      [--gpu G]
 //! ```
 //!
-//! All options also accept `--key=value` form.
+//! All options also accept `--key=value` form. Parsing happens once,
+//! at the [`args::Command`] boundary: every subcommand is a typed
+//! enum variant, and the service-backed ones (`reproduce`, `query`,
+//! `serve`, `trace-info`) carry the same request structs the
+//! `rocline serve` daemon deserializes — CLI and server are two
+//! frontends over one [`crate::coordinator::AnalysisService`] API.
 
 pub mod args;
 pub mod commands;
 
-pub use args::Args;
+pub use args::{Args, Command, OutputFormat};
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
-    let args = Args::parse(argv)?;
-    match args.command.as_str() {
-        "reproduce" => commands::reproduce(&args),
-        "record" => commands::record(&args),
-        "trace-info" => commands::trace_info(&args),
-        "profile" => commands::profile(&args),
-        "roofline" => commands::roofline(&args),
-        "babelstream" => commands::babelstream(&args),
-        "membench" => commands::membench(&args),
-        "pic" => commands::pic(&args),
-        "artifacts" => commands::artifacts(&args),
-        "bench-gate" => commands::bench_gate(&args),
-        "synth-trace" => commands::synth_trace(&args),
-        "synth-replay" => commands::synth_replay(&args),
-        "help" | "" => {
+    match Command::parse(argv)? {
+        Command::Reproduce(cmd) => commands::reproduce(&cmd),
+        Command::Query(cmd) => commands::query(&cmd),
+        Command::Serve(cmd) => commands::serve(&cmd),
+        Command::TraceInfo(cmd) => commands::trace_info(&cmd),
+        Command::Record(args) => commands::record(&args),
+        Command::Profile(args) => commands::profile(&args),
+        Command::Roofline(args) => commands::roofline(&args),
+        Command::Babelstream(args) => commands::babelstream(&args),
+        Command::Membench(args) => commands::membench(&args),
+        Command::Pic(args) => commands::pic(&args),
+        Command::Artifacts(args) => commands::artifacts(&args),
+        Command::BenchGate(args) => commands::bench_gate(&args),
+        Command::SynthTrace(args) => commands::synth_trace(&args),
+        Command::SynthReplay(args) => commands::synth_replay(&args),
+        Command::Help => {
             print!("{}", HELP);
             Ok(())
         }
-        other => anyhow::bail!(
-            "unknown command '{other}' (see `rocline help`)"
-        ),
     }
 }
 
@@ -71,6 +80,28 @@ COMMANDS:
                --trace-dir D replays case traces from a persistent
                archive (mmap, zero-copy; misses are recorded once and
                spilled there for every other process and run)
+               --format=json emits the server's ExperimentsResponse
+               JSON document instead of the text reports
+  serve        run the roofline-as-a-service daemon: mmap the trace
+               archive once, answer JSON queries over HTTP/1.1 with
+               per-(GPU, case) result caching, job dedup, bounded
+               admission (429/504 shedding) and cancellation — see
+               docs/service.md for the endpoint reference.
+               options: --addr A (default 127.0.0.1:8750; port 0 =
+               ephemeral), --trace-dir D, --max-inflight N,
+               --queue-cap N, --deadline-ms MS (default deadline for
+               requests that carry none), --out DIR (experiment
+               reports)
+  query        one roofline query (per-kernel counters, intensities,
+               GIPS; --plots adds ASCII + SVG plot data) — locally,
+               or against a running daemon with --url. Local and
+               daemon answers are byte-identical by construction.
+               options: --gpu G --case C [--steps N] [--kernel K]
+               [--plots] [--deadline-ms MS] [--trace-dir D]
+               [--format text|json]
+               client mode: --url http://HOST:PORT plus optionally
+               --status (service counters), --cancel (cancel the
+               (gpu, case) job), or --shutdown (stop the daemon)
   record       pre-populate a trace archive: record each case once and
                spill it (idempotent; shards then replay with zero live
                recordings). options: --out DIR (default
@@ -86,7 +117,8 @@ COMMANDS:
                records, address words, bytes, format version, and the
                per-section encodings + compression ratios of v2
                archives) from its index alone — no trace data
-               deserialized
+               deserialized. --format=json emits the server's
+               /v1/archives document
                --prune first deletes archive files whose content keys
                are not in the given case set (default: all known
                cases; --steps N to match a record --steps N archive)
@@ -105,10 +137,11 @@ COMMANDS:
   pic          run the PIC simulation (native, or --pjrt for the AOT
                path) [--case C] [--steps N]
   artifacts    list the AOT artifacts [--dir D]
-  bench-gate   compare BENCH_hotpath.json speedup/* ratios and size/*
-               metrics (archive compression) against the checked-in
-               baseline (ci/bench_baseline.json); fails on >20%
-               regression. options: --bench F --baseline F
+  bench-gate   compare BENCH_hotpath.json speedup/* ratios, size/*
+               metrics (archive compression) and lat/* latency
+               ceilings against the checked-in baseline
+               (ci/bench_baseline.json); fails on >20% regression.
+               options: --bench F --baseline F
                --tolerance T (default 0.2) --update-baseline (also
                appends a dated snapshot to the committed perf
                trajectory, --trajectory F, default

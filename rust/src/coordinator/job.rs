@@ -1,0 +1,572 @@
+//! Resumable, cancellable analysis jobs plus admission control — the
+//! scheduling substrate under [`super::service::AnalysisService`].
+//!
+//! A **job** is one `(GPU preset, case)` replay keyed by the case's
+//! content key (the same `case_key` hash that names archive files), so
+//! every frontend — CLI batch runs, concurrent HTTP queries, CI shards
+//! — that asks for the same work shares one computation and one cached
+//! result. The table implements single-flight claiming: the first
+//! requester *claims* the job and runs it, concurrent requesters for
+//! the same key *wait* on the job's condvar, and a failed or cancelled
+//! attempt resets the job to idle so the next requester can resume it
+//! (jobs are deterministic, so re-running is always safe).
+//!
+//! **Admission control** is separate from job identity: a bounded
+//! number of claims may run concurrently (`max_inflight`), a bounded
+//! number may wait for a slot (`queue_cap`), and everything beyond
+//! that is shed immediately with [`AdmitError::Busy`] — the 429 path.
+//! Waiters carry per-request deadlines and give up with
+//! [`AdmitError::DeadlineExceeded`] — the 504 path — without ever
+//! having consumed a worker.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::pool::{lock_recover, CancelToken};
+
+use super::profile_run::CaseRun;
+
+/// How long waiters sleep between re-checks of job state / admission
+/// slots. Purely a liveness heartbeat — every transition also
+/// `notify_all`s, so this only bounds lost-wakeup recovery and
+/// deadline polling granularity.
+const WAIT_HEARTBEAT: Duration = Duration::from_millis(50);
+
+/// Identity of one unit of analysis work: a GPU preset name (the
+/// canonical lowercase preset key) plus the case's content key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct JobKey {
+    pub gpu: String,
+    pub case_key: u64,
+}
+
+impl JobKey {
+    pub fn new(gpu: &str, case_key: u64) -> JobKey {
+        JobKey {
+            gpu: gpu.to_ascii_lowercase(),
+            case_key,
+        }
+    }
+}
+
+impl std::fmt::Display for JobKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-{:016x}", self.gpu, self.case_key)
+    }
+}
+
+enum JobState {
+    /// Nobody is working on this job; the next poll claims it.
+    Idle,
+    /// Someone claimed it; the token cancels that attempt.
+    Running(CancelToken),
+    /// Finished; the result is shared with every requester.
+    Done(Arc<CaseRun>),
+    /// The last attempt failed (panic, cancel, deadline). Waiters that
+    /// were blocked on this attempt see the message; the *next* poll
+    /// resets to Idle and resumes the job from scratch.
+    Failed(String),
+}
+
+/// One keyed job: a state machine guarded by a mutex, with a condvar
+/// so concurrent requesters of the same key block without spinning.
+pub struct Job {
+    pub key: JobKey,
+    state: Mutex<JobState>,
+    changed: Condvar,
+}
+
+/// What [`Job::poll`] tells a requester to do.
+pub enum Poll {
+    /// Result is cached — return it.
+    Hit(Arc<CaseRun>),
+    /// The caller now owns the job: run it, then call
+    /// [`Job::finish`] / [`Job::fail`] (the returned token is the
+    /// cancellation hook, already registered in the job state).
+    Claimed(CancelToken),
+    /// Another requester is running it — call [`Job::wait`].
+    Running,
+}
+
+impl Job {
+    fn new(key: JobKey) -> Job {
+        Job {
+            key,
+            state: Mutex::new(JobState::Idle),
+            changed: Condvar::new(),
+        }
+    }
+
+    /// Atomically inspect-and-claim. A `Failed` job is reclaimed here
+    /// (resumability): the failure only sticks for waiters of the
+    /// attempt that failed.
+    pub fn poll(&self, token: CancelToken) -> Poll {
+        let mut st = lock_recover(&self.state);
+        match &*st {
+            JobState::Done(run) => Poll::Hit(run.clone()),
+            JobState::Running(_) => Poll::Running,
+            JobState::Idle | JobState::Failed(_) => {
+                *st = JobState::Running(token.clone());
+                drop(st);
+                self.changed.notify_all();
+                Poll::Claimed(token)
+            }
+        }
+    }
+
+    /// The token of the currently-running attempt, if any — the
+    /// cancel endpoint's hook.
+    pub fn running_token(&self) -> Option<CancelToken> {
+        match &*lock_recover(&self.state) {
+            JobState::Running(t) => Some(t.clone()),
+            _ => None,
+        }
+    }
+
+    /// Record success and wake every waiter.
+    pub fn finish(&self, run: Arc<CaseRun>) {
+        *lock_recover(&self.state) = JobState::Done(run);
+        self.changed.notify_all();
+    }
+
+    /// Record failure (of *this attempt*) and wake every waiter.
+    pub fn fail(&self, why: String) {
+        *lock_recover(&self.state) = JobState::Failed(why);
+        self.changed.notify_all();
+    }
+
+    /// Give up an orderly claim without marking the job failed —
+    /// admission refused, or the request was cancelled / deadlined.
+    /// Waiters see `Claimable` and re-poll (resumability without an
+    /// error surfacing to requests that never asked to cancel).
+    pub fn release(&self) {
+        *lock_recover(&self.state) = JobState::Idle;
+        self.changed.notify_all();
+    }
+
+    /// The cached result, if the job already ran to completion.
+    pub fn done(&self) -> Option<Arc<CaseRun>> {
+        match &*lock_recover(&self.state) {
+            JobState::Done(run) => Some(run.clone()),
+            _ => None,
+        }
+    }
+
+    /// Block until the running attempt resolves, or `deadline`
+    /// passes — see [`WaitOutcome`] for the four ways this returns.
+    /// Waiting never consumes an admission slot; that's what lets a
+    /// deadline-expired waiter 504 without stalling anyone else.
+    pub fn wait(&self, deadline: Option<Instant>) -> WaitOutcome {
+        let mut st = lock_recover(&self.state);
+        loop {
+            match &*st {
+                JobState::Done(run) => {
+                    return WaitOutcome::Done(run.clone());
+                }
+                JobState::Failed(why) => {
+                    return WaitOutcome::Failed(why.clone());
+                }
+                JobState::Idle => return WaitOutcome::Claimable,
+                JobState::Running(_) => {}
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return WaitOutcome::Deadline;
+                }
+            }
+            let (g, _timeout) = self
+                .changed
+                .wait_timeout(st, WAIT_HEARTBEAT)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+        }
+    }
+}
+
+/// How a [`Job::wait`] resolved.
+pub enum WaitOutcome {
+    /// The running attempt finished; here is the shared result.
+    Done(Arc<CaseRun>),
+    /// The running attempt failed with this message.
+    Failed(String),
+    /// The job went back to Idle — re-poll to claim it.
+    Claimable,
+    /// The *waiter's* deadline expired (the job may still finish).
+    Deadline,
+}
+
+/// Makes a claimed job panic-safe: if the claimant unwinds (or errors
+/// out) without calling [`JobRunGuard::disarm`], the job is marked
+/// failed so waiters unblock and the next requester can reclaim it.
+pub struct JobRunGuard<'a> {
+    job: &'a Job,
+    done: bool,
+}
+
+impl<'a> JobRunGuard<'a> {
+    pub fn new(job: &'a Job) -> JobRunGuard<'a> {
+        JobRunGuard { job, done: false }
+    }
+
+    /// Mark the attempt resolved (success *or* an orderly failure the
+    /// caller reported via [`Job::fail`]) — the guard stands down.
+    pub fn disarm(&mut self) {
+        self.done = true;
+    }
+}
+
+impl Drop for JobRunGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.job.fail(format!(
+                "job {} aborted without a result",
+                self.job.key
+            ));
+        }
+    }
+}
+
+/// The keyed registry of jobs: get-or-insert by key, plus a snapshot
+/// of how many jobs have completed (the service's `jobs_done` gauge).
+#[derive(Default)]
+pub struct JobTable {
+    jobs: Mutex<HashMap<JobKey, Arc<Job>>>,
+}
+
+impl JobTable {
+    pub fn new() -> JobTable {
+        JobTable::default()
+    }
+
+    /// The job for `key`, creating an idle one on first sight.
+    pub fn job(&self, key: &JobKey) -> Arc<Job> {
+        let mut map = lock_recover(&self.jobs);
+        map.entry(key.clone())
+            .or_insert_with(|| Arc::new(Job::new(key.clone())))
+            .clone()
+    }
+
+    /// The job for `key` only if it already exists (cancel endpoint:
+    /// cancelling an unknown job must not create one).
+    pub fn existing(&self, key: &JobKey) -> Option<Arc<Job>> {
+        lock_recover(&self.jobs).get(key).cloned()
+    }
+
+    /// How many registered jobs have a cached result.
+    pub fn done_count(&self) -> usize {
+        lock_recover(&self.jobs)
+            .values()
+            .filter(|j| j.done().is_some())
+            .count()
+    }
+}
+
+/// Why admission was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Both the run slots and the wait queue are full — shed now
+    /// (HTTP 429).
+    Busy { queued: usize, queue_cap: usize },
+    /// A slot did not free up before the request's deadline
+    /// (HTTP 504).
+    DeadlineExceeded,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Busy { queued, queue_cap } => write!(
+                f,
+                "server busy: {queued} request(s) already queued \
+                 (queue capacity {queue_cap})"
+            ),
+            AdmitError::DeadlineExceeded => {
+                f.write_str("deadline exceeded while queued for a slot")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+#[derive(Default)]
+struct AdmitState {
+    running: usize,
+    waiting: usize,
+}
+
+/// Bounded-concurrency admission: at most `max_inflight` permits out
+/// at once, at most `queue_cap` requests waiting for one, everything
+/// else shed immediately.
+pub struct Admission {
+    max_inflight: usize,
+    queue_cap: usize,
+    state: Mutex<AdmitState>,
+    freed: Condvar,
+}
+
+impl Admission {
+    pub fn new(max_inflight: usize, queue_cap: usize) -> Admission {
+        Admission {
+            max_inflight: max_inflight.max(1),
+            queue_cap,
+            state: Mutex::new(AdmitState::default()),
+            freed: Condvar::new(),
+        }
+    }
+
+    pub fn max_inflight(&self) -> usize {
+        self.max_inflight
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Permits currently held.
+    pub fn inflight(&self) -> usize {
+        lock_recover(&self.state).running
+    }
+
+    /// Requests currently waiting for a permit.
+    pub fn queued(&self) -> usize {
+        lock_recover(&self.state).waiting
+    }
+
+    /// Acquire a permit, waiting (up to `deadline`) if the run slots
+    /// are full and the wait queue has room. Associated-fn form
+    /// because the returned [`Permit`] must own an `Arc` to release
+    /// its slot from any thread.
+    pub fn acquire(
+        this: &Arc<Admission>,
+        deadline: Option<Instant>,
+    ) -> Result<Permit, AdmitError> {
+        let mut st = lock_recover(&this.state);
+        if st.running < this.max_inflight {
+            st.running += 1;
+            return Ok(Permit {
+                admission: this.clone(),
+            });
+        }
+        if st.waiting >= this.queue_cap {
+            return Err(AdmitError::Busy {
+                queued: st.waiting,
+                queue_cap: this.queue_cap,
+            });
+        }
+        st.waiting += 1;
+        loop {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    st.waiting -= 1;
+                    return Err(AdmitError::DeadlineExceeded);
+                }
+            }
+            let (g, _timeout) = this
+                .freed
+                .wait_timeout(st, WAIT_HEARTBEAT)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+            if st.running < this.max_inflight {
+                st.waiting -= 1;
+                st.running += 1;
+                return Ok(Permit {
+                    admission: this.clone(),
+                });
+            }
+        }
+    }
+}
+
+/// RAII run slot: dropping it frees the slot and wakes one queued
+/// waiter. Held across the whole replay, including the error paths —
+/// that is the "cancelled job frees its worker slot" guarantee.
+pub struct Permit {
+    admission: Arc<Admission>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut st = lock_recover(&self.admission.state);
+        st.running = st.running.saturating_sub(1);
+        drop(st);
+        self.admission.freed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::pic::CaseConfig;
+
+    fn tiny_run() -> Arc<CaseRun> {
+        let mut cfg = CaseConfig::lwfa();
+        cfg.nx = 8;
+        cfg.ny = 8;
+        cfg.nz = 8;
+        cfg.ppc = 2;
+        cfg.steps = 1;
+        Arc::new(CaseRun::execute(presets::mi100(), cfg))
+    }
+
+    #[test]
+    fn job_key_normalizes_gpu_and_renders() {
+        let k = JobKey::new("MI100", 0xabc);
+        assert_eq!(k.gpu, "mi100");
+        assert_eq!(k.to_string(), "mi100-0000000000000abc");
+        assert_eq!(k, JobKey::new("mi100", 0xabc));
+    }
+
+    #[test]
+    fn first_poll_claims_then_hit_after_finish() {
+        let table = JobTable::new();
+        let key = JobKey::new("mi100", 1);
+        let job = table.job(&key);
+        let token = match job.poll(CancelToken::new()) {
+            Poll::Claimed(t) => t,
+            _ => panic!("first poll must claim"),
+        };
+        assert!(job.running_token().is_some());
+        assert!(token.checkpoint().is_ok());
+        // concurrent poll sees it running
+        assert!(matches!(job.poll(CancelToken::new()), Poll::Running));
+        let run = tiny_run();
+        job.finish(run.clone());
+        match job.poll(CancelToken::new()) {
+            Poll::Hit(r) => assert!(Arc::ptr_eq(&r, &run)),
+            _ => panic!("post-finish poll must hit"),
+        }
+        assert_eq!(table.done_count(), 1);
+    }
+
+    #[test]
+    fn failed_job_is_reclaimable() {
+        let job = Job::new(JobKey::new("mi60", 2));
+        match job.poll(CancelToken::new()) {
+            Poll::Claimed(_) => {}
+            _ => panic!("claim"),
+        }
+        job.fail("boom".to_string());
+        match job.wait(None) {
+            WaitOutcome::Failed(why) => assert_eq!(why, "boom"),
+            _ => panic!("waiter of the failed attempt sees failure"),
+        }
+        // ... but the job itself can be claimed again (resumable)
+        assert!(matches!(
+            job.poll(CancelToken::new()),
+            Poll::Claimed(_)
+        ));
+    }
+
+    #[test]
+    fn run_guard_fails_job_on_unwind_path() {
+        let job = Job::new(JobKey::new("v100", 3));
+        match job.poll(CancelToken::new()) {
+            Poll::Claimed(_) => {}
+            _ => panic!("claim"),
+        }
+        {
+            let _guard = JobRunGuard::new(&job);
+            // dropped without disarm — simulates a panic/early return
+        }
+        match job.wait(None) {
+            WaitOutcome::Failed(why) => {
+                assert!(why.contains("aborted"), "{why}");
+            }
+            _ => panic!("guard must mark the job failed"),
+        }
+    }
+
+    #[test]
+    fn waiter_deadline_expires_while_job_runs() {
+        let job = Job::new(JobKey::new("mi100", 4));
+        match job.poll(CancelToken::new()) {
+            Poll::Claimed(_) => {}
+            _ => panic!("claim"),
+        }
+        let d = Instant::now() + Duration::from_millis(60);
+        match job.wait(Some(d)) {
+            WaitOutcome::Deadline => {}
+            _ => panic!("waiter must time out, job keeps running"),
+        }
+        assert!(job.running_token().is_some());
+    }
+
+    #[test]
+    fn wait_resolves_when_another_thread_finishes() {
+        let job = Arc::new(Job::new(JobKey::new("mi100", 5)));
+        match job.poll(CancelToken::new()) {
+            Poll::Claimed(_) => {}
+            _ => panic!("claim"),
+        }
+        let run = tiny_run();
+        let j2 = job.clone();
+        let r2 = run.clone();
+        let finisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            j2.finish(r2);
+        });
+        match job.wait(None) {
+            WaitOutcome::Done(r) => assert!(Arc::ptr_eq(&r, &run)),
+            _ => panic!("waiter must see the finished run"),
+        }
+        finisher.join().unwrap();
+    }
+
+    #[test]
+    fn admission_grants_sheds_and_frees() {
+        let adm = Arc::new(Admission::new(1, 0));
+        let p1 = Admission::acquire(&adm, None).expect("first permit");
+        assert_eq!(adm.inflight(), 1);
+        // queue_cap 0: second request is shed immediately
+        match Admission::acquire(&adm, Some(Instant::now())) {
+            Err(AdmitError::Busy { queue_cap, .. }) => {
+                assert_eq!(queue_cap, 0);
+            }
+            _ => panic!("must shed when full with no queue"),
+        }
+        drop(p1);
+        assert_eq!(adm.inflight(), 0);
+        let p2 = Admission::acquire(&adm, None).expect("slot freed");
+        drop(p2);
+    }
+
+    #[test]
+    fn queued_waiter_times_out_or_gets_freed_slot() {
+        let adm = Arc::new(Admission::new(1, 4));
+        let p1 = Admission::acquire(&adm, None).expect("first permit");
+        // deadline already passed: joins the queue, exits on first check
+        let d = Instant::now();
+        match Admission::acquire(&adm, Some(d)) {
+            Err(AdmitError::DeadlineExceeded) => {}
+            _ => panic!("expired deadline must 504"),
+        }
+        assert_eq!(adm.queued(), 0, "timed-out waiter left the queue");
+        // a live waiter gets the slot when the holder releases it
+        let a2 = adm.clone();
+        let waiter = std::thread::spawn(move || {
+            let far = Instant::now() + Duration::from_secs(30);
+            Admission::acquire(&a2, Some(far)).is_ok()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(p1);
+        assert!(waiter.join().unwrap(), "freed slot reaches the queue");
+        assert_eq!(adm.inflight(), 0);
+    }
+
+    #[test]
+    fn admit_error_renders() {
+        let busy = AdmitError::Busy {
+            queued: 3,
+            queue_cap: 3,
+        };
+        assert!(busy.to_string().contains("busy"));
+        assert!(AdmitError::DeadlineExceeded
+            .to_string()
+            .contains("deadline"));
+        let _e: Box<dyn std::error::Error> =
+            Box::new(AdmitError::DeadlineExceeded);
+    }
+}

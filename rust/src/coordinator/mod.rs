@@ -14,21 +14,36 @@
 //! * [`paper`] — the paper's published values and the *shape criteria*
 //!   the reproduction must satisfy;
 //! * [`experiments`] — one function per table/figure;
-//! * [`runner`] — executes experiments (fanned out on the shared
-//!   worker pool) and writes `out/`;
+//! * [`runner`] — experiment ids + deprecated run-to-completion shims;
+//! * [`job`] — resumable, cancellable jobs keyed by content-addressed
+//!   case keys, plus bounded admission control;
+//! * [`service`] — [`service::AnalysisService`], the typed
+//!   request/response API the CLI, the `rocline serve` daemon and the
+//!   tests all share;
 //! * [`shard`] — deterministic `--shard i/n` partitioning of the
 //!   (GPU, case) matrix so CI can spread the sweep across processes.
 
 pub mod experiments;
+pub mod job;
 pub mod paper;
 pub mod profile_run;
 pub mod record;
 pub mod report;
 pub mod runner;
+pub mod service;
 pub mod shard;
 
+pub use job::{Admission, AdmitError, JobKey, JobTable};
 pub use profile_run::{CaseRun, Context};
 pub use record::{CaseTrace, ReplayMode, StoredTrace, TraceStore};
 pub use report::Report;
-pub use runner::{run_experiments, run_experiments_in, EXPERIMENT_IDS};
+#[allow(deprecated)]
+pub use runner::{run_experiments, run_experiments_in};
+pub use runner::EXPERIMENT_IDS;
+pub use service::{
+    AnalysisService, ArchiveEntry, CancelRequest, CancelResponse,
+    ExperimentsRequest, ExperimentsResponse, KernelCounters,
+    QueryRequest, QueryResponse, ReportSummary, ServiceConfig,
+    ServiceError, StatusResponse, TraceInfoResponse,
+};
 pub use shard::ShardSpec;

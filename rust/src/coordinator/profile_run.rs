@@ -334,6 +334,29 @@ impl Context {
         self.store.spills()
     }
 
+    /// The trace store shared by every run in this context.
+    pub fn store(&self) -> &TraceStore {
+        &self.store
+    }
+
+    /// Seed the `(gpu, case)` run cache with an externally-built run
+    /// (e.g. one produced by the analysis service's cancellable replay
+    /// path), so later experiment sweeps reuse it instead of replaying
+    /// again. An existing entry wins — runs are deterministic, so the
+    /// first result for a key is as good as any.
+    pub fn seed_run(
+        &self,
+        gpu: &str,
+        case: &str,
+        run: Arc<CaseRun>,
+    ) {
+        self.runs
+            .lock()
+            .unwrap()
+            .entry((gpu.to_string(), case.to_string()))
+            .or_insert(run);
+    }
+
     /// Pre-execute several runs in parallel on the shared worker pool.
     /// The replay-engine worker budget is divided across the concurrent
     /// runs so the sweep parallelism and the per-run engine parallelism

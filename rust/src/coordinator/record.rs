@@ -292,9 +292,14 @@ impl StoredTrace {
     }
 }
 
-/// Sweep-wide cache of case traces, keyed by case name. Each case is
-/// resolved exactly once even under concurrent lookups (a per-case
-/// entry lock serializes the resolution; later callers reuse it).
+/// Sweep-wide cache of case traces, keyed by the case's **content
+/// key** (the same `case_key` hash that names archive files — the
+/// manifest line, base group size and seed). Keying by name would
+/// alias two configs that differ only in `steps` (a long-lived
+/// analysis service answers `--steps` query variants from one store);
+/// content keys make each variant its own entry. Each entry is
+/// resolved exactly once even under concurrent lookups (a per-entry
+/// lock serializes the resolution; later callers reuse it).
 ///
 /// With a disk tier ([`TraceStore::with_dir`]) resolution is: archive
 /// hit → mmap ([`StoredTrace::Mapped`]); miss → record live **and
@@ -365,10 +370,17 @@ impl TraceStore {
     /// Get the trace for `cfg`: archive hit, or record (exactly once)
     /// and spill.
     pub fn get_or_record(&self, cfg: &CaseConfig) -> StoredTrace {
+        // content key, not name: `lwfa --steps 1` and `lwfa --steps 64`
+        // are different recordings and must be different entries
+        let key = archive::case_key(
+            &cfg.manifest_line(),
+            CaseTrace::BASE_GROUP_SIZE,
+            RUN_SEED,
+        );
         let entry = {
             let mut map = lock_recover(&self.entries);
             Arc::clone(
-                map.entry(cfg.name.clone())
+                map.entry(format!("{}-{key:016x}", cfg.name))
                     .or_insert_with(|| Arc::new(Mutex::new(None))),
             )
         };
@@ -560,6 +572,24 @@ mod tests {
         assert_eq!(store.recordings(), 2);
         assert_eq!(store.archive_hits(), 0);
         assert_eq!(store.spills(), 0);
+    }
+
+    #[test]
+    fn store_keys_entries_by_content_not_name() {
+        // same case name, different physics: must be two recordings,
+        // not one cache entry shadowing the other
+        let store = TraceStore::new();
+        let short = tiny("same-name", 1);
+        let long = tiny("same-name", 2);
+        let t1 = store.get_or_record(&short);
+        let t2 = store.get_or_record(&long);
+        assert_eq!(store.recordings(), 2);
+        assert_eq!(t1.dispatch_count(), 5);
+        assert_eq!(t2.dispatch_count(), 2 * 5);
+        // and each key still hits its own cache on re-query
+        store.get_or_record(&short);
+        store.get_or_record(&long);
+        assert_eq!(store.recordings(), 2);
     }
 
     #[test]

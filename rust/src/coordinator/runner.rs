@@ -4,13 +4,12 @@ use std::path::Path;
 
 use super::experiments;
 use super::profile_run::Context;
-use super::record::CaseTrace;
 use super::report::Report;
-use crate::pic::CaseConfig;
+use super::service::{AnalysisService, ServiceConfig};
 
 /// The CI contract switch: with `ROCLINE_REQUIRE_ARCHIVE_HIT=1` a
 /// `--trace-dir` sweep must not record anything live.
-fn require_archive_hit() -> bool {
+pub(crate) fn require_archive_hit() -> bool {
     std::env::var("ROCLINE_REQUIRE_ARCHIVE_HIT").as_deref() == Ok("1")
 }
 
@@ -61,146 +60,39 @@ pub fn run_one(ctx: &Context, id: &str) -> anyhow::Result<Report> {
 }
 
 /// Run experiments (all of `ids`), prefetching the profiled runs in
-/// parallel, then assembling every experiment concurrently (each
-/// (GPU, case) `ProfileSession` executes exactly once, inside the
-/// shared [`Context`]). Reports are rendered and written in the
-/// requested order once all workers finish.
+/// parallel, then assembling every experiment concurrently. Thin shim
+/// over [`AnalysisService`] kept for source compatibility.
+#[deprecated(
+    since = "0.7.0",
+    note = "use coordinator::AnalysisService::run_reports"
+)]
 pub fn run_experiments(
     ids: &[String],
     outdir: &Path,
 ) -> anyhow::Result<Vec<Report>> {
+    #[allow(deprecated)]
     run_experiments_in(ids, outdir, None)
 }
 
 /// [`run_experiments`] with an optional persistent trace-archive
-/// directory (`--trace-dir`): case traces are memory-mapped from the
-/// archive when present (zero live recordings against a pre-populated
-/// archive — the CI shard contract) and spilled there when not, so
-/// concurrent shard processes and later runs share one recording.
+/// directory (`--trace-dir`). Thin shim over [`AnalysisService`]:
+/// builds a fresh default-provisioned service per call, so output and
+/// side effects are exactly the old run-to-completion behaviour.
+#[deprecated(
+    since = "0.7.0",
+    note = "use coordinator::AnalysisService::run_reports"
+)]
 pub fn run_experiments_in(
     ids: &[String],
     outdir: &Path,
     trace_dir: Option<&Path>,
 ) -> anyhow::Result<Vec<Report>> {
-    let ctx =
-        Context::with_trace_dir(trace_dir.map(|p| p.to_path_buf()));
-    // prefetch every needed (gpu, case) run once, in parallel — the
-    // expensive profiled runs land in the context cache before the
-    // experiment workers race to read them
-    let mut needed: Vec<(&str, &str)> = Vec::new();
-    for id in ids {
-        for pair in runs_needed(id) {
-            if !needed.contains(&pair) {
-                needed.push(pair);
-            }
-        }
-    }
-    if !needed.is_empty() {
-        // fail fast under the CI contract: a missing archive file
-        // means the sweep is doomed to record live — surface that in
-        // milliseconds instead of after the full prefetch (corrupt
-        // files are still caught by the post-sweep check below)
-        if let Some(dir) = trace_dir {
-            if require_archive_hit() {
-                let mut cases: Vec<&str> =
-                    needed.iter().map(|(_, c)| *c).collect();
-                cases.sort_unstable();
-                cases.dedup();
-                for case in cases {
-                    let cfg = CaseConfig::by_name(case)
-                        .ok_or_else(|| {
-                            anyhow::anyhow!("unknown case {case}")
-                        })?;
-                    let path = CaseTrace::archive_path(dir, &cfg);
-                    anyhow::ensure!(
-                        path.exists(),
-                        "ROCLINE_REQUIRE_ARCHIVE_HIT=1: archive \
-                         file {} is missing for case '{case}' \
-                         (stale cache key or incomplete `rocline \
-                         record`?)",
-                        path.display()
-                    );
-                }
-            }
-        }
-        eprintln!(
-            "prefetching {} profiled run(s): {}",
-            needed.len(),
-            needed
-                .iter()
-                .map(|(g, c)| format!("{g}/{c}"))
-                .collect::<Vec<_>>()
-                .join(" ")
-        );
-        ctx.prefetch(&needed);
-        eprintln!(
-            "recorded {} case trace(s) live ({} archive hit(s), {} \
-             spilled); {} run(s) replayed them zero-copy",
-            ctx.recordings(),
-            ctx.archive_hits(),
-            ctx.spills(),
-            needed.len()
-        );
-        // CI contract, enforced fail-closed in-process (not by log
-        // scraping): against a pre-populated archive a sweep must not
-        // record anything live
-        if trace_dir.is_some() && require_archive_hit() {
-            anyhow::ensure!(
-                ctx.recordings() == 0,
-                "ROCLINE_REQUIRE_ARCHIVE_HIT=1: {} case trace(s) \
-                 were recorded live despite --trace-dir (archive \
-                 miss or stale key? pre-populate with `rocline \
-                 record`)",
-                ctx.recordings()
-            );
-        }
-    }
-
-    // experiment assembly (stream/membench simulate whole benchmark
-    // suites) also fans out one job per experiment id on the shared
-    // worker pool
-    let ctx_ref = &ctx;
-    let slots: Vec<std::sync::Mutex<Option<anyhow::Result<Report>>>> =
-        ids.iter().map(|_| std::sync::Mutex::new(None)).collect();
-    crate::util::WorkerPool::global().scope(|s| {
-        for (slot, id) in slots.iter().zip(ids.iter()) {
-            s.spawn(move || {
-                *slot.lock().unwrap() = Some(run_one(ctx_ref, id));
-            });
-        }
+    let svc = AnalysisService::new(ServiceConfig {
+        trace_dir: trace_dir.map(|p| p.to_path_buf()),
+        outdir: outdir.to_path_buf(),
+        ..ServiceConfig::default()
     });
-    let results: Vec<anyhow::Result<Report>> = slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap()
-                .expect("experiment worker finished")
-        })
-        .collect();
-
-    let mut reports = Vec::new();
-    for rep in results {
-        let rep = rep?;
-        println!("{}", rep.render());
-        rep.write(outdir)?;
-        reports.push(rep);
-    }
-
-    // summary
-    let total: usize = reports.iter().map(|r| r.checks.len()).sum();
-    let passed: usize = reports
-        .iter()
-        .map(|r| r.checks.iter().filter(|c| c.passed).count())
-        .sum();
-    println!(
-        "== {}/{} shape checks passed across {} experiment(s); \
-         reports in {} ==",
-        passed,
-        total,
-        reports.len(),
-        outdir.display()
-    );
-    Ok(reports)
+    Ok(svc.run_reports(ids)?)
 }
 
 #[cfg(test)]
@@ -240,6 +132,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn merged_shard_reports_equal_the_unsharded_sweep() {
         // run the cheap (no profiled runs) experiments unsharded and
         // as two shards; the union of the shard output directories

@@ -1,0 +1,1440 @@
+//! `AnalysisService` — the job-oriented analysis API every frontend
+//! shares.
+//!
+//! The batch CLI (`reproduce`, `query --format=json`), the `rocline
+//! serve` daemon and the integration tests all drive this one service:
+//! typed requests in, typed responses out, with the per-(preset, case)
+//! replay work deduplicated through a [`JobTable`] keyed by
+//! content-addressed [`JobKey`]s (the same `case_key` hashes that name
+//! archive files) and bounded by an [`Admission`] controller
+//! (`max_inflight` concurrent replays, a bounded wait queue,
+//! per-request deadlines, 429/504 shedding).
+//!
+//! Jobs are **resumable and cancellable**: a replay claimed by one
+//! request checkpoints its [`CancelToken`] between dispatches, so a
+//! cancelled or deadline-expired request unwinds at the next dispatch
+//! boundary, frees its admission slot, and leaves the job idle for the
+//! next requester to claim from scratch (replays are deterministic —
+//! re-running is always bit-identical). A completed job is a shared
+//! cache hit for every later request, the CLI sweep included.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::arch::{presets, GpuSpec, Vendor};
+use crate::babelstream::DeviceStream;
+use crate::pic::CaseConfig;
+use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
+use crate::roofline::equations as eq;
+use crate::roofline::{plot_ascii, plot_svg, InstructionRoofline};
+use crate::trace::archive::{self, ArchiveInfo};
+use crate::util::pool::{self, CancelToken, Cancelled};
+
+use super::job::{
+    Admission, AdmitError, Job, JobKey, JobTable, Poll, WaitOutcome,
+};
+use super::profile_run::{CaseRun, Context, RUN_SEED};
+use super::record::{CaseTrace, StoredTrace};
+use super::report::Report;
+use super::runner;
+
+/// How a service is provisioned — every knob the `serve` CLI exposes.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Persistent trace-archive directory (`--trace-dir`): recordings
+    /// are mmapped from / spilled to it, shared with CI and batch runs.
+    pub trace_dir: Option<PathBuf>,
+    /// Max concurrent replay jobs (admission slots).
+    pub max_inflight: usize,
+    /// Max requests queued waiting for a slot before shedding (429).
+    pub queue_cap: usize,
+    /// Deadline applied to requests that carry none, in milliseconds.
+    pub default_deadline_ms: Option<u64>,
+    /// Replay-engine worker budget per job.
+    pub engine_threads: usize,
+    /// Where experiment reports are written (`run_reports`).
+    pub outdir: PathBuf,
+    /// Extra named cases resolvable by queries, checked before the
+    /// built-in registry — how tests (and future synthetic workloads)
+    /// serve cases beyond `lwfa`/`tweac`.
+    pub case_overrides: Vec<CaseConfig>,
+    /// Suppress the per-report stdout rendering in
+    /// [`AnalysisService::run_reports`] (progress notes on stderr
+    /// stay). `reproduce --format=json` sets this so stdout carries
+    /// exactly one JSON document.
+    pub quiet: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            trace_dir: None,
+            max_inflight: pool::default_threads(),
+            queue_cap: 64,
+            default_deadline_ms: None,
+            engine_threads: pool::default_threads(),
+            outdir: PathBuf::from("out"),
+            case_overrides: Vec::new(),
+            quiet: false,
+        }
+    }
+}
+
+/// Every way a service request can fail, each mapped to one HTTP
+/// status by the server. `BadRequest`/`Internal` render their message
+/// verbatim so CLI error output is unchanged from the pre-service
+/// free functions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServiceError {
+    /// Malformed request: unknown GPU/case/experiment, bad field.
+    BadRequest(String),
+    /// Admission refused outright: run slots and wait queue both full.
+    Busy { queued: usize, queue_cap: usize },
+    /// The request's deadline expired (queued or mid-replay).
+    DeadlineExceeded,
+    /// The request was cancelled via the cancel endpoint.
+    Cancelled,
+    /// Everything else (replay failure, I/O, CI-contract violation).
+    Internal(String),
+}
+
+impl ServiceError {
+    /// The HTTP status the server maps this error to.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServiceError::BadRequest(_) => 400,
+            ServiceError::Busy { .. } => 429,
+            ServiceError::DeadlineExceeded => 504,
+            ServiceError::Cancelled => 409,
+            ServiceError::Internal(_) => 500,
+        }
+    }
+
+    /// Stable machine-readable error code (the JSON `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServiceError::BadRequest(_) => "bad_request",
+            ServiceError::Busy { .. } => "busy",
+            ServiceError::DeadlineExceeded => "deadline_exceeded",
+            ServiceError::Cancelled => "cancelled",
+            ServiceError::Internal(_) => "internal",
+        }
+    }
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::BadRequest(m) | ServiceError::Internal(m) => {
+                f.write_str(m)
+            }
+            ServiceError::Busy { queued, queue_cap } => write!(
+                f,
+                "server busy: {queued} request(s) already queued \
+                 (queue capacity {queue_cap})"
+            ),
+            ServiceError::DeadlineExceeded => {
+                f.write_str("deadline exceeded")
+            }
+            ServiceError::Cancelled => f.write_str("request cancelled"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// One roofline query: which preset/case to replay and what to return.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryRequest {
+    pub gpu: String,
+    pub case: String,
+    /// Override the case's step count (content-rekeys the job).
+    pub steps: Option<u32>,
+    /// Build the roofline model for this kernel (default
+    /// `ComputeCurrent` when `plots` is set).
+    pub kernel: Option<String>,
+    /// Per-request deadline; `None` uses the service default.
+    pub deadline_ms: Option<u64>,
+    /// Also render the ASCII + SVG plots into the response.
+    pub plots: bool,
+}
+
+impl QueryRequest {
+    pub fn new(gpu: &str, case: &str) -> QueryRequest {
+        QueryRequest {
+            gpu: gpu.to_string(),
+            case: case.to_string(),
+            steps: None,
+            kernel: None,
+            deadline_ms: None,
+            plots: false,
+        }
+    }
+}
+
+/// Per-kernel counters + derived roofline coordinates, per-invocation
+/// semantics exactly as the paper's tables (and `from_rocprof`) use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelCounters {
+    pub kernel: String,
+    pub invocations: u64,
+    /// Eq. 1 instructions (AMD) / `inst_executed` (NVIDIA), per
+    /// invocation.
+    pub instructions_per_invocation: u64,
+    pub bytes_read: f64,
+    pub bytes_written: f64,
+    pub mean_duration_s: f64,
+    /// Eq. 2 instruction intensity, instructions/byte.
+    pub intensity_inst_per_byte: f64,
+    /// Eq. 4 achieved GIPS.
+    pub achieved_gips: f64,
+    /// The raw profiler counters, named as the tool names them.
+    pub counters: Vec<(String, f64)>,
+}
+
+/// A complete query answer. Serialized to JSON by `serve::wire` — the
+/// CLI's `query --format=json` and the server emit the identical
+/// bytes by construction.
+#[derive(Debug, Clone)]
+pub struct QueryResponse {
+    /// Canonical spec name (`V100`/`MI60`/`MI100`).
+    pub gpu: String,
+    pub case: String,
+    pub steps: u32,
+    /// Content key of the replayed case (names the archive file).
+    pub case_key: u64,
+    pub group_size: u32,
+    pub peak_gips: f64,
+    pub kernels: Vec<KernelCounters>,
+    pub roofline: Option<InstructionRoofline>,
+    pub plot_ascii: Option<String>,
+    pub plot_svg: Option<String>,
+}
+
+/// Service gauges + monotonic counters (the `/v1/status` endpoint and
+/// the integration tests' cache-hit assertions).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StatusResponse {
+    pub queries: u64,
+    pub cache_hits: u64,
+    pub replays: u64,
+    pub recordings: u64,
+    pub archive_hits: u64,
+    pub spills: u64,
+    pub shed: u64,
+    pub deadline_expired: u64,
+    pub cancelled: u64,
+    pub inflight: u64,
+    pub queued: u64,
+    pub jobs_done: u64,
+    pub max_inflight: u64,
+    pub queue_cap: u64,
+}
+
+/// Cancel the running attempt of one job (identified like a query).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CancelRequest {
+    pub gpu: String,
+    pub case: String,
+    pub steps: Option<u32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CancelResponse {
+    /// Whether a running attempt existed and was signalled.
+    pub cancelled: bool,
+    /// The job key addressed, `gpu-{case_key:016x}`.
+    pub job: String,
+}
+
+/// Run experiments by id (empty = the full paper sweep).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentsRequest {
+    pub ids: Vec<String>,
+}
+
+/// One experiment's outcome, compact enough for the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportSummary {
+    pub id: String,
+    pub title: String,
+    pub rendered: String,
+    pub checks_passed: u64,
+    pub checks_total: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentsResponse {
+    pub reports: Vec<ReportSummary>,
+}
+
+/// `trace-info --format=json` / `GET /v1/archives`: one row per
+/// archive, mirroring the text table's columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchiveEntry {
+    pub case: String,
+    pub version: u64,
+    pub group_size: u64,
+    pub dispatches: u64,
+    pub blocks: u64,
+    pub records: u64,
+    pub addr_words: u64,
+    pub file_bytes: u64,
+    pub case_key: u64,
+    pub compress_ratio: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceInfoResponse {
+    pub archives: Vec<ArchiveEntry>,
+}
+
+#[derive(Default)]
+struct Counters {
+    queries: AtomicU64,
+    cache_hits: AtomicU64,
+    replays: AtomicU64,
+    shed: AtomicU64,
+    deadline_expired: AtomicU64,
+    cancelled: AtomicU64,
+}
+
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Why a cancellable replay stopped early.
+enum ReplayErr {
+    Cancelled(Cancelled),
+    Stream(String),
+}
+
+impl From<Cancelled> for ReplayErr {
+    fn from(c: Cancelled) -> ReplayErr {
+        ReplayErr::Cancelled(c)
+    }
+}
+
+/// The analysis service: one [`Context`] (run + trace caches), one
+/// [`JobTable`], one [`Admission`] controller, shared by every
+/// frontend for the process lifetime.
+pub struct AnalysisService {
+    cfg: ServiceConfig,
+    ctx: Context,
+    jobs: JobTable,
+    admission: Arc<Admission>,
+    counters: Counters,
+}
+
+impl AnalysisService {
+    pub fn new(cfg: ServiceConfig) -> AnalysisService {
+        let ctx = Context::with_trace_dir(cfg.trace_dir.clone());
+        let admission =
+            Arc::new(Admission::new(cfg.max_inflight, cfg.queue_cap));
+        AnalysisService {
+            cfg,
+            ctx,
+            jobs: JobTable::new(),
+            admission,
+            counters: Counters::default(),
+        }
+    }
+
+    /// A service with all-default provisioning (the deprecated
+    /// `run_experiments` shims use this).
+    pub fn with_trace_dir(
+        trace_dir: Option<PathBuf>,
+    ) -> AnalysisService {
+        AnalysisService::new(ServiceConfig {
+            trace_dir,
+            ..ServiceConfig::default()
+        })
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// The shared run/trace cache (the batch sweep path reads runs
+    /// straight out of it).
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    fn resolve_gpu(gpu: &str) -> Result<GpuSpec, ServiceError> {
+        presets::by_name(gpu).ok_or_else(|| {
+            ServiceError::BadRequest(format!(
+                "unknown GPU '{gpu}' (v100|mi60|mi100)"
+            ))
+        })
+    }
+
+    fn resolve_case(
+        &self,
+        case: &str,
+        steps: Option<u32>,
+    ) -> Result<CaseConfig, ServiceError> {
+        let mut cfg = self
+            .cfg
+            .case_overrides
+            .iter()
+            .find(|c| c.name == case)
+            .cloned()
+            .or_else(|| CaseConfig::by_name(case))
+            .ok_or_else(|| {
+                ServiceError::BadRequest(format!(
+                    "unknown case '{case}' (lwfa|tweac)"
+                ))
+            })?;
+        if let Some(steps) = steps {
+            if steps == 0 {
+                return Err(ServiceError::BadRequest(
+                    "steps must be >= 1".to_string(),
+                ));
+            }
+            cfg.steps = steps;
+        }
+        Ok(cfg)
+    }
+
+    fn job_key(gpu: &GpuSpec, cfg: &CaseConfig) -> JobKey {
+        JobKey::new(
+            gpu.name,
+            archive::case_key(
+                &cfg.manifest_line(),
+                CaseTrace::BASE_GROUP_SIZE,
+                RUN_SEED,
+            ),
+        )
+    }
+
+    fn deadline_for(&self, deadline_ms: Option<u64>) -> Option<Instant> {
+        deadline_ms
+            .or(self.cfg.default_deadline_ms)
+            .map(|ms| Instant::now() + Duration::from_millis(ms))
+    }
+
+    /// Answer one roofline query. Cache hits return without touching
+    /// the admission controller; misses claim the job, acquire a run
+    /// slot, and replay cancellably.
+    pub fn query(
+        &self,
+        req: &QueryRequest,
+    ) -> Result<QueryResponse, ServiceError> {
+        bump(&self.counters.queries);
+        let spec = Self::resolve_gpu(&req.gpu)?;
+        let cfg = self.resolve_case(&req.case, req.steps)?;
+        let key = Self::job_key(&spec, &cfg);
+        let deadline = self.deadline_for(req.deadline_ms);
+        let run = self.run_case(
+            &key,
+            &spec,
+            &cfg,
+            deadline,
+            self.cfg.engine_threads,
+            true,
+        )?;
+        self.build_response(&spec, &cfg, key.case_key, &run, req)
+    }
+
+    /// Whether the *next* identical query would be a cache hit —
+    /// without running anything (the CLI's `--probe` / tests).
+    pub fn is_cached(&self, req: &QueryRequest) -> bool {
+        let Ok(spec) = Self::resolve_gpu(&req.gpu) else {
+            return false;
+        };
+        let Ok(cfg) = self.resolve_case(&req.case, req.steps) else {
+            return false;
+        };
+        let key = Self::job_key(&spec, &cfg);
+        self.jobs
+            .existing(&key)
+            .is_some_and(|j| j.done().is_some())
+    }
+
+    /// Signal cancellation of a running job's current attempt.
+    pub fn cancel(
+        &self,
+        req: &CancelRequest,
+    ) -> Result<CancelResponse, ServiceError> {
+        let spec = Self::resolve_gpu(&req.gpu)?;
+        let cfg = self.resolve_case(&req.case, req.steps)?;
+        let key = Self::job_key(&spec, &cfg);
+        let cancelled = self
+            .jobs
+            .existing(&key)
+            .and_then(|j| j.running_token())
+            .map(|t| {
+                t.cancel();
+                true
+            })
+            .unwrap_or(false);
+        Ok(CancelResponse {
+            cancelled,
+            job: key.to_string(),
+        })
+    }
+
+    /// Snapshot every counter and gauge.
+    pub fn status(&self) -> StatusResponse {
+        let c = &self.counters;
+        StatusResponse {
+            queries: c.queries.load(Ordering::Relaxed),
+            cache_hits: c.cache_hits.load(Ordering::Relaxed),
+            replays: c.replays.load(Ordering::Relaxed),
+            recordings: self.ctx.recordings() as u64,
+            archive_hits: self.ctx.archive_hits() as u64,
+            spills: self.ctx.spills() as u64,
+            shed: c.shed.load(Ordering::Relaxed),
+            deadline_expired: c.deadline_expired.load(Ordering::Relaxed),
+            cancelled: c.cancelled.load(Ordering::Relaxed),
+            inflight: self.admission.inflight() as u64,
+            queued: self.admission.queued() as u64,
+            jobs_done: self.jobs.done_count() as u64,
+            max_inflight: self.admission.max_inflight() as u64,
+            queue_cap: self.admission.queue_cap() as u64,
+        }
+    }
+
+    /// Scan the service's trace archive directory (the `/v1/archives`
+    /// endpoint); [`archive_info`] is the path-explicit CLI variant.
+    pub fn trace_info(&self) -> Result<TraceInfoResponse, ServiceError> {
+        let dir = self.cfg.trace_dir.as_deref().ok_or_else(|| {
+            ServiceError::BadRequest(
+                "service has no trace archive (start `rocline serve` \
+                 with --trace-dir)"
+                    .to_string(),
+            )
+        })?;
+        archive_info(dir)
+    }
+
+    /// Get (or compute) the replayed run for one job. `use_admission`
+    /// is false on the internal batch/prefetch path, which bounds
+    /// itself by the worker pool instead.
+    fn run_case(
+        &self,
+        key: &JobKey,
+        spec: &GpuSpec,
+        cfg: &CaseConfig,
+        deadline: Option<Instant>,
+        engine_threads: usize,
+        use_admission: bool,
+    ) -> Result<Arc<CaseRun>, ServiceError> {
+        let job = self.jobs.job(key);
+        loop {
+            let token = match deadline {
+                Some(d) => CancelToken::with_deadline(d),
+                None => CancelToken::new(),
+            };
+            match job.poll(token) {
+                Poll::Hit(run) => {
+                    bump(&self.counters.cache_hits);
+                    return Ok(run);
+                }
+                Poll::Claimed(token) => {
+                    return self.execute_claim(
+                        &job,
+                        token,
+                        spec,
+                        cfg,
+                        deadline,
+                        engine_threads,
+                        use_admission,
+                    );
+                }
+                Poll::Running => match job.wait(deadline) {
+                    WaitOutcome::Done(run) => {
+                        bump(&self.counters.cache_hits);
+                        return Ok(run);
+                    }
+                    WaitOutcome::Failed(why) => {
+                        return Err(ServiceError::Internal(why));
+                    }
+                    WaitOutcome::Claimable => continue,
+                    WaitOutcome::Deadline => {
+                        bump(&self.counters.deadline_expired);
+                        return Err(ServiceError::DeadlineExceeded);
+                    }
+                },
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn execute_claim(
+        &self,
+        job: &Job,
+        token: CancelToken,
+        spec: &GpuSpec,
+        cfg: &CaseConfig,
+        deadline: Option<Instant>,
+        engine_threads: usize,
+        use_admission: bool,
+    ) -> Result<Arc<CaseRun>, ServiceError> {
+        let mut guard = super::job::JobRunGuard::new(job);
+        let _permit = if use_admission {
+            match Admission::acquire(&self.admission, deadline) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    job.release();
+                    guard.disarm();
+                    return Err(match e {
+                        AdmitError::Busy { queued, queue_cap } => {
+                            bump(&self.counters.shed);
+                            ServiceError::Busy { queued, queue_cap }
+                        }
+                        AdmitError::DeadlineExceeded => {
+                            bump(&self.counters.deadline_expired);
+                            ServiceError::DeadlineExceeded
+                        }
+                    });
+                }
+            }
+        } else {
+            None
+        };
+        // deadline/cancel check *before* the (non-cancellable)
+        // recording step: an already-expired deadline must fail
+        // without recording anything
+        if let Err(c) = token.checkpoint() {
+            job.release();
+            guard.disarm();
+            return Err(self.cancel_error(c));
+        }
+        // CI contract, same semantics as the batch sweep: against a
+        // pre-populated archive a query must not record live
+        if runner::require_archive_hit() {
+            if let Some(dir) = self.cfg.trace_dir.as_deref() {
+                let path = CaseTrace::archive_path(dir, cfg);
+                if !path.exists() {
+                    let msg = format!(
+                        "ROCLINE_REQUIRE_ARCHIVE_HIT=1: archive file \
+                         {} is missing for case '{}' (stale cache key \
+                         or incomplete `rocline record`?)",
+                        path.display(),
+                        cfg.name
+                    );
+                    job.fail(msg.clone());
+                    guard.disarm();
+                    return Err(ServiceError::Internal(msg));
+                }
+            }
+        }
+        let stored = self.ctx.store().get_or_record(cfg);
+        match replay_cancellable(
+            spec.clone(),
+            &stored,
+            engine_threads,
+            &token,
+        ) {
+            Ok(run) => {
+                let run = Arc::new(run);
+                bump(&self.counters.replays);
+                job.finish(run.clone());
+                guard.disarm();
+                // canonical configs also seed the experiment sweep's
+                // run cache — a warm server answers `reproduce` from
+                // the same jobs
+                if CaseConfig::by_name(&cfg.name).as_ref() == Some(cfg)
+                {
+                    self.ctx.seed_run(
+                        &job.key.gpu,
+                        &cfg.name,
+                        run.clone(),
+                    );
+                }
+                Ok(run)
+            }
+            Err(ReplayErr::Cancelled(c)) => {
+                job.release();
+                guard.disarm();
+                Err(self.cancel_error(c))
+            }
+            Err(ReplayErr::Stream(msg)) => {
+                let msg = format!("streaming replay failed: {msg}");
+                job.fail(msg.clone());
+                guard.disarm();
+                Err(ServiceError::Internal(msg))
+            }
+        }
+    }
+
+    fn cancel_error(&self, c: Cancelled) -> ServiceError {
+        match c {
+            Cancelled::Explicit => {
+                bump(&self.counters.cancelled);
+                ServiceError::Cancelled
+            }
+            Cancelled::DeadlineExpired => {
+                bump(&self.counters.deadline_expired);
+                ServiceError::DeadlineExceeded
+            }
+        }
+    }
+
+    fn build_response(
+        &self,
+        spec: &GpuSpec,
+        cfg: &CaseConfig,
+        case_key: u64,
+        run: &CaseRun,
+        req: &QueryRequest,
+    ) -> Result<QueryResponse, ServiceError> {
+        let kernels = kernel_counters(spec, &run.session);
+        let (roofline, plot_a, plot_s) = if req.kernel.is_some()
+            || req.plots
+        {
+            let kernel =
+                req.kernel.as_deref().unwrap_or("ComputeCurrent");
+            let irm = roofline_for(spec, &run.session, kernel)?;
+            let (a, s) = if req.plots {
+                (
+                    Some(plot_ascii::render_ascii(&irm)),
+                    Some(plot_svg::render_svg(&irm)),
+                )
+            } else {
+                (None, None)
+            };
+            (Some(irm), a, s)
+        } else {
+            (None, None, None)
+        };
+        Ok(QueryResponse {
+            gpu: spec.name.to_string(),
+            case: cfg.name.clone(),
+            steps: cfg.steps,
+            case_key,
+            group_size: spec.group_size,
+            peak_gips: spec.peak_gips(),
+            kernels,
+            roofline,
+            plot_ascii: plot_a,
+            plot_svg: plot_s,
+        })
+    }
+
+    /// Run experiments end-to-end: prefetch the needed profiled runs
+    /// through the job machinery (shared with every query), assemble
+    /// every experiment on the worker pool, render + write reports.
+    /// Output side effects (stdout progress, `outdir` files) are
+    /// byte-identical to the old `run_experiments_in` free function.
+    pub fn run_reports(
+        &self,
+        ids: &[String],
+    ) -> Result<Vec<Report>, ServiceError> {
+        for id in ids {
+            if !runner::EXPERIMENT_IDS.contains(&id.as_str()) {
+                return Err(ServiceError::BadRequest(format!(
+                    "unknown experiment '{id}' (have: {})",
+                    runner::EXPERIMENT_IDS.join(", ")
+                )));
+            }
+        }
+        self.run_reports_inner(ids)
+            .map_err(|e| ServiceError::Internal(format!("{e:#}")))
+    }
+
+    /// [`AnalysisService::run_reports`] summarized for the wire.
+    pub fn run_reports_wire(
+        &self,
+        req: &ExperimentsRequest,
+    ) -> Result<ExperimentsResponse, ServiceError> {
+        let ids: Vec<String> = if req.ids.is_empty() {
+            runner::EXPERIMENT_IDS
+                .iter()
+                .map(|s| s.to_string())
+                .collect()
+        } else {
+            req.ids.clone()
+        };
+        let reports = self.run_reports(&ids)?;
+        Ok(ExperimentsResponse {
+            reports: reports
+                .iter()
+                .map(|r| ReportSummary {
+                    id: r.id.clone(),
+                    title: r.title.clone(),
+                    rendered: r.render(),
+                    checks_passed: r
+                        .checks
+                        .iter()
+                        .filter(|c| c.passed)
+                        .count()
+                        as u64,
+                    checks_total: r.checks.len() as u64,
+                })
+                .collect(),
+        })
+    }
+
+    fn run_reports_inner(
+        &self,
+        ids: &[String],
+    ) -> anyhow::Result<Vec<Report>> {
+        let mut needed: Vec<(&str, &str)> = Vec::new();
+        for id in ids {
+            for pair in runner::runs_needed(id) {
+                if !needed.contains(&pair) {
+                    needed.push(pair);
+                }
+            }
+        }
+        // deltas, not totals: a warm service accumulates counters
+        // across calls, but each sweep's contract is about *its own*
+        // recordings (for a fresh service the two are identical, so
+        // the deprecated shims print exactly the old numbers)
+        let rec0 = self.ctx.recordings();
+        let hit0 = self.ctx.archive_hits();
+        let spill0 = self.ctx.spills();
+        if !needed.is_empty() {
+            // fail fast under the CI contract: a missing archive file
+            // means the sweep is doomed to record live — surface that
+            // in milliseconds instead of after the full prefetch
+            // (corrupt files are still caught by the post-sweep check
+            // below)
+            if let Some(dir) = self.cfg.trace_dir.as_deref() {
+                if runner::require_archive_hit() {
+                    let mut cases: Vec<&str> =
+                        needed.iter().map(|(_, c)| *c).collect();
+                    cases.sort_unstable();
+                    cases.dedup();
+                    for case in cases {
+                        let cfg = CaseConfig::by_name(case)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("unknown case {case}")
+                            })?;
+                        let path = CaseTrace::archive_path(dir, &cfg);
+                        anyhow::ensure!(
+                            path.exists(),
+                            "ROCLINE_REQUIRE_ARCHIVE_HIT=1: archive \
+                             file {} is missing for case '{case}' \
+                             (stale cache key or incomplete `rocline \
+                             record`?)",
+                            path.display()
+                        );
+                    }
+                }
+            }
+            eprintln!(
+                "prefetching {} profiled run(s): {}",
+                needed.len(),
+                needed
+                    .iter()
+                    .map(|(g, c)| format!("{g}/{c}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            self.prefetch(&needed)?;
+            eprintln!(
+                "recorded {} case trace(s) live ({} archive hit(s), \
+                 {} spilled); {} run(s) replayed them zero-copy",
+                self.ctx.recordings() - rec0,
+                self.ctx.archive_hits() - hit0,
+                self.ctx.spills() - spill0,
+                needed.len()
+            );
+            // CI contract, enforced fail-closed in-process (not by
+            // log scraping): against a pre-populated archive a sweep
+            // must not record anything live
+            if self.cfg.trace_dir.is_some()
+                && runner::require_archive_hit()
+            {
+                anyhow::ensure!(
+                    self.ctx.recordings() - rec0 == 0,
+                    "ROCLINE_REQUIRE_ARCHIVE_HIT=1: {} case trace(s) \
+                     were recorded live despite --trace-dir (archive \
+                     miss or stale key? pre-populate with `rocline \
+                     record`)",
+                    self.ctx.recordings() - rec0
+                );
+            }
+        }
+
+        // experiment assembly (stream/membench simulate whole
+        // benchmark suites) also fans out one job per experiment id
+        // on the shared worker pool
+        let ctx_ref = &self.ctx;
+        let slots: Vec<
+            std::sync::Mutex<Option<anyhow::Result<Report>>>,
+        > = ids.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        crate::util::WorkerPool::global().scope(|s| {
+            for (slot, id) in slots.iter().zip(ids.iter()) {
+                s.spawn(move || {
+                    *slot.lock().unwrap() =
+                        Some(runner::run_one(ctx_ref, id));
+                });
+            }
+        });
+        let results: Vec<anyhow::Result<Report>> = slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("experiment worker finished")
+            })
+            .collect();
+
+        let mut reports = Vec::new();
+        for rep in results {
+            let rep = rep?;
+            if !self.cfg.quiet {
+                println!("{}", rep.render());
+            }
+            rep.write(&self.cfg.outdir)?;
+            reports.push(rep);
+        }
+
+        // summary
+        let total: usize =
+            reports.iter().map(|r| r.checks.len()).sum();
+        let passed: usize = reports
+            .iter()
+            .map(|r| r.checks.iter().filter(|c| c.passed).count())
+            .sum();
+        if !self.cfg.quiet {
+            println!(
+                "== {}/{} shape checks passed across {} \
+                 experiment(s); reports in {} ==",
+                passed,
+                total,
+                reports.len(),
+                self.cfg.outdir.display()
+            );
+        }
+        Ok(reports)
+    }
+
+    /// Pre-execute the needed `(gpu, case)` runs in parallel through
+    /// the job machinery, dividing the replay-engine worker budget
+    /// across the concurrent runs exactly like the old
+    /// `Context::prefetch` — plus job dedup with any concurrent
+    /// queries.
+    fn prefetch(
+        &self,
+        pairs: &[(&str, &str)],
+    ) -> anyhow::Result<()> {
+        let budget = (pool::default_threads() / pairs.len().max(1))
+            .max(1);
+        let errs: Vec<std::sync::Mutex<Option<ServiceError>>> =
+            pairs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        crate::util::WorkerPool::global().scope(|s| {
+            for (slot, &(gpu, case)) in errs.iter().zip(pairs.iter()) {
+                s.spawn(move || {
+                    let r = Self::resolve_gpu(gpu)
+                        .and_then(|spec| {
+                            let cfg = self.resolve_case(case, None)?;
+                            let key = Self::job_key(&spec, &cfg);
+                            self.run_case(
+                                &key, &spec, &cfg, None, budget,
+                                false,
+                            )
+                        })
+                        .err();
+                    *slot.lock().unwrap() = r;
+                });
+            }
+        });
+        for e in errs {
+            if let Some(e) = e.into_inner().unwrap() {
+                anyhow::bail!("{e}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Replay whichever tier the store resolved, with a cancellation
+/// checkpoint between dispatches — the cancellable twin of
+/// [`CaseRun::from_stored`], bit-identical on completion.
+fn replay_cancellable(
+    spec: GpuSpec,
+    stored: &StoredTrace,
+    engine_threads: usize,
+    token: &CancelToken,
+) -> Result<CaseRun, ReplayErr> {
+    match stored {
+        StoredTrace::Live(t) => {
+            let mut session = ProfileSession::sharded_with_threads(
+                spec.clone(),
+                engine_threads,
+            );
+            let dispatches = t.dispatches_for(spec.group_size);
+            for d in dispatches.iter() {
+                token.checkpoint()?;
+                session.profile_blocks_scaled(
+                    &d.kernel,
+                    &d.blocks[..],
+                    spec.isa_expansion,
+                );
+            }
+            Ok(CaseRun {
+                spec,
+                cfg: t.cfg.clone(),
+                final_field_energy: t.final_field_energy,
+                final_kinetic_energy: t.final_kinetic_energy,
+                session,
+            })
+        }
+        StoredTrace::Mapped { cfg, trace } => {
+            let mut session = ProfileSession::sharded_with_threads(
+                spec.clone(),
+                engine_threads,
+            );
+            if spec.group_size == trace.base_group_size() {
+                for d in trace.dispatches() {
+                    token.checkpoint()?;
+                    session.profile_blocks_scaled(
+                        &d.kernel,
+                        &d.blocks[..],
+                        spec.isa_expansion,
+                    );
+                }
+            } else {
+                let halved =
+                    trace.halved_dispatches(spec.group_size);
+                for d in halved.iter() {
+                    token.checkpoint()?;
+                    session.profile_blocks_scaled(
+                        &d.kernel,
+                        &d.blocks[..],
+                        spec.isa_expansion,
+                    );
+                }
+            }
+            Ok(CaseRun {
+                spec,
+                cfg: cfg.clone(),
+                final_field_energy: trace.final_field_energy(),
+                final_kinetic_energy: trace.final_kinetic_energy(),
+                session,
+            })
+        }
+        StoredTrace::Streamed { cfg, trace } => {
+            let mut session = ProfileSession::sharded_with_threads(
+                spec.clone(),
+                engine_threads,
+            );
+            let base = trace.base_group_size();
+            if spec.group_size != base {
+                assert_eq!(
+                    spec.group_size * 2,
+                    base,
+                    "archived at group size {base}, cannot replay \
+                     at {}",
+                    spec.group_size
+                );
+            }
+            // the streaming closure cannot abort the replay loop, so
+            // once cancelled it skips the (expensive) profiling work
+            // and the post-replay checkpoint surfaces the error
+            trace
+                .replay(|d| {
+                    if token.is_cancelled() {
+                        return;
+                    }
+                    if spec.group_size == base {
+                        session.profile_blocks_scaled(
+                            &d.kernel,
+                            &d.blocks[..],
+                            spec.isa_expansion,
+                        );
+                    } else {
+                        let halved = crate::trace::recorded::split_half_groups(
+                            &d.blocks[..],
+                            spec.group_size,
+                        );
+                        session.profile_blocks_scaled(
+                            &d.kernel,
+                            &halved[..],
+                            spec.isa_expansion,
+                        );
+                    }
+                })
+                .map_err(|e| ReplayErr::Stream(format!("{e:#}")))?;
+            token.checkpoint()?;
+            Ok(CaseRun {
+                spec,
+                cfg: cfg.clone(),
+                final_field_energy: trace.final_field_energy(),
+                final_kinetic_energy: trace.final_kinetic_energy(),
+                session,
+            })
+        }
+    }
+}
+
+/// Per-kernel counters with the paper's per-invocation aggregation —
+/// the same arithmetic [`InstructionRoofline::from_rocprof`] /
+/// `from_nvprof_bytes` apply, for every kernel at once.
+fn kernel_counters(
+    spec: &GpuSpec,
+    session: &ProfileSession,
+) -> Vec<KernelCounters> {
+    match spec.vendor {
+        Vendor::Amd => RocprofTool::reports(session)
+            .iter()
+            .map(|r| {
+                let inv = r.invocations.max(1);
+                let insts = r.total.instructions(spec) / inv;
+                let bytes_r = r.total.bytes_read() / inv as f64;
+                let bytes_w = r.total.bytes_written() / inv as f64;
+                let runtime = r.mean_duration_s;
+                KernelCounters {
+                    kernel: r.kernel.clone(),
+                    invocations: r.invocations,
+                    instructions_per_invocation: insts,
+                    bytes_read: bytes_r,
+                    bytes_written: bytes_w,
+                    mean_duration_s: runtime,
+                    intensity_inst_per_byte:
+                        eq::eq2_intensity_performance(
+                            insts,
+                            spec.group_size,
+                            bytes_r,
+                            bytes_w,
+                            runtime,
+                        ),
+                    achieved_gips: eq::eq4_achieved_gips(
+                        insts,
+                        spec.group_size,
+                        runtime,
+                    ),
+                    counters: vec![
+                        ("FETCH_SIZE".into(), r.total.fetch_size_kb),
+                        ("WRITE_SIZE".into(), r.total.write_size_kb),
+                        (
+                            "SQ_INSTS_VALU".into(),
+                            r.total.sq_insts_valu as f64,
+                        ),
+                        (
+                            "SQ_INSTS_SALU".into(),
+                            r.total.sq_insts_salu as f64,
+                        ),
+                        ("DurationNs".into(), r.total.duration_ns),
+                    ],
+                }
+            })
+            .collect(),
+        Vendor::Nvidia => NvprofTool::default()
+            .reports(session)
+            .iter()
+            .map(|r| {
+                let inv = r.invocations.max(1);
+                let insts = r.total.inst_executed / inv;
+                let bytes_r =
+                    r.total.dram_read_bytes() / inv as f64;
+                let bytes_w =
+                    r.total.dram_write_bytes() / inv as f64;
+                let runtime = r.mean_duration_s;
+                KernelCounters {
+                    kernel: r.kernel.clone(),
+                    invocations: r.invocations,
+                    instructions_per_invocation: insts,
+                    bytes_read: bytes_r,
+                    bytes_written: bytes_w,
+                    mean_duration_s: runtime,
+                    intensity_inst_per_byte:
+                        eq::eq2_intensity_performance(
+                            insts,
+                            spec.group_size,
+                            bytes_r,
+                            bytes_w,
+                            runtime,
+                        ),
+                    achieved_gips: eq::eq4_achieved_gips(
+                        insts,
+                        spec.group_size,
+                        runtime,
+                    ),
+                    counters: vec![
+                        (
+                            "inst_executed".into(),
+                            r.total.inst_executed as f64,
+                        ),
+                        (
+                            "gld_transactions".into(),
+                            r.total.gld_transactions as f64,
+                        ),
+                        (
+                            "gst_transactions".into(),
+                            r.total.gst_transactions as f64,
+                        ),
+                        (
+                            "l2_read_transactions".into(),
+                            r.total.l2_read_transactions as f64,
+                        ),
+                        (
+                            "l2_write_transactions".into(),
+                            r.total.l2_write_transactions as f64,
+                        ),
+                        (
+                            "dram_read_transactions".into(),
+                            r.total.dram_read_transactions as f64,
+                        ),
+                        (
+                            "dram_write_transactions".into(),
+                            r.total.dram_write_transactions as f64,
+                        ),
+                    ],
+                }
+            })
+            .collect(),
+    }
+}
+
+/// Build the roofline model for one kernel — identical recipe to the
+/// `roofline` CLI command (AMD: single HBM ceiling at the
+/// BabelStream-measured copy bandwidth; NVIDIA: Ding & Williams'
+/// transaction-unit model).
+fn roofline_for(
+    spec: &GpuSpec,
+    session: &ProfileSession,
+    kernel: &str,
+) -> Result<InstructionRoofline, ServiceError> {
+    match spec.vendor {
+        Vendor::Amd => {
+            let report = RocprofTool::reports(session)
+                .into_iter()
+                .find(|r| r.kernel == kernel)
+                .ok_or_else(|| {
+                    ServiceError::BadRequest(format!(
+                        "no kernel {kernel}"
+                    ))
+                })?;
+            let copy = DeviceStream::new(spec.clone(), 1 << 25)
+                .run_op("copy", 1);
+            Ok(InstructionRoofline::from_rocprof(
+                spec,
+                &report,
+                copy.mbs / 1000.0,
+            ))
+        }
+        Vendor::Nvidia => {
+            let report = NvprofTool::default()
+                .reports(session)
+                .into_iter()
+                .find(|r| r.kernel == kernel)
+                .ok_or_else(|| {
+                    ServiceError::BadRequest(format!(
+                        "no kernel {kernel}"
+                    ))
+                })?;
+            Ok(InstructionRoofline::from_nvprof_txn(spec, &report))
+        }
+    }
+}
+
+/// Scan an archive directory into the wire shape (`trace-info
+/// --format=json` shares this with the server's `/v1/archives`).
+pub fn archive_info(
+    dir: &Path,
+) -> Result<TraceInfoResponse, ServiceError> {
+    let infos = if dir.is_dir() {
+        ArchiveInfo::scan_dir(dir)
+    } else {
+        ArchiveInfo::scan(dir).map(|i| vec![i])
+    }
+    .map_err(|e| ServiceError::Internal(format!("{e:#}")))?;
+    Ok(TraceInfoResponse {
+        archives: infos
+            .iter()
+            .map(|i| ArchiveEntry {
+                case: i.case_name().to_string(),
+                version: u64::from(i.version),
+                group_size: u64::from(i.base_group_size),
+                dispatches: i.dispatches as u64,
+                blocks: i.blocks,
+                records: i.records,
+                addr_words: i.addr_words,
+                file_bytes: i.file_bytes,
+                case_key: i.case_key,
+                compress_ratio: i.compress_ratio(),
+            })
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_case() -> CaseConfig {
+        let mut cfg = CaseConfig::lwfa();
+        cfg.name = "tiny".to_string();
+        cfg.nx = 8;
+        cfg.ny = 8;
+        cfg.nz = 8;
+        cfg.ppc = 2;
+        cfg.steps = 2;
+        cfg
+    }
+
+    fn tiny_service() -> AnalysisService {
+        AnalysisService::new(ServiceConfig {
+            engine_threads: 2,
+            case_overrides: vec![tiny_case()],
+            ..ServiceConfig::default()
+        })
+    }
+
+    fn tiny_query(gpu: &str) -> QueryRequest {
+        QueryRequest::new(gpu, "tiny")
+    }
+
+    #[test]
+    fn unknown_gpu_and_case_are_bad_requests() {
+        let svc = tiny_service();
+        let err =
+            svc.query(&QueryRequest::new("rx580", "lwfa")).unwrap_err();
+        assert_eq!(err.http_status(), 400);
+        assert!(err.to_string().contains("unknown GPU"), "{err}");
+        let err =
+            svc.query(&QueryRequest::new("mi100", "nope")).unwrap_err();
+        assert!(err.to_string().contains("unknown case"), "{err}");
+        let mut zero = QueryRequest::new("mi100", "lwfa");
+        zero.steps = Some(0);
+        let err = svc.query(&zero).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+    }
+
+    #[test]
+    fn query_replays_once_then_hits_cache() {
+        let svc = tiny_service();
+        let q = tiny_query("mi100");
+        let first = svc.query(&q).unwrap();
+        assert_eq!(first.gpu, "MI100");
+        assert_eq!(first.steps, 2);
+        assert_eq!(first.kernels.len(), 5);
+        assert!(first.kernels.iter().all(|k| k.invocations == 2));
+        let st = svc.status();
+        assert_eq!(st.queries, 1);
+        assert_eq!(st.replays, 1);
+        assert_eq!(st.cache_hits, 0);
+        assert_eq!(st.recordings, 1);
+        assert!(svc.is_cached(&q));
+
+        let second = svc.query(&q).unwrap();
+        assert_eq!(second.case_key, first.case_key);
+        assert_eq!(second.kernels, first.kernels);
+        let st = svc.status();
+        assert_eq!(st.queries, 2);
+        assert_eq!(st.replays, 1, "warm query must not replay");
+        assert_eq!(st.cache_hits, 1);
+        assert_eq!(st.recordings, 1, "warm query must not record");
+        assert_eq!(st.jobs_done, 1);
+        assert_eq!(st.inflight, 0);
+    }
+
+    #[test]
+    fn different_presets_share_one_recording() {
+        let svc = tiny_service();
+        let a = svc.query(&tiny_query("mi60")).unwrap();
+        let b = svc.query(&tiny_query("v100")).unwrap();
+        assert_eq!(a.case_key, b.case_key, "same case, same content");
+        assert_ne!(a.gpu, b.gpu);
+        let st = svc.status();
+        assert_eq!(st.recordings, 1, "record once, replay everywhere");
+        assert_eq!(st.replays, 2);
+        // V100 derives half groups from the 64-wide base recording
+        assert_eq!(b.group_size, 32);
+    }
+
+    #[test]
+    fn expired_deadline_fails_before_recording_and_is_resumable() {
+        let svc = tiny_service();
+        let mut q = tiny_query("mi100");
+        q.deadline_ms = Some(0);
+        let err = svc.query(&q).unwrap_err();
+        assert_eq!(err, ServiceError::DeadlineExceeded);
+        assert_eq!(err.http_status(), 504);
+        let st = svc.status();
+        assert_eq!(st.recordings, 0, "must fail before recording");
+        assert_eq!(st.deadline_expired, 1);
+        assert_eq!(st.inflight, 0, "slot freed");
+        // the job is idle again — the same query without a deadline
+        // resumes and succeeds
+        q.deadline_ms = None;
+        let resp = svc.query(&q).unwrap();
+        assert_eq!(resp.kernels.len(), 5);
+        assert_eq!(svc.status().replays, 1);
+    }
+
+    #[test]
+    fn cancel_addresses_the_job_key() {
+        let svc = tiny_service();
+        let req = CancelRequest {
+            gpu: "mi100".into(),
+            case: "lwfa".into(),
+            steps: Some(1),
+        };
+        // nothing running: addressed but not cancelled
+        let resp = svc.cancel(&req).unwrap();
+        assert!(!resp.cancelled);
+        assert!(resp.job.starts_with("mi100-"), "{}", resp.job);
+        let err = svc
+            .cancel(&CancelRequest {
+                gpu: "nope".into(),
+                case: "lwfa".into(),
+                steps: None,
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+    }
+
+    #[test]
+    fn query_with_plots_builds_roofline() {
+        let svc = tiny_service();
+        let mut q = tiny_query("v100");
+        q.plots = true;
+        let resp = svc.query(&q).unwrap();
+        let irm = resp.roofline.expect("roofline requested");
+        assert_eq!(irm.ceilings.len(), 3, "NVIDIA txn model");
+        assert!(resp.plot_ascii.unwrap().contains("GIPS"));
+        assert!(resp.plot_svg.unwrap().starts_with("<svg"));
+        // unknown kernel is a loud bad request
+        let mut bad = tiny_query("v100");
+        bad.kernel = Some("NoSuchKernel".into());
+        let err = svc.query(&bad).unwrap_err();
+        assert!(err.to_string().contains("no kernel"), "{err}");
+    }
+
+    #[test]
+    fn run_reports_validates_ids() {
+        let svc = tiny_service();
+        let err = svc
+            .run_reports(&["nope".to_string()])
+            .unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        assert!(
+            err.to_string().contains("unknown experiment"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn cheap_experiments_run_through_the_service() {
+        let svc = AnalysisService::new(ServiceConfig {
+            outdir: std::env::temp_dir().join(format!(
+                "rocline-svc-test-{}",
+                std::process::id()
+            )),
+            ..ServiceConfig::default()
+        });
+        let reports = svc
+            .run_reports(&["peaks".to_string()])
+            .unwrap();
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].passed());
+        let wire = svc
+            .run_reports_wire(&ExperimentsRequest {
+                ids: vec!["peaks".to_string()],
+            })
+            .unwrap();
+        assert_eq!(wire.reports[0].id, "peaks");
+        assert!(wire.reports[0].checks_total > 0);
+        let _ = std::fs::remove_dir_all(&svc.cfg.outdir);
+    }
+}

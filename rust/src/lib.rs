@@ -14,7 +14,16 @@
 //! * **workloads & harness** — [`pic`] (the PIConGPU-like plasma code),
 //!   [`babelstream`], [`gpumembench`], [`runtime`] (PJRT execution of the
 //!   AOT artifacts), [`coordinator`] (the experiments that regenerate
-//!   every paper table and figure), [`cli`].
+//!   every paper table and figure, behind the job-oriented
+//!   [`coordinator::AnalysisService`]), [`serve`] (the `rocline serve`
+//!   HTTP daemon + JSON wire codec), [`cli`].
+//!
+//! The stable public surface for programmatic use is
+//! [`coordinator::AnalysisService`] with its typed request/response
+//! structs ([`coordinator::QueryRequest`] → [`coordinator::QueryResponse`]
+//! etc.), plus [`coordinator::TraceStore`] and [`arch::presets`]; the
+//! old `coordinator::run_experiments*` free functions are deprecated
+//! shims over the service.
 
 // Lint policy (see ci/run.sh): clippy runs with `-D warnings`;
 // correctness lints are load-bearing, but these style families fight
@@ -41,6 +50,7 @@ pub mod profiler;
 pub mod roofline;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod timing;
 pub mod trace;
 pub mod util;

@@ -1,0 +1,287 @@
+//! Minimal HTTP/1.1 over `std::net` — just enough protocol for a
+//! localhost JSON service: one request per connection
+//! (`Connection: close`), `Content-Length` bodies, no chunking, no
+//! TLS, no keep-alive. Both the server loop and the CLI's `--url`
+//! client mode live here so they can never disagree about framing.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Largest request body we accept (a query request is < 1 KiB; this
+/// bound just stops a broken client from making the server buffer
+/// without limit).
+pub const MAX_BODY_BYTES: usize = 4 << 20;
+
+/// One parsed request: method + path + body. Header names are
+/// lowercased at parse time.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one request from a connection. `Ok(None)` means the peer
+/// closed before sending a request line (a health-check poke, not an
+/// error).
+pub fn read_request(
+    stream: &mut BufReader<TcpStream>,
+) -> Result<Option<Request>, String> {
+    let mut line = String::new();
+    stream
+        .read_line(&mut line)
+        .map_err(|e| format!("read request line: {e}"))?;
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or("empty request line")?
+        .to_ascii_uppercase();
+    let path = parts
+        .next()
+        .ok_or_else(|| format!("bad request line {line:?}"))?
+        .to_string();
+    let mut headers = Vec::new();
+    loop {
+        let mut hl = String::new();
+        stream
+            .read_line(&mut hl)
+            .map_err(|e| format!("read header: {e}"))?;
+        let hl = hl.trim_end_matches(['\r', '\n']);
+        if hl.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = hl.split_once(':') {
+            headers.push((
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            ));
+        }
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| {
+            v.parse().map_err(|_| format!("bad Content-Length {v:?}"))
+        })
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        return Err(format!("body too large ({len} bytes)"));
+    }
+    let mut body = vec![0u8; len];
+    stream
+        .read_exact(&mut body)
+        .map_err(|e| format!("read body: {e}"))?;
+    let body = String::from_utf8(body)
+        .map_err(|_| "non-UTF-8 request body".to_string())?;
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete JSON response and flush. `extra_headers` are
+/// emitted verbatim after the standard ones.
+pub fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        status_reason(status),
+        body.len()
+    )?;
+    for (name, value) in extra_headers {
+        write!(stream, "{name}: {value}\r\n")?;
+    }
+    write!(stream, "\r\n{body}")?;
+    stream.flush()
+}
+
+/// An `http://host:port/path` URL split into connectable pieces.
+pub fn parse_url(url: &str) -> Result<(String, String), String> {
+    let rest = url.strip_prefix("http://").ok_or_else(|| {
+        format!("unsupported URL '{url}' (expected http://host:port)")
+    })?;
+    let (addr, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    if addr.is_empty() {
+        return Err(format!("no host in URL '{url}'"));
+    }
+    Ok((addr.to_string(), path.to_string()))
+}
+
+/// A response as the client sees it: status + headers + body.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn request(
+    method: &str,
+    url: &str,
+    body: Option<&str>,
+) -> Result<ClientResponse, String> {
+    let (addr, path) = parse_url(url)?;
+    let stream = TcpStream::connect(&addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| format!("clone stream: {e}"))?;
+    let body = body.unwrap_or("");
+    write!(
+        writer,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .map_err(|e| format!("send request: {e}"))?;
+    writer.flush().map_err(|e| format!("send request: {e}"))?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader
+        .read_line(&mut status_line)
+        .map_err(|e| format!("read status line: {e}"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad status line {status_line:?}"))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut hl = String::new();
+        reader
+            .read_line(&mut hl)
+            .map_err(|e| format!("read header: {e}"))?;
+        let hl = hl.trim_end_matches(['\r', '\n']);
+        if hl.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = hl.split_once(':') {
+            headers.push((
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            ));
+        }
+    }
+    // Connection: close framing — the body runs to EOF (the server
+    // also sends Content-Length, but EOF is the simpler invariant)
+    let mut body = String::new();
+    reader
+        .read_to_string(&mut body)
+        .map_err(|e| format!("read body: {e}"))?;
+    Ok(ClientResponse { status, headers, body })
+}
+
+/// POST a JSON body; returns whatever the server said (any status).
+pub fn post(url: &str, body: &str) -> Result<ClientResponse, String> {
+    request("POST", url, Some(body))
+}
+
+/// GET; returns whatever the server said (any status).
+pub fn get(url: &str) -> Result<ClientResponse, String> {
+    request("GET", url, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn parse_url_splits_addr_and_path() {
+        assert_eq!(
+            parse_url("http://127.0.0.1:8080/v1/status").unwrap(),
+            ("127.0.0.1:8080".to_string(), "/v1/status".to_string())
+        );
+        assert_eq!(
+            parse_url("http://localhost:1234").unwrap().1,
+            "/"
+        );
+        assert!(parse_url("https://x/").is_err());
+        assert!(parse_url("http:///nope").is_err());
+    }
+
+    #[test]
+    fn loopback_request_response_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader =
+                BufReader::new(stream.try_clone().unwrap());
+            let req = read_request(&mut reader).unwrap().unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/v1/echo");
+            assert_eq!(req.header("content-type"), Some("application/json"));
+            let mut writer = stream;
+            write_response(
+                &mut writer,
+                200,
+                &[("X-Rocline-Cache", "hit")],
+                &req.body,
+            )
+            .unwrap();
+        });
+        let resp = post(
+            &format!("http://{addr}/v1/echo"),
+            r#"{"ping":1}"#,
+        )
+        .unwrap();
+        server.join().unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, r#"{"ping":1}"#);
+        assert_eq!(resp.header("x-rocline-cache"), Some("hit"));
+        assert_eq!(
+            resp.header("content-type"),
+            Some("application/json")
+        );
+    }
+}

@@ -1,0 +1,467 @@
+//! A dependency-free JSON document model: parse, build, render.
+//!
+//! The wire format of the whole service layer rides on this one file,
+//! so two properties are load-bearing:
+//!
+//! * **Insertion-ordered objects** — [`Json::Obj`] keeps keys in the
+//!   order they were inserted, so a response type always renders its
+//!   fields in declaration order and the `serve` daemon and the batch
+//!   CLI emit byte-identical documents.
+//! * **Raw number lexemes** — [`Json::Num`] stores the number as the
+//!   literal text. Building from `u64` keeps full 64-bit precision
+//!   (no silent round-trip through `f64`), and re-rendering a parsed
+//!   document reproduces the original lexeme.
+
+use std::fmt::Write as _;
+
+/// One JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// A number kept as its literal lexeme (e.g. `"42"`, `"0.125"`).
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Key/value pairs in insertion order (no sorting, no dedup).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// An exact unsigned integer (no f64 round-trip).
+    pub fn u64(v: u64) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    /// A finite float via Rust's shortest-roundtrip `Display`;
+    /// non-finite values have no JSON spelling and become `null`.
+    pub fn f64(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(format!("{v}"))
+        } else {
+            Json::Null
+        }
+    }
+
+    pub fn str(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Start an empty object (chain with [`Json::set`]).
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Append `key: value` to an object (builder style). Panics on
+    /// non-objects — a codec bug, not a runtime condition.
+    pub fn set(mut self, key: &str, value: Json) -> Json {
+        match &mut self {
+            Json::Obj(pairs) => {
+                pairs.push((key.to_string(), value));
+                self
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+    }
+
+    /// Object field lookup (first match; `None` on non-objects too).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => n.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => n.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+
+    /// Compact rendering (no whitespace), deterministic field order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => out.push_str(n),
+            Json::Str(s) => escape_into(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!(
+                "trailing bytes at offset {pos} after JSON value"
+            ));
+        }
+        Ok(value)
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r')
+    {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, b: u8) -> Result<(), String> {
+    if bytes.get(*pos) == Some(&b) {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!(
+            "expected '{}' at offset {pos}",
+            char::from(b)
+        ))
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'n') => parse_lit(bytes, pos, "null", Json::Null),
+        Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        Some(b'"') => parse_string(bytes, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => {
+                        return Err(format!(
+                            "expected ',' or ']' at offset {pos}"
+                        ))
+                    }
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, b':')?;
+                let value = parse_value(bytes, pos)?;
+                pairs.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(pairs));
+                    }
+                    _ => {
+                        return Err(format!(
+                            "expected ',' or '}}' at offset {pos}"
+                        ))
+                    }
+                }
+            }
+        }
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_lit(
+    bytes: &[u8],
+    pos: &mut usize,
+    lit: &str,
+    value: Json,
+) -> Result<Json, String> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(format!("invalid literal at offset {pos}"))
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let digits_start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    if *pos == digits_start {
+        return Err(format!("expected a value at offset {start}"));
+    }
+    let lexeme =
+        std::str::from_utf8(&bytes[start..*pos]).map_err(|_| {
+            format!("non-UTF-8 number at offset {start}")
+        })?;
+    // validate via the float parser; the raw lexeme is what we keep
+    lexeme
+        .parse::<f64>()
+        .map_err(|_| format!("bad number '{lexeme}' at offset {start}"))?;
+    Ok(Json::Num(lexeme.to_string()))
+}
+
+fn parse_string(
+    bytes: &[u8],
+    pos: &mut usize,
+) -> Result<String, String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        *pos += 1;
+                        let hi = parse_hex4(bytes, pos)?;
+                        // a high surrogate must pair with a following
+                        // \uXXXX low surrogate (UTF-16 escape pair)
+                        let c = if (0xD800..0xDC00).contains(&hi) {
+                            expect(bytes, pos, b'\\')?;
+                            expect(bytes, pos, b'u')?;
+                            let lo = parse_hex4(bytes, pos)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(
+                                    "unpaired surrogate".to_string()
+                                );
+                            }
+                            let code = 0x10000
+                                + ((hi - 0xD800) << 10)
+                                + (lo - 0xDC00);
+                            char::from_u32(code)
+                                .ok_or("bad surrogate pair")?
+                        } else {
+                            char::from_u32(hi)
+                                .ok_or("unpaired surrogate")?
+                        };
+                        out.push(c);
+                        continue;
+                    }
+                    _ => {
+                        return Err(format!(
+                            "bad escape at offset {pos}"
+                        ))
+                    }
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // consume one UTF-8 scalar (multi-byte safe)
+                let rest = std::str::from_utf8(&bytes[*pos..])
+                    .map_err(|_| "non-UTF-8 string".to_string())?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_hex4(bytes: &[u8], pos: &mut usize) -> Result<u32, String> {
+    if *pos + 4 > bytes.len() {
+        return Err("truncated \\u escape".to_string());
+    }
+    let hex = std::str::from_utf8(&bytes[*pos..*pos + 4])
+        .map_err(|_| "bad \\u escape".to_string())?;
+    let v = u32::from_str_radix(hex, 16)
+        .map_err(|_| format!("bad \\u escape '{hex}'"))?;
+    *pos += 4;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_compact_in_insertion_order() {
+        let doc = Json::obj()
+            .set("b", Json::u64(2))
+            .set("a", Json::Arr(vec![Json::Null, Json::Bool(true)]))
+            .set("s", Json::str("hi"));
+        assert_eq!(doc.render(), r#"{"b":2,"a":[null,true],"s":"hi"}"#);
+    }
+
+    #[test]
+    fn u64_keeps_full_precision() {
+        let doc = Json::u64(u64::MAX);
+        assert_eq!(doc.render(), "18446744073709551615");
+        let back = Json::parse(&doc.render()).unwrap();
+        assert_eq!(back.as_u64(), Some(u64::MAX));
+    }
+
+    #[test]
+    fn f64_round_trips_and_nonfinite_is_null() {
+        assert_eq!(Json::f64(0.1).render(), "0.1");
+        assert_eq!(Json::f64(f64::NAN), Json::Null);
+        assert_eq!(Json::f64(f64::INFINITY), Json::Null);
+        let back = Json::parse("2.5e-3").unwrap();
+        assert_eq!(back.as_f64(), Some(0.0025));
+        // re-rendering a parsed number reproduces the lexeme
+        assert_eq!(back.render(), "2.5e-3");
+    }
+
+    #[test]
+    fn escapes_round_trip() {
+        let s = "quote\" slash\\ nl\n tab\t unit\u{1} snowman\u{2603}";
+        let doc = Json::str(s);
+        let rendered = doc.render();
+        assert!(rendered.contains("\\u0001"), "{rendered}");
+        assert_eq!(Json::parse(&rendered).unwrap().as_str(), Some(s));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        let doc = Json::parse(r#""😀 ☃""#).unwrap();
+        assert_eq!(doc.as_str(), Some("\u{1F600} \u{2603}"));
+        assert!(Json::parse(r#""\ud83d""#).is_err(), "lone surrogate");
+    }
+
+    #[test]
+    fn structural_round_trip() {
+        let text = r#"{"k":[1,-2.5,{"x":null},"s"],"b":false}"#;
+        let doc = Json::parse(text).unwrap();
+        assert_eq!(doc.render(), text);
+        assert_eq!(
+            doc.get("k").unwrap().as_arr().unwrap()[1].as_f64(),
+            Some(-2.5)
+        );
+    }
+
+    #[test]
+    fn malformed_documents_are_loud_errors() {
+        for bad in [
+            "", "{", "[1,", "{\"a\"}", "tru", "1.2.3", "\"open",
+            "{} trailing", "{\"a\":1,}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Roofline-as-a-service: the `rocline serve` daemon and its wire
+//! format, with **zero** new dependencies (`std::net` + a hand-rolled
+//! JSON codec).
+//!
+//! * [`json`] — insertion-ordered, precision-preserving JSON model;
+//! * [`wire`] — typed service requests/responses ⇄ JSON (the single
+//!   serialization point: daemon responses and `--format=json` batch
+//!   output are byte-identical by construction);
+//! * [`http`] — minimal HTTP/1.1 framing (server and client sides);
+//! * [`server`] — the accept loop + router over
+//!   [`crate::coordinator::AnalysisService`].
+//!
+//! See `docs/service.md` for the endpoint reference.
+
+pub mod http;
+pub mod json;
+pub mod server;
+pub mod wire;
+
+pub use json::Json;
+pub use server::Server;

@@ -1,0 +1,358 @@
+//! The `rocline serve` daemon loop: a dependency-free HTTP/1.1 JSON
+//! server over [`crate::coordinator::AnalysisService`].
+//!
+//! One thread per connection (requests are short: parse JSON, hit the
+//! service, serialize), with two independent overload guards:
+//!
+//! * a **connection gate** here (more than [`Server::MAX_CONNS`]
+//!   in-flight connections → inline `503` without spawning), and
+//! * the service's own **admission controller** (run slots + bounded
+//!   queue → `429`/`504` per request).
+//!
+//! Shutdown is cooperative: `POST /v1/shutdown` (or
+//! [`Server::shutdown_handle`]) flips a flag the non-blocking accept
+//! loop polls every 20 ms; the loop then stops accepting, joins every
+//! handler thread, and returns.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::service::{
+    AnalysisService, ServiceError,
+};
+
+use super::http::{self, Request};
+use super::json::Json;
+use super::wire;
+
+/// How often the accept loop re-checks the shutdown flag.
+const POLL: Duration = Duration::from_millis(20);
+
+pub struct Server {
+    listener: TcpListener,
+    svc: Arc<AnalysisService>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Hard cap on concurrently-handled connections; beyond it new
+    /// connections get an inline `503` (the service's admission queue
+    /// never even sees them).
+    pub const MAX_CONNS: usize = 256;
+
+    /// Bind an address (use port `0` for an ephemeral port) without
+    /// starting the loop.
+    pub fn bind(
+        addr: &str,
+        svc: Arc<AnalysisService>,
+    ) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Server {
+            listener,
+            svc,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A flag that stops [`Server::run`] from outside (the in-band
+    /// way is `POST /v1/shutdown`).
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until shutdown is requested, then drain handler threads
+    /// and return.
+    pub fn run(self) -> anyhow::Result<()> {
+        let active = Arc::new(AtomicUsize::new(0));
+        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    workers.retain(|w| !w.is_finished());
+                    if active.load(Ordering::SeqCst)
+                        >= Server::MAX_CONNS
+                    {
+                        let _ = shed_connection(stream);
+                        continue;
+                    }
+                    active.fetch_add(1, Ordering::SeqCst);
+                    let svc = self.svc.clone();
+                    let shutdown = self.shutdown.clone();
+                    let active = active.clone();
+                    workers.push(std::thread::spawn(move || {
+                        handle_connection(&svc, &shutdown, stream);
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    }));
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(POLL);
+                }
+                Err(e) => anyhow::bail!("accept failed: {e}"),
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+fn shed_connection(stream: TcpStream) -> std::io::Result<()> {
+    let body = Json::obj()
+        .set("error", Json::str("busy"))
+        .set("status", Json::u64(503))
+        .set(
+            "message",
+            Json::str("server at its connection limit"),
+        )
+        .render();
+    let mut stream = stream;
+    http::write_response(&mut stream, 503, &[], &body)
+}
+
+fn handle_connection(
+    svc: &AnalysisService,
+    shutdown: &AtomicBool,
+    stream: TcpStream,
+) {
+    // handler sockets are blocking (the listener's non-blocking mode
+    // is not inherited on all platforms — make it explicit)
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(reader_stream) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = stream;
+    match http::read_request(&mut reader) {
+        Ok(Some(req)) => {
+            let (status, cache, body) = route(svc, shutdown, &req);
+            let extra: Vec<(&str, &str)> = match cache {
+                Some(state) => vec![("X-Rocline-Cache", state)],
+                None => Vec::new(),
+            };
+            let _ = http::write_response(
+                &mut writer,
+                status,
+                &extra,
+                &body,
+            );
+        }
+        Ok(None) => {} // peer connected and closed: health poke
+        Err(msg) => {
+            let err = ServiceError::BadRequest(format!(
+                "malformed request: {msg}"
+            ));
+            let _ = http::write_response(
+                &mut writer,
+                err.http_status(),
+                &[],
+                &wire::error_to_json(&err).render(),
+            );
+        }
+    }
+}
+
+fn error_body(status: u16, code: &str, message: &str) -> String {
+    Json::obj()
+        .set("error", Json::str(code))
+        .set("status", Json::u64(u64::from(status)))
+        .set("message", Json::str(message))
+        .render()
+}
+
+/// Dispatch one request. Returns (status, cache-header state, body).
+fn route(
+    svc: &AnalysisService,
+    shutdown: &AtomicBool,
+    req: &Request,
+) -> (u16, Option<&'static str>, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/query") => {
+            let parsed = parse_body(&req.body)
+                .and_then(|j| wire::query_request_from_json(&j));
+            match parsed {
+                Ok(q) => {
+                    // observed before the query runs: a done job means
+                    // this request is served from cache
+                    let cache = if svc.is_cached(&q) {
+                        "hit"
+                    } else {
+                        "miss"
+                    };
+                    match svc.query(&q) {
+                        Ok(resp) => (
+                            200,
+                            Some(cache),
+                            wire::query_response_to_json(&resp)
+                                .render(),
+                        ),
+                        Err(e) => service_error(&e),
+                    }
+                }
+                Err(msg) => bad_request(&msg),
+            }
+        }
+        ("POST", "/v1/cancel") => {
+            let parsed = parse_body(&req.body)
+                .and_then(|j| wire::cancel_request_from_json(&j));
+            match parsed {
+                Ok(c) => match svc.cancel(&c) {
+                    Ok(resp) => (
+                        200,
+                        None,
+                        wire::cancel_response_to_json(&resp)
+                            .render(),
+                    ),
+                    Err(e) => service_error(&e),
+                },
+                Err(msg) => bad_request(&msg),
+            }
+        }
+        ("POST", "/v1/experiments") => {
+            let parsed = parse_body(&req.body).and_then(|j| {
+                wire::experiments_request_from_json(&j)
+            });
+            match parsed {
+                Ok(r) => match svc.run_reports_wire(&r) {
+                    Ok(resp) => (
+                        200,
+                        None,
+                        wire::experiments_response_to_json(&resp)
+                            .render(),
+                    ),
+                    Err(e) => service_error(&e),
+                },
+                Err(msg) => bad_request(&msg),
+            }
+        }
+        ("GET", "/v1/status") => (
+            200,
+            None,
+            wire::status_response_to_json(&svc.status()).render(),
+        ),
+        ("GET", "/v1/archives") => match svc.trace_info() {
+            Ok(resp) => {
+                (200, None, wire::trace_info_to_json(&resp).render())
+            }
+            Err(e) => service_error(&e),
+        },
+        ("POST", "/v1/shutdown") => {
+            shutdown.store(true, Ordering::SeqCst);
+            (200, None, Json::obj().set("ok", Json::Bool(true)).render())
+        }
+        (
+            _,
+            "/v1/query" | "/v1/cancel" | "/v1/experiments"
+            | "/v1/status" | "/v1/archives" | "/v1/shutdown",
+        ) => (
+            405,
+            None,
+            error_body(
+                405,
+                "method_not_allowed",
+                &format!("{} not allowed on {}", req.method, req.path),
+            ),
+        ),
+        (_, path) => (
+            404,
+            None,
+            error_body(
+                404,
+                "not_found",
+                &format!("no endpoint {path} (see docs/service.md)"),
+            ),
+        ),
+    }
+}
+
+fn parse_body(body: &str) -> Result<Json, String> {
+    if body.trim().is_empty() {
+        return Err("empty request body (expected JSON)".to_string());
+    }
+    Json::parse(body)
+}
+
+fn bad_request(msg: &str) -> (u16, Option<&'static str>, String) {
+    let e = ServiceError::BadRequest(msg.to_string());
+    service_error(&e)
+}
+
+fn service_error(
+    e: &ServiceError,
+) -> (u16, Option<&'static str>, String) {
+    (e.http_status(), None, wire::error_to_json(e).render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceConfig;
+
+    fn start() -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let svc = Arc::new(AnalysisService::new(
+            ServiceConfig::default(),
+        ));
+        let server = Server::bind("127.0.0.1:0", svc).unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            server.run().unwrap();
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn status_unknowns_and_shutdown() {
+        let (addr, handle) = start();
+        let base = format!("http://{addr}");
+
+        let resp = http::get(&format!("{base}/v1/status")).unwrap();
+        assert_eq!(resp.status, 200);
+        let doc = Json::parse(&resp.body).unwrap();
+        assert_eq!(doc.get("queries").unwrap().as_u64(), Some(0));
+
+        let resp = http::get(&format!("{base}/v1/nope")).unwrap();
+        assert_eq!(resp.status, 404);
+        assert!(resp.body.contains("not_found"), "{}", resp.body);
+
+        let resp = http::get(&format!("{base}/v1/query")).unwrap();
+        assert_eq!(resp.status, 405, "GET on a POST endpoint");
+
+        let resp = http::post(
+            &format!("{base}/v1/query"),
+            "this is not json",
+        )
+        .unwrap();
+        assert_eq!(resp.status, 400);
+        assert!(resp.body.contains("bad_request"), "{}", resp.body);
+
+        let resp = http::post(
+            &format!("{base}/v1/query"),
+            r#"{"gpu":"rx580","case":"lwfa"}"#,
+        )
+        .unwrap();
+        assert_eq!(resp.status, 400);
+        assert!(resp.body.contains("unknown GPU"), "{}", resp.body);
+
+        // no --trace-dir on this service: archives is a bad request
+        let resp =
+            http::get(&format!("{base}/v1/archives")).unwrap();
+        assert_eq!(resp.status, 400);
+
+        let resp =
+            http::post(&format!("{base}/v1/shutdown"), "{}").unwrap();
+        assert_eq!(resp.status, 200);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,709 @@
+//! Wire codec: the service's typed requests/responses ⇄ [`Json`].
+//!
+//! This is the **single** serialization point for the whole API
+//! surface: `rocline serve` responses, `query --format=json`,
+//! `trace-info --format=json` and `reproduce --format=json` all call
+//! the same `*_to_json` functions, so daemon and batch output are
+//! byte-identical by construction. Field order is declaration order;
+//! optional fields are omitted (never `null`); `case_key` travels as
+//! the 16-digit zero-padded hex string that also names archive files.
+
+use crate::coordinator::service::{
+    ArchiveEntry, CancelRequest, CancelResponse, ExperimentsRequest,
+    ExperimentsResponse, KernelCounters, QueryRequest, QueryResponse,
+    ReportSummary, ServiceError, StatusResponse, TraceInfoResponse,
+};
+use crate::roofline::{
+    InstructionRoofline, IrmPoint, MemCeiling, XUnit,
+};
+
+use super::json::Json;
+
+fn key_hex(case_key: u64) -> Json {
+    Json::Str(format!("{case_key:016x}"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string field '{key}'"))
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("missing integer field '{key}'"))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing number field '{key}'"))
+}
+
+fn get_key_hex(j: &Json, key: &str) -> Result<u64, String> {
+    let hex = get_str(j, key)?;
+    u64::from_str_radix(&hex, 16)
+        .map_err(|_| format!("bad case key '{hex}' in field '{key}'"))
+}
+
+fn opt_u32(j: &Json, key: &str) -> Result<Option<u32>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .and_then(|n| u32::try_from(n).ok())
+            .map(Some)
+            .ok_or_else(|| format!("bad integer field '{key}'")),
+    }
+}
+
+// ---------------------------------------------------------------- query
+
+pub fn query_request_to_json(r: &QueryRequest) -> Json {
+    let mut doc = Json::obj()
+        .set("gpu", Json::str(&r.gpu))
+        .set("case", Json::str(&r.case));
+    if let Some(steps) = r.steps {
+        doc = doc.set("steps", Json::u64(u64::from(steps)));
+    }
+    if let Some(kernel) = &r.kernel {
+        doc = doc.set("kernel", Json::str(kernel));
+    }
+    if let Some(ms) = r.deadline_ms {
+        doc = doc.set("deadline_ms", Json::u64(ms));
+    }
+    if r.plots {
+        doc = doc.set("plots", Json::Bool(true));
+    }
+    doc
+}
+
+pub fn query_request_from_json(
+    j: &Json,
+) -> Result<QueryRequest, String> {
+    Ok(QueryRequest {
+        gpu: get_str(j, "gpu")?,
+        case: get_str(j, "case")?,
+        steps: opt_u32(j, "steps")?,
+        kernel: match j.get("kernel") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or("bad string field 'kernel'")?
+                    .to_string(),
+            ),
+        },
+        deadline_ms: match j.get("deadline_ms") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_u64().ok_or("bad integer field 'deadline_ms'")?,
+            ),
+        },
+        plots: j
+            .get("plots")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+    })
+}
+
+fn kernel_to_json(k: &KernelCounters) -> Json {
+    let mut counters = Json::obj();
+    for (name, value) in &k.counters {
+        counters = counters.set(name, Json::f64(*value));
+    }
+    Json::obj()
+        .set("kernel", Json::str(&k.kernel))
+        .set("invocations", Json::u64(k.invocations))
+        .set(
+            "instructions_per_invocation",
+            Json::u64(k.instructions_per_invocation),
+        )
+        .set("bytes_read", Json::f64(k.bytes_read))
+        .set("bytes_written", Json::f64(k.bytes_written))
+        .set("mean_duration_s", Json::f64(k.mean_duration_s))
+        .set(
+            "intensity_inst_per_byte",
+            Json::f64(k.intensity_inst_per_byte),
+        )
+        .set("achieved_gips", Json::f64(k.achieved_gips))
+        .set("counters", counters)
+}
+
+fn kernel_from_json(j: &Json) -> Result<KernelCounters, String> {
+    let mut counters = Vec::new();
+    if let Some(pairs) =
+        j.get("counters").and_then(Json::as_obj)
+    {
+        for (name, value) in pairs {
+            let v = value
+                .as_f64()
+                .ok_or_else(|| format!("bad counter '{name}'"))?;
+            counters.push((name.clone(), v));
+        }
+    }
+    Ok(KernelCounters {
+        kernel: get_str(j, "kernel")?,
+        invocations: get_u64(j, "invocations")?,
+        instructions_per_invocation: get_u64(
+            j,
+            "instructions_per_invocation",
+        )?,
+        bytes_read: get_f64(j, "bytes_read")?,
+        bytes_written: get_f64(j, "bytes_written")?,
+        mean_duration_s: get_f64(j, "mean_duration_s")?,
+        intensity_inst_per_byte: get_f64(
+            j,
+            "intensity_inst_per_byte",
+        )?,
+        achieved_gips: get_f64(j, "achieved_gips")?,
+        counters,
+    })
+}
+
+fn xunit_name(x: XUnit) -> &'static str {
+    match x {
+        XUnit::InstPerByte => "inst_per_byte",
+        XUnit::InstPerTxn => "inst_per_txn",
+    }
+}
+
+fn xunit_from(name: &str) -> Result<XUnit, String> {
+    match name {
+        "inst_per_byte" => Ok(XUnit::InstPerByte),
+        "inst_per_txn" => Ok(XUnit::InstPerTxn),
+        other => Err(format!("unknown x_unit '{other}'")),
+    }
+}
+
+fn roofline_to_json(irm: &InstructionRoofline) -> Json {
+    Json::obj()
+        .set("title", Json::str(&irm.title))
+        .set("gpu", Json::str(&irm.gpu))
+        .set("x_unit", Json::str(xunit_name(irm.x_unit)))
+        .set("peak_gips", Json::f64(irm.peak_gips))
+        .set(
+            "ceilings",
+            Json::Arr(
+                irm.ceilings
+                    .iter()
+                    .map(|c| {
+                        Json::obj()
+                            .set("label", Json::str(&c.label))
+                            .set("bw", Json::f64(c.bw))
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "points",
+            Json::Arr(
+                irm.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj()
+                            .set("label", Json::str(&p.label))
+                            .set("intensity", Json::f64(p.intensity))
+                            .set("gips", Json::f64(p.gips))
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+fn roofline_from_json(
+    j: &Json,
+) -> Result<InstructionRoofline, String> {
+    let mut ceilings = Vec::new();
+    for c in j
+        .get("ceilings")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'ceilings'")?
+    {
+        ceilings.push(MemCeiling {
+            label: get_str(c, "label")?,
+            bw: get_f64(c, "bw")?,
+        });
+    }
+    let mut points = Vec::new();
+    for p in j
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'points'")?
+    {
+        points.push(IrmPoint {
+            label: get_str(p, "label")?,
+            intensity: get_f64(p, "intensity")?,
+            gips: get_f64(p, "gips")?,
+        });
+    }
+    Ok(InstructionRoofline {
+        title: get_str(j, "title")?,
+        gpu: get_str(j, "gpu")?,
+        x_unit: xunit_from(&get_str(j, "x_unit")?)?,
+        peak_gips: get_f64(j, "peak_gips")?,
+        ceilings,
+        points,
+    })
+}
+
+pub fn query_response_to_json(r: &QueryResponse) -> Json {
+    let mut doc = Json::obj()
+        .set("gpu", Json::str(&r.gpu))
+        .set("case", Json::str(&r.case))
+        .set("steps", Json::u64(u64::from(r.steps)))
+        .set("case_key", key_hex(r.case_key))
+        .set("group_size", Json::u64(u64::from(r.group_size)))
+        .set("peak_gips", Json::f64(r.peak_gips))
+        .set(
+            "kernels",
+            Json::Arr(r.kernels.iter().map(kernel_to_json).collect()),
+        );
+    if let Some(irm) = &r.roofline {
+        doc = doc.set("roofline", roofline_to_json(irm));
+    }
+    if let Some(a) = &r.plot_ascii {
+        doc = doc.set("plot_ascii", Json::str(a));
+    }
+    if let Some(s) = &r.plot_svg {
+        doc = doc.set("plot_svg", Json::str(s));
+    }
+    doc
+}
+
+pub fn query_response_from_json(
+    j: &Json,
+) -> Result<QueryResponse, String> {
+    let mut kernels = Vec::new();
+    for k in j
+        .get("kernels")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'kernels'")?
+    {
+        kernels.push(kernel_from_json(k)?);
+    }
+    Ok(QueryResponse {
+        gpu: get_str(j, "gpu")?,
+        case: get_str(j, "case")?,
+        steps: get_u64(j, "steps")?
+            .try_into()
+            .map_err(|_| "bad integer field 'steps'".to_string())?,
+        case_key: get_key_hex(j, "case_key")?,
+        group_size: get_u64(j, "group_size")?
+            .try_into()
+            .map_err(|_| {
+                "bad integer field 'group_size'".to_string()
+            })?,
+        peak_gips: get_f64(j, "peak_gips")?,
+        kernels,
+        roofline: match j.get("roofline") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(roofline_from_json(v)?),
+        },
+        plot_ascii: j
+            .get("plot_ascii")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+        plot_svg: j
+            .get("plot_svg")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+    })
+}
+
+// --------------------------------------------------------------- status
+
+pub fn status_response_to_json(s: &StatusResponse) -> Json {
+    Json::obj()
+        .set("queries", Json::u64(s.queries))
+        .set("cache_hits", Json::u64(s.cache_hits))
+        .set("replays", Json::u64(s.replays))
+        .set("recordings", Json::u64(s.recordings))
+        .set("archive_hits", Json::u64(s.archive_hits))
+        .set("spills", Json::u64(s.spills))
+        .set("shed", Json::u64(s.shed))
+        .set("deadline_expired", Json::u64(s.deadline_expired))
+        .set("cancelled", Json::u64(s.cancelled))
+        .set("inflight", Json::u64(s.inflight))
+        .set("queued", Json::u64(s.queued))
+        .set("jobs_done", Json::u64(s.jobs_done))
+        .set("max_inflight", Json::u64(s.max_inflight))
+        .set("queue_cap", Json::u64(s.queue_cap))
+}
+
+pub fn status_response_from_json(
+    j: &Json,
+) -> Result<StatusResponse, String> {
+    Ok(StatusResponse {
+        queries: get_u64(j, "queries")?,
+        cache_hits: get_u64(j, "cache_hits")?,
+        replays: get_u64(j, "replays")?,
+        recordings: get_u64(j, "recordings")?,
+        archive_hits: get_u64(j, "archive_hits")?,
+        spills: get_u64(j, "spills")?,
+        shed: get_u64(j, "shed")?,
+        deadline_expired: get_u64(j, "deadline_expired")?,
+        cancelled: get_u64(j, "cancelled")?,
+        inflight: get_u64(j, "inflight")?,
+        queued: get_u64(j, "queued")?,
+        jobs_done: get_u64(j, "jobs_done")?,
+        max_inflight: get_u64(j, "max_inflight")?,
+        queue_cap: get_u64(j, "queue_cap")?,
+    })
+}
+
+// --------------------------------------------------------------- cancel
+
+pub fn cancel_request_to_json(r: &CancelRequest) -> Json {
+    let mut doc = Json::obj()
+        .set("gpu", Json::str(&r.gpu))
+        .set("case", Json::str(&r.case));
+    if let Some(steps) = r.steps {
+        doc = doc.set("steps", Json::u64(u64::from(steps)));
+    }
+    doc
+}
+
+pub fn cancel_request_from_json(
+    j: &Json,
+) -> Result<CancelRequest, String> {
+    Ok(CancelRequest {
+        gpu: get_str(j, "gpu")?,
+        case: get_str(j, "case")?,
+        steps: opt_u32(j, "steps")?,
+    })
+}
+
+pub fn cancel_response_to_json(r: &CancelResponse) -> Json {
+    Json::obj()
+        .set("cancelled", Json::Bool(r.cancelled))
+        .set("job", Json::str(&r.job))
+}
+
+pub fn cancel_response_from_json(
+    j: &Json,
+) -> Result<CancelResponse, String> {
+    Ok(CancelResponse {
+        cancelled: j
+            .get("cancelled")
+            .and_then(Json::as_bool)
+            .ok_or("missing bool field 'cancelled'")?,
+        job: get_str(j, "job")?,
+    })
+}
+
+// ---------------------------------------------------------- experiments
+
+pub fn experiments_request_to_json(r: &ExperimentsRequest) -> Json {
+    Json::obj().set(
+        "ids",
+        Json::Arr(r.ids.iter().map(|id| Json::str(id)).collect()),
+    )
+}
+
+pub fn experiments_request_from_json(
+    j: &Json,
+) -> Result<ExperimentsRequest, String> {
+    let mut ids = Vec::new();
+    for id in j
+        .get("ids")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'ids'")?
+    {
+        ids.push(
+            id.as_str()
+                .ok_or("'ids' entries must be strings")?
+                .to_string(),
+        );
+    }
+    Ok(ExperimentsRequest { ids })
+}
+
+pub fn experiments_response_to_json(
+    r: &ExperimentsResponse,
+) -> Json {
+    Json::obj().set(
+        "reports",
+        Json::Arr(
+            r.reports
+                .iter()
+                .map(|rep| {
+                    Json::obj()
+                        .set("id", Json::str(&rep.id))
+                        .set("title", Json::str(&rep.title))
+                        .set("rendered", Json::str(&rep.rendered))
+                        .set(
+                            "checks_passed",
+                            Json::u64(rep.checks_passed),
+                        )
+                        .set(
+                            "checks_total",
+                            Json::u64(rep.checks_total),
+                        )
+                })
+                .collect(),
+        ),
+    )
+}
+
+pub fn experiments_response_from_json(
+    j: &Json,
+) -> Result<ExperimentsResponse, String> {
+    let mut reports = Vec::new();
+    for rep in j
+        .get("reports")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'reports'")?
+    {
+        reports.push(ReportSummary {
+            id: get_str(rep, "id")?,
+            title: get_str(rep, "title")?,
+            rendered: get_str(rep, "rendered")?,
+            checks_passed: get_u64(rep, "checks_passed")?,
+            checks_total: get_u64(rep, "checks_total")?,
+        });
+    }
+    Ok(ExperimentsResponse { reports })
+}
+
+// ------------------------------------------------------------- archives
+
+pub fn trace_info_to_json(r: &TraceInfoResponse) -> Json {
+    Json::obj().set(
+        "archives",
+        Json::Arr(
+            r.archives
+                .iter()
+                .map(|a| {
+                    Json::obj()
+                        .set("case", Json::str(&a.case))
+                        .set("version", Json::u64(a.version))
+                        .set("group_size", Json::u64(a.group_size))
+                        .set("dispatches", Json::u64(a.dispatches))
+                        .set("blocks", Json::u64(a.blocks))
+                        .set("records", Json::u64(a.records))
+                        .set("addr_words", Json::u64(a.addr_words))
+                        .set("file_bytes", Json::u64(a.file_bytes))
+                        .set("case_key", key_hex(a.case_key))
+                        .set(
+                            "compress_ratio",
+                            Json::f64(a.compress_ratio),
+                        )
+                })
+                .collect(),
+        ),
+    )
+}
+
+pub fn trace_info_from_json(
+    j: &Json,
+) -> Result<TraceInfoResponse, String> {
+    let mut archives = Vec::new();
+    for a in j
+        .get("archives")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'archives'")?
+    {
+        archives.push(ArchiveEntry {
+            case: get_str(a, "case")?,
+            version: get_u64(a, "version")?,
+            group_size: get_u64(a, "group_size")?,
+            dispatches: get_u64(a, "dispatches")?,
+            blocks: get_u64(a, "blocks")?,
+            records: get_u64(a, "records")?,
+            addr_words: get_u64(a, "addr_words")?,
+            file_bytes: get_u64(a, "file_bytes")?,
+            case_key: get_key_hex(a, "case_key")?,
+            compress_ratio: get_f64(a, "compress_ratio")?,
+        });
+    }
+    Ok(TraceInfoResponse { archives })
+}
+
+// --------------------------------------------------------------- errors
+
+/// The error body every endpoint shares:
+/// `{"error": code, "status": n, "message": text}`.
+pub fn error_to_json(e: &ServiceError) -> Json {
+    Json::obj()
+        .set("error", Json::str(e.code()))
+        .set("status", Json::u64(u64::from(e.http_status())))
+        .set("message", Json::str(&e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_response() -> QueryResponse {
+        QueryResponse {
+            gpu: "MI100".to_string(),
+            case: "lwfa".to_string(),
+            steps: 64,
+            case_key: 0x0123_4567_89ab_cdef,
+            group_size: 64,
+            peak_gips: 23.1,
+            kernels: vec![KernelCounters {
+                kernel: "PushParticles".to_string(),
+                invocations: 64,
+                instructions_per_invocation: 123_456_789,
+                bytes_read: 1.5e6,
+                bytes_written: 2.5e5,
+                mean_duration_s: 0.001,
+                intensity_inst_per_byte: 70.5,
+                achieved_gips: 11.25,
+                counters: vec![
+                    ("SQ_INSTS_VALU".to_string(), 1e6),
+                    ("FETCH_SIZE".to_string(), 1464.84),
+                ],
+            }],
+            roofline: Some(InstructionRoofline {
+                title: "LWFA".to_string(),
+                gpu: "MI100".to_string(),
+                x_unit: XUnit::InstPerByte,
+                peak_gips: 23.1,
+                ceilings: vec![MemCeiling {
+                    label: "HBM".to_string(),
+                    bw: 1200.0,
+                }],
+                points: vec![IrmPoint {
+                    label: "PushParticles (HBM)".to_string(),
+                    intensity: 70.5,
+                    gips: 11.25,
+                }],
+            }),
+            plot_ascii: None,
+            plot_svg: Some("<svg/>".to_string()),
+        }
+    }
+
+    #[test]
+    fn query_response_round_trips() {
+        let resp = sample_response();
+        let doc = query_response_to_json(&resp);
+        let text = doc.render();
+        assert!(text.contains("\"case_key\":\"0123456789abcdef\""));
+        assert!(!text.contains("plot_ascii"), "None fields omitted");
+        let back = query_response_from_json(
+            &Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.case_key, resp.case_key);
+        assert_eq!(back.kernels, resp.kernels);
+        assert_eq!(
+            back.roofline.as_ref().unwrap().ceilings,
+            resp.roofline.as_ref().unwrap().ceilings
+        );
+        assert_eq!(back.plot_svg, resp.plot_svg);
+        assert_eq!(back.plot_ascii, None);
+        // serialization is deterministic end to end
+        assert_eq!(query_response_to_json(&back).render(), text);
+    }
+
+    #[test]
+    fn query_request_round_trips_with_defaults() {
+        let mut req = QueryRequest::new("mi100", "lwfa");
+        let doc = query_request_to_json(&req);
+        assert_eq!(doc.render(), r#"{"gpu":"mi100","case":"lwfa"}"#);
+        let back =
+            query_request_from_json(&doc).unwrap();
+        assert_eq!(back, req);
+        req.steps = Some(8);
+        req.deadline_ms = Some(500);
+        req.plots = true;
+        let back = query_request_from_json(&query_request_to_json(
+            &req,
+        ))
+        .unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn status_cancel_experiments_archives_round_trip() {
+        let st = StatusResponse {
+            queries: 7,
+            cache_hits: 3,
+            max_inflight: 4,
+            ..StatusResponse::default()
+        };
+        let back = status_response_from_json(
+            &status_response_to_json(&st),
+        )
+        .unwrap();
+        assert_eq!(back, st);
+
+        let c = CancelResponse {
+            cancelled: true,
+            job: "mi100-0000000000000001".to_string(),
+        };
+        let back =
+            cancel_response_from_json(&cancel_response_to_json(&c))
+                .unwrap();
+        assert_eq!(back, c);
+
+        let e = ExperimentsResponse {
+            reports: vec![ReportSummary {
+                id: "peaks".to_string(),
+                title: "Peak GIPS".to_string(),
+                rendered: "line1\nline2".to_string(),
+                checks_passed: 3,
+                checks_total: 3,
+            }],
+        };
+        let back = experiments_response_from_json(
+            &experiments_response_to_json(&e),
+        )
+        .unwrap();
+        assert_eq!(back, e);
+
+        let t = TraceInfoResponse {
+            archives: vec![ArchiveEntry {
+                case: "lwfa".to_string(),
+                version: 2,
+                group_size: 64,
+                dispatches: 320,
+                blocks: 11,
+                records: 22,
+                addr_words: 33,
+                file_bytes: 44,
+                case_key: u64::MAX,
+                compress_ratio: 6.5,
+            }],
+        };
+        let back =
+            trace_info_from_json(&trace_info_to_json(&t)).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn error_body_carries_code_status_message() {
+        let e = ServiceError::Busy { queued: 9, queue_cap: 8 };
+        let doc = error_to_json(&e);
+        assert_eq!(
+            doc.get("error").unwrap().as_str(),
+            Some("busy")
+        );
+        assert_eq!(doc.get("status").unwrap().as_u64(), Some(429));
+        assert!(doc
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("queue capacity 8"));
+    }
+
+    #[test]
+    fn missing_fields_are_loud() {
+        let err = query_request_from_json(
+            &Json::parse(r#"{"gpu":"mi100"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("'case'"), "{err}");
+        let err = query_response_from_json(
+            &Json::parse(r#"{"gpu":"MI100"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("'kernels'"), "{err}");
+    }
+}

@@ -354,18 +354,21 @@ pub struct GateOutcome {
 /// Whether a bench entry is gated against the baseline:
 /// `speedup/*` ratios (engine vs reference) and `size/*` metrics
 /// (archive compression ratios) — bigger is better, one floor rule —
-/// plus `mem/*` metrics (peak replay memory in bytes), where
-/// **lower** is better and the gate applies a ceiling instead.
+/// plus `mem/*` (peak replay memory in bytes) and `lat/*`
+/// (serve-path latencies in ms) metrics, where **lower** is better
+/// and the gate applies a ceiling instead.
 pub fn is_gated_metric(name: &str) -> bool {
     name.starts_with("speedup/")
         || name.starts_with("size/")
         || name.starts_with("mem/")
+        || name.starts_with("lat/")
 }
 
 /// Whether a gated metric regresses *upward* (`mem/*`: bytes held at
-/// replay — a growing value is the failure).
+/// replay; `lat/*`: serve-path latencies in ms — growth is the
+/// failure).
 fn lower_is_better(name: &str) -> bool {
-    name.starts_with("mem/")
+    name.starts_with("mem/") || name.starts_with("lat/")
 }
 
 /// The bench regression gate: every gated entry in `baseline` (see
@@ -592,6 +595,7 @@ mod tests {
             .any(|l| l.contains("new") && l.contains("size/other")));
         assert!(is_gated_metric("speedup/x"));
         assert!(is_gated_metric("size/x"));
+        assert!(is_gated_metric("lat/x"));
         assert!(!is_gated_metric("trace/x"));
     }
 

@@ -14,6 +14,6 @@ pub mod stats;
 pub mod table;
 pub mod units;
 
-pub use pool::WorkerPool;
+pub use pool::{CancelToken, Cancelled, WorkerPool};
 pub use rng::Xoshiro256;
 pub use stats::Summary;

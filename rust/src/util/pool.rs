@@ -361,6 +361,94 @@ impl<T: Send + 'static> Prefetch<T> {
     }
 }
 
+/// Why a [`CancelToken::checkpoint`] failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cancelled {
+    /// Someone called [`CancelToken::cancel`].
+    Explicit,
+    /// The token's deadline passed.
+    DeadlineExpired,
+}
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Cancelled::Explicit => f.write_str("job cancelled"),
+            Cancelled::DeadlineExpired => {
+                f.write_str("job deadline expired")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+/// Cooperative cancellation (with an optional deadline) for long
+/// replay jobs scheduled on the pool. The replay engine's dispatch
+/// loops call [`CancelToken::checkpoint`] between dispatches; a
+/// cancelled or deadline-expired job unwinds cleanly at the next
+/// checkpoint instead of running to completion — the hook the
+/// analysis service's per-request deadlines and `cancel` endpoint
+/// are built on. Clones share the same state (the job holds one
+/// clone, the canceller another).
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    inner: Arc<CancelState>,
+}
+
+#[derive(Default)]
+struct CancelState {
+    cancelled: AtomicBool,
+    deadline: Mutex<Option<std::time::Instant>>,
+}
+
+impl CancelToken {
+    /// A token that never fires until [`CancelToken::cancel`] is
+    /// called.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that additionally expires at `deadline`.
+    pub fn with_deadline(deadline: std::time::Instant) -> CancelToken {
+        let t = CancelToken::new();
+        *lock_recover(&t.inner.deadline) = Some(deadline);
+        t
+    }
+
+    /// Request cancellation: every checkpoint from now on fails with
+    /// [`Cancelled::Explicit`].
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// The deadline this token expires at, if any.
+    pub fn deadline(&self) -> Option<std::time::Instant> {
+        *lock_recover(&self.inner.deadline)
+    }
+
+    /// Whether the next checkpoint would fail (explicit cancel *or*
+    /// expired deadline).
+    pub fn is_cancelled(&self) -> bool {
+        self.checkpoint().is_err()
+    }
+
+    /// The cooperative cancellation point: cheap enough to call once
+    /// per dispatch. Explicit cancellation wins over a deadline that
+    /// has also passed (the caller asked first).
+    pub fn checkpoint(&self) -> Result<(), Cancelled> {
+        if self.inner.cancelled.load(Ordering::Relaxed) {
+            return Err(Cancelled::Explicit);
+        }
+        if let Some(d) = *lock_recover(&self.inner.deadline) {
+            if std::time::Instant::now() >= d {
+                return Err(Cancelled::DeadlineExpired);
+            }
+        }
+        Ok(())
+    }
+}
+
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
@@ -585,6 +673,47 @@ mod tests {
         let p: Prefetch<u64> =
             Prefetch::spawn(|| panic!("decode job failed"));
         let _ = p.join();
+    }
+
+    #[test]
+    fn cancel_token_default_passes_checkpoints() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert!(t.checkpoint().is_ok());
+        assert!(t.deadline().is_none());
+    }
+
+    #[test]
+    fn cancel_token_explicit_cancel_fires() {
+        let t = CancelToken::new();
+        let shared = t.clone();
+        shared.cancel();
+        assert_eq!(t.checkpoint(), Err(Cancelled::Explicit));
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_token_deadline_expires() {
+        let past = std::time::Instant::now();
+        let t = CancelToken::with_deadline(past);
+        assert_eq!(t.checkpoint(), Err(Cancelled::DeadlineExpired));
+        let future = std::time::Instant::now()
+            + Duration::from_secs(3600);
+        let t = CancelToken::with_deadline(future);
+        assert!(t.checkpoint().is_ok());
+        assert_eq!(t.deadline(), Some(future));
+        // explicit cancellation wins over an expired deadline
+        let t = CancelToken::with_deadline(past);
+        t.cancel();
+        assert_eq!(t.checkpoint(), Err(Cancelled::Explicit));
+    }
+
+    #[test]
+    fn cancelled_renders_and_is_an_error() {
+        let e: Box<dyn std::error::Error> =
+            Box::new(Cancelled::DeadlineExpired);
+        assert!(e.to_string().contains("deadline"));
+        assert!(Cancelled::Explicit.to_string().contains("cancelled"));
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! End-to-end tests of the roofline-as-a-service stack: the
+//! `rocline serve` daemon must answer queries byte-identically to the
+//! batch path (both are thin frontends over one
+//! [`rocline::coordinator::AnalysisService`]), warm-cache queries must
+//! not re-record or re-replay, and admission control must shed and
+//! free slots exactly as documented in docs/service.md.
+//!
+//! Every test uses tiny `case_overrides` cases — the full paper cases
+//! are far too slow for debug-mode `cargo test`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rocline::coordinator::{
+    AnalysisService, CancelRequest, QueryRequest, ServiceConfig,
+    ServiceError, StatusResponse,
+};
+use rocline::pic::CaseConfig;
+use rocline::serve::{http, wire, Json, Server};
+
+/// 8x8x8, 2 ppc, 2 steps — records and replays in well under a second
+/// even in debug mode.
+fn tiny_case() -> CaseConfig {
+    let mut cfg = CaseConfig::lwfa();
+    cfg.name = "tiny".to_string();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.nz = 8;
+    cfg.ppc = 2;
+    cfg.steps = 2;
+    cfg
+}
+
+/// 16x16x16, 2 ppc, 4 steps — big enough that a run reliably spans a
+/// cancel issued from another thread, small enough to stay test-sized.
+fn slow_case() -> CaseConfig {
+    let mut cfg = CaseConfig::lwfa();
+    cfg.name = "slow".to_string();
+    cfg.nx = 16;
+    cfg.ny = 16;
+    cfg.nz = 16;
+    cfg.ppc = 2;
+    cfg.steps = 4;
+    cfg
+}
+
+fn tiny_service() -> AnalysisService {
+    AnalysisService::new(ServiceConfig {
+        engine_threads: 2,
+        case_overrides: vec![tiny_case()],
+        quiet: true,
+        ..ServiceConfig::default()
+    })
+}
+
+/// Bind an ephemeral daemon over `svc`; returns the base URL and the
+/// server thread's join handle.
+fn start(
+    svc: Arc<AnalysisService>,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server =
+        Server::bind("127.0.0.1:0", svc).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || server.run());
+    (format!("http://{addr}"), handle)
+}
+
+fn daemon_status(base: &str) -> StatusResponse {
+    let resp = http::get(&format!("{base}/v1/status")).expect("status");
+    assert_eq!(resp.status, 200, "status failed: {}", resp.body);
+    let json = Json::parse(&resp.body).expect("status JSON");
+    wire::status_response_from_json(&json).expect("status decode")
+}
+
+fn shutdown(
+    base: &str,
+    handle: std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    let resp = http::post(&format!("{base}/v1/shutdown"), "{}")
+        .expect("shutdown");
+    assert_eq!(resp.status, 200, "shutdown failed: {}", resp.body);
+    handle.join().expect("server thread").expect("server run");
+}
+
+/// The flagship contract: concurrent mixed-preset daemon queries are
+/// byte-identical to the batch service's answers, a repeated query is
+/// a cache hit that re-records and re-replays nothing, and in-band
+/// shutdown joins the server cleanly.
+#[test]
+fn daemon_is_bit_identical_to_batch_and_caches() {
+    let batch = tiny_service();
+    let (base, handle) = start(Arc::new(tiny_service()));
+
+    let gpus = ["v100", "mi60", "mi100"];
+    let expect: Vec<String> = gpus
+        .iter()
+        .map(|g| {
+            let resp = batch
+                .query(&QueryRequest::new(g, "tiny"))
+                .expect("batch query");
+            wire::query_response_to_json(&resp).render()
+        })
+        .collect();
+
+    let answers: Vec<(String, Option<String>)> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = gpus
+                .iter()
+                .map(|g| {
+                    let base = &base;
+                    s.spawn(move || {
+                        let body = wire::query_request_to_json(
+                            &QueryRequest::new(g, "tiny"),
+                        )
+                        .render();
+                        let resp = http::post(
+                            &format!("{base}/v1/query"),
+                            &body,
+                        )
+                        .expect("daemon query");
+                        assert_eq!(
+                            resp.status, 200,
+                            "query failed: {}",
+                            resp.body
+                        );
+                        let cache = resp
+                            .header("x-rocline-cache")
+                            .map(str::to_string);
+                        (resp.body, cache)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread"))
+                .collect()
+        });
+
+    for (gpu, ((body, cache), want)) in
+        gpus.iter().zip(answers.iter().zip(&expect))
+    {
+        assert_eq!(
+            body, want,
+            "daemon response for {gpu} differs from batch"
+        );
+        assert_eq!(
+            cache.as_deref(),
+            Some("miss"),
+            "first {gpu} query must be a miss"
+        );
+    }
+
+    // all three presets replayed one shared recording
+    let before = daemon_status(&base);
+    assert_eq!(before.queries, 3);
+    assert_eq!(before.replays, 3);
+    assert_eq!(before.recordings, 1);
+    assert_eq!(before.cache_hits, 0);
+
+    // identical re-query: cache hit, still byte-identical, and the
+    // warm path touches neither the recorder nor the replay engines
+    let body =
+        wire::query_request_to_json(&QueryRequest::new("mi100", "tiny"))
+            .render();
+    let resp = http::post(&format!("{base}/v1/query"), &body)
+        .expect("warm query");
+    assert_eq!(resp.status, 200, "warm query failed: {}", resp.body);
+    assert_eq!(resp.header("x-rocline-cache"), Some("hit"));
+    assert_eq!(&resp.body, &expect[2], "warm response changed");
+    let after = daemon_status(&base);
+    assert_eq!(after.cache_hits, before.cache_hits + 1);
+    assert_eq!(after.replays, before.replays, "warm query re-replayed");
+    assert_eq!(
+        after.recordings, before.recordings,
+        "warm query re-recorded"
+    );
+
+    shutdown(&base, handle);
+}
+
+/// An already-expired deadline is shed as 504 *before* any recording
+/// happens, frees its slot, and leaves the job resumable: the same
+/// query without a deadline succeeds, and the one after that is a
+/// cache hit.
+#[test]
+fn expired_deadline_sheds_resumably() {
+    let (base, handle) = start(Arc::new(tiny_service()));
+    let url = format!("{base}/v1/query");
+
+    let mut q = QueryRequest::new("mi100", "tiny");
+    q.deadline_ms = Some(0);
+    let resp =
+        http::post(&url, &wire::query_request_to_json(&q).render())
+            .expect("deadlined query");
+    assert_eq!(resp.status, 504, "want 504, got: {}", resp.body);
+    let err = Json::parse(&resp.body).expect("error JSON");
+    assert_eq!(
+        err.get("error").and_then(|j| j.as_str()),
+        Some("deadline_exceeded")
+    );
+
+    let st = daemon_status(&base);
+    assert_eq!(st.recordings, 0, "expired deadline still recorded");
+    assert_eq!(st.inflight, 0, "expired deadline leaked its slot");
+    assert!(st.deadline_expired >= 1);
+
+    q.deadline_ms = None;
+    let body = wire::query_request_to_json(&q).render();
+    let resp = http::post(&url, &body).expect("retry query");
+    assert_eq!(resp.status, 200, "retry failed: {}", resp.body);
+    assert_eq!(resp.header("x-rocline-cache"), Some("miss"));
+    let resp = http::post(&url, &body).expect("warm query");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-rocline-cache"), Some("hit"));
+
+    shutdown(&base, handle);
+}
+
+/// Admission control with one slot and no queue: while a slow job
+/// holds the slot, a second query is shed 429; cancelling the slow job
+/// fails it 409 *and frees the slot*, after which queries run again.
+#[test]
+fn busy_shed_and_cancel_free_the_slot() {
+    let svc = Arc::new(AnalysisService::new(ServiceConfig {
+        engine_threads: 2,
+        max_inflight: 1,
+        queue_cap: 0,
+        case_overrides: vec![tiny_case(), slow_case()],
+        quiet: true,
+        ..ServiceConfig::default()
+    }));
+
+    let bg = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            svc.query(&QueryRequest::new("mi100", "slow"))
+        })
+    };
+    // wait for the slow query to take the only slot
+    let mut waited = 0u32;
+    while svc.status().inflight == 0 {
+        assert!(waited < 30_000, "slow query never claimed its slot");
+        std::thread::sleep(Duration::from_millis(1));
+        waited += 1;
+    }
+
+    let err = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect_err("second query must be shed");
+    assert!(
+        matches!(err, ServiceError::Busy { .. }),
+        "want Busy, got {err}"
+    );
+    assert_eq!(err.http_status(), 429);
+    assert_eq!(err.code(), "busy");
+    assert!(svc.status().shed >= 1);
+
+    // cancel the slow job; its thread must come back Cancelled (409)
+    let cr = CancelRequest {
+        gpu: "mi100".to_string(),
+        case: "slow".to_string(),
+        steps: None,
+    };
+    let cancelled = svc.cancel(&cr).expect("cancel");
+    assert!(cancelled.cancelled, "running job had no token to cancel");
+    let err = bg
+        .join()
+        .expect("slow query thread")
+        .expect_err("cancelled query must fail");
+    assert_eq!(err.http_status(), 409, "want 409, got {err}");
+    assert_eq!(err.code(), "cancelled");
+
+    // the cancelled job freed its slot: the next query just runs
+    let st = svc.status();
+    assert_eq!(st.inflight, 0, "cancelled job leaked its slot");
+    assert!(st.cancelled >= 1);
+    let ok = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("slot must be free after cancel");
+    assert_eq!(ok.steps, 2);
+}
+
+/// The persistent archive tier through the daemon: a prior process
+/// records + spills, the daemon replays from the mmap'd archive with
+/// zero live recordings, answers byte-identically to the recording
+/// process, and reports the archive via GET /v1/archives.
+#[test]
+fn daemon_replays_archive_and_reports_it() {
+    let dir = std::env::temp_dir().join(format!(
+        "rocline-service-test-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let recorder = AnalysisService::new(ServiceConfig {
+        engine_threads: 2,
+        case_overrides: vec![tiny_case()],
+        trace_dir: Some(dir.clone()),
+        quiet: true,
+        ..ServiceConfig::default()
+    });
+    let reference = recorder
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("recording query");
+    let st = recorder.status();
+    assert_eq!(st.recordings, 1);
+    assert!(st.spills >= 1, "trace_dir set but nothing spilled");
+    drop(recorder);
+
+    let served = Arc::new(AnalysisService::new(ServiceConfig {
+        engine_threads: 2,
+        case_overrides: vec![tiny_case()],
+        trace_dir: Some(dir.clone()),
+        quiet: true,
+        ..ServiceConfig::default()
+    }));
+    let (base, handle) = start(served);
+
+    let body =
+        wire::query_request_to_json(&QueryRequest::new("mi100", "tiny"))
+            .render();
+    let resp = http::post(&format!("{base}/v1/query"), &body)
+        .expect("archive-backed query");
+    assert_eq!(resp.status, 200, "query failed: {}", resp.body);
+    assert_eq!(
+        resp.body,
+        wire::query_response_to_json(&reference).render(),
+        "archive replay differs from the recording process's answer"
+    );
+    let st = daemon_status(&base);
+    assert_eq!(st.recordings, 0, "daemon re-recorded an archived case");
+    assert!(st.archive_hits >= 1);
+
+    let resp =
+        http::get(&format!("{base}/v1/archives")).expect("archives");
+    assert_eq!(resp.status, 200, "archives failed: {}", resp.body);
+    let json = Json::parse(&resp.body).expect("archives JSON");
+    let info =
+        wire::trace_info_from_json(&json).expect("archives decode");
+    assert_eq!(info.archives.len(), 1);
+    assert_eq!(info.archives[0].case, "tiny");
+    assert!(info.archives[0].records > 0);
+    assert_eq!(info.archives[0].case_key, reference.case_key);
+
+    shutdown(&base, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
