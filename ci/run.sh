@@ -51,6 +51,11 @@
 #     byte-identically to the batch CLI's --format=json output, answer
 #     a repeated query from its result cache (asserted via --status
 #     counters), and exit cleanly on the in-band shutdown endpoint.
+#   * metrics smoke — the same daemon must serve a valid Prometheus
+#     page on /v1/metrics (span histograms + counters; obs is
+#     default-on for serve) whose serve.requests counter strictly
+#     increases between scrapes, and `rocline stats` must render the
+#     /v1/metrics.json document.
 #   * streaming smoke — `rocline synth-trace` builds a synthetic
 #     archive whose decoded column image dwarfs a hard `ulimit -v`
 #     address-space cap; `rocline synth-replay --mode=streaming` must
@@ -216,6 +221,43 @@ case "$STATUS_JSON" in
     *'"cache_hits":'*) ;;
     *) echo "no cache_hits counter in: $STATUS_JSON" >&2; exit 1 ;;
 esac
+# self-profiling smoke: the daemon (obs default-on) must expose a
+# valid Prometheus page on /v1/metrics with span histograms from the
+# queries above, and the serve.requests counter must strictly
+# increase between two scrapes (each scrape is itself a request).
+# Raw HTTP over bash's /dev/tcp — no curl dependency in CI.
+echo "== metrics smoke: /v1/metrics Prometheus exposition =="
+scrape_metrics() {
+    local hostport="${SERVE_URL#http://}"
+    exec 9<>"/dev/tcp/${hostport%%:*}/${hostport##*:}"
+    printf 'GET /v1/metrics HTTP/1.1\r\nHost: %s\r\nConnection: close\r\n\r\n' \
+        "$hostport" >&9
+    cat <&9
+    exec 9<&- 9>&-
+}
+SCRAPE1="$(scrape_metrics)"
+echo "$SCRAPE1" | grep -q '^rocline_uptime_seconds ' || {
+    echo "/v1/metrics page has no uptime gauge:" >&2
+    echo "$SCRAPE1" >&2
+    exit 1
+}
+echo "$SCRAPE1" | grep -q 'rocline_span_duration_seconds_bucket{span="serve.request"' || {
+    echo "/v1/metrics page has no serve.request span histogram" >&2
+    exit 1
+}
+REQ1="$(echo "$SCRAPE1" | sed -n 's/^rocline_serve_requests_total \([0-9]*\)$/\1/p')"
+SCRAPE2="$(scrape_metrics)"
+REQ2="$(echo "$SCRAPE2" | sed -n 's/^rocline_serve_requests_total \([0-9]*\)$/\1/p')"
+[ -n "$REQ1" ] && [ -n "$REQ2" ] && [ "$REQ2" -gt "$REQ1" ] || {
+    echo "serve.requests did not increase between scrapes ('$REQ1' -> '$REQ2')" >&2
+    exit 1
+}
+# the stats CLI view over the same registry (/v1/metrics.json)
+./target/release/rocline stats --url "$SERVE_URL" | grep -q "observability on" || {
+    echo "rocline stats did not render the daemon's registry" >&2
+    exit 1
+}
+echo "metrics smoke ok: Prometheus page valid, serve.requests $REQ1 -> $REQ2"
 ./target/release/rocline query --url "$SERVE_URL" --shutdown >/dev/null
 wait "$SERVE_PID" || {
     echo "serve daemon exited uncleanly after /v1/shutdown" >&2

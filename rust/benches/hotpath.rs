@@ -501,6 +501,37 @@ fn main() {
         });
     }
 
+    // self-profiling cost contract: the same sharded replay with the
+    // obs layer off vs on. Disabled hooks are one relaxed atomic load
+    // each; enabled hooks pay a TLS histogram lookup + two atomic
+    // adds per span. The off/on ratio is gated as
+    // speedup/replay_obs_off_vs_on — a blow-up means instrumentation
+    // leaked real work (allocation, locks, syscalls) into the replay
+    // hot path. Replay output is bit-identical either way
+    // (tests/engine_equiv.rs proves it); this bench holds the *time*
+    // side of the contract.
+    {
+        use rocline::obs;
+        let sim = PicSim::new(&cfg, 1);
+        let spec = presets::mi100();
+        let push = MoveAndMarkTrace::new(&sim.state, &spec);
+        let push_rec = record(&push, spec.group_size);
+        obs::set_enabled(false);
+        let mut off = ProfileSession::new(spec.clone());
+        r.bench_throughput("obs/replay_off", particles, || {
+            off.profile_blocks("MoveAndMark", &push_rec.blocks)
+                .duration_s
+        });
+        obs::set_enabled(true);
+        let mut on = ProfileSession::new(spec.clone());
+        r.bench_throughput("obs/replay_on", particles, || {
+            on.profile_blocks("MoveAndMark", &push_rec.blocks)
+                .duration_s
+        });
+        // back to the default-off path for every later bench
+        obs::set_enabled(false);
+    }
+
     // roofline-as-a-service: the warm cache-hit query path vs the
     // cold record+replay path on a fresh service, plus end-to-end
     // HTTP tail latency against an in-process daemon with a warm
@@ -509,6 +540,7 @@ fn main() {
     // queries started re-recording or re-replaying); the p99 feeds
     // the lat/serve_p99_ms *ceiling* in bench-gate.
     let mut serve_p99_ms: Option<f64> = None;
+    let mut metrics_scrape_ms: Option<f64> = None;
     {
         use rocline::coordinator::{
             AnalysisService, QueryRequest, ServiceConfig,
@@ -589,6 +621,34 @@ fn main() {
         lat_ns.sort_unstable();
         let idx = (lat_ns.len() * 99 / 100).min(lat_ns.len() - 1);
         serve_p99_ms = Some(lat_ns[idx] as f64 / 1e6);
+
+        // /v1/metrics scrape latency on the same daemon: render the
+        // full Prometheus page (snapshot + text exposition) over a
+        // real socket. Gated with a ceiling (lat/metrics_scrape_ms):
+        // a Prometheus scraper hits this path every few seconds, so
+        // it must stay far off the query path's latency budget.
+        const SCRAPES: usize = 32;
+        let metrics_url = format!("http://{addr}/v1/metrics");
+        let mut scrape_ns = Vec::with_capacity(SCRAPES);
+        for _ in 0..SCRAPES {
+            let t0 = Instant::now();
+            let resp =
+                http::get(&metrics_url).expect("metrics scrape");
+            assert_eq!(
+                resp.status, 200,
+                "metrics scrape failed: {}",
+                resp.body
+            );
+            assert!(
+                resp.body.contains("rocline_uptime_seconds"),
+                "metrics page missing uptime gauge"
+            );
+            scrape_ns.push(t0.elapsed().as_nanos() as u64);
+        }
+        scrape_ns.sort_unstable();
+        let idx = (scrape_ns.len() * 99 / 100).min(scrape_ns.len() - 1);
+        metrics_scrape_ms = Some(scrape_ns[idx] as f64 / 1e6);
+
         let resp = http::post(&format!("http://{addr}/v1/shutdown"), "{}")
             .expect("shutdown daemon");
         assert_eq!(resp.status, 200, "shutdown failed: {}", resp.body);
@@ -693,6 +753,15 @@ fn main() {
             "serve/query_warm",
             "serve/query_cold",
         ),
+        // identical sharded replay with observability off vs on
+        // (expect ~1.0 with a small margin: the enabled path is TLS
+        // cache hits + atomic adds; a blow-up means span hooks put
+        // real work — allocation, locks, I/O — on the replay path)
+        (
+            "speedup/replay_obs_off_vs_on",
+            "obs/replay_off",
+            "obs/replay_on",
+        ),
     ];
     for (name, fast, base) in pairs {
         if let (Some(f), Some(b)) =
@@ -746,6 +815,19 @@ fn main() {
         println!("{:<44} {p99:>10.2} ms", "lat/serve_p99_ms");
         results.push(BenchResult {
             name: "lat/serve_p99_ms".to_string(),
+            time: rocline::util::Summary::of(&[p99 / 1e3]),
+            throughput: Some(p99),
+        });
+    }
+
+    // the exposition-path metric: p99 wall time of a full Prometheus
+    // /v1/metrics scrape (registry snapshot + text render + TCP).
+    // Also ceiling-gated: growth means the metrics page stopped being
+    // cheap enough to scrape on a tight interval.
+    if let Some(p99) = metrics_scrape_ms {
+        println!("{:<44} {p99:>10.2} ms", "lat/metrics_scrape_ms");
+        results.push(BenchResult {
+            name: "lat/metrics_scrape_ms".to_string(),
             time: rocline::util::Summary::of(&[p99 / 1e3]),
             throughput: Some(p99),
         });

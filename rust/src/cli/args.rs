@@ -25,6 +25,7 @@ use std::path::PathBuf;
 use crate::coordinator::{
     CancelRequest, ExperimentsRequest, QueryRequest,
 };
+use crate::serve::AccessLogFormat;
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -36,11 +37,12 @@ pub struct Args {
 
 /// Options that take a value in space-separated form (`--key value`).
 /// `--key=value` works for these and for any future key alike.
-const VALUED: [&str; 28] = [
+const VALUED: [&str; 29] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
     "trace-dir", "trajectory", "compress", "mode", "dispatches", "seed",
     "format", "url", "addr", "deadline-ms", "max-inflight", "queue-cap",
+    "trace-out",
 ];
 
 /// Known boolean flags. Anything else with `--` and no `=` is an
@@ -49,6 +51,12 @@ const FLAGS: [&str; 9] = [
     "all", "pjrt", "update-baseline", "print-key", "prune", "plots",
     "status", "shutdown", "cancel",
 ];
+
+/// Options with an *optional* value: bare `--key` records an empty
+/// value (the option's default behaviour), `--key=value` selects a
+/// variant. Space form is deliberately NOT supported — `--log json`
+/// would be ambiguous with a positional.
+const OPTIONAL_VALUED: [&str; 1] = ["log"];
 
 impl Args {
     pub fn parse(argv: Vec<String>) -> anyhow::Result<Args> {
@@ -75,7 +83,8 @@ impl Args {
                     // a typo'd key would otherwise be silently
                     // dropped (nothing ever get()s it)
                     anyhow::ensure!(
-                        VALUED.contains(&key),
+                        VALUED.contains(&key)
+                            || OPTIONAL_VALUED.contains(&key),
                         "unknown option --{key}"
                     );
                     out.insert_once(key, value.to_string())?;
@@ -86,6 +95,10 @@ impl Args {
                     out.insert_once(body, v)?;
                 } else if FLAGS.contains(&body) {
                     out.flags.push(body.to_string());
+                } else if OPTIONAL_VALUED.contains(&body) {
+                    // bare form = the option's default variant; the
+                    // next token is NOT consumed
+                    out.insert_once(body, String::new())?;
                 } else {
                     anyhow::bail!("unknown option --{body}");
                 }
@@ -191,6 +204,9 @@ pub struct ReproduceCmd {
     pub trace_dir: Option<PathBuf>,
     pub shard: Option<String>,
     pub format: OutputFormat,
+    /// Write a Chrome trace-event timeline of the run here
+    /// (enables span collection for the process).
+    pub trace_out: Option<PathBuf>,
 }
 
 /// `query`: one roofline query, locally or (with `--url`) against a
@@ -210,6 +226,8 @@ pub struct QueryCmd {
     /// Send a [`CancelRequest`] for this (gpu, case) instead of
     /// querying.
     pub cancel: bool,
+    /// Local mode: write a Chrome trace-event timeline of the query.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl QueryCmd {
@@ -232,6 +250,28 @@ pub struct ServeCmd {
     pub max_inflight: Option<u64>,
     pub queue_cap: Option<u64>,
     pub deadline_ms: Option<u64>,
+    /// Per-request access log to stderr (`--log` / `--log=json`).
+    pub log: Option<AccessLogFormat>,
+}
+
+/// `stats`: fetch `/v1/metrics.json` from a running daemon and render
+/// the self-profiling registry (text table or the raw document).
+#[derive(Debug, Clone)]
+pub struct StatsCmd {
+    pub url: String,
+    pub format: OutputFormat,
+}
+
+fn log_arg(args: &Args) -> anyhow::Result<Option<AccessLogFormat>> {
+    match args.get("log") {
+        None => Ok(None),
+        // bare `--log` records an empty value = the text format
+        Some("") | Some("text") => Ok(Some(AccessLogFormat::Text)),
+        Some("json") => Ok(Some(AccessLogFormat::Json)),
+        Some(other) => anyhow::bail!(
+            "unknown --log format '{other}' (text|json)"
+        ),
+    }
 }
 
 /// `trace-info`: archive inspection, text table or wire JSON.
@@ -253,6 +293,7 @@ pub enum Command {
     Reproduce(ReproduceCmd),
     Query(QueryCmd),
     Serve(ServeCmd),
+    Stats(StatsCmd),
     TraceInfo(TraceInfoCmd),
     Record(Args),
     Profile(Args),
@@ -290,6 +331,7 @@ impl Command {
                 trace_dir: args.get("trace-dir").map(PathBuf::from),
                 shard: args.get("shard").map(String::from),
                 format: format_arg(&args)?,
+                trace_out: args.get("trace-out").map(PathBuf::from),
             }),
             "query" => Command::Query(QueryCmd {
                 req: QueryRequest {
@@ -306,6 +348,7 @@ impl Command {
                 status: args.flag("status"),
                 shutdown: args.flag("shutdown"),
                 cancel: args.flag("cancel"),
+                trace_out: args.get("trace-out").map(PathBuf::from),
             }),
             "serve" => Command::Serve(ServeCmd {
                 addr: args
@@ -316,6 +359,13 @@ impl Command {
                 max_inflight: opt_u64(&args, "max-inflight")?,
                 queue_cap: opt_u64(&args, "queue-cap")?,
                 deadline_ms: opt_u64(&args, "deadline-ms")?,
+                log: log_arg(&args)?,
+            }),
+            "stats" => Command::Stats(StatsCmd {
+                url: args
+                    .get_or("url", "http://127.0.0.1:8750")
+                    .to_string(),
+                format: format_arg(&args)?,
             }),
             "trace-info" => {
                 let target = args
@@ -700,6 +750,67 @@ mod tests {
         };
         assert_eq!(s.addr, "127.0.0.1:8750");
         assert_eq!(s.max_inflight, None);
+    }
+
+    #[test]
+    fn log_takes_an_optional_value() {
+        // bare --log = text; --log=json selects JSON lines; the bare
+        // form must not consume the next token
+        let Command::Serve(s) =
+            command("serve --log --addr 127.0.0.1:0")
+        else {
+            panic!("expected Serve");
+        };
+        assert_eq!(s.log, Some(AccessLogFormat::Text));
+        assert_eq!(s.addr, "127.0.0.1:0");
+        let Command::Serve(s) = command("serve --log=json") else {
+            panic!("expected Serve");
+        };
+        assert_eq!(s.log, Some(AccessLogFormat::Json));
+        let Command::Serve(s) = command("serve") else {
+            panic!("expected Serve");
+        };
+        assert_eq!(s.log, None);
+        let e = command_err("serve --log=csv");
+        assert!(e.contains("unknown --log format 'csv'"), "{e}");
+        let e = command_err("serve --log --log=json");
+        assert!(e.contains("more than once"), "{e}");
+    }
+
+    #[test]
+    fn trace_out_takes_a_value_both_ways() {
+        let Command::Reproduce(r) =
+            command("reproduce --all --trace-out trace.json")
+        else {
+            panic!("expected Reproduce");
+        };
+        assert_eq!(r.trace_out, Some(PathBuf::from("trace.json")));
+        let Command::Query(q) =
+            command("query --trace-out=q.json")
+        else {
+            panic!("expected Query");
+        };
+        assert_eq!(q.trace_out, Some(PathBuf::from("q.json")));
+        assert_eq!(
+            command_err("query --trace-out"),
+            "--trace-out needs a value"
+        );
+    }
+
+    #[test]
+    fn typed_stats_defaults_and_url() {
+        let Command::Stats(s) = command("stats") else {
+            panic!("expected Stats");
+        };
+        assert_eq!(s.url, "http://127.0.0.1:8750");
+        assert_eq!(s.format, OutputFormat::Text);
+        let Command::Stats(s) = command(
+            "stats --url http://127.0.0.1:9999 --format=json",
+        ) else {
+            panic!("expected Stats");
+        };
+        assert_eq!(s.url, "http://127.0.0.1:9999");
+        assert_eq!(s.format, OutputFormat::Json);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 use std::path::{Path, PathBuf};
 
 use super::args::{
-    Args, OutputFormat, QueryCmd, ReproduceCmd, ServeCmd,
+    Args, OutputFormat, QueryCmd, ReproduceCmd, ServeCmd, StatsCmd,
     TraceInfoCmd,
 };
 use crate::arch::presets;
@@ -14,6 +14,7 @@ use crate::coordinator::{
     EXPERIMENT_IDS,
 };
 use crate::gpumembench::{self, InstThroughputBench, ShmemBench};
+use crate::obs;
 use crate::pic::{CaseConfig, PicSim};
 use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
 use crate::roofline::{plot_ascii, plot_svg, InstructionRoofline};
@@ -48,7 +49,28 @@ fn no_pjrt() -> anyhow::Error {
     )
 }
 
+/// Drain collected spans to `path` as a Chrome trace-event JSON
+/// document (loads in chrome://tracing / Perfetto — see
+/// docs/observability.md). The summary goes to stderr so JSON-mode
+/// stdout stays a single document.
+fn write_trace_out(path: &Path) -> anyhow::Result<()> {
+    let events = obs::trace_take();
+    std::fs::write(
+        path,
+        wire::trace_events_to_json(&events).render(),
+    )?;
+    eprintln!(
+        "wrote {} trace event(s) to {}",
+        events.len(),
+        path.display()
+    );
+    Ok(())
+}
+
 pub fn reproduce(cmd: &ReproduceCmd) -> anyhow::Result<()> {
+    if cmd.trace_out.is_some() {
+        obs::trace_begin();
+    }
     // an empty request means the full sweep — the same convention as
     // POST /v1/experiments
     let mut ids: Vec<String> = if cmd.req.ids.is_empty() {
@@ -76,6 +98,9 @@ pub fn reproduce(cmd: &ReproduceCmd) -> anyhow::Result<()> {
             println!(
                 "shard {shard}: no experiments assigned; nothing to do"
             );
+            if let Some(path) = &cmd.trace_out {
+                write_trace_out(path)?;
+            }
             return Ok(());
         }
     }
@@ -98,6 +123,9 @@ pub fn reproduce(cmd: &ReproduceCmd) -> anyhow::Result<()> {
             );
         }
     }
+    if let Some(path) = &cmd.trace_out {
+        write_trace_out(path)?;
+    }
     Ok(())
 }
 
@@ -106,6 +134,9 @@ pub fn serve(cmd: &ServeCmd) -> anyhow::Result<()> {
     use std::io::Write as _;
     use std::sync::Arc;
 
+    // the daemon self-profiles by default (it has the /v1/metrics
+    // surface to show for it); ROCLINE_OBS=0 opts out
+    obs::init_from_env(true);
     let defaults = ServiceConfig::default();
     let svc = Arc::new(AnalysisService::new(ServiceConfig {
         trace_dir: cmd.trace_dir.clone(),
@@ -121,7 +152,8 @@ pub fn serve(cmd: &ServeCmd) -> anyhow::Result<()> {
         default_deadline_ms: cmd.deadline_ms,
         ..defaults
     }));
-    let server = Server::bind(&cmd.addr, svc)?;
+    let server =
+        Server::bind(&cmd.addr, svc)?.with_access_log(cmd.log);
     // scripts (ci/run.sh) scrape the bound address from this exact
     // line; flush explicitly — piped stdout is block-buffered and the
     // serve loop never exits on its own
@@ -139,6 +171,11 @@ pub fn serve(cmd: &ServeCmd) -> anyhow::Result<()> {
 /// construction (same wire codec over the same service).
 pub fn query(cmd: &QueryCmd) -> anyhow::Result<()> {
     if let Some(url) = &cmd.url {
+        anyhow::ensure!(
+            cmd.trace_out.is_none(),
+            "--trace-out only applies to local queries (the daemon's \
+             timeline is its own; scrape /v1/metrics instead)"
+        );
         let base = url.trim_end_matches('/');
         let resp = if cmd.shutdown {
             http::post(&format!("{base}/v1/shutdown"), "{}")
@@ -172,6 +209,9 @@ pub fn query(cmd: &QueryCmd) -> anyhow::Result<()> {
         !cmd.shutdown,
         "--shutdown needs --url (no daemon to stop locally)"
     );
+    if cmd.trace_out.is_some() {
+        obs::trace_begin();
+    }
     let svc = AnalysisService::new(ServiceConfig {
         trace_dir: cmd.trace_dir.clone(),
         ..ServiceConfig::default()
@@ -226,7 +266,96 @@ pub fn query(cmd: &QueryCmd) -> anyhow::Result<()> {
             }
         }
     }
+    if let Some(path) = &cmd.trace_out {
+        write_trace_out(path)?;
+    }
     Ok(())
+}
+
+/// `rocline stats`: fetch `/v1/metrics.json` from a running daemon
+/// and render the self-profiling registry.
+pub fn stats(cmd: &StatsCmd) -> anyhow::Result<()> {
+    let base = cmd.url.trim_end_matches('/');
+    let resp = http::get(&format!("{base}/v1/metrics.json"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        resp.status == 200,
+        "server returned HTTP {} {}",
+        resp.status,
+        http::status_reason(resp.status)
+    );
+    if cmd.format == OutputFormat::Json {
+        // the daemon's exact document, as with every JSON mode
+        println!("{}", resp.body);
+        return Ok(());
+    }
+    let doc = crate::serve::Json::parse(&resp.body)
+        .map_err(|e| anyhow::anyhow!("parse metrics: {e}"))?;
+    let snap = wire::metrics_from_json(&doc)
+        .map_err(|e| anyhow::anyhow!("decode metrics: {e}"))?;
+    print!("{}", render_stats(&snap));
+    Ok(())
+}
+
+/// Histogram bucket bound for the text view (`u64::MAX` = `+Inf`).
+fn bound_str(b: u64) -> String {
+    if b == u64::MAX {
+        "inf".to_string()
+    } else {
+        b.to_string()
+    }
+}
+
+fn render_hist_table(
+    out: &mut String,
+    title: &str,
+    hists: &[obs::HistSnapshot],
+) {
+    if hists.is_empty() {
+        return;
+    }
+    out.push_str(&format!(
+        "{title}\n  {:<28} {:>8} {:>12} {:>10} {:>10} {:>10}\n",
+        "name", "count", "mean", "p50<=", "p99<=", "max"
+    ));
+    for h in hists {
+        out.push_str(&format!(
+            "  {:<28} {:>8} {:>12.1} {:>10} {:>10} {:>10}\n",
+            h.name,
+            h.count,
+            h.mean(),
+            bound_str(h.quantile_bound(0.5)),
+            bound_str(h.quantile_bound(0.99)),
+            h.max,
+        ));
+    }
+}
+
+/// The `rocline stats` text view of one metrics snapshot.
+fn render_stats(snap: &obs::MetricsSnapshot) -> String {
+    let mut out = format!(
+        "observability {} — uptime {:.1}s\n",
+        if snap.enabled { "on" } else { "off" },
+        snap.uptime_us as f64 / 1e6
+    );
+    if !snap.counters.is_empty() {
+        out.push_str("counters\n");
+        for (name, v) in &snap.counters {
+            out.push_str(&format!("  {name:<28} {v:>8}\n"));
+        }
+    }
+    render_hist_table(&mut out, "spans (latency, µs)", &snap.spans);
+    render_hist_table(&mut out, "bytes", &snap.bytes);
+    if snap.counters.is_empty()
+        && snap.spans.is_empty()
+        && snap.bytes.is_empty()
+    {
+        out.push_str(
+            "no metrics recorded yet (is ROCLINE_OBS=0 set on the \
+             daemon?)\n",
+        );
+    }
+    out
 }
 
 /// Pre-populate a persistent trace archive (`rocline record --out D`):
@@ -1019,6 +1148,47 @@ fn pic_pjrt(
 #[cfg(not(feature = "pjrt"))]
 pub fn artifacts(_args: &Args) -> anyhow::Result<()> {
     Err(no_pjrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{HistSnapshot, MetricsSnapshot, Unit};
+
+    #[test]
+    fn stats_text_view_renders_all_sections() {
+        let snap = MetricsSnapshot {
+            uptime_us: 1_500_000,
+            enabled: true,
+            counters: vec![("replay.batches".to_string(), 7)],
+            spans: vec![HistSnapshot {
+                name: "replay.l1".to_string(),
+                unit: Unit::Micros,
+                count: 2,
+                sum: 300,
+                max: 200,
+                buckets: vec![(256, 2), (u64::MAX, 2)],
+            }],
+            bytes: Vec::new(),
+        };
+        let text = render_stats(&snap);
+        assert!(text.contains("observability on"), "{text}");
+        assert!(text.contains("uptime 1.5s"), "{text}");
+        assert!(text.contains("replay.batches"), "{text}");
+        assert!(text.contains("replay.l1"), "{text}");
+        assert!(text.contains("150.0"), "mean column: {text}");
+
+        let empty = MetricsSnapshot {
+            uptime_us: 10,
+            enabled: false,
+            counters: Vec::new(),
+            spans: Vec::new(),
+            bytes: Vec::new(),
+        };
+        let text = render_stats(&empty);
+        assert!(text.contains("observability off"), "{text}");
+        assert!(text.contains("no metrics recorded yet"), "{text}");
+    }
 }
 
 #[cfg(feature = "pjrt")]

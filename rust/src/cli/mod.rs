@@ -2,12 +2,15 @@
 //!
 //! ```text
 //! rocline reproduce [--out DIR] [--shard i/n] [--trace-dir D]
-//!                   [--format text|json] [IDS...|--all]
+//!                   [--format text|json] [--trace-out F] [IDS...|--all]
 //! rocline serve [--addr A] [--trace-dir D] [--max-inflight N]
 //!               [--queue-cap N] [--deadline-ms MS] [--out DIR]
+//!               [--log[=json]]
 //! rocline query [--gpu G] [--case C] [--steps N] [--kernel K]
 //!               [--plots] [--deadline-ms MS] [--format text|json]
-//!               [--trace-dir D] [--url U [--status|--cancel|--shutdown]]
+//!               [--trace-dir D] [--trace-out F]
+//!               [--url U [--status|--cancel|--shutdown]]
+//! rocline stats [--url U] [--format text|json]
 //! rocline record [--out DIR] [--steps N] [--print-key]
 //!                [--compress none|auto|force] [CASES...]
 //! rocline trace-info <DIR|FILE> [--format text|json]
@@ -41,10 +44,15 @@ pub use args::{Args, Command, OutputFormat};
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    // self-profiling default: off for batch commands (the bench gate
+    // measures the disabled path), on for `serve` (which re-inits
+    // with default-on below); ROCLINE_OBS=0/1 wins either way
+    crate::obs::init_from_env(false);
     match Command::parse(argv)? {
         Command::Reproduce(cmd) => commands::reproduce(&cmd),
         Command::Query(cmd) => commands::query(&cmd),
         Command::Serve(cmd) => commands::serve(&cmd),
+        Command::Stats(cmd) => commands::stats(&cmd),
         Command::TraceInfo(cmd) => commands::trace_info(&cmd),
         Command::Record(args) => commands::record(&args),
         Command::Profile(args) => commands::profile(&args),
@@ -82,6 +90,8 @@ COMMANDS:
                spilled there for every other process and run)
                --format=json emits the server's ExperimentsResponse
                JSON document instead of the text reports
+               --trace-out F writes a Chrome trace-event timeline of
+               the run (open in chrome://tracing or Perfetto)
   serve        run the roofline-as-a-service daemon: mmap the trace
                archive once, answer JSON queries over HTTP/1.1 with
                per-(GPU, case) result caching, job dedup, bounded
@@ -91,7 +101,12 @@ COMMANDS:
                ephemeral), --trace-dir D, --max-inflight N,
                --queue-cap N, --deadline-ms MS (default deadline for
                requests that carry none), --out DIR (experiment
-               reports)
+               reports), --log (per-request access log on stderr;
+               --log=json for JSON lines)
+               self-profiling: GET /v1/metrics (Prometheus text) and
+               /v1/metrics.json expose span histograms + counters;
+               ROCLINE_OBS=0 disables collection (default on here,
+               off everywhere else) — see docs/observability.md
   query        one roofline query (per-kernel counters, intensities,
                GIPS; --plots adds ASCII + SVG plot data) — locally,
                or against a running daemon with --url. Local and
@@ -102,6 +117,13 @@ COMMANDS:
                client mode: --url http://HOST:PORT plus optionally
                --status (service counters), --cancel (cancel the
                (gpu, case) job), or --shutdown (stop the daemon)
+               --trace-out F (local mode) writes a Chrome trace-event
+               timeline of the query
+  stats        fetch /v1/metrics.json from a running daemon and print
+               the self-profiling registry: span latency histograms
+               (count/mean/p50/p99/max), byte histograms and counters.
+               options: --url U (default http://127.0.0.1:8750),
+               --format=json for the raw document
   record       pre-populate a trace archive: record each case once and
                spill it (idempotent; shards then replay with zero live
                recordings). options: --out DIR (default

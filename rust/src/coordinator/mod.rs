@@ -35,7 +35,9 @@ pub mod shard;
 
 pub use job::{Admission, AdmitError, JobKey, JobTable};
 pub use profile_run::{CaseRun, Context};
-pub use record::{CaseTrace, ReplayMode, StoredTrace, TraceStore};
+pub use record::{
+    CaseTrace, ReplayMode, StoredTrace, StreamingStats, TraceStore,
+};
 pub use report::Report;
 #[allow(deprecated)]
 pub use runner::{run_experiments, run_experiments_in};

@@ -339,6 +339,12 @@ impl Context {
         &self.store
     }
 
+    /// Streaming-tier gauges for every streamed trace the store
+    /// holds (see [`TraceStore::streaming_stats`]).
+    pub fn streaming_stats(&self) -> super::record::StreamingStats {
+        self.store.streaming_stats()
+    }
+
     /// Seed the `(gpu, case)` run cache with an externally-built run
     /// (e.g. one produced by the analysis service's cancellable replay
     /// path), so later experiment sweeps reuse it instead of replaying

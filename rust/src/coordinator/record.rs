@@ -47,6 +47,7 @@ use crate::trace::archive::{
     self, ArchiveInfo, CaseMeta, Compress, MappedCaseTrace,
     StreamingCaseTrace,
 };
+use crate::obs;
 use crate::util::pool::lock_recover;
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
 use crate::trace::TraceSource;
@@ -73,6 +74,7 @@ impl CaseTrace {
     /// Run the case's PIC main loop once (seeded like every profiled
     /// run) and record the five kernels of each step, expansion-neutral.
     pub fn record(cfg: &CaseConfig) -> CaseTrace {
+        let _s = obs::span("archive.record");
         let mut sim = PicSim::new(cfg, RUN_SEED);
         let mut dispatches =
             Vec::with_capacity(cfg.steps as usize * 5);
@@ -165,6 +167,7 @@ impl CaseTrace {
         dir: &Path,
         compress: Compress,
     ) -> anyhow::Result<PathBuf> {
+        let _s = obs::span("archive.spill");
         let manifest = self.cfg.manifest_line();
         // the archive is only useful if a later process can parse the
         // manifest back to this exact config (TraceStore::resolve
@@ -502,6 +505,42 @@ impl TraceStore {
     pub fn spills(&self) -> usize {
         self.spills.load(Ordering::Relaxed)
     }
+
+    /// Aggregate streaming-tier gauges across every streamed trace
+    /// this store currently holds — the `/v1/status` view of the
+    /// out-of-core replay tier (all zero when nothing streams).
+    pub fn streaming_stats(&self) -> StreamingStats {
+        let entries: Vec<_> = lock_recover(&self.entries)
+            .values()
+            .map(Arc::clone)
+            .collect();
+        let mut stats = StreamingStats::default();
+        for entry in entries {
+            if let Some(StoredTrace::Streamed { trace, .. }) =
+                lock_recover(&entry).as_ref()
+            {
+                stats.current_decode_bytes +=
+                    trace.current_decode_bytes();
+                stats.peak_decode_bytes = stats
+                    .peak_decode_bytes
+                    .max(trace.peak_decode_bytes());
+                stats.buffer_recycles += trace.buffer_recycles();
+            }
+        }
+        stats
+    }
+}
+
+/// Point-in-time gauges of the out-of-core streaming replay tier,
+/// summed over every [`StoredTrace::Streamed`] entry in a store.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamingStats {
+    /// Decode-arena bytes live right now (sum over streamed traces).
+    pub current_decode_bytes: u64,
+    /// Highest per-trace decode high-water mark seen.
+    pub peak_decode_bytes: u64,
+    /// Dispatch arenas returned to the buffer pools for reuse.
+    pub buffer_recycles: u64,
 }
 
 #[cfg(test)]

@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 
 use crate::arch::{presets, GpuSpec, Vendor};
 use crate::babelstream::DeviceStream;
+use crate::obs;
 use crate::pic::CaseConfig;
 use crate::profiler::{NvprofTool, ProfileSession, RocprofTool};
 use crate::roofline::equations as eq;
@@ -231,6 +232,14 @@ pub struct StatusResponse {
     pub jobs_done: u64,
     pub max_inflight: u64,
     pub queue_cap: u64,
+    /// Streaming-tier gauge: decode-arena bytes live right now,
+    /// summed over every streamed trace (0 when nothing streams).
+    pub stream_current_decode_bytes: u64,
+    /// Streaming-tier gauge: highest decode high-water mark seen.
+    pub stream_peak_decode_bytes: u64,
+    /// Streaming-tier counter: dispatch arenas returned to the
+    /// decode buffer pools for reuse.
+    pub stream_buffer_recycles: u64,
 }
 
 /// Cancel the running attempt of one job (identified like a query).
@@ -480,6 +489,7 @@ impl AnalysisService {
     /// Snapshot every counter and gauge.
     pub fn status(&self) -> StatusResponse {
         let c = &self.counters;
+        let stream = self.ctx.streaming_stats();
         StatusResponse {
             queries: c.queries.load(Ordering::Relaxed),
             cache_hits: c.cache_hits.load(Ordering::Relaxed),
@@ -495,6 +505,9 @@ impl AnalysisService {
             jobs_done: self.jobs.done_count() as u64,
             max_inflight: self.admission.max_inflight() as u64,
             queue_cap: self.admission.queue_cap() as u64,
+            stream_current_decode_bytes: stream.current_decode_bytes,
+            stream_peak_decode_bytes: stream.peak_decode_bytes,
+            stream_buffer_recycles: stream.buffer_recycles,
         }
     }
 
@@ -532,9 +545,11 @@ impl AnalysisService {
             match job.poll(token) {
                 Poll::Hit(run) => {
                     bump(&self.counters.cache_hits);
+                    obs::counter_inc("service.cache_hit");
                     return Ok(run);
                 }
                 Poll::Claimed(token) => {
+                    obs::counter_inc("service.cache_miss");
                     return self.execute_claim(
                         &job,
                         token,
@@ -548,6 +563,7 @@ impl AnalysisService {
                 Poll::Running => match job.wait(deadline) {
                     WaitOutcome::Done(run) => {
                         bump(&self.counters.cache_hits);
+                        obs::counter_inc("service.cache_hit");
                         return Ok(run);
                     }
                     WaitOutcome::Failed(why) => {
@@ -576,6 +592,7 @@ impl AnalysisService {
     ) -> Result<Arc<CaseRun>, ServiceError> {
         let mut guard = super::job::JobRunGuard::new(job);
         let _permit = if use_admission {
+            let _wait_span = obs::span("service.admission_wait");
             match Admission::acquire(&self.admission, deadline) {
                 Ok(p) => Some(p),
                 Err(e) => {
@@ -624,12 +641,15 @@ impl AnalysisService {
             }
         }
         let stored = self.ctx.store().get_or_record(cfg);
-        match replay_cancellable(
+        let run_span = obs::span("service.job_run");
+        let replayed = replay_cancellable(
             spec.clone(),
             &stored,
             engine_threads,
             &token,
-        ) {
+        );
+        drop(run_span);
+        match replayed {
             Ok(run) => {
                 let run = Arc::new(run);
                 bump(&self.counters.replays);

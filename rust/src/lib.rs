@@ -45,6 +45,7 @@ pub mod coordinator;
 pub mod counters;
 pub mod gpumembench;
 pub mod memsim;
+pub mod obs;
 pub mod pic;
 pub mod profiler;
 pub mod roofline;

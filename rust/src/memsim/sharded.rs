@@ -67,6 +67,7 @@ use super::coalesce::Coalescer;
 use super::hierarchy::{ChanneledL2, MemTraffic};
 use crate::arch::GpuSpec;
 use crate::trace::block::{BlockData, BlockSink, Columns, EventBlock, Tag};
+use crate::obs;
 use crate::trace::stats::TraceStats;
 use crate::trace::MemKind;
 use crate::util::pool::{lock_recover, Latch, WorkerPool};
@@ -816,8 +817,12 @@ impl ShardedHierarchy {
              record-index field of the 48/16 sequence key"
         );
 
+        obs::counter_inc("replay.batches");
+        obs::counter_add("replay.records", total_records);
+
         // ---- routing pass (one-pass, pool-parallel over chunks) -----
         let routed = if self.route {
+            let _route_span = obs::span("replay.route");
             let mut routes = std::mem::take(&mut self.routes);
             for out in routes.iter_mut() {
                 for v in out.iter_mut() {
@@ -861,30 +866,35 @@ impl ShardedHierarchy {
 
         // ---- L1 phase + stats fold, parallel and synchronous --------
         {
+            let _l1_span = obs::span("replay.l1");
             let stats = &mut self.stats;
             let shards = &mut self.shards;
             let routes_ref = routed.as_deref();
             WorkerPool::global().scope(|s| {
                 for (si, shard) in shards.iter_mut().enumerate() {
-                    s.spawn(move || match routes_ref {
-                        Some(routes) => shard.consume_routed(
-                            blocks,
-                            routes,
-                            si,
-                            sector_bytes,
-                            l2_line,
-                            channels,
-                        ),
-                        None => shard.consume_scan(
-                            blocks,
-                            n_l1,
-                            sector_bytes,
-                            l2_line,
-                            channels,
-                        ),
+                    s.spawn(move || {
+                        let _s = obs::span("replay.l1_shard");
+                        match routes_ref {
+                            Some(routes) => shard.consume_routed(
+                                blocks,
+                                routes,
+                                si,
+                                sector_bytes,
+                                l2_line,
+                                channels,
+                            ),
+                            None => shard.consume_scan(
+                                blocks,
+                                n_l1,
+                                sector_bytes,
+                                l2_line,
+                                channels,
+                            ),
+                        }
                     });
                 }
                 s.spawn(move || {
+                    let _s = obs::span("replay.fold");
                     for b in blocks {
                         stats.fold_columns_scaled(
                             &b.columns(),
@@ -933,6 +943,7 @@ impl ShardedHierarchy {
         let stage = Arc::clone(&self.stage);
         let threads = self.threads;
         WorkerPool::global().submit(&latch, move || {
+            let _s = obs::span("replay.l2_merge");
             // recover a poisoned stage lock: if an earlier channel
             // phase panicked, its payload is re-raised at the next
             // `drain_l2` wait — cascading a PoisonError here would
@@ -946,6 +957,7 @@ impl ShardedHierarchy {
     /// Wait for the in-flight channel phase (if any), fold its
     /// counters into `traffic`, and reclaim its miss buffers.
     fn drain_l2(&mut self) {
+        let _s = obs::span("replay.l2_drain");
         if let Some(latch) = self.l2_pending.take() {
             WorkerPool::global().wait(&latch);
         }

@@ -1,0 +1,225 @@
+//! Lock-free fixed-bucket histograms and monotonic counters — the
+//! storage cells behind the span registry.
+//!
+//! Buckets are powers of two: bucket `i` counts observations `v` with
+//! `v <= 2^i` (the last bucket is `+Inf`). 40 buckets cover 1 µs to
+//! ~2^39 µs (≈6 days) for latencies and 1 B to 512 GiB for byte
+//! sizes, so one layout serves both units. Every update is a handful
+//! of relaxed atomic adds — no locks on the record path, and a torn
+//! snapshot under concurrent writers is at worst off by in-flight
+//! observations (monotonic per cell, which is all Prometheus needs).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count (39 power-of-two upper bounds + one `+Inf`).
+pub const BUCKETS: usize = 40;
+
+/// A monotonic counter cell.
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// What a histogram's observations measure — picks the exposition
+/// suffix (`_seconds` vs `_bytes`) and the text-view formatting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Observations are microseconds.
+    Micros,
+    /// Observations are bytes.
+    Bytes,
+}
+
+impl Unit {
+    pub fn name(self) -> &'static str {
+        match self {
+            Unit::Micros => "us",
+            Unit::Bytes => "bytes",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Unit> {
+        match s {
+            "us" => Some(Unit::Micros),
+            "bytes" => Some(Unit::Bytes),
+            _ => None,
+        }
+    }
+}
+
+/// Fixed power-of-two-bucket histogram. All cells update with relaxed
+/// atomics; see the module docs for the consistency contract.
+pub struct Histogram {
+    pub unit: Unit,
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(unit: Unit) -> Histogram {
+        Histogram {
+            unit,
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket whose upper bound first covers `v`.
+    fn bucket_index(v: u64) -> usize {
+        // bucket i has upper bound 2^i; v=0 and v=1 land in bucket 0
+        let bits = 64 - v.leading_zeros() as usize;
+        let i = if v.is_power_of_two() || v == 0 {
+            bits.saturating_sub(1)
+        } else {
+            bits
+        };
+        i.min(BUCKETS - 1)
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)]
+            .fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self, name: &str) -> HistSnapshot {
+        let mut buckets = Vec::with_capacity(BUCKETS);
+        let mut cumulative = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cumulative += b.load(Ordering::Relaxed);
+            let le = if i == BUCKETS - 1 {
+                u64::MAX
+            } else {
+                1u64 << i
+            };
+            buckets.push((le, cumulative));
+        }
+        HistSnapshot {
+            name: name.to_string(),
+            unit: self.unit,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// A point-in-time copy of one histogram, ready for exposition.
+/// Buckets are `(upper_bound, cumulative_count)` pairs in ascending
+/// bound order; the final bound `u64::MAX` renders as `+Inf`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub name: String,
+    pub unit: Unit,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub buckets: Vec<(u64, u64)>,
+}
+
+impl HistSnapshot {
+    /// Mean observation (0 for an empty histogram).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the smallest bucket covering quantile `q`
+    /// (0.0..=1.0) — a coarse percentile for the text view.
+    pub fn quantile_bound(&self, q: f64) -> u64 {
+        let target =
+            (self.count as f64 * q).ceil().max(1.0) as u64;
+        for &(le, cum) in &self.buckets {
+            if cum >= target {
+                return le;
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_powers_of_two() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        assert_eq!(Histogram::bucket_index(1 << 20), 20);
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_counts_sum_and_cumulates() {
+        let h = Histogram::new(Unit::Micros);
+        for v in [1u64, 2, 3, 1000, 1_000_000] {
+            h.observe(v);
+        }
+        let s = h.snapshot("t");
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1 + 2 + 3 + 1000 + 1_000_000);
+        assert_eq!(s.max, 1_000_000);
+        // cumulative counts are non-decreasing and end at count
+        let mut prev = 0;
+        for &(_, cum) in &s.buckets {
+            assert!(cum >= prev);
+            prev = cum;
+        }
+        assert_eq!(s.buckets.last().unwrap().1, 5);
+        // all five observations fit under 2^20 µs
+        let (_, under_1s) = s.buckets[20];
+        assert_eq!(under_1s, 5);
+    }
+
+    #[test]
+    fn quantile_bound_is_monotonic() {
+        let h = Histogram::new(Unit::Bytes);
+        for v in 0..100u64 {
+            h.observe(v * 10);
+        }
+        let s = h.snapshot("t");
+        assert!(s.quantile_bound(0.5) <= s.quantile_bound(0.99));
+        assert!(s.quantile_bound(0.99) >= 512);
+    }
+
+    #[test]
+    fn counter_adds() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+    }
+}

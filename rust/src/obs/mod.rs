@@ -1,0 +1,578 @@
+//! Self-profiling: hierarchical span tracing, phase histograms and
+//! monotonic counters for the whole pipeline.
+//!
+//! The stack is a profiler, and until now it was itself a black box —
+//! the daemon answered queries and the replay engine ran its
+//! route→L1→L2→fold phases with no internal visibility beyond a few
+//! status counters. This module is the measurement substrate
+//! underneath `/v1/metrics`, `rocline stats` and `--trace-out` (and
+//! the one the ROADMAP's timing tier and auto-tuner will report
+//! through):
+//!
+//! * [`span`] opens an RAII guard; dropping it records the elapsed
+//!   time into a fixed-bucket [`Histogram`] keyed by the span name.
+//!   Guards nest: a thread-local cursor tracks the innermost open
+//!   span, so children know their parent without any plumbing.
+//! * Nesting crosses the [`WorkerPool`]: every job enqueued while a
+//!   span is open carries a [`SpanCtx`] that re-establishes the
+//!   spawning span as the parent on whichever worker runs it — a
+//!   decode-ahead job's span attaches to the replay span that
+//!   scheduled it, not to the worker's idle root.
+//! * [`counter_inc`]/[`counter_add`] and [`observe_bytes`] feed the
+//!   same global registry; [`snapshot`] freezes everything for the
+//!   three exposition surfaces (Prometheus text + JSON via
+//!   `serve::wire`, the `stats` text view).
+//! * With collection switched on ([`trace_begin`]), finished spans
+//!   are also appended to **per-thread buffers** as Chrome
+//!   trace-event records ([`TraceEvent`]); [`trace_take`] drains
+//!   every thread's buffer into one sorted timeline that loads in
+//!   `chrome://tracing` / Perfetto.
+//!
+//! **Cost contract.** Observability is strictly layered: the
+//! disabled path of every hook is one relaxed atomic load (checked
+//! by the `speedup/replay_obs_off_vs_on` bench gate; replay results
+//! are bit-identical either way — spans never touch the data path).
+//! The runtime toggle is `ROCLINE_OBS=0/1` (default **on** for
+//! `rocline serve`, **off** for benches); [`set_enabled`] flips it
+//! programmatically for in-process A/B runs.
+//!
+//! **Panic safety.** Registry locks use the [`lock_recover`]
+//! discipline: a panicking spanned job (caught by the pool) cannot
+//! poison the registry for every later request, and the guards
+//! restore the thread-local parent cursor during unwind.
+//!
+//! [`WorkerPool`]: crate::util::pool::WorkerPool
+//! [`lock_recover`]: crate::util::pool::lock_recover
+
+pub mod hist;
+
+pub use hist::{Counter, HistSnapshot, Histogram, Unit};
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::pool::lock_recover;
+
+// ------------------------------------------------------------ toggle
+
+/// The one global gate every hook loads (relaxed) before doing
+/// anything else.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Chrome trace-event collection (a second, rarer gate: only
+/// `--trace-out` runs pay for event buffering).
+static TRACING: AtomicBool = AtomicBool::new(false);
+
+/// Is observability on? One relaxed atomic load — the entire cost of
+/// every instrumentation site when disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Programmatic toggle (the bench A/B and `--trace-out` paths; the
+/// env var only wins at [`init_from_env`] time).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Resolve the toggle from `ROCLINE_OBS` (`0`/`1`), falling back to
+/// `default_on` when unset — `rocline serve` passes `true`, everything
+/// else `false`. Call once at entry-point setup.
+pub fn init_from_env(default_on: bool) {
+    let on = match std::env::var("ROCLINE_OBS") {
+        Ok(v) if v == "0" => false,
+        Ok(v) if v == "1" => true,
+        _ => default_on,
+    };
+    set_enabled(on);
+}
+
+// ---------------------------------------------------------- registry
+
+/// The global metric store: span-duration histograms, byte
+/// histograms and counters, keyed by name. Created on first use,
+/// never torn down.
+struct Registry {
+    start: Instant,
+    durations: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    bytes: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    /// Per-thread Chrome trace-event buffers, registered on each
+    /// thread's first traced span (see [`trace_take`]).
+    trace_bufs: Mutex<Vec<Arc<Mutex<Vec<TraceEvent>>>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        start: Instant::now(),
+        durations: Mutex::new(BTreeMap::new()),
+        bytes: Mutex::new(BTreeMap::new()),
+        counters: Mutex::new(BTreeMap::new()),
+        trace_bufs: Mutex::new(Vec::new()),
+    })
+}
+
+/// Microseconds since the registry was born (the Chrome trace
+/// timebase).
+fn now_us() -> u64 {
+    registry().start.elapsed().as_micros() as u64
+}
+
+fn intern<T>(
+    map: &Mutex<BTreeMap<String, Arc<T>>>,
+    name: &str,
+    make: impl FnOnce() -> T,
+) -> Arc<T> {
+    let mut m = lock_recover(map);
+    if let Some(v) = m.get(name) {
+        return Arc::clone(v);
+    }
+    let v = Arc::new(make());
+    m.insert(name.to_string(), Arc::clone(&v));
+    v
+}
+
+thread_local! {
+    /// Innermost open span on this thread (0 = root).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    /// Small per-thread id for Chrome trace `tid`s.
+    static TID: Cell<u64> = const { Cell::new(0) };
+    /// Per-thread cache of name → histogram, so the steady-state
+    /// record path is atomic adds, not a registry lock per span.
+    static HIST_CACHE: RefCell<HashMap<(usize, usize), Arc<Histogram>>> =
+        RefCell::new(HashMap::new());
+    /// This thread's share of the trace-event buffer (lazily
+    /// registered with the registry).
+    static TRACE_BUF: RefCell<Option<Arc<Mutex<Vec<TraceEvent>>>>> =
+        const { RefCell::new(None) };
+}
+
+fn thread_tid() -> u64 {
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+/// The cached-per-thread histogram for a static span name.
+fn duration_hist(name: &'static str) -> Arc<Histogram> {
+    let key = (name.as_ptr() as usize, name.len());
+    HIST_CACHE.with(|c| {
+        let mut cache = c.borrow_mut();
+        if let Some(h) = cache.get(&key) {
+            return Arc::clone(h);
+        }
+        let h = intern(&registry().durations, name, || {
+            Histogram::new(Unit::Micros)
+        });
+        cache.insert(key, Arc::clone(&h));
+        h
+    })
+}
+
+// ------------------------------------------------------------- spans
+
+/// Monotonic span ids (0 is the root / "no parent").
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// An open span. Created by [`span`]; records on drop. Inert (a
+/// no-op shell) when observability is disabled at open time.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+struct SpanInner {
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    start: Instant,
+    start_us: u64,
+    hist: Arc<Histogram>,
+}
+
+/// Open a span named `name`. The guard must be bound (`let _span =
+/// obs::span(...)`) so it lives to the end of the phase it measures.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { inner: None };
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = CURRENT.with(|c| {
+        let p = c.get();
+        c.set(id);
+        p
+    });
+    Span {
+        inner: Some(SpanInner {
+            name,
+            id,
+            parent,
+            start: Instant::now(),
+            start_us: now_us(),
+            hist: duration_hist(name),
+        }),
+    }
+}
+
+impl Span {
+    /// This span's id (0 when observability was off at open time) —
+    /// what child spans on other threads will record as `parent`.
+    pub fn id(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.id)
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else {
+            return;
+        };
+        // restore the parent cursor even when unwinding out of a
+        // panicking phase — the next span on this thread must not
+        // attach to a dead subtree
+        CURRENT.with(|c| c.set(inner.parent));
+        let dur_us = inner.start.elapsed().as_micros() as u64;
+        inner.hist.observe(dur_us);
+        if TRACING.load(Ordering::Relaxed) {
+            push_trace_event(TraceEvent {
+                name: inner.name,
+                id: inner.id,
+                parent: inner.parent,
+                tid: thread_tid(),
+                ts_us: inner.start_us,
+                dur_us,
+            });
+        }
+    }
+}
+
+// -------------------------------------------- cross-thread contexts
+
+/// The span context a [`WorkerPool`] job carries from its spawn site
+/// to whichever worker runs it, so spans opened inside the job attach
+/// to the spawning span's tree instead of the worker's idle root.
+///
+/// [`WorkerPool`]: crate::util::pool::WorkerPool
+#[derive(Clone, Copy)]
+pub struct SpanCtx {
+    parent: u64,
+}
+
+impl SpanCtx {
+    /// Capture the calling thread's innermost span. `None` when
+    /// observability is off (so the pool's disabled path stays one
+    /// relaxed load and zero extra allocation).
+    #[inline]
+    pub fn capture() -> Option<SpanCtx> {
+        if !enabled() {
+            return None;
+        }
+        Some(SpanCtx {
+            parent: CURRENT.with(Cell::get),
+        })
+    }
+
+    /// Install this context on the current thread for the duration of
+    /// the returned guard (restores the previous cursor on drop, panic
+    /// included).
+    pub fn apply(self) -> CtxGuard {
+        let prev = CURRENT.with(|c| {
+            let p = c.get();
+            c.set(self.parent);
+            p
+        });
+        CtxGuard { prev }
+    }
+}
+
+/// Restores the pre-[`SpanCtx::apply`] parent cursor on drop.
+pub struct CtxGuard {
+    prev: u64,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+// --------------------------------------------- counters & byte hists
+
+/// Bump a named monotonic counter by one.
+#[inline]
+pub fn counter_inc(name: &'static str) {
+    counter_add(name, 1);
+}
+
+/// Bump a named monotonic counter by `n`.
+#[inline]
+pub fn counter_add(name: &'static str, n: u64) {
+    if !enabled() {
+        return;
+    }
+    intern(&registry().counters, name, Counter::new).add(n);
+}
+
+/// Record a byte-size observation into the named byte histogram.
+#[inline]
+pub fn observe_bytes(name: &'static str, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    intern(&registry().bytes, name, || Histogram::new(Unit::Bytes))
+        .observe(bytes);
+}
+
+// --------------------------------------------------- trace collection
+
+/// One finished span in Chrome trace-event terms (a complete `"X"`
+/// event). `ts_us` is microseconds since process metric start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub id: u64,
+    pub parent: u64,
+    pub tid: u64,
+    pub ts_us: u64,
+    pub dur_us: u64,
+}
+
+fn push_trace_event(ev: TraceEvent) {
+    TRACE_BUF.with(|b| {
+        let mut slot = b.borrow_mut();
+        if slot.is_none() {
+            let buf = Arc::new(Mutex::new(Vec::new()));
+            lock_recover(&registry().trace_bufs)
+                .push(Arc::clone(&buf));
+            *slot = Some(buf);
+        }
+        let buf = slot.as_ref().expect("trace buffer just installed");
+        let mut events = lock_recover(buf);
+        // bound the per-process event memory: a runaway sweep keeps
+        // its newest ~1M events rather than growing without limit
+        const MAX_EVENTS_PER_THREAD: usize = 1 << 20;
+        if events.len() < MAX_EVENTS_PER_THREAD {
+            events.push(ev);
+        }
+    });
+}
+
+/// Start collecting finished spans as Chrome trace events (implies
+/// [`set_enabled`]`(true)`; `--trace-out` calls this before the run).
+pub fn trace_begin() {
+    set_enabled(true);
+    TRACING.store(true, Ordering::Relaxed);
+}
+
+/// Stop collecting and drain every thread's buffer into one timeline
+/// sorted by start time.
+pub fn trace_take() -> Vec<TraceEvent> {
+    TRACING.store(false, Ordering::Relaxed);
+    let mut all = Vec::new();
+    for buf in lock_recover(&registry().trace_bufs).iter() {
+        all.append(&mut lock_recover(buf));
+    }
+    all.sort_by_key(|e| (e.ts_us, e.id));
+    all
+}
+
+// ----------------------------------------------------------- snapshot
+
+/// A point-in-time copy of the whole registry — the one value all
+/// three exposition formats render from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Microseconds since the registry was created.
+    pub uptime_us: u64,
+    /// Whether collection was enabled at snapshot time.
+    pub enabled: bool,
+    /// Monotonic counters, name-sorted.
+    pub counters: Vec<(String, u64)>,
+    /// Span duration histograms (µs), name-sorted.
+    pub spans: Vec<HistSnapshot>,
+    /// Byte-size histograms, name-sorted.
+    pub bytes: Vec<HistSnapshot>,
+}
+
+/// Freeze the registry. Cheap relative to any network hop (a few
+/// map walks + atomic loads); safe under concurrent recording.
+pub fn snapshot() -> MetricsSnapshot {
+    let reg = registry();
+    let counters = lock_recover(&reg.counters)
+        .iter()
+        .map(|(k, v)| (k.clone(), v.get()))
+        .collect();
+    let spans = lock_recover(&reg.durations)
+        .iter()
+        .map(|(k, v)| v.snapshot(k))
+        .collect();
+    let bytes = lock_recover(&reg.bytes)
+        .iter()
+        .map(|(k, v)| v.snapshot(k))
+        .collect();
+    MetricsSnapshot {
+        uptime_us: now_us(),
+        enabled: enabled(),
+        counters,
+        spans,
+        bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests that flip the global toggle.
+    fn toggle_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        lock_recover(&LOCK)
+    }
+
+    fn span_count(snap: &MetricsSnapshot, name: &str) -> u64 {
+        snap.spans
+            .iter()
+            .find(|h| h.name == name)
+            .map_or(0, |h| h.count)
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = toggle_lock();
+        set_enabled(false);
+        {
+            let _s = span("test.disabled_records_nothing");
+        }
+        assert_eq!(
+            span_count(&snapshot(), "test.disabled_records_nothing"),
+            0
+        );
+    }
+
+    #[test]
+    fn enabled_spans_record_and_nest() {
+        let _g = toggle_lock();
+        set_enabled(true);
+        let outer = span("test.nest_outer");
+        let outer_id = outer.id();
+        assert_ne!(outer_id, 0);
+        {
+            let inner = span("test.nest_inner");
+            assert_ne!(inner.id(), outer_id);
+            // TLS cursor points at the inner span while it is open
+            assert_eq!(
+                SpanCtx::capture().unwrap().parent,
+                inner.id()
+            );
+        }
+        // closing the inner span restores the outer as current
+        assert_eq!(SpanCtx::capture().unwrap().parent, outer_id);
+        drop(outer);
+        set_enabled(false);
+        let snap = snapshot();
+        assert_eq!(span_count(&snap, "test.nest_outer"), 1);
+        assert_eq!(span_count(&snap, "test.nest_inner"), 1);
+    }
+
+    #[test]
+    fn counters_and_bytes_need_the_toggle() {
+        let _g = toggle_lock();
+        set_enabled(false);
+        counter_inc("test.gated_counter");
+        observe_bytes("test.gated_bytes", 123);
+        set_enabled(true);
+        counter_add("test.gated_counter", 2);
+        observe_bytes("test.gated_bytes", 1 << 16);
+        set_enabled(false);
+        let snap = snapshot();
+        let c = snap
+            .counters
+            .iter()
+            .find(|(k, _)| k == "test.gated_counter")
+            .map(|(_, v)| *v);
+        assert_eq!(c, Some(2));
+        let b = snap
+            .bytes
+            .iter()
+            .find(|h| h.name == "test.gated_bytes")
+            .expect("byte histogram registered");
+        assert_eq!(b.count, 1);
+        assert_eq!(b.sum, 1 << 16);
+        assert_eq!(b.unit, Unit::Bytes);
+    }
+
+    #[test]
+    fn ctx_guard_restores_on_drop() {
+        let _g = toggle_lock();
+        set_enabled(true);
+        let root = span("test.ctx_root");
+        let ctx = SpanCtx::capture().unwrap();
+        assert_eq!(ctx.parent, root.id());
+        {
+            let other = SpanCtx { parent: 9999 };
+            let _applied = other.apply();
+            assert_eq!(SpanCtx::capture().unwrap().parent, 9999);
+        }
+        assert_eq!(SpanCtx::capture().unwrap().parent, root.id());
+        drop(root);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn trace_events_carry_parentage() {
+        let _g = toggle_lock();
+        trace_begin();
+        let parent_id;
+        {
+            let outer = span("test.trace_outer");
+            parent_id = outer.id();
+            let _inner = span("test.trace_inner");
+        }
+        set_enabled(false);
+        let events = trace_take();
+        let inner = events
+            .iter()
+            .find(|e| e.name == "test.trace_inner")
+            .expect("inner event collected");
+        assert_eq!(inner.parent, parent_id);
+        let outer = events
+            .iter()
+            .find(|e| e.name == "test.trace_outer")
+            .expect("outer event collected");
+        assert_eq!(outer.id, parent_id);
+        // complete events: the outer span covers the inner one
+        assert!(outer.ts_us <= inner.ts_us);
+        // drained: a second take has no stale copies of these events
+        assert!(trace_take()
+            .iter()
+            .all(|e| e.name != "test.trace_inner"));
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted() {
+        let _g = toggle_lock();
+        set_enabled(true);
+        {
+            let _b = span("test.sort_b");
+        }
+        {
+            let _a = span("test.sort_a");
+        }
+        set_enabled(false);
+        let snap = snapshot();
+        let names: Vec<&str> =
+            snap.spans.iter().map(|h| h.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+}

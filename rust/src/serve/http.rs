@@ -115,9 +115,27 @@ pub fn write_response(
     extra_headers: &[(&str, &str)],
     body: &str,
 ) -> std::io::Result<()> {
+    write_response_typed(
+        stream,
+        status,
+        "application/json",
+        extra_headers,
+        body,
+    )
+}
+
+/// [`write_response`] with an explicit `Content-Type` — the
+/// `/v1/metrics` Prometheus page is the one non-JSON body we serve.
+pub fn write_response_typed(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
     write!(
         stream,
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n",
         status_reason(status),
         body.len()

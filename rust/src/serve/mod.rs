@@ -18,4 +18,4 @@ pub mod server;
 pub mod wire;
 
 pub use json::Json;
-pub use server::Server;
+pub use server::{AccessLogFormat, Server};

@@ -18,11 +18,12 @@ use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::service::{
     AnalysisService, ServiceError,
 };
+use crate::obs;
 
 use super::http::{self, Request};
 use super::json::Json;
@@ -31,10 +32,22 @@ use super::wire;
 /// How often the accept loop re-checks the shutdown flag.
 const POLL: Duration = Duration::from_millis(20);
 
+/// Per-request access-log flavour (`--log` / `--log=json`). Lines go
+/// to **stderr**: stdout carries the `listening on` line CI scrapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessLogFormat {
+    /// One human-readable line per request.
+    Text,
+    /// One JSON object per request (rendered by [`Json`], same doc
+    /// model as every API body).
+    Json,
+}
+
 pub struct Server {
     listener: TcpListener,
     svc: Arc<AnalysisService>,
     shutdown: Arc<AtomicBool>,
+    log: Option<AccessLogFormat>,
 }
 
 impl Server {
@@ -55,7 +68,17 @@ impl Server {
             listener,
             svc,
             shutdown: Arc::new(AtomicBool::new(false)),
+            log: None,
         })
+    }
+
+    /// Enable the per-request access log (`--log[=json]`).
+    pub fn with_access_log(
+        mut self,
+        fmt: Option<AccessLogFormat>,
+    ) -> Server {
+        self.log = fmt;
+        self
     }
 
     pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
@@ -87,8 +110,11 @@ impl Server {
                     let svc = self.svc.clone();
                     let shutdown = self.shutdown.clone();
                     let active = active.clone();
+                    let log = self.log;
                     workers.push(std::thread::spawn(move || {
-                        handle_connection(&svc, &shutdown, stream);
+                        handle_connection(
+                            &svc, &shutdown, log, stream,
+                        );
                         active.fetch_sub(1, Ordering::SeqCst);
                     }));
                 }
@@ -124,6 +150,7 @@ fn shed_connection(stream: TcpStream) -> std::io::Result<()> {
 fn handle_connection(
     svc: &AnalysisService,
     shutdown: &AtomicBool,
+    log: Option<AccessLogFormat>,
     stream: TcpStream,
 ) {
     // handler sockets are blocking (the listener's non-blocking mode
@@ -137,17 +164,28 @@ fn handle_connection(
     let mut writer = stream;
     match http::read_request(&mut reader) {
         Ok(Some(req)) => {
-            let (status, cache, body) = route(svc, shutdown, &req);
-            let extra: Vec<(&str, &str)> = match cache {
+            let started = Instant::now();
+            let routed = {
+                // the span covers routing + the job itself, so
+                // engine-phase spans nest under serve.request
+                let _req_span = obs::span("serve.request");
+                obs::counter_inc("serve.requests");
+                route(svc, shutdown, &req)
+            };
+            let extra: Vec<(&str, &str)> = match routed.cache {
                 Some(state) => vec![("X-Rocline-Cache", state)],
                 None => Vec::new(),
             };
-            let _ = http::write_response(
+            let _ = http::write_response_typed(
                 &mut writer,
-                status,
+                routed.status,
+                routed.content_type,
                 &extra,
-                &body,
+                &routed.body,
             );
+            if let Some(fmt) = log {
+                access_log(fmt, &req, &routed, started.elapsed());
+            }
         }
         Ok(None) => {} // peer connected and closed: health poke
         Err(msg) => {
@@ -164,6 +202,46 @@ fn handle_connection(
     }
 }
 
+/// One line per completed request, to stderr (see
+/// [`AccessLogFormat`]).
+fn access_log(
+    fmt: AccessLogFormat,
+    req: &Request,
+    routed: &Routed,
+    elapsed: Duration,
+) {
+    let ms = elapsed.as_secs_f64() * 1e3;
+    match fmt {
+        AccessLogFormat::Text => {
+            let mut line = format!(
+                "[serve] {} {} {} {ms:.3}ms",
+                req.method, req.path, routed.status
+            );
+            if let Some(cache) = routed.cache {
+                line.push_str(&format!(" cache={cache}"));
+            }
+            if let Some(job) = &routed.job {
+                line.push_str(&format!(" job={job}"));
+            }
+            eprintln!("{line}");
+        }
+        AccessLogFormat::Json => {
+            let mut doc = Json::obj()
+                .set("method", Json::str(&req.method))
+                .set("path", Json::str(&req.path))
+                .set("status", Json::u64(u64::from(routed.status)))
+                .set("latency_ms", Json::f64((ms * 1e3).round() / 1e3));
+            if let Some(cache) = routed.cache {
+                doc = doc.set("cache", Json::str(cache));
+            }
+            if let Some(job) = &routed.job {
+                doc = doc.set("job", Json::str(job));
+            }
+            eprintln!("{}", doc.render());
+        }
+    }
+}
+
 fn error_body(status: u16, code: &str, message: &str) -> String {
     Json::obj()
         .set("error", Json::str(code))
@@ -172,18 +250,53 @@ fn error_body(status: u16, code: &str, message: &str) -> String {
         .render()
 }
 
-/// Dispatch one request. Returns (status, cache-header state, body).
+/// What [`route`] hands back to the connection handler: everything
+/// the response writer and the access log need.
+struct Routed {
+    status: u16,
+    /// `X-Rocline-Cache` header state (query endpoint only).
+    cache: Option<&'static str>,
+    /// `gpu/case` job key for the access log, when the request names
+    /// one.
+    job: Option<String>,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Routed {
+    fn json(
+        status: u16,
+        cache: Option<&'static str>,
+        body: String,
+    ) -> Routed {
+        Routed {
+            status,
+            cache,
+            job: None,
+            content_type: "application/json",
+            body,
+        }
+    }
+
+    fn with_job(mut self, job: Option<String>) -> Routed {
+        self.job = job;
+        self
+    }
+}
+
+/// Dispatch one request.
 fn route(
     svc: &AnalysisService,
     shutdown: &AtomicBool,
     req: &Request,
-) -> (u16, Option<&'static str>, String) {
+) -> Routed {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/query") => {
             let parsed = parse_body(&req.body)
                 .and_then(|j| wire::query_request_from_json(&j));
             match parsed {
                 Ok(q) => {
+                    let job = format!("{}/{}", q.gpu, q.case);
                     // observed before the query runs: a done job means
                     // this request is served from cache
                     let cache = if svc.is_cached(&q) {
@@ -192,13 +305,16 @@ fn route(
                         "miss"
                     };
                     match svc.query(&q) {
-                        Ok(resp) => (
+                        Ok(resp) => Routed::json(
                             200,
                             Some(cache),
                             wire::query_response_to_json(&resp)
                                 .render(),
-                        ),
-                        Err(e) => service_error(&e),
+                        )
+                        .with_job(Some(job)),
+                        Err(e) => {
+                            service_error(&e).with_job(Some(job))
+                        }
                     }
                 }
                 Err(msg) => bad_request(&msg),
@@ -208,15 +324,21 @@ fn route(
             let parsed = parse_body(&req.body)
                 .and_then(|j| wire::cancel_request_from_json(&j));
             match parsed {
-                Ok(c) => match svc.cancel(&c) {
-                    Ok(resp) => (
-                        200,
-                        None,
-                        wire::cancel_response_to_json(&resp)
-                            .render(),
-                    ),
-                    Err(e) => service_error(&e),
-                },
+                Ok(c) => {
+                    let job = format!("{}/{}", c.gpu, c.case);
+                    match svc.cancel(&c) {
+                        Ok(resp) => Routed::json(
+                            200,
+                            None,
+                            wire::cancel_response_to_json(&resp)
+                                .render(),
+                        )
+                        .with_job(Some(job)),
+                        Err(e) => {
+                            service_error(&e).with_job(Some(job))
+                        }
+                    }
+                }
                 Err(msg) => bad_request(&msg),
             }
         }
@@ -226,7 +348,7 @@ fn route(
             });
             match parsed {
                 Ok(r) => match svc.run_reports_wire(&r) {
-                    Ok(resp) => (
+                    Ok(resp) => Routed::json(
                         200,
                         None,
                         wire::experiments_response_to_json(&resp)
@@ -237,26 +359,45 @@ fn route(
                 Err(msg) => bad_request(&msg),
             }
         }
-        ("GET", "/v1/status") => (
+        ("GET", "/v1/status") => Routed::json(
             200,
             None,
             wire::status_response_to_json(&svc.status()).render(),
         ),
+        ("GET", "/v1/metrics") => Routed {
+            status: 200,
+            cache: None,
+            job: None,
+            content_type: "text/plain; version=0.0.4",
+            body: wire::metrics_to_prometheus(&obs::snapshot()),
+        },
+        ("GET", "/v1/metrics.json") => Routed::json(
+            200,
+            None,
+            wire::metrics_to_json(&obs::snapshot()).render(),
+        ),
         ("GET", "/v1/archives") => match svc.trace_info() {
-            Ok(resp) => {
-                (200, None, wire::trace_info_to_json(&resp).render())
-            }
+            Ok(resp) => Routed::json(
+                200,
+                None,
+                wire::trace_info_to_json(&resp).render(),
+            ),
             Err(e) => service_error(&e),
         },
         ("POST", "/v1/shutdown") => {
             shutdown.store(true, Ordering::SeqCst);
-            (200, None, Json::obj().set("ok", Json::Bool(true)).render())
+            Routed::json(
+                200,
+                None,
+                Json::obj().set("ok", Json::Bool(true)).render(),
+            )
         }
         (
             _,
             "/v1/query" | "/v1/cancel" | "/v1/experiments"
-            | "/v1/status" | "/v1/archives" | "/v1/shutdown",
-        ) => (
+            | "/v1/status" | "/v1/metrics" | "/v1/metrics.json"
+            | "/v1/archives" | "/v1/shutdown",
+        ) => Routed::json(
             405,
             None,
             error_body(
@@ -265,7 +406,7 @@ fn route(
                 &format!("{} not allowed on {}", req.method, req.path),
             ),
         ),
-        (_, path) => (
+        (_, path) => Routed::json(
             404,
             None,
             error_body(
@@ -284,15 +425,17 @@ fn parse_body(body: &str) -> Result<Json, String> {
     Json::parse(body)
 }
 
-fn bad_request(msg: &str) -> (u16, Option<&'static str>, String) {
+fn bad_request(msg: &str) -> Routed {
     let e = ServiceError::BadRequest(msg.to_string());
     service_error(&e)
 }
 
-fn service_error(
-    e: &ServiceError,
-) -> (u16, Option<&'static str>, String) {
-    (e.http_status(), None, wire::error_to_json(e).render())
+fn service_error(e: &ServiceError) -> Routed {
+    Routed::json(
+        e.http_status(),
+        None,
+        wire::error_to_json(e).render(),
+    )
 }
 
 #[cfg(test)]
@@ -349,6 +492,49 @@ mod tests {
         let resp =
             http::get(&format!("{base}/v1/archives")).unwrap();
         assert_eq!(resp.status, 400);
+
+        let resp =
+            http::post(&format!("{base}/v1/shutdown"), "{}").unwrap();
+        assert_eq!(resp.status, 200);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_endpoints_serve_prometheus_and_json() {
+        // note: this test must not flip the global obs toggle (other
+        // tests serialize on it) — both pages render fine either way
+        let (addr, handle) = start();
+        let base = format!("http://{addr}");
+
+        let resp = http::get(&format!("{base}/v1/metrics")).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.header("content-type"),
+            Some("text/plain; version=0.0.4")
+        );
+        assert!(
+            resp.body.contains("rocline_uptime_seconds"),
+            "{}",
+            resp.body
+        );
+        assert!(resp.body.contains("rocline_obs_enabled"));
+
+        let resp =
+            http::get(&format!("{base}/v1/metrics.json")).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.header("content-type"),
+            Some("application/json")
+        );
+        let snap = wire::metrics_from_json(
+            &Json::parse(&resp.body).unwrap(),
+        )
+        .unwrap();
+        assert!(snap.uptime_us > 0);
+
+        let resp =
+            http::post(&format!("{base}/v1/metrics"), "{}").unwrap();
+        assert_eq!(resp.status, 405, "POST on the metrics page");
 
         let resp =
             http::post(&format!("{base}/v1/shutdown"), "{}").unwrap();

@@ -4,7 +4,11 @@
 //! surface: `rocline serve` responses, `query --format=json`,
 //! `trace-info --format=json` and `reproduce --format=json` all call
 //! the same `*_to_json` functions, so daemon and batch output are
-//! byte-identical by construction. Field order is declaration order;
+//! byte-identical by construction. The self-profiling surfaces render
+//! here too: `/v1/metrics` ([`metrics_to_prometheus`]),
+//! `/v1/metrics.json` + `rocline stats` ([`metrics_to_json`] /
+//! [`metrics_from_json`]) and `--trace-out`
+//! ([`trace_events_to_json`]). Field order is declaration order;
 //! optional fields are omitted (never `null`); `case_key` travels as
 //! the 16-digit zero-padded hex string that also names archive files.
 
@@ -13,6 +17,7 @@ use crate::coordinator::service::{
     ExperimentsResponse, KernelCounters, QueryRequest, QueryResponse,
     ReportSummary, ServiceError, StatusResponse, TraceInfoResponse,
 };
+use crate::obs::{HistSnapshot, MetricsSnapshot, TraceEvent, Unit};
 use crate::roofline::{
     InstructionRoofline, IrmPoint, MemCeiling, XUnit,
 };
@@ -330,6 +335,18 @@ pub fn status_response_to_json(s: &StatusResponse) -> Json {
         .set("jobs_done", Json::u64(s.jobs_done))
         .set("max_inflight", Json::u64(s.max_inflight))
         .set("queue_cap", Json::u64(s.queue_cap))
+        .set(
+            "stream_current_decode_bytes",
+            Json::u64(s.stream_current_decode_bytes),
+        )
+        .set(
+            "stream_peak_decode_bytes",
+            Json::u64(s.stream_peak_decode_bytes),
+        )
+        .set(
+            "stream_buffer_recycles",
+            Json::u64(s.stream_buffer_recycles),
+        )
 }
 
 pub fn status_response_from_json(
@@ -350,6 +367,15 @@ pub fn status_response_from_json(
         jobs_done: get_u64(j, "jobs_done")?,
         max_inflight: get_u64(j, "max_inflight")?,
         queue_cap: get_u64(j, "queue_cap")?,
+        stream_current_decode_bytes: get_u64(
+            j,
+            "stream_current_decode_bytes",
+        )?,
+        stream_peak_decode_bytes: get_u64(
+            j,
+            "stream_peak_decode_bytes",
+        )?,
+        stream_buffer_recycles: get_u64(j, "stream_buffer_recycles")?,
     })
 }
 
@@ -532,6 +558,269 @@ pub fn error_to_json(e: &ServiceError) -> Json {
         .set("message", Json::str(&e.to_string()))
 }
 
+// -------------------------------------------------------------- metrics
+
+/// One histogram snapshot as
+/// `{"name":..,"unit":"us","count":n,"sum":n,"max":n,"buckets":[[le,cum],..]}`.
+/// The `+Inf` bound travels as `u64::MAX` so the document round-trips.
+fn hist_to_json(h: &HistSnapshot) -> Json {
+    Json::obj()
+        .set("name", Json::str(&h.name))
+        .set("unit", Json::str(h.unit.name()))
+        .set("count", Json::u64(h.count))
+        .set("sum", Json::u64(h.sum))
+        .set("max", Json::u64(h.max))
+        .set(
+            "buckets",
+            Json::Arr(
+                h.buckets
+                    .iter()
+                    .map(|&(le, cum)| {
+                        Json::Arr(vec![Json::u64(le), Json::u64(cum)])
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+fn hist_from_json(j: &Json) -> Result<HistSnapshot, String> {
+    let unit_name = get_str(j, "unit")?;
+    let unit = Unit::parse(&unit_name)
+        .ok_or_else(|| format!("unknown histogram unit '{unit_name}'"))?;
+    let mut buckets = Vec::new();
+    for pair in j
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'buckets'")?
+    {
+        let pair = pair
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or("histogram bucket is not a [le, cum] pair")?;
+        let le = pair[0]
+            .as_u64()
+            .ok_or("bad bucket upper bound")?;
+        let cum = pair[1]
+            .as_u64()
+            .ok_or("bad bucket cumulative count")?;
+        buckets.push((le, cum));
+    }
+    Ok(HistSnapshot {
+        name: get_str(j, "name")?,
+        unit,
+        count: get_u64(j, "count")?,
+        sum: get_u64(j, "sum")?,
+        max: get_u64(j, "max")?,
+        buckets,
+    })
+}
+
+/// The `/v1/metrics.json` document: uptime, toggle state, counters as
+/// a name→value object, span-duration and byte histograms as arrays.
+pub fn metrics_to_json(m: &MetricsSnapshot) -> Json {
+    let mut counters = Json::obj();
+    for (name, value) in &m.counters {
+        counters = counters.set(name, Json::u64(*value));
+    }
+    Json::obj()
+        .set("uptime_us", Json::u64(m.uptime_us))
+        .set("enabled", Json::Bool(m.enabled))
+        .set("counters", counters)
+        .set(
+            "spans",
+            Json::Arr(m.spans.iter().map(hist_to_json).collect()),
+        )
+        .set(
+            "bytes",
+            Json::Arr(m.bytes.iter().map(hist_to_json).collect()),
+        )
+}
+
+/// Parse a `/v1/metrics.json` document back into a snapshot — the
+/// `rocline stats` client side of [`metrics_to_json`].
+pub fn metrics_from_json(
+    j: &Json,
+) -> Result<MetricsSnapshot, String> {
+    let mut counters = Vec::new();
+    for (name, value) in j
+        .get("counters")
+        .and_then(Json::as_obj)
+        .ok_or("missing object field 'counters'")?
+    {
+        let v = value
+            .as_u64()
+            .ok_or_else(|| format!("bad counter value for '{name}'"))?;
+        counters.push((name.clone(), v));
+    }
+    let mut spans = Vec::new();
+    for h in j
+        .get("spans")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'spans'")?
+    {
+        spans.push(hist_from_json(h)?);
+    }
+    let mut bytes = Vec::new();
+    for h in j
+        .get("bytes")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field 'bytes'")?
+    {
+        bytes.push(hist_from_json(h)?);
+    }
+    Ok(MetricsSnapshot {
+        uptime_us: get_u64(j, "uptime_us")?,
+        enabled: j
+            .get("enabled")
+            .and_then(Json::as_bool)
+            .ok_or("missing bool field 'enabled'")?,
+        counters,
+        spans,
+        bytes,
+    })
+}
+
+/// Metric-name characters Prometheus accepts; everything else
+/// (notably the `.` in span names) becomes `_`.
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+fn prom_histogram(
+    out: &mut String,
+    metric: &str,
+    label: &str,
+    h: &HistSnapshot,
+) {
+    // span durations are recorded in µs but exposed in seconds, per
+    // Prometheus base-unit convention; byte histograms pass through
+    let scale = match h.unit {
+        Unit::Micros => 1e-6,
+        Unit::Bytes => 1.0,
+    };
+    for &(le, cum) in &h.buckets {
+        let bound = if le == u64::MAX {
+            "+Inf".to_string()
+        } else {
+            format!("{}", le as f64 * scale)
+        };
+        out.push_str(&format!(
+            "{metric}_bucket{{{label}=\"{}\",le=\"{bound}\"}} {cum}\n",
+            h.name
+        ));
+    }
+    out.push_str(&format!(
+        "{metric}_sum{{{label}=\"{}\"}} {}\n",
+        h.name,
+        h.sum as f64 * scale
+    ));
+    out.push_str(&format!(
+        "{metric}_count{{{label}=\"{}\"}} {}\n",
+        h.name, h.count
+    ));
+}
+
+/// The `/v1/metrics` page: Prometheus text exposition format v0.0.4.
+/// Counters become `rocline_<name>_total`; span histograms share one
+/// metric family `rocline_span_duration_seconds` distinguished by a
+/// `span` label (byte histograms likewise under `rocline_bytes`), so
+/// a dashboard can aggregate across phases without knowing every
+/// span name in advance.
+pub fn metrics_to_prometheus(m: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# HELP rocline_uptime_seconds Seconds since the metrics \
+         registry was created.\n\
+         # TYPE rocline_uptime_seconds gauge\n",
+    );
+    out.push_str(&format!(
+        "rocline_uptime_seconds {}\n",
+        m.uptime_us as f64 / 1e6
+    ));
+    out.push_str(
+        "# HELP rocline_obs_enabled Whether span collection is \
+         currently on.\n\
+         # TYPE rocline_obs_enabled gauge\n",
+    );
+    out.push_str(&format!(
+        "rocline_obs_enabled {}\n",
+        u8::from(m.enabled)
+    ));
+    for (name, value) in &m.counters {
+        let n = prom_name(name);
+        out.push_str(&format!(
+            "# TYPE rocline_{n}_total counter\n\
+             rocline_{n}_total {value}\n"
+        ));
+    }
+    if !m.spans.is_empty() {
+        out.push_str(
+            "# HELP rocline_span_duration_seconds Phase latency by \
+             span name.\n\
+             # TYPE rocline_span_duration_seconds histogram\n",
+        );
+    }
+    for h in &m.spans {
+        prom_histogram(
+            &mut out,
+            "rocline_span_duration_seconds",
+            "span",
+            h,
+        );
+    }
+    if !m.bytes.is_empty() {
+        out.push_str(
+            "# HELP rocline_bytes Byte-size observations by \
+             histogram name.\n\
+             # TYPE rocline_bytes histogram\n",
+        );
+    }
+    for h in &m.bytes {
+        prom_histogram(&mut out, "rocline_bytes", "hist", h);
+    }
+    out
+}
+
+// ---------------------------------------------------------- trace events
+
+/// Render finished spans as a Chrome trace-event document (complete
+/// `"X"` events) that loads directly in `chrome://tracing` and
+/// Perfetto. Span ids/parents ride in `args` so the hierarchy
+/// survives even though the viewer nests by time containment.
+pub fn trace_events_to_json(events: &[TraceEvent]) -> Json {
+    Json::obj()
+        .set(
+            "traceEvents",
+            Json::Arr(
+                events
+                    .iter()
+                    .map(|e| {
+                        Json::obj()
+                            .set("name", Json::str(e.name))
+                            .set("cat", Json::str("rocline"))
+                            .set("ph", Json::str("X"))
+                            .set("ts", Json::u64(e.ts_us))
+                            .set("dur", Json::u64(e.dur_us))
+                            .set("pid", Json::u64(1))
+                            .set("tid", Json::u64(e.tid))
+                            .set(
+                                "args",
+                                Json::obj()
+                                    .set("id", Json::u64(e.id))
+                                    .set(
+                                        "parent",
+                                        Json::u64(e.parent),
+                                    ),
+                            )
+                    })
+                    .collect(),
+            ),
+        )
+        .set("displayTimeUnit", Json::str("ms"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -674,6 +963,117 @@ mod tests {
         let back =
             trace_info_from_json(&trace_info_to_json(&t)).unwrap();
         assert_eq!(back, t);
+    }
+
+    fn sample_metrics() -> MetricsSnapshot {
+        MetricsSnapshot {
+            uptime_us: 2_500_000,
+            enabled: true,
+            counters: vec![
+                ("replay.batches".to_string(), 12),
+                ("serve.requests".to_string(), 3),
+            ],
+            spans: vec![HistSnapshot {
+                name: "replay.l1".to_string(),
+                unit: Unit::Micros,
+                count: 2,
+                sum: 1536,
+                max: 1024,
+                buckets: vec![
+                    (512, 1),
+                    (1024, 2),
+                    (u64::MAX, 2),
+                ],
+            }],
+            bytes: vec![HistSnapshot {
+                name: "stream.decode.bytes".to_string(),
+                unit: Unit::Bytes,
+                count: 1,
+                sum: 4096,
+                max: 4096,
+                buckets: vec![(4096, 1), (u64::MAX, 1)],
+            }],
+        }
+    }
+
+    #[test]
+    fn metrics_round_trip_and_render() {
+        let m = sample_metrics();
+        let doc = metrics_to_json(&m);
+        let text = doc.render();
+        assert!(text.contains("\"replay.batches\":12"));
+        let back =
+            metrics_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(metrics_to_json(&back).render(), text);
+    }
+
+    #[test]
+    fn prometheus_page_has_counters_and_histograms() {
+        let page = metrics_to_prometheus(&sample_metrics());
+        assert!(page
+            .contains("# TYPE rocline_replay_batches_total counter"));
+        assert!(page.contains("rocline_replay_batches_total 12"));
+        assert!(page.contains("rocline_serve_requests_total 3"));
+        // µs bounds exposed in seconds; last bucket is +Inf
+        assert!(page.contains(
+            "rocline_span_duration_seconds_bucket\
+             {span=\"replay.l1\",le=\"0.000512\"} 1"
+        ));
+        assert!(page.contains(
+            "rocline_span_duration_seconds_bucket\
+             {span=\"replay.l1\",le=\"+Inf\"} 2"
+        ));
+        assert!(page.contains(
+            "rocline_span_duration_seconds_count\
+             {span=\"replay.l1\"} 2"
+        ));
+        // byte bounds pass through unscaled
+        assert!(page.contains(
+            "rocline_bytes_bucket\
+             {hist=\"stream.decode.bytes\",le=\"4096\"} 1"
+        ));
+        assert!(page.contains("rocline_uptime_seconds 2.5"));
+        assert!(page.contains("rocline_obs_enabled 1"));
+        // every exposition line is either a comment or name[{..}] value
+        for line in page.lines() {
+            assert!(
+                line.starts_with('#')
+                    || line
+                        .split_whitespace()
+                        .count()
+                        == 2,
+                "malformed line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_events_render_as_chrome_complete_events() {
+        let events = [crate::obs::TraceEvent {
+            name: "replay.l1",
+            id: 7,
+            parent: 3,
+            tid: 2,
+            ts_us: 100,
+            dur_us: 50,
+        }];
+        let doc = trace_events_to_json(&events);
+        let text = doc.render();
+        assert!(text.contains("\"traceEvents\":["));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ts\":100"));
+        assert!(text.contains("\"dur\":50"));
+        assert!(text.contains("\"parent\":3"));
+        // parses back as valid JSON
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed
+                .get("traceEvents")
+                .and_then(Json::as_arr)
+                .map(<[Json]>::len),
+            Some(1)
+        );
     }
 
     #[test]

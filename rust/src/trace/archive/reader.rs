@@ -50,6 +50,7 @@ use super::format::{
 use super::format::ALL_COLUMNS_MASK;
 use super::mmap::{ArchiveBuf, OwnedBytes};
 use crate::arch::InstClass;
+use crate::obs;
 use crate::trace::block::{BlockData, Tag};
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
 use crate::trace::{MemKind, MAX_LANES};
@@ -458,6 +459,7 @@ pub struct MappedCaseTrace {
 impl MappedCaseTrace {
     /// Map `path` and validate everything (see the module docs).
     pub fn open(path: &Path) -> anyhow::Result<MappedCaseTrace> {
+        let _s = obs::span("archive.open");
         Self::open_inner(path).map_err(|e| {
             anyhow::anyhow!("trace archive {}: {e}", path.display())
         })
@@ -897,6 +899,9 @@ pub struct StreamingCaseTrace {
     /// High-water mark of `cur_bytes` — what `mem/replay_peak_rss`
     /// reports.
     peak_bytes: AtomicU64,
+    /// How many dispatch arenas were returned to `word_pool` for
+    /// reuse — the buffer-pool recycle gauge `/v1/status` surfaces.
+    recycles: AtomicU64,
 }
 
 impl StreamingCaseTrace {
@@ -905,6 +910,7 @@ impl StreamingCaseTrace {
     /// checksums and semantic validation run per dispatch at decode
     /// time.
     pub fn open(path: &Path) -> anyhow::Result<StreamingCaseTrace> {
+        let _s = obs::span("archive.open");
         Self::open_inner(path).map_err(|e| {
             anyhow::anyhow!("trace archive {}: {e}", path.display())
         })
@@ -976,6 +982,7 @@ impl StreamingCaseTrace {
             scratch_pool: Mutex::new(Vec::new()),
             cur_bytes: AtomicU64::new(0),
             peak_bytes: AtomicU64::new(0),
+            recycles: AtomicU64::new(0),
         })
     }
 
@@ -1035,6 +1042,12 @@ impl StreamingCaseTrace {
         self.peak_bytes.load(Ordering::Relaxed)
     }
 
+    /// How many dispatch arenas have been returned to the buffer
+    /// pool for reuse (see [`Self::recycle`]).
+    pub fn buffer_recycles(&self) -> u64 {
+        self.recycles.load(Ordering::Relaxed)
+    }
+
     fn track(&self, bytes: u64) {
         let cur =
             self.cur_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
@@ -1055,6 +1068,7 @@ impl StreamingCaseTrace {
         &self,
         i: usize,
     ) -> anyhow::Result<StreamedDispatch> {
+        let _s = obs::span("stream.decode");
         self.decode_dispatch_inner(i).map_err(|e| {
             anyhow::anyhow!(
                 "trace archive {}: {e}",
@@ -1104,6 +1118,10 @@ impl StreamingCaseTrace {
         let arena_capacity = arena.capacity_bytes() as u64;
         let transient =
             (scratch.capacity() + decode_buf.capacity()) as u64;
+        obs::observe_bytes(
+            "stream.decode.bytes",
+            arena_capacity + transient,
+        );
         self.track(arena_capacity + transient);
         self.untrack(transient);
         {
@@ -1113,6 +1131,7 @@ impl StreamingCaseTrace {
         }
         if let Some(err) = failure {
             self.untrack(arena_capacity);
+            self.recycles.fetch_add(1, Ordering::Relaxed);
             lock_recover(&self.word_pool).push(arena.into_words());
             return Err(err);
         }
@@ -1251,6 +1270,7 @@ impl StreamingCaseTrace {
         drop(blocks);
         self.untrack(arena_capacity);
         if let Ok(owned) = Arc::try_unwrap(arena) {
+            self.recycles.fetch_add(1, Ordering::Relaxed);
             lock_recover(&self.word_pool).push(owned.into_words());
         }
     }

@@ -179,6 +179,15 @@ impl WorkerPool {
     }
 
     fn push(&self, latch: &Latch, job: Job) {
+        // propagate the spawner's open span to whichever worker runs
+        // the job (None — and no extra box — when obs is off)
+        let job = match crate::obs::SpanCtx::capture() {
+            Some(ctx) => Box::new(move || {
+                let _g = ctx.apply();
+                job();
+            }) as Job,
+            None => job,
+        };
         latch.add(1);
         let mut queue = lock_recover(&self.shared.queue);
         queue.push_back((latch.clone(), job));

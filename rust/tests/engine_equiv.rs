@@ -432,6 +432,38 @@ fn all_inst_blocks_route_zero_work_shards() {
 }
 
 #[test]
+fn replay_is_bit_identical_with_observability_on() {
+    // the self-profiling cost contract: ROCLINE_OBS=1 wraps the
+    // route/L1/L2/fold phases in spans but must not perturb a single
+    // counter on any GPU preset — the sequential reference path is
+    // uninstrumented, so seq == sharded here proves the instrumented
+    // engine still replays bit-identically
+    rocline::obs::set_enabled(true);
+    for spec in presets::all_gpus() {
+        let t = StreamTrace::babelstream("copy", 1 << 12);
+        assert_raw_equivalence(&t, &spec, &[1, 4]);
+        let mixed = MixedTrace {
+            n: 1 << 11,
+            span: 1 << 20,
+            seed: 29,
+        };
+        assert_raw_equivalence(&mixed, &spec, &[3, 16]);
+    }
+    rocline::obs::set_enabled(false);
+    // and the toggle was really on: the replay phases left spans
+    // behind (cross-thread — the L1 phase runs on pool workers)
+    let snap = rocline::obs::snapshot();
+    for name in ["replay.route", "replay.l1", "replay.l1_shard"] {
+        assert!(
+            snap.spans
+                .iter()
+                .any(|h| h.name == name && h.count > 0),
+            "no '{name}' span recorded"
+        );
+    }
+}
+
+#[test]
 fn empty_and_tiny_dispatches_equivalent() {
     // degenerate shapes: single group, partial group, zero work
     let spec = presets::mi60();

@@ -1,0 +1,161 @@
+//! Integration tests for the self-profiling layer under real
+//! [`WorkerPool`] concurrency: cross-thread span parentage (jobs
+//! attach to the span that spawned them, not the worker's idle root),
+//! histogram aggregation across worker threads, and panic safety of
+//! the global registry.
+//!
+//! These run in their own test binary, so the global observability
+//! toggle is shared only between the tests in this file — they
+//! serialize on [`obs_lock`] and use `obsint.*` span names that no
+//! production code path records.
+//!
+//! [`WorkerPool`]: rocline::util::pool::WorkerPool
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+use rocline::obs;
+use rocline::util::pool::{lock_recover, Latch, WorkerPool};
+
+/// Serialize tests that flip the process-global obs toggle.
+fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    lock_recover(&LOCK)
+}
+
+fn span_count(snap: &obs::MetricsSnapshot, name: &str) -> u64 {
+    snap.spans
+        .iter()
+        .find(|h| h.name == name)
+        .map_or(0, |h| h.count)
+}
+
+#[test]
+fn pool_jobs_attach_to_the_spawning_span() {
+    let _g = obs_lock();
+    obs::trace_begin();
+    let pool = WorkerPool::new(4);
+    let latch = Latch::new();
+    let outer = obs::span("obsint.attach_outer");
+    let outer_id = outer.id();
+    assert_ne!(outer_id, 0);
+    const JOBS: usize = 8;
+    for _ in 0..JOBS {
+        pool.submit(&latch, || {
+            let job = obs::span("obsint.attach_job");
+            // nesting works inside the job too
+            let _leaf = obs::span("obsint.attach_leaf");
+            drop(job);
+        });
+    }
+    pool.wait(&latch);
+    drop(outer);
+    obs::set_enabled(false);
+
+    let events = obs::trace_take();
+    let jobs: Vec<_> = events
+        .iter()
+        .filter(|e| e.name == "obsint.attach_job")
+        .collect();
+    assert_eq!(jobs.len(), JOBS);
+    // every job span's parent is the span that was open at the
+    // submit() call site, carried across threads by SpanCtx
+    for ev in &jobs {
+        assert_eq!(
+            ev.parent, outer_id,
+            "job span attached to {} instead of the spawning span",
+            ev.parent
+        );
+    }
+    // leaf spans nest under their job span, not under the outer span
+    for leaf in events.iter().filter(|e| e.name == "obsint.attach_leaf") {
+        assert!(
+            jobs.iter().any(|j| j.id == leaf.parent),
+            "leaf parent {} is not one of the job spans",
+            leaf.parent
+        );
+    }
+}
+
+#[test]
+fn histograms_aggregate_across_worker_threads() {
+    let _g = obs_lock();
+    obs::set_enabled(true);
+    let pool = WorkerPool::new(3);
+    let latch = Latch::new();
+    const JOBS: usize = 24;
+    for i in 0..JOBS {
+        pool.submit(&latch, move || {
+            let _s = obs::span("obsint.agg");
+            obs::counter_inc("obsint.agg_counter");
+            obs::observe_bytes("obsint.agg_bytes", (i as u64 + 1) * 64);
+        });
+    }
+    pool.wait(&latch);
+    obs::set_enabled(false);
+
+    let snap = obs::snapshot();
+    // one histogram, fed from three worker threads, sees every job
+    assert_eq!(span_count(&snap, "obsint.agg"), JOBS as u64);
+    let counter = snap
+        .counters
+        .iter()
+        .find(|(k, _)| k == "obsint.agg_counter")
+        .map(|(_, v)| *v);
+    assert_eq!(counter, Some(JOBS as u64));
+    let bytes = snap
+        .bytes
+        .iter()
+        .find(|h| h.name == "obsint.agg_bytes")
+        .expect("byte histogram registered");
+    assert_eq!(bytes.count, JOBS as u64);
+    // sum of 64 * (1..=24)
+    assert_eq!(bytes.sum, 64 * (JOBS as u64 * (JOBS as u64 + 1) / 2));
+}
+
+#[test]
+fn panicking_spanned_job_leaves_the_registry_usable() {
+    let _g = obs_lock();
+    obs::set_enabled(true);
+    let pool = WorkerPool::new(2);
+    let latch = Latch::new();
+    pool.submit(&latch, || {
+        let _s = obs::span("obsint.panic_victim");
+        panic!("deliberate test panic inside a spanned pool job");
+    });
+    // wait() re-raises the job's panic payload on the waiter
+    let err = catch_unwind(AssertUnwindSafe(|| pool.wait(&latch)));
+    assert!(err.is_err(), "pool.wait must re-raise the job panic");
+
+    // the span guard's Drop ran during the worker's unwind: the
+    // victim span still recorded, and nothing is poisoned
+    {
+        let _after = obs::span("obsint.panic_after");
+    }
+    obs::counter_inc("obsint.panic_after_counter");
+    obs::set_enabled(false);
+
+    let snap = obs::snapshot();
+    assert_eq!(span_count(&snap, "obsint.panic_victim"), 1);
+    assert_eq!(span_count(&snap, "obsint.panic_after"), 1);
+    let c = snap
+        .counters
+        .iter()
+        .find(|(k, _)| k == "obsint.panic_after_counter")
+        .map(|(_, v)| *v);
+    assert_eq!(c, Some(1));
+    // the waiter's TLS cursor is back at the root — a panic elsewhere
+    // must not leave this thread parented to a dead subtree
+    obs::set_enabled(true);
+    let probe = obs::SpanCtx::capture().expect("obs re-enabled");
+    let root = probe.apply();
+    // applying the captured (root) context is a no-op at the root
+    drop(root);
+    {
+        let top = obs::span("obsint.panic_top_level");
+        assert_ne!(top.id(), 0);
+    }
+    obs::set_enabled(false);
+    let snap = obs::snapshot();
+    assert_eq!(span_count(&snap, "obsint.panic_top_level"), 1);
+}
