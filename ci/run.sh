@@ -56,6 +56,15 @@
 #     default-on for serve) whose serve.requests counter strictly
 #     increases between scrapes, and `rocline stats` must render the
 #     /v1/metrics.json document.
+#   * healthz smoke — the same daemon must answer GET /v1/healthz with
+#     200 and state "ok" (the breaker-backed liveness probe described
+#     in docs/robustness.md).
+#   * chaos smoke — `rocline chaos-soak --seed 42` drives a throwaway
+#     daemon through a deterministic, seeded fault schedule
+#     (ROCLINE_FAULT injection across archive I/O, codec decode, job
+#     panics and socket faults) and fails unless every answer under
+#     chaos is byte-identical to the fault-free baseline and the
+#     daemon ends healthy (healthz "ok", healed >= quarantined).
 #   * streaming smoke — `rocline synth-trace` builds a synthetic
 #     archive whose decoded column image dwarfs a hard `ulimit -v`
 #     address-space cap; `rocline synth-replay --mode=streaming` must
@@ -258,6 +267,29 @@ REQ2="$(echo "$SCRAPE2" | sed -n 's/^rocline_serve_requests_total \([0-9]*\)$/\1
     exit 1
 }
 echo "metrics smoke ok: Prometheus page valid, serve.requests $REQ1 -> $REQ2"
+# liveness probe: after a clean query run the breaker must be closed,
+# so /v1/healthz answers 200 with state "ok"
+echo "== healthz smoke: GET /v1/healthz =="
+scrape_healthz() {
+    local hostport="${SERVE_URL#http://}"
+    exec 9<>"/dev/tcp/${hostport%%:*}/${hostport##*:}"
+    printf 'GET /v1/healthz HTTP/1.1\r\nHost: %s\r\nConnection: close\r\n\r\n' \
+        "$hostport" >&9
+    cat <&9
+    exec 9<&- 9>&-
+}
+HEALTHZ="$(scrape_healthz)"
+echo "$HEALTHZ" | head -n 1 | grep -q '200' || {
+    echo "/v1/healthz did not answer 200:" >&2
+    echo "$HEALTHZ" >&2
+    exit 1
+}
+echo "$HEALTHZ" | grep -q '"state":"ok"' || {
+    echo "/v1/healthz state is not ok:" >&2
+    echo "$HEALTHZ" >&2
+    exit 1
+}
+echo "healthz smoke ok: state ok on a healthy daemon"
 ./target/release/rocline query --url "$SERVE_URL" --shutdown >/dev/null
 wait "$SERVE_PID" || {
     echo "serve daemon exited uncleanly after /v1/shutdown" >&2
@@ -308,6 +340,24 @@ esac
     exit 1
 }
 echo "streaming smoke ok: bit-identical under the cap ($RES_DIGEST)"
+
+# chaos smoke: seeded fault injection against a live daemon. The soak
+# runs its own throwaway daemon + archive (phase 1 fault-free baseline,
+# phase 2 chaos with ROCLINE_FAULT-style injection, phase 3 recovery)
+# and fails in-process unless every chaos-phase answer is byte-identical
+# to the baseline and the daemon ends healthy. Deterministic: same seed
+# -> same fault schedule -> same transcript.
+echo "== chaos smoke: rocline chaos-soak --seed 42 =="
+# the soak records its own throwaway cases live, so the record-once
+# contract variable (exported job-wide by the shard matrix) must not
+# apply to it
+CHAOS_LINE="$(ROCLINE_REQUIRE_ARCHIVE_HIT=0 \
+    ./target/release/rocline chaos-soak --seed 42 --queries 12)"
+echo "$CHAOS_LINE"
+case "$CHAOS_LINE" in
+    *"chaos soak ok"*) ;;
+    *) echo "chaos soak did not report success" >&2; exit 1 ;;
+esac
 
 if [ -n "$SHARD" ]; then
     OUT="out-shard-${SHARD//\//-of-}"

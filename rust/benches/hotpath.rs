@@ -541,6 +541,7 @@ fn main() {
     // the lat/serve_p99_ms *ceiling* in bench-gate.
     let mut serve_p99_ms: Option<f64> = None;
     let mut metrics_scrape_ms: Option<f64> = None;
+    let mut healthz_ms: Option<f64> = None;
     {
         use rocline::coordinator::{
             AnalysisService, QueryRequest, ServiceConfig,
@@ -648,6 +649,33 @@ fn main() {
         scrape_ns.sort_unstable();
         let idx = (scrape_ns.len() * 99 / 100).min(scrape_ns.len() - 1);
         metrics_scrape_ms = Some(scrape_ns[idx] as f64 / 1e6);
+
+        // /v1/healthz probe latency on the same daemon: load
+        // balancers and orchestrators poll this on a tight interval,
+        // so it must stay a snapshot-read + tiny JSON render, far off
+        // the query path. Ceiling-gated as lat/healthz_ms.
+        const PROBES: usize = 32;
+        let healthz_url = format!("http://{addr}/v1/healthz");
+        let mut probe_ns = Vec::with_capacity(PROBES);
+        for _ in 0..PROBES {
+            let t0 = Instant::now();
+            let resp =
+                http::get(&healthz_url).expect("healthz probe");
+            assert_eq!(
+                resp.status, 200,
+                "healthz probe failed: {}",
+                resp.body
+            );
+            assert!(
+                resp.body.contains("\"state\""),
+                "healthz body missing state: {}",
+                resp.body
+            );
+            probe_ns.push(t0.elapsed().as_nanos() as u64);
+        }
+        probe_ns.sort_unstable();
+        let idx = (probe_ns.len() * 99 / 100).min(probe_ns.len() - 1);
+        healthz_ms = Some(probe_ns[idx] as f64 / 1e6);
 
         let resp = http::post(&format!("http://{addr}/v1/shutdown"), "{}")
             .expect("shutdown daemon");
@@ -828,6 +856,19 @@ fn main() {
         println!("{:<44} {p99:>10.2} ms", "lat/metrics_scrape_ms");
         results.push(BenchResult {
             name: "lat/metrics_scrape_ms".to_string(),
+            time: rocline::util::Summary::of(&[p99 / 1e3]),
+            throughput: Some(p99),
+        });
+    }
+
+    // the liveness-probe metric: p99 wall time of a /v1/healthz poke
+    // (breaker snapshot + JSON render + TCP). Ceiling-gated: an
+    // orchestrator polls this every few seconds and must never queue
+    // behind real work.
+    if let Some(p99) = healthz_ms {
+        println!("{:<44} {p99:>10.2} ms", "lat/healthz_ms");
+        results.push(BenchResult {
+            name: "lat/healthz_ms".to_string(),
             time: rocline::util::Summary::of(&[p99 / 1e3]),
             throughput: Some(p99),
         });

@@ -37,12 +37,12 @@ pub struct Args {
 
 /// Options that take a value in space-separated form (`--key value`).
 /// `--key=value` works for these and for any future key alike.
-const VALUED: [&str; 29] = [
+const VALUED: [&str; 31] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
     "trace-dir", "trajectory", "compress", "mode", "dispatches", "seed",
     "format", "url", "addr", "deadline-ms", "max-inflight", "queue-cap",
-    "trace-out",
+    "trace-out", "queries", "fault",
 ];
 
 /// Known boolean flags. Anything else with `--` and no `=` is an
@@ -254,6 +254,23 @@ pub struct ServeCmd {
     pub log: Option<AccessLogFormat>,
 }
 
+/// `chaos-soak`: drive an in-process daemon through a deterministic,
+/// seeded fault schedule and assert every completed answer stays
+/// bit-identical to a fault-free baseline (exits nonzero otherwise).
+#[derive(Debug, Clone)]
+pub struct ChaosSoakCmd {
+    /// Seeds both the fault plan and the query shuffle.
+    pub seed: u64,
+    /// Queries to issue during the chaos phase.
+    pub queries: u64,
+    /// Fault spec override (`point=rate[@limit],...`); the default is
+    /// a mixed schedule over every fault point.
+    pub fault: Option<String>,
+    /// Archive directory to soak against (a fresh temp dir when
+    /// unset).
+    pub trace_dir: Option<PathBuf>,
+}
+
 /// `stats`: fetch `/v1/metrics.json` from a running daemon and render
 /// the self-profiling registry (text table or the raw document).
 #[derive(Debug, Clone)]
@@ -293,6 +310,7 @@ pub enum Command {
     Reproduce(ReproduceCmd),
     Query(QueryCmd),
     Serve(ServeCmd),
+    ChaosSoak(ChaosSoakCmd),
     Stats(StatsCmd),
     TraceInfo(TraceInfoCmd),
     Record(Args),
@@ -360,6 +378,12 @@ impl Command {
                 queue_cap: opt_u64(&args, "queue-cap")?,
                 deadline_ms: opt_u64(&args, "deadline-ms")?,
                 log: log_arg(&args)?,
+            }),
+            "chaos-soak" => Command::ChaosSoak(ChaosSoakCmd {
+                seed: args.get_u64("seed", 42)?,
+                queries: args.get_u64("queries", 24)?,
+                fault: args.get("fault").map(String::from),
+                trace_dir: args.get("trace-dir").map(PathBuf::from),
             }),
             "stats" => Command::Stats(StatsCmd {
                 url: args
@@ -795,6 +819,27 @@ mod tests {
             command_err("query --trace-out"),
             "--trace-out needs a value"
         );
+    }
+
+    #[test]
+    fn typed_chaos_soak_defaults_and_overrides() {
+        let Command::ChaosSoak(c) = command("chaos-soak") else {
+            panic!("expected ChaosSoak");
+        };
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.queries, 24);
+        assert_eq!(c.fault, None);
+        assert_eq!(c.trace_dir, None);
+        let Command::ChaosSoak(c) = command(
+            "chaos-soak --seed 7 --queries 100 \
+             --fault archive.read=0.5@2 --trace-dir traces",
+        ) else {
+            panic!("expected ChaosSoak");
+        };
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.queries, 100);
+        assert_eq!(c.fault.as_deref(), Some("archive.read=0.5@2"));
+        assert_eq!(c.trace_dir, Some(PathBuf::from("traces")));
     }
 
     #[test]

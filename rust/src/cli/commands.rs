@@ -3,16 +3,17 @@
 use std::path::{Path, PathBuf};
 
 use super::args::{
-    Args, OutputFormat, QueryCmd, ReproduceCmd, ServeCmd, StatsCmd,
-    TraceInfoCmd,
+    Args, ChaosSoakCmd, OutputFormat, QueryCmd, ReproduceCmd,
+    ServeCmd, StatsCmd, TraceInfoCmd,
 };
 use crate::arch::presets;
 use crate::arch::Vendor;
 use crate::babelstream::{DeviceStream, HostStream};
 use crate::coordinator::{
-    AnalysisService, ExperimentsRequest, ServiceConfig,
+    AnalysisService, ExperimentsRequest, QueryRequest, ServiceConfig,
     EXPERIMENT_IDS,
 };
+use crate::fault;
 use crate::gpumembench::{self, InstThroughputBench, ShmemBench};
 use crate::obs;
 use crate::pic::{CaseConfig, PicSim};
@@ -137,6 +138,15 @@ pub fn serve(cmd: &ServeCmd) -> anyhow::Result<()> {
     // the daemon self-profiles by default (it has the /v1/metrics
     // surface to show for it); ROCLINE_OBS=0 opts out
     obs::init_from_env(true);
+    match fault::init_from_env() {
+        Ok(true) => eprintln!(
+            "[serve] ROCLINE_FAULT armed: deterministic fault \
+             injection active (see docs/robustness.md)"
+        ),
+        Ok(false) => {}
+        Err(e) => anyhow::bail!("ROCLINE_FAULT: {e}"),
+    }
+    crate::serve::install_sigterm_drain();
     let defaults = ServiceConfig::default();
     let svc = Arc::new(AnalysisService::new(ServiceConfig {
         trace_dir: cmd.trace_dir.clone(),
@@ -163,6 +173,267 @@ pub fn serve(cmd: &ServeCmd) -> anyhow::Result<()> {
     );
     std::io::stdout().flush()?;
     server.run()
+}
+
+/// `rocline chaos-soak`: the robustness acceptance harness. Runs an
+/// in-process daemon over one trace archive three times — a
+/// fault-free baseline, a seeded chaos pass, then recovery — and
+/// fails unless every completed answer is bit-identical to the
+/// baseline, quarantined archive cases self-heal, and the daemon ends
+/// healthy. See docs/robustness.md for the fault-point catalogue.
+pub fn chaos_soak(cmd: &ChaosSoakCmd) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use crate::coordinator::HealthState;
+    use crate::util::rng::Xoshiro256;
+
+    obs::init_from_env(true);
+
+    // Mixed default schedule. `archive.read=1.0@3` defeats the trace
+    // store's whole per-open retry budget on the first open, forcing
+    // the quarantine + self-heal path deterministically; the rest
+    // spread bounded transient failures across every other layer.
+    const DEFAULT_FAULTS: &str = "archive.read=1.0@3,\
+        archive.write=0.5@2,archive.sync=0.5@1,codec.decode=0.2@4,\
+        pool.job_panic=1.0@1,serve.latency=0.25@6,serve.read=0.15@3,\
+        serve.write=0.15@3,serve.accept=0.15@2";
+
+    // Two deliberately tiny cases (the tests/service.rs idiom):
+    // 8x8x8, 2 ppc, 2-3 steps — each records and replays in well
+    // under a second, and the distinct step counts give the archive
+    // two independent content keys to quarantine and heal.
+    let mut case_a = CaseConfig::by_name("lwfa")
+        .expect("lwfa preset exists");
+    case_a.name = "chaos-a".to_string();
+    case_a.nx = 8;
+    case_a.ny = 8;
+    case_a.nz = 8;
+    case_a.ppc = 2;
+    case_a.steps = 2;
+    let mut case_b = case_a.clone();
+    case_b.name = "chaos-b".to_string();
+    case_b.steps = 3;
+    let cases = vec![case_a, case_b];
+
+    let (trace_dir, ephemeral) = match &cmd.trace_dir {
+        Some(d) => (d.clone(), false),
+        None => (
+            std::env::temp_dir().join(format!(
+                "rocline-chaos-{}",
+                std::process::id()
+            )),
+            true,
+        ),
+    };
+
+    let mk_svc = || {
+        Arc::new(AnalysisService::new(ServiceConfig {
+            trace_dir: Some(trace_dir.clone()),
+            engine_threads: 2,
+            max_inflight: 2,
+            case_overrides: cases.clone(),
+            quiet: true,
+            ..ServiceConfig::default()
+        }))
+    };
+    type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+    let start = |svc: Arc<AnalysisService>| -> anyhow::Result<(String, ServerHandle)> {
+        let server = Server::bind("127.0.0.1:0", svc)?;
+        let base = format!("http://{}", server.local_addr()?);
+        let handle = std::thread::spawn(move || server.run());
+        Ok((base, handle))
+    };
+    fn stop(
+        base: &str,
+        handle: std::thread::JoinHandle<anyhow::Result<()>>,
+    ) -> anyhow::Result<()> {
+        for _ in 0..100 {
+            if http::post(&format!("{base}/v1/shutdown"), "{}")
+                .is_ok()
+            {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))?
+    }
+    fn post_query(
+        base: &str,
+        gpu: &str,
+        case: &str,
+    ) -> Result<http::ClientResponse, String> {
+        let body =
+            wire::query_request_to_json(&QueryRequest::new(gpu, case))
+                .render();
+        http::post(&format!("{base}/v1/query"), &body)
+    }
+
+    let combos: Vec<(String, String)> = ["v100", "mi60", "mi100"]
+        .iter()
+        .flat_map(|g| {
+            cases.iter().map(move |c| (g.to_string(), c.name.clone()))
+        })
+        .collect();
+
+    // ---- phase 1: fault-free baseline --------------------------------
+    eprintln!(
+        "[chaos-soak] phase 1/3: recording fault-free baseline \
+         ({} combos) in {}",
+        combos.len(),
+        trace_dir.display()
+    );
+    fault::reset();
+    let (base, handle) = start(mk_svc())?;
+    let mut baseline: BTreeMap<(String, String), String> =
+        BTreeMap::new();
+    for (gpu, case) in &combos {
+        let resp = post_query(&base, gpu, case)
+            .map_err(|e| anyhow::anyhow!("baseline query: {e}"))?;
+        anyhow::ensure!(
+            resp.status == 200,
+            "baseline query {gpu}/{case} failed: HTTP {}: {}",
+            resp.status,
+            resp.body
+        );
+        baseline.insert((gpu.clone(), case.clone()), resp.body);
+    }
+    stop(&base, handle)?;
+
+    // ---- phase 2: seeded chaos ---------------------------------------
+    let spec = match &cmd.fault {
+        Some(s) => format!("{s};seed={}", cmd.seed),
+        None => format!("{DEFAULT_FAULTS};seed={}", cmd.seed),
+    };
+    let plan = fault::FaultPlan::parse(&spec)
+        .map_err(|e| anyhow::anyhow!("--fault: {e}"))?;
+    eprintln!(
+        "[chaos-soak] phase 2/3: {} seeded queries under fault \
+         schedule '{spec}'",
+        cmd.queries
+    );
+    let (base, handle) = start(mk_svc())?;
+    fault::install(plan);
+    let mut rng = Xoshiro256::seed_from_u64(cmd.seed);
+    let mut retries = 0u64;
+    for i in 0..cmd.queries {
+        let (gpu, case) =
+            &combos[rng.below(combos.len() as u64) as usize];
+        let want = &baseline[&(gpu.clone(), case.clone())];
+        let mut done = false;
+        for _attempt in 0..40 {
+            match post_query(&base, gpu, case) {
+                Ok(resp) if resp.status == 200 => {
+                    anyhow::ensure!(
+                        &resp.body == want,
+                        "chaos soak FAILED: query {i} ({gpu}/{case}) \
+                         diverged from the fault-free baseline under \
+                         injected faults"
+                    );
+                    done = true;
+                    break;
+                }
+                // transient sheds and injected failures are
+                // retryable; any other status is a real bug
+                Ok(resp)
+                    if matches!(
+                        resp.status,
+                        408 | 429 | 500 | 503 | 504
+                    ) =>
+                {
+                    retries += 1;
+                }
+                Ok(resp) => anyhow::bail!(
+                    "chaos soak FAILED: query {i} ({gpu}/{case}) got \
+                     unexpected HTTP {}: {}",
+                    resp.status,
+                    resp.body
+                ),
+                // dropped or refused connections (serve.accept /
+                // serve.read faults)
+                Err(_) => retries += 1,
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        anyhow::ensure!(
+            done,
+            "chaos soak FAILED: query {i} ({gpu}/{case}) never \
+             completed within the retry budget"
+        );
+    }
+    let injections = fault::injected();
+
+    // ---- phase 3: recovery -------------------------------------------
+    eprintln!(
+        "[chaos-soak] phase 3/3: faults cleared ({injections} \
+         injected); verifying recovery"
+    );
+    fault::reset();
+    // one clean answer per combo: still bit-identical, and each
+    // success closes the breaker
+    for (gpu, case) in &combos {
+        let resp = post_query(&base, gpu, case)
+            .map_err(|e| anyhow::anyhow!("recovery query: {e}"))?;
+        anyhow::ensure!(
+            resp.status == 200,
+            "recovery query {gpu}/{case} failed: HTTP {}: {}",
+            resp.status,
+            resp.body
+        );
+        anyhow::ensure!(
+            &resp.body == &baseline[&(gpu.clone(), case.clone())],
+            "chaos soak FAILED: post-chaos answer for {gpu}/{case} \
+             diverged from the baseline"
+        );
+    }
+    let mut healthy = false;
+    for _ in 0..200 {
+        let ok = http::get(&format!("{base}/v1/healthz"))
+            .ok()
+            .filter(|r| r.status == 200)
+            .and_then(|r| crate::serve::Json::parse(&r.body).ok())
+            .and_then(|doc| {
+                wire::health_response_from_json(&doc).ok()
+            })
+            .map(|h| h.state == HealthState::Ok)
+            .unwrap_or(false);
+        if ok {
+            healthy = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    anyhow::ensure!(
+        healthy,
+        "chaos soak FAILED: daemon did not return to healthy after \
+         faults were cleared"
+    );
+    let st = http::get(&format!("{base}/v1/status"))
+        .map_err(|e| anyhow::anyhow!("status: {e}"))?;
+    let doc = crate::serve::Json::parse(&st.body)
+        .map_err(|e| anyhow::anyhow!("parse status: {e}"))?;
+    let status = wire::status_response_from_json(&doc)
+        .map_err(|e| anyhow::anyhow!("decode status: {e}"))?;
+    anyhow::ensure!(
+        status.healed >= status.quarantined,
+        "chaos soak FAILED: {} archive case(s) quarantined but only \
+         {} healed",
+        status.quarantined,
+        status.healed
+    );
+    stop(&base, handle)?;
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&trace_dir);
+    }
+    println!(
+        "chaos soak ok: seed={} queries={} retries={retries} \
+         injections={injections} quarantined={} healed={}",
+        cmd.seed, cmd.queries, status.quarantined, status.healed
+    );
+    Ok(())
 }
 
 /// One roofline query — local single-shot service, or client mode

@@ -11,6 +11,8 @@
 //!               [--trace-dir D] [--trace-out F]
 //!               [--url U [--status|--cancel|--shutdown]]
 //! rocline stats [--url U] [--format text|json]
+//! rocline chaos-soak [--seed S] [--queries N] [--fault SPEC]
+//!                    [--trace-dir D]
 //! rocline record [--out DIR] [--steps N] [--print-key]
 //!                [--compress none|auto|force] [CASES...]
 //! rocline trace-info <DIR|FILE> [--format text|json]
@@ -52,6 +54,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
         Command::Reproduce(cmd) => commands::reproduce(&cmd),
         Command::Query(cmd) => commands::query(&cmd),
         Command::Serve(cmd) => commands::serve(&cmd),
+        Command::ChaosSoak(cmd) => commands::chaos_soak(&cmd),
         Command::Stats(cmd) => commands::stats(&cmd),
         Command::TraceInfo(cmd) => commands::trace_info(&cmd),
         Command::Record(args) => commands::record(&args),
@@ -107,6 +110,11 @@ COMMANDS:
                /v1/metrics.json expose span histograms + counters;
                ROCLINE_OBS=0 disables collection (default on here,
                off everywhere else) — see docs/observability.md
+               robustness: GET /v1/healthz reports ok|degraded|
+               unhealthy (503 when unhealthy); SIGTERM drains
+               gracefully (stop accepting, finish in-flight jobs);
+               ROCLINE_FAULT='point=rate[@limit],...;seed=N' arms
+               deterministic fault injection — see docs/robustness.md
   query        one roofline query (per-kernel counters, intensities,
                GIPS; --plots adds ASCII + SVG plot data) — locally,
                or against a running daemon with --url. Local and
@@ -124,6 +132,16 @@ COMMANDS:
                (count/mean/p50/p99/max), byte histograms and counters.
                options: --url U (default http://127.0.0.1:8750),
                --format=json for the raw document
+  chaos-soak   robustness soak: run an in-process daemon twice over
+               the same archive — once fault-free (baseline), once
+               under a seeded fault schedule (archive I/O errors,
+               decode failures, job panics, socket drops, latency) —
+               and fail unless every completed answer is bit-identical
+               to the baseline, quarantined cases self-heal, and the
+               daemon ends healthy. Prints 'chaos soak ok' on success.
+               options: --seed S (default 42), --queries N (default
+               24), --fault SPEC (override the mixed default
+               schedule), --trace-dir D (default: fresh temp dir)
   record       pre-populate a trace archive: record each case once and
                spill it (idempotent; shards then replay with zero live
                recordings). options: --out DIR (default

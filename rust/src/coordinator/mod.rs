@@ -44,8 +44,9 @@ pub use runner::{run_experiments, run_experiments_in};
 pub use runner::EXPERIMENT_IDS;
 pub use service::{
     AnalysisService, ArchiveEntry, CancelRequest, CancelResponse,
-    ExperimentsRequest, ExperimentsResponse, KernelCounters,
-    QueryRequest, QueryResponse, ReportSummary, ServiceConfig,
-    ServiceError, StatusResponse, TraceInfoResponse,
+    ExperimentsRequest, ExperimentsResponse, HealthResponse,
+    HealthState, KernelCounters, QueryRequest, QueryResponse,
+    ReportSummary, ServiceConfig, ServiceError, StatusResponse,
+    TraceInfoResponse,
 };
 pub use shard::ShardSpec;

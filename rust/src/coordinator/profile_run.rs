@@ -335,6 +335,14 @@ impl Context {
     }
 
     /// The trace store shared by every run in this context.
+    pub fn quarantined(&self) -> usize {
+        self.store.quarantined()
+    }
+
+    pub fn healed(&self) -> usize {
+        self.store.healed()
+    }
+
     pub fn store(&self) -> &TraceStore {
         &self.store
     }

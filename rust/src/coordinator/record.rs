@@ -321,6 +321,12 @@ pub struct TraceStore {
     recordings: AtomicUsize,
     archive_hits: AtomicUsize,
     spills: AtomicUsize,
+    /// Corrupt archive files moved aside (`*.quarantined`) before
+    /// re-recording.
+    quarantined: AtomicUsize,
+    /// Quarantined cases healed by a fresh recording (the spill
+    /// atomically republishes the archive file).
+    healed: AtomicUsize,
 }
 
 impl TraceStore {
@@ -371,8 +377,29 @@ impl TraceStore {
     }
 
     /// Get the trace for `cfg`: archive hit, or record (exactly once)
-    /// and spill.
+    /// and spill. A corrupt archive file is quarantined and healed by
+    /// the fresh recording — never fatal.
     pub fn get_or_record(&self, cfg: &CaseConfig) -> StoredTrace {
+        self.lookup(cfg, false)
+            .expect("non-strict lookup always resolves")
+    }
+
+    /// [`TraceStore::get_or_record`] under the CI record-once
+    /// contract: when `ROCLINE_REQUIRE_ARCHIVE_HIT=1` a corrupt,
+    /// mismatched or missing archive file is a **loud error** instead
+    /// of a silent quarantine + live re-recording.
+    pub fn get_or_record_checked(
+        &self,
+        cfg: &CaseConfig,
+    ) -> anyhow::Result<StoredTrace> {
+        self.lookup(cfg, super::runner::require_archive_hit())
+    }
+
+    fn lookup(
+        &self,
+        cfg: &CaseConfig,
+        strict: bool,
+    ) -> anyhow::Result<StoredTrace> {
         // content key, not name: `lwfa --steps 1` and `lwfa --steps 64`
         // are different recordings and must be different entries
         let key = archive::case_key(
@@ -389,11 +416,13 @@ impl TraceStore {
         };
         let mut slot = lock_recover(&entry);
         if let Some(t) = slot.as_ref() {
-            return t.clone();
+            return Ok(t.clone());
         }
-        let stored = self.resolve(cfg);
+        // a strict-mode failure leaves the slot empty: once the
+        // operator repairs the archive, the same key resolves again
+        let stored = self.resolve(cfg, strict)?;
         *slot = Some(stored.clone());
-        stored
+        Ok(stored)
     }
 
     /// Which tier an archive hit should replay through, per the
@@ -448,45 +477,163 @@ impl TraceStore {
         }
     }
 
-    /// Archive lookup, then live recording + spill. Caller holds the
-    /// per-case entry lock.
-    fn resolve(&self, cfg: &CaseConfig) -> StoredTrace {
+    /// Bounded attempts (first try + retries) for archive opens and
+    /// spills — absorbs transient I/O faults (EINTR, injected chaos)
+    /// without masking persistent corruption for long.
+    const IO_ATTEMPTS: usize = 3;
+
+    /// [`TraceStore::open_archive`] with bounded retry-with-backoff:
+    /// each failed attempt bumps `retry.attempts` and sleeps
+    /// (1 ms, then 4 ms) before retrying. A config mismatch
+    /// (`Ok(None)`) is definitive and never retried.
+    fn open_archive_retrying(
+        &self,
+        path: &Path,
+        cfg: &CaseConfig,
+    ) -> anyhow::Result<Option<StoredTrace>> {
+        let mut delay = std::time::Duration::from_millis(1);
+        for attempt in 1..=Self::IO_ATTEMPTS {
+            match self.open_archive(path, cfg) {
+                Ok(x) => return Ok(x),
+                Err(e) if attempt == Self::IO_ATTEMPTS => {
+                    return Err(e);
+                }
+                Err(e) => {
+                    obs::counter_inc("retry.attempts");
+                    eprintln!(
+                        "warning: archive read failed (attempt \
+                         {attempt}/{}): {e:#}; retrying",
+                        Self::IO_ATTEMPTS
+                    );
+                    std::thread::sleep(delay);
+                    delay *= 4;
+                }
+            }
+        }
+        unreachable!("loop returns on the last attempt")
+    }
+
+    /// Move a corrupt archive file aside as `<name>.quarantined` so
+    /// the healing spill can republish a clean file (and the bad
+    /// bytes stay on disk for a post-mortem). Returns whether the
+    /// slot now needs healing (it does even when the rename itself
+    /// failed — the spill overwrites in place).
+    fn quarantine(
+        &self,
+        path: &Path,
+        cfg: &CaseConfig,
+        err: &anyhow::Error,
+    ) -> bool {
+        let mut qname = path.as_os_str().to_os_string();
+        qname.push(".quarantined");
+        let qpath = PathBuf::from(qname);
+        match std::fs::rename(path, &qpath) {
+            Ok(()) => {
+                self.quarantined.fetch_add(1, Ordering::Relaxed);
+                obs::counter_inc("job.quarantined");
+                eprintln!(
+                    "warning: quarantined corrupt archive {} -> {} \
+                     ({err:#}); re-recording case '{}'",
+                    path.display(),
+                    qpath.display(),
+                    cfg.name
+                );
+            }
+            Err(re) => eprintln!(
+                "warning: could not quarantine {}: {re}; \
+                 re-recording case '{}' over it",
+                path.display(),
+                cfg.name
+            ),
+        }
+        true
+    }
+
+    /// Archive lookup (with retry), then live recording + spill;
+    /// corrupt files are quarantined and healed unless `strict`.
+    /// Caller holds the per-case entry lock.
+    fn resolve(
+        &self,
+        cfg: &CaseConfig,
+        strict: bool,
+    ) -> anyhow::Result<StoredTrace> {
+        let mut healing = false;
         if let Some(dir) = &self.dir {
             let path = CaseTrace::archive_path(dir, cfg);
             if path.exists() {
-                match self.open_archive(&path, cfg) {
+                match self.open_archive_retrying(&path, cfg) {
                     Ok(Some(stored)) => {
                         self.archive_hits
                             .fetch_add(1, Ordering::Relaxed);
-                        return stored;
+                        return Ok(stored);
                     }
-                    Ok(None) => eprintln!(
-                        "warning: {} does not match case '{}'; \
-                         re-recording",
-                        path.display(),
-                        cfg.name
-                    ),
-                    Err(e) => eprintln!(
-                        "warning: ignoring unreadable trace \
-                         archive: {e:#}; re-recording"
-                    ),
+                    Ok(None) => {
+                        anyhow::ensure!(
+                            !strict,
+                            "ROCLINE_REQUIRE_ARCHIVE_HIT=1: archive \
+                             file {} does not match case '{}' (stale \
+                             cache key or foreign file?)",
+                            path.display(),
+                            cfg.name
+                        );
+                        eprintln!(
+                            "warning: {} does not match case '{}'; \
+                             re-recording",
+                            path.display(),
+                            cfg.name
+                        );
+                    }
+                    Err(e) => {
+                        anyhow::ensure!(
+                            !strict,
+                            "ROCLINE_REQUIRE_ARCHIVE_HIT=1: archive \
+                             file {} for case '{}' is unreadable \
+                             after {} attempt(s): {e:#}",
+                            path.display(),
+                            cfg.name,
+                            Self::IO_ATTEMPTS
+                        );
+                        healing = self.quarantine(&path, cfg, &e);
+                    }
                 }
             }
         }
         self.recordings.fetch_add(1, Ordering::Relaxed);
         let trace = Arc::new(CaseTrace::record(cfg));
         if let Some(dir) = &self.dir {
-            match trace.spill_to_with(dir, self.compress) {
-                Ok(_) => {
-                    self.spills.fetch_add(1, Ordering::Relaxed);
+            let mut delay = std::time::Duration::from_millis(1);
+            for attempt in 1..=Self::IO_ATTEMPTS {
+                match trace.spill_to_with(dir, self.compress) {
+                    Ok(_) => {
+                        self.spills.fetch_add(1, Ordering::Relaxed);
+                        if healing {
+                            self.healed
+                                .fetch_add(1, Ordering::Relaxed);
+                            obs::counter_inc("archive.healed");
+                        }
+                        break;
+                    }
+                    Err(e) if attempt == Self::IO_ATTEMPTS => {
+                        eprintln!(
+                            "warning: could not spill trace for \
+                             '{}': {e:#}",
+                            cfg.name
+                        );
+                    }
+                    Err(e) => {
+                        obs::counter_inc("retry.attempts");
+                        eprintln!(
+                            "warning: spill failed (attempt \
+                             {attempt}/{}): {e:#}; retrying",
+                            Self::IO_ATTEMPTS
+                        );
+                        std::thread::sleep(delay);
+                        delay *= 4;
+                    }
                 }
-                Err(e) => eprintln!(
-                    "warning: could not spill trace for '{}': {e:#}",
-                    cfg.name
-                ),
             }
         }
-        StoredTrace::Live(trace)
+        Ok(StoredTrace::Live(trace))
     }
 
     /// How many *live* recordings this store has performed (the
@@ -504,6 +651,16 @@ impl TraceStore {
     /// How many live recordings were persisted to the disk archive.
     pub fn spills(&self) -> usize {
         self.spills.load(Ordering::Relaxed)
+    }
+
+    /// How many corrupt archive files were quarantined.
+    pub fn quarantined(&self) -> usize {
+        self.quarantined.load(Ordering::Relaxed)
+    }
+
+    /// How many quarantined cases were healed by a re-record + spill.
+    pub fn healed(&self) -> usize {
+        self.healed.load(Ordering::Relaxed)
     }
 
     /// Aggregate streaming-tier gauges across every streamed trace

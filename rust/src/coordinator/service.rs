@@ -212,6 +212,11 @@ pub struct QueryResponse {
     pub roofline: Option<InstructionRoofline>,
     pub plot_ascii: Option<String>,
     pub plot_svg: Option<String>,
+    /// True when optional payloads (roofline/plots) were requested
+    /// but dropped because the service is under pressure — graceful
+    /// degradation before whole-query shedding. The counter data
+    /// above is always complete and bit-identical either way.
+    pub degraded: bool,
 }
 
 /// Service gauges + monotonic counters (the `/v1/status` endpoint and
@@ -227,6 +232,11 @@ pub struct StatusResponse {
     pub shed: u64,
     pub deadline_expired: u64,
     pub cancelled: u64,
+    /// Corrupt archive files quarantined (`*.quarantined`) by the
+    /// trace store's self-heal path.
+    pub quarantined: u64,
+    /// Quarantined cases healed by a re-record + atomic re-spill.
+    pub healed: u64,
     pub inflight: u64,
     pub queued: u64,
     pub jobs_done: u64,
@@ -318,11 +328,97 @@ fn bump(c: &AtomicU64) {
 enum ReplayErr {
     Cancelled(Cancelled),
     Stream(String),
+    /// The trace store refused to resolve the case (strict-mode
+    /// archive miss/corruption) — not retryable within the request.
+    Store(String),
 }
 
 impl From<Cancelled> for ReplayErr {
     fn from(c: Cancelled) -> ReplayErr {
         ReplayErr::Cancelled(c)
+    }
+}
+
+/// Backend health as `GET /v1/healthz` reports it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Replays succeeding, no queue pressure.
+    Ok,
+    /// Recent failure(s) or queue pressure — still answering, but
+    /// optional payloads (roofline/plots) are being dropped.
+    Degraded,
+    /// The replay-backend circuit breaker is open (several
+    /// consecutive failures) — probes should route away.
+    Unhealthy,
+}
+
+impl HealthState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Ok => "ok",
+            HealthState::Degraded => "degraded",
+            HealthState::Unhealthy => "unhealthy",
+        }
+    }
+
+    /// Numeric level for the `health.state` metric series
+    /// (0 = ok, 1 = degraded, 2 = unhealthy).
+    pub fn level(self) -> u64 {
+        match self {
+            HealthState::Ok => 0,
+            HealthState::Degraded => 1,
+            HealthState::Unhealthy => 2,
+        }
+    }
+}
+
+/// The `GET /v1/healthz` document.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthResponse {
+    pub state: HealthState,
+    /// Consecutive replay-backend failures (resets on any success).
+    pub consecutive_failures: u64,
+    /// Times the breaker has opened (entered unhealthy) so far.
+    pub breaker_trips: u64,
+    pub inflight: u64,
+    pub queued: u64,
+    pub quarantined: u64,
+    pub healed: u64,
+}
+
+/// Circuit breaker over the replay backend: counts consecutive
+/// job-attempt failures (panics, stream errors, store errors — not
+/// cancellations or deadlines, which are request properties). Trips
+/// to unhealthy at [`Breaker::UNHEALTHY_AT`]; any success closes it.
+#[derive(Default)]
+struct Breaker {
+    consecutive: AtomicU64,
+    trips: AtomicU64,
+}
+
+impl Breaker {
+    /// Consecutive failures at which health flips to `unhealthy`.
+    const UNHEALTHY_AT: u64 = 3;
+
+    fn success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+    }
+
+    fn failure(&self) {
+        let now =
+            self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if now == Self::UNHEALTHY_AT {
+            self.trips.fetch_add(1, Ordering::Relaxed);
+            obs::counter_inc("health.breaker_trips");
+        }
+    }
+
+    fn consecutive(&self) -> u64 {
+        self.consecutive.load(Ordering::Relaxed)
+    }
+
+    fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
     }
 }
 
@@ -335,6 +431,7 @@ pub struct AnalysisService {
     jobs: JobTable,
     admission: Arc<Admission>,
     counters: Counters,
+    breaker: Breaker,
 }
 
 impl AnalysisService {
@@ -348,6 +445,7 @@ impl AnalysisService {
             jobs: JobTable::new(),
             admission,
             counters: Counters::default(),
+            breaker: Breaker::default(),
         }
     }
 
@@ -500,6 +598,8 @@ impl AnalysisService {
             shed: c.shed.load(Ordering::Relaxed),
             deadline_expired: c.deadline_expired.load(Ordering::Relaxed),
             cancelled: c.cancelled.load(Ordering::Relaxed),
+            quarantined: self.ctx.quarantined() as u64,
+            healed: self.ctx.healed() as u64,
             inflight: self.admission.inflight() as u64,
             queued: self.admission.queued() as u64,
             jobs_done: self.jobs.done_count() as u64,
@@ -508,6 +608,30 @@ impl AnalysisService {
             stream_current_decode_bytes: stream.current_decode_bytes,
             stream_peak_decode_bytes: stream.peak_decode_bytes,
             stream_buffer_recycles: stream.buffer_recycles,
+        }
+    }
+
+    /// Health summary for `GET /v1/healthz`. Also publishes the
+    /// numeric `health.state` level to the metrics registry.
+    pub fn health(&self) -> HealthResponse {
+        let cf = self.breaker.consecutive();
+        let queued = self.admission.queued() as u64;
+        let state = if cf >= Breaker::UNHEALTHY_AT {
+            HealthState::Unhealthy
+        } else if cf > 0 || queued > 0 {
+            HealthState::Degraded
+        } else {
+            HealthState::Ok
+        };
+        obs::counter_set("health.state", state.level());
+        HealthResponse {
+            state,
+            consecutive_failures: cf,
+            breaker_trips: self.breaker.trips(),
+            inflight: self.admission.inflight() as u64,
+            queued,
+            quarantined: self.ctx.quarantined() as u64,
+            healed: self.ctx.healed() as u64,
         }
     }
 
@@ -640,17 +764,56 @@ impl AnalysisService {
                 }
             }
         }
-        let stored = self.ctx.store().get_or_record(cfg);
-        let run_span = obs::span("service.job_run");
-        let replayed = replay_cancellable(
-            spec.clone(),
-            &stored,
-            engine_threads,
-            &token,
-        );
-        drop(run_span);
+        // Bounded per-job retry budget: panics and transient stream
+        // errors retry (re-resolving the stored trace, which may
+        // self-heal a quarantined archive); cancellations and
+        // strict-mode store errors are terminal for the request.
+        const JOB_RETRIES: usize = 2;
+        let mut attempt = 0usize;
+        let replayed = loop {
+            let run_span = obs::span("service.job_run");
+            let outcome = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let stored = self
+                        .ctx
+                        .store()
+                        .get_or_record_checked(cfg)
+                        .map_err(|e| {
+                            ReplayErr::Store(format!("{e:#}"))
+                        })?;
+                    replay_cancellable(
+                        spec.clone(),
+                        &stored,
+                        engine_threads,
+                        &token,
+                    )
+                }),
+            );
+            drop(run_span);
+            let why = match &outcome {
+                Ok(Ok(_))
+                | Ok(Err(ReplayErr::Cancelled(_)))
+                | Ok(Err(ReplayErr::Store(_))) => None,
+                Ok(Err(ReplayErr::Stream(m))) => Some(m.clone()),
+                Err(payload) => Some(panic_message(payload.as_ref())),
+            };
+            match why {
+                Some(why) if attempt < JOB_RETRIES => {
+                    attempt += 1;
+                    obs::counter_inc("retry.attempts");
+                    eprintln!(
+                        "warning: job {} attempt {attempt}/{} failed \
+                         ({why}); retrying",
+                        job.key,
+                        JOB_RETRIES + 1,
+                    );
+                }
+                _ => break outcome,
+            }
+        };
         match replayed {
-            Ok(run) => {
+            Ok(Ok(run)) => {
+                self.breaker.success();
                 let run = Arc::new(run);
                 bump(&self.counters.replays);
                 job.finish(run.clone());
@@ -668,13 +831,36 @@ impl AnalysisService {
                 }
                 Ok(run)
             }
-            Err(ReplayErr::Cancelled(c)) => {
+            Ok(Err(ReplayErr::Cancelled(c))) => {
                 job.release();
                 guard.disarm();
                 Err(self.cancel_error(c))
             }
-            Err(ReplayErr::Stream(msg)) => {
-                let msg = format!("streaming replay failed: {msg}");
+            Ok(Err(ReplayErr::Store(msg))) => {
+                self.breaker.failure();
+                let msg = format!("trace store error: {msg}");
+                job.fail(msg.clone());
+                guard.disarm();
+                Err(ServiceError::Internal(msg))
+            }
+            Ok(Err(ReplayErr::Stream(msg))) => {
+                self.breaker.failure();
+                let msg = format!(
+                    "streaming replay failed after {} attempt(s): \
+                     {msg}",
+                    attempt + 1
+                );
+                job.fail(msg.clone());
+                guard.disarm();
+                Err(ServiceError::Internal(msg))
+            }
+            Err(payload) => {
+                self.breaker.failure();
+                let msg = format!(
+                    "job panicked after {} attempt(s): {}",
+                    attempt + 1,
+                    panic_message(payload.as_ref())
+                );
                 job.fail(msg.clone());
                 guard.disarm();
                 Err(ServiceError::Internal(msg))
@@ -704,8 +890,18 @@ impl AnalysisService {
         req: &QueryRequest,
     ) -> Result<QueryResponse, ServiceError> {
         let kernels = kernel_counters(spec, &run.session);
-        let (roofline, plot_a, plot_s) = if req.kernel.is_some()
-            || req.plots
+        // Graceful degradation: under pressure (queued admissions or
+        // an open breaker) drop the optional roofline/plot payloads
+        // before shedding whole queries — counter data is always
+        // served, bit-identical to the unpressured answer.
+        let wants_optional = req.kernel.is_some() || req.plots;
+        let pressured = self.admission.queued() > 0
+            || self.breaker.consecutive() >= Breaker::UNHEALTHY_AT;
+        let degraded = wants_optional && pressured;
+        if degraded {
+            obs::counter_inc("service.degraded_responses");
+        }
+        let (roofline, plot_a, plot_s) = if wants_optional && !pressured
         {
             let kernel =
                 req.kernel.as_deref().unwrap_or("ComputeCurrent");
@@ -733,6 +929,7 @@ impl AnalysisService {
             roofline,
             plot_ascii: plot_a,
             plot_svg: plot_s,
+            degraded,
         })
     }
 
@@ -963,6 +1160,18 @@ impl AnalysisService {
             }
         }
         Ok(())
+    }
+}
+
+/// Best-effort text of a caught panic payload (for job-failure
+/// messages and retry warnings).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 

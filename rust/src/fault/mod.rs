@@ -1,0 +1,369 @@
+//! Deterministic, seeded fault injection — the chaos substrate under
+//! `rocline chaos-soak` and the robustness tests.
+//!
+//! Every failure-prone layer of the stack declares **named fault
+//! points** (`archive.write`, `serve.read`, `pool.job_panic`, ...) by
+//! calling [`should_fail`] / [`io_error`] / [`inject_latency`] at the
+//! site where the real failure would surface. With no plan installed
+//! the entire cost of a fault point is **one relaxed atomic load** —
+//! the same contract as the [`crate::obs`] gate, checked by the
+//! `speedup/replay_obs_off_vs_on` bench gate staying put.
+//!
+//! A chaos run installs a [`FaultPlan`]: a list of `(point, rate,
+//! max-fires)` rules driven by one seeded [`Xoshiro256`] stream, so a
+//! given `(spec, seed)` pair fires the *same* faults at the *same*
+//! decision points every run — chaos results are reproducible and
+//! bisectable. Activation paths:
+//!
+//! * `ROCLINE_FAULT="archive.read=0.5@3,pool.job_panic=1.0@1;seed=7"`
+//!   in the environment (picked up by `rocline serve` /
+//!   `rocline chaos-soak` via [`init_from_env`]);
+//! * programmatic [`install`] / [`reset`] for in-process tests.
+//!
+//! Every fire bumps the `fault.injected` counter in the obs registry
+//! (and a local count readable via [`injected`] even with obs off),
+//! so a chaos soak can assert the schedule actually engaged.
+//!
+//! The catalogue of points lives in `docs/robustness.md`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::obs;
+use crate::util::pool::lock_recover;
+use crate::util::rng::Xoshiro256;
+
+/// The one global gate every fault point loads (relaxed) before doing
+/// anything else. False ⇒ no plan installed ⇒ zero work.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is a fault plan installed? One relaxed atomic load — the entire
+/// hot-path cost when chaos is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One injection rule: fire at `point` with probability `rate` per
+/// visit, at most `limit` times (None = unlimited).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub point: String,
+    pub rate: f64,
+    pub limit: Option<u64>,
+}
+
+/// A reproducible fault schedule: rules + the seed for the one RNG
+/// stream that drives every probabilistic decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: Vec::new() }
+    }
+
+    /// Add a rule firing with probability `rate` on every visit.
+    pub fn rule(self, point: &str, rate: f64) -> FaultPlan {
+        self.rule_limited_opt(point, rate, None)
+    }
+
+    /// Add a rule that fires at most `limit` times.
+    pub fn rule_limited(
+        self,
+        point: &str,
+        rate: f64,
+        limit: u64,
+    ) -> FaultPlan {
+        self.rule_limited_opt(point, rate, Some(limit))
+    }
+
+    fn rule_limited_opt(
+        mut self,
+        point: &str,
+        rate: f64,
+        limit: Option<u64>,
+    ) -> FaultPlan {
+        self.rules.push(Rule {
+            point: point.to_string(),
+            rate,
+            limit,
+        });
+        self
+    }
+
+    /// Parse the `ROCLINE_FAULT` spec syntax:
+    /// `point=rate[@limit][,point=rate[@limit]...][;seed=N]`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut seed = 0u64;
+        let mut rules = Vec::new();
+        for section in spec.split(';') {
+            let section = section.trim();
+            if section.is_empty() {
+                continue;
+            }
+            if let Some(n) = section.strip_prefix("seed=") {
+                seed = n.parse().map_err(|_| {
+                    format!("bad fault seed {n:?} (expected u64)")
+                })?;
+                continue;
+            }
+            for rule in section.split(',') {
+                let rule = rule.trim();
+                if rule.is_empty() {
+                    continue;
+                }
+                let (point, rest) =
+                    rule.split_once('=').ok_or_else(|| {
+                        format!(
+                            "bad fault rule {rule:?} (expected \
+                             point=rate[@limit])"
+                        )
+                    })?;
+                let (rate_s, limit) = match rest.split_once('@') {
+                    Some((r, l)) => {
+                        let l: u64 = l.parse().map_err(|_| {
+                            format!("bad fault limit {l:?} in {rule:?}")
+                        })?;
+                        (r, Some(l))
+                    }
+                    None => (rest, None),
+                };
+                let rate: f64 = rate_s.parse().map_err(|_| {
+                    format!("bad fault rate {rate_s:?} in {rule:?}")
+                })?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(format!(
+                        "fault rate {rate} out of [0,1] in {rule:?}"
+                    ));
+                }
+                rules.push(Rule {
+                    point: point.trim().to_string(),
+                    rate,
+                    limit,
+                });
+            }
+        }
+        if rules.is_empty() {
+            return Err(format!(
+                "fault spec {spec:?} has no rules (expected \
+                 point=rate[@limit][;seed=N])"
+            ));
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+}
+
+struct ActiveRule {
+    point: String,
+    rate: f64,
+    limit: Option<u64>,
+    fired: u64,
+}
+
+struct Active {
+    rules: Vec<ActiveRule>,
+    rng: Xoshiro256,
+    injected: u64,
+}
+
+fn active() -> &'static Mutex<Option<Active>> {
+    static A: OnceLock<Mutex<Option<Active>>> = OnceLock::new();
+    A.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a plan (replacing any previous one) and open the gate.
+pub fn install(plan: FaultPlan) {
+    let rules = plan
+        .rules
+        .into_iter()
+        .map(|r| ActiveRule {
+            point: r.point,
+            rate: r.rate,
+            limit: r.limit,
+            fired: 0,
+        })
+        .collect();
+    *lock_recover(active()) = Some(Active {
+        rules,
+        rng: Xoshiro256::seed_from_u64(plan.seed),
+        injected: 0,
+    });
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Remove the plan and close the gate (hot paths go back to one
+/// relaxed load). Idempotent.
+pub fn reset() {
+    ENABLED.store(false, Ordering::Relaxed);
+    *lock_recover(active()) = None;
+}
+
+/// Install from `ROCLINE_FAULT` if set; returns whether a plan was
+/// installed. A malformed spec is a loud startup error, not a
+/// silently fault-free run.
+pub fn init_from_env() -> Result<bool, String> {
+    match std::env::var("ROCLINE_FAULT") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            install(FaultPlan::parse(&spec)?);
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Total faults fired by the installed plan (0 when none is).
+pub fn injected() -> u64 {
+    lock_recover(active()).as_ref().map_or(0, |a| a.injected)
+}
+
+/// Should the fault at `point` fire now? The question every fault
+/// point asks; cost is one relaxed load when no plan is installed.
+#[inline(always)]
+pub fn should_fail(point: &'static str) -> bool {
+    if !enabled() {
+        return false;
+    }
+    should_fail_slow(point)
+}
+
+#[cold]
+fn should_fail_slow(point: &str) -> bool {
+    let mut g = lock_recover(active());
+    let Some(a) = g.as_mut() else { return false };
+    let Some(i) =
+        a.rules.iter().position(|r| r.point == point)
+    else {
+        return false;
+    };
+    if let Some(limit) = a.rules[i].limit {
+        if a.rules[i].fired >= limit {
+            return false;
+        }
+    }
+    // one roll per *visit* (even a non-firing visit advances the
+    // stream) so the schedule depends only on (spec, seed, visit
+    // order), not on which other rules exist
+    let roll = a.rng.next_f64();
+    if roll >= a.rules[i].rate {
+        return false;
+    }
+    a.rules[i].fired += 1;
+    a.injected += 1;
+    drop(g);
+    obs::counter_inc("fault.injected");
+    true
+}
+
+/// An injected `std::io::Error` when `point` fires, else `None` —
+/// for `?`-style threading through real I/O paths:
+/// `if let Some(e) = fault::io_error("archive.write") { return Err(e.into()); }`
+pub fn io_error(point: &'static str) -> Option<std::io::Error> {
+    if should_fail(point) {
+        Some(std::io::Error::other(format!(
+            "injected fault at {point}"
+        )))
+    } else {
+        None
+    }
+}
+
+/// Sleep ~20 ms when `point` fires (the latency-injection flavour for
+/// the serve stack).
+pub fn inject_latency(point: &'static str) {
+    if should_fail(point) {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize tests that install global plans.
+    fn plan_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        lock_recover(&LOCK)
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse(
+            "archive.read=0.5@3, pool.job_panic=1.0@1 ;seed=42",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].point, "archive.read");
+        assert_eq!(p.rules[0].rate, 0.5);
+        assert_eq!(p.rules[0].limit, Some(3));
+        assert_eq!(p.rules[1].point, "pool.job_panic");
+        assert_eq!(p.rules[1].limit, Some(1));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("seed=1").is_err(), "no rules");
+        assert!(FaultPlan::parse("x").is_err());
+        assert!(FaultPlan::parse("x=nope").is_err());
+        assert!(FaultPlan::parse("x=2.0").is_err(), "rate > 1");
+        assert!(FaultPlan::parse("x=0.5@huge").is_err());
+        assert!(FaultPlan::parse("x=0.5;seed=minus").is_err());
+    }
+
+    #[test]
+    fn disabled_points_never_fire() {
+        let _g = plan_lock();
+        reset();
+        assert!(!enabled());
+        assert!(!should_fail("test.never"));
+        assert!(io_error("test.never").is_none());
+        assert_eq!(injected(), 0);
+    }
+
+    #[test]
+    fn limits_cap_fires_and_counts_accumulate() {
+        let _g = plan_lock();
+        install(
+            FaultPlan::new(7).rule_limited("test.capped", 1.0, 2),
+        );
+        let fires =
+            (0..10).filter(|_| should_fail("test.capped")).count();
+        assert_eq!(fires, 2, "limit=2 caps a rate-1.0 rule");
+        assert_eq!(injected(), 2);
+        assert!(!should_fail("test.other"), "unlisted point");
+        reset();
+        assert!(!should_fail("test.capped"));
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let _g = plan_lock();
+        let drive = |seed: u64| -> Vec<bool> {
+            install(FaultPlan::new(seed).rule("test.seeded", 0.5));
+            let v =
+                (0..64).map(|_| should_fail("test.seeded")).collect();
+            reset();
+            v
+        };
+        let a = drive(123);
+        let b = drive(123);
+        let c = drive(321);
+        assert_eq!(a, b, "same seed ⇒ identical schedule");
+        assert_ne!(a, c, "different seed ⇒ different schedule");
+        assert!(a.iter().any(|&f| f) && !a.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn io_error_carries_the_point_name() {
+        let _g = plan_lock();
+        install(FaultPlan::new(1).rule("test.io", 1.0));
+        let e = io_error("test.io").expect("rate 1.0 fires");
+        assert!(e.to_string().contains("test.io"), "{e}");
+        reset();
+    }
+}

@@ -43,6 +43,7 @@ pub mod babelstream;
 pub mod cli;
 pub mod coordinator;
 pub mod counters;
+pub mod fault;
 pub mod gpumembench;
 pub mod memsim;
 pub mod obs;

@@ -33,6 +33,12 @@ impl Counter {
         self.value.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Overwrite the value — for the few level-style series (e.g.
+    /// `health.state`) that ride the counter registry as gauges.
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
     }

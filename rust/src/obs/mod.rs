@@ -322,6 +322,17 @@ pub fn counter_add(name: &'static str, n: u64) {
     intern(&registry().counters, name, Counter::new).add(n);
 }
 
+/// Overwrite a named counter — the gauge-style escape hatch for
+/// level series like `health.state` (0 = ok, 1 = degraded,
+/// 2 = unhealthy) that want last-value, not monotonic, semantics.
+#[inline]
+pub fn counter_set(name: &'static str, v: u64) {
+    if !enabled() {
+        return;
+    }
+    intern(&registry().counters, name, Counter::new).set(v);
+}
+
 /// Record a byte-size observation into the named byte histogram.
 #[inline]
 pub fn observe_bytes(name: &'static str, bytes: u64) {

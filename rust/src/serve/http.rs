@@ -12,6 +12,52 @@ use std::net::TcpStream;
 /// without limit).
 pub const MAX_BODY_BYTES: usize = 4 << 20;
 
+/// Most headers one request may carry (ours send < 5).
+pub const MAX_HEADERS: usize = 64;
+
+/// Cumulative cap on request line + header bytes — past this the
+/// request is answered `431` instead of buffering further.
+pub const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// A request-read failure with the HTTP status it should be answered
+/// with: `408` for a stalled client (read deadline), `413`/`431` for
+/// oversized bodies/headers, `400` for everything malformed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into() }
+    }
+
+    /// Stable machine-readable code for the JSON error body, matching
+    /// the `ServiceError` code style.
+    pub fn code(&self) -> &'static str {
+        match self.status {
+            408 => "request_timeout",
+            413 => "payload_too_large",
+            431 => "headers_too_large",
+            _ => "bad_request",
+        }
+    }
+
+    fn from_io(what: &str, e: std::io::Error) -> HttpError {
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut => HttpError::new(
+                408,
+                format!(
+                    "{what}: client stalled past the read deadline"
+                ),
+            ),
+            _ => HttpError::new(400, format!("{what}: {e}")),
+        }
+    }
+}
+
 /// One parsed request: method + path + body. Header names are
 /// lowercased at parse time.
 #[derive(Debug, Clone)]
@@ -32,37 +78,82 @@ impl Request {
     }
 }
 
+/// One `\n`-terminated line, refusing to buffer more than `cap`
+/// bytes — a client streaming an endless line (or none at all, under
+/// a read timeout) cannot pin the connection's memory.
+fn read_line_capped(
+    stream: &mut BufReader<TcpStream>,
+    cap: usize,
+    what: &str,
+) -> Result<String, HttpError> {
+    let mut line = String::new();
+    let n = stream
+        .by_ref()
+        .take(cap as u64 + 1)
+        .read_line(&mut line)
+        .map_err(|e| HttpError::from_io(what, e))?;
+    if n > cap {
+        return Err(HttpError::new(
+            431,
+            format!("{what} exceeds {cap} bytes"),
+        ));
+    }
+    Ok(line)
+}
+
 /// Read one request from a connection. `Ok(None)` means the peer
 /// closed before sending a request line (a health-check poke, not an
-/// error).
+/// error). Errors carry the HTTP status to answer with (408 stalled,
+/// 413/431 oversized, 400 malformed) so a misbehaving client costs
+/// one bounded read, never a wedged connection-gate slot.
 pub fn read_request(
     stream: &mut BufReader<TcpStream>,
-) -> Result<Option<Request>, String> {
-    let mut line = String::new();
-    stream
-        .read_line(&mut line)
-        .map_err(|e| format!("read request line: {e}"))?;
+) -> Result<Option<Request>, HttpError> {
+    let line =
+        read_line_capped(stream, MAX_HEADER_BYTES, "request line")?;
     if line.is_empty() {
         return Ok(None);
     }
     let mut parts = line.split_whitespace();
     let method = parts
         .next()
-        .ok_or("empty request line")?
+        .ok_or_else(|| HttpError::new(400, "empty request line"))?
         .to_ascii_uppercase();
     let path = parts
         .next()
-        .ok_or_else(|| format!("bad request line {line:?}"))?
+        .ok_or_else(|| {
+            HttpError::new(400, format!("bad request line {line:?}"))
+        })?
         .to_string();
     let mut headers = Vec::new();
+    let mut header_bytes = line.len();
     loop {
-        let mut hl = String::new();
-        stream
-            .read_line(&mut hl)
-            .map_err(|e| format!("read header: {e}"))?;
+        let hl =
+            read_line_capped(stream, MAX_HEADER_BYTES, "header line")?;
+        if hl.is_empty() {
+            return Err(HttpError::new(
+                400,
+                "connection closed mid-headers",
+            ));
+        }
+        header_bytes += hl.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpError::new(
+                431,
+                format!(
+                    "request head exceeds {MAX_HEADER_BYTES} bytes"
+                ),
+            ));
+        }
         let hl = hl.trim_end_matches(['\r', '\n']);
         if hl.is_empty() {
             break;
+        }
+        if headers.len() == MAX_HEADERS {
+            return Err(HttpError::new(
+                431,
+                format!("more than {MAX_HEADERS} headers"),
+            ));
         }
         if let Some((name, value)) = hl.split_once(':') {
             headers.push((
@@ -75,19 +166,27 @@ pub fn read_request(
         .iter()
         .find(|(k, _)| k == "content-length")
         .map(|(_, v)| {
-            v.parse().map_err(|_| format!("bad Content-Length {v:?}"))
+            v.parse().map_err(|_| {
+                HttpError::new(400, format!("bad Content-Length {v:?}"))
+            })
         })
         .transpose()?
         .unwrap_or(0);
     if len > MAX_BODY_BYTES {
-        return Err(format!("body too large ({len} bytes)"));
+        return Err(HttpError::new(
+            413,
+            format!(
+                "body too large ({len} bytes, cap {MAX_BODY_BYTES})"
+            ),
+        ));
     }
     let mut body = vec![0u8; len];
     stream
         .read_exact(&mut body)
-        .map_err(|e| format!("read body: {e}"))?;
-    let body = String::from_utf8(body)
-        .map_err(|_| "non-UTF-8 request body".to_string())?;
+        .map_err(|e| HttpError::from_io("read body", e))?;
+    let body = String::from_utf8(body).map_err(|_| {
+        HttpError::new(400, "non-UTF-8 request body")
+    })?;
     Ok(Some(Request { method, path, headers, body }))
 }
 
@@ -97,8 +196,10 @@ pub fn status_reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         409 => "Conflict",
         413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",

@@ -18,4 +18,6 @@ pub mod server;
 pub mod wire;
 
 pub use json::Json;
-pub use server::{AccessLogFormat, Server};
+pub use server::{
+    install_sigterm_drain, sigterm_received, AccessLogFormat, Server,
+};

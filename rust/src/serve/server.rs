@@ -21,9 +21,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::service::{
-    AnalysisService, ServiceError,
+    AnalysisService, HealthState, ServiceError,
 };
-use crate::obs;
+use crate::{fault, obs};
 
 use super::http::{self, Request};
 use super::json::Json;
@@ -31,6 +31,34 @@ use super::wire;
 
 /// How often the accept loop re-checks the shutdown flag.
 const POLL: Duration = Duration::from_millis(20);
+
+/// Process-wide SIGTERM latch: the accept loop treats it exactly like
+/// an in-band shutdown (stop accepting, finish in-flight requests,
+/// return) so `kill <pid>` drains instead of dropping connections.
+static SIGTERM: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigterm(_signum: i32) {
+    SIGTERM.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGTERM → graceful-drain handler (idempotent; the
+/// `rocline serve` CLI calls this before [`Server::run`]). Uses the
+/// libc `signal` symbol directly — same no-dependency approach as the
+/// mmap shims in `trace::archive::mmap`.
+pub fn install_sigterm_drain() {
+    const SIGTERM_NUM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM_NUM, on_sigterm as usize);
+    }
+}
+
+/// Whether a SIGTERM has been received (test/debug hook).
+pub fn sigterm_received() -> bool {
+    SIGTERM.load(Ordering::SeqCst)
+}
 
 /// Per-request access-log flavour (`--log` / `--log=json`). Lines go
 /// to **stderr**: stdout carries the `listening on` line CI scrapes.
@@ -48,6 +76,7 @@ pub struct Server {
     svc: Arc<AnalysisService>,
     shutdown: Arc<AtomicBool>,
     log: Option<AccessLogFormat>,
+    read_timeout: Duration,
 }
 
 impl Server {
@@ -55,6 +84,10 @@ impl Server {
     /// connections get an inline `503` (the service's admission queue
     /// never even sees them).
     pub const MAX_CONNS: usize = 256;
+
+    /// Default per-connection read deadline: a client that stalls
+    /// longer than this gets a `408` and its gate slot back.
+    pub const READ_TIMEOUT: Duration = Duration::from_secs(30);
 
     /// Bind an address (use port `0` for an ephemeral port) without
     /// starting the loop.
@@ -69,6 +102,7 @@ impl Server {
             svc,
             shutdown: Arc::new(AtomicBool::new(false)),
             log: None,
+            read_timeout: Server::READ_TIMEOUT,
         })
     }
 
@@ -78,6 +112,13 @@ impl Server {
         fmt: Option<AccessLogFormat>,
     ) -> Server {
         self.log = fmt;
+        self
+    }
+
+    /// Override the per-connection read deadline (tests use a short
+    /// one to exercise the `408` path without waiting 30 s).
+    pub fn with_read_timeout(mut self, t: Duration) -> Server {
+        self.read_timeout = t;
         self
     }
 
@@ -91,15 +132,29 @@ impl Server {
         self.shutdown.clone()
     }
 
-    /// Serve until shutdown is requested, then drain handler threads
-    /// and return.
+    /// Serve until shutdown is requested (in-band, via the handle, or
+    /// SIGTERM), then drain handler threads and return. The drain is
+    /// graceful: accepting stops first, every in-flight request runs
+    /// to completion, and only then does the loop return.
     pub fn run(self) -> anyhow::Result<()> {
         let active = Arc::new(AtomicUsize::new(0));
         let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut drained_by_signal = false;
         while !self.shutdown.load(Ordering::SeqCst) {
+            if SIGTERM.load(Ordering::SeqCst) {
+                drained_by_signal = true;
+                self.shutdown.store(true, Ordering::SeqCst);
+                break;
+            }
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
                     workers.retain(|w| !w.is_finished());
+                    // injected accept-path failure: the connection is
+                    // dropped as a refused/reset accept would be
+                    if fault::should_fail("serve.accept") {
+                        drop(stream);
+                        continue;
+                    }
                     if active.load(Ordering::SeqCst)
                         >= Server::MAX_CONNS
                     {
@@ -111,9 +166,14 @@ impl Server {
                     let shutdown = self.shutdown.clone();
                     let active = active.clone();
                     let log = self.log;
+                    let read_timeout = self.read_timeout;
                     workers.push(std::thread::spawn(move || {
                         handle_connection(
-                            &svc, &shutdown, log, stream,
+                            &svc,
+                            &shutdown,
+                            log,
+                            read_timeout,
+                            stream,
                         );
                         active.fetch_sub(1, Ordering::SeqCst);
                     }));
@@ -127,8 +187,26 @@ impl Server {
                 Err(e) => anyhow::bail!("accept failed: {e}"),
             }
         }
+        if drained_by_signal {
+            eprintln!(
+                "[serve] SIGTERM: draining {} in-flight \
+                 connection(s), accepting no more",
+                active.load(Ordering::SeqCst)
+            );
+        }
         for w in workers {
             let _ = w.join();
+        }
+        if drained_by_signal {
+            // flush what observability accumulated before the process
+            // exits (journald/CI keep stderr)
+            let snap = obs::snapshot();
+            eprintln!(
+                "[serve] drained; uptime {:.1}s, {} counter series \
+                 recorded",
+                snap.uptime_us as f64 / 1e6,
+                snap.counters.len()
+            );
         }
         Ok(())
     }
@@ -151,12 +229,18 @@ fn handle_connection(
     svc: &AnalysisService,
     shutdown: &AtomicBool,
     log: Option<AccessLogFormat>,
+    read_timeout: Duration,
     stream: TcpStream,
 ) {
     // handler sockets are blocking (the listener's non-blocking mode
     // is not inherited on all platforms — make it explicit)
     let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    // injected socket-read failure: drop the connection unanswered,
+    // exactly as a peer RST mid-request would look
+    if fault::should_fail("serve.read") {
+        return;
+    }
     let Ok(reader_stream) = stream.try_clone() else {
         return;
     };
@@ -164,6 +248,7 @@ fn handle_connection(
     let mut writer = stream;
     match http::read_request(&mut reader) {
         Ok(Some(req)) => {
+            fault::inject_latency("serve.latency");
             let started = Instant::now();
             let routed = {
                 // the span covers routing + the job itself, so
@@ -176,6 +261,11 @@ fn handle_connection(
                 Some(state) => vec![("X-Rocline-Cache", state)],
                 None => Vec::new(),
             };
+            // injected socket-write failure: the answer is computed
+            // (and cached) but never reaches the peer
+            if fault::should_fail("serve.write") {
+                return;
+            }
             let _ = http::write_response_typed(
                 &mut writer,
                 routed.status,
@@ -188,15 +278,17 @@ fn handle_connection(
             }
         }
         Ok(None) => {} // peer connected and closed: health poke
-        Err(msg) => {
-            let err = ServiceError::BadRequest(format!(
-                "malformed request: {msg}"
-            ));
+        Err(he) => {
+            obs::counter_inc("serve.http_errors");
             let _ = http::write_response(
                 &mut writer,
-                err.http_status(),
+                he.status,
                 &[],
-                &wire::error_to_json(&err).render(),
+                &error_body(
+                    he.status,
+                    he.code(),
+                    &format!("malformed request: {}", he.message),
+                ),
             );
         }
     }
@@ -364,6 +456,19 @@ fn route(
             None,
             wire::status_response_to_json(&svc.status()).render(),
         ),
+        ("GET", "/v1/healthz") => {
+            let h = svc.health();
+            let status = if h.state == HealthState::Unhealthy {
+                503
+            } else {
+                200
+            };
+            Routed::json(
+                status,
+                None,
+                wire::health_response_to_json(&h).render(),
+            )
+        }
         ("GET", "/v1/metrics") => Routed {
             status: 200,
             cache: None,
@@ -395,8 +500,8 @@ fn route(
         (
             _,
             "/v1/query" | "/v1/cancel" | "/v1/experiments"
-            | "/v1/status" | "/v1/metrics" | "/v1/metrics.json"
-            | "/v1/archives" | "/v1/shutdown",
+            | "/v1/status" | "/v1/healthz" | "/v1/metrics"
+            | "/v1/metrics.json" | "/v1/archives" | "/v1/shutdown",
         ) => Routed::json(
             405,
             None,

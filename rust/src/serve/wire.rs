@@ -14,8 +14,9 @@
 
 use crate::coordinator::service::{
     ArchiveEntry, CancelRequest, CancelResponse, ExperimentsRequest,
-    ExperimentsResponse, KernelCounters, QueryRequest, QueryResponse,
-    ReportSummary, ServiceError, StatusResponse, TraceInfoResponse,
+    ExperimentsResponse, HealthResponse, HealthState, KernelCounters,
+    QueryRequest, QueryResponse, ReportSummary, ServiceError,
+    StatusResponse, TraceInfoResponse,
 };
 use crate::obs::{HistSnapshot, MetricsSnapshot, TraceEvent, Unit};
 use crate::roofline::{
@@ -274,6 +275,11 @@ pub fn query_response_to_json(r: &QueryResponse) -> Json {
     if let Some(s) = &r.plot_svg {
         doc = doc.set("plot_svg", Json::str(s));
     }
+    // omitted when false so undegraded documents keep their exact
+    // historical byte image (the chaos soak compares bodies bytewise)
+    if r.degraded {
+        doc = doc.set("degraded", Json::Bool(true));
+    }
     doc
 }
 
@@ -314,6 +320,10 @@ pub fn query_response_from_json(
             .get("plot_svg")
             .and_then(Json::as_str)
             .map(str::to_string),
+        degraded: j
+            .get("degraded")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
     })
 }
 
@@ -330,6 +340,8 @@ pub fn status_response_to_json(s: &StatusResponse) -> Json {
         .set("shed", Json::u64(s.shed))
         .set("deadline_expired", Json::u64(s.deadline_expired))
         .set("cancelled", Json::u64(s.cancelled))
+        .set("quarantined", Json::u64(s.quarantined))
+        .set("healed", Json::u64(s.healed))
         .set("inflight", Json::u64(s.inflight))
         .set("queued", Json::u64(s.queued))
         .set("jobs_done", Json::u64(s.jobs_done))
@@ -362,6 +374,8 @@ pub fn status_response_from_json(
         shed: get_u64(j, "shed")?,
         deadline_expired: get_u64(j, "deadline_expired")?,
         cancelled: get_u64(j, "cancelled")?,
+        quarantined: get_u64(j, "quarantined")?,
+        healed: get_u64(j, "healed")?,
         inflight: get_u64(j, "inflight")?,
         queued: get_u64(j, "queued")?,
         jobs_done: get_u64(j, "jobs_done")?,
@@ -376,6 +390,44 @@ pub fn status_response_from_json(
             "stream_peak_decode_bytes",
         )?,
         stream_buffer_recycles: get_u64(j, "stream_buffer_recycles")?,
+    })
+}
+
+// -------------------------------------------------------------- healthz
+
+pub fn health_response_to_json(h: &HealthResponse) -> Json {
+    Json::obj()
+        .set("state", Json::str(h.state.as_str()))
+        .set(
+            "consecutive_failures",
+            Json::u64(h.consecutive_failures),
+        )
+        .set("breaker_trips", Json::u64(h.breaker_trips))
+        .set("inflight", Json::u64(h.inflight))
+        .set("queued", Json::u64(h.queued))
+        .set("quarantined", Json::u64(h.quarantined))
+        .set("healed", Json::u64(h.healed))
+}
+
+pub fn health_response_from_json(
+    j: &Json,
+) -> Result<HealthResponse, String> {
+    let state = match get_str(j, "state")?.as_str() {
+        "ok" => HealthState::Ok,
+        "degraded" => HealthState::Degraded,
+        "unhealthy" => HealthState::Unhealthy,
+        other => {
+            return Err(format!("unknown health state '{other}'"))
+        }
+    };
+    Ok(HealthResponse {
+        state,
+        consecutive_failures: get_u64(j, "consecutive_failures")?,
+        breaker_trips: get_u64(j, "breaker_trips")?,
+        inflight: get_u64(j, "inflight")?,
+        queued: get_u64(j, "queued")?,
+        quarantined: get_u64(j, "quarantined")?,
+        healed: get_u64(j, "healed")?,
     })
 }
 
@@ -864,6 +916,7 @@ mod tests {
             }),
             plot_ascii: None,
             plot_svg: Some("<svg/>".to_string()),
+            degraded: false,
         }
     }
 
@@ -888,6 +941,52 @@ mod tests {
         assert_eq!(back.plot_ascii, None);
         // serialization is deterministic end to end
         assert_eq!(query_response_to_json(&back).render(), text);
+    }
+
+    #[test]
+    fn degraded_flag_renders_only_when_set() {
+        let mut resp = sample_response();
+        let text = query_response_to_json(&resp).render();
+        assert!(
+            !text.contains("degraded"),
+            "undegraded documents keep their historical byte image"
+        );
+        resp.degraded = true;
+        let text = query_response_to_json(&resp).render();
+        assert!(text.contains("\"degraded\":true"));
+        let back =
+            query_response_from_json(&Json::parse(&text).unwrap())
+                .unwrap();
+        assert!(back.degraded);
+    }
+
+    #[test]
+    fn health_response_round_trips() {
+        for (state, name) in [
+            (HealthState::Ok, "ok"),
+            (HealthState::Degraded, "degraded"),
+            (HealthState::Unhealthy, "unhealthy"),
+        ] {
+            let h = HealthResponse {
+                state,
+                consecutive_failures: 2,
+                breaker_trips: 1,
+                inflight: 3,
+                queued: 4,
+                quarantined: 5,
+                healed: 5,
+            };
+            let doc = health_response_to_json(&h);
+            assert!(
+                doc.render().contains(&format!("\"state\":\"{name}\""))
+            );
+            let back = health_response_from_json(&doc).unwrap();
+            assert_eq!(back, h);
+        }
+        assert!(health_response_from_json(
+            &Json::parse(r#"{"state":"meh"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

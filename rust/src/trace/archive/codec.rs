@@ -450,6 +450,12 @@ pub fn decode(
     width: ElemWidth,
     out: &mut Vec<u8>,
 ) -> anyhow::Result<()> {
+    if crate::fault::should_fail("codec.decode") {
+        anyhow::bail!(
+            "injected fault at codec.decode (simulated decode-arena \
+             exhaustion)"
+        );
+    }
     match (encoding, width) {
         (Encoding::Rle, ElemWidth::U8) => {
             rle_decode(enc, n_elems, out)

@@ -187,6 +187,9 @@ pub(crate) enum ArchiveBuf {
 impl ArchiveBuf {
     /// Load (preferably map) the whole file.
     pub(crate) fn load(file: &File) -> anyhow::Result<ArchiveBuf> {
+        if let Some(e) = crate::fault::io_error("archive.mmap") {
+            return Err(e.into());
+        }
         let len = file.metadata()?.len();
         anyhow::ensure!(len > 0, "corrupt archive: empty file");
         anyhow::ensure!(

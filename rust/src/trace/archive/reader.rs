@@ -460,6 +460,9 @@ impl MappedCaseTrace {
     /// Map `path` and validate everything (see the module docs).
     pub fn open(path: &Path) -> anyhow::Result<MappedCaseTrace> {
         let _s = obs::span("archive.open");
+        if let Some(e) = crate::fault::io_error("archive.read") {
+            anyhow::bail!("trace archive {}: {e}", path.display());
+        }
         Self::open_inner(path).map_err(|e| {
             anyhow::anyhow!("trace archive {}: {e}", path.display())
         })
@@ -911,6 +914,9 @@ impl StreamingCaseTrace {
     /// time.
     pub fn open(path: &Path) -> anyhow::Result<StreamingCaseTrace> {
         let _s = obs::span("archive.open");
+        if let Some(e) = crate::fault::io_error("archive.read") {
+            anyhow::bail!("trace archive {}: {e}", path.display());
+        }
         Self::open_inner(path).map_err(|e| {
             anyhow::anyhow!("trace archive {}: {e}", path.display())
         })

@@ -169,6 +169,14 @@ pub fn write_case_archive_with(
 
     let res = write_to_tmp(&tmp_path, meta, key, dispatches, compress)
         .and_then(|()| {
+            if let Some(e) = crate::fault::io_error("archive.rename")
+            {
+                return Err(anyhow::anyhow!(
+                    "rename {} -> {}: {e}",
+                    tmp_path.display(),
+                    final_path.display()
+                ));
+            }
             std::fs::rename(&tmp_path, &final_path).map_err(|e| {
                 anyhow::anyhow!(
                     "rename {} -> {}: {e}",
@@ -197,6 +205,12 @@ fn write_to_tmp(
         Compress::V1 => MIN_FORMAT_VERSION,
         _ => FORMAT_VERSION,
     };
+    if let Some(e) = crate::fault::io_error("archive.write") {
+        return Err(anyhow::anyhow!(
+            "write {}: {e}",
+            tmp_path.display()
+        ));
+    }
     let file = File::create(tmp_path).map_err(|e| {
         anyhow::anyhow!("create {}: {e}", tmp_path.display())
     })?;
@@ -380,6 +394,12 @@ fn write_to_tmp(
     })?;
     file.seek(SeekFrom::Start(0))?;
     file.write_all(&h)?;
+    if let Some(e) = crate::fault::io_error("archive.sync") {
+        return Err(anyhow::anyhow!(
+            "sync {}: {e}",
+            tmp_path.display()
+        ));
+    }
     // durability before the rename publishes the file
     file.sync_all()?;
     Ok(())

@@ -483,7 +483,15 @@ fn worker_loop(shared: &Shared) {
 }
 
 fn run_job(latch: &Latch, f: Job) {
-    latch.complete(catch_unwind(AssertUnwindSafe(f)).err());
+    latch.complete(
+        catch_unwind(AssertUnwindSafe(|| {
+            if crate::fault::should_fail("pool.job_panic") {
+                panic!("injected fault at pool.job_panic");
+            }
+            f()
+        }))
+        .err(),
+    );
 }
 
 #[cfg(test)]

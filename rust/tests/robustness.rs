@@ -1,0 +1,553 @@
+//! Robustness integration tests: the chaos-hardened behaviours of
+//! docs/robustness.md, driven through the real service and daemon.
+//!
+//! * corrupt archive files are quarantined and healed by a fresh
+//!   recording (and stay a loud error under
+//!   `ROCLINE_REQUIRE_ARCHIVE_HIT=1`);
+//! * injected job panics are retried, release their admission permit,
+//!   and leave the job failed-retryable;
+//! * stalling or oversized HTTP clients get `408`/`413`/`431` instead
+//!   of wedging a connection-gate slot;
+//! * `GET /v1/healthz` tracks the circuit breaker through
+//!   ok → degraded → unhealthy → ok;
+//! * under pressure, optional payloads (roofline/plots) are dropped
+//!   before whole queries are shed — and the counter data stays
+//!   bit-identical;
+//! * every recovery shows up in the `/v1/metrics` registry
+//!   (`fault.*`, `retry.*`, `job.quarantined`, `health.state`).
+//!
+//! Fault plans, the `ROCLINE_REQUIRE_ARCHIVE_HIT` switch, and the obs
+//! toggle are all **process-global**, so every test here serializes on
+//! [`global_lock`] — which is also why the fault-driven tests live in
+//! this binary rather than `tests/service.rs`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use rocline::coordinator::{
+    AnalysisService, HealthResponse, HealthState, QueryRequest,
+    ServiceConfig,
+};
+use rocline::fault::{self, FaultPlan};
+use rocline::obs;
+use rocline::pic::CaseConfig;
+use rocline::serve::{http, wire, Json, Server};
+use rocline::util::pool::lock_recover;
+
+/// Serialize every test in this binary: fault plans, env switches and
+/// the obs toggle are process-global.
+fn global_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    lock_recover(&LOCK)
+}
+
+/// Clears the installed fault plan even when the test panics, so one
+/// failure cannot cascade into every later test in the binary.
+struct FaultGuard;
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::reset();
+    }
+}
+
+/// 8x8x8, 2 ppc, 2 steps — records and replays in well under a second
+/// even in debug mode (the tests/service.rs idiom).
+fn tiny_case() -> CaseConfig {
+    let mut cfg = CaseConfig::lwfa();
+    cfg.name = "tiny".to_string();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.nz = 8;
+    cfg.ppc = 2;
+    cfg.steps = 2;
+    cfg
+}
+
+fn tiny_service() -> AnalysisService {
+    AnalysisService::new(ServiceConfig {
+        engine_threads: 2,
+        case_overrides: vec![tiny_case()],
+        quiet: true,
+        ..ServiceConfig::default()
+    })
+}
+
+fn svc_with_dir(dir: &PathBuf) -> AnalysisService {
+    AnalysisService::new(ServiceConfig {
+        engine_threads: 2,
+        case_overrides: vec![tiny_case()],
+        trace_dir: Some(dir.clone()),
+        quiet: true,
+        ..ServiceConfig::default()
+    })
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "rocline-robust-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Overwrite every archive file in `dir` with garbage that cannot
+/// parse (bad magic), returning how many files were corrupted.
+fn corrupt_archives(dir: &PathBuf) -> usize {
+    let mut corrupted = 0;
+    for entry in std::fs::read_dir(dir).expect("read trace dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_file() {
+            std::fs::write(&path, b"this is not a trace archive")
+                .expect("corrupt archive file");
+            corrupted += 1;
+        }
+    }
+    corrupted
+}
+
+fn start(
+    svc: Arc<AnalysisService>,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server =
+        Server::bind("127.0.0.1:0", svc).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || server.run());
+    (format!("http://{addr}"), handle)
+}
+
+fn shutdown(
+    base: &str,
+    handle: std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    let resp = http::post(&format!("{base}/v1/shutdown"), "{}")
+        .expect("shutdown");
+    assert_eq!(resp.status, 200, "shutdown failed: {}", resp.body);
+    handle.join().expect("server thread").expect("server run");
+}
+
+fn healthz(base: &str) -> (u16, HealthResponse) {
+    let resp =
+        http::get(&format!("{base}/v1/healthz")).expect("healthz");
+    let doc = Json::parse(&resp.body).expect("healthz JSON");
+    let h = wire::health_response_from_json(&doc)
+        .expect("healthz decode");
+    (resp.status, h)
+}
+
+/// Satellite: corrupt archive columns are quarantined (`*.quarantined`
+/// stays on disk for the post-mortem), the case is re-recorded once,
+/// the healed answer is served — and the healed file feeds the next
+/// process from the archive again.
+#[test]
+fn corrupt_archive_is_quarantined_and_healed() {
+    let _g = global_lock();
+    let dir = temp_dir("heal");
+
+    let recorder = svc_with_dir(&dir);
+    let reference = recorder
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("recording query");
+    assert!(recorder.status().spills >= 1, "nothing spilled");
+    drop(recorder);
+
+    assert!(corrupt_archives(&dir) >= 1, "no archive file to corrupt");
+
+    let svc = svc_with_dir(&dir);
+    let healed = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("corrupt archive must self-heal, not fail the query");
+    assert_eq!(
+        wire::query_response_to_json(&healed).render(),
+        wire::query_response_to_json(&reference).render(),
+        "healed answer differs from the original recording"
+    );
+    let st = svc.status();
+    assert_eq!(st.quarantined, 1, "corrupt file not quarantined");
+    assert_eq!(st.healed, 1, "quarantined case not healed");
+    assert_eq!(st.archive_hits, 0);
+    assert_eq!(st.recordings, 1, "heal is one re-recording");
+
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .expect("read trace dir")
+        .map(|e| {
+            e.expect("dir entry").file_name().into_string().unwrap()
+        })
+        .collect();
+    assert!(
+        names.iter().any(|n| n.ends_with(".quarantined")),
+        "bad bytes not kept aside: {names:?}"
+    );
+
+    // the healing spill republished a clean archive file: the next
+    // process replays it with zero live recordings
+    let svc2 = svc_with_dir(&dir);
+    svc2.query(&QueryRequest::new("mi100", "tiny"))
+        .expect("healed archive must hit");
+    let st2 = svc2.status();
+    assert_eq!(st2.recordings, 0, "healed file did not hit");
+    assert!(st2.archive_hits >= 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: under `ROCLINE_REQUIRE_ARCHIVE_HIT=1` the same
+/// corruption is a loud 500 — no quarantine, no silent re-recording —
+/// and lifting the switch lets the very same service heal.
+#[test]
+fn require_archive_hit_keeps_corruption_loud() {
+    let _g = global_lock();
+    let dir = temp_dir("strict");
+
+    let recorder = svc_with_dir(&dir);
+    recorder
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("recording query");
+    drop(recorder);
+    assert!(corrupt_archives(&dir) >= 1);
+
+    std::env::set_var("ROCLINE_REQUIRE_ARCHIVE_HIT", "1");
+    let svc = svc_with_dir(&dir);
+    let err = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect_err("strict mode must fail loudly");
+    std::env::remove_var("ROCLINE_REQUIRE_ARCHIVE_HIT");
+    assert_eq!(err.http_status(), 500, "{err}");
+    assert!(
+        err.to_string().contains("ROCLINE_REQUIRE_ARCHIVE_HIT"),
+        "error must name the contract switch: {err}"
+    );
+    let st = svc.status();
+    assert_eq!(st.quarantined, 0, "strict mode must not quarantine");
+    assert_eq!(st.recordings, 0, "strict mode must not re-record");
+    assert_eq!(st.inflight, 0, "strict failure leaked its slot");
+
+    // the strict failure left the job failed-retryable and the cache
+    // slot empty: with the switch lifted, the same service self-heals
+    svc.query(&QueryRequest::new("mi100", "tiny"))
+        .expect("non-strict retry must heal");
+    let st = svc.status();
+    assert_eq!(st.quarantined, 1);
+    assert_eq!(st.healed, 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: a panicking job is caught, retried within the in-service
+/// budget, releases its admission permit on terminal failure, and
+/// leaves the job failed-retryable — the next query just runs.
+#[test]
+fn panicking_jobs_retry_and_release_their_slot() {
+    let _g = global_lock();
+    let _fg = FaultGuard;
+
+    // one injected panic: absorbed by the retry budget, query succeeds
+    let svc = tiny_service();
+    fault::install(
+        FaultPlan::new(7).rule_limited("pool.job_panic", 1.0, 1),
+    );
+    let resp = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("one panic must be absorbed by the retry budget");
+    assert_eq!(resp.steps, 2);
+    assert_eq!(svc.status().inflight, 0);
+    assert!(fault::injected() >= 1, "the panic never fired");
+
+    // unlimited panics: the budget exhausts into a clean 500 — with
+    // the permit released, not leaked
+    fault::install(FaultPlan::new(7).rule("pool.job_panic", 1.0));
+    let svc = tiny_service();
+    let err = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect_err("every attempt panics");
+    assert_eq!(err.http_status(), 500, "{err}");
+    assert!(err.to_string().contains("panicked"), "{err}");
+    let st = svc.status();
+    assert_eq!(st.inflight, 0, "panicked job leaked its permit");
+    assert_eq!(st.queued, 0);
+
+    // failed jobs are reclaimable: clear the faults and the same
+    // query succeeds
+    fault::reset();
+    let resp = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("failed job must be reclaimable");
+    assert_eq!(resp.steps, 2);
+    assert_eq!(svc.status().inflight, 0);
+}
+
+/// Satellite: a client that sends half a request and stalls gets a
+/// `408` when the read deadline lapses — and the connection-gate slot
+/// comes straight back.
+#[test]
+fn stalling_client_gets_408_not_a_wedged_slot() {
+    let _g = global_lock();
+    let svc = Arc::new(tiny_service());
+    let server = Server::bind("127.0.0.1:0", svc)
+        .expect("bind")
+        .with_read_timeout(Duration::from_millis(200));
+    let addr = server.local_addr().expect("local addr");
+    let base = format!("http://{addr}");
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut stall = TcpStream::connect(addr).expect("connect");
+    stall
+        .write_all(
+            b"POST /v1/query HTTP/1.1\r\n\
+              Content-Type: application/json\r\n",
+        )
+        .expect("partial request");
+    stall.flush().expect("flush");
+    // ...and now say nothing: the server must answer on its own
+    stall
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("client read timeout");
+    let mut resp = String::new();
+    stall
+        .read_to_string(&mut resp)
+        .expect("server must answer the stalled connection");
+    assert!(
+        resp.starts_with("HTTP/1.1 408"),
+        "want 408, got: {resp}"
+    );
+    assert!(resp.contains("request_timeout"), "{resp}");
+    drop(stall);
+
+    // the slot was released, not wedged: a normal request still works
+    let resp =
+        http::get(&format!("{base}/v1/status")).expect("status");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    shutdown(&base, handle);
+}
+
+/// Satellite: oversized request heads answer `431` and oversized
+/// declared bodies answer `413` — both before the server buffers the
+/// excess.
+#[test]
+fn oversized_heads_and_bodies_are_rejected() {
+    let _g = global_lock();
+    let (base, handle) = start(Arc::new(tiny_service()));
+    let addr = base.trim_start_matches("http://").to_string();
+
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.write_all(b"GET /v1/status HTTP/1.1\r\nX-Big: ")
+        .expect("request line");
+    s.write_all(&vec![b'a'; http::MAX_HEADER_BYTES + 1024])
+        .expect("giant header");
+    s.write_all(b"\r\n\r\n").expect("end of head");
+    s.flush().expect("flush");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read 431");
+    assert!(
+        resp.starts_with("HTTP/1.1 431"),
+        "want 431, got: {resp}"
+    );
+    assert!(resp.contains("headers_too_large"), "{resp}");
+
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.write_all(
+        format!(
+            "POST /v1/query HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            http::MAX_BODY_BYTES + 1
+        )
+        .as_bytes(),
+    )
+    .expect("oversized body claim");
+    s.flush().expect("flush");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read 413");
+    assert!(
+        resp.starts_with("HTTP/1.1 413"),
+        "want 413, got: {resp}"
+    );
+    assert!(resp.contains("payload_too_large"), "{resp}");
+
+    shutdown(&base, handle);
+}
+
+/// Tentpole: `GET /v1/healthz` tracks the circuit breaker through
+/// ok → degraded → unhealthy (503) and back to ok after one success.
+#[test]
+fn healthz_tracks_breaker_state_and_recovers() {
+    let _g = global_lock();
+    let _fg = FaultGuard;
+    let (base, handle) = start(Arc::new(tiny_service()));
+
+    let (status, h) = healthz(&base);
+    assert_eq!(status, 200);
+    assert_eq!(h.state, HealthState::Ok);
+    assert_eq!(h.consecutive_failures, 0);
+
+    fault::install(FaultPlan::new(3).rule("pool.job_panic", 1.0));
+    let q = wire::query_request_to_json(&QueryRequest::new(
+        "mi100", "tiny",
+    ))
+    .render();
+    for i in 0..3u64 {
+        let resp = http::post(&format!("{base}/v1/query"), &q)
+            .expect("failing query");
+        assert_eq!(resp.status, 500, "query {i}: {}", resp.body);
+        let (status, h) = healthz(&base);
+        assert_eq!(h.consecutive_failures, i + 1);
+        if i < 2 {
+            assert_eq!(status, 200, "query {i}");
+            assert_eq!(h.state, HealthState::Degraded, "query {i}");
+        } else {
+            assert_eq!(status, 503, "breaker open must be 503");
+            assert_eq!(h.state, HealthState::Unhealthy);
+            assert!(h.breaker_trips >= 1);
+        }
+    }
+
+    // recovery: clear the faults; one success closes the breaker
+    fault::reset();
+    let resp = http::post(&format!("{base}/v1/query"), &q)
+        .expect("recovery query");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let (status, h) = healthz(&base);
+    assert_eq!(status, 200);
+    assert_eq!(h.state, HealthState::Ok);
+    assert_eq!(h.consecutive_failures, 0);
+
+    shutdown(&base, handle);
+}
+
+/// Tentpole: under pressure the service drops *optional* payloads
+/// (roofline/plots) instead of shedding whole queries; the counter
+/// data stays bit-identical, the response says `degraded`, and the
+/// full byte image returns once the breaker closes.
+#[test]
+fn pressure_sheds_payloads_before_queries() {
+    let _g = global_lock();
+    let _fg = FaultGuard;
+    let svc = tiny_service();
+
+    let mut q = QueryRequest::new("mi100", "tiny");
+    q.plots = true;
+    let full = svc.query(&q).expect("plots query");
+    assert!(!full.degraded);
+    assert!(full.roofline.is_some(), "idle service must not degrade");
+    assert!(full.plot_ascii.is_some() && full.plot_svg.is_some());
+
+    // trip the breaker with three failing queries on another preset
+    fault::install(FaultPlan::new(5).rule("pool.job_panic", 1.0));
+    for _ in 0..3 {
+        svc.query(&QueryRequest::new("v100", "tiny"))
+            .expect_err("injected panics must fail the job");
+    }
+    fault::reset();
+
+    // the cached query still answers under pressure — minus payloads
+    let resp = svc.query(&q).expect("query under pressure");
+    assert!(resp.degraded, "open breaker must degrade plot queries");
+    assert!(resp.roofline.is_none());
+    assert!(resp.plot_ascii.is_none() && resp.plot_svg.is_none());
+    assert_eq!(resp.case_key, full.case_key);
+    assert_eq!(resp.kernels, full.kernels, "counter data changed");
+    assert!(
+        wire::query_response_to_json(&resp)
+            .render()
+            .contains("\"degraded\""),
+        "wire document must flag the degradation"
+    );
+
+    // one success closes the breaker; the full historical byte image
+    // comes back
+    svc.query(&QueryRequest::new("mi60", "tiny"))
+        .expect("recovery query");
+    let resp = svc.query(&q).expect("recovered plots query");
+    assert!(!resp.degraded);
+    assert_eq!(
+        wire::query_response_to_json(&resp).render(),
+        wire::query_response_to_json(&full).render(),
+        "recovered response must be byte-identical to the original"
+    );
+}
+
+/// Satellite: every recovery path surfaces in the metrics registry —
+/// `fault.injected`, `retry.attempts`, `job.quarantined` and the
+/// `health.state` gauge all round-trip through `/v1/metrics.json` and
+/// appear on the Prometheus page.
+#[test]
+fn metrics_surface_fault_retry_quarantine_and_health() {
+    let _g = global_lock();
+    let _fg = FaultGuard;
+    let dir = temp_dir("metrics");
+
+    let recorder = svc_with_dir(&dir);
+    recorder
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("recording query");
+    drop(recorder);
+    assert!(corrupt_archives(&dir) >= 1);
+
+    obs::set_enabled(true);
+    // one injected panic (absorbed by the retry budget) feeds the
+    // fault.* and retry.* series; the corrupt archive feeds
+    // job.quarantined
+    fault::install(
+        FaultPlan::new(9).rule_limited("pool.job_panic", 1.0, 1),
+    );
+    let (base, handle) = start(Arc::new(svc_with_dir(&dir)));
+    let q = wire::query_request_to_json(&QueryRequest::new(
+        "mi100", "tiny",
+    ))
+    .render();
+    let resp = http::post(&format!("{base}/v1/query"), &q)
+        .expect("chaos query");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    fault::reset();
+    // healthz publishes the health.state gauge (0 = ok)
+    let (status, _) = healthz(&base);
+    assert_eq!(status, 200);
+
+    let resp = http::get(&format!("{base}/v1/metrics.json"))
+        .expect("metrics.json");
+    assert_eq!(resp.status, 200);
+    let snap = wire::metrics_from_json(
+        &Json::parse(&resp.body).expect("metrics JSON"),
+    )
+    .expect("metrics decode");
+    let prom =
+        http::get(&format!("{base}/v1/metrics")).expect("metrics");
+    obs::set_enabled(false);
+
+    let counter = |name: &str| {
+        snap.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    };
+    assert!(
+        counter("fault.injected").unwrap_or(0) >= 1,
+        "fault.injected missing: {:?}",
+        snap.counters
+    );
+    assert!(
+        counter("retry.attempts").unwrap_or(0) >= 1,
+        "retry.attempts missing: {:?}",
+        snap.counters
+    );
+    assert!(
+        counter("job.quarantined").unwrap_or(0) >= 1,
+        "job.quarantined missing: {:?}",
+        snap.counters
+    );
+    assert_eq!(
+        counter("health.state"),
+        Some(0),
+        "health.state gauge must read ok after recovery"
+    );
+    assert!(
+        prom.body.contains("rocline_fault_injected_total"),
+        "Prometheus page lacks the fault series"
+    );
+    assert!(prom.body.contains("rocline_health_state_total"));
+
+    shutdown(&base, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}

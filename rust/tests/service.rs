@@ -280,6 +280,61 @@ fn busy_shed_and_cancel_free_the_slot() {
     assert_eq!(ok.steps, 2);
 }
 
+/// A job that fails mid-run (here: a strict-mode archive error over a
+/// corrupt file) must release its admission permit and leave the job
+/// failed-retryable — the follow-up query of the same key succeeds
+/// instead of finding a stuck job or a leaked slot.
+#[test]
+fn failed_query_releases_slot_and_is_retryable() {
+    let dir = std::env::temp_dir().join(format!(
+        "rocline-service-fail-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let with_dir = || {
+        AnalysisService::new(ServiceConfig {
+            engine_threads: 2,
+            case_overrides: vec![tiny_case()],
+            trace_dir: Some(dir.clone()),
+            quiet: true,
+            ..ServiceConfig::default()
+        })
+    };
+
+    let recorder = with_dir();
+    recorder
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("recording query");
+    drop(recorder);
+    // corrupt the archive so a strict-mode open fails the job
+    for entry in std::fs::read_dir(&dir).expect("read trace dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_file() {
+            std::fs::write(&path, b"garbage").expect("corrupt");
+        }
+    }
+
+    std::env::set_var("ROCLINE_REQUIRE_ARCHIVE_HIT", "1");
+    let svc = with_dir();
+    let err = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect_err("strict mode over a corrupt archive must fail");
+    std::env::remove_var("ROCLINE_REQUIRE_ARCHIVE_HIT");
+    assert_eq!(err.http_status(), 500, "{err}");
+    let st = svc.status();
+    assert_eq!(st.inflight, 0, "failed job leaked its permit");
+    assert_eq!(st.queued, 0);
+
+    // failed-retryable, not stuck: the same query now self-heals
+    let resp = svc
+        .query(&QueryRequest::new("mi100", "tiny"))
+        .expect("failed job must be reclaimable");
+    assert_eq!(resp.steps, 2);
+    assert_eq!(svc.status().inflight, 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// The persistent archive tier through the daemon: a prior process
 /// records + spills, the daemon replays from the mmap'd archive with
 /// zero live recordings, answers byte-identically to the recording
