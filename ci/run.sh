@@ -46,6 +46,20 @@
 #     with the dated ci/BENCH_trajectory.json entry it appends.
 #     BENCH_hotpath.json itself is uploaded as a per-run artifact by
 #     the workflow.
+#   * accuracy gate — `rocline reproduce accuracy` runs the six
+#     (GPU, case) pairs through the cycle-approximate timing tier and
+#     writes the per-GPU worst relative error of the predicted
+#     ComputeCurrent time vs the paper's Tables 1 & 2 (both sides
+#     geomean-normalized per table) to out-accuracy/accuracy_gate.json.
+#     bench-gate merges those acc/* metrics with the hotpath ratios
+#     and fails if any error exceeds its ceiling in
+#     ci/bench_baseline.json (acc/* gates are ceilings: lower is
+#     better). The artifact is uploaded per shard by the workflow.
+#   * windowed smoke — `reproduce fig4 --windows 3` (live recording,
+#     so the step-windowed parallel record path itself is exercised)
+#     must emit byte-identical reports to the default unwindowed
+#     pipeline: windowing is a scheduling choice, never an output
+#     change.
 #   * serve smoke — `rocline serve` is started over the smoke archive
 #     (ROCLINE_REQUIRE_ARCHIVE_HIT=1) and must answer per-GPU queries
 #     byte-identically to the batch CLI's --format=json output, answer
@@ -151,12 +165,56 @@ grep -E '"speedup/' BENCH_hotpath.json || {
     exit 1
 }
 
-echo "== bench gate: speedup/* + size/* vs ci/bench_baseline.json =="
-if [ "$UPDATE_BASELINE" = 1 ]; then
-    ./target/release/rocline bench-gate --update-baseline
-else
-    ./target/release/rocline bench-gate
+# timing-model accuracy artifact: `reproduce accuracy` compares the
+# cycle-approximate predicted ComputeCurrent times against the paper's
+# published Tables 1 & 2 (geomean-normalized per table) and writes the
+# per-GPU worst rel errs to out-accuracy/accuracy_gate.json as acc/*
+# metrics. bench-gate merges that artifact with the hotpath ratios and
+# fails if any rel err exceeds its ceiling in ci/bench_baseline.json.
+# With --trace-dir the six (GPU, case) runs replay the shared archive
+# zero-copy (and ROCLINE_REQUIRE_ARCHIVE_HIT applies as usual).
+echo "== accuracy: predicted time vs paper tables -> out-accuracy =="
+ACC_CMD=(./target/release/rocline reproduce accuracy --out out-accuracy)
+if [ -n "$TRACE_DIR" ]; then
+    ACC_CMD+=(--trace-dir "$TRACE_DIR")
 fi
+"${ACC_CMD[@]}"
+test -s out-accuracy/accuracy_gate.json || {
+    echo "out-accuracy/accuracy_gate.json missing or empty" >&2
+    exit 1
+}
+grep -E '"acc/predicted_time_rel_err_' out-accuracy/accuracy_gate.json || {
+    echo "accuracy_gate.json has no acc/* entries (metric names drifted?)" >&2
+    exit 1
+}
+
+echo "== bench gate: speedup/* + size/* + acc/* vs ci/bench_baseline.json =="
+GATE_BENCH="BENCH_hotpath.json,out-accuracy/accuracy_gate.json"
+if [ "$UPDATE_BASELINE" = 1 ]; then
+    ./target/release/rocline bench-gate --update-baseline --bench "$GATE_BENCH"
+else
+    ./target/release/rocline bench-gate --bench "$GATE_BENCH"
+fi
+
+# windowed-pipeline smoke: the parallel step-windowed record/replay
+# tier (`reproduce --windows N`) must reproduce the default pipeline
+# byte-for-byte — every table, CSV, SVG and text report identical.
+# Runs live (no --trace-dir) so the windowed *recording* path is the
+# thing exercised end to end.
+echo "== windowed smoke: reproduce fig4 --windows 3 vs default =="
+WIN_DIR="$(mktemp -d "${TMPDIR:-/tmp}/rocline-smoke-win.XXXXXX")"
+trap 'rm -rf "$WIN_DIR"' EXIT
+ROCLINE_REQUIRE_ARCHIVE_HIT=0 ./target/release/rocline reproduce fig4 \
+    --out "$WIN_DIR/plain"
+ROCLINE_REQUIRE_ARCHIVE_HIT=0 ./target/release/rocline reproduce fig4 \
+    --windows 3 --out "$WIN_DIR/windowed"
+diff -r "$WIN_DIR/plain" "$WIN_DIR/windowed" || {
+    echo "windowed sweep diverged from the unwindowed pipeline" >&2
+    exit 1
+}
+rm -rf "$WIN_DIR"
+trap - EXIT
+echo "windowed smoke ok: --windows 3 output byte-identical"
 
 # compressed-archive smoke: a 1-step record with --compress=auto must
 # produce a v2 archive that trace-info can summarize (per-section

@@ -532,6 +532,33 @@ fn main() {
         obs::set_enabled(false);
     }
 
+    // cycle-approximate timing tier cost contract: the same sharded
+    // replay with the TimingSink detached vs installed (the default).
+    // Off restores the zero-cost replay path; on pays per-batch event
+    // emission plus the collector's per-channel accumulation. The
+    // off/on ratio is gated as speedup/replay_timing_off_vs_on — a
+    // blow-up means timing collection leaked real work into the batch
+    // hot path. Counters and duration_s are bit-identical either way
+    // (profiler::session tests + tests/engine_equiv.rs prove it);
+    // this bench holds the *time* side of the contract.
+    {
+        let sim = PicSim::new(&cfg, 1);
+        let spec = presets::mi100();
+        let push = MoveAndMarkTrace::new(&sim.state, &spec);
+        let push_rec = record(&push, spec.group_size);
+        let mut toff = ProfileSession::new(spec.clone());
+        toff.set_timing_enabled(false);
+        r.bench_throughput("timing/replay_off", particles, || {
+            toff.profile_blocks("MoveAndMark", &push_rec.blocks)
+                .duration_s
+        });
+        let mut ton = ProfileSession::new(spec.clone());
+        r.bench_throughput("timing/replay_on", particles, || {
+            ton.profile_blocks("MoveAndMark", &push_rec.blocks)
+                .duration_s
+        });
+    }
+
     // roofline-as-a-service: the warm cache-hit query path vs the
     // cold record+replay path on a fresh service, plus end-to-end
     // HTTP tail latency against an in-process daemon with a warm
@@ -789,6 +816,15 @@ fn main() {
             "speedup/replay_obs_off_vs_on",
             "obs/replay_off",
             "obs/replay_on",
+        ),
+        // identical sharded replay with the timing sink off vs on
+        // (expect ~1.0: the enabled path is a per-batch event record
+        // into a preallocated per-channel table; a blow-up means the
+        // timing tier stopped being near-zero-cost)
+        (
+            "speedup/replay_timing_off_vs_on",
+            "timing/replay_off",
+            "timing/replay_on",
         ),
     ];
     for (name, fast, base) in pairs {

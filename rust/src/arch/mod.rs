@@ -14,4 +14,6 @@ pub mod spec;
 
 pub use isa::InstClass;
 pub use presets::{mi100, mi60, v100, all_gpus};
-pub use spec::{CacheSpec, GpuSpec, HbmSpec, LdsSpec, Vendor};
+pub use spec::{
+    CacheSpec, GpuSpec, HbmSpec, LdsSpec, TimingSpec, Vendor,
+};

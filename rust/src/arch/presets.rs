@@ -17,7 +17,9 @@
 //! * `scatter_efficiency` reproduces the Table 1 kernel-runtime ordering
 //!   (MI100 < V100 < MI60) on the PIC gather/scatter access patterns.
 
-use super::spec::{CacheSpec, GpuSpec, HbmSpec, LdsSpec, Vendor};
+use super::spec::{
+    CacheSpec, GpuSpec, HbmSpec, LdsSpec, TimingSpec, Vendor,
+};
 use crate::util::units::Bandwidth;
 
 /// NVIDIA Tesla V100 (Volta, SXM2 16GB — Summit's GPU).
@@ -60,6 +62,15 @@ pub fn v100() -> GpuSpec {
         launch_overhead_us: 1.2,
         atomic_ops_per_cycle: 3.5,
         isa_expansion: 1.0,
+        timing: TimingSpec {
+            // Volta L2 slices are deeply pipelined; Jia et al. measure
+            // ~1029-cycle HBM round trips hidden by ~32 in-flight
+            // sectors per slice
+            l2_service_cycles: 4.0,
+            mem_latency_cycles: 1029.0,
+            l2_queue_depth: 32.0,
+            issue_cycles_per_inst: 1.0,
+        },
     }
 }
 
@@ -106,6 +117,15 @@ pub fn mi60() -> GpuSpec {
         launch_overhead_us: 2.0,
         atomic_ops_per_cycle: 0.4,
         isa_expansion: 3.6,
+        timing: TimingSpec {
+            // GCN: slower slices, shallower per-channel queues (16
+            // channels sharing the request fabric); vega-family
+            // microbenchmarks put HBM latency near 700 cycles
+            l2_service_cycles: 8.0,
+            mem_latency_cycles: 700.0,
+            l2_queue_depth: 12.0,
+            issue_cycles_per_inst: 1.0,
+        },
     }
 }
 
@@ -151,6 +171,15 @@ pub fn mi100() -> GpuSpec {
         launch_overhead_us: 1.5,
         atomic_ops_per_cycle: 8.0,
         isa_expansion: 3.3,
+        timing: TimingSpec {
+            // CDNA 1 keeps GCN-era latency but doubles the slice count
+            // and deepens the queues (Jarmusch et al. measure ~600
+            // cycle global loads on CDNA parts)
+            l2_service_cycles: 4.0,
+            mem_latency_cycles: 600.0,
+            l2_queue_depth: 24.0,
+            issue_cycles_per_inst: 1.0,
+        },
     }
 }
 

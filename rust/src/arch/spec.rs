@@ -101,6 +101,41 @@ impl HbmSpec {
     }
 }
 
+/// Cycle-level calibration constants for the cycle-approximate
+/// timing tier (`timing/interconnect.rs`): how the cores↔L2-channel
+/// interconnect services transactions and what one issue slot costs.
+/// Latencies follow the published microbenchmark numbers for each
+/// architecture family (Jarmusch et al. for GCN/CDNA, Jia et al. for
+/// Volta); queue depths model the per-channel bounded response FIFO
+/// that hides that latency under load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingSpec {
+    /// Cycles one L2 channel needs to service one 32B-sector
+    /// transaction once it reaches the head of the queue.
+    pub l2_service_cycles: f64,
+    /// Round-trip core→L2-channel→HBM latency in cycles (the cost a
+    /// transaction pays when the response queue cannot hide it).
+    pub mem_latency_cycles: f64,
+    /// Depth of each channel's bounded response queue: how many
+    /// transactions can be in flight per channel, i.e. how much of
+    /// `mem_latency_cycles` pipelining hides (Little's law).
+    pub l2_queue_depth: f64,
+    /// Average issue-slot cycles consumed per group-level instruction
+    /// (dual-issue < 1.0, wait-state-heavy ISAs > 1.0).
+    pub issue_cycles_per_inst: f64,
+}
+
+impl TimingSpec {
+    /// Effective service cycles per transaction on a loaded channel:
+    /// the queue either hides the memory latency behind pipelined
+    /// service (`l2_service_cycles`) or, when too shallow, exposes
+    /// `mem_latency_cycles / depth` of it per transaction.
+    pub fn effective_cycles_per_txn(&self) -> f64 {
+        self.l2_service_cycles
+            .max(self.mem_latency_cycles / self.l2_queue_depth.max(1.0))
+    }
+}
+
 /// LDS / shared memory.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LdsSpec {
@@ -150,6 +185,8 @@ pub struct GpuSpec {
     /// "MI100 processing more instructions than the V100" puzzle the
     /// paper leaves to future work (§8).
     pub isa_expansion: f64,
+    /// Cycle-approximate timing-tier calibration constants.
+    pub timing: TimingSpec,
 }
 
 impl GpuSpec {
@@ -240,6 +277,12 @@ mod tests {
             launch_overhead_us: 2.0,
             atomic_ops_per_cycle: 8.0,
             isa_expansion: 1.0,
+            timing: TimingSpec {
+                l2_service_cycles: 4.0,
+                mem_latency_cycles: 400.0,
+                l2_queue_depth: 20.0,
+                issue_cycles_per_inst: 1.0,
+            },
         }
     }
 
@@ -283,6 +326,29 @@ mod tests {
         assert_eq!(Vendor::Amd.group_name(), "wavefront");
         assert_eq!(Vendor::Nvidia.group_name(), "warp");
         assert_eq!(Vendor::Nvidia.cu_name(), "streaming multiprocessor");
+    }
+
+    #[test]
+    fn effective_service_cycles_take_the_slower_of_queue_and_pipe() {
+        let t = toy().timing;
+        // 400-cycle latency over a 20-deep queue = 20 cycles/txn,
+        // slower than the 4-cycle pipelined service
+        assert!((t.effective_cycles_per_txn() - 20.0).abs() < 1e-12);
+        let deep = TimingSpec {
+            l2_queue_depth: 200.0,
+            ..t
+        };
+        // a deep queue hides the latency; pipelined service binds
+        assert!((deep.effective_cycles_per_txn() - 4.0).abs() < 1e-12);
+        let degenerate = TimingSpec {
+            l2_queue_depth: 0.0,
+            ..t
+        };
+        // defensively clamped: depth 0 behaves like depth 1
+        assert!(
+            (degenerate.effective_cycles_per_txn() - 400.0).abs()
+                < 1e-12
+        );
     }
 
     #[test]

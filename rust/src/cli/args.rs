@@ -37,12 +37,12 @@ pub struct Args {
 
 /// Options that take a value in space-separated form (`--key value`).
 /// `--key=value` works for these and for any future key alike.
-const VALUED: [&str; 31] = [
+const VALUED: [&str; 32] = [
     "out", "gpu", "case", "tool", "csv", "svg", "backend", "n", "iters",
     "steps", "dir", "kernel", "shard", "bench", "baseline", "tolerance",
     "trace-dir", "trajectory", "compress", "mode", "dispatches", "seed",
     "format", "url", "addr", "deadline-ms", "max-inflight", "queue-cap",
-    "trace-out", "queries", "fault",
+    "trace-out", "queries", "fault", "windows",
 ];
 
 /// Known boolean flags. Anything else with `--` and no `=` is an
@@ -207,6 +207,9 @@ pub struct ReproduceCmd {
     /// Write a Chrome trace-event timeline of the run here
     /// (enables span collection for the process).
     pub trace_out: Option<PathBuf>,
+    /// Record/replay live traces in this many parallel step windows
+    /// (`--windows N`); counters are byte-identical to the default.
+    pub windows: Option<u32>,
 }
 
 /// `query`: one roofline query, locally or (with `--url`) against a
@@ -350,6 +353,7 @@ impl Command {
                 shard: args.get("shard").map(String::from),
                 format: format_arg(&args)?,
                 trace_out: args.get("trace-out").map(PathBuf::from),
+                windows: opt_u32(&args, "windows")?,
             }),
             "query" => Command::Query(QueryCmd {
                 req: QueryRequest {
@@ -754,6 +758,27 @@ mod tests {
             panic!("expected Reproduce");
         };
         assert!(r.req.ids.is_empty());
+        assert_eq!(r.windows, None);
+    }
+
+    #[test]
+    fn typed_reproduce_windows() {
+        let Command::Reproduce(r) =
+            command("reproduce fig4 --windows 3")
+        else {
+            panic!("expected Reproduce");
+        };
+        assert_eq!(r.windows, Some(3));
+        let Command::Reproduce(r) =
+            command("reproduce fig4 --windows=1")
+        else {
+            panic!("expected Reproduce");
+        };
+        assert_eq!(r.windows, Some(1));
+        let e = command_err("reproduce --windows");
+        assert_eq!(e, "--windows needs a value");
+        let e = command_err("reproduce --windows x3");
+        assert!(e.contains("windows"), "{e}");
     }
 
     #[test]

@@ -109,6 +109,7 @@ pub fn reproduce(cmd: &ReproduceCmd) -> anyhow::Result<()> {
         trace_dir: cmd.trace_dir.clone(),
         outdir: cmd.out.clone(),
         quiet: cmd.format == OutputFormat::Json,
+        windows: cmd.windows.unwrap_or(0),
         ..ServiceConfig::default()
     });
     match cmd.format {
@@ -523,13 +524,17 @@ pub fn query(cmd: &QueryCmd) -> anyhow::Result<()> {
             for k in &resp.kernels {
                 println!(
                     "{:<16} inv={} inst/inv={} intensity={:.4} \
-                     inst/B gips={:.3} dur(mean)={:.3e}s",
+                     inst/B gips={:.3} dur(mean)={:.3e}s \
+                     pred={:.3e}s pred_gips={:.3} bound={}",
                     k.kernel,
                     k.invocations,
                     k.instructions_per_invocation,
                     k.intensity_inst_per_byte,
                     k.achieved_gips,
-                    k.mean_duration_s
+                    k.mean_duration_s,
+                    k.predicted_time_s,
+                    k.predicted_gips,
+                    k.bound
                 );
             }
             if let Some(a) = &resp.plot_ascii {
@@ -913,15 +918,19 @@ pub fn trace_info(cmd: &TraceInfoCmd) -> anyhow::Result<()> {
 
 /// Bench regression gate: compare the `speedup/*` ratios, the
 /// `size/*` metrics (archive compression ratios — a shrink in how
-/// much the archive shrinks is a regression too) **and the `mem/*`
-/// metrics** (streaming replay's peak decoder bytes, gated with a
-/// *ceiling*: growth is the regression) in the hotpath bench artifact
+/// much the archive shrinks is a regression too) **and the ceiling
+/// classes** — `mem/*` (streaming replay's peak decoder bytes),
+/// `lat/*` (serve latencies) and `acc/*` (timing-model rel err vs
+/// the paper; growth is the regression) — in the bench artifacts
 /// against the checked-in baseline; fail on >tolerance regression.
-/// `--update-baseline` refreshes the baseline instead.
+/// `--bench` takes a comma-separated artifact list (the hotpath
+/// bench JSON plus `rocline reproduce accuracy`'s
+/// `accuracy_gate.json`); `--update-baseline` refreshes the baseline
+/// instead.
 pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
     use crate::util::bench;
 
-    let bench_path = args.get_or("bench", "BENCH_hotpath.json");
+    let bench_paths = args.get_or("bench", "BENCH_hotpath.json");
     let baseline_path =
         args.get_or("baseline", "ci/bench_baseline.json");
     let tolerance: f64 = match args.get("tolerance") {
@@ -935,21 +944,36 @@ pub fn bench_gate(args: &Args) -> anyhow::Result<()> {
         "--tolerance must be in [0, 1), got {tolerance}"
     );
 
-    let bench_raw =
-        std::fs::read_to_string(bench_path).map_err(|e| {
-            anyhow::anyhow!(
-                "read {bench_path}: {e} (run `cargo bench --bench \
-                 hotpath` first)"
-            )
-        })?;
-    let current: Vec<(String, f64)> = bench::parse_flat_json(&bench_raw)?
-        .into_iter()
-        .filter(|(k, _)| bench::is_gated_metric(k))
-        .collect();
+    // later files win on duplicate keys, so a re-measured metric
+    // can be appended without editing the earlier artifact
+    let mut current: Vec<(String, f64)> = Vec::new();
+    for bench_path in bench_paths
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+    {
+        let bench_raw =
+            std::fs::read_to_string(bench_path).map_err(|e| {
+                anyhow::anyhow!(
+                    "read {bench_path}: {e} (run `cargo bench \
+                     --bench hotpath` / `rocline reproduce \
+                     accuracy` first)"
+                )
+            })?;
+        for (k, v) in bench::parse_flat_json(&bench_raw)? {
+            if !bench::is_gated_metric(&k) {
+                continue;
+            }
+            match current.iter_mut().find(|(n, _)| *n == k) {
+                Some(slot) => slot.1 = v,
+                None => current.push((k, v)),
+            }
+        }
+    }
     anyhow::ensure!(
         !current.is_empty(),
-        "{bench_path} has no speedup/*, size/* or mem/* entries \
-         (bench names drifted?)"
+        "{bench_paths} has no speedup/*, size/*, mem/*, lat/* or \
+         acc/* entries (bench names drifted?)"
     );
 
     if args.flag("update-baseline") {

@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::arch::presets;
 use crate::arch::GpuSpec;
+use crate::obs;
 use crate::pic::kernels::{
     ComputeCurrentTrace, CurrentResetTrace, FieldSolverTrace,
     MoveAndMarkTrace, ShiftParticlesTrace,
@@ -84,6 +85,74 @@ impl CaseRun {
             cfg,
             final_field_energy: sim.state.field_energy(),
             final_kinetic_energy: sim.state.kinetic_energy(),
+            session,
+        }
+    }
+
+    /// [`CaseRun::execute`] split into `windows` step windows: the
+    /// trace is recorded window-parallel on the global worker pool
+    /// ([`CaseTrace::record_windowed`]) and replayed window-by-window
+    /// ([`CaseRun::replay_windows`]). Counters, predictions and
+    /// diagnostics are byte-identical to the unwindowed path (the
+    /// recording split is proven identical in `coordinator/record.rs`
+    /// and the replay split in `tests/engine_equiv.rs`); the windows
+    /// only add recording parallelism and observability seams.
+    pub fn execute_windowed(
+        spec: GpuSpec,
+        cfg: CaseConfig,
+        windows: u32,
+        engine_threads: usize,
+    ) -> CaseRun {
+        if windows <= 1 {
+            return Self::execute_with_threads(
+                spec,
+                cfg,
+                engine_threads,
+            );
+        }
+        let trace = CaseTrace::record_windowed(&cfg, windows);
+        Self::replay_windows(spec, &trace, windows, engine_threads)
+    }
+
+    /// Replay a recorded trace **window-by-window**: dispatches are
+    /// chunked into `windows` contiguous ranges and streamed through
+    /// the session a chunk at a time, each chunk under a
+    /// `timing.window` span with the `timing.windows` counter bumped.
+    /// The engine's timing state hands off cleanly at every boundary
+    /// — the per-dispatch drain means a window can never split a
+    /// dispatch's timing profile — so counters and predictions are
+    /// byte-identical to [`CaseRun::from_recording`].
+    pub fn replay_windows(
+        spec: GpuSpec,
+        trace: &CaseTrace,
+        windows: u32,
+        engine_threads: usize,
+    ) -> CaseRun {
+        let mut session = ProfileSession::sharded_with_threads(
+            spec.clone(),
+            engine_threads,
+        );
+        let dispatches = trace.dispatches_for(spec.group_size);
+        let per_window = dispatches
+            .len()
+            .div_ceil(windows.max(1) as usize)
+            .max(1);
+        for chunk in dispatches.chunks(per_window) {
+            let _w = obs::span("timing.window");
+            obs::counter_inc("timing.windows");
+            for d in chunk {
+                session.profile_blocks_scaled(
+                    &d.kernel,
+                    &d.blocks[..],
+                    spec.isa_expansion,
+                );
+            }
+        }
+        CaseRun {
+            spec,
+            cfg: trace.cfg.clone(),
+            final_field_energy: trace.final_field_energy,
+            final_kinetic_energy: trace.final_kinetic_energy,
             session,
         }
     }
@@ -269,6 +338,9 @@ impl CaseRun {
 pub struct Context {
     runs: Mutex<HashMap<(String, String), Arc<CaseRun>>>,
     store: TraceStore,
+    /// Record/replay live traces in this many step windows
+    /// (`reproduce --windows`); `0`/`1` = unwindowed.
+    windows: u32,
 }
 
 impl Context {
@@ -280,8 +352,24 @@ impl Context {
     /// persistent archive directory.
     pub fn with_trace_dir(dir: Option<PathBuf>) -> Context {
         Context {
-            runs: Mutex::new(HashMap::new()),
             store: TraceStore::with_dir(dir),
+            ..Context::default()
+        }
+    }
+
+    /// [`Context::with_trace_dir`] with the windowed record/replay
+    /// split: `windows > 1` records each case's trace in parallel
+    /// step windows and replays live traces window-by-window.
+    /// Archive-tier hits already replay dispatch-by-dispatch and are
+    /// unaffected. Counters are byte-identical either way.
+    pub fn with_trace_dir_windows(
+        dir: Option<PathBuf>,
+        windows: u32,
+    ) -> Context {
+        Context {
+            store: TraceStore::with_dir_windows(dir, windows),
+            windows,
+            ..Context::default()
         }
     }
 
@@ -305,11 +393,20 @@ impl Context {
         let cfg = CaseConfig::by_name(case)
             .unwrap_or_else(|| panic!("unknown case {case}"));
         let trace = self.store.get_or_record(&cfg);
-        let run = Arc::new(CaseRun::from_stored(
-            spec,
-            &trace,
-            engine_threads,
-        ));
+        // windowed replay applies to live traces; archive tiers
+        // already stream dispatch-by-dispatch (same counters either
+        // way — the split is observability + recording parallelism)
+        let run = Arc::new(match &trace {
+            StoredTrace::Live(t) if self.windows > 1 => {
+                CaseRun::replay_windows(
+                    spec,
+                    t,
+                    self.windows,
+                    engine_threads,
+                )
+            }
+            _ => CaseRun::from_stored(spec, &trace, engine_threads),
+        });
         self.runs
             .lock()
             .unwrap()
@@ -407,6 +504,44 @@ mod tests {
         for a in &aggs {
             assert_eq!(a.invocations, 2, "{}", a.kernel);
         }
+    }
+
+    #[test]
+    fn windowed_execution_matches_unwindowed() {
+        let mut cfg = tiny_cfg();
+        cfg.steps = 3;
+        let plain =
+            CaseRun::execute(presets::mi100(), cfg.clone());
+        let windowed = CaseRun::execute_windowed(
+            presets::mi100(),
+            cfg,
+            2,
+            pool::default_threads(),
+        );
+        assert_eq!(
+            plain.session.dispatches.len(),
+            windowed.session.dispatches.len()
+        );
+        for (a, b) in plain
+            .session
+            .dispatches
+            .iter()
+            .zip(windowed.session.dispatches.iter())
+        {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.stats, b.stats, "{}", a.kernel);
+            assert_eq!(a.traffic, b.traffic, "{}", a.kernel);
+            assert_eq!(
+                a.duration_s.to_bits(),
+                b.duration_s.to_bits()
+            );
+            assert_eq!(a.predicted, b.predicted, "{}", a.kernel);
+            assert_eq!(a.stall_cycles, b.stall_cycles);
+        }
+        assert_eq!(
+            plain.final_kinetic_energy.to_bits(),
+            windowed.final_kinetic_energy.to_bits()
+        );
     }
 
     #[test]

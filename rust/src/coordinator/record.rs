@@ -48,7 +48,7 @@ use crate::trace::archive::{
     StreamingCaseTrace,
 };
 use crate::obs;
-use crate::util::pool::lock_recover;
+use crate::util::pool::{lock_recover, WorkerPool};
 use crate::trace::recorded::{split_half_groups, RecordedDispatch};
 use crate::trace::TraceSource;
 
@@ -79,22 +79,7 @@ impl CaseTrace {
         let mut dispatches =
             Vec::with_capacity(cfg.steps as usize * 5);
         for _ in 0..cfg.steps {
-            {
-                let st = &sim.state;
-                let reset = CurrentResetTrace::neutral(st);
-                let push = MoveAndMarkTrace::neutral(st);
-                let shift = ShiftParticlesTrace::neutral(st);
-                let deposit = ComputeCurrentTrace::neutral(st);
-                let solve = FieldSolverTrace::neutral(st);
-                let sources: [&dyn TraceSource; 5] =
-                    [&reset, &push, &shift, &deposit, &solve];
-                for src in sources {
-                    dispatches.push(RecordedDispatch::record(
-                        src,
-                        Self::BASE_GROUP_SIZE,
-                    ));
-                }
-            }
+            record_step(&sim, &mut dispatches);
             sim.step();
         }
         CaseTrace {
@@ -104,6 +89,75 @@ impl CaseTrace {
             halved: Mutex::new(None),
             final_field_energy: sim.state.field_energy(),
             final_kinetic_energy: sim.state.kinetic_energy(),
+        }
+    }
+
+    /// [`CaseTrace::record`] split into `windows` contiguous step
+    /// ranges recorded **in parallel** on the global [`WorkerPool`]:
+    /// each window re-seeds a fresh simulation ([`RUN_SEED`]) and
+    /// fast-forwards — un-recorded `step()`s — to its start step, so
+    /// the concatenated recording is byte-identical to the sequential
+    /// one (the PIC state evolution is deterministic; proven by this
+    /// module's tests and `tests/engine_equiv.rs`). The last window
+    /// steps through the whole run, so its end-of-run diagnostics are
+    /// the case's diagnostics.
+    pub fn record_windowed(
+        cfg: &CaseConfig,
+        windows: u32,
+    ) -> CaseTrace {
+        let steps = cfg.steps as usize;
+        let windows = (windows.max(1) as usize).min(steps.max(1));
+        if windows <= 1 {
+            return Self::record(cfg);
+        }
+        let _s = obs::span("archive.record");
+        let per = steps.div_ceil(windows);
+        let mut slots: Vec<
+            Option<(Vec<RecordedDispatch>, f64, f64)>,
+        > = Vec::new();
+        slots.resize_with(windows, || None);
+        WorkerPool::global().scope(|s| {
+            for (w, slot) in slots.iter_mut().enumerate() {
+                s.spawn(move || {
+                    let _w = obs::span("timing.window");
+                    obs::counter_inc("timing.windows");
+                    let start = (w * per).min(steps);
+                    let end = ((w + 1) * per).min(steps);
+                    let mut sim = PicSim::new(cfg, RUN_SEED);
+                    for _ in 0..start {
+                        sim.step();
+                    }
+                    let mut dispatches =
+                        Vec::with_capacity((end - start) * 5);
+                    for _ in start..end {
+                        record_step(&sim, &mut dispatches);
+                        sim.step();
+                    }
+                    *slot = Some((
+                        dispatches,
+                        sim.state.field_energy(),
+                        sim.state.kinetic_energy(),
+                    ));
+                });
+            }
+        });
+        let mut dispatches = Vec::with_capacity(steps * 5);
+        let mut field = 0.0;
+        let mut kinetic = 0.0;
+        for slot in slots {
+            let (d, f, k) =
+                slot.expect("every recording window completes");
+            dispatches.extend(d);
+            field = f;
+            kinetic = k;
+        }
+        CaseTrace {
+            cfg: cfg.clone(),
+            base_group_size: Self::BASE_GROUP_SIZE,
+            base: Arc::new(dispatches),
+            halved: Mutex::new(None),
+            final_field_energy: field,
+            final_kinetic_energy: kinetic,
         }
     }
 
@@ -206,6 +260,28 @@ impl CaseTrace {
             RUN_SEED,
         );
         dir.join(archive::archive_file_name(&cfg.name, key))
+    }
+}
+
+/// Record one step's five kernel dispatches, expansion-neutral at
+/// [`CaseTrace::BASE_GROUP_SIZE`], from the simulation's current
+/// state — the shared inner loop of [`CaseTrace::record`] and
+/// [`CaseTrace::record_windowed`] (one body, so the windowed split
+/// cannot drift from the sequential recording).
+fn record_step(sim: &PicSim, out: &mut Vec<RecordedDispatch>) {
+    let st = &sim.state;
+    let reset = CurrentResetTrace::neutral(st);
+    let push = MoveAndMarkTrace::neutral(st);
+    let shift = ShiftParticlesTrace::neutral(st);
+    let deposit = ComputeCurrentTrace::neutral(st);
+    let solve = FieldSolverTrace::neutral(st);
+    let sources: [&dyn TraceSource; 5] =
+        [&reset, &push, &shift, &deposit, &solve];
+    for src in sources {
+        out.push(RecordedDispatch::record(
+            src,
+            CaseTrace::BASE_GROUP_SIZE,
+        ));
     }
 }
 
@@ -317,6 +393,9 @@ pub struct TraceStore {
     compress: Compress,
     /// How archive hits replay (see [`ReplayMode`]).
     replay: ReplayMode,
+    /// Record live misses in this many parallel step windows
+    /// ([`CaseTrace::record_windowed`]); `0`/`1` = sequential.
+    windows: u32,
     entries: Mutex<HashMap<String, Arc<Mutex<Option<StoredTrace>>>>>,
     recordings: AtomicUsize,
     archive_hits: AtomicUsize,
@@ -357,6 +436,20 @@ impl TraceStore {
         TraceStore {
             dir,
             compress,
+            ..TraceStore::default()
+        }
+    }
+
+    /// [`TraceStore::with_dir`] recording live misses in `windows`
+    /// parallel step windows ([`CaseTrace::record_windowed`]) — the
+    /// `reproduce --windows` plumbing.
+    pub fn with_dir_windows(
+        dir: Option<PathBuf>,
+        windows: u32,
+    ) -> TraceStore {
+        TraceStore {
+            dir,
+            windows,
             ..TraceStore::default()
         }
     }
@@ -599,7 +692,11 @@ impl TraceStore {
             }
         }
         self.recordings.fetch_add(1, Ordering::Relaxed);
-        let trace = Arc::new(CaseTrace::record(cfg));
+        let trace = Arc::new(if self.windows > 1 {
+            CaseTrace::record_windowed(cfg, self.windows)
+        } else {
+            CaseTrace::record(cfg)
+        });
         if let Some(dir) = &self.dir {
             let mut delay = std::time::Duration::from_millis(1);
             for attempt in 1..=Self::IO_ATTEMPTS {
@@ -741,6 +838,59 @@ mod tests {
         // the halved form doubles the group count, same kernels
         assert_eq!(h1.len(), a.len());
         assert_eq!(h1[1].kernel, "MoveAndMark");
+    }
+
+    #[test]
+    fn windowed_recording_is_byte_identical() {
+        let cfg = tiny("tiny-win", 5);
+        let seq = CaseTrace::record(&cfg);
+        let win = CaseTrace::record_windowed(&cfg, 3);
+        assert_eq!(seq.dispatch_count(), win.dispatch_count());
+        assert_eq!(
+            seq.final_field_energy.to_bits(),
+            win.final_field_energy.to_bits()
+        );
+        assert_eq!(
+            seq.final_kinetic_energy.to_bits(),
+            win.final_kinetic_energy.to_bits()
+        );
+        let a = seq.dispatches_for(64);
+        let b = win.dispatches_for(64);
+        for (da, db) in a.iter().zip(b.iter()) {
+            assert_eq!(da.kernel, db.kernel);
+            assert_eq!(da.blocks.len(), db.blocks.len());
+            for (ba, bb) in da.blocks.iter().zip(db.blocks.iter())
+            {
+                assert!(
+                    ba.records().eq(bb.records()),
+                    "window boundary changed a recorded block in {}",
+                    da.kernel
+                );
+            }
+        }
+        // more windows than steps clamps to one window per step
+        let over = CaseTrace::record_windowed(&cfg, 64);
+        assert_eq!(over.dispatch_count(), seq.dispatch_count());
+        assert_eq!(
+            over.final_kinetic_energy.to_bits(),
+            seq.final_kinetic_energy.to_bits()
+        );
+    }
+
+    #[test]
+    fn windowed_store_still_records_once() {
+        let store = TraceStore::with_dir_windows(None, 3);
+        let cfg = tiny("case-win", 4);
+        let t1 = store.get_or_record(&cfg);
+        let t2 = store.get_or_record(&cfg);
+        match (&t1, &t2) {
+            (StoredTrace::Live(x), StoredTrace::Live(y)) => {
+                assert!(Arc::ptr_eq(x, y));
+            }
+            _ => panic!("memory-only store must return live traces"),
+        }
+        assert_eq!(store.recordings(), 1);
+        assert_eq!(t1.dispatch_count(), 4 * 5);
     }
 
     #[test]

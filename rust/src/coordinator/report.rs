@@ -18,6 +18,10 @@ pub struct Report {
     pub notes: Vec<String>,
     /// Shape criteria vs the paper.
     pub checks: Vec<ShapeCheck>,
+    /// Named machine-readable artifacts written verbatim next to the
+    /// CSVs (e.g. the accuracy experiment's flat-JSON gate metrics
+    /// that `rocline bench-gate --bench` consumes).
+    pub artifacts: Vec<(String, String)>,
 }
 
 impl Report {
@@ -29,6 +33,7 @@ impl Report {
             svgs: Vec::new(),
             notes: Vec::new(),
             checks: Vec::new(),
+            artifacts: Vec::new(),
         }
     }
 
@@ -72,6 +77,9 @@ impl Report {
                 svg,
             )?;
         }
+        for (name, body) in &self.artifacts {
+            std::fs::write(dir.join(name), body)?;
+        }
         std::fs::write(
             dir.join(format!("{}.txt", self.id)),
             self.render(),
@@ -91,6 +99,8 @@ mod tests {
         r.tables.push(("main".into(), t));
         r.svgs.push(("irm".into(), "<svg></svg>".into()));
         r.checks.push(ShapeCheck::new("a", true, "ok".into()));
+        r.artifacts
+            .push(("gate.json".into(), "{\"x\":1}".into()));
         r
     }
 
@@ -119,5 +129,9 @@ mod tests {
         assert!(dir.join("table1_main.csv").exists());
         assert!(dir.join("table1_irm.svg").exists());
         assert!(dir.join("table1.txt").exists());
+        assert_eq!(
+            std::fs::read_to_string(dir.join("gate.json")).unwrap(),
+            "{\"x\":1}"
+        );
     }
 }

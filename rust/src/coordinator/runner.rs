@@ -14,9 +14,9 @@ pub(crate) fn require_archive_hit() -> bool {
 }
 
 /// Every experiment id, in DESIGN.md §4 order.
-pub const EXPERIMENT_IDS: [&str; 10] = [
+pub const EXPERIMENT_IDS: [&str; 11] = [
     "peaks", "stream", "membench", "table1", "table2", "fig3", "fig4",
-    "fig5", "fig6", "fig7",
+    "fig5", "fig6", "fig7", "accuracy",
 ];
 
 /// Which profiled runs an experiment needs (for parallel prefetch and
@@ -34,6 +34,14 @@ pub(crate) fn runs_needed(
         "fig4" | "fig5" => vec![("v100", "lwfa")],
         "fig6" => vec![("mi60", "lwfa"), ("mi100", "lwfa")],
         "fig7" => vec![("mi60", "tweac"), ("mi100", "tweac")],
+        "accuracy" => vec![
+            ("v100", "lwfa"),
+            ("mi60", "lwfa"),
+            ("mi100", "lwfa"),
+            ("v100", "tweac"),
+            ("mi60", "tweac"),
+            ("mi100", "tweac"),
+        ],
         _ => vec![],
     }
 }
@@ -51,6 +59,7 @@ pub fn run_one(ctx: &Context, id: &str) -> anyhow::Result<Report> {
         "fig5" => experiments::fig5(ctx),
         "fig6" => experiments::fig6(ctx),
         "fig7" => experiments::fig7(ctx),
+        "accuracy" => experiments::accuracy(ctx),
         _ => anyhow::bail!(
             "unknown experiment '{id}' (have: {})",
             EXPERIMENT_IDS.join(", ")
@@ -103,6 +112,7 @@ mod tests {
     fn ids_cover_every_table_and_figure() {
         for want in [
             "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig7",
+            "accuracy",
         ] {
             assert!(EXPERIMENT_IDS.contains(&want), "{want}");
         }

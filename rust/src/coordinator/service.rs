@@ -66,6 +66,10 @@ pub struct ServiceConfig {
     /// stay). `reproduce --format=json` sets this so stdout carries
     /// exactly one JSON document.
     pub quiet: bool,
+    /// Record/replay live traces in this many parallel step windows
+    /// (`reproduce --windows`); `0`/`1` = unwindowed. Counters are
+    /// byte-identical either way (the CI smoke diffs the two).
+    pub windows: u32,
 }
 
 impl Default for ServiceConfig {
@@ -79,6 +83,7 @@ impl Default for ServiceConfig {
             outdir: PathBuf::from("out"),
             case_overrides: Vec::new(),
             quiet: false,
+            windows: 0,
         }
     }
 }
@@ -191,6 +196,15 @@ pub struct KernelCounters {
     pub intensity_inst_per_byte: f64,
     /// Eq. 4 achieved GIPS.
     pub achieved_gips: f64,
+    /// Cycle-approximate predicted time per invocation (seconds):
+    /// the timing tier's interconnect-contention and overlap aware
+    /// estimate, riding alongside `mean_duration_s`.
+    pub predicted_time_s: f64,
+    /// Eq. 4 GIPS evaluated at the predicted time.
+    pub predicted_gips: f64,
+    /// Dominant term of the predicted breakdown
+    /// (`issue|memory|lds|atomic|launch`).
+    pub bound: String,
     /// The raw profiler counters, named as the tool names them.
     pub counters: Vec<(String, f64)>,
 }
@@ -436,7 +450,10 @@ pub struct AnalysisService {
 
 impl AnalysisService {
     pub fn new(cfg: ServiceConfig) -> AnalysisService {
-        let ctx = Context::with_trace_dir(cfg.trace_dir.clone());
+        let ctx = Context::with_trace_dir_windows(
+            cfg.trace_dir.clone(),
+            cfg.windows,
+        );
         let admission =
             Arc::new(Admission::new(cfg.max_inflight, cfg.queue_cap));
         AnalysisService {
@@ -1295,6 +1312,29 @@ fn replay_cancellable(
     }
 }
 
+/// Per-kernel summary of the cycle-approximate timing tier: mean
+/// predicted time per invocation plus the bound named by the summed
+/// breakdown (summing the terms preserves the dominant-term
+/// comparison across invocations of the same kernel).
+fn predicted_for(
+    session: &ProfileSession,
+    kernel: &str,
+    invocations: u64,
+) -> (f64, String) {
+    let mut acc = crate::timing::TimeBreakdown::default();
+    for d in
+        session.dispatches.iter().filter(|d| d.kernel == kernel)
+    {
+        acc.issue.0 += d.predicted.issue.0;
+        acc.memory.0 += d.predicted.memory.0;
+        acc.lds.0 += d.predicted.lds.0;
+        acc.atomic.0 += d.predicted.atomic.0;
+        acc.launch.0 += d.predicted.launch.0;
+        acc.total.0 += d.predicted.total.0;
+    }
+    (acc.total.0 / invocations.max(1) as f64, acc.bound().into())
+}
+
 /// Per-kernel counters with the paper's per-invocation aggregation —
 /// the same arithmetic [`InstructionRoofline::from_rocprof`] /
 /// `from_nvprof_bytes` apply, for every kernel at once.
@@ -1311,6 +1351,8 @@ fn kernel_counters(
                 let bytes_r = r.total.bytes_read() / inv as f64;
                 let bytes_w = r.total.bytes_written() / inv as f64;
                 let runtime = r.mean_duration_s;
+                let (pred_s, bound) =
+                    predicted_for(session, &r.kernel, inv);
                 KernelCounters {
                     kernel: r.kernel.clone(),
                     invocations: r.invocations,
@@ -1331,6 +1373,13 @@ fn kernel_counters(
                         spec.group_size,
                         runtime,
                     ),
+                    predicted_time_s: pred_s,
+                    predicted_gips: eq::predicted_gips(
+                        insts,
+                        spec.group_size,
+                        pred_s,
+                    ),
+                    bound,
                     counters: vec![
                         ("FETCH_SIZE".into(), r.total.fetch_size_kb),
                         ("WRITE_SIZE".into(), r.total.write_size_kb),
@@ -1358,6 +1407,8 @@ fn kernel_counters(
                 let bytes_w =
                     r.total.dram_write_bytes() / inv as f64;
                 let runtime = r.mean_duration_s;
+                let (pred_s, bound) =
+                    predicted_for(session, &r.kernel, inv);
                 KernelCounters {
                     kernel: r.kernel.clone(),
                     invocations: r.invocations,
@@ -1378,6 +1429,13 @@ fn kernel_counters(
                         spec.group_size,
                         runtime,
                     ),
+                    predicted_time_s: pred_s,
+                    predicted_gips: eq::predicted_gips(
+                        insts,
+                        spec.group_size,
+                        pred_s,
+                    ),
+                    bound,
                     counters: vec![
                         (
                             "inst_executed".into(),

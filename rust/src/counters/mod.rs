@@ -13,6 +13,7 @@ pub use nvprof::NvprofCounters;
 pub use rocprof::RocprofCounters;
 
 use crate::memsim::MemTraffic;
+use crate::timing::TimeBreakdown;
 use crate::trace::TraceStats;
 
 /// One profiled kernel dispatch: the raw material for either engine.
@@ -21,6 +22,12 @@ pub struct DispatchRecord {
     pub kernel: String,
     pub stats: TraceStats,
     pub traffic: MemTraffic,
-    /// Simulated wall time of this dispatch (seconds).
+    /// Simulated wall time of this dispatch (seconds) — the pinned
+    /// analytic estimate every historical surface reports.
     pub duration_s: f64,
+    /// The cycle-approximate prediction (interconnect-contention and
+    /// overlap aware), riding alongside `duration_s`.
+    pub predicted: TimeBreakdown,
+    /// Interconnect stall cycles behind `predicted`'s memory term.
+    pub stall_cycles: u64,
 }

@@ -68,6 +68,7 @@ use super::hierarchy::{ChanneledL2, MemTraffic};
 use crate::arch::GpuSpec;
 use crate::trace::block::{BlockData, BlockSink, Columns, EventBlock, Tag};
 use crate::obs;
+use crate::timing::{TimingProfile, TimingSink};
 use crate::trace::stats::TraceStats;
 use crate::trace::MemKind;
 use crate::util::pool::{lock_recover, Latch, WorkerPool};
@@ -622,6 +623,10 @@ pub struct ShardedHierarchy {
     filled: usize,
     pending_records: usize,
     pending_addr_words: usize,
+    /// The optional timing tier: per-batch issue/miss/service events
+    /// flow into this sink (timing off = `None` = one branch per
+    /// emission site; counters above are never affected either way).
+    timing: Option<Box<dyn TimingSink + Send>>,
 }
 
 /// Worker/shard count default: delegated to the shared pool sizing
@@ -715,7 +720,32 @@ impl ShardedHierarchy {
             filled: 0,
             pending_records: 0,
             pending_addr_words: 0,
+            timing: None,
         }
+    }
+
+    /// Install (or remove) the timing sink the pipeline reports
+    /// per-batch events into. Replay counters are bit-identical with
+    /// any sink installed; `None` restores the zero-cost path.
+    pub fn set_timing_sink(
+        &mut self,
+        sink: Option<Box<dyn TimingSink + Send>>,
+    ) {
+        self.timing = sink;
+    }
+
+    /// Is a timing sink installed?
+    pub fn timing_enabled(&self) -> bool {
+        self.timing.is_some()
+    }
+
+    /// Drain the installed sink's accumulated [`TimingProfile`]
+    /// (dispatch boundary; `None` when timing is off). Pending work
+    /// is flushed first so the profile covers the whole dispatch.
+    pub fn take_timing_profile(&mut self) -> Option<TimingProfile> {
+        self.process_batch();
+        self.drain_l2();
+        self.timing.as_mut().and_then(|t| t.drain())
     }
 
     /// The pre-routing baseline engine: every shard rescans the whole
@@ -909,8 +939,16 @@ impl ShardedHierarchy {
         }
 
         // merge the shard-exclusive counters
-        for shard in self.shards.iter_mut() {
+        for (si, shard) in self.shards.iter_mut().enumerate() {
             let d = std::mem::take(&mut shard.delta);
+            // timing event (a): issue slots this shard consumed
+            if let Some(t) = self.timing.as_mut() {
+                t.on_shard_issue(
+                    si,
+                    d.mem_requests,
+                    d.l1_read_txn + d.l1_write_txn,
+                );
+            }
             self.traffic.mem_requests += d.mem_requests;
             self.traffic.actual_txn += d.actual_txn;
             self.traffic.ideal_txn += d.ideal_txn;
@@ -933,10 +971,25 @@ impl ShardedHierarchy {
         debug_assert_eq!(empties.len(), self.shards.len());
         let mut batch: BatchMisses =
             Vec::with_capacity(self.shards.len());
-        for (shard, empty) in
-            self.shards.iter_mut().zip(empties.drain(..))
+        for (si, (shard, empty)) in self
+            .shards
+            .iter_mut()
+            .zip(empties.drain(..))
+            .enumerate()
         {
+            // timing event (b): L1 miss records handed toward each
+            // L2 channel (counted before the buffers swap away)
+            if let Some(t) = self.timing.as_mut() {
+                for (ch, stream) in shard.misses.iter().enumerate() {
+                    if !stream.is_empty() {
+                        t.on_l1_miss(si, ch, stream.len() as u64);
+                    }
+                }
+            }
             batch.push(std::mem::replace(&mut shard.misses, empty));
+        }
+        if let Some(t) = self.timing.as_mut() {
+            t.on_batch();
         }
 
         let latch = Latch::new();
@@ -962,8 +1015,19 @@ impl ShardedHierarchy {
             WorkerPool::global().wait(&latch);
         }
         let mut stage = lock_recover(&self.stage);
-        for lane in stage.lanes.iter_mut() {
+        for (ch, lane) in stage.lanes.iter_mut().enumerate() {
             let d = std::mem::take(&mut lane.delta);
+            // timing event (c): this channel's retired service totals
+            if let Some(t) = self.timing.as_mut() {
+                let txns = d.l2_read_txn + d.l2_write_txn;
+                if txns > 0 {
+                    t.on_l2_service(
+                        ch,
+                        txns,
+                        d.hbm_read_bytes + d.hbm_write_bytes,
+                    );
+                }
+            }
             self.traffic.l2_read_txn += d.l2_read_txn;
             self.traffic.l2_write_txn += d.l2_write_txn;
             self.traffic.hbm_read_bytes += d.hbm_read_bytes;

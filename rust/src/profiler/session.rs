@@ -21,7 +21,9 @@ use crate::arch::GpuSpec;
 use crate::counters::DispatchRecord;
 use crate::memsim::banks::ConflictStats;
 use crate::memsim::{MemHierarchy, MemTraffic, ShardedHierarchy};
-use crate::timing::{kernel_time, KernelCost};
+use crate::timing::{
+    kernel_time, predicted_kernel_time, KernelCost, TimingCollector,
+};
 use crate::trace::block::{BlockBuilder, BlockData};
 use crate::trace::sink::{FanoutSink, ScaleInstSink};
 use crate::trace::{TraceSource, TraceStats};
@@ -47,6 +49,10 @@ pub struct KernelAggregate {
     pub invocations: u64,
     /// Sum of simulated durations (seconds).
     pub total_duration_s: f64,
+    /// Sum of cycle-approximate predicted durations (seconds).
+    pub total_predicted_s: f64,
+    /// Summed interconnect stall cycles across dispatches.
+    pub stall_cycles: u64,
     /// Summed trace stats across dispatches.
     pub stats: TraceStats,
     /// Summed memory traffic across dispatches.
@@ -59,6 +65,14 @@ impl KernelAggregate {
             0.0
         } else {
             self.total_duration_s / self.invocations as f64
+        }
+    }
+
+    pub fn mean_predicted_s(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.total_predicted_s / self.invocations as f64
         }
     }
 }
@@ -113,12 +127,34 @@ impl ProfileSession {
     }
 
     fn from_engine(spec: GpuSpec, engine: EngineState) -> Self {
-        ProfileSession {
+        let mut s = ProfileSession {
             spec,
             dispatches: Vec::new(),
             engine,
             traffic_mark: MemTraffic::default(),
             lds_mark: ConflictStats::default(),
+        };
+        // timing tier default-on for the parallel engine: every
+        // product surface predicts from the *measured* per-channel
+        // loads; the sequential reference has no sink and predicts
+        // from the uniform fallback
+        s.set_timing_enabled(true);
+        s
+    }
+
+    /// Toggle the cycle-approximate timing tier. On installs a
+    /// [`TimingCollector`] on the sharded engine (per-batch events →
+    /// measured interconnect contention); off restores the zero-cost
+    /// replay path, with predictions falling back to a uniform
+    /// channel spread. Counters and `duration_s` are bit-identical
+    /// either way.
+    pub fn set_timing_enabled(&mut self, on: bool) {
+        if let EngineState::Sharded(eng) = &mut self.engine {
+            eng.set_timing_sink(if on {
+                Some(Box::new(TimingCollector::new()))
+            } else {
+                None
+            });
         }
     }
 
@@ -232,11 +268,30 @@ impl ProfileSession {
         cost.lds_passes = lds_passes;
         let time = kernel_time(&self.spec, &cost);
 
+        // the cycle-approximate tier rides alongside the pinned
+        // analytic estimate: measured per-channel loads when the
+        // engine carries a timing sink, uniform fallback otherwise
+        let profile = match &mut self.engine {
+            EngineState::Sharded(eng) => eng.take_timing_profile(),
+            EngineState::Sequential(_) => None,
+        };
+        let (predicted, stall_cycles) = predicted_kernel_time(
+            &self.spec,
+            &cost,
+            profile
+                .as_ref()
+                .map(|p| p.per_channel_txns.as_slice())
+                .filter(|l| !l.is_empty()),
+        );
+        crate::obs::counter_add("timing.stall_cycles", stall_cycles);
+
         self.dispatches.push(DispatchRecord {
             kernel: kernel.to_string(),
             stats,
             traffic,
             duration_s: time.total.0,
+            predicted,
+            stall_cycles,
         });
         self.dispatches.last().unwrap()
     }
@@ -267,6 +322,8 @@ impl ProfileSession {
             let agg = &mut out[i];
             agg.invocations += 1;
             agg.total_duration_s += d.duration_s;
+            agg.total_predicted_s += d.predicted.total.0;
+            agg.stall_cycles += d.stall_cycles;
             agg.stats.merge(&d.stats);
             agg.traffic += d.traffic;
         }
@@ -399,6 +456,53 @@ mod tests {
         let (s, p) = (&shr.dispatches[0], &plain.dispatches[0]);
         assert!(s.stats.inst.valu() > p.stats.inst.valu());
         assert_eq!(s.traffic, p.traffic);
+    }
+
+    #[test]
+    fn timing_tier_is_strictly_optional() {
+        // timing off vs on: counters and the pinned analytic time
+        // are bit-identical; both still carry a positive prediction
+        // (measured contention on, uniform fallback off)
+        let spec = mi100();
+        let t = StreamTrace::babelstream("copy", 1 << 13);
+        let mut on = ProfileSession::new(spec.clone());
+        let mut off = ProfileSession::new(spec.clone());
+        off.set_timing_enabled(false);
+        on.profile(&t);
+        off.profile(&t);
+        let (a, b) = (&on.dispatches[0], &off.dispatches[0]);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.traffic, b.traffic);
+        assert_eq!(a.duration_s, b.duration_s);
+        assert!(a.predicted.total.0 > 0.0);
+        assert!(b.predicted.total.0 > 0.0);
+        assert!(!a.predicted.bound().is_empty());
+        // aggregates carry the prediction alongside the estimate
+        let agg = &on.aggregates()[0];
+        assert!(
+            (agg.total_predicted_s - a.predicted.total.0).abs()
+                < 1e-15
+        );
+    }
+
+    #[test]
+    fn predictions_agree_between_live_and_recorded_replay() {
+        // the determinism contract behind every byte-identity smoke:
+        // measured per-channel loads are pure address arithmetic, so
+        // live profiling and zero-copy recorded replay predict the
+        // same time to the bit
+        use crate::trace::block::BlockRecorder;
+        use crate::trace::TraceSource;
+        let spec = mi100();
+        let t = StreamTrace::babelstream("triad", 1 << 12);
+        let rec = BlockRecorder::record(&t, spec.group_size);
+        let mut live = ProfileSession::new(spec.clone());
+        let mut replayed = ProfileSession::new(spec.clone());
+        live.profile(&t);
+        replayed.profile_blocks(t.name(), &rec.blocks);
+        let (a, b) = (&live.dispatches[0], &replayed.dispatches[0]);
+        assert_eq!(a.predicted, b.predicted);
+        assert_eq!(a.stall_cycles, b.stall_cycles);
     }
 
     #[test]

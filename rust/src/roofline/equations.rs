@@ -43,6 +43,23 @@ pub fn eq4_achieved_gips(
     group_scaled(instructions, group_size) / (1.0e9 * runtime_s)
 }
 
+/// Eq. 4 evaluated at the timing tier's **predicted** runtime: the
+/// GIPS coordinate the cycle-approximate prediction places on the
+/// instruction roofline (compare against [`eq4_achieved_gips`] at the
+/// analytic runtime to see how contention moves a kernel under the
+/// ceilings). Guards a non-positive time to 0 GIPS so a degenerate
+/// prediction can never plot at infinity.
+pub fn predicted_gips(
+    instructions: u64,
+    group_size: u32,
+    predicted_time_s: f64,
+) -> f64 {
+    if predicted_time_s <= 0.0 {
+        return 0.0;
+    }
+    eq4_achieved_gips(instructions, group_size, predicted_time_s)
+}
+
 /// Eq. 2: instruction intensity *performance*:
 /// `(instructions/64) / ((bytes_read + bytes_written) × runtime)`.
 pub fn eq2_intensity_performance(

@@ -134,6 +134,9 @@ fn kernel_to_json(k: &KernelCounters) -> Json {
             Json::f64(k.intensity_inst_per_byte),
         )
         .set("achieved_gips", Json::f64(k.achieved_gips))
+        .set("predicted_time_s", Json::f64(k.predicted_time_s))
+        .set("predicted_gips", Json::f64(k.predicted_gips))
+        .set("bound", Json::str(&k.bound))
         .set("counters", counters)
 }
 
@@ -164,6 +167,21 @@ fn kernel_from_json(j: &Json) -> Result<KernelCounters, String> {
             "intensity_inst_per_byte",
         )?,
         achieved_gips: get_f64(j, "achieved_gips")?,
+        // lenient: documents from builds predating the timing tier
+        // parse with neutral defaults instead of erroring
+        predicted_time_s: j
+            .get("predicted_time_s")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+        predicted_gips: j
+            .get("predicted_gips")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+        bound: j
+            .get("bound")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
         counters,
     })
 }
@@ -894,6 +912,9 @@ mod tests {
                 mean_duration_s: 0.001,
                 intensity_inst_per_byte: 70.5,
                 achieved_gips: 11.25,
+                predicted_time_s: 0.0009,
+                predicted_gips: 12.5,
+                bound: "memory".to_string(),
                 counters: vec![
                     ("SQ_INSTS_VALU".to_string(), 1e6),
                     ("FETCH_SIZE".to_string(), 1464.84),
@@ -941,6 +962,25 @@ mod tests {
         assert_eq!(back.plot_ascii, None);
         // serialization is deterministic end to end
         assert_eq!(query_response_to_json(&back).render(), text);
+    }
+
+    #[test]
+    fn kernel_counters_parse_leniently_without_timing_fields() {
+        // a document from a build predating the timing tier: the
+        // predicted_* / bound fields are absent and must default
+        let j = Json::parse(
+            r#"{"kernel":"K","invocations":2,
+                "instructions_per_invocation":10,"bytes_read":1.0,
+                "bytes_written":2.0,"mean_duration_s":0.5,
+                "intensity_inst_per_byte":0.1,"achieved_gips":0.2,
+                "counters":{}}"#,
+        )
+        .unwrap();
+        let k = kernel_from_json(&j).unwrap();
+        assert_eq!(k.kernel, "K");
+        assert_eq!(k.predicted_time_s, 0.0);
+        assert_eq!(k.predicted_gips, 0.0);
+        assert_eq!(k.bound, "");
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! The cores↔L2-channel interconnect model.
+//!
+//! GPU L2s are sliced into address-interleaved channels (the same
+//! slicing `memsim/sharded.rs` replays in parallel); each channel
+//! owns a bounded response queue toward HBM. Under load, a channel
+//! services one 32B-sector transaction every
+//! [`TimingSpec::effective_cycles_per_txn`] cycles — the pipelined
+//! service rate, floored by the fraction of the memory round-trip
+//! latency its queue depth cannot hide (Little's law). The kernel's
+//! memory phase then takes as long as its *busiest* channel: a
+//! perfectly balanced load finishes in `ceil(total/channels)`
+//! services, an imbalanced one serializes on the hot channel, and
+//! the difference is the **stall** the interconnect charges for the
+//! imbalance (exported as the `timing.stall_cycles` counter).
+//!
+//! [`TimingSpec::effective_cycles_per_txn`]:
+//! crate::arch::TimingSpec::effective_cycles_per_txn
+
+use crate::arch::GpuSpec;
+
+/// One kernel's interconnect accounting: how many cycles the L2
+/// channel fabric needs for its transaction load, and how much of
+/// that is channel-imbalance stall.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct InterconnectReport {
+    /// Cycles until the busiest channel drains its queue.
+    pub actual_cycles: u64,
+    /// Cycles a perfectly balanced spread of the same load would take.
+    pub ideal_cycles: u64,
+    /// `actual - ideal`: the contention cost of channel imbalance.
+    pub stall_cycles: u64,
+}
+
+impl InterconnectReport {
+    /// The channel-service bound in seconds at `freq_ghz`.
+    pub fn actual_seconds(&self, freq_ghz: f64) -> f64 {
+        self.actual_cycles as f64 / (freq_ghz * 1.0e9)
+    }
+}
+
+/// Service a per-channel transaction load through `spec`'s
+/// interconnect constants.
+pub fn service(
+    spec: &GpuSpec,
+    per_channel_txns: &[u64],
+) -> InterconnectReport {
+    let eff = spec.timing.effective_cycles_per_txn();
+    let total: u64 = per_channel_txns.iter().sum();
+    let busiest =
+        per_channel_txns.iter().copied().max().unwrap_or(0);
+    let channels =
+        (per_channel_txns.len() as u64).max(1);
+    let balanced = total.div_ceil(channels);
+    let actual = (busiest as f64 * eff).round() as u64;
+    let ideal = (balanced as f64 * eff).round() as u64;
+    InterconnectReport {
+        actual_cycles: actual,
+        ideal_cycles: ideal,
+        stall_cycles: actual.saturating_sub(ideal),
+    }
+}
+
+/// A perfectly balanced per-channel spread of `total` transactions —
+/// the fallback load when no [`TimingSink`](super::TimingSink)
+/// measured the real one.
+pub fn uniform_load(total: u64, channels: u64) -> Vec<u64> {
+    let n = channels.max(1);
+    let base = total / n;
+    let rem = total % n;
+    (0..n).map(|c| base + u64::from(c < rem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{mi100, mi60};
+
+    #[test]
+    fn balanced_load_has_no_stall() {
+        let spec = mi100();
+        let load = uniform_load(32_000, spec.l2.channel_count());
+        let rep = service(&spec, &load);
+        assert_eq!(rep.stall_cycles, 0);
+        assert_eq!(rep.actual_cycles, rep.ideal_cycles);
+        // 1000 txns/channel at 25 effective cycles (600/24) each
+        assert_eq!(rep.actual_cycles, 25_000);
+    }
+
+    #[test]
+    fn hot_channel_serializes_and_stalls() {
+        let spec = mi100();
+        let mut load =
+            uniform_load(32_000, spec.l2.channel_count());
+        load[0] += 32_000; // one channel eats double the whole load
+        let rep = service(&spec, &load);
+        assert!(rep.actual_cycles > 2 * rep.ideal_cycles);
+        assert_eq!(
+            rep.stall_cycles,
+            rep.actual_cycles - rep.ideal_cycles
+        );
+    }
+
+    #[test]
+    fn uniform_load_conserves_transactions() {
+        for (total, ch) in
+            [(0u64, 16u64), (7, 16), (1000, 32), (33, 1)]
+        {
+            let l = uniform_load(total, ch);
+            assert_eq!(l.len() as u64, ch);
+            assert_eq!(l.iter().sum::<u64>(), total);
+            let (min, max) = (
+                *l.iter().min().unwrap(),
+                *l.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn shallow_queues_cost_more_per_txn() {
+        // MI60: 700-cycle latency over 12-deep queues = 58.3
+        // cycles/txn vs MI100's 25 — the GCN fabric services the
+        // same balanced load >2x slower
+        let load60 = uniform_load(16_000, mi60().l2.channel_count());
+        let load100 =
+            uniform_load(16_000, mi100().l2.channel_count());
+        let r60 = service(&mi60(), &load60);
+        let r100 = service(&mi100(), &load100);
+        assert!(r60.actual_cycles > 2 * r100.actual_cycles);
+    }
+
+    #[test]
+    fn empty_load_is_free() {
+        let rep = service(&mi100(), &[]);
+        assert_eq!(rep.actual_cycles, 0);
+        assert_eq!(rep.stall_cycles, 0);
+    }
+}

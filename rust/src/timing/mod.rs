@@ -8,8 +8,24 @@
 //! observed cross-GPU runtime ordering (MI100 < V100 < MI60 on PIC
 //! kernels) emerges from.
 
+//! A second, cycle-approximate tier layers the interconnect model
+//! ([`interconnect`]) and the replay-measured channel loads
+//! ([`sink`]) on top: [`predicted_kernel_time`] refines the analytic
+//! estimate with contention-aware L2-channel service and
+//! occupancy-aware overlap of the non-dominant terms. The analytic
+//! [`kernel_time`] is untouched (it is the pinned `duration_s` every
+//! historical surface reports); the prediction rides alongside it.
+
+pub mod interconnect;
 pub mod model;
 pub mod occupancy;
+pub mod sink;
 
-pub use model::{kernel_time, KernelCost, TimeBreakdown};
+pub use interconnect::{service, uniform_load, InterconnectReport};
+pub use model::{
+    kernel_time, predicted_kernel_time, KernelCost, TimeBreakdown,
+};
 pub use occupancy::occupancy_factor;
+pub use sink::{
+    NoopTimingSink, TimingCollector, TimingProfile, TimingSink,
+};

@@ -38,7 +38,7 @@ impl KernelCost {
 }
 
 /// Per-term decomposition of the estimate (for reports and ablations).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct TimeBreakdown {
     pub issue: Seconds,
     pub memory: Seconds,
@@ -56,6 +56,7 @@ impl TimeBreakdown {
             (self.memory.0, "memory"),
             (self.lds.0, "lds"),
             (self.atomic.0, "atomic"),
+            (self.launch.0, "launch"),
         ];
         terms
             .iter()
@@ -102,6 +103,79 @@ pub fn kernel_time(spec: &GpuSpec, cost: &KernelCost) -> TimeBreakdown {
         launch,
         total,
     }
+}
+
+/// The cycle-approximate estimate: [`kernel_time`]'s terms refined
+/// with the per-arch issue-slot cost, the measured (or uniform)
+/// cores↔L2 interconnect contention, and occupancy-aware *overlap* of
+/// the non-dominant terms instead of a pure max. Returns the
+/// breakdown plus the interconnect stall cycles behind its memory
+/// term. `per_channel_txns` is the per-L2-channel transaction load a
+/// [`TimingSink`](super::TimingSink) collected during replay; `None`
+/// falls back to a uniform channel spread (same totals, no measured
+/// imbalance), which keeps the prediction deterministic on engines
+/// without a sink.
+pub fn predicted_kernel_time(
+    spec: &GpuSpec,
+    cost: &KernelCost,
+    per_channel_txns: Option<&[u64]>,
+) -> (TimeBreakdown, u64) {
+    let occ = occupancy_factor(spec, cost.groups).max(1e-3);
+    let issue = Seconds(
+        cost.group_insts as f64 * spec.timing.issue_cycles_per_inst
+            / (spec.issue_rate() * occ),
+    );
+
+    // memory: bandwidth-limited streaming time, floored by the
+    // interconnect's contention-aware channel-service time (the
+    // busiest L2 channel serializes the tail)
+    let bw = spec.hbm.effective_bw(cost.scatter_fraction);
+    let stream = cost.hbm_bytes as f64 / bw.0;
+    let total_txns =
+        cost.hbm_bytes / crate::util::units::SECTOR_BYTES;
+    let uniform;
+    let loads = match per_channel_txns {
+        Some(l) if !l.is_empty() => l,
+        _ => {
+            uniform = super::interconnect::uniform_load(
+                total_txns,
+                spec.l2.channel_count(),
+            );
+            &uniform[..]
+        }
+    };
+    let link = super::interconnect::service(spec, loads);
+    let memory =
+        Seconds(stream.max(link.actual_seconds(spec.frequency_ghz)));
+
+    let lds_rate =
+        spec.compute_units as f64 * spec.frequency_ghz * 1.0e9 * occ;
+    let lds = Seconds(cost.lds_passes as f64 / lds_rate);
+    let atomic_rate =
+        spec.atomic_ops_per_cycle * spec.frequency_ghz * 1.0e9;
+    let atomic = Seconds(cost.atomic_txns as f64 / atomic_rate);
+    let launch = Seconds::from_us(spec.launch_overhead_us);
+
+    // occupancy-aware overlap: a saturated device hides the
+    // non-dominant terms behind the dominant one (pure max); a
+    // starved one serializes them (pure sum)
+    let overlap = occupancy_factor(spec, cost.groups).clamp(0.0, 1.0);
+    let dominant = issue.0.max(memory.0).max(lds.0).max(atomic.0);
+    let others =
+        issue.0 + memory.0 + lds.0 + atomic.0 - dominant;
+    let total =
+        Seconds(launch.0 + dominant + (1.0 - overlap) * others);
+    (
+        TimeBreakdown {
+            issue,
+            memory,
+            lds,
+            atomic,
+            launch,
+            total,
+        },
+        link.stall_cycles,
+    )
 }
 
 #[cfg(test)]

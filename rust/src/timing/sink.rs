@@ -1,0 +1,197 @@
+//! The replay→timing event channel.
+//!
+//! `memsim/sharded.rs`'s three-phase pipeline emits per-batch timing
+//! events — issue slots consumed per L1 shard, per-channel L1 miss
+//! counts, per-channel L2 service totals — into a [`TimingSink`]
+//! installed on the engine. The contract is strict layering:
+//!
+//! * **Timing off is zero-cost.** The engine holds an
+//!   `Option<Box<dyn TimingSink + Send>>`; with `None` every
+//!   emission site is one branch, and [`NoopTimingSink`] (all
+//!   default methods) compiles to the same nothing for callers that
+//!   want a sink-shaped placeholder.
+//! * **Counters are untouched.** Sinks observe deltas *after* the
+//!   engine has folded them; they can never perturb replay results
+//!   (proven bit-identical in `tests/engine_equiv.rs`).
+//! * **Predictions only read channel totals.** Per-shard slopes vary
+//!   with the engine's thread budget and batch boundaries; per-L2-
+//!   channel totals are pure address arithmetic, identical across
+//!   thread counts, batch sizes and replay windows. The
+//!   [`TimingProfile`] carries both, but
+//!   [`predicted_kernel_time`](super::predicted_kernel_time) must
+//!   only consume the channel side — that is what keeps predicted
+//!   times byte-identical across every engine configuration.
+
+/// The per-dispatch timing aggregate a collector hands back.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TimingProfile {
+    /// L2 transactions (read + write) serviced per channel.
+    pub per_channel_txns: Vec<u64>,
+    /// L1 miss records routed per channel.
+    pub per_channel_misses: Vec<u64>,
+    /// HBM bytes moved per channel.
+    pub per_channel_hbm_bytes: Vec<u64>,
+    /// Memory requests issued across all L1 shards (issue slots).
+    pub shard_requests: u64,
+    /// Batches the pipeline processed for this dispatch.
+    pub batches: u64,
+}
+
+impl TimingProfile {
+    /// Total L2 transactions across channels.
+    pub fn total_txns(&self) -> u64 {
+        self.per_channel_txns.iter().sum()
+    }
+}
+
+/// Timing events the sharded replay pipeline emits per batch. All
+/// methods default to no-ops so a sink only pays for what it uses.
+pub trait TimingSink {
+    /// Phase-2 issue accounting: L1 `shard` consumed `mem_requests`
+    /// request slots producing `l1_txns` sector transactions.
+    fn on_shard_issue(
+        &mut self,
+        _shard: usize,
+        _mem_requests: u64,
+        _l1_txns: u64,
+    ) {
+    }
+
+    /// Phase-2→3 hand-off: L1 `shard` routed `misses` miss records
+    /// toward L2 `channel`.
+    fn on_l1_miss(
+        &mut self,
+        _shard: usize,
+        _channel: usize,
+        _misses: u64,
+    ) {
+    }
+
+    /// Phase-3 service: L2 `channel` serviced `l2_txns` sector
+    /// transactions, moving `hbm_bytes` to/from device memory.
+    fn on_l2_service(
+        &mut self,
+        _channel: usize,
+        _l2_txns: u64,
+        _hbm_bytes: u64,
+    ) {
+    }
+
+    /// One pipeline batch completed.
+    fn on_batch(&mut self) {}
+
+    /// Hand the accumulated profile back and reset for the next
+    /// dispatch. The default (and [`NoopTimingSink`]) has nothing to
+    /// hand back.
+    fn drain(&mut self) -> Option<TimingProfile> {
+        None
+    }
+}
+
+/// The do-nothing sink: timing-off with a sink-shaped object.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopTimingSink;
+
+impl TimingSink for NoopTimingSink {}
+
+/// The standard accumulating sink: sums every event into a
+/// [`TimingProfile`], drained once per dispatch.
+#[derive(Debug, Clone, Default)]
+pub struct TimingCollector {
+    profile: TimingProfile,
+}
+
+impl TimingCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn channel_slot(v: &mut Vec<u64>, ch: usize) -> &mut u64 {
+        if v.len() <= ch {
+            v.resize(ch + 1, 0);
+        }
+        &mut v[ch]
+    }
+}
+
+impl TimingSink for TimingCollector {
+    fn on_shard_issue(
+        &mut self,
+        _shard: usize,
+        mem_requests: u64,
+        _l1_txns: u64,
+    ) {
+        self.profile.shard_requests += mem_requests;
+    }
+
+    fn on_l1_miss(
+        &mut self,
+        _shard: usize,
+        channel: usize,
+        misses: u64,
+    ) {
+        *Self::channel_slot(
+            &mut self.profile.per_channel_misses,
+            channel,
+        ) += misses;
+    }
+
+    fn on_l2_service(
+        &mut self,
+        channel: usize,
+        l2_txns: u64,
+        hbm_bytes: u64,
+    ) {
+        *Self::channel_slot(
+            &mut self.profile.per_channel_txns,
+            channel,
+        ) += l2_txns;
+        *Self::channel_slot(
+            &mut self.profile.per_channel_hbm_bytes,
+            channel,
+        ) += hbm_bytes;
+    }
+
+    fn on_batch(&mut self) {
+        self.profile.batches += 1;
+    }
+
+    fn drain(&mut self) -> Option<TimingProfile> {
+        Some(std::mem::take(&mut self.profile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_accumulates_and_drains() {
+        let mut c = TimingCollector::new();
+        c.on_shard_issue(0, 10, 12);
+        c.on_shard_issue(3, 5, 6);
+        c.on_l1_miss(0, 2, 7);
+        c.on_l2_service(2, 7, 224);
+        c.on_l2_service(5, 3, 96);
+        c.on_batch();
+        let p = c.drain().expect("collector always has a profile");
+        assert_eq!(p.shard_requests, 15);
+        assert_eq!(p.per_channel_misses[2], 7);
+        assert_eq!(p.per_channel_txns[2], 7);
+        assert_eq!(p.per_channel_txns[5], 3);
+        assert_eq!(p.per_channel_hbm_bytes[5], 96);
+        assert_eq!(p.total_txns(), 10);
+        assert_eq!(p.batches, 1);
+        // drained: the next dispatch starts from zero
+        let empty = c.drain().unwrap();
+        assert_eq!(empty, TimingProfile::default());
+    }
+
+    #[test]
+    fn noop_sink_has_nothing_to_drain() {
+        let mut n = NoopTimingSink;
+        n.on_shard_issue(0, 1, 1);
+        n.on_l2_service(0, 1, 32);
+        assert!(n.drain().is_none());
+    }
+}

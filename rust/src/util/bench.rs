@@ -354,21 +354,26 @@ pub struct GateOutcome {
 /// Whether a bench entry is gated against the baseline:
 /// `speedup/*` ratios (engine vs reference) and `size/*` metrics
 /// (archive compression ratios) — bigger is better, one floor rule —
-/// plus `mem/*` (peak replay memory in bytes) and `lat/*`
-/// (serve-path latencies in ms) metrics, where **lower** is better
-/// and the gate applies a ceiling instead.
+/// plus `mem/*` (peak replay memory in bytes), `lat/*` (serve-path
+/// latencies in ms) and `acc/*` (timing-model accuracy: normalized
+/// relative error vs the paper's published kernel times, written by
+/// `rocline reproduce accuracy` as `accuracy_gate.json`) metrics,
+/// where **lower** is better and the gate applies a ceiling instead.
 pub fn is_gated_metric(name: &str) -> bool {
     name.starts_with("speedup/")
         || name.starts_with("size/")
         || name.starts_with("mem/")
         || name.starts_with("lat/")
+        || name.starts_with("acc/")
 }
 
 /// Whether a gated metric regresses *upward* (`mem/*`: bytes held at
-/// replay; `lat/*`: serve-path latencies in ms — growth is the
-/// failure).
+/// replay; `lat/*`: serve-path latencies in ms; `acc/*`: prediction
+/// rel err — growth is the failure).
 fn lower_is_better(name: &str) -> bool {
-    name.starts_with("mem/") || name.starts_with("lat/")
+    name.starts_with("mem/")
+        || name.starts_with("lat/")
+        || name.starts_with("acc/")
 }
 
 /// The bench regression gate: every gated entry in `baseline` (see
@@ -639,6 +644,44 @@ mod tests {
             .iter()
             .any(|l| l.contains("new") && l.contains("mem/other")));
         assert!(is_gated_metric("mem/x"));
+    }
+
+    #[test]
+    fn gate_acc_metrics_use_a_ceiling_rule() {
+        // prediction rel err regresses upward: 0.5 baseline with 20%
+        // tolerance ceilings at 0.6
+        let baseline = vec![(
+            "acc/predicted_time_rel_err_v100".to_string(),
+            0.5,
+        )];
+        let ok = vec![(
+            "acc/predicted_time_rel_err_v100".to_string(),
+            0.55,
+        )];
+        let out = gate_speedups(&ok, &baseline, 0.2);
+        assert_eq!(out.checked, 1);
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+        // a *more* accurate model (smaller err) always passes
+        let better = vec![(
+            "acc/predicted_time_rel_err_v100".to_string(),
+            0.01,
+        )];
+        let out = gate_speedups(&better, &baseline, 0.2);
+        assert!(out.failures.is_empty(), "{:?}", out.failures);
+
+        let bad = vec![(
+            "acc/predicted_time_rel_err_v100".to_string(),
+            0.7,
+        )];
+        let out = gate_speedups(&bad, &baseline, 0.2);
+        assert_eq!(out.failures.len(), 1);
+        assert!(
+            out.failures[0].contains("exceeded the"),
+            "{:?}",
+            out.failures
+        );
+        assert!(is_gated_metric("acc/x"));
+        assert!(!is_gated_metric("accuracy/x"));
     }
 
     #[test]

@@ -45,7 +45,7 @@ impl Bandwidth {
 }
 
 /// Duration in seconds (f64 keeps the math simple; precision is ample).
-#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
 pub struct Seconds(pub f64);
 
 impl Seconds {

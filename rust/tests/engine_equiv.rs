@@ -464,6 +464,150 @@ fn replay_is_bit_identical_with_observability_on() {
 }
 
 #[test]
+fn replay_is_bit_identical_with_timing_on() {
+    // the cycle-approximate timing tier's determinism contract: a
+    // TimingCollector on the sharded pipeline observes per-batch
+    // events (issue slots, per-channel misses, L2 service totals) but
+    // must not perturb a single counter on any preset — the
+    // sequential reference path has no sink, so seq == timed-sharded
+    // proves the instrumented engine still replays bit-identically
+    use rocline::timing::TimingCollector;
+    for spec in presets::all_gpus() {
+        let copy = StreamTrace::babelstream("copy", 1 << 12);
+        let mixed = MixedTrace {
+            n: 1 << 11,
+            span: 1 << 20,
+            seed: 31,
+        };
+        let traces: [&dyn TraceSource; 2] = [&copy, &mixed];
+        for trace in traces {
+            let mut seq_stats = TraceStats::default();
+            let mut seq = MemHierarchy::new(&spec);
+            trace.replay(spec.group_size, &mut seq_stats);
+            trace.replay(spec.group_size, &mut seq);
+            seq.flush();
+            for threads in [1usize, 4, 16] {
+                let mut timed =
+                    ShardedHierarchy::with_shards(&spec, threads);
+                timed.set_timing_sink(Some(Box::new(
+                    TimingCollector::new(),
+                )));
+                assert!(timed.timing_enabled());
+                {
+                    let mut b = BlockBuilder::new(&mut timed);
+                    trace.replay(spec.group_size, &mut b);
+                    b.finish();
+                }
+                timed.flush();
+                assert_eq!(
+                    seq.traffic,
+                    timed.traffic,
+                    "MemTraffic diverged with timing on: {} on {} \
+                     with {threads} shards",
+                    trace.name(),
+                    spec.name
+                );
+                assert_eq!(
+                    seq_stats,
+                    timed.take_stats(),
+                    "TraceStats diverged with timing on: {} on {}",
+                    trace.name(),
+                    spec.name
+                );
+                assert_eq!(seq.lds_stats, timed.lds_stats);
+                assert_eq!(seq.l1_hit_rate(), timed.l1_hit_rate());
+                assert_eq!(seq.l2_hit_rate(), timed.l2_hit_rate());
+                // and the sink really observed the replay: the
+                // per-channel totals cover every L2 transaction the
+                // engine serviced (pure address arithmetic —
+                // identical at every shard count; end-of-kernel
+                // flush writebacks move HBM bytes but no L2 txns)
+                let profile = timed
+                    .take_timing_profile()
+                    .expect("collector installed");
+                assert!(profile.batches > 0);
+                assert_eq!(
+                    profile.total_txns(),
+                    timed.traffic.l2_read_txn
+                        + timed.traffic.l2_write_txn,
+                    "{} on {} with {threads} shards",
+                    trace.name(),
+                    spec.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn windowed_replay_merges_to_the_unwindowed_run() {
+    // the windowed record/replay pipeline (reproduce --windows N)
+    // must merge to the exact bytes of the unwindowed run: same
+    // dispatch sequence, same counters, same analytic duration and
+    // same predicted timing, on every preset
+    use rocline::coordinator::CaseRun;
+    use rocline::pic::CaseConfig;
+    let mut cfg = CaseConfig::lwfa();
+    cfg.name = "equiv-windowed".into();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.nz = 8;
+    cfg.ppc = 2;
+    cfg.steps = 3;
+    for spec in presets::all_gpus() {
+        let plain =
+            CaseRun::execute_with_threads(spec.clone(), cfg.clone(), 2);
+        let windowed = CaseRun::execute_windowed(
+            spec.clone(),
+            cfg.clone(),
+            2,
+            2,
+        );
+        assert_eq!(
+            plain.session.dispatches.len(),
+            windowed.session.dispatches.len(),
+            "{}",
+            spec.name
+        );
+        for (a, b) in plain
+            .session
+            .dispatches
+            .iter()
+            .zip(windowed.session.dispatches.iter())
+        {
+            assert_eq!(a.kernel, b.kernel, "{}", spec.name);
+            assert_eq!(a.stats, b.stats, "{} {}", spec.name, a.kernel);
+            assert_eq!(
+                a.traffic, b.traffic,
+                "{} {}",
+                spec.name, a.kernel
+            );
+            assert_eq!(
+                a.duration_s.to_bits(),
+                b.duration_s.to_bits(),
+                "{} {}",
+                spec.name,
+                a.kernel
+            );
+            assert_eq!(
+                a.predicted, b.predicted,
+                "{} {}",
+                spec.name, a.kernel
+            );
+            assert_eq!(a.stall_cycles, b.stall_cycles);
+        }
+        assert_eq!(
+            plain.final_field_energy.to_bits(),
+            windowed.final_field_energy.to_bits()
+        );
+        assert_eq!(
+            plain.final_kinetic_energy.to_bits(),
+            windowed.final_kinetic_energy.to_bits()
+        );
+    }
+}
+
+#[test]
 fn empty_and_tiny_dispatches_equivalent() {
     // degenerate shapes: single group, partial group, zero work
     let spec = presets::mi60();
